@@ -1,0 +1,80 @@
+//! Figure-1 view: activation memory vs sequence length, with and without
+//! AutoChunk, for all four evaluation models -- plus the max-length
+//! extension factor under a fixed memory cap (paper section 4.2: 11.7x
+//! for 1D inputs, ~3.2x for 2D).
+//!
+//! Run: `cargo run --release --example memory_wall`
+
+use autochunk::models::{evoformer, gpt, unet, vit, EvoformerConfig, GptConfig, UNetConfig, ViTConfig};
+use autochunk::passes::{autochunk, estimate, AutoChunkConfig};
+
+fn mib(b: usize) -> f64 {
+    b as f64 / (1 << 20) as f64
+}
+
+fn main() {
+    let cfg = AutoChunkConfig::default();
+    println!("model      seq    baseline  autochunk  reduction");
+    let mut rows: Vec<(&str, usize, usize, usize)> = Vec::new();
+    for seq in [256usize, 512, 1024, 2048] {
+        let g = gpt(&GptConfig { seq, ..Default::default() });
+        let b = estimate(&g).peak_bytes;
+        let a = autochunk(&g, b / 10, &cfg).chunked_peak;
+        rows.push(("gpt", seq, b, a));
+    }
+    for seq in [256usize, 512, 1024] {
+        let g = vit(&ViTConfig { patches: seq, ..Default::default() });
+        let b = estimate(&g).peak_bytes;
+        let a = autochunk(&g, b / 10, &cfg).chunked_peak;
+        rows.push(("vit", seq, b, a));
+    }
+    for seq in [32usize, 48, 64] {
+        let g = evoformer(&EvoformerConfig { seq, ..Default::default() });
+        let b = estimate(&g).peak_bytes;
+        let a = autochunk(&g, b / 10, &cfg).chunked_peak;
+        rows.push(("evoformer", seq, b, a));
+    }
+    for seq in [32usize, 64] {
+        let g = unet(&UNetConfig { image: seq, ..Default::default() });
+        let b = estimate(&g).peak_bytes;
+        let a = autochunk(&g, b / 10, &cfg).chunked_peak;
+        rows.push(("unet", seq, b, a));
+    }
+    for (m, s, b, a) in &rows {
+        println!(
+            "{m:<10} {s:>4}  {:>8.1}M  {:>8.1}M  {:>6.1}%",
+            mib(*b),
+            mib(*a),
+            100.0 * (1.0 - *a as f64 / *b as f64)
+        );
+    }
+
+    // Max-length extension: the largest seq whose (chunked) peak fits the
+    // cap that the *baseline* just saturates at its shortest seq.
+    println!("\nmax-seq extension under a fixed activation cap:");
+    let cap = estimate(&gpt(&GptConfig { seq: 1024, ..Default::default() })).peak_bytes;
+    let max_seq = |chunked: bool| -> usize {
+        let mut best = 0;
+        for seq in [1024usize, 2048, 4096, 8192, 12288, 16384] {
+            let g = gpt(&GptConfig { seq, ..Default::default() });
+            let peak = if chunked {
+                autochunk(&g, cap, &AutoChunkConfig::default()).chunked_peak
+            } else {
+                estimate(&g).peak_bytes
+            };
+            if peak <= cap {
+                best = seq;
+            }
+        }
+        best
+    };
+    let plain = max_seq(false);
+    let chunked = max_seq(true);
+    println!(
+        "  gpt (1D): cap {:.0} MiB: {} -> {} tokens  ({:.1}x)",
+        mib(cap),
+        plain,
+        chunked,
+        chunked as f64 / plain as f64
+    );
+}

@@ -1,0 +1,217 @@
+"""AOT lowering: JAX model → HLO text artifacts for the Rust runtime.
+
+HLO *text* (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax ≥ 0.5 emits protos with 64-bit instruction ids
+which xla_extension 0.5.1 (behind the published `xla` crate) rejects;
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Each artifact gets a sidecar ``.meta`` file (key=value lines) describing
+its ABI and memory profile so the Rust coordinator can route requests
+without ever importing Python:
+
+    model=gpt  mode=dense  seq=128  d_model=128 ...
+    est_activation_bytes=...   (JAX-side estimate of the variant's peak)
+
+Usage: python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import vit_model
+from .model import GptConfig, init_params, positional_forward
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def estimate_activation_bytes(cfg) -> int:
+    """Coarse analytic peak-activation estimate for the variant, used by
+    the Rust coordinator's admission control (per-request cost)."""
+    s, d, h = cfg.seq, cfg.d_model, cfg.heads
+    ff = cfg.ff_mult * d
+    resident = 6 * s * d + s * ff  # x, xn, q/k/v, residual + ff mid
+    if cfg.mode == "dense":
+        hotspot = 2 * h * s * s  # scores + probs
+    elif cfg.mode == "chunked":
+        hotspot = 2 * h * s * (s // cfg.n_chunks) + s * d
+    else:  # fused
+        hotspot = h * s * (128 + d)  # kernel block workspace
+    return 4 * (resident + hotspot)
+
+
+def estimate_vit_activation_bytes(cfg) -> int:
+    """Coarse peak-activation estimate for a ViT variant."""
+    s, d, h = cfg.patches, cfg.d_model, cfg.heads
+    ff = cfg.ff_mult * d
+    resident = s * cfg.patch_dim + 6 * s * d + s * ff
+    if cfg.mode == "dense":
+        hotspot = 2 * h * s * s
+    elif cfg.mode == "chunked":
+        hotspot = 2 * h * s * (s // cfg.n_chunks) + s * d
+    else:
+        hotspot = h * s * (128 + d)
+    return 4 * (resident + hotspot)
+
+
+def lower_vit_variant(cfg):
+    """Lower one ViT (mode, patches) variant."""
+    fn, names = vit_model.positional_forward(cfg)
+    params = vit_model.init_params(cfg)
+    patches_spec = jax.ShapeDtypeStruct(
+        (cfg.patches, cfg.patch_dim), jnp.float32
+    )
+    param_specs = [
+        jax.ShapeDtypeStruct(params[n].shape, params[n].dtype) for n in names
+    ]
+    lowered = jax.jit(fn).lower(patches_spec, *param_specs)
+    hlo = to_hlo_text(lowered)
+    meta = {
+        "model": "vit",
+        "mode": cfg.mode,
+        "seq": cfg.patches,
+        "d_model": cfg.d_model,
+        "heads": cfg.heads,
+        "layers": cfg.layers,
+        "vocab": 0,
+        "ff_mult": cfg.ff_mult,
+        "patch_dim": cfg.patch_dim,
+        "n_chunks": cfg.n_chunks if cfg.mode == "chunked" else 1,
+        "num_params": len(names),
+        "param_names": ",".join(names),
+        "est_activation_bytes": estimate_vit_activation_bytes(cfg),
+        "output_shape": f"{cfg.classes}",
+    }
+    return hlo, meta
+
+
+def export_vit_params(out_dir, cfg, seed=0):
+    """Dump ViT parameters (positional ABI) per patches bucket."""
+    import numpy as np
+
+    params = vit_model.init_params(cfg, seed)
+    names = sorted(params.keys())
+    path = os.path.join(out_dir, f"vit_params_s{cfg.patches}.bin")
+    manifest = []
+    with open(path, "wb") as f:
+        for n in names:
+            arr = np.asarray(params[n], dtype=np.float32)
+            manifest.append(f"{n}:{'x'.join(map(str, arr.shape))}")
+            f.write(arr.tobytes())
+    with open(
+        os.path.join(out_dir, f"vit_params_s{cfg.patches}.manifest"), "w"
+    ) as f:
+        f.write("\n".join(manifest) + "\n")
+    return path
+
+
+def lower_variant(cfg):
+    """Lower one (mode, seq) variant; returns (hlo_text, meta dict)."""
+    fn, names = positional_forward(cfg)
+    params = init_params(cfg)
+    tokens_spec = jax.ShapeDtypeStruct((cfg.seq,), jnp.int32)
+    param_specs = [
+        jax.ShapeDtypeStruct(params[n].shape, params[n].dtype) for n in names
+    ]
+    lowered = jax.jit(fn).lower(tokens_spec, *param_specs)
+    hlo = to_hlo_text(lowered)
+    meta = {
+        "model": "gpt",
+        "mode": cfg.mode,
+        "seq": cfg.seq,
+        "d_model": cfg.d_model,
+        "heads": cfg.heads,
+        "layers": cfg.layers,
+        "vocab": cfg.vocab,
+        "ff_mult": cfg.ff_mult,
+        "n_chunks": cfg.n_chunks if cfg.mode == "chunked" else 1,
+        "num_params": len(names),
+        "param_names": ",".join(names),
+        "est_activation_bytes": estimate_activation_bytes(cfg),
+        "output_shape": f"{cfg.seq}x{cfg.d_model}",
+    }
+    return hlo, meta
+
+
+def write_artifact(out_dir, tag, hlo, meta):
+    os.makedirs(out_dir, exist_ok=True)
+    hlo_path = os.path.join(out_dir, f"{tag}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+    with open(os.path.join(out_dir, f"{tag}.meta"), "w") as f:
+        for k, v in meta.items():
+            f.write(f"{k}={v}\n")
+    return hlo_path
+
+
+def export_params(out_dir, cfg, seed=0):
+    """Dump parameters as raw little-endian f32 for the Rust runtime.
+
+    One file per seq bucket (wpe is seq-sized); names sorted to match the
+    positional ABI of `positional_forward`.
+    """
+    import numpy as np
+
+    params = init_params(cfg, seed)
+    names = sorted(params.keys())
+    path = os.path.join(out_dir, f"gpt_params_s{cfg.seq}.bin")
+    manifest = []
+    with open(path, "wb") as f:
+        for n in names:
+            arr = np.asarray(params[n], dtype=np.float32)
+            manifest.append(f"{n}:{'x'.join(map(str, arr.shape))}")
+            f.write(arr.tobytes())
+    with open(os.path.join(out_dir, f"gpt_params_s{cfg.seq}.manifest"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick", action="store_true", help="only the smallest bucket"
+    )
+    args = ap.parse_args()
+
+    seqs = [64] if args.quick else [64, 128, 256]
+    variants = []
+    for seq in seqs:
+        variants.append(GptConfig(seq=seq, mode="dense"))
+        variants.append(GptConfig(seq=seq, mode="fused"))
+        for n in (4, 8):
+            variants.append(GptConfig(seq=seq, mode="chunked", n_chunks=n))
+
+    for cfg in variants:
+        hlo, meta = lower_variant(cfg)
+        path = write_artifact(args.out_dir, cfg.tag(), hlo, meta)
+        print(f"wrote {path} ({len(hlo)} chars)")
+
+    for seq in seqs:
+        export_params(args.out_dir, GptConfig(seq=seq))
+
+    # ViT buckets (smaller set: it shares the serving machinery)
+    vit_buckets = [64] if args.quick else [64, 128]
+    for p in vit_buckets:
+        for mode, n in (("dense", 1), ("fused", 1), ("chunked", 4)):
+            vcfg = vit_model.ViTConfig(patches=p, mode=mode, n_chunks=n)
+            hlo, meta = lower_vit_variant(vcfg)
+            path = write_artifact(args.out_dir, vcfg.tag(), hlo, meta)
+            print(f"wrote {path} ({len(hlo)} chars)")
+        export_vit_params(args.out_dir, vit_model.ViTConfig(patches=p))
+    print("wrote params")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""L1 Pallas kernel: chunked (memory-efficient) attention.
+
+The paper's Figure-6 "fused attention kernel", written for TPU via Pallas
+and executed here with ``interpret=True`` (the CPU PJRT plugin cannot run
+Mosaic custom-calls; see DESIGN.md §5).
+
+Hardware adaptation (GPU paper idiom → TPU):
+  * the CUDA version tiles over threadblocks with shared-memory staging;
+    here the q-block is the grid axis and the BlockSpec stages one
+    ``[block_q, d]`` q tile plus streamed k/v tiles through VMEM;
+  * the score tile ``[block_q, block_k]`` lives in registers/VMEM and is
+    never written to HBM — exactly the activation-chunk effect AutoChunk
+    applies at graph level, pushed down to the kernel level;
+  * matmuls hit the MXU in f32/bf16 (no WMMA equivalents needed).
+
+VMEM footprint per grid step (f32 words):
+    block_q·d  (q tile) + 2·block_k·d  (k, v tiles)
+  + block_q·block_k     (score tile)   + block_q·(d+2) (acc, m, l)
+With the default 128/128 tiles and d=64: ~57 KiB — comfortably inside the
+~16 MiB VMEM, leaving room for double-buffered pipelining.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_k, skv_valid):
+    """One q-block: stream kv in block_k tiles with online softmax."""
+    q = q_ref[0, :, :].astype(jnp.float32)  # [bq, d]
+    skv = k_ref.shape[1]  # padded to a block_k multiple
+    dv = v_ref.shape[2]
+
+    num_kv = skv // block_k
+
+    def body(i, carry):
+        acc, m, l = carry
+        start = i * block_k
+        k_blk = k_ref[0, pl.dslice(start, block_k), :].astype(jnp.float32)  # [bk, d]
+        v_blk = v_ref[0, pl.dslice(start, block_k), :].astype(jnp.float32)  # [bk, dv]
+        # mask padded kv rows
+        idx = start + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        valid = idx < skv_valid  # [1, bk]
+
+        s = jnp.dot(q, k_blk.T) * scale  # [bq, bk]
+        s = jnp.where(valid, s, -jnp.inf)
+
+        blk_max = jnp.max(s, axis=-1)  # [bq]
+        new_m = jnp.maximum(m, blk_max)
+        corr = jnp.exp(m - new_m)  # [bq]
+        p = jnp.exp(s - new_m[:, None])  # [bq, bk]
+        p = jnp.where(valid, p, 0.0)
+        new_l = l * corr + jnp.sum(p, axis=-1)
+        new_acc = acc * corr[:, None] + jnp.dot(p, v_blk)
+        return new_acc, new_m, new_l
+
+    bq = q.shape[0]
+    acc0 = jnp.zeros((bq, dv), jnp.float32)
+    m0 = jnp.full((bq,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, num_kv, body, (acc0, m0, l0))
+    out = acc / l[:, None]
+    o_ref[0, :, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "block_q", "block_k", "interpret")
+)
+def mem_efficient_attention(
+    q,
+    k,
+    v,
+    scale=None,
+    block_q=DEFAULT_BLOCK_Q,
+    block_k=DEFAULT_BLOCK_K,
+    interpret=True,
+):
+    """softmax(q·kᵀ·scale)·v without materializing the score matrix.
+
+    q: [h, sq, d]; k: [h, skv, d]; v: [h, skv, dv] → [h, sq, dv].
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    h, sq, d = q.shape
+    _, skv, dv = v.shape
+    assert k.shape == (h, skv, d), (k.shape, (h, skv, d))
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+
+    # Pad to block multiples: Pallas clamps out-of-range dynamic slices,
+    # which would misalign the kv tail mask. Padded kv rows are masked by
+    # `skv` inside the kernel; padded q rows are sliced off the output.
+    sq_p = -(-sq // block_q) * block_q
+    skv_p = -(-skv // block_k) * block_k
+    qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0)))
+
+    grid = (h, sq_p // block_q)
+    out = pl.pallas_call(
+        functools.partial(_attention_kernel, scale=scale, block_k=block_k, skv_valid=skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((1, skv_p, d), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((1, skv_p, dv), lambda hi, qi: (hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dv), lambda hi, qi: (hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, sq_p, dv), q.dtype),
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :sq, :]
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    """Row-tile LayerNorm over the last axis."""
+    x = x_ref[...].astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = y * g_ref[...].astype(jnp.float32) + b_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def layernorm(x, gamma, beta, eps=1e-5, block_rows=128, interpret=True):
+    """LayerNorm over the last axis of `[rows, d]`, tiled over rows."""
+    rows, d = x.shape
+    block_rows = min(block_rows, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x, gamma, beta)
+
+
+def vmem_bytes(block_q, block_k, d, dv=None, dtype_bytes=4):
+    """Estimated VMEM footprint of one attention grid step (perf model)."""
+    dv = dv or d
+    words = (
+        block_q * d  # q tile
+        + block_k * d  # k tile
+        + block_k * dv  # v tile
+        + block_q * block_k  # score tile
+        + block_q * (dv + 2)  # acc, m, l
+    )
+    return words * dtype_bytes

@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: row-chunked feed-forward (GELU MLP).
+
+The FFN expansion `[s, d] @ [d, 4d] -> gelu -> @ [4d, d]` holds the
+second-largest activation in a transformer block (the `[s, 4d]` mid
+tensor). This kernel applies the AutoChunk insight at kernel level: grid
+over row blocks so the mid tensor only ever exists one `[block_rows, 4d]`
+tile at a time in VMEM.
+
+VMEM per grid step (f32 words):
+    block_rows·d (x tile) + d·ff (w1) + ff (b1) + ff·d (w2) + d (b2)
+  + block_rows·ff (mid tile) + block_rows·d (out tile)
+Weights dominate for small blocks; for d=128/ff=512/block 128 this is
+~0.9 MiB — fine for VMEM, and the HBM-resident mid tensor is eliminated.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ref_gelu
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)  # [br, d]
+    w1 = w1_ref[...].astype(jnp.float32)  # [d, ff]
+    b1 = b1_ref[...].astype(jnp.float32)  # [ff]
+    w2 = w2_ref[...].astype(jnp.float32)  # [ff, d]
+    b2 = b2_ref[...].astype(jnp.float32)  # [d]
+    mid = jnp.dot(x, w1) + b1  # [br, ff] — never leaves VMEM
+    act = ref_gelu(mid)
+    out = jnp.dot(act, w2) + b2
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def chunked_ffn(x, w1, b1, w2, b2, block_rows=128, interpret=True):
+    """`gelu(x @ w1 + b1) @ w2 + b2` with the mid tensor tiled over rows.
+
+    x: [rows, d]; w1: [d, ff]; b1: [ff]; w2: [ff, d]; b2: [d].
+    """
+    rows, d = x.shape
+    ff = w1.shape[1]
+    assert w1.shape == (d, ff) and w2.shape == (ff, d)
+    assert b1.shape == (ff,) and b2.shape == (d,)
+    block_rows = min(block_rows, rows)
+
+    rows_p = -(-rows // block_rows) * block_rows
+    xp = jnp.pad(x, ((0, rows_p - rows), (0, 0)))
+
+    grid = (rows_p // block_rows,)
+    out = pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, ff), lambda i: (0, 0)),
+            pl.BlockSpec((ff,), lambda i: (0,)),
+            pl.BlockSpec((ff, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_p, d), x.dtype),
+        interpret=interpret,
+    )(xp, w1, b1, w2, b2)
+    return out[:rows, :]
+
+
+def ref_ffn(x, w1, b1, w2, b2):
+    """Dense oracle for the chunked FFN."""
+    return ref_gelu(x @ w1 + b1) @ w2 + b2
+
+
+def ffn_vmem_bytes(block_rows, d, ff, dtype_bytes=4):
+    """VMEM footprint of one FFN grid step (perf model)."""
+    words = (
+        block_rows * d * 2  # x + out tiles
+        + d * ff * 2  # w1 + w2
+        + ff + d  # biases
+        + block_rows * ff  # mid tile
+    )
+    return words * dtype_bytes

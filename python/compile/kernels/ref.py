@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package is
+checked against its `ref_*` twin by pytest (+hypothesis shape sweeps) at
+build time, before anything is AOT-lowered for the Rust runtime.
+"""
+
+import jax.numpy as jnp
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def ref_attention(q, k, v, scale=None):
+    """Dense scaled-dot-product attention: softmax(q.k^T.scale).v
+
+    q: [..., sq, d], k: [..., skv, d], v: [..., skv, dv].
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    scores = jnp.einsum("...qd,...kd->...qk", q, k) * scale
+    probs = _softmax(scores)
+    return jnp.einsum("...qk,...kd->...qd", probs, v)
+
+
+def ref_chunked_attention(q, k, v, scale=None, q_chunk=64):
+    """Chunked (AutoChunk-style) attention: q processed in row chunks.
+
+    Numerically identical to ref_attention; sanity-checks the chunk
+    rewrite itself (Rule 2: output alignment) independent of Pallas.
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    sq = q.shape[-2]
+    outs = []
+    for start in range(0, sq, q_chunk):
+        qc = q[..., start : start + q_chunk, :]
+        outs.append(ref_attention(qc, k, v, scale))
+    return jnp.concatenate(outs, axis=-2)
+
+
+def ref_layernorm(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def ref_gelu(x):
+    """tanh-approximated GELU (matches jax.nn.gelu default)."""
+    c = (2.0 / jnp.pi) ** 0.5
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))

@@ -1,0 +1,161 @@
+"""L2: GPT prefill model in JAX, mirroring `rust/src/models/gpt.rs`.
+
+Three attention modes, selecting how the activation hotspot is handled:
+
+* ``dense``   — materializes the `[h, s, s]` score tensor (baseline);
+* ``fused``   — the L1 Pallas memory-efficient attention kernel;
+* ``chunked`` — the AutoChunk rewrite applied at graph level: the
+  attention region runs under ``jax.lax.map`` over query-row chunks,
+  which lowers to a sequential HLO while-loop — the AOT twin of the Rust
+  interpreter's ChunkLoop. ``n_chunks`` is the plan's chunk count.
+
+Build-time only: `aot.py` lowers `gpt_forward` once per (mode, seq bucket)
+and the Rust runtime serves the resulting HLO. Python never runs at
+request time.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import mem_efficient_attention
+from .kernels.ref import ref_gelu, ref_layernorm
+
+
+class GptConfig:
+    """Mirror of rust GptConfig (defaults sized for CPU AOT compile)."""
+
+    def __init__(
+        self,
+        seq=128,
+        d_model=128,
+        heads=4,
+        layers=2,
+        vocab=512,
+        ff_mult=4,
+        mode="dense",
+        n_chunks=4,
+    ):
+        assert d_model % heads == 0
+        assert mode in ("dense", "fused", "chunked")
+        self.seq = seq
+        self.d_model = d_model
+        self.heads = heads
+        self.layers = layers
+        self.vocab = vocab
+        self.ff_mult = ff_mult
+        self.mode = mode
+        self.n_chunks = n_chunks
+
+    def tag(self):
+        base = f"gpt_{self.mode}_s{self.seq}"
+        if self.mode == "chunked":
+            base += f"_n{self.n_chunks}"
+        return base
+
+
+def init_params(cfg, seed=0):
+    """Deterministic Xavier-ish init; a flat dict of named arrays."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+
+    def mk(name, shape, fan_in):
+        nonlocal key
+        key, sub = jax.random.split(key)
+        params[name] = jax.random.normal(sub, shape, jnp.float32) * (
+            1.0 / fan_in**0.5
+        )
+
+    d, ff = cfg.d_model, cfg.ff_mult * cfg.d_model
+    mk("wte", (cfg.vocab, d), d)
+    mk("wpe", (cfg.seq, d), d)
+    for i in range(cfg.layers):
+        for nm in ("wq", "wk", "wv", "wo"):
+            mk(f"l{i}.{nm}", (d, d), d)
+        mk(f"l{i}.ff.w1", (d, ff), d)
+        mk(f"l{i}.ff.w2", (ff, d), ff)
+        params[f"l{i}.ff.b1"] = jnp.zeros((ff,), jnp.float32)
+        params[f"l{i}.ff.b2"] = jnp.zeros((d,), jnp.float32)
+        for ln in ("ln1", "ln2"):
+            params[f"l{i}.{ln}.g"] = jnp.ones((d,), jnp.float32)
+            params[f"l{i}.{ln}.b"] = jnp.zeros((d,), jnp.float32)
+    params["lnf.g"] = jnp.ones((d,), jnp.float32)
+    params["lnf.b"] = jnp.zeros((d,), jnp.float32)
+    return params
+
+
+def param_names(cfg):
+    """Stable positional order of parameters for the Rust runtime ABI."""
+    return sorted(init_params(cfg).keys())
+
+
+def _dense_attention(qh, kh, vh, scale):
+    scores = jnp.einsum("hqd,hkd->hqk", qh, kh) * scale
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    probs = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", probs, vh)
+
+
+def _block(x, params, li, cfg):
+    """One transformer block; x: [s, d]."""
+    s, d = x.shape
+    h = cfg.heads
+    dh = d // h
+    scale = 1.0 / dh**0.5
+
+    def p(nm):
+        return params[f"l{li}.{nm}"]
+
+    xn = ref_layernorm(x, p("ln1.g"), p("ln1.b"))
+    q = (xn @ p("wq")).reshape(s, h, dh).transpose(1, 0, 2)
+    k = (xn @ p("wk")).reshape(s, h, dh).transpose(1, 0, 2)
+    v = (xn @ p("wv")).reshape(s, h, dh).transpose(1, 0, 2)
+
+    if cfg.mode == "fused":
+        ctx = mem_efficient_attention(q, k, v, scale=scale)
+    elif cfg.mode == "chunked":
+        # AutoChunk plan applied at L2: chunk the score/softmax/context
+        # region over query rows; k, v are the plan's pass inputs.
+        n = cfg.n_chunks
+        assert s % n == 0, "seq must divide n_chunks for the AOT variant"
+        q_chunks = q.reshape(h, n, s // n, dh).transpose(1, 0, 2, 3)
+        ctx_chunks = jax.lax.map(
+            lambda qc: _dense_attention(qc, k, v, scale), q_chunks
+        )  # [n, h, s/n, dh], chunks computed sequentially
+        ctx = ctx_chunks.transpose(1, 0, 2, 3).reshape(h, s, dh)
+    else:
+        ctx = _dense_attention(q, k, v, scale)
+
+    ctx = ctx.transpose(1, 0, 2).reshape(s, d)
+    res1 = ctx @ p("wo") + x
+
+    rn = ref_layernorm(res1, p("ln2.g"), p("ln2.b"))
+    hmid = rn @ p("ff.w1") + p("ff.b1")
+    ff = ref_gelu(hmid) @ p("ff.w2") + p("ff.b2")
+    return ff + res1
+
+
+def gpt_forward(params, tokens, cfg):
+    """Prefill forward: i32 tokens [s] → hidden states [s, d]."""
+    emb = params["wte"][tokens] + params["wpe"]
+    x = emb
+    for li in range(cfg.layers):
+        x = _block(x, params, li, cfg)
+    return ref_layernorm(x, params["lnf.g"], params["lnf.b"])
+
+
+def positional_forward(cfg):
+    """Forward taking (tokens, *params-in-name-order) — the flat positional
+    ABI the Rust runtime calls through PJRT."""
+    names = param_names(cfg)
+
+    def fn(tokens, *flat_params):
+        params = dict(zip(names, flat_params))
+        return (gpt_forward(params, tokens, cfg),)
+
+    return fn, names
+
+
+forward_fn = functools.partial(gpt_forward)  # convenience alias

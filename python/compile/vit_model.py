@@ -1,0 +1,137 @@
+"""L2: ViT encoder in JAX (second AOT model, mirrors rust models::vit).
+
+Patches are pre-extracted (`[p, patch_dim]` f32) so the serving runtime's
+request payload is a flat tensor; the encoder reuses the GPT block math
+via the same ref kernels. Same three attention modes as GPT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import mem_efficient_attention
+from .kernels.ref import ref_gelu, ref_layernorm
+from .model import _dense_attention
+
+
+class ViTConfig:
+    def __init__(
+        self,
+        patches=64,
+        patch_dim=192,
+        d_model=128,
+        heads=4,
+        layers=2,
+        classes=64,
+        ff_mult=4,
+        mode="dense",
+        n_chunks=4,
+    ):
+        assert d_model % heads == 0
+        assert mode in ("dense", "fused", "chunked")
+        self.patches = patches
+        self.patch_dim = patch_dim
+        self.d_model = d_model
+        self.heads = heads
+        self.layers = layers
+        self.classes = classes
+        self.ff_mult = ff_mult
+        self.mode = mode
+        self.n_chunks = n_chunks
+
+    def tag(self):
+        base = f"vit_{self.mode}_s{self.patches}"
+        if self.mode == "chunked":
+            base += f"_n{self.n_chunks}"
+        return base
+
+
+def init_params(cfg, seed=0):
+    key = jax.random.PRNGKey(seed + 1000)
+    params = {}
+
+    def mk(name, shape, fan_in):
+        nonlocal key
+        key, sub = jax.random.split(key)
+        params[name] = jax.random.normal(sub, shape, jnp.float32) * (
+            1.0 / fan_in**0.5
+        )
+
+    d, ff = cfg.d_model, cfg.ff_mult * cfg.d_model
+    mk("patch_proj.w", (cfg.patch_dim, d), cfg.patch_dim)
+    params["patch_proj.b"] = jnp.zeros((d,), jnp.float32)
+    mk("pos_emb", (cfg.patches, d), d)
+    for i in range(cfg.layers):
+        for nm in ("wq", "wk", "wv", "wo"):
+            mk(f"l{i}.{nm}", (d, d), d)
+        mk(f"l{i}.ff.w1", (d, ff), d)
+        mk(f"l{i}.ff.w2", (ff, d), ff)
+        params[f"l{i}.ff.b1"] = jnp.zeros((ff,), jnp.float32)
+        params[f"l{i}.ff.b2"] = jnp.zeros((d,), jnp.float32)
+        for ln in ("ln1", "ln2"):
+            params[f"l{i}.{ln}.g"] = jnp.ones((d,), jnp.float32)
+            params[f"l{i}.{ln}.b"] = jnp.zeros((d,), jnp.float32)
+    params["lnf.g"] = jnp.ones((d,), jnp.float32)
+    params["lnf.b"] = jnp.zeros((d,), jnp.float32)
+    mk("head.w", (d, cfg.classes), d)
+    params["head.b"] = jnp.zeros((cfg.classes,), jnp.float32)
+    return params
+
+
+def param_names(cfg):
+    return sorted(init_params(cfg).keys())
+
+
+def _block(x, params, li, cfg):
+    s, d = x.shape
+    h = cfg.heads
+    dh = d // h
+    scale = 1.0 / dh**0.5
+
+    def p(nm):
+        return params[f"l{li}.{nm}"]
+
+    xn = ref_layernorm(x, p("ln1.g"), p("ln1.b"))
+    q = (xn @ p("wq")).reshape(s, h, dh).transpose(1, 0, 2)
+    k = (xn @ p("wk")).reshape(s, h, dh).transpose(1, 0, 2)
+    v = (xn @ p("wv")).reshape(s, h, dh).transpose(1, 0, 2)
+
+    if cfg.mode == "fused":
+        ctx = mem_efficient_attention(q, k, v, scale=scale)
+    elif cfg.mode == "chunked":
+        n = cfg.n_chunks
+        assert s % n == 0
+        q_chunks = q.reshape(h, n, s // n, dh).transpose(1, 0, 2, 3)
+        ctx_chunks = jax.lax.map(
+            lambda qc: _dense_attention(qc, k, v, scale), q_chunks
+        )
+        ctx = ctx_chunks.transpose(1, 0, 2, 3).reshape(h, s, dh)
+    else:
+        ctx = _dense_attention(q, k, v, scale)
+
+    ctx = ctx.transpose(1, 0, 2).reshape(s, d)
+    res1 = ctx @ p("wo") + x
+    rn = ref_layernorm(res1, p("ln2.g"), p("ln2.b"))
+    hmid = rn @ p("ff.w1") + p("ff.b1")
+    ff = ref_gelu(hmid) @ p("ff.w2") + p("ff.b2")
+    return ff + res1
+
+
+def vit_forward(params, patches, cfg):
+    """[p, patch_dim] patches → [classes] logits."""
+    x = patches @ params["patch_proj.w"] + params["patch_proj.b"]
+    x = x + params["pos_emb"]
+    for li in range(cfg.layers):
+        x = _block(x, params, li, cfg)
+    x = ref_layernorm(x, params["lnf.g"], params["lnf.b"])
+    pooled = jnp.mean(x, axis=0)
+    return pooled @ params["head.w"] + params["head.b"]
+
+
+def positional_forward(cfg):
+    names = param_names(cfg)
+
+    def fn(patches, *flat_params):
+        params = dict(zip(names, flat_params))
+        return (vit_forward(params, patches, cfg),)
+
+    return fn, names

@@ -1,0 +1,113 @@
+"""AOT pipeline tests: artifact metadata, parameter export ABI, and
+lowering determinism — the contract the Rust runtime depends on."""
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.aot import (
+    estimate_activation_bytes,
+    export_params,
+    lower_variant,
+    write_artifact,
+)
+from compile.model import GptConfig, init_params, param_names
+
+
+def small_cfg(**kw):
+    return GptConfig(seq=32, d_model=32, heads=2, layers=1, vocab=64, **kw)
+
+
+def test_meta_contains_runtime_contract(tmp_path):
+    cfg = small_cfg()
+    hlo, meta = lower_variant(cfg)
+    path = write_artifact(str(tmp_path), cfg.tag(), hlo, meta)
+    assert os.path.exists(path)
+    meta_text = open(os.path.join(str(tmp_path), f"{cfg.tag()}.meta")).read()
+    for key in (
+        "model=",
+        "mode=",
+        "seq=",
+        "num_params=",
+        "param_names=",
+        "est_activation_bytes=",
+        "output_shape=",
+    ):
+        assert key in meta_text, f"missing {key}"
+
+
+def test_param_export_blob_layout(tmp_path):
+    cfg = small_cfg()
+    path = export_params(str(tmp_path), cfg, seed=0)
+    blob = open(path, "rb").read()
+    params = init_params(cfg, 0)
+    names = sorted(params.keys())
+    total = sum(int(np.prod(params[n].shape)) * 4 for n in names)
+    assert len(blob) == total
+    # first array in the blob must be the first sorted param, byte-exact
+    first = np.asarray(params[names[0]], np.float32).tobytes()
+    assert blob[: len(first)] == first
+    manifest = open(path.replace(".bin", ".manifest")).read().strip().splitlines()
+    assert len(manifest) == len(names)
+    assert manifest[0].startswith(names[0] + ":")
+
+
+def test_init_params_deterministic():
+    cfg = small_cfg()
+    a = init_params(cfg, 7)
+    b = init_params(cfg, 7)
+    for n in a:
+        np.testing.assert_array_equal(a[n], b[n])
+    c = init_params(cfg, 8)
+    assert any(
+        not np.array_equal(a[n], c[n]) for n in a
+    ), "different seeds must differ"
+
+
+def test_lowering_deterministic():
+    cfg = small_cfg()
+    h1, _ = lower_variant(cfg)
+    h2, _ = lower_variant(cfg)
+    assert h1 == h2
+
+
+def test_estimates_monotone_in_seq():
+    prev = 0
+    for seq in (64, 128, 256):
+        est = estimate_activation_bytes(GptConfig(seq=seq))
+        assert est > prev
+        prev = est
+
+
+def test_chunked_estimate_decreases_with_n():
+    prev = None
+    for n in (2, 4, 8, 16):
+        est = estimate_activation_bytes(
+            GptConfig(seq=256, mode="chunked", n_chunks=n)
+        )
+        if prev is not None:
+            assert est <= prev
+        prev = est
+
+
+def test_all_variant_tags_unique():
+    tags = set()
+    for seq in (64, 128):
+        for mode in ("dense", "fused"):
+            tags.add(GptConfig(seq=seq, mode=mode).tag())
+        for n in (4, 8):
+            tags.add(GptConfig(seq=seq, mode="chunked", n_chunks=n).tag())
+    assert len(tags) == 8
+
+
+def test_param_names_match_artifact_layout():
+    # The entry layout is (tokens, *sorted params): spot-check shapes align.
+    cfg = small_cfg()
+    hlo, meta = lower_variant(cfg)
+    names = param_names(cfg)
+    assert meta["num_params"] == len(names)
+    params = init_params(cfg)
+    # wte is f32[vocab, d]; its signature must appear in the entry layout
+    v, d = params["wte"].shape
+    assert f"f32[{v},{d}]" in hlo

@@ -1,0 +1,62 @@
+"""Chunked-FFN Pallas kernel vs dense oracle (hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ffn import chunked_ffn, ffn_vmem_bytes, ref_ffn
+
+
+def rand(shape, seed, dtype=jnp.float32):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape) * 0.5, dtype)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 200),
+    d=st.sampled_from([8, 16, 64]),
+    mult=st.sampled_from([2, 4]),
+    block_rows=st.sampled_from([16, 64, 128]),
+)
+def test_chunked_ffn_matches_ref_sweep(rows, d, mult, block_rows):
+    ff = mult * d
+    x = rand((rows, d), 0)
+    w1, b1 = rand((d, ff), 1), rand((ff,), 2)
+    w2, b2 = rand((ff, d), 3), rand((d,), 4)
+    got = chunked_ffn(x, w1, b1, w2, b2, block_rows=block_rows)
+    want = ref_ffn(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+
+
+def test_single_row():
+    x = rand((1, 16), 5)
+    w1, b1 = rand((16, 64), 6), rand((64,), 7)
+    w2, b2 = rand((64, 16), 8), rand((16,), 9)
+    np.testing.assert_allclose(
+        chunked_ffn(x, w1, b1, w2, b2),
+        ref_ffn(x, w1, b1, w2, b2),
+        atol=1e-5,
+        rtol=1e-5,
+    )
+
+
+def test_bf16_path():
+    x = rand((96, 32), 10, jnp.bfloat16)
+    w1, b1 = rand((32, 128), 11, jnp.bfloat16), rand((128,), 12, jnp.bfloat16)
+    w2, b2 = rand((128, 32), 13, jnp.bfloat16), rand((32,), 14, jnp.bfloat16)
+    got = chunked_ffn(x, w1, b1, w2, b2, block_rows=32)
+    assert got.dtype == jnp.bfloat16
+    want = ref_ffn(
+        *(a.astype(jnp.float32) for a in (x, w1, b1, w2, b2))
+    )
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want, atol=5e-2, rtol=5e-2
+    )
+
+
+def test_vmem_model_reasonable():
+    # paper-scale FFN tile fits VMEM with double-buffering
+    assert ffn_vmem_bytes(128, 128, 512) * 2 < 16 * 1024 * 1024
+    # and tiling the rows really is what bounds the mid tensor:
+    # one tile's mid is block_rows/rows of the dense mid
+    assert ffn_vmem_bytes(64, 128, 512) < ffn_vmem_bytes(128, 128, 512)

@@ -1,0 +1,151 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and block sizes; explicit cases pin the
+regressions we have actually hit (tail blocks, single-block path,
+large-logit stability, bf16).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import (
+    layernorm,
+    mem_efficient_attention,
+    vmem_bytes,
+)
+from compile.kernels.ref import (
+    ref_attention,
+    ref_chunked_attention,
+    ref_layernorm,
+)
+
+
+def rand(shape, seed, scale=1.0, dtype=jnp.float32):
+    return jnp.asarray(
+        np.random.RandomState(seed).randn(*shape) * scale, dtype
+    )
+
+
+# ---------------------------------------------------------------- attention
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(1, 4),
+    sq=st.integers(1, 160),
+    skv=st.integers(1, 160),
+    d=st.sampled_from([4, 8, 16, 32]),
+    block_q=st.sampled_from([16, 32, 128]),
+    block_k=st.sampled_from([16, 48, 128]),
+)
+def test_attention_matches_ref_sweep(h, sq, skv, d, block_q, block_k):
+    q = rand((h, sq, d), 0)
+    k = rand((h, skv, d), 1)
+    v = rand((h, skv, d), 2)
+    got = mem_efficient_attention(q, k, v, block_q=block_q, block_k=block_k)
+    want = ref_attention(q, k, v)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_default_blocks():
+    q, k, v = rand((4, 256, 32), 3), rand((4, 256, 32), 4), rand((4, 256, 32), 5)
+    got = mem_efficient_attention(q, k, v)
+    want = ref_attention(q, k, v)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_attention_custom_scale():
+    q, k, v = rand((2, 64, 16), 6), rand((2, 64, 16), 7), rand((2, 64, 16), 8)
+    got = mem_efficient_attention(q, k, v, scale=0.05)
+    want = ref_attention(q, k, v, scale=0.05)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_attention_large_logits_stable():
+    q = rand((1, 32, 8), 9, scale=20.0)
+    k = rand((1, 64, 8), 10, scale=20.0)
+    v = rand((1, 64, 8), 11)
+    got = mem_efficient_attention(q, k, v, scale=1.0)
+    assert bool(jnp.all(jnp.isfinite(got)))
+    want = ref_attention(q, k, v, scale=1.0)
+    np.testing.assert_allclose(got, want, atol=1e-3, rtol=1e-3)
+
+
+def test_attention_bf16():
+    q = rand((2, 96, 16), 12, dtype=jnp.bfloat16)
+    k = rand((2, 96, 16), 13, dtype=jnp.bfloat16)
+    v = rand((2, 96, 16), 14, dtype=jnp.bfloat16)
+    got = mem_efficient_attention(q, k, v, block_q=32, block_k=32)
+    assert got.dtype == jnp.bfloat16
+    want = ref_attention(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want, atol=3e-2, rtol=3e-2
+    )
+
+
+def test_attention_rectangular_dv():
+    q = rand((2, 40, 16), 15)
+    k = rand((2, 70, 16), 16)
+    v = rand((2, 70, 24), 17)  # dv != d
+    got = mem_efficient_attention(q, k, v, block_q=16, block_k=32)
+    want = ref_attention(q, k, v)
+    assert got.shape == (2, 40, 24)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_chunked_ref_equals_dense_ref():
+    # Rule 2 (output alignment) for the chunk rewrite itself.
+    q, k, v = rand((2, 100, 16), 18), rand((2, 80, 16), 19), rand((2, 80, 16), 20)
+    for q_chunk in (1, 7, 32, 100, 1000):
+        np.testing.assert_allclose(
+            ref_chunked_attention(q, k, v, q_chunk=q_chunk),
+            ref_attention(q, k, v),
+            atol=1e-5,
+            rtol=1e-5,
+        )
+
+
+def test_vmem_model_within_budget():
+    # the default tile config must fit VMEM with double buffering
+    assert vmem_bytes(128, 128, 64) * 2 < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------- layernorm
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(1, 300),
+    d=st.sampled_from([8, 32, 128]),
+    block_rows=st.sampled_from([32, 128]),
+)
+def test_layernorm_matches_ref_sweep(rows, d, block_rows):
+    x = rand((rows, d), 21)
+    g = rand((d,), 22)
+    b = rand((d,), 23)
+    got = layernorm(x, g, b, block_rows=block_rows)
+    want = ref_layernorm(x, g, b)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_layernorm_unit_gamma_zero_beta():
+    x = rand((64, 32), 24)
+    g = jnp.ones(32)
+    b = jnp.zeros(32)
+    out = layernorm(x, g, b)
+    np.testing.assert_allclose(jnp.mean(out, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(jnp.std(out, -1), 1.0, atol=1e-2)
+
+
+def test_kernels_are_jittable_and_grad_free():
+    # AOT path lowers through jit; make sure nothing leaks tracers.
+    q, k, v = rand((1, 32, 8), 25), rand((1, 32, 8), 26), rand((1, 32, 8), 27)
+    f = jax.jit(lambda a, b, c: mem_efficient_attention(a, b, c))
+    np.testing.assert_allclose(
+        f(q, k, v), ref_attention(q, k, v), atol=1e-5, rtol=1e-5
+    )

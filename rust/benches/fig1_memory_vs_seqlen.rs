@@ -1,0 +1,113 @@
+//! Figure 1: activation memory vs sequence length, with and without
+//! AutoChunk, across the four evaluation models — plus the §4.2 max-length
+//! extension factor.
+//!
+//! Paper shape to reproduce: activation memory grows superlinearly with
+//! sequence length; AutoChunk removes most of it at long sequences; 1D
+//! models extend max length ~11.7×, 2D models ~3.2×.
+//!
+//! `cargo bench --bench fig1_memory_vs_seqlen`
+
+use autochunk::exec::{execute, random_inputs, random_params};
+use autochunk::models::*;
+use autochunk::passes::{autochunk, estimate, AutoChunkConfig};
+use autochunk::plan::execute_chunked;
+use autochunk::tensor::MemoryTracker;
+use autochunk::util::bench::{mib, Table};
+
+fn main() {
+    let cfg = AutoChunkConfig::default();
+    let mut table = Table::new(&["model", "seq", "baseline MiB", "autochunk MiB", "reduction"]);
+
+    let cases: Vec<(&str, Vec<usize>)> = vec![
+        ("gpt", vec![256, 512, 1024, 2048, 4096]),
+        ("vit", vec![256, 512, 1024, 2048]),
+        ("evoformer", vec![24, 32, 48, 64, 96]),
+        ("unet", vec![16, 32, 64]),
+    ];
+    for (model, seqs) in &cases {
+        for &seq in seqs {
+            let g = build(model, seq);
+            let base = estimate(&g).peak_bytes;
+            let auto = autochunk(&g, base / 10, &cfg).chunked_peak;
+            table.row(vec![
+                model.to_string(),
+                seq.to_string(),
+                format!("{:.1}", mib(base)),
+                format!("{:.1}", mib(auto)),
+                format!("{:.1}%", 100.0 * (1.0 - auto as f64 / base as f64)),
+            ]);
+        }
+    }
+    println!("== Figure 1: activation memory vs sequence length ==");
+    print!("{}", table.render());
+
+    // Validate one point with *measured* peaks (tracker, not estimate).
+    let g = build("gpt", 512);
+    let base_prof = estimate(&g);
+    let result = autochunk(&g, base_prof.peak_bytes / 10, &cfg);
+    let ps = random_params(&g, 1);
+    let t0 = MemoryTracker::new();
+    let ins = random_inputs(&g, 2, Some(t0.clone()));
+    let (_, s_base) = execute(&g, &ins, &ps, &t0);
+    let t1 = MemoryTracker::new();
+    let ins = random_inputs(&g, 2, Some(t1.clone()));
+    let (_, s_chunk) = execute_chunked(&g, &result.plans, &ins, &ps, &t1);
+    println!(
+        "\nmeasured validation (gpt-512): baseline {:.1} MiB -> chunked {:.1} MiB",
+        mib(s_base.peak_bytes),
+        mib(s_chunk.peak_bytes)
+    );
+
+    // §4.2 max-length extension under the gpt-1024 baseline cap.
+    let cap = estimate(&build("gpt", 1024)).peak_bytes;
+    let sweep = [1024usize, 2048, 4096, 8192, 12288, 16384, 24576];
+    let mut plain = 0usize;
+    let mut chunked = 0usize;
+    for &seq in &sweep {
+        let g = build("gpt", seq);
+        if estimate(&g).peak_bytes <= cap {
+            plain = seq;
+        }
+        if autochunk(&g, cap, &cfg).chunked_peak <= cap {
+            chunked = seq;
+        }
+    }
+    println!(
+        "\n§4.2 max-seq extension (gpt 1D, cap {:.0} MiB): {} -> {} ({:.1}x; paper: 11.7x on A100)",
+        mib(cap),
+        plain,
+        chunked,
+        chunked as f64 / plain.max(1) as f64
+    );
+    // 2D: evoformer
+    let cap2 = estimate(&build("evoformer", 64)).peak_bytes;
+    let mut plain2 = 0usize;
+    let mut chunked2 = 0usize;
+    for &seq in &[64usize, 80, 96, 128, 160, 192, 224] {
+        let g = build("evoformer", seq);
+        if estimate(&g).peak_bytes <= cap2 {
+            plain2 = seq;
+        }
+        if autochunk(&g, cap2, &cfg).chunked_peak <= cap2 {
+            chunked2 = seq;
+        }
+    }
+    println!(
+        "§4.2 max-seq extension (evoformer 2D, cap {:.0} MiB): {} -> {} ({:.1}x; paper: ~3.2x)",
+        mib(cap2),
+        plain2,
+        chunked2,
+        chunked2 as f64 / plain2.max(1) as f64
+    );
+}
+
+fn build(model: &str, seq: usize) -> autochunk::ir::Graph {
+    match model {
+        "gpt" => gpt(&GptConfig { seq, ..Default::default() }),
+        "vit" => vit(&ViTConfig { patches: seq, ..Default::default() }),
+        "evoformer" => evoformer(&EvoformerConfig { seq, ..Default::default() }),
+        "unet" => unet(&UNetConfig { image: seq, ..Default::default() }),
+        _ => unreachable!(),
+    }
+}

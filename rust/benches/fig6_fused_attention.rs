@@ -1,0 +1,82 @@
+//! Figure 6: AutoChunk on top of fused (memory-efficient) attention.
+//!
+//! Paper shape to reproduce: even with the attention hotspot already
+//! removed by a fused kernel (Rabe–Staats), the *rest* of the model still
+//! holds most of the activation memory at long sequence — AutoChunk
+//! removes ≥70% more at ≤5% speed loss.
+//!
+//! `cargo bench --bench fig6_fused_attention`
+
+use autochunk::exec::{execute, random_inputs, random_params};
+use autochunk::models::*;
+use autochunk::passes::{autochunk, estimate, AutoChunkConfig};
+use autochunk::plan::execute_chunked;
+use autochunk::tensor::MemoryTracker;
+use autochunk::util::bench::{mib, ms, time_median, Table};
+
+fn main() {
+    let cases: Vec<(&str, autochunk::ir::Graph)> = vec![
+        (
+            "gpt-1024+fused",
+            gpt(&GptConfig { seq: 1024, fused_attention: true, ..Default::default() }),
+        ),
+        (
+            "gpt-2048+fused",
+            gpt(&GptConfig { seq: 2048, fused_attention: true, ..Default::default() }),
+        ),
+        (
+            "vit-1024+fused",
+            vit(&ViTConfig { patches: 1024, fused_attention: true, ..Default::default() }),
+        ),
+    ];
+    let mut table = Table::new(&[
+        "model",
+        "fused-only MiB",
+        "+autochunk MiB",
+        "extra reduction",
+        "speed loss",
+    ]);
+    for (name, g) in &cases {
+        let base = estimate(g);
+        // paper setting: control speed loss at ~5% → pick a generous-but-
+        // useful budget (25% of the fused baseline)
+        let result = autochunk(g, base.peak_bytes / 4, &AutoChunkConfig::default());
+
+        let ps = random_params(g, 1);
+        let ins = random_inputs(g, 2, None);
+        let t_base = time_median(
+            || {
+                let tr = MemoryTracker::new();
+                let _ = execute(g, &ins, &ps, &tr);
+            },
+            1,
+            3,
+        );
+        let t_chunk = time_median(
+            || {
+                let tr = MemoryTracker::new();
+                let _ = execute_chunked(g, &result.plans, &ins, &ps, &tr);
+            },
+            1,
+            3,
+        );
+        table.row(vec![
+            name.to_string(),
+            format!("{:.1}", mib(base.peak_bytes)),
+            format!("{:.1}", mib(result.chunked_peak)),
+            format!(
+                "{:.1}%",
+                100.0 * (1.0 - result.chunked_peak as f64 / base.peak_bytes as f64)
+            ),
+            format!(
+                "{:+.1}% ({:.0}→{:.0} ms)",
+                100.0 * (t_chunk.as_secs_f64() / t_base.as_secs_f64() - 1.0),
+                ms(t_base),
+                ms(t_chunk)
+            ),
+        ]);
+    }
+    println!("== Figure 6: activation memory beyond fused attention kernels ==");
+    println!("(paper: ≥70% further reduction at ~5% speed loss)\n");
+    print!("{}", table.render());
+}

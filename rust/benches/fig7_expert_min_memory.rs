@@ -1,0 +1,63 @@
+//! Figure 7: minimum achievable activation memory — OpenFold-style
+//! expert-designed chunks vs AutoChunk, on the Evoformer.
+//!
+//! Paper shape to reproduce: AutoChunk reaches 30.6–34.4% *below* the
+//! expert chunks' minimum (experts chunk whole modules at a fixed size and
+//! miss cross-module regions and dimension choices).
+//!
+//! `cargo bench --bench fig7_expert_min_memory`
+
+use autochunk::exec::{execute, random_inputs, random_params};
+use autochunk::models::{evoformer, EvoformerConfig};
+use autochunk::passes::expert::expert_plans;
+use autochunk::passes::{autochunk, estimate, AutoChunkConfig};
+use autochunk::plan::execute_chunked;
+use autochunk::tensor::MemoryTracker;
+use autochunk::util::bench::{mib, Table};
+
+fn main() {
+    let mut table = Table::new(&[
+        "seq",
+        "baseline MiB",
+        "expert min MiB",
+        "autochunk min MiB",
+        "autochunk vs expert",
+    ]);
+    for seq in [32usize, 48, 64, 96] {
+        let g = evoformer(&EvoformerConfig { seq, ..Default::default() });
+        let ps = random_params(&g, 1);
+
+        // measured baseline
+        let tr = MemoryTracker::new();
+        let ins = random_inputs(&g, 2, Some(tr.clone()));
+        let (_, s_base) = execute(&g, &ins, &ps, &tr);
+
+        // expert: deepest sensible fixed chunk (size 8 rows — deeper than
+        // the paper's 64 to give the baseline its best case at small seq)
+        let expert = expert_plans(&g, 8.min(seq / 4).max(1));
+        let tr = MemoryTracker::new();
+        let ins = random_inputs(&g, 2, Some(tr.clone()));
+        let (_, s_exp) = execute_chunked(&g, &expert, &ins, &ps, &tr);
+
+        // autochunk: minimal memory (near-zero budget → deepest plans)
+        let base_est = estimate(&g).peak_bytes;
+        let result = autochunk(&g, base_est / 20, &AutoChunkConfig::default());
+        let tr = MemoryTracker::new();
+        let ins = random_inputs(&g, 2, Some(tr.clone()));
+        let (_, s_auto) = execute_chunked(&g, &result.plans, &ins, &ps, &tr);
+
+        table.row(vec![
+            seq.to_string(),
+            format!("{:.1}", mib(s_base.peak_bytes)),
+            format!("{:.1}", mib(s_exp.peak_bytes)),
+            format!("{:.1}", mib(s_auto.peak_bytes)),
+            format!(
+                "{:.1}% lower",
+                100.0 * (1.0 - s_auto.peak_bytes as f64 / s_exp.peak_bytes as f64)
+            ),
+        ]);
+    }
+    println!("== Figure 7: minimum memory, expert chunks vs AutoChunk (Evoformer) ==");
+    println!("(paper: AutoChunk 30.6–34.4% below expert; measured peaks)\n");
+    print!("{}", table.render());
+}

@@ -1,0 +1,151 @@
+//! Perf harness (§Perf of EXPERIMENTS.md): micro-benchmarks of every hot
+//! path in the stack, used to drive the optimization pass.
+//!
+//! * L3 interpreter: matmul kernel, slice/concat traffic, per-op dispatch;
+//! * compiler: estimation / search / selection wall time;
+//! * end-to-end: chunked vs unchunked execution of the reference models.
+//!
+//! `cargo bench --bench perf_hotpath`
+
+use autochunk::exec::{execute, random_inputs, random_params};
+use autochunk::models::{gpt, GptConfig};
+use autochunk::passes::search::{search_chunks_with_stats, SearchConfig};
+use autochunk::passes::{autochunk, estimate, AutoChunkConfig};
+use autochunk::plan::execute_chunked;
+use autochunk::tensor::layout::{concat, split};
+use autochunk::tensor::matmul::matmul;
+use autochunk::tensor::{MemoryTracker, Tensor};
+use autochunk::util::bench::{ms, time_median, Table};
+
+fn main() {
+    let mut t = Table::new(&["hot path", "median", "notes"]);
+
+    // ---- L3 kernels
+    let a = Tensor::rand(&[512, 512], 1.0, 1, None);
+    let b = Tensor::rand(&[512, 512], 1.0, 2, None);
+    let d = time_median(|| { let _ = matmul(&a, &b, None); }, 2, 5);
+    let flops = 2.0 * 512f64.powi(3);
+    t.row(vec![
+        "matmul 512³".into(),
+        format!("{:.2} ms", ms(d)),
+        format!("{:.2} GFLOP/s", flops / d.as_secs_f64() / 1e9),
+    ]);
+
+    let thin_a = Tensor::rand(&[8, 512], 1.0, 3, None);
+    let d_thin = time_median(|| { let _ = matmul(&thin_a, &b, None); }, 2, 5);
+    t.row(vec![
+        "matmul 8×512×512 (thin slab)".into(),
+        format!("{:.3} ms", ms(d_thin)),
+        format!(
+            "{:.2} GFLOP/s (density loss)",
+            2.0 * 8.0 * 512.0 * 512.0 / d_thin.as_secs_f64() / 1e9
+        ),
+    ]);
+
+    let big = Tensor::rand(&[1024, 1024], 1.0, 4, None);
+    let d_outer = time_median(
+        || {
+            let parts = split(&big, 0, 16);
+            let _ = concat(&parts, 0, None);
+        },
+        2,
+        5,
+    );
+    let d_inner = time_median(
+        || {
+            let parts = split(&big, 1, 16);
+            let _ = concat(&parts, 1, None);
+        },
+        2,
+        5,
+    );
+    t.row(vec![
+        "split+concat dim0 (16 chunks, 4 MiB)".into(),
+        format!("{:.3} ms", ms(d_outer)),
+        "outer dim: large runs".into(),
+    ]);
+    t.row(vec![
+        "split+concat dim1 (16 chunks, 4 MiB)".into(),
+        format!("{:.3} ms", ms(d_inner)),
+        format!("{:.1}x outer (stride term)", d_inner.as_secs_f64() / d_outer.as_secs_f64()),
+    ]);
+
+    // ---- compiler passes
+    let g = gpt(&GptConfig { seq: 1024, ..Default::default() });
+    let d_est = time_median(|| { let _ = estimate(&g); }, 2, 5);
+    t.row(vec![
+        "estimation pass (gpt-1024, 258 nodes)".into(),
+        format!("{:.3} ms", ms(d_est)),
+        String::new(),
+    ]);
+    let prof = estimate(&g);
+    let d_search = time_median(
+        || {
+            let _ = search_chunks_with_stats(&g, &prof, &[], &SearchConfig::default());
+        },
+        1,
+        3,
+    );
+    let (cands, stats) = search_chunks_with_stats(&g, &prof, &[], &SearchConfig::default());
+    t.row(vec![
+        "chunk search pass".into(),
+        format!("{:.1} ms", ms(d_search)),
+        format!(
+            "{} regions, {} stage2, {} candidates",
+            stats.regions_considered,
+            stats.stage2_runs,
+            cands.len()
+        ),
+    ]);
+    let base = prof.peak_bytes;
+    let d_compile = time_median(
+        || {
+            let _ = autochunk(&g, base / 5, &AutoChunkConfig::default());
+        },
+        1,
+        3,
+    );
+    t.row(vec![
+        "full autochunk compile (20% budget)".into(),
+        format!("{:.0} ms", ms(d_compile)),
+        String::new(),
+    ]);
+
+    // ---- end-to-end interpreter
+    let g = gpt(&GptConfig { seq: 512, ..Default::default() });
+    let ps = random_params(&g, 1);
+    let ins = random_inputs(&g, 2, None);
+    let d_base = time_median(
+        || {
+            let tr = MemoryTracker::new();
+            let _ = execute(&g, &ins, &ps, &tr);
+        },
+        1,
+        3,
+    );
+    let result = autochunk(&g, estimate(&g).peak_bytes / 5, &AutoChunkConfig::default());
+    let d_chunk = time_median(
+        || {
+            let tr = MemoryTracker::new();
+            let _ = execute_chunked(&g, &result.plans, &ins, &ps, &tr);
+        },
+        1,
+        3,
+    );
+    t.row(vec![
+        "gpt-512 unchunked e2e".into(),
+        format!("{:.0} ms", ms(d_base)),
+        String::new(),
+    ]);
+    t.row(vec![
+        "gpt-512 chunked e2e (20% budget)".into(),
+        format!("{:.0} ms", ms(d_chunk)),
+        format!(
+            "{:+.1}% vs unchunked",
+            100.0 * (d_chunk.as_secs_f64() / d_base.as_secs_f64() - 1.0)
+        ),
+    ]);
+
+    println!("== Perf hot paths ==\n");
+    print!("{}", t.render());
+}

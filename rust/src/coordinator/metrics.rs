@@ -1,0 +1,139 @@
+//! Serving metrics: latency distribution, throughput, per-variant counts.
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+/// Accumulates per-request observations during a serve run.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    latencies_us: Vec<u64>,
+    tokens: usize,
+    pub per_variant: HashMap<String, usize>,
+    pub waves: usize,
+    pub rejected: usize,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn record(&mut self, variant: &str, latency_us: u64, seq_len: usize) {
+        self.latencies_us.push(latency_us);
+        self.tokens += seq_len;
+        *self.per_variant.entry(variant.to_string()).or_default() += 1;
+    }
+
+    /// Close the run and compute the report.
+    pub fn finish(mut self, wall: Duration) -> MetricsReport {
+        self.latencies_us.sort_unstable();
+        let completed = self.latencies_us.len();
+        let pct = |p: f64| -> u64 {
+            if self.latencies_us.is_empty() {
+                return 0;
+            }
+            let idx = ((completed as f64 - 1.0) * p).round() as usize;
+            self.latencies_us[idx]
+        };
+        let wall_s = wall.as_secs_f64().max(1e-9);
+        MetricsReport {
+            completed,
+            rejected: self.rejected,
+            waves: self.waves,
+            wall_seconds: wall_s,
+            throughput_rps: completed as f64 / wall_s,
+            throughput_tokens_s: self.tokens as f64 / wall_s,
+            p50_us: pct(0.50),
+            p95_us: pct(0.95),
+            p99_us: pct(0.99),
+            mean_us: if completed == 0 {
+                0
+            } else {
+                self.latencies_us.iter().sum::<u64>() / completed as u64
+            },
+            per_variant: self.per_variant,
+        }
+    }
+}
+
+/// Summary of a serve run.
+#[derive(Clone, Debug)]
+pub struct MetricsReport {
+    pub completed: usize,
+    pub rejected: usize,
+    pub waves: usize,
+    pub wall_seconds: f64,
+    pub throughput_rps: f64,
+    pub throughput_tokens_s: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub mean_us: u64,
+    pub per_variant: HashMap<String, usize>,
+}
+
+impl MetricsReport {
+    /// Human-readable multi-line summary for CLI/examples.
+    pub fn render(&self) -> String {
+        let mut variants: Vec<_> = self.per_variant.iter().collect();
+        variants.sort();
+        let vstr = variants
+            .iter()
+            .map(|(k, v)| format!("{k}:{v}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        format!(
+            "completed={} rejected={} waves={} wall={:.2}s\n\
+             throughput={:.2} req/s ({:.0} tok/s)\n\
+             latency mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms\n\
+             variants: {vstr}",
+            self.completed,
+            self.rejected,
+            self.waves,
+            self.wall_seconds,
+            self.throughput_rps,
+            self.throughput_tokens_s,
+            self.mean_us as f64 / 1e3,
+            self.p50_us as f64 / 1e3,
+            self.p95_us as f64 / 1e3,
+            self.p99_us as f64 / 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_computed() {
+        let mut r = Recorder::new();
+        for i in 1..=100u64 {
+            r.record("v", i * 1000, 64);
+        }
+        let rep = r.finish(Duration::from_secs(1));
+        assert_eq!(rep.completed, 100);
+        assert_eq!(rep.p50_us, 51_000); // nearest-rank of 1..=100
+        assert_eq!(rep.p95_us, 94_000_u64.max(rep.p95_us.min(96_000)));
+        assert!(rep.p99_us >= rep.p95_us);
+        assert!(rep.throughput_rps > 99.0);
+        assert_eq!(rep.per_variant["v"], 100);
+    }
+
+    #[test]
+    fn empty_run_safe() {
+        let rep = Recorder::new().finish(Duration::from_millis(10));
+        assert_eq!(rep.completed, 0);
+        assert_eq!(rep.p99_us, 0);
+    }
+
+    #[test]
+    fn render_contains_key_fields() {
+        let mut r = Recorder::new();
+        r.record("gpt_dense_s64", 1500, 64);
+        let rep = r.finish(Duration::from_secs(1));
+        let s = rep.render();
+        assert!(s.contains("completed=1"));
+        assert!(s.contains("gpt_dense_s64:1"));
+    }
+}

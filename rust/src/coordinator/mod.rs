@@ -1,0 +1,355 @@
+//! L3 serving coordinator: router, batcher, memory-budget scheduler.
+//!
+//! The inference-serving context the paper motivates: requests with varying
+//! sequence lengths arrive at a device with a fixed activation-memory
+//! budget. The coordinator
+//!
+//! 1. **routes** each request to a sequence bucket and picks the cheapest-
+//!    loss variant (dense → chunked(n) → fused) whose estimated activation
+//!    fits the *remaining* budget — the runtime half of AutoChunk's
+//!    budget-driven chunk selection;
+//! 2. **batches** admitted requests into waves whose summed activation
+//!    estimates respect the budget (co-residency model of the paper's
+//!    GPU testbed);
+//! 3. **executes** waves through the PJRT runtime and records metrics.
+//!
+//! Requests longer than any variant that fits are *rejected* — unless a
+//! chunked variant "breaks the memory wall" (§4.2), which is exactly the
+//! effect the serve example measures.
+
+pub mod metrics;
+pub mod request;
+
+pub use metrics::{MetricsReport, Recorder};
+pub use request::{synthetic_workload, Request, RequestOutcome, Response};
+
+use crate::runtime::{ArtifactMeta, Runtime};
+use anyhow::{Context, Result};
+use std::time::Instant;
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub artifacts_dir: String,
+    /// Activation-memory budget in bytes (the device's headroom).
+    pub budget_bytes: usize,
+    /// Max requests per wave regardless of memory.
+    pub max_batch: usize,
+    pub model: String,
+    /// Variant modes the router may use (e.g. `["dense"]` for the
+    /// no-chunking baseline; empty = all modes).
+    pub allowed_modes: Vec<String>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            artifacts_dir: "artifacts".into(),
+            budget_bytes: 16 << 20,
+            max_batch: 8,
+            model: "gpt".into(),
+            allowed_modes: Vec::new(),
+        }
+    }
+}
+
+/// A wave of co-resident requests with chosen variants.
+#[derive(Debug, Default)]
+pub struct Wave {
+    /// (request index, chosen tag, est bytes)
+    pub entries: Vec<(usize, String, usize)>,
+    pub total_bytes: usize,
+}
+
+/// The serving coordinator.
+pub struct Coordinator {
+    pub config: ServeConfig,
+    runtime: Runtime,
+}
+
+impl Coordinator {
+    pub fn new(config: ServeConfig) -> Result<Coordinator> {
+        let runtime = Runtime::new(&config.artifacts_dir)
+            .context("starting runtime for coordinator")?;
+        Ok(Coordinator { config, runtime })
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Smallest bucket that holds `seq_len` (None if longer than all).
+    pub fn bucket_for(&self, seq_len: usize) -> Option<usize> {
+        self.runtime
+            .registry()
+            .buckets(&self.config.model)
+            .into_iter()
+            .find(|&b| b >= seq_len)
+    }
+
+    /// Pick the variant for a request given `remaining` budget bytes:
+    /// the fastest (highest-activation) one that fits. Returns None when
+    /// even the most chunked variant exceeds the remaining budget.
+    pub fn route(&self, seq_len: usize, remaining: usize) -> Option<ArtifactMeta> {
+        let bucket = self.bucket_for(seq_len)?;
+        let variants = self.runtime.registry().variants(&self.config.model, bucket);
+        variants
+            .into_iter()
+            .filter(|m| {
+                self.config.allowed_modes.is_empty()
+                    || self.config.allowed_modes.iter().any(|a| *a == m.mode)
+            })
+            .find(|m| m.est_activation_bytes <= remaining)
+            .cloned()
+    }
+
+    /// Greedy wave packing in arrival order: admit requests while their
+    /// variant estimates fit the remaining budget (and max_batch).
+    ///
+    /// Variant choice uses the *full* budget, not the wave remainder:
+    /// downgrading a request to a slower chunked variant merely to squeeze
+    /// it into the current wave trades real speed for nothing (the next
+    /// wave would have run it dense). A request whose full-budget variant
+    /// doesn't fit the remainder closes the wave.
+    pub fn plan_wave(&self, pending: &[&Request]) -> Wave {
+        let mut wave = Wave::default();
+        let mut remaining = self.config.budget_bytes;
+        for (idx, req) in pending.iter().enumerate() {
+            if wave.entries.len() >= self.config.max_batch {
+                break;
+            }
+            match self.route(req.seq_len, self.config.budget_bytes) {
+                Some(meta) if meta.est_activation_bytes <= remaining => {
+                    remaining -= meta.est_activation_bytes;
+                    wave.total_bytes += meta.est_activation_bytes;
+                    wave.entries
+                        .push((idx, meta.tag.clone(), meta.est_activation_bytes));
+                }
+                // fits the device but not this wave: close the wave
+                Some(_) => break,
+                // can never fit: leave for reject handling upstream
+                None => break,
+            }
+        }
+        wave
+    }
+
+    /// Serve a closed workload to completion; returns responses + metrics.
+    pub fn serve(&mut self, requests: &[Request]) -> Result<(Vec<Response>, MetricsReport)> {
+        let t0 = Instant::now();
+        let mut recorder = Recorder::new();
+        let mut responses: Vec<Response> = Vec::with_capacity(requests.len());
+        let mut queue: Vec<&Request> = requests.iter().collect();
+
+        while !queue.is_empty() {
+            let wave = self.plan_wave(&queue);
+            if wave.entries.is_empty() {
+                // head request cannot fit under any variant: reject it
+                let req = queue.remove(0);
+                recorder.rejected += 1;
+                responses.push(Response {
+                    id: req.id,
+                    outcome: RequestOutcome::Rejected,
+                    variant: String::new(),
+                    latency_us: 0,
+                });
+                continue;
+            }
+            // Execute the wave (serially; CPU PJRT parallelizes inside the
+            // op; the wave is the co-residency unit for memory accounting).
+            let mut taken = Vec::new();
+            for (idx, tag, _est) in &wave.entries {
+                let req = queue[*idx];
+                let started = Instant::now();
+                let out = self.runtime.run(tag, &req.tokens)?;
+                let latency_us = started.elapsed().as_micros() as u64
+                    + req.arrival_offset_us.saturating_sub(0);
+                debug_assert!(out.iter().all(|x| x.is_finite()));
+                recorder.record(tag, latency_us, req.seq_len);
+                responses.push(Response {
+                    id: req.id,
+                    outcome: RequestOutcome::Completed,
+                    variant: tag.clone(),
+                    latency_us,
+                });
+                taken.push(*idx);
+            }
+            // remove served entries (descending index order)
+            taken.sort_unstable_by(|a, b| b.cmp(a));
+            for idx in taken {
+                queue.remove(idx);
+            }
+            recorder.waves += 1;
+        }
+
+        let report = recorder.finish(t0.elapsed());
+        Ok((responses, report))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new(&format!("{}/gpt_dense_s64.meta", artifacts_dir())).exists()
+    }
+
+    fn coordinator(budget: usize) -> Coordinator {
+        Coordinator::new(ServeConfig {
+            artifacts_dir: artifacts_dir(),
+            budget_bytes: budget,
+            max_batch: 8,
+            model: "gpt".into(),
+            allowed_modes: Vec::new(),
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn bucket_selection() {
+        if !have_artifacts() {
+            return;
+        }
+        let c = coordinator(64 << 20);
+        assert_eq!(c.bucket_for(10), Some(64));
+        assert_eq!(c.bucket_for(64), Some(64));
+        assert_eq!(c.bucket_for(65), Some(128));
+        assert_eq!(c.bucket_for(100_000), None);
+    }
+
+    #[test]
+    fn generous_budget_routes_dense() {
+        if !have_artifacts() {
+            return;
+        }
+        let c = coordinator(1 << 30);
+        let m = c.route(200, 1 << 30).unwrap();
+        assert_eq!(m.mode, "dense");
+        assert_eq!(m.seq, 256);
+    }
+
+    #[test]
+    fn tight_budget_falls_back_to_chunked_or_fused() {
+        if !have_artifacts() {
+            return;
+        }
+        let c = coordinator(1 << 30);
+        let dense = c
+            .runtime
+            .registry()
+            .get("gpt_dense_s256")
+            .unwrap()
+            .est_activation_bytes;
+        // just below dense: must pick a memory-lighter variant
+        let m = c.route(200, dense - 1).unwrap();
+        assert_ne!(m.mode, "dense");
+        assert!(m.est_activation_bytes < dense);
+    }
+
+    #[test]
+    fn zero_budget_rejects() {
+        if !have_artifacts() {
+            return;
+        }
+        let c = coordinator(1 << 30);
+        assert!(c.route(200, 0).is_none());
+    }
+
+    #[test]
+    fn wave_respects_budget_invariant() {
+        if !have_artifacts() {
+            return;
+        }
+        // randomized packing invariant (hand-rolled property test)
+        let mut state = 0x12345678u64;
+        let mut rnd = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for trial in 0..20 {
+            let budget = (1 << 20) + (rnd() % (64 << 20)) as usize;
+            let c = coordinator(budget);
+            let reqs: Vec<Request> = (0..12)
+                .map(|i| Request::new(i, (rnd() % 256 + 1) as usize, (rnd() % 512) as i32))
+                .collect();
+            let refs: Vec<&Request> = reqs.iter().collect();
+            let wave = c.plan_wave(&refs);
+            assert!(
+                wave.total_bytes <= budget,
+                "trial {trial}: wave {} > budget {budget}",
+                wave.total_bytes
+            );
+            assert!(wave.entries.len() <= c.config.max_batch);
+            // entries must reference distinct queue slots
+            let mut idxs: Vec<usize> = wave.entries.iter().map(|e| e.0).collect();
+            idxs.dedup();
+            assert_eq!(idxs.len(), wave.entries.len());
+        }
+    }
+
+    #[test]
+    fn serve_completes_or_rejects_every_request() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut c = coordinator(8 << 20);
+        let reqs = synthetic_workload(10, 64, 256, 99);
+        let (responses, report) = c.serve(&reqs).unwrap();
+        assert_eq!(responses.len(), reqs.len());
+        let completed = responses
+            .iter()
+            .filter(|r| r.outcome == RequestOutcome::Completed)
+            .count();
+        assert_eq!(completed + report.rejected, reqs.len());
+        assert_eq!(report.completed, completed);
+        // every completed request ran some variant
+        for r in &responses {
+            if r.outcome == RequestOutcome::Completed {
+                assert!(!r.variant.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_variants_break_the_memory_wall() {
+        if !have_artifacts() {
+            return;
+        }
+        // budget below dense-256 but above chunked-256
+        let reg = coordinator(1 << 30);
+        let dense = reg
+            .runtime
+            .registry()
+            .get("gpt_dense_s256")
+            .unwrap()
+            .est_activation_bytes;
+        let chunk = reg
+            .runtime
+            .registry()
+            .get("gpt_chunked_s256_n8")
+            .unwrap()
+            .est_activation_bytes;
+        assert!(chunk < dense);
+        let budget = (chunk + dense) / 2;
+
+        let mut with_chunk = coordinator(budget);
+        let mut without = coordinator(budget);
+        without.config.allowed_modes = vec!["dense".into()];
+
+        let reqs = synthetic_workload(4, 200, 256, 7);
+        let (_, rep_with) = with_chunk.serve(&reqs).unwrap();
+        let (_, rep_without) = without.serve(&reqs).unwrap();
+        assert_eq!(rep_with.rejected, 0, "chunked variants should fit");
+        assert!(
+            rep_without.rejected > 0,
+            "without chunking these must not fit"
+        );
+    }
+}

@@ -1,0 +1,91 @@
+//! Requests, responses, and synthetic workload generation.
+
+/// An inference request (prefill of `tokens`).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: usize,
+    pub seq_len: usize,
+    pub tokens: Vec<i32>,
+    /// Synthetic arrival offset from workload start (open-loop traces).
+    pub arrival_offset_us: u64,
+}
+
+impl Request {
+    /// A request with deterministic filler tokens.
+    pub fn new(id: usize, seq_len: usize, seed: i32) -> Request {
+        let tokens = (0..seq_len)
+            .map(|i| ((seed as usize + i * 31) % 512) as i32)
+            .collect();
+        Request {
+            id,
+            seq_len,
+            tokens,
+            arrival_offset_us: 0,
+        }
+    }
+}
+
+/// How a request finished.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RequestOutcome {
+    Completed,
+    /// No variant fits the memory budget (the "memory wall").
+    Rejected,
+}
+
+/// The coordinator's answer.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: usize,
+    pub outcome: RequestOutcome,
+    /// Artifact tag that served the request (empty when rejected).
+    pub variant: String,
+    pub latency_us: u64,
+}
+
+/// Deterministic synthetic workload: `count` requests with lengths in
+/// `[min_len, max_len]`, xorshift-distributed (long-tailed enough to mix
+/// buckets). Mirrors the paper's varying-input-length serving scenario.
+pub fn synthetic_workload(count: usize, min_len: usize, max_len: usize, seed: u64) -> Vec<Request> {
+    let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+    let mut rnd = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    (0..count)
+        .map(|id| {
+            let span = (max_len - min_len).max(1) as u64;
+            let len = min_len + (rnd() % span) as usize;
+            let mut r = Request::new(id, len, (rnd() % 512) as i32);
+            r.arrival_offset_us = id as u64 * 500;
+            r
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_is_deterministic() {
+        let a = synthetic_workload(10, 8, 64, 42);
+        let b = synthetic_workload(10, 8, 64, 42);
+        assert_eq!(a.len(), 10);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.seq_len, y.seq_len);
+            assert_eq!(x.tokens, y.tokens);
+        }
+    }
+
+    #[test]
+    fn lengths_within_bounds() {
+        for r in synthetic_workload(100, 16, 128, 7) {
+            assert!((16..128).contains(&r.seq_len));
+            assert_eq!(r.tokens.len(), r.seq_len);
+            assert!(r.tokens.iter().all(|&t| (0..512).contains(&t)));
+        }
+    }
+}

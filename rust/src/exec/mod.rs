@@ -1,0 +1,68 @@
+//! Graph interpreter with liveness-driven memory accounting.
+//!
+//! Executes a [`Graph`] node-by-node in topological order. Every
+//! intermediate lands on the run's [`MemoryTracker`]; a value is dropped as
+//! soon as its last consumer has executed, so the tracker's high-water mark
+//! is the *measured* peak activation memory of the execution — the quantity
+//! the paper's Figure 1/5/6/7 report from the CUDA allocator.
+//!
+//! Parameters are allocated untracked (parameter memory is out of scope of
+//! activation accounting, Eq. 1). Inputs and outputs are tracked.
+
+mod interpreter;
+
+pub use interpreter::{execute, execute_node, ExecStats};
+
+use crate::ir::Graph;
+use crate::tensor::{MemoryTracker, Tensor};
+
+/// Deterministically-seeded random parameters for a graph (test/bench aid).
+pub fn random_params(graph: &Graph, seed: u64) -> Vec<Tensor> {
+    graph
+        .params
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| {
+            let n = graph.node(p);
+            // ~Xavier scale keeps activations O(1) through deep stacks.
+            // conv weights are OIHW: fan-in = Cin·Kh·Kw; linear are [in, out].
+            let fan_in = match n.shape.len() {
+                4 => n.shape[1] * n.shape[2] * n.shape[3],
+                _ => n.shape.first().copied().unwrap_or(1),
+            }
+            .max(1);
+            let scale = (1.0 / fan_in as f32).sqrt();
+            Tensor::rand(&n.shape, scale, seed.wrapping_add(i as u64), None)
+        })
+        .collect()
+}
+
+/// Deterministically-seeded random inputs, allocated on `tracker`.
+pub fn random_inputs(graph: &Graph, seed: u64, tracker: Option<MemoryTracker>) -> Vec<Tensor> {
+    graph
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| {
+            let n = graph.node(p);
+            match n.dtype {
+                crate::tensor::DType::F32 => {
+                    Tensor::rand(&n.shape, 1.0, seed.wrapping_add(1000 + i as u64), tracker.clone())
+                }
+                crate::tensor::DType::I32 => {
+                    // token-ish ids in [0, 64)
+                    let count = crate::tensor::numel(&n.shape);
+                    let mut state = seed.wrapping_add(2000 + i as u64).wrapping_mul(0x9E3779B97F4A7C15) | 1;
+                    let mut v = Vec::with_capacity(count);
+                    for _ in 0..count {
+                        state ^= state << 13;
+                        state ^= state >> 7;
+                        state ^= state << 17;
+                        v.push((state % 64) as i32); // vocab >= 64 assumed
+                    }
+                    Tensor::from_i32(v, &n.shape, tracker.clone())
+                }
+            }
+        })
+        .collect()
+}

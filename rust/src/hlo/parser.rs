@@ -1,0 +1,440 @@
+//! The line-oriented HLO text parser.
+
+use crate::ir::{Graph, Node, NodeId, Op};
+use crate::tensor::ops::{BinaryOp, UnaryOp};
+use crate::tensor::reduce::ReduceOp;
+use crate::tensor::DType;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parse an HLO-text module file into a [`Graph`].
+pub fn parse_hlo_file<P: AsRef<std::path::Path>>(path: P) -> Result<Graph> {
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    parse_hlo_text(&text)
+}
+
+/// Parse an HLO-text module into a [`Graph`] (ENTRY computation only;
+/// nested computations resolve reduce combiners).
+pub fn parse_hlo_text(text: &str) -> Result<Graph> {
+    // 1. split computations
+    let mut combiners: HashMap<String, ReduceOp> = HashMap::new();
+    let mut entry_lines: Vec<&str> = Vec::new();
+    let mut in_entry = false;
+    let mut cur_region: Option<String> = None;
+    for line in text.lines() {
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with("HloModule") {
+            continue;
+        }
+        if let Some(rest) = trimmed.strip_suffix('{') {
+            let name = rest.trim();
+            if let Some(name) = name.strip_prefix("ENTRY ") {
+                let _ = name;
+                in_entry = true;
+            } else {
+                cur_region = Some(name.split_whitespace().next().unwrap_or("").to_string());
+            }
+            continue;
+        }
+        if trimmed == "}" {
+            in_entry = false;
+            cur_region = None;
+            continue;
+        }
+        if in_entry {
+            entry_lines.push(trimmed);
+        } else if let Some(region) = &cur_region {
+            // resolve the combiner from the region's ROOT op
+            if trimmed.starts_with("ROOT") {
+                let op = if trimmed.contains(" add(") {
+                    Some(ReduceOp::Sum)
+                } else if trimmed.contains(" maximum(") {
+                    Some(ReduceOp::Max)
+                } else if trimmed.contains(" minimum(") {
+                    Some(ReduceOp::Min)
+                } else {
+                    None
+                };
+                if let Some(op) = op {
+                    combiners.insert(region.clone(), op);
+                }
+            }
+        }
+    }
+    if entry_lines.is_empty() {
+        bail!("no ENTRY computation found");
+    }
+
+    // 2. build nodes
+    let mut graph = Graph {
+        name: "hlo_import".into(),
+        ..Default::default()
+    };
+    let mut by_name: HashMap<String, NodeId> = HashMap::new();
+    let mut root: Option<Vec<NodeId>> = None;
+
+    for line in entry_lines {
+        let inst = InstLine::parse(line)?;
+        if inst.opcode == "tuple" {
+            let ids = inst
+                .operands
+                .iter()
+                .map(|o| lookup(&by_name, o))
+                .collect::<Result<Vec<_>>>()?;
+            if inst.is_root {
+                root = Some(ids);
+            } else {
+                bail!("non-ROOT tuple unsupported");
+            }
+            continue;
+        }
+        let (shape, dtype) = parse_shape_type(&inst.ty)
+            .ok_or_else(|| anyhow!("unsupported type '{}' in: {}", inst.ty, line))?;
+        let ids: Vec<NodeId> = inst
+            .operands
+            .iter()
+            .map(|o| lookup(&by_name, o))
+            .collect::<Result<Vec<_>>>()?;
+
+        let id = emit(&mut graph, &inst, shape, dtype, ids, &combiners)?;
+        by_name.insert(inst.name.clone(), id);
+        if inst.is_root {
+            root = Some(vec![id]);
+        }
+    }
+
+    graph.outputs = root.ok_or_else(|| anyhow!("no ROOT in ENTRY"))?;
+    graph
+        .validate()
+        .map_err(|e| anyhow!("imported graph invalid: {e}"))?;
+    Ok(graph)
+}
+
+fn lookup(by_name: &HashMap<String, NodeId>, name: &str) -> Result<NodeId> {
+    by_name
+        .get(name)
+        .copied()
+        .ok_or_else(|| anyhow!("unknown operand '{name}'"))
+}
+
+/// One parsed instruction line.
+struct InstLine {
+    is_root: bool,
+    name: String,
+    ty: String,
+    opcode: String,
+    operands: Vec<String>,
+    attrs: String,
+}
+
+impl InstLine {
+    /// `[ROOT] name = ty opcode(op1, op2), attr=..., attr=...`
+    fn parse(line: &str) -> Result<InstLine> {
+        let (lhs, rhs) = line
+            .split_once(" = ")
+            .ok_or_else(|| anyhow!("no '=' in instruction: {line}"))?;
+        let (is_root, name) = match lhs.trim().strip_prefix("ROOT ") {
+            Some(n) => (true, n.trim().to_string()),
+            None => (false, lhs.trim().to_string()),
+        };
+        // rhs = `f32[8,16]{1,0} dot(a, b), attrs...`
+        let (ty, rest) = rhs
+            .split_once(' ')
+            .ok_or_else(|| anyhow!("no type in: {line}"))?;
+        let open = rest
+            .find('(')
+            .ok_or_else(|| anyhow!("no '(' in: {line}"))?;
+        let opcode = rest[..open].to_string();
+        let close = find_matching_paren(rest, open)
+            .ok_or_else(|| anyhow!("unbalanced parens in: {line}"))?;
+        let args = &rest[open + 1..close];
+        let attrs = rest[close + 1..].trim_start_matches(',').trim().to_string();
+        // constants carry values, not operand names
+        let operands = if opcode == "constant" || opcode == "iota" || opcode == "parameter" {
+            Vec::new()
+        } else {
+            args.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        };
+        let attrs = if opcode == "constant" || opcode == "parameter" {
+            args.to_string() // value / index payload
+        } else {
+            attrs
+        };
+        Ok(InstLine {
+            is_root,
+            name,
+            ty: ty.to_string(),
+            opcode,
+            operands,
+            attrs,
+        })
+    }
+}
+
+fn find_matching_paren(s: &str, open: usize) -> Option<usize> {
+    let bytes = s.as_bytes();
+    let mut depth = 0usize;
+    for (i, &b) in bytes.iter().enumerate().skip(open) {
+        match b {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// `f32[8,16]{1,0}` → (shape, dtype). Tuples and unknown types → None.
+fn parse_shape_type(ty: &str) -> Option<(Vec<usize>, DType)> {
+    let (dt, rest) = if let Some(r) = ty.strip_prefix("f32") {
+        (DType::F32, r)
+    } else if let Some(r) = ty.strip_prefix("s32") {
+        (DType::I32, r)
+    } else if let Some(r) = ty.strip_prefix("pred") {
+        (DType::F32, r)
+    } else if let Some(r) = ty.strip_prefix("f64") {
+        (DType::F32, r)
+    } else if let Some(r) = ty.strip_prefix("s64") {
+        (DType::I32, r)
+    } else {
+        return None;
+    };
+    let rest = rest.strip_prefix('[')?;
+    let close = rest.find(']')?;
+    let dims = &rest[..close];
+    let shape = if dims.is_empty() {
+        Vec::new()
+    } else {
+        dims.split(',')
+            .map(|d| d.trim().parse::<usize>().ok())
+            .collect::<Option<Vec<_>>>()?
+    };
+    Some((shape, dt))
+}
+
+/// `key={a,b,c}` attribute → Vec<usize>.
+fn attr_dims(attrs: &str, key: &str) -> Option<Vec<usize>> {
+    let pat = format!("{key}={{");
+    let start = attrs.find(&pat)? + pat.len();
+    let end = attrs[start..].find('}')? + start;
+    let body = &attrs[start..end];
+    if body.trim().is_empty() {
+        return Some(Vec::new());
+    }
+    body.split(',')
+        .map(|d| d.trim().parse::<usize>().ok())
+        .collect()
+}
+
+/// `key=value` (unbraced) attribute.
+fn attr_str<'a>(attrs: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("{key}=");
+    let start = attrs.find(&pat)? + pat.len();
+    let end = attrs[start..]
+        .find([',', ' '])
+        .map(|e| e + start)
+        .unwrap_or(attrs.len());
+    Some(&attrs[start..end])
+}
+
+#[allow(clippy::too_many_arguments)]
+fn emit(
+    graph: &mut Graph,
+    inst: &InstLine,
+    shape: Vec<usize>,
+    dtype: DType,
+    mut inputs: Vec<NodeId>,
+    combiners: &HashMap<String, ReduceOp>,
+) -> Result<NodeId> {
+    let opaque = |kind: &str| Op::Opaque { kind: kind.to_string() };
+    fn in_shape(g: &Graph, inputs: &[NodeId], i: usize) -> Vec<usize> {
+        g.node(inputs[i]).shape.clone()
+    }
+
+    let op = match inst.opcode.as_str() {
+        "parameter" => {
+            if dtype == DType::I32 {
+                Op::Input
+            } else {
+                Op::Param
+            }
+        }
+        "constant" => {
+            if shape.is_empty() {
+                let v = inst
+                    .attrs
+                    .trim()
+                    .trim_matches(|c| c == '{' || c == '}')
+                    .parse::<f32>()
+                    .unwrap_or(0.0);
+                Op::Const(v)
+            } else {
+                // array constant: a non-chunkable leaf (analysis-only)
+                Op::Param
+            }
+        }
+        "iota" => {
+            let axis = attr_str(&inst.attrs, "iota_dimension")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0);
+            Op::Iota { axis }
+        }
+        "add" => Op::Binary(BinaryOp::Add),
+        "subtract" => Op::Binary(BinaryOp::Sub),
+        "multiply" => Op::Binary(BinaryOp::Mul),
+        "divide" => Op::Binary(BinaryOp::Div),
+        "maximum" => Op::Binary(BinaryOp::Max),
+        "minimum" => Op::Binary(BinaryOp::Min),
+        "power" => Op::Binary(BinaryOp::Pow),
+        "exponential" => Op::Unary(UnaryOp::Exp),
+        "log" => Op::Unary(UnaryOp::Log),
+        "tanh" => Op::Unary(UnaryOp::Tanh),
+        "sqrt" => Op::Unary(UnaryOp::Sqrt),
+        "rsqrt" => Op::Unary(UnaryOp::Rsqrt),
+        "negate" => Op::Unary(UnaryOp::Neg),
+        "abs" => Op::Unary(UnaryOp::Abs),
+        "logistic" => Op::Unary(UnaryOp::Sigmoid),
+        "convert" => Op::Convert,
+        "reshape" => Op::Reshape,
+        "transpose" => {
+            let perm = attr_dims(&inst.attrs, "dimensions")
+                .ok_or_else(|| anyhow!("transpose without dimensions"))?;
+            Op::Transpose { perm }
+        }
+        "broadcast" => {
+            let dims = attr_dims(&inst.attrs, "dimensions").unwrap_or_default();
+            Op::Broadcast { dims }
+        }
+        "dot" => {
+            let lhs_contract = attr_dims(&inst.attrs, "lhs_contracting_dims").unwrap_or_default();
+            let rhs_contract = attr_dims(&inst.attrs, "rhs_contracting_dims").unwrap_or_default();
+            let lhs_batch = attr_dims(&inst.attrs, "lhs_batch_dims").unwrap_or_default();
+            let rhs_batch = attr_dims(&inst.attrs, "rhs_batch_dims").unwrap_or_default();
+            Op::DotGeneral {
+                lhs_batch,
+                rhs_batch,
+                lhs_contract,
+                rhs_contract,
+            }
+        }
+        "reduce" => {
+            // drop the init-value operand: IR Reduce is single-input
+            inputs.truncate(1);
+            let dims = attr_dims(&inst.attrs, "dimensions")
+                .ok_or_else(|| anyhow!("reduce without dimensions"))?;
+            let region = attr_str(&inst.attrs, "to_apply").unwrap_or("");
+            let rop = combiners.get(region).copied().unwrap_or(ReduceOp::Sum);
+            if dims.len() == 1 {
+                Op::Reduce {
+                    op: rop,
+                    axis: dims[0],
+                    keepdims: false,
+                }
+            } else {
+                // multi-axis reduce: chain single-axis reductions
+                let mut cur = inputs[0];
+                let mut cur_shape = in_shape(graph, &inputs, 0);
+                let mut axes = dims.clone();
+                axes.sort_unstable_by(|a, b| b.cmp(a)); // reduce inner first
+                for (i, &ax) in axes.iter().enumerate() {
+                    cur_shape.remove(ax);
+                    let id = graph.nodes.len();
+                    graph.nodes.push(Node {
+                        id,
+                        op: Op::Reduce {
+                            op: rop,
+                            axis: ax,
+                            keepdims: false,
+                        },
+                        inputs: vec![cur],
+                        shape: cur_shape.clone(),
+                        dtype,
+                        name: format!("{}.{}", inst.name, i),
+                    });
+                    cur = id;
+                }
+                return Ok(cur);
+            }
+        }
+        "concatenate" => {
+            let dims = attr_dims(&inst.attrs, "dimensions")
+                .ok_or_else(|| anyhow!("concatenate without dimensions"))?;
+            Op::Concat { axis: dims[0] }
+        }
+        "slice" => {
+            // slice={[a:b],[c:d],...} — single differing axis supported
+            let in_s = in_shape(graph, &inputs, 0);
+            let mut op = None;
+            if let Some(start_pos) = inst.attrs.find("slice={") {
+                let body_start = start_pos + "slice={".len();
+                let body_end = inst.attrs[body_start..]
+                    .find('}')
+                    .map(|e| e + body_start)
+                    .unwrap_or(inst.attrs.len());
+                let parts: Vec<&str> = inst.attrs[body_start..body_end]
+                    .split("],")
+                    .collect();
+                for (axis, part) in parts.iter().enumerate() {
+                    let p = part.trim_matches(|c| c == '[' || c == ']');
+                    let nums: Vec<usize> = p
+                        .split(':')
+                        .filter_map(|x| x.parse().ok())
+                        .collect();
+                    if nums.len() >= 2 {
+                        let (start, stop) = (nums[0], nums[1]);
+                        if stop - start != in_s[axis] {
+                            op = Some(Op::Slice {
+                                axis,
+                                start,
+                                len: stop - start,
+                            });
+                        }
+                    }
+                }
+            }
+            op.unwrap_or(Op::Reshape) // full-range slice = identity-ish
+        }
+        "gather" => {
+            // embedding pattern: table [V, D] × i32 ids → [.., D]
+            let t = in_shape(graph, &inputs, 0);
+            let ids_dt = graph.node(inputs[1]).dtype;
+            let offset = attr_dims(&inst.attrs, "offset_dims").unwrap_or_default();
+            let collapsed = attr_dims(&inst.attrs, "collapsed_slice_dims").unwrap_or_default();
+            if t.len() == 2
+                && ids_dt == DType::I32
+                && offset == vec![shape.len() - 1]
+                && collapsed == vec![0]
+            {
+                Op::Gather
+            } else {
+                opaque("gather")
+            }
+        }
+        other => opaque(other),
+    };
+
+    let id = graph.nodes.len();
+    match &op {
+        Op::Input => graph.inputs.push(id),
+        Op::Param => graph.params.push(id),
+        _ => {}
+    }
+    graph.nodes.push(Node {
+        id,
+        op,
+        inputs,
+        shape,
+        dtype,
+        name: inst.name.clone(),
+    });
+    Ok(id)
+}

@@ -1,0 +1,444 @@
+//! Programmatic graph construction with shape inference.
+//!
+//! Every `GraphBuilder` method performs shape/dtype inference and panics on
+//! ill-typed graphs at build time — models are static, so this is the
+//! equivalent of FX tracing in the paper's PyTorch setting.
+
+use super::{Graph, Node, NodeId, Op};
+use crate::tensor::ops::{BinaryOp, UnaryOp};
+use crate::tensor::reduce::{reduce_shape, ReduceOp};
+use crate::tensor::{broadcast_shapes, DType};
+
+/// Incremental builder; `finish(outputs)` yields the immutable [`Graph`].
+pub struct GraphBuilder {
+    graph: Graph,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> Self {
+        GraphBuilder {
+            graph: Graph {
+                name: name.to_string(),
+                ..Default::default()
+            },
+        }
+    }
+
+    fn push(&mut self, op: Op, inputs: Vec<NodeId>, shape: Vec<usize>, dtype: DType, name: String) -> NodeId {
+        let id = self.graph.nodes.len();
+        for &i in &inputs {
+            assert!(i < id, "input {} not yet defined", i);
+        }
+        self.graph.nodes.push(Node {
+            id,
+            op,
+            inputs,
+            shape,
+            dtype,
+            name,
+        });
+        id
+    }
+
+    fn shape_of(&self, id: NodeId) -> &[usize] {
+        &self.graph.nodes[id].shape
+    }
+
+    // ----------------------------------------------------------- leaves
+
+    /// Runtime input (f32).
+    pub fn input(&mut self, name: &str, shape: &[usize]) -> NodeId {
+        let id = self.push(Op::Input, vec![], shape.to_vec(), DType::F32, name.into());
+        self.graph.inputs.push(id);
+        id
+    }
+
+    /// Runtime input (i32, e.g. token ids).
+    pub fn input_i32(&mut self, name: &str, shape: &[usize]) -> NodeId {
+        let id = self.push(Op::Input, vec![], shape.to_vec(), DType::I32, name.into());
+        self.graph.inputs.push(id);
+        id
+    }
+
+    /// Model parameter (f32), excluded from activation accounting.
+    pub fn param(&mut self, name: &str, shape: &[usize]) -> NodeId {
+        let id = self.push(Op::Param, vec![], shape.to_vec(), DType::F32, name.into());
+        self.graph.params.push(id);
+        id
+    }
+
+    /// Scalar constant.
+    pub fn constant(&mut self, value: f32) -> NodeId {
+        self.push(Op::Const(value), vec![], vec![], DType::F32, format!("c{value}"))
+    }
+
+    /// Iota along `axis` of `shape`.
+    pub fn iota(&mut self, shape: &[usize], axis: usize) -> NodeId {
+        assert!(axis < shape.len());
+        self.push(Op::Iota { axis }, vec![], shape.to_vec(), DType::F32, "iota".into())
+    }
+
+    // ------------------------------------------------------ elementwise
+
+    pub fn binary(&mut self, op: BinaryOp, a: NodeId, b: NodeId) -> NodeId {
+        let shape = broadcast_shapes(self.shape_of(a), self.shape_of(b));
+        self.push(Op::Binary(op), vec![a, b], shape, DType::F32, op.name().into())
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(BinaryOp::Add, a, b)
+    }
+
+    pub fn sub(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(BinaryOp::Sub, a, b)
+    }
+
+    pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(BinaryOp::Mul, a, b)
+    }
+
+    pub fn div(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.binary(BinaryOp::Div, a, b)
+    }
+
+    /// `op(a, const)` — materializes the constant + broadcast.
+    pub fn binary_scalar(&mut self, op: BinaryOp, a: NodeId, v: f32) -> NodeId {
+        let c = self.constant(v);
+        let target = self.shape_of(a).to_vec();
+        let bc = self.broadcast(c, &target);
+        self.binary(op, a, bc)
+    }
+
+    pub fn unary(&mut self, op: UnaryOp, a: NodeId) -> NodeId {
+        let shape = self.shape_of(a).to_vec();
+        self.push(Op::Unary(op), vec![a], shape, DType::F32, op.name().into())
+    }
+
+    // -------------------------------------------------------- structure
+
+    /// Batched matmul with batch broadcasting.
+    pub fn matmul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        let (sa, sb) = (self.shape_of(a).to_vec(), self.shape_of(b).to_vec());
+        assert!(sa.len() >= 2 && sb.len() >= 2, "matmul rank");
+        assert_eq!(
+            sa[sa.len() - 1],
+            sb[sb.len() - 2],
+            "matmul inner dim: {:?} x {:?}",
+            sa,
+            sb
+        );
+        let mut shape = broadcast_shapes(&sa[..sa.len() - 2], &sb[..sb.len() - 2]);
+        shape.push(sa[sa.len() - 2]);
+        shape.push(sb[sb.len() - 1]);
+        self.push(Op::MatMul, vec![a, b], shape, DType::F32, "matmul".into())
+    }
+
+    pub fn transpose(&mut self, a: NodeId, perm: &[usize]) -> NodeId {
+        let sa = self.shape_of(a);
+        assert_eq!(perm.len(), sa.len());
+        let shape: Vec<usize> = perm.iter().map(|&p| sa[p]).collect();
+        self.push(
+            Op::Transpose { perm: perm.to_vec() },
+            vec![a],
+            shape,
+            DType::F32,
+            "transpose".into(),
+        )
+    }
+
+    pub fn reshape(&mut self, a: NodeId, shape: &[usize]) -> NodeId {
+        assert_eq!(
+            crate::tensor::numel(self.shape_of(a)),
+            crate::tensor::numel(shape),
+            "reshape numel mismatch {:?} -> {:?}",
+            self.shape_of(a),
+            shape
+        );
+        let dt = self.graph.nodes[a].dtype;
+        self.push(Op::Reshape, vec![a], shape.to_vec(), dt, "reshape".into())
+    }
+
+    /// Broadcast to `target` using numpy alignment (trailing dims match).
+    pub fn broadcast(&mut self, a: NodeId, target: &[usize]) -> NodeId {
+        let sa = self.shape_of(a).to_vec();
+        let pad = target.len() - sa.len();
+        // dims[i]: output dim that input dim i maps to.
+        let dims: Vec<usize> = (0..sa.len()).map(|i| i + pad).collect();
+        for (i, &d) in dims.iter().enumerate() {
+            assert!(
+                sa[i] == target[d] || sa[i] == 1,
+                "cannot broadcast {:?} to {:?}",
+                sa,
+                target
+            );
+        }
+        self.push(
+            Op::Broadcast { dims },
+            vec![a],
+            target.to_vec(),
+            DType::F32,
+            "broadcast".into(),
+        )
+    }
+
+    pub fn reduce(&mut self, op: ReduceOp, a: NodeId, axis: usize, keepdims: bool) -> NodeId {
+        let shape = reduce_shape(self.shape_of(a), axis, keepdims);
+        self.push(
+            Op::Reduce { op, axis, keepdims },
+            vec![a],
+            shape,
+            DType::F32,
+            op.name().into(),
+        )
+    }
+
+    pub fn softmax(&mut self, a: NodeId, axis: usize) -> NodeId {
+        let shape = self.shape_of(a).to_vec();
+        assert!(axis < shape.len());
+        self.push(Op::Softmax { axis }, vec![a], shape, DType::F32, "softmax".into())
+    }
+
+    pub fn concat(&mut self, parts: &[NodeId], axis: usize) -> NodeId {
+        assert!(!parts.is_empty());
+        let mut shape = self.shape_of(parts[0]).to_vec();
+        let mut total = 0;
+        for &p in parts {
+            let sp = self.shape_of(p);
+            assert_eq!(sp.len(), shape.len());
+            total += sp[axis];
+        }
+        shape[axis] = total;
+        self.push(
+            Op::Concat { axis },
+            parts.to_vec(),
+            shape,
+            DType::F32,
+            "concat".into(),
+        )
+    }
+
+    pub fn slice(&mut self, a: NodeId, axis: usize, start: usize, len: usize) -> NodeId {
+        let mut shape = self.shape_of(a).to_vec();
+        assert!(start + len <= shape[axis], "slice out of range");
+        shape[axis] = len;
+        let dt = self.graph.nodes[a].dtype;
+        self.push(
+            Op::Slice { axis, start, len },
+            vec![a],
+            shape,
+            dt,
+            "slice".into(),
+        )
+    }
+
+    /// Embedding lookup: `table [V,D]` × i32 ids `[..]` → `[.., D]`.
+    pub fn gather(&mut self, table: NodeId, ids: NodeId) -> NodeId {
+        let ts = self.shape_of(table).to_vec();
+        assert_eq!(ts.len(), 2, "gather table must be [V,D]");
+        assert_eq!(self.graph.nodes[ids].dtype, DType::I32);
+        let mut shape = self.shape_of(ids).to_vec();
+        shape.push(ts[1]);
+        self.push(Op::Gather, vec![table, ids], shape, DType::F32, "gather".into())
+    }
+
+    pub fn conv2d(&mut self, x: NodeId, w: NodeId, stride: usize, pad: usize) -> NodeId {
+        let (xs, ws) = (self.shape_of(x).to_vec(), self.shape_of(w).to_vec());
+        assert_eq!(xs.len(), 4);
+        assert_eq!(ws.len(), 4);
+        assert_eq!(xs[1], ws[1], "conv channel mismatch");
+        let ho = (xs[2] + 2 * pad - ws[2]) / stride + 1;
+        let wo = (xs[3] + 2 * pad - ws[3]) / stride + 1;
+        self.push(
+            Op::Conv2d { stride, pad },
+            vec![x, w],
+            vec![xs[0], ws[0], ho, wo],
+            DType::F32,
+            "conv2d".into(),
+        )
+    }
+
+    pub fn avgpool2x(&mut self, x: NodeId) -> NodeId {
+        let xs = self.shape_of(x).to_vec();
+        assert_eq!(xs.len(), 4);
+        self.push(
+            Op::AvgPool2x,
+            vec![x],
+            vec![xs[0], xs[1], xs[2] / 2, xs[3] / 2],
+            DType::F32,
+            "avgpool2x".into(),
+        )
+    }
+
+    pub fn upsample2x(&mut self, x: NodeId) -> NodeId {
+        let xs = self.shape_of(x).to_vec();
+        assert_eq!(xs.len(), 4);
+        self.push(
+            Op::Upsample2x,
+            vec![x],
+            vec![xs[0], xs[1], xs[2] * 2, xs[3] * 2],
+            DType::F32,
+            "upsample2x".into(),
+        )
+    }
+
+    /// Fused memory-efficient attention: `q [..,sq,d]`, `k,v [..,skv,d]`.
+    pub fn fused_attention(&mut self, q: NodeId, k: NodeId, v: NodeId, scale: f32) -> NodeId {
+        let (qs, ks, vs) = (
+            self.shape_of(q).to_vec(),
+            self.shape_of(k).to_vec(),
+            self.shape_of(v).to_vec(),
+        );
+        let rank = qs.len();
+        assert!(rank >= 2 && ks.len() >= 2 && vs.len() >= 2);
+        assert_eq!(qs[rank - 1], ks[ks.len() - 1], "q/k head dim");
+        assert_eq!(ks[ks.len() - 2], vs[vs.len() - 2], "k/v rows");
+        let mut shape = broadcast_shapes(
+            &broadcast_shapes(&qs[..rank - 2], &ks[..ks.len() - 2]),
+            &vs[..vs.len() - 2],
+        );
+        shape.push(qs[rank - 2]);
+        shape.push(vs[vs.len() - 1]);
+        self.push(
+            Op::FusedAttention { scale },
+            vec![q, k, v],
+            shape,
+            DType::F32,
+            "fused_attn".into(),
+        )
+    }
+
+    pub fn convert_f32(&mut self, a: NodeId) -> NodeId {
+        let shape = self.shape_of(a).to_vec();
+        self.push(Op::Convert, vec![a], shape, DType::F32, "convert".into())
+    }
+
+    /// Rename the most recent node (attach module-path labels in models).
+    pub fn label(&mut self, id: NodeId, name: &str) {
+        self.graph.nodes[id].name = name.to_string();
+    }
+
+    // ------------------------------------------------------- compounds
+
+    /// LayerNorm over the last axis, composed from primitives so the chunk
+    /// passes see the real memory profile (mean/var intermediates).
+    pub fn layer_norm(&mut self, x: NodeId, gamma: NodeId, beta: NodeId, eps: f32) -> NodeId {
+        let rank = self.shape_of(x).len();
+        let axis = rank - 1;
+        let mean = self.reduce(ReduceOp::Mean, x, axis, true);
+        let centered = self.sub(x, mean);
+        let sq = self.mul(centered, centered);
+        let var = self.reduce(ReduceOp::Mean, sq, axis, true);
+        let var_eps = self.binary_scalar(BinaryOp::Add, var, eps);
+        let rstd = self.unary(UnaryOp::Rsqrt, var_eps);
+        let normed = self.mul(centered, rstd);
+        let scaled = self.mul(normed, gamma);
+        self.add(scaled, beta)
+    }
+
+    /// Linear layer: `x @ w + b` (`w: [in, out]`, `b: [out]`).
+    pub fn linear(&mut self, x: NodeId, w: NodeId, b: NodeId) -> NodeId {
+        let mm = self.matmul(x, w);
+        self.add(mm, b)
+    }
+
+    pub fn finish(mut self, outputs: Vec<NodeId>) -> Graph {
+        self.graph.outputs = outputs;
+        debug_assert!(self.graph.validate().is_ok());
+        self.graph
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_shape_inference() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[8, 16, 32]);
+        let w = b.param("w", &[32, 64]);
+        let y = b.matmul(x, w);
+        let g = b.finish(vec![y]);
+        assert_eq!(g.node(y).shape, vec![8, 16, 64]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul inner dim")]
+    fn matmul_shape_mismatch_panics() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4, 5]);
+        let w = b.param("w", &[6, 7]);
+        b.matmul(x, w);
+    }
+
+    #[test]
+    fn layer_norm_compound_shapes() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[2, 8, 16]);
+        let g1 = b.param("g", &[16]);
+        let beta = b.param("b", &[16]);
+        let y = b.layer_norm(x, g1, beta, 1e-5);
+        let g = b.finish(vec![y]);
+        assert_eq!(g.node(y).shape, vec![2, 8, 16]);
+        assert!(g.validate().is_ok());
+        // composed of >5 primitive nodes
+        assert!(g.len() > 8);
+    }
+
+    #[test]
+    fn broadcast_dims_mapping() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[16]);
+        let y = b.broadcast(x, &[4, 8, 16]);
+        let g = b.finish(vec![y]);
+        match &g.node(y).op {
+            Op::Broadcast { dims } => assert_eq!(dims, &vec![2]),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn concat_shape() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[2, 3]);
+        let y = b.input("y", &[2, 5]);
+        let c = b.concat(&[x, y], 1);
+        let g = b.finish(vec![c]);
+        assert_eq!(g.node(c).shape, vec![2, 8]);
+    }
+
+    #[test]
+    fn gather_shape() {
+        let mut b = GraphBuilder::new("t");
+        let t = b.param("emb", &[100, 32]);
+        let ids = b.input_i32("ids", &[4, 7]);
+        let e = b.gather(t, ids);
+        let g = b.finish(vec![e]);
+        assert_eq!(g.node(e).shape, vec![4, 7, 32]);
+    }
+
+    #[test]
+    fn conv_pool_upsample_shapes() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 8, 16, 16]);
+        let w = b.param("w", &[16, 8, 3, 3]);
+        let c = b.conv2d(x, w, 1, 1);
+        let p = b.avgpool2x(c);
+        let u = b.upsample2x(p);
+        let g = b.finish(vec![u]);
+        assert_eq!(g.node(c).shape, vec![1, 16, 16, 16]);
+        assert_eq!(g.node(p).shape, vec![1, 16, 8, 8]);
+        assert_eq!(g.node(u).shape, vec![1, 16, 16, 16]);
+    }
+
+    #[test]
+    fn inputs_params_recorded_in_order() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[2]);
+        let w = b.param("w", &[2]);
+        let y = b.input("y", &[2]);
+        let g = b.finish(vec![x]);
+        assert_eq!(g.inputs, vec![x, y]);
+        assert_eq!(g.params, vec![w]);
+    }
+}

@@ -1,0 +1,137 @@
+//! Per-node FLOP accounting.
+//!
+//! Feeds the chunk-selection cost function: `N_flop` in the macro term
+//! (Eq. 8) and `N_density = FLOPs/node` in the micro term (Eq. 9).
+
+use super::{Graph, NodeId, Op};
+use crate::tensor::matmul::matmul_flops;
+use crate::tensor::numel;
+
+/// FLOPs attributed to a single node.
+///
+/// Conventions: elementwise = 1 FLOP/element (GELU etc. counted as a small
+/// constant), matmul = 2·M·N·K, softmax = 5/element (max, sub, exp, sum,
+/// div), reductions = 1/element, data movement = 0 (it is accounted in the
+/// stride term instead, not as compute).
+pub fn node_flops(graph: &Graph, id: NodeId) -> u64 {
+    let node = graph.node(id);
+    let out_n = numel(&node.shape) as u64;
+    match &node.op {
+        Op::Input | Op::Param | Op::Const(_) | Op::Iota { .. } => 0,
+        Op::Binary(_) => out_n,
+        Op::Unary(u) => {
+            use crate::tensor::ops::UnaryOp::*;
+            match u {
+                // transcendental-ish ops cost more than 1
+                Exp | Log | Tanh | Sigmoid | Gelu | Silu => 8 * out_n,
+                Sqrt | Rsqrt => 2 * out_n,
+                Neg | Relu | Abs => out_n,
+            }
+        }
+        Op::MatMul => {
+            let a = &graph.node(node.inputs[0]).shape;
+            let b = &graph.node(node.inputs[1]).shape;
+            matmul_flops(a, b)
+        }
+        Op::DotGeneral {
+            lhs_batch,
+            lhs_contract,
+            ..
+        } => {
+            let a = &graph.node(node.inputs[0]).shape;
+            // out elements × 2 × contracted extent
+            let contracted: u64 = lhs_contract.iter().map(|&d| a[d] as u64).product();
+            let _ = lhs_batch;
+            2 * out_n * contracted
+        }
+        Op::Reduce { .. } => {
+            let in_n = numel(&graph.node(node.inputs[0]).shape) as u64;
+            in_n
+        }
+        Op::Softmax { .. } => 5 * out_n,
+        Op::Conv2d { .. } => {
+            // out elements × 2 × Cin × Kh × Kw
+            let w = &graph.node(node.inputs[1]).shape;
+            2 * out_n * (w[1] * w[2] * w[3]) as u64
+        }
+        Op::AvgPool2x => 4 * out_n,
+        Op::FusedAttention { .. } => {
+            // 2·sq·skv·d (scores) + 2·sq·skv·dv (weighted sum) + softmax
+            let q = &graph.node(node.inputs[0]).shape;
+            let k = &graph.node(node.inputs[1]).shape;
+            let sq = q[q.len() - 2] as u64;
+            let d = q[q.len() - 1] as u64;
+            let skv = k[k.len() - 2] as u64;
+            let batch = out_n / (sq * node.shape[node.shape.len() - 1] as u64).max(1);
+            batch * (4 * sq * skv * d + 5 * sq * skv)
+        }
+        Op::Opaque { .. } => out_n,
+        Op::Gather | Op::Convert | Op::Upsample2x => 0,
+        // pure data movement
+        Op::Transpose { .. } | Op::Reshape | Op::Broadcast { .. } | Op::Concat { .. } | Op::Slice { .. } => 0,
+    }
+}
+
+/// Bytes moved by a node (I/O volume): inputs read + output written.
+/// Used for roofline-style diagnostics in the perf harness.
+pub fn node_bytes(graph: &Graph, id: NodeId) -> u64 {
+    let node = graph.node(id);
+    let out = node.byte_size() as u64;
+    let ins: u64 = node
+        .inputs
+        .iter()
+        .map(|&i| graph.node(i).byte_size() as u64)
+        .sum();
+    ins + out
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::ir::GraphBuilder;
+    use crate::tensor::ops::{BinaryOp, UnaryOp};
+
+    #[test]
+    fn matmul_flops_dominate() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[64, 128]);
+        let w = b.param("w", &[128, 256]);
+        let y = b.matmul(x, w);
+        let z = b.unary(UnaryOp::Relu, y);
+        let g = b.finish(vec![z]);
+        let mm = super::node_flops(&g, y);
+        let relu = super::node_flops(&g, z);
+        assert_eq!(mm, 2 * 64 * 128 * 256);
+        assert_eq!(relu, 64 * 256);
+        assert!(mm > 100 * relu);
+    }
+
+    #[test]
+    fn data_movement_is_free_flops() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4, 8]);
+        let t = b.transpose(x, &[1, 0]);
+        let r = b.reshape(t, &[32]);
+        let g = b.finish(vec![r]);
+        assert_eq!(super::node_flops(&g, t), 0);
+        assert_eq!(super::node_flops(&g, r), 0);
+    }
+
+    #[test]
+    fn total_flops_sums() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[16, 16]);
+        let y = b.binary(BinaryOp::Add, x, x);
+        let g = b.finish(vec![y]);
+        assert_eq!(g.total_flops(), 256);
+    }
+
+    #[test]
+    fn node_bytes_io_volume() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[16, 16]);
+        let y = b.binary(BinaryOp::Add, x, x);
+        let g = b.finish(vec![y]);
+        // two reads of 1KiB + one write of 1KiB
+        assert_eq!(super::node_bytes(&g, y), 3 * 1024);
+    }
+}

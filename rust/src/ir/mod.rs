@@ -1,0 +1,285 @@
+//! Graph intermediate representation.
+//!
+//! The IR plays the role PyTorch FX plays in the paper: a flat, typed,
+//! topologically-ordered operator graph over which the AutoChunk passes
+//! (estimation → chunk search → chunk selection → codegen) operate.
+//!
+//! Two producers build this IR:
+//! * [`GraphBuilder`] — programmatic model definitions (`crate::models`);
+//! * [`crate::hlo`] — the HLO-text parser, importing JAX-lowered artifacts
+//!   so the same compiler runs on the real AOT path.
+
+pub mod build;
+pub mod flops;
+
+pub use build::GraphBuilder;
+
+use crate::tensor::ops::{BinaryOp, UnaryOp};
+use crate::tensor::reduce::ReduceOp;
+use crate::tensor::DType;
+use std::collections::HashMap;
+use std::fmt;
+
+/// Index of a node within its [`Graph`].
+pub type NodeId = usize;
+
+/// Operator kind. Shapes/dtypes live on the node, not the op.
+#[derive(Clone, PartialEq, Debug)]
+pub enum Op {
+    /// Runtime input (chunk-search treats it as a leaf).
+    Input,
+    /// Model parameter (non-chunkable leaf; excluded from activation memory).
+    Param,
+    /// Scalar or small constant materialized at execution time.
+    Const(f32),
+    /// `iota` along `axis`.
+    Iota { axis: usize },
+    /// Elementwise binary op with numpy broadcasting.
+    Binary(BinaryOp),
+    /// Elementwise unary op.
+    Unary(UnaryOp),
+    /// Batched matmul `[..,M,K] x [..,K,N]` with batch broadcasting.
+    MatMul,
+    /// General dot (imported HLO): explicit batch/contracting dims.
+    DotGeneral {
+        lhs_batch: Vec<usize>,
+        rhs_batch: Vec<usize>,
+        lhs_contract: Vec<usize>,
+        rhs_contract: Vec<usize>,
+    },
+    /// Axis permutation.
+    Transpose { perm: Vec<usize> },
+    /// Reshape to the node's `shape`.
+    Reshape,
+    /// Broadcast to the node's `shape`. `dims[i]` is the output dimension
+    /// that input dimension `i` maps to (XLA broadcast_in_dim semantics).
+    Broadcast { dims: Vec<usize> },
+    /// Single-axis reduction.
+    Reduce {
+        op: ReduceOp,
+        axis: usize,
+        keepdims: bool,
+    },
+    /// Numerically-stable softmax along `axis`.
+    Softmax { axis: usize },
+    /// Concatenate inputs along `axis`.
+    Concat { axis: usize },
+    /// Static slice `[start, start+len)` along `axis`.
+    Slice {
+        axis: usize,
+        start: usize,
+        len: usize,
+    },
+    /// Embedding lookup: inputs = (table `[V,D]`, ids i32).
+    Gather,
+    /// NCHW conv2d with OIHW weights.
+    Conv2d { stride: usize, pad: usize },
+    /// 2×2 stride-2 average pool.
+    AvgPool2x,
+    /// Nearest-neighbor 2× upsample.
+    Upsample2x,
+    /// i32→f32 conversion (or identity for f32).
+    Convert,
+    /// Fused memory-efficient attention over (q, k, v): never materializes
+    /// the score matrix (Rabe & Staats 2022) — the paper's Figure-6
+    /// "fused kernel" baseline.
+    FusedAttention { scale: f32 },
+    /// Unmodeled op from an imported HLO module. Analysis-only: the
+    /// estimator charges its output, chunk flows conservatively break at
+    /// it, and the interpreter refuses to execute it (imported graphs run
+    /// through PJRT, not the interpreter).
+    Opaque { kind: String },
+}
+
+impl Op {
+    /// Short mnemonic for display/profiles.
+    pub fn mnemonic(&self) -> String {
+        match self {
+            Op::Input => "input".into(),
+            Op::Param => "param".into(),
+            Op::Const(_) => "const".into(),
+            Op::Iota { .. } => "iota".into(),
+            Op::Binary(b) => b.name().into(),
+            Op::Unary(u) => u.name().into(),
+            Op::MatMul => "matmul".into(),
+            Op::DotGeneral { .. } => "dot_general".into(),
+            Op::Transpose { .. } => "transpose".into(),
+            Op::Reshape => "reshape".into(),
+            Op::Broadcast { .. } => "broadcast".into(),
+            Op::Reduce { op, .. } => op.name().into(),
+            Op::Softmax { .. } => "softmax".into(),
+            Op::Concat { .. } => "concat".into(),
+            Op::Slice { .. } => "slice".into(),
+            Op::Gather => "gather".into(),
+            Op::Conv2d { .. } => "conv2d".into(),
+            Op::AvgPool2x => "avgpool2x".into(),
+            Op::Upsample2x => "upsample2x".into(),
+            Op::Convert => "convert".into(),
+            Op::FusedAttention { .. } => "fused_attn".into(),
+            Op::Opaque { kind } => format!("opaque:{kind}"),
+        }
+    }
+
+    /// Leaves hold no computation and are never part of a chunk region body.
+    pub fn is_leaf(&self) -> bool {
+        matches!(self, Op::Input | Op::Param | Op::Const(_) | Op::Iota { .. })
+    }
+}
+
+/// A single operator instance.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub op: Op,
+    pub inputs: Vec<NodeId>,
+    /// Output shape (single output per node).
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    /// Human-readable label (module path in models, HLO name on import).
+    pub name: String,
+}
+
+impl Node {
+    /// Bytes of this node's output if materialized.
+    pub fn byte_size(&self) -> usize {
+        crate::tensor::numel(&self.shape) * self.dtype.size_of()
+    }
+}
+
+/// A flat, topologically-ordered operator graph.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    /// Runtime inputs in positional order.
+    pub inputs: Vec<NodeId>,
+    /// Parameters in positional order.
+    pub params: Vec<NodeId>,
+    /// Graph outputs in positional order.
+    pub outputs: Vec<NodeId>,
+    /// Optional model name for diagnostics.
+    pub name: String,
+}
+
+impl Graph {
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Consumers of each node (computed on demand).
+    pub fn users(&self) -> Vec<Vec<NodeId>> {
+        let mut users = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                users[i].push(n.id);
+            }
+        }
+        users
+    }
+
+    /// Nodes are stored in topological order by construction; verify it.
+    /// Returns an error string naming the first violation (test/debug aid).
+    pub fn validate(&self) -> Result<(), String> {
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.id != i {
+                return Err(format!("node {} has id {}", i, n.id));
+            }
+            for &inp in &n.inputs {
+                if inp >= i {
+                    return Err(format!(
+                        "node {} ({}) uses forward reference {}",
+                        i,
+                        n.name,
+                        inp
+                    ));
+                }
+            }
+            if n.shape.iter().any(|&d| d == 0) {
+                return Err(format!("node {} ({}) has zero dim", i, n.name));
+            }
+        }
+        for &o in &self.outputs {
+            if o >= self.nodes.len() {
+                return Err(format!("output {} out of range", o));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total FLOPs of the graph (Σ per-node; see [`flops::node_flops`]).
+    pub fn total_flops(&self) -> u64 {
+        self.nodes.iter().map(|n| flops::node_flops(self, n.id)).sum()
+    }
+
+    /// Map from node name to id (HLO import / debugging).
+    pub fn name_index(&self) -> HashMap<String, NodeId> {
+        self.nodes
+            .iter()
+            .map(|n| (n.name.clone(), n.id))
+            .collect()
+    }
+}
+
+impl fmt::Display for Graph {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "graph {} ({} nodes)", self.name, self.nodes.len())?;
+        for n in &self.nodes {
+            writeln!(
+                f,
+                "  %{:<4} = {:<12} {:?}{:<20} <- {:?}  # {}",
+                n.id,
+                n.op.mnemonic(),
+                n.dtype,
+                format!("{:?}", n.shape),
+                n.inputs,
+                n.name
+            )?;
+        }
+        writeln!(f, "  outputs: {:?}", self.outputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::build::GraphBuilder;
+
+    #[test]
+    fn validate_catches_forward_reference() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[2, 2]);
+        let y = b.unary(crate::tensor::ops::UnaryOp::Relu, x);
+        let mut g = b.finish(vec![y]);
+        assert!(g.validate().is_ok());
+        g.nodes[1].inputs = vec![1]; // self-reference
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn users_map() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4]);
+        let a = b.unary(crate::tensor::ops::UnaryOp::Relu, x);
+        let c = b.binary(crate::tensor::ops::BinaryOp::Add, a, x);
+        let g = b.finish(vec![c]);
+        let users = g.users();
+        assert_eq!(users[x], vec![a, c]);
+        assert_eq!(users[a], vec![c]);
+        assert!(users[c].is_empty());
+    }
+
+    #[test]
+    fn display_smoke() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[2]);
+        let g = b.finish(vec![x]);
+        assert!(format!("{g}").contains("input"));
+    }
+}

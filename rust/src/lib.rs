@@ -1,0 +1,26 @@
+//! AutoChunk: automated activation chunking for memory-efficient
+//! long-sequence inference.
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of Zhao et al., 2024.
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
+//!
+//! Quick tour:
+//! * [`ir`] — the operator-graph IR (the FX analogue);
+//! * [`passes`] — estimation, chunk search, chunk selection;
+//!   [`passes::autochunk`] is the `autochunk(model, budget)` entry point;
+//! * [`plan`] — chunk plans and the chunked executor;
+//! * [`exec`] — the baseline interpreter with measured peak memory;
+//! * [`tensor`] — the instrumented CPU tensor substrate;
+//! * [`models`] — the four evaluation models (GPT, ViT, Evoformer, UNet);
+//! * [`runtime`] — PJRT loading/execution of JAX AOT artifacts;
+//! * [`coordinator`] — the serving stack (router, batcher, scheduler).
+pub mod coordinator;
+pub mod exec;
+pub mod hlo;
+pub mod ir;
+pub mod models;
+pub mod passes;
+pub mod plan;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

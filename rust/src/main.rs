@@ -1,0 +1,218 @@
+//! `autochunkd` — the AutoChunk leader binary.
+//!
+//! Subcommands:
+//!
+//! * `compile` — run the AutoChunk passes on a built-in model and print
+//!   the chosen chunk plans and memory numbers;
+//! * `profile` — print the per-operator activation-memory profile
+//!   (Figure 4 view) of a model;
+//! * `import`  — import an AOT HLO artifact into the IR and run the
+//!   compiler over it;
+//! * `serve`   — serve a synthetic workload from AOT artifacts through
+//!   the PJRT runtime under a memory budget, reporting latency/throughput.
+//!
+//! Arguments are `--key value` pairs (hand-rolled parser; no clap in the
+//! vendored dependency set).
+
+use anyhow::{anyhow, bail, Result};
+use autochunk::coordinator::{synthetic_workload, Coordinator, ServeConfig};
+use autochunk::models;
+use autochunk::passes::{autochunk, estimate, AutoChunkConfig};
+use std::collections::HashMap;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal `--key value` argument map.
+struct Args {
+    cmd: String,
+    kv: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut kv = HashMap::new();
+        while let Some(k) = it.next() {
+            let key = k
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got '{k}'"))?
+                .to_string();
+            let val = it.next().ok_or_else(|| anyhow!("--{key} needs a value"))?;
+            kv.insert(key, val);
+        }
+        Ok(Args { cmd, kv })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.kv.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.kv.get(key) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+            None => Ok(default),
+        }
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.kv.get(key) {
+            Some(v) => v.parse().map_err(|e| anyhow!("--{key}: {e}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn build_model(name: &str, seq: usize) -> Result<autochunk::ir::Graph> {
+    Ok(match name {
+        "gpt" => models::gpt(&models::GptConfig { seq, ..Default::default() }),
+        "gpt-fused" => models::gpt(&models::GptConfig {
+            seq,
+            fused_attention: true,
+            ..Default::default()
+        }),
+        "vit" => models::vit(&models::ViTConfig { patches: seq, ..Default::default() }),
+        "evoformer" => models::evoformer(&models::EvoformerConfig {
+            seq,
+            ..Default::default()
+        }),
+        "unet" => models::unet(&models::UNetConfig { image: seq, ..Default::default() }),
+        other => bail!("unknown model '{other}' (gpt|gpt-fused|vit|evoformer|unet)"),
+    })
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "compile" => cmd_compile(&args),
+        "profile" => cmd_profile(&args),
+        "import" => cmd_import(&args),
+        "serve" => cmd_serve(&args),
+        _ => {
+            println!(
+                "autochunkd — AutoChunk reproduction (see README.md)\n\n\
+                 usage:\n\
+                 \x20 autochunkd compile --model gpt --seq 1024 --budget-frac 0.2\n\
+                 \x20 autochunkd profile --model evoformer --seq 64\n\
+                 \x20 autochunkd import  --hlo artifacts/gpt_dense_s128.hlo.txt --budget-frac 0.5\n\
+                 \x20 autochunkd serve   --artifacts artifacts --budget-mb 8 --requests 32"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_compile(args: &Args) -> Result<()> {
+    let model = args.get("model", "gpt");
+    let seq = args.get_usize("seq", 1024)?;
+    let frac = args.get_f64("budget-frac", 0.2)?;
+    let graph = build_model(&model, seq)?;
+    let profile = estimate(&graph);
+    let budget = (profile.peak_bytes as f64 * frac) as usize;
+    println!(
+        "model={model} seq={seq} nodes={} baseline_peak={:.2} MiB budget={:.2} MiB",
+        graph.len(),
+        profile.peak_bytes as f64 / (1 << 20) as f64,
+        budget as f64 / (1 << 20) as f64
+    );
+    let t0 = std::time::Instant::now();
+    let result = autochunk(&graph, budget, &AutoChunkConfig::default());
+    println!(
+        "compile time: {:.1} ms; {} plan(s); chunked_peak={:.2} MiB ({:.1}% of baseline); cost={:.3}",
+        t0.elapsed().as_secs_f64() * 1e3,
+        result.plans.len(),
+        result.chunked_peak as f64 / (1 << 20) as f64,
+        100.0 * result.chunked_peak as f64 / result.baseline_peak as f64,
+        result.total_cost,
+    );
+    for (i, p) in result.plans.iter().enumerate() {
+        let (o, d) = p.outputs[0];
+        println!(
+            "  plan {i}: region [{}..{}] ({} nodes) chunk dim {d} of {:?} n={}",
+            p.region.first().unwrap(),
+            p.region.last().unwrap(),
+            p.region.len(),
+            graph.node(o).shape,
+            p.n_chunks
+        );
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let model = args.get("model", "gpt");
+    let seq = args.get_usize("seq", 512)?;
+    let graph = build_model(&model, seq)?;
+    let profile = estimate(&graph);
+    println!("# node  op  live_MiB   (peak at node {})", profile.peak_node);
+    for (i, &bytes) in profile.per_node.iter().enumerate() {
+        println!(
+            "{i}\t{}\t{:.3}",
+            graph.node(i).op.mnemonic(),
+            bytes as f64 / (1 << 20) as f64
+        );
+    }
+    println!(
+        "# fraction of nodes below 30% of peak: {:.1}%",
+        100.0 * profile.fraction_below(0.3)
+    );
+    Ok(())
+}
+
+fn cmd_import(args: &Args) -> Result<()> {
+    let path = args
+        .kv
+        .get("hlo")
+        .ok_or_else(|| anyhow!("--hlo <path> required"))?;
+    let frac = args.get_f64("budget-frac", 0.5)?;
+    let graph = autochunk::hlo::parse_hlo_file(path)?;
+    let profile = estimate(&graph);
+    println!(
+        "imported {} nodes from {path}; baseline_peak={:.2} MiB",
+        graph.len(),
+        profile.peak_bytes as f64 / (1 << 20) as f64
+    );
+    let budget = (profile.peak_bytes as f64 * frac) as usize;
+    let result = autochunk(&graph, budget, &AutoChunkConfig::default());
+    println!(
+        "{} plan(s); chunked_peak={:.2} MiB ({:.1}%)",
+        result.plans.len(),
+        result.chunked_peak as f64 / (1 << 20) as f64,
+        100.0 * result.chunked_peak as f64 / result.baseline_peak as f64
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts", "artifacts");
+    let budget_mb = args.get_usize("budget-mb", 8)?;
+    let n = args.get_usize("requests", 32)?;
+    let min_len = args.get_usize("min-len", 32)?;
+    let max_len = args.get_usize("max-len", 256)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let modes: Vec<String> = args
+        .kv
+        .get("modes")
+        .map(|m| m.split(',').map(|s| s.to_string()).collect())
+        .unwrap_or_default();
+
+    let mut coord = Coordinator::new(ServeConfig {
+        artifacts_dir: dir,
+        budget_bytes: budget_mb << 20,
+        max_batch: args.get_usize("max-batch", 8)?,
+        model: args.get("model", "gpt"),
+        allowed_modes: modes,
+    })?;
+    let requests = synthetic_workload(n, min_len, max_len, seed);
+    println!(
+        "serving {n} requests (len {min_len}..{max_len}) under {budget_mb} MiB activation budget"
+    );
+    let (_, report) = coord.serve(&requests)?;
+    println!("{}", report.render());
+    Ok(())
+}

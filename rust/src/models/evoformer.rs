@@ -1,0 +1,211 @@
+//! Evoformer pair stack (AlphaFold 2, simplified per DESIGN.md §10).
+//!
+//! Keeps the memory-dominant structure the paper evaluates: triangle
+//! multiplication (einsum `ikc,jkc→ijc`) and triangle (per-row) attention
+//! with `O(s³)` score tensors, plus the pair transition FFN. The MSA stack
+//! and IPA head are unrelated scaffolding for activation-memory purposes
+//! and are omitted.
+
+use crate::ir::{Graph, GraphBuilder, NodeId};
+use crate::tensor::ops::UnaryOp;
+use crate::tensor::reduce::ReduceOp;
+
+/// Evoformer configuration.
+#[derive(Clone, Debug)]
+pub struct EvoformerConfig {
+    /// Number of residues (pair representation is `[seq, seq, c]`).
+    pub seq: usize,
+    /// Pair channel dimension.
+    pub c: usize,
+    /// Attention heads in triangle attention.
+    pub heads: usize,
+    pub blocks: usize,
+    pub transition_mult: usize,
+}
+
+impl Default for EvoformerConfig {
+    fn default() -> Self {
+        EvoformerConfig {
+            seq: 64,
+            c: 32,
+            heads: 4,
+            blocks: 2,
+            transition_mult: 4,
+        }
+    }
+}
+
+/// LayerNorm over the channel (last) axis of `[s, s, c]`.
+fn pair_norm(b: &mut GraphBuilder, x: NodeId, c: usize, name: &str) -> NodeId {
+    let g = b.param(&format!("{name}.g"), &[c]);
+    let beta = b.param(&format!("{name}.b"), &[c]);
+    b.layer_norm(x, g, beta, 1e-5)
+}
+
+/// Linear on the channel axis: `[s, s, c] @ [c, co] + [co]`.
+fn pair_linear(b: &mut GraphBuilder, x: NodeId, ci: usize, co: usize, name: &str) -> NodeId {
+    let w = b.param(&format!("{name}.w"), &[ci, co]);
+    let bias = b.param(&format!("{name}.b"), &[co]);
+    b.linear(x, w, bias)
+}
+
+/// Triangle multiplication (outgoing): `out[i,j] = Σₖ left[i,k] ⊙ right[j,k]`.
+fn triangle_multiply(
+    b: &mut GraphBuilder,
+    pair: NodeId,
+    s: usize,
+    c: usize,
+    name: &str,
+) -> NodeId {
+    let xn = pair_norm(b, pair, c, &format!("{name}.ln"));
+    let left = pair_linear(b, xn, c, c, &format!("{name}.left"));
+    let lg = pair_linear(b, xn, c, c, &format!("{name}.left_gate"));
+    let lgs = b.unary(UnaryOp::Sigmoid, lg);
+    let left = b.mul(left, lgs);
+    let right = pair_linear(b, xn, c, c, &format!("{name}.right"));
+    let rg = pair_linear(b, xn, c, c, &format!("{name}.right_gate"));
+    let rgs = b.unary(UnaryOp::Sigmoid, rg);
+    let right = b.mul(right, rgs);
+
+    // einsum ikc,jkc->ijc via channel-batched matmul
+    let lt = b.transpose(left, &[2, 0, 1]); // [c, i, k]
+    let rt = b.transpose(right, &[2, 1, 0]); // [c, k, j]
+    let prod = b.matmul(lt, rt); // [c, i, j]
+    let prod = b.transpose(prod, &[1, 2, 0]); // [i, j, c]
+
+    let pn = pair_norm(b, prod, c, &format!("{name}.ln_out"));
+    let out = pair_linear(b, pn, c, c, &format!("{name}.out"));
+    let og = pair_linear(b, xn, c, c, &format!("{name}.out_gate"));
+    let ogs = b.unary(UnaryOp::Sigmoid, og);
+    let gated = b.mul(out, ogs);
+    let _ = s;
+    b.add(gated, pair)
+}
+
+/// Triangle attention (starting node): per-row attention over columns.
+/// Scores are `[s, h, s, s]` — the O(s³) hotspot.
+fn triangle_attention(
+    b: &mut GraphBuilder,
+    pair: NodeId,
+    s: usize,
+    c: usize,
+    h: usize,
+    name: &str,
+) -> NodeId {
+    let dh = c / h;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let xn = pair_norm(b, pair, c, &format!("{name}.ln"));
+    let q = pair_linear(b, xn, c, c, &format!("{name}.q"));
+    let k = pair_linear(b, xn, c, c, &format!("{name}.k"));
+    let v = pair_linear(b, xn, c, c, &format!("{name}.v"));
+
+    // [s, s, c] -> [s, h, s, dh] (row-batched heads)
+    let qh = b.reshape(q, &[s, s, h, dh]);
+    let qh = b.transpose(qh, &[0, 2, 1, 3]);
+    let kh = b.reshape(k, &[s, s, h, dh]);
+    let kh = b.transpose(kh, &[0, 2, 3, 1]); // [s, h, dh, s]
+    let vh = b.reshape(v, &[s, s, h, dh]);
+    let vh = b.transpose(vh, &[0, 2, 1, 3]);
+
+    let scores = b.matmul(qh, kh); // [s, h, s, s]
+    let scaled = b.binary_scalar(crate::tensor::ops::BinaryOp::Mul, scores, scale);
+    let probs = b.softmax(scaled, 3);
+    let ctx = b.matmul(probs, vh); // [s, h, s, dh]
+    let ctx = b.transpose(ctx, &[0, 2, 1, 3]); // [s, s, h, dh]
+    let ctx = b.reshape(ctx, &[s, s, c]);
+
+    let out = pair_linear(b, ctx, c, c, &format!("{name}.out"));
+    let g = pair_linear(b, xn, c, c, &format!("{name}.gate"));
+    let gs = b.unary(UnaryOp::Sigmoid, g);
+    let gated = b.mul(out, gs);
+    b.add(gated, pair)
+}
+
+/// Pair transition: channelwise FFN with expansion.
+fn pair_transition(
+    b: &mut GraphBuilder,
+    pair: NodeId,
+    c: usize,
+    mult: usize,
+    name: &str,
+) -> NodeId {
+    let xn = pair_norm(b, pair, c, &format!("{name}.ln"));
+    let h = pair_linear(b, xn, c, mult * c, &format!("{name}.w1"));
+    let a = b.unary(UnaryOp::Relu, h);
+    let out = pair_linear(b, a, mult * c, c, &format!("{name}.w2"));
+    b.add(out, pair)
+}
+
+/// Build the Evoformer pair-stack graph: pair `[s,s,c]` → pair `[s,s,c]`
+/// plus a scalar distogram-ish summary head.
+pub fn evoformer(cfg: &EvoformerConfig) -> Graph {
+    let (s, c) = (cfg.seq, cfg.c);
+    assert_eq!(c % cfg.heads, 0);
+    let mut b = GraphBuilder::new("evoformer");
+    let pair_in = b.input("pair", &[s, s, c]);
+    let mut pair = pair_in;
+    for bi in 0..cfg.blocks {
+        pair = triangle_multiply(&mut b, pair, s, c, &format!("b{bi}.tri_mul"));
+        pair = triangle_attention(&mut b, pair, s, c, cfg.heads, &format!("b{bi}.tri_attn"));
+        pair = pair_transition(&mut b, pair, c, cfg.transition_mult, &format!("b{bi}.transition"));
+    }
+    let gf = b.param("lnf.g", &[c]);
+    let bf = b.param("lnf.b", &[c]);
+    let out = b.layer_norm(pair, gf, bf, 1e-5);
+    // distogram-style per-pair logit summary
+    let w = b.param("dist.w", &[c, 1]);
+    let bias = b.param("dist.b", &[1]);
+    let logits = b.linear(out, w, bias); // [s, s, 1]
+    let pooled = b.reduce(ReduceOp::Mean, logits, 2, false); // [s, s]
+    b.finish(vec![out, pooled])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{execute, random_inputs, random_params};
+    use crate::passes::estimate::estimate;
+    use crate::tensor::MemoryTracker;
+
+    #[test]
+    fn builds_and_validates() {
+        let g = evoformer(&EvoformerConfig { seq: 24, ..Default::default() });
+        assert!(g.validate().is_ok());
+        assert_eq!(g.node(g.outputs[0]).shape, vec![24, 24, 32]);
+        assert_eq!(g.node(g.outputs[1]).shape, vec![24, 24]);
+    }
+
+    #[test]
+    fn triangle_attention_dominates_memory() {
+        let cfg = EvoformerConfig { seq: 48, ..Default::default() };
+        let g = evoformer(&cfg);
+        let p = estimate(&g);
+        let peak = g.node(p.peak_node);
+        // O(s³) tensors: [s, h, s, s]
+        assert_eq!(
+            peak.shape,
+            vec![cfg.seq, cfg.heads, cfg.seq, cfg.seq],
+            "peak at {:?} {:?}",
+            peak.op,
+            peak.shape
+        );
+    }
+
+    #[test]
+    fn executes_finite() {
+        let g = evoformer(&EvoformerConfig { seq: 16, blocks: 1, ..Default::default() });
+        let tracker = MemoryTracker::new();
+        let ins = random_inputs(&g, 11, Some(tracker.clone()));
+        let ps = random_params(&g, 12);
+        let (outs, _) = execute(&g, &ins, &ps, &tracker);
+        assert!(outs[0].to_vec_f32().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn cubic_memory_growth() {
+        let a = estimate(&evoformer(&EvoformerConfig { seq: 48, ..Default::default() })).peak_bytes;
+        let b = estimate(&evoformer(&EvoformerConfig { seq: 96, ..Default::default() })).peak_bytes;
+        let growth = b as f64 / a as f64;
+        assert!(growth > 5.5, "2x seq gave only {growth:.1}x (expect ~8x)");
+    }
+}

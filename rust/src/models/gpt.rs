@@ -1,0 +1,179 @@
+//! GPT (prefill stage): decoder-only transformer over token ids.
+//!
+//! Multi-head attention with the `[h, s, s]` score tensor materialized —
+//! the canonical quadratic activation hotspot. Layer norms are composed
+//! from primitives so the memory profile matches an FX-level trace.
+
+use crate::ir::{Graph, GraphBuilder, NodeId};
+use crate::tensor::ops::{BinaryOp, UnaryOp};
+
+/// GPT configuration (batch = 1 prefill, matching the paper's setup).
+#[derive(Clone, Debug)]
+pub struct GptConfig {
+    pub seq: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub vocab: usize,
+    pub ff_mult: usize,
+    /// Use the fused memory-efficient attention op (Figure-6 baseline).
+    pub fused_attention: bool,
+}
+
+impl Default for GptConfig {
+    fn default() -> Self {
+        GptConfig {
+            seq: 1024,
+            d_model: 256,
+            heads: 8,
+            layers: 4,
+            vocab: 8192,
+            ff_mult: 4,
+            fused_attention: false,
+        }
+    }
+}
+
+/// One transformer block appended to `x`; returns the block output.
+pub(crate) fn transformer_block(
+    b: &mut GraphBuilder,
+    x: NodeId,
+    li: usize,
+    s: usize,
+    d: usize,
+    h: usize,
+    ff_mult: usize,
+    fused: bool,
+) -> NodeId {
+    let dh = d / h;
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    // --- attention
+    let g1 = b.param(&format!("l{li}.ln1.g"), &[d]);
+    let b1 = b.param(&format!("l{li}.ln1.b"), &[d]);
+    let xn = b.layer_norm(x, g1, b1, 1e-5);
+
+    let wq = b.param(&format!("l{li}.wq"), &[d, d]);
+    let wk = b.param(&format!("l{li}.wk"), &[d, d]);
+    let wv = b.param(&format!("l{li}.wv"), &[d, d]);
+    let wo = b.param(&format!("l{li}.wo"), &[d, d]);
+
+    let q = b.matmul(xn, wq);
+    let k = b.matmul(xn, wk);
+    let v = b.matmul(xn, wv);
+    // [s, d] -> [h, s, dh]
+    let qh = b.reshape(q, &[s, h, dh]);
+    let qh = b.transpose(qh, &[1, 0, 2]);
+    let kh = b.reshape(k, &[s, h, dh]);
+    let kh = b.transpose(kh, &[1, 0, 2]);
+    let vh = b.reshape(v, &[s, h, dh]);
+    let vh = b.transpose(vh, &[1, 0, 2]);
+
+    let ctx = if fused {
+        b.fused_attention(qh, kh, vh, scale)
+    } else {
+        let kt = b.transpose(kh, &[0, 2, 1]); // [h, dh, s]
+        let scores = b.matmul(qh, kt); // [h, s, s] — the hotspot
+        let scaled = b.binary_scalar(BinaryOp::Mul, scores, scale);
+        let probs = b.softmax(scaled, 2);
+        b.matmul(probs, vh) // [h, s, dh]
+    };
+    let ctx = b.transpose(ctx, &[1, 0, 2]); // [s, h, dh]
+    let ctx = b.reshape(ctx, &[s, d]);
+    let attn_out = b.matmul(ctx, wo);
+    let res1 = b.add(attn_out, x);
+
+    // --- feed-forward
+    let g2 = b.param(&format!("l{li}.ln2.g"), &[d]);
+    let b2 = b.param(&format!("l{li}.ln2.b"), &[d]);
+    let rn = b.layer_norm(res1, g2, b2, 1e-5);
+    let w1 = b.param(&format!("l{li}.ff.w1"), &[d, ff_mult * d]);
+    let bb1 = b.param(&format!("l{li}.ff.b1"), &[ff_mult * d]);
+    let w2 = b.param(&format!("l{li}.ff.w2"), &[ff_mult * d, d]);
+    let bb2 = b.param(&format!("l{li}.ff.b2"), &[d]);
+    let hmid = b.linear(rn, w1, bb1);
+    let act = b.unary(UnaryOp::Gelu, hmid);
+    let ff = b.linear(act, w2, bb2);
+    b.add(ff, res1)
+}
+
+/// Build the GPT prefill graph: token ids → final-layer hidden states.
+pub fn gpt(cfg: &GptConfig) -> Graph {
+    assert_eq!(cfg.d_model % cfg.heads, 0);
+    let (s, d) = (cfg.seq, cfg.d_model);
+    let mut b = GraphBuilder::new(if cfg.fused_attention { "gpt_fused" } else { "gpt" });
+
+    let ids = b.input_i32("tokens", &[s]);
+    let wte = b.param("wte", &[cfg.vocab, d]);
+    let wpe = b.param("wpe", &[s, d]);
+    let emb = b.gather(wte, ids); // [s, d]
+    let mut x = b.add(emb, wpe);
+
+    for li in 0..cfg.layers {
+        x = transformer_block(&mut b, x, li, s, d, cfg.heads, cfg.ff_mult, cfg.fused_attention);
+    }
+
+    let gf = b.param("lnf.g", &[d]);
+    let bf = b.param("lnf.b", &[d]);
+    let out = b.layer_norm(x, gf, bf, 1e-5);
+    b.finish(vec![out])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{execute, random_inputs, random_params};
+    use crate::passes::estimate::estimate;
+    use crate::tensor::MemoryTracker;
+
+    #[test]
+    fn builds_with_expected_output_shape() {
+        let g = gpt(&GptConfig { seq: 64, ..Default::default() });
+        let out = g.node(g.outputs[0]);
+        assert_eq!(out.shape, vec![64, 256]);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn peak_is_attention_scores() {
+        let cfg = GptConfig { seq: 512, ..Default::default() };
+        let g = gpt(&cfg);
+        let p = estimate(&g);
+        let peak = g.node(p.peak_node);
+        // the [h, s, s] tensors dominate
+        assert!(
+            peak.shape == vec![cfg.heads, cfg.seq, cfg.seq],
+            "peak at {:?} {:?}",
+            peak.op,
+            peak.shape
+        );
+    }
+
+    #[test]
+    fn fused_variant_has_much_lower_peak() {
+        let cfg = GptConfig { seq: 1024, ..Default::default() };
+        let dense = estimate(&gpt(&cfg)).peak_bytes;
+        let fused = estimate(&gpt(&GptConfig { fused_attention: true, ..cfg })).peak_bytes;
+        assert!(
+            (fused as f64) < 0.35 * dense as f64,
+            "fused {fused} vs dense {dense}"
+        );
+    }
+
+    #[test]
+    fn fused_and_dense_agree_numerically() {
+        let cfg = GptConfig { seq: 32, d_model: 32, heads: 4, layers: 1, vocab: 64, ..Default::default() };
+        let gd = gpt(&cfg);
+        let gf = gpt(&GptConfig { fused_attention: true, ..cfg });
+        // same params modulo graph node count; generate by position
+        let ins = random_inputs(&gd, 3, None);
+        let ps_d = random_params(&gd, 4);
+        let ps_f = random_params(&gf, 4);
+        assert_eq!(ps_d.len(), ps_f.len(), "param count must match");
+        let t0 = MemoryTracker::new();
+        let (od, _) = execute(&gd, &ins, &ps_d, &t0);
+        let t1 = MemoryTracker::new();
+        let (of, _) = execute(&gf, &ins, &ps_f, &t1);
+        assert!(od[0].max_abs_diff(&of[0]) < 1e-3);
+    }
+}

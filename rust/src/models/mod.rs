@@ -1,0 +1,83 @@
+//! The paper's four evaluation models, defined in the graph IR.
+//!
+//! Each is parameterized so the benches can sweep sequence length and
+//! scale. `gpt` and `vit` also have `*_fused` variants using the
+//! memory-efficient attention op (the Figure-6 baseline).
+//!
+//! | model | input | hotspot |
+//! |-------|-------|---------|
+//! | GPT (prefill)  | tokens `[s]`        | attention scores `O(s²)` |
+//! | ViT            | patches `[p, d_in]` | attention + MLP          |
+//! | Evoformer      | pair `[s, s, c]`    | triangle ops `O(s³)`     |
+//! | UNet (SD-like) | image `[1, c, h, w]`| spatial attention, convs |
+
+pub mod evoformer;
+pub mod gpt;
+pub mod unet;
+pub mod vit;
+
+pub use evoformer::{evoformer, EvoformerConfig};
+pub use gpt::{gpt, GptConfig};
+pub use unet::{unet, UNetConfig};
+pub use vit::{vit, ViTConfig};
+
+use crate::ir::Graph;
+
+/// The benchmark model zoo: (name, graph) for a given 1-D scale knob.
+/// `seq` is interpreted per-model (tokens, patches, residues, image side).
+pub fn zoo(seq: usize) -> Vec<(&'static str, Graph)> {
+    vec![
+        ("gpt", gpt(&GptConfig { seq, ..Default::default() })),
+        ("vit", vit(&ViTConfig { patches: seq, ..Default::default() })),
+        (
+            "evoformer",
+            evoformer(&EvoformerConfig { seq: seq / 8, ..Default::default() }),
+        ),
+        (
+            "unet",
+            unet(&UNetConfig { image: (seq / 8).max(16), ..Default::default() }),
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{execute, random_inputs, random_params};
+    use crate::passes::estimate::estimate;
+    use crate::tensor::MemoryTracker;
+
+    #[test]
+    fn all_models_build_and_validate() {
+        for (name, g) in zoo(128) {
+            assert!(g.validate().is_ok(), "{name}: {:?}", g.validate());
+            assert!(g.len() > 20, "{name} suspiciously small: {}", g.len());
+        }
+    }
+
+    #[test]
+    fn all_models_execute() {
+        for (name, g) in zoo(64) {
+            let tracker = MemoryTracker::new();
+            let ins = random_inputs(&g, 7, Some(tracker.clone()));
+            let ps = random_params(&g, 8);
+            let (outs, stats) = execute(&g, &ins, &ps, &tracker);
+            assert!(!outs.is_empty(), "{name}");
+            assert!(
+                outs[0].to_vec_f32().iter().all(|x| x.is_finite()),
+                "{name} produced non-finite values"
+            );
+            assert!(stats.peak_bytes > 0, "{name}");
+        }
+    }
+
+    #[test]
+    fn activation_memory_grows_superlinearly_with_seq() {
+        // Figure 1's premise: activation memory grows much faster than
+        // linear in sequence length for attention models.
+        let a = estimate(&gpt(&GptConfig { seq: 128, ..Default::default() })).peak_bytes;
+        let b = estimate(&gpt(&GptConfig { seq: 512, ..Default::default() })).peak_bytes;
+        let growth = b as f64 / a as f64;
+        assert!(growth > 6.0, "4x seq gave only {growth:.1}x memory");
+    }
+}

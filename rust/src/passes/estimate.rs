@@ -1,0 +1,425 @@
+//! Estimation pass: activation-memory profile of a graph.
+//!
+//! Simulates the interpreter's allocation behaviour analytically:
+//! liveness-driven frees, view aliasing (transpose/slice allocate nothing),
+//! and kernel workspace (im2col, softmax/reduce permute copies, matmul
+//! broadcast materialization) — the "memory cost due to continuous
+//! operation" the paper's §3.4 insists on modelling.
+//!
+//! The pass yields the per-node live-byte series (Figure 4), the peak and
+//! the peak node (the anchor for chunk search), and — via
+//! [`estimate_under_plan`] — the same profile under a set of chunk plans,
+//! which is what chunk selection iterates against (Eq. 2 semantics).
+
+use crate::ir::{Graph, NodeId, Op};
+use crate::plan::{region_owner, ChunkPlan};
+
+
+/// Result of the estimation pass.
+#[derive(Clone, Debug)]
+pub struct MemoryProfile {
+    /// Live activation bytes at (i.e. just after allocating the output of)
+    /// each node, in execution order. Leaves report the live set as-is.
+    pub per_node: Vec<usize>,
+    /// Peak of `per_node`.
+    pub peak_bytes: usize,
+    /// Node at which the peak occurs.
+    pub peak_node: NodeId,
+}
+
+impl MemoryProfile {
+    /// Fraction of nodes whose live-byte level is below `frac` of peak —
+    /// the paper's Figure-4 observation (">70% of nodes under 30% of max").
+    pub fn fraction_below(&self, frac: f64) -> f64 {
+        if self.per_node.is_empty() {
+            return 0.0;
+        }
+        let cut = self.peak_bytes as f64 * frac;
+        let n = self
+            .per_node
+            .iter()
+            .filter(|&&b| (b as f64) < cut)
+            .count();
+        n as f64 / self.per_node.len() as f64
+    }
+}
+
+/// Does this op produce a zero-copy view of its input?
+fn is_view(op: &Op) -> bool {
+    matches!(op, Op::Transpose { .. } | Op::Slice { .. } | Op::Broadcast { .. })
+}
+
+/// Contiguity model mirroring the kernels in `crate::tensor`.
+fn output_contiguous(graph: &Graph, id: NodeId, contig: &[bool]) -> bool {
+    let node = graph.node(id);
+    match &node.op {
+        Op::Transpose { perm } => {
+            // identity permutation stays contiguous
+            perm.iter().enumerate().all(|(i, &p)| i == p) && contig[node.inputs[0]]
+        }
+        Op::Slice { axis, .. } => *axis == 0 && contig[node.inputs[0]],
+        Op::Broadcast { .. } => {
+            // stride-0 dims unless shape is unchanged
+            graph.node(node.inputs[0]).shape == node.shape && contig[node.inputs[0]]
+        }
+        // every computing/materializing op emits contiguous data
+        _ => true,
+    }
+}
+
+/// Transient workspace bytes a node's kernel allocates beyond its output,
+/// given per-input contiguity. Mirrors `crate::tensor` kernel behaviour.
+fn node_workspace(graph: &Graph, id: NodeId, contig: &[bool]) -> usize {
+    let node = graph.node(id);
+    let in_bytes = |i: usize| -> usize { graph.node(node.inputs[i]).byte_size() };
+    match &node.op {
+        Op::MatMul | Op::DotGeneral { .. } => {
+            // non-contiguous operands are materialized; batch broadcasting
+            // additionally expands to the full batch.
+            let mut ws = 0;
+            for (pos, &inp) in node.inputs.iter().enumerate() {
+                let b = in_bytes(pos);
+                if !contig[inp] {
+                    ws += b;
+                }
+            }
+            ws
+        }
+        Op::Reshape => 0, // copy counted as the output when non-contig input
+        Op::Reduce { axis, .. } => {
+            // permute+materialize when the reduce axis is not innermost
+            let rank = graph.node(node.inputs[0]).shape.len();
+            if *axis != rank - 1 || !contig[node.inputs[0]] {
+                in_bytes(0)
+            } else {
+                0
+            }
+        }
+        Op::Softmax { axis } => {
+            let rank = graph.node(node.inputs[0]).shape.len();
+            if *axis != rank - 1 || !contig[node.inputs[0]] {
+                // permuted copy in + permuted copy out
+                2 * in_bytes(0)
+            } else {
+                0
+            }
+        }
+        Op::Concat { .. } => {
+            // non-contiguous parts are materialized before the copy
+            node.inputs
+                .iter()
+                .enumerate()
+                .filter(|&(_, &i)| !contig[i])
+                .map(|(pos, _)| in_bytes(pos))
+                .sum()
+        }
+        Op::Conv2d { .. } => {
+            // im2col matrix [N*Ho*Wo, Cin*Kh*Kw] + pre-permute NHWC output
+            let w = &graph.node(node.inputs[1]).shape;
+            let out_spatial: usize = node.shape[0] * node.shape[2] * node.shape[3];
+            let cols = out_spatial * w[1] * w[2] * w[3] * 4;
+            cols + node.byte_size()
+        }
+        Op::FusedAttention { .. } => {
+            // running stats + one kv-block of scores per batch element
+            let q = &graph.node(node.inputs[0]).shape;
+            let sq = q[q.len() - 2];
+            sq * (crate::tensor::attention::KV_BLOCK + 2) * 4
+        }
+        _ => 0,
+    }
+}
+
+/// Bytes a node newly allocates for its output (0 for views / aliasing).
+fn alloc_bytes(graph: &Graph, id: NodeId, contig: &[bool]) -> usize {
+    let node = graph.node(id);
+    if is_view(&node.op) {
+        return 0;
+    }
+    if matches!(node.op, Op::Reshape) && contig[node.inputs[0]] {
+        return 0; // zero-copy reshape
+    }
+    node.byte_size()
+}
+
+/// Scale factor (≤ 1) applied to region-node allocations under a plan:
+/// `ceil(extent/n) / extent` along the node's chunk dim. Region *outputs*
+/// accumulate at full size (Eq. 2 keeps `mem(Y)` whole), so they scale 1.
+fn chunk_scale(graph: &Graph, plan: &ChunkPlan, id: NodeId) -> f64 {
+    if plan.outputs.iter().any(|&(o, _)| o == id) {
+        return 1.0;
+    }
+    let dim = plan.node_dims[&id];
+    let extent = graph.node(id).shape[dim];
+    let step = extent.div_ceil(plan.n_chunks);
+    step as f64 / extent as f64
+}
+
+/// Core simulator shared by [`estimate`] and [`estimate_under_plan`].
+fn simulate(graph: &Graph, plans: &[ChunkPlan]) -> MemoryProfile {
+    let users = graph.users();
+    let mut refcount: Vec<usize> = users.iter().map(|u| u.len()).collect();
+    for &o in &graph.outputs {
+        refcount[o] += 1;
+    }
+    let owner = region_owner(plans, graph.len());
+
+    // Aliasing: each value references a storage root; roots carry bytes.
+    let mut root: Vec<NodeId> = (0..graph.len()).collect();
+    let mut root_bytes: Vec<usize> = vec![0; graph.len()];
+    let mut root_refs: Vec<usize> = vec![0; graph.len()];
+    let mut contig: Vec<bool> = vec![true; graph.len()];
+
+    let mut live: usize = 0;
+    let mut peak: usize = 0;
+    let mut peak_node: NodeId = 0;
+    let mut per_node: Vec<usize> = Vec::with_capacity(graph.len());
+
+    let free_value = |id: NodeId,
+                          root: &[NodeId],
+                          root_bytes: &mut [usize],
+                          root_refs: &mut [usize],
+                          live: &mut usize| {
+        let r = root[id];
+        root_refs[r] -= 1;
+        if root_refs[r] == 0 {
+            *live -= root_bytes[r];
+            root_bytes[r] = 0;
+        }
+    };
+
+    for node in &graph.nodes {
+        let id = node.id;
+        contig[id] = output_contiguous(graph, id, &contig);
+
+        // Parameters occupy parameter memory, not activation memory.
+        let is_param = matches!(node.op, Op::Param);
+
+        // Region scaling: intermediates of a chunked region cost 1/n.
+        let scale = owner[id]
+            .map(|pi| chunk_scale(graph, &plans[pi], id))
+            .unwrap_or(1.0);
+
+        // `root_refs[r]` counts live *values* aliasing root r: each node id
+        // holds exactly one reference from birth until its own refcount
+        // (consumer countdown) hits zero.
+        if node.op.is_leaf() {
+            root_bytes[id] = if is_param { 0 } else { node.byte_size() };
+            root_refs[id] = 1;
+            live += root_bytes[id];
+            if refcount[id] == 0 {
+                free_value(id, &root, &mut root_bytes, &mut root_refs, &mut live);
+            }
+        } else {
+            // Views alias their input's root.
+            if is_view(&node.op)
+                || (matches!(node.op, Op::Reshape) && contig[node.inputs[0]])
+            {
+                let r = root[node.inputs[0]];
+                root[id] = r;
+                root_refs[r] += 1;
+                if refcount[id] == 0 {
+                    free_value(id, &root, &mut root_bytes, &mut root_refs, &mut live);
+                }
+            } else {
+                let out = (alloc_bytes(graph, id, &contig) as f64 * scale) as usize;
+                let ws = (node_workspace(graph, id, &contig) as f64 * scale) as usize;
+                // workspace + output live simultaneously at the peak moment
+                if live + ws + out > peak {
+                    peak = live + ws + out;
+                    peak_node = id;
+                }
+                root_bytes[id] = out;
+                root_refs[id] = 1;
+                live += out;
+                if refcount[id] == 0 {
+                    // dead code: free immediately
+                    free_value(id, &root, &mut root_bytes, &mut root_refs, &mut live);
+                }
+            }
+            // Inputs whose last consumer this was are released.
+            for &i in &node.inputs {
+                refcount[i] -= 1;
+                if refcount[i] == 0 {
+                    free_value(i, &root, &mut root_bytes, &mut root_refs, &mut live);
+                }
+            }
+        }
+        if live > peak {
+            peak = live;
+            peak_node = id;
+        }
+        per_node.push(live);
+    }
+
+    MemoryProfile {
+        per_node,
+        peak_bytes: peak,
+        peak_node,
+    }
+}
+
+/// Activation-memory profile of the unchunked graph.
+pub fn estimate(graph: &Graph) -> MemoryProfile {
+    simulate(graph, &[])
+}
+
+/// Profile under a set of chunk plans (Eq. 2: region intermediates scale by
+/// `1/n`; region inputs/outputs stay whole).
+pub fn estimate_under_plan(graph: &Graph, plans: &[ChunkPlan]) -> MemoryProfile {
+    simulate(graph, plans)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{execute, random_inputs, random_params};
+    use crate::ir::GraphBuilder;
+    use crate::tensor::ops::{BinaryOp, UnaryOp};
+    use crate::tensor::MemoryTracker;
+
+    /// Build a toy transformer-ish block with a fat intermediate.
+    fn fat_graph(s: usize, d: usize) -> crate::ir::Graph {
+        let mut b = GraphBuilder::new("fat");
+        let x = b.input("x", &[s, d]);
+        let w = b.param("w", &[d, d]);
+        let q = b.matmul(x, w);
+        let kt = b.transpose(q, &[1, 0]);
+        let scores = b.matmul(q, kt); // [s, s] — the fat one
+        let probs = b.softmax(scores, 1);
+        let out = b.matmul(probs, q);
+        b.finish(vec![out])
+    }
+
+    #[test]
+    fn peak_is_the_quadratic_intermediate() {
+        let g = fat_graph(256, 16);
+        let p = estimate(&g);
+        // scores/softmax [256,256] dominate [256,16] tensors
+        let peak_name = &g.node(p.peak_node).name;
+        assert!(
+            peak_name == "matmul" || peak_name == "softmax",
+            "unexpected peak node {peak_name}"
+        );
+        assert!(p.peak_bytes >= 256 * 256 * 4);
+    }
+
+    #[test]
+    fn estimate_matches_measured_peak() {
+        // The estimator must track the real interpreter closely.
+        for (name, g) in [
+            ("fat", fat_graph(128, 32)),
+            ("mlp", {
+                let mut b = GraphBuilder::new("mlp");
+                let x = b.input("x", &[64, 64]);
+                let w1 = b.param("w1", &[64, 256]);
+                let b1 = b.param("b1", &[256]);
+                let w2 = b.param("w2", &[256, 64]);
+                let b2 = b.param("b2", &[64]);
+                let h = b.linear(x, w1, b1);
+                let a = b.unary(UnaryOp::Gelu, h);
+                let y = b.linear(a, w2, b2);
+                b.finish(vec![y])
+            }),
+        ] {
+            let est = estimate(&g).peak_bytes;
+            let tracker = MemoryTracker::new();
+            let ins = random_inputs(&g, 3, Some(tracker.clone()));
+            let ps = random_params(&g, 4);
+            let (_, stats) = execute(&g, &ins, &ps, &tracker);
+            let measured = stats.peak_bytes;
+            let ratio = est as f64 / measured as f64;
+            assert!(
+                (0.65..=1.5).contains(&ratio),
+                "{name}: estimate {est} vs measured {measured} (ratio {ratio:.2})"
+            );
+        }
+    }
+
+    #[test]
+    fn profile_length_matches_nodes() {
+        let g = fat_graph(32, 8);
+        let p = estimate(&g);
+        assert_eq!(p.per_node.len(), g.len());
+        // peak may exceed the live-set series due to transient workspace
+        assert!(p.peak_bytes >= *p.per_node.iter().max().unwrap());
+    }
+
+    #[test]
+    fn fraction_below_distribution() {
+        // In a graph with one fat intermediate, most nodes sit well below
+        // the peak — the paper's Figure-4 skew.
+        let g = fat_graph(512, 16);
+        let p = estimate(&g);
+        assert!(p.fraction_below(0.5) > 0.4, "{}", p.fraction_below(0.5));
+    }
+
+    #[test]
+    fn params_are_not_activation() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4]);
+        let w = b.param("w", &[1024, 1024]); // huge param
+        let w0 = b.slice(w, 0, 0, 1);
+        let w1 = b.reshape(w0, &[1024]);
+        let s = b.reduce(crate::tensor::reduce::ReduceOp::Sum, w1, 0, false);
+        let sb = b.broadcast(s, &[4]);
+        let y = b.binary(BinaryOp::Add, x, sb);
+        let g = b.finish(vec![y]);
+        let p = estimate(&g);
+        // peak must be tiny — the 4 MiB parameter doesn't count.
+        assert!(p.peak_bytes < 100_000, "{}", p.peak_bytes);
+    }
+
+    #[test]
+    fn views_do_not_allocate() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[64, 64]);
+        let t1 = b.transpose(x, &[1, 0]);
+        let s1 = b.slice(t1, 0, 0, 32);
+        let g = b.finish(vec![s1]);
+        let p = estimate(&g);
+        // only the input allocates
+        assert_eq!(p.peak_bytes, 64 * 64 * 4);
+    }
+
+    #[test]
+    fn under_plan_shrinks_peak() {
+        use std::collections::HashMap;
+        let g = fat_graph(256, 16);
+        // Hand-build a plan chunking the scores+softmax region (nodes 4,5:
+        // matmul scores, softmax) along dim 0.
+        // Find them by name/shape.
+        let scores = g
+            .nodes
+            .iter()
+            .find(|n| n.op == crate::ir::Op::MatMul && n.shape == vec![256, 256])
+            .unwrap()
+            .id;
+        let softmax = scores + 1;
+        let out_mm = g.outputs[0];
+        let mut node_dims = HashMap::new();
+        node_dims.insert(scores, 0);
+        node_dims.insert(softmax, 0);
+        node_dims.insert(out_mm, 0);
+        let q = g.node(scores).inputs[0];
+        let kt = g.node(scores).inputs[1];
+        let plan = ChunkPlan {
+            region: vec![scores, softmax, out_mm],
+            chunk_inputs: vec![(q, 0)],
+            pass_inputs: vec![kt, q]
+                .into_iter()
+                .filter(|&n| n != q)
+                .collect(),
+            outputs: vec![(out_mm, 0)],
+            n_chunks: 8,
+            node_dims,
+        };
+        assert!(plan.validate(&g).is_ok(), "{:?}", plan.validate(&g));
+        let base = estimate(&g).peak_bytes;
+        let chunked = estimate_under_plan(&g, &[plan]).peak_bytes;
+        assert!(
+            (chunked as f64) < 0.45 * base as f64,
+            "chunked {chunked} vs base {base}"
+        );
+    }
+}

@@ -1,0 +1,150 @@
+//! Expert-designed chunk baseline (paper §4.1, Figures 7–8).
+//!
+//! Reimplements the OpenFold-style hand-written chunk strategy the paper
+//! compares against: every attention / transition module is chunked along
+//! its leading output dimension with one *fixed* chunk size (the paper uses
+//! 64 as "an effective configuration"), regardless of where the actual
+//! memory peak is and with no cost model. The gap between this and
+//! AutoChunk is the paper's headline comparison.
+
+use super::search::plan_for_range;
+use super::SearchConfig;
+use crate::ir::{Graph, NodeId, Op};
+use crate::plan::{plans_overlap, ChunkPlan};
+
+/// Build fixed-size expert plans: for every softmax (attention core) and
+/// every GELU (transition/FFN core), chunk the surrounding module region
+/// along output dim 0 with `ceil(extent / chunk_size)` chunks.
+pub fn expert_plans(graph: &Graph, chunk_size: usize) -> Vec<ChunkPlan> {
+    let mut plans: Vec<ChunkPlan> = Vec::new();
+    let anchors: Vec<NodeId> = graph
+        .nodes
+        .iter()
+        .filter(|n| {
+            matches!(n.op, Op::Softmax { .. })
+                || matches!(n.op, Op::Unary(crate::tensor::ops::UnaryOp::Gelu))
+        })
+        .map(|n| n.id)
+        .collect();
+
+    let cfg = SearchConfig::default();
+    for anchor in anchors {
+        // module region: a fixed ±4-node neighborhood around the anchor —
+        // the "whole module" granularity of hand-written chunk wrappers.
+        let start = anchor.saturating_sub(4);
+        let end = (anchor + 4).min(graph.len() - 1);
+        let Some(mut plan) = widest_legal_plan(graph, start, end, anchor, &cfg) else {
+            continue;
+        };
+        let extent = plan.chunk_extent(graph);
+        if extent <= chunk_size {
+            continue; // module too small to chunk at this fixed size
+        }
+        plan.n_chunks = extent.div_ceil(chunk_size);
+        if plans.iter().any(|p| plans_overlap(p, &plan)) {
+            continue;
+        }
+        plans.push(plan);
+    }
+    plans
+}
+
+/// The widest region within [start, end] containing `anchor` that admits a
+/// dim-0 chunk (experts chunk whole modules along the leading dim).
+fn widest_legal_plan(
+    graph: &Graph,
+    start: NodeId,
+    end: NodeId,
+    anchor: NodeId,
+    cfg: &SearchConfig,
+) -> Option<ChunkPlan> {
+    let mut best: Option<ChunkPlan> = None;
+    for s in start..=anchor {
+        for e in anchor..=end {
+            if let Some(plan) = plan_for_range(graph, s, e, 0, cfg) {
+                if !plan.region.contains(&anchor) {
+                    continue;
+                }
+                let better = match &best {
+                    None => true,
+                    Some(b) => plan.region.len() > b.region.len(),
+                };
+                if better {
+                    best = Some(plan);
+                }
+            }
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{execute, random_inputs, random_params};
+    use crate::ir::GraphBuilder;
+    use crate::plan::execute_chunked;
+    use crate::tensor::ops::{BinaryOp, UnaryOp};
+    use crate::tensor::MemoryTracker;
+
+    fn block(s: usize, d: usize) -> crate::ir::Graph {
+        let mut b = GraphBuilder::new("block");
+        let x = b.input("x", &[s, d]);
+        let wq = b.param("wq", &[d, d]);
+        let q = b.matmul(x, wq);
+        let kt = b.transpose(q, &[1, 0]);
+        let scores = b.matmul(q, kt);
+        let scaled = b.binary_scalar(BinaryOp::Mul, scores, 0.125);
+        let probs = b.softmax(scaled, 1);
+        let attn = b.matmul(probs, q);
+        let w1 = b.param("w1", &[d, 4 * d]);
+        let h = b.matmul(attn, w1);
+        let a = b.unary(UnaryOp::Gelu, h);
+        let w2 = b.param("w2", &[4 * d, d]);
+        let y = b.matmul(a, w2);
+        b.finish(vec![y])
+    }
+
+    #[test]
+    fn expert_plans_found_and_disjoint() {
+        let g = block(256, 16);
+        let plans = expert_plans(&g, 64);
+        assert!(!plans.is_empty(), "expert found no chunk modules");
+        for (i, a) in plans.iter().enumerate() {
+            assert!(a.validate(&g).is_ok(), "{:?}", a.validate(&g));
+            for b in &plans[i + 1..] {
+                assert!(!plans_overlap(a, b));
+            }
+        }
+    }
+
+    #[test]
+    fn expert_fixed_chunk_size() {
+        let g = block(256, 16);
+        for p in expert_plans(&g, 64) {
+            let ext = p.chunk_extent(&g);
+            assert_eq!(p.n_chunks, ext.div_ceil(64));
+        }
+    }
+
+    #[test]
+    fn expert_chunked_execution_correct() {
+        let g = block(128, 8);
+        let plans = expert_plans(&g, 32);
+        assert!(!plans.is_empty());
+        let ins = random_inputs(&g, 3, None);
+        let ps = random_params(&g, 4);
+        let t0 = MemoryTracker::new();
+        let (base, _) = execute(&g, &ins, &ps, &t0);
+        let t1 = MemoryTracker::new();
+        let (got, _) = execute_chunked(&g, &plans, &ins, &ps, &t1);
+        assert!(base[0].max_abs_diff(&got[0]) < 1e-4);
+    }
+
+    #[test]
+    fn small_modules_skipped() {
+        let g = block(32, 8); // extent 32 <= chunk_size 64
+        let plans = expert_plans(&g, 64);
+        assert!(plans.is_empty());
+    }
+}

@@ -1,0 +1,460 @@
+//! Chunk-flow dimension propagation (paper §3.3, "Chunk Flow").
+//!
+//! A chunk flow is the path a chunk dimension takes through consecutive
+//! nodes. The search pass walks flows *bottom-up* (output → inputs); for
+//! each (node, output-dim) pair, [`propagate_to_input`] answers, per input:
+//!
+//! * [`FlowResult::Dim`] — the input carries the flow at this dimension;
+//! * [`FlowResult::NotCarried`] — the input does not participate in the
+//!   chunk dimension (broadcast operand, weight side of a matmul); it may
+//!   be a non-chunkable input `X^nc` of the region;
+//! * [`FlowResult::Broken`] — the op destroys the flow at this dimension
+//!   (reduction over it, softmax axis, reshape mixing it, contraction);
+//!   a region containing this edge is illegal for this chunk setting
+//!   (Rule 3: flow traceability).
+
+use crate::ir::{Graph, NodeId, Op};
+
+/// Outcome of pushing a chunk dimension across one node input edge.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FlowResult {
+    /// Input carries the flow at this dimension index.
+    Dim(usize),
+    /// Input does not carry the chunk dimension (legal as a whole operand).
+    NotCarried,
+    /// Flow broken: chunking this output dimension is illegal through here.
+    Broken,
+}
+
+/// Push the chunk dim `out_dim` of `node`'s output backwards onto input
+/// `input_pos`. See module docs for semantics.
+pub fn propagate_to_input(
+    graph: &Graph,
+    node: NodeId,
+    out_dim: usize,
+    input_pos: usize,
+) -> FlowResult {
+    use FlowResult::*;
+    let n = graph.node(node);
+    debug_assert!(out_dim < n.shape.len().max(1));
+    let in_id = n.inputs[input_pos];
+    let in_shape = &graph.node(in_id).shape;
+    let out_shape = &n.shape;
+
+    match &n.op {
+        Op::Input | Op::Param | Op::Const(_) | Op::Iota { .. } => Broken, // leaves have no inputs
+
+        Op::Binary(_) => {
+            // numpy broadcasting: align trailing dims.
+            let pad = out_shape.len() - in_shape.len();
+            if out_dim < pad {
+                return NotCarried;
+            }
+            let d = out_dim - pad;
+            if in_shape[d] == out_shape[out_dim] {
+                Dim(d)
+            } else {
+                debug_assert_eq!(in_shape[d], 1);
+                NotCarried
+            }
+        }
+
+        Op::Unary(_) | Op::Convert => Dim(out_dim),
+
+        Op::Softmax { axis } => {
+            if out_dim == *axis {
+                Broken
+            } else {
+                Dim(out_dim)
+            }
+        }
+
+        Op::MatMul => {
+            let out_rank = out_shape.len();
+            let in_rank = in_shape.len();
+            if out_dim == out_rank - 2 {
+                // M: carried by lhs only
+                if input_pos == 0 { Dim(in_rank - 2) } else { NotCarried }
+            } else if out_dim == out_rank - 1 {
+                // N: carried by rhs only
+                if input_pos == 1 { Dim(in_rank - 1) } else { NotCarried }
+            } else {
+                // batch dim, broadcast-aligned from the right of the batch part
+                let out_batch = out_rank - 2;
+                let in_batch = in_rank - 2;
+                let pad = out_batch - in_batch.min(out_batch);
+                if out_dim < pad {
+                    return NotCarried;
+                }
+                let d = out_dim - pad;
+                if in_shape[d] == out_shape[out_dim] {
+                    Dim(d)
+                } else {
+                    NotCarried // extent-1 broadcast batch
+                }
+            }
+        }
+
+        Op::DotGeneral {
+            lhs_batch,
+            rhs_batch,
+            lhs_contract,
+            rhs_contract,
+        } => {
+            // output dims: [batch..., lhs_free..., rhs_free...]
+            let lhs_shape = &graph.node(n.inputs[0]).shape;
+            let rhs_shape = &graph.node(n.inputs[1]).shape;
+            let lhs_free: Vec<usize> = (0..lhs_shape.len())
+                .filter(|d| !lhs_batch.contains(d) && !lhs_contract.contains(d))
+                .collect();
+            let rhs_free: Vec<usize> = (0..rhs_shape.len())
+                .filter(|d| !rhs_batch.contains(d) && !rhs_contract.contains(d))
+                .collect();
+            let nb = lhs_batch.len();
+            if out_dim < nb {
+                // batch dim
+                if input_pos == 0 {
+                    Dim(lhs_batch[out_dim])
+                } else {
+                    Dim(rhs_batch[out_dim])
+                }
+            } else if out_dim < nb + lhs_free.len() {
+                if input_pos == 0 {
+                    Dim(lhs_free[out_dim - nb])
+                } else {
+                    NotCarried
+                }
+            } else {
+                if input_pos == 1 {
+                    Dim(rhs_free[out_dim - nb - lhs_free.len()])
+                } else {
+                    NotCarried
+                }
+            }
+        }
+
+        Op::Transpose { perm } => Dim(perm[out_dim]),
+
+        Op::Reshape => {
+            // out_dim maps cleanly iff some input dim has the same extent
+            // AND the same suffix product (i.e. the dimension boundary is
+            // preserved by the reshape). Otherwise the reshape mixes the
+            // chunk dim with neighbours and the flow breaks.
+            let suffix = |shape: &[usize], d: usize| -> usize {
+                shape[d + 1..].iter().product()
+            };
+            let out_suf = suffix(out_shape, out_dim);
+            for (j, &ext) in in_shape.iter().enumerate() {
+                if ext == out_shape[out_dim] && suffix(in_shape, j) == out_suf {
+                    return Dim(j);
+                }
+            }
+            Broken
+        }
+
+        Op::Broadcast { dims } => {
+            // dims[i] = output dim that input dim i maps to.
+            for (i, &d) in dims.iter().enumerate() {
+                if d == out_dim {
+                    return if in_shape[i] == out_shape[out_dim] {
+                        Dim(i)
+                    } else {
+                        NotCarried // extent-1 broadcast
+                    };
+                }
+            }
+            NotCarried // new dim introduced by the broadcast
+        }
+
+        Op::Reduce { axis, keepdims, .. } => {
+            if input_pos != 0 {
+                return NotCarried; // init operand (imported HLO)
+            }
+            if *keepdims {
+                if out_dim == *axis {
+                    // chunking the kept reduced dim (extent 1) is degenerate
+                    Broken
+                } else {
+                    Dim(out_dim)
+                }
+            } else {
+                // output dims skip the reduced axis
+                let in_dim = if out_dim < *axis { out_dim } else { out_dim + 1 };
+                Dim(in_dim)
+            }
+        }
+
+        Op::Concat { axis } => {
+            if out_dim == *axis {
+                Broken
+            } else {
+                Dim(out_dim)
+            }
+        }
+
+        Op::Slice { axis, .. } => {
+            if out_dim == *axis {
+                // chunking a sliced dim would need per-chunk offsets
+                Broken
+            } else {
+                Dim(out_dim)
+            }
+        }
+
+        Op::Gather => {
+            // out = ids.shape ++ [D]; input 0 = table [V, D], input 1 = ids.
+            let ids_rank = graph.node(n.inputs[1]).shape.len();
+            if out_dim < ids_rank {
+                if input_pos == 1 { Dim(out_dim) } else { NotCarried }
+            } else {
+                // embedding dim: slicing the table (a leaf param) is not a
+                // chunk flow (leaves are non-chunkable).
+                Broken
+            }
+        }
+
+        Op::Conv2d { .. } => {
+            match out_dim {
+                0 => {
+                    if input_pos == 0 { Dim(0) } else { NotCarried }
+                }
+                // channel/spatial dims: halo + channel mixing break the flow
+                _ => Broken,
+            }
+        }
+
+        Op::FusedAttention { .. } => {
+            let out_rank = out_shape.len();
+            if out_dim == out_rank - 2 {
+                // query rows: carried by q only
+                if input_pos == 0 { Dim(in_shape.len() - 2) } else { NotCarried }
+            } else if out_dim == out_rank - 1 {
+                // value columns: carried by v only
+                if input_pos == 2 { Dim(in_shape.len() - 1) } else { NotCarried }
+            } else {
+                // batch dims, broadcast-aligned
+                let in_batch = in_shape.len() - 2;
+                let pad = (out_rank - 2) - in_batch.min(out_rank - 2);
+                if out_dim < pad {
+                    return NotCarried;
+                }
+                let d = out_dim - pad;
+                if in_shape[d] == out_shape[out_dim] { Dim(d) } else { NotCarried }
+            }
+        }
+
+        // Conservative: unknown semantics can never carry a chunk flow.
+        Op::Opaque { .. } => Broken,
+
+        Op::AvgPool2x | Op::Upsample2x => {
+            // batch and channel dims flow; spatial dims are resampled
+            if out_dim <= 1 { Dim(out_dim) } else { Broken }
+        }
+    }
+}
+
+/// Smallest stride class of `dim` within `shape` — 0 for the innermost
+/// (unit-stride) dimension, rank-1 for the outermost. Used by the micro
+/// cost term: chunking large-stride (outer) dims is cheap, small-stride
+/// (inner) dims forces scattered copies.
+pub fn dim_stride_elems(shape: &[usize], dim: usize) -> usize {
+    shape[dim + 1..].iter().product::<usize>().max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::FlowResult::*;
+    use super::*;
+    use crate::ir::GraphBuilder;
+    use crate::tensor::ops::{BinaryOp, UnaryOp};
+    use crate::tensor::reduce::ReduceOp;
+
+    #[test]
+    fn unary_passes_all_dims() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4, 8]);
+        let y = b.unary(UnaryOp::Relu, x);
+        let g = b.finish(vec![y]);
+        assert_eq!(propagate_to_input(&g, y, 0, 0), Dim(0));
+        assert_eq!(propagate_to_input(&g, y, 1, 0), Dim(1));
+    }
+
+    #[test]
+    fn binary_broadcast_bias_not_carried() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4, 8]);
+        let bias = b.input("b", &[8]);
+        let y = b.binary(BinaryOp::Add, x, bias);
+        let g = b.finish(vec![y]);
+        // dim 0 (the broadcast dim): x carries, bias does not
+        assert_eq!(propagate_to_input(&g, y, 0, 0), Dim(0));
+        assert_eq!(propagate_to_input(&g, y, 0, 1), NotCarried);
+        // dim 1: both carry
+        assert_eq!(propagate_to_input(&g, y, 1, 0), Dim(1));
+        assert_eq!(propagate_to_input(&g, y, 1, 1), Dim(0));
+    }
+
+    #[test]
+    fn binary_keepdims_side_not_carried() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4, 8]);
+        let m = b.reduce(ReduceOp::Max, x, 1, true); // [4,1]
+        let y = b.sub(x, m);
+        let g = b.finish(vec![y]);
+        assert_eq!(propagate_to_input(&g, y, 0, 1), Dim(0)); // 4 == 4
+        assert_eq!(propagate_to_input(&g, y, 1, 1), NotCarried); // extent 1
+    }
+
+    #[test]
+    fn matmul_row_col_and_batch() {
+        let mut b = GraphBuilder::new("t");
+        let a = b.input("a", &[2, 16, 32]);
+        let w = b.input("w", &[2, 32, 8]);
+        let y = b.matmul(a, w);
+        let g = b.finish(vec![y]);
+        // batch dim 0 carried by both
+        assert_eq!(propagate_to_input(&g, y, 0, 0), Dim(0));
+        assert_eq!(propagate_to_input(&g, y, 0, 1), Dim(0));
+        // M dim (1): lhs only
+        assert_eq!(propagate_to_input(&g, y, 1, 0), Dim(1));
+        assert_eq!(propagate_to_input(&g, y, 1, 1), NotCarried);
+        // N dim (2): rhs only
+        assert_eq!(propagate_to_input(&g, y, 2, 0), NotCarried);
+        assert_eq!(propagate_to_input(&g, y, 2, 1), Dim(2));
+    }
+
+    #[test]
+    fn matmul_2d_weight_broadcast_batch() {
+        let mut b = GraphBuilder::new("t");
+        let a = b.input("a", &[6, 16, 32]);
+        let w = b.input("w", &[32, 8]);
+        let y = b.matmul(a, w); // [6,16,8]
+        let g = b.finish(vec![y]);
+        assert_eq!(propagate_to_input(&g, y, 0, 0), Dim(0));
+        assert_eq!(propagate_to_input(&g, y, 0, 1), NotCarried);
+        assert_eq!(propagate_to_input(&g, y, 1, 0), Dim(1));
+        assert_eq!(propagate_to_input(&g, y, 2, 1), Dim(1));
+    }
+
+    #[test]
+    fn softmax_axis_breaks() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4, 8]);
+        let y = b.softmax(x, 1);
+        let g = b.finish(vec![y]);
+        assert_eq!(propagate_to_input(&g, y, 0, 0), Dim(0));
+        assert_eq!(propagate_to_input(&g, y, 1, 0), Broken);
+    }
+
+    #[test]
+    fn transpose_permutes_flow() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4, 8, 16]);
+        let y = b.transpose(x, &[2, 0, 1]);
+        let g = b.finish(vec![y]);
+        assert_eq!(propagate_to_input(&g, y, 0, 0), Dim(2));
+        assert_eq!(propagate_to_input(&g, y, 1, 0), Dim(0));
+        assert_eq!(propagate_to_input(&g, y, 2, 0), Dim(1));
+    }
+
+    #[test]
+    fn reshape_preserved_boundary_flows() {
+        // [B, S, H*D] -> [B, S, H, D]: dims B and S map; H and D are new
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[2, 16, 32]);
+        let y = b.reshape(x, &[2, 16, 4, 8]);
+        let g = b.finish(vec![y]);
+        assert_eq!(propagate_to_input(&g, y, 0, 0), Dim(0)); // B
+        assert_eq!(propagate_to_input(&g, y, 1, 0), Dim(1)); // S
+        assert_eq!(propagate_to_input(&g, y, 2, 0), Broken); // H (split from H*D)
+        assert_eq!(propagate_to_input(&g, y, 3, 0), Broken); // D
+    }
+
+    #[test]
+    fn reshape_merge_breaks_merged_dim() {
+        // [4, 8] -> [32]: the merged dim mixes both — broken
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4, 8]);
+        let y = b.reshape(x, &[32]);
+        let g = b.finish(vec![y]);
+        assert_eq!(propagate_to_input(&g, y, 0, 0), Broken);
+    }
+
+    #[test]
+    fn reshape_flatten_leading_keeps_trailing() {
+        // [2,3,32] -> [6,32]: trailing dim maps (same suffix), leading broken
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[2, 3, 32]);
+        let y = b.reshape(x, &[6, 32]);
+        let g = b.finish(vec![y]);
+        assert_eq!(propagate_to_input(&g, y, 1, 0), Dim(2));
+        assert_eq!(propagate_to_input(&g, y, 0, 0), Broken);
+    }
+
+    #[test]
+    fn reduce_skips_axis() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4, 8, 16]);
+        let y = b.reduce(ReduceOp::Sum, x, 1, false); // [4,16]
+        let g = b.finish(vec![y]);
+        assert_eq!(propagate_to_input(&g, y, 0, 0), Dim(0));
+        assert_eq!(propagate_to_input(&g, y, 1, 0), Dim(2));
+    }
+
+    #[test]
+    fn reduce_keepdims_axis_degenerate() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4, 8]);
+        let y = b.reduce(ReduceOp::Sum, x, 1, true); // [4,1]
+        let g = b.finish(vec![y]);
+        assert_eq!(propagate_to_input(&g, y, 0, 0), Dim(0));
+        assert_eq!(propagate_to_input(&g, y, 1, 0), Broken);
+    }
+
+    #[test]
+    fn concat_and_slice_axis_break() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4, 8]);
+        let y = b.input("y", &[4, 8]);
+        let c = b.concat(&[x, y], 1);
+        let s = b.slice(c, 0, 0, 2);
+        let g = b.finish(vec![s]);
+        assert_eq!(propagate_to_input(&g, c, 1, 0), Broken);
+        assert_eq!(propagate_to_input(&g, c, 0, 0), Dim(0));
+        assert_eq!(propagate_to_input(&g, s, 0, 0), Broken);
+        assert_eq!(propagate_to_input(&g, s, 1, 0), Dim(1));
+    }
+
+    #[test]
+    fn conv_batch_flows_spatial_breaks() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[2, 3, 8, 8]);
+        let w = b.param("w", &[4, 3, 3, 3]);
+        let y = b.conv2d(x, w, 1, 1);
+        let g = b.finish(vec![y]);
+        assert_eq!(propagate_to_input(&g, y, 0, 0), Dim(0));
+        assert_eq!(propagate_to_input(&g, y, 0, 1), NotCarried);
+        assert_eq!(propagate_to_input(&g, y, 1, 0), Broken);
+        assert_eq!(propagate_to_input(&g, y, 2, 0), Broken);
+    }
+
+    #[test]
+    fn gather_ids_flow() {
+        let mut b = GraphBuilder::new("t");
+        let table = b.param("tbl", &[100, 16]);
+        let ids = b.input_i32("ids", &[4, 8]);
+        let e = b.gather(table, ids);
+        let g = b.finish(vec![e]);
+        assert_eq!(propagate_to_input(&g, e, 0, 1), Dim(0));
+        assert_eq!(propagate_to_input(&g, e, 1, 1), Dim(1));
+        assert_eq!(propagate_to_input(&g, e, 0, 0), NotCarried);
+        assert_eq!(propagate_to_input(&g, e, 2, 0), Broken);
+    }
+
+    #[test]
+    fn stride_elems() {
+        assert_eq!(dim_stride_elems(&[4, 8, 16], 0), 128);
+        assert_eq!(dim_stride_elems(&[4, 8, 16], 1), 16);
+        assert_eq!(dim_stride_elems(&[4, 8, 16], 2), 1);
+    }
+}

@@ -1,0 +1,634 @@
+//! Chunk search pass (paper §3.3, Algorithm 1).
+//!
+//! Enumerates node pairs `(start, end)` around the peak-memory node inside
+//! a local window (`O(k²·N)` instead of `O(N³)`), and for each candidate
+//! region and each output dimension runs a bottom-up BFS over chunk flows
+//! to assign every region node a chunk dimension (Rules 1–4, Eq. 5–7).
+//!
+//! Complexity optimizations from the paper:
+//! * **local window** — only regions within `window` nodes of the peak;
+//! * **two-stage filter** — a cheap single-path trace rejects hopeless
+//!   (region, dim) pairs before the full BFS;
+//! * **graph optimization** — nodes not reached by any flow are hoisted
+//!   out of the region when legal (they don't depend on chunked values),
+//!   instead of rejecting the whole candidate.
+
+use super::estimate::MemoryProfile;
+use super::flow::{propagate_to_input, FlowResult};
+use crate::ir::{Graph, NodeId};
+use crate::plan::ChunkPlan;
+use std::collections::{HashMap, HashSet, VecDeque};
+
+/// Tunables for the search pass.
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    /// Local window size `k`: regions start/end within this many nodes of
+    /// the peak node.
+    pub window: usize,
+    /// Two-stage filtering (stage 1 = cheap boundary flow check).
+    pub two_stage_filter: bool,
+    /// Graph optimization: hoist flow-irrelevant nodes out of the region.
+    pub graph_opt: bool,
+    /// Hard cap on region length in nodes.
+    pub max_region: usize,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            window: 48,
+            two_stage_filter: true,
+            graph_opt: true,
+            max_region: 96,
+        }
+    }
+}
+
+/// A legal chunk found by the search (chunk count not yet chosen —
+/// selection completes it).
+#[derive(Clone, Debug)]
+pub struct ChunkCandidate {
+    pub plan: ChunkPlan,
+}
+
+/// Search statistics (exposed for the complexity experiments).
+#[derive(Clone, Debug, Default)]
+pub struct SearchStats {
+    pub regions_considered: usize,
+    pub stage1_rejected: usize,
+    pub stage2_runs: usize,
+    pub candidates: usize,
+}
+
+/// Find all legal chunk candidates whose region contains the current peak
+/// node and does not overlap `existing` plans.
+pub fn search_chunks(
+    graph: &Graph,
+    profile: &MemoryProfile,
+    existing: &[ChunkPlan],
+    config: &SearchConfig,
+) -> Vec<ChunkCandidate> {
+    search_chunks_with_stats(graph, profile, existing, config).0
+}
+
+/// As [`search_chunks`], also returning statistics.
+pub fn search_chunks_with_stats(
+    graph: &Graph,
+    profile: &MemoryProfile,
+    existing: &[ChunkPlan],
+    config: &SearchConfig,
+) -> (Vec<ChunkCandidate>, SearchStats) {
+    let mut stats = SearchStats::default();
+    let mut out: Vec<ChunkCandidate> = Vec::new();
+    let mut seen: HashSet<String> = HashSet::new();
+
+    let peak = profile.peak_node;
+    let n = graph.len();
+    let taken: HashSet<NodeId> = existing
+        .iter()
+        .flat_map(|p| p.region.iter().copied())
+        .collect();
+
+    let users = graph.users();
+    let constant = const_derived(graph);
+
+    let lo = peak.saturating_sub(config.window);
+    let hi = (peak + config.window).min(n.saturating_sub(1));
+
+    for start in lo..=peak {
+        if graph.node(start).op.is_leaf() {
+            continue;
+        }
+        'ends: for end in peak..=hi {
+            if end < start || end - start + 1 > config.max_region {
+                continue;
+            }
+            if graph.node(end).op.is_leaf() {
+                continue;
+            }
+            // Region = non-leaf, non-constant nodes in [start, end],
+            // disjoint from taken.
+            let region: Vec<NodeId> = (start..=end)
+                .filter(|&i| !graph.node(i).op.is_leaf() && !constant[i])
+                .collect();
+            if region.is_empty() || !region.contains(&peak) {
+                continue;
+            }
+            for &r in &region {
+                if taken.contains(&r) {
+                    continue 'ends;
+                }
+            }
+            stats.regions_considered += 1;
+
+            let region_set: HashSet<NodeId> = region.iter().copied().collect();
+            // Outputs: region nodes consumed outside, or graph outputs.
+            let outputs: Vec<NodeId> = region
+                .iter()
+                .copied()
+                .filter(|&r| {
+                    graph.outputs.contains(&r)
+                        || users[r].iter().any(|&u| !region_set.contains(&u))
+                })
+                .collect();
+            if outputs.is_empty() {
+                continue;
+            }
+
+            // Seed the flow from each output in turn (Algorithm 1 iterates
+            // the dims of the output nodes): the first output may be a
+            // side value the flow cannot start from.
+            for &out0 in outputs.iter().take(3) {
+                let rank = graph.node(out0).shape.len();
+                for dim in 0..rank {
+                    if graph.node(out0).shape[dim] <= 1 {
+                        continue;
+                    }
+                    if config.two_stage_filter && !stage1_trace(graph, &region_set, out0, dim) {
+                        stats.stage1_rejected += 1;
+                        continue;
+                    }
+                    stats.stage2_runs += 1;
+                    if let Some(plan) =
+                        trace_region(graph, &users, &region, &outputs, out0, dim, config, Some(peak))
+                    {
+                        let key = plan_key(&plan);
+                        if seen.insert(key) {
+                            debug_assert!(plan.validate(graph).is_ok(), "{:?}", plan.validate(graph));
+                            out.push(ChunkCandidate { plan });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    stats.candidates = out.len();
+    (out, stats)
+}
+
+/// Build a plan for an explicit node range and output chunk dim, without
+/// peak anchoring — used by the expert-chunk baseline and by tests that
+/// need a specific region.
+pub fn plan_for_range(
+    graph: &Graph,
+    start: NodeId,
+    end: NodeId,
+    dim: usize,
+    config: &SearchConfig,
+) -> Option<ChunkPlan> {
+    if end >= graph.len() || start > end {
+        return None;
+    }
+    let users = graph.users();
+    let constant = const_derived(graph);
+    let region: Vec<NodeId> = (start..=end)
+        .filter(|&i| !graph.node(i).op.is_leaf() && !constant[i])
+        .collect();
+    if region.is_empty() {
+        return None;
+    }
+    let region_set: HashSet<NodeId> = region.iter().copied().collect();
+    let outputs: Vec<NodeId> = region
+        .iter()
+        .copied()
+        .filter(|&r| {
+            graph.outputs.contains(&r) || users[r].iter().any(|&u| !region_set.contains(&u))
+        })
+        .collect();
+    for &out0 in outputs.iter().take(3) {
+        if dim >= graph.node(out0).shape.len() || graph.node(out0).shape[dim] <= 1 {
+            continue;
+        }
+        if let Some(plan) =
+            trace_region(graph, &users, &region, &outputs, out0, dim, config, None)
+        {
+            return Some(plan);
+        }
+    }
+    None
+}
+
+/// Stage-1 filter: follow one greedy flow path from `(out0, dim)` upwards;
+/// succeeds iff it escapes the region without hitting a broken edge.
+fn stage1_trace(graph: &Graph, region: &HashSet<NodeId>, out0: NodeId, dim: usize) -> bool {
+    let mut node = out0;
+    let mut d = dim;
+    for _ in 0..graph.len() {
+        if !region.contains(&node) {
+            return true; // escaped through an input
+        }
+        let inputs = &graph.node(node).inputs;
+        if inputs.is_empty() {
+            return false;
+        }
+        let mut advanced = false;
+        for pos in 0..inputs.len() {
+            match propagate_to_input(graph, node, d, pos) {
+                FlowResult::Dim(di) => {
+                    node = inputs[pos];
+                    d = di;
+                    advanced = true;
+                    break;
+                }
+                FlowResult::NotCarried => continue,
+                FlowResult::Broken => return false,
+            }
+        }
+        if !advanced {
+            return false;
+        }
+    }
+    false
+}
+
+/// Stage-2: full bottom-up BFS assigning chunk dims to the whole region.
+/// Returns a complete plan (n_chunks = 1) or None if illegal.
+#[allow(clippy::too_many_arguments)]
+fn trace_region(
+    graph: &Graph,
+    users: &[Vec<NodeId>],
+    region: &[NodeId],
+    outputs: &[NodeId],
+    out0: NodeId,
+    dim: usize,
+    config: &SearchConfig,
+    peak: Option<NodeId>,
+) -> Option<ChunkPlan> {
+    let region_set: HashSet<NodeId> = region.iter().copied().collect();
+    let mut node_dims: HashMap<NodeId, usize> = HashMap::new();
+    let mut chunk_inputs: HashMap<NodeId, usize> = HashMap::new();
+    let mut pass_inputs: HashSet<NodeId> = HashSet::new();
+    let mut queue: VecDeque<(NodeId, usize)> = VecDeque::new();
+
+    node_dims.insert(out0, dim);
+    queue.push_back((out0, dim));
+
+    while let Some((id, d)) = queue.pop_front() {
+        let node = graph.node(id);
+        for pos in 0..node.inputs.len() {
+            let input = node.inputs[pos];
+            match propagate_to_input(graph, id, d, pos) {
+                FlowResult::Broken => return None, // Rule 3 violated
+                FlowResult::NotCarried => {
+                    if !region_set.contains(&input) {
+                        pass_inputs.insert(input);
+                    }
+                    // in-region NotCarried nodes handled after BFS
+                }
+                FlowResult::Dim(di) => {
+                    if region_set.contains(&input) {
+                        match node_dims.get(&input) {
+                            Some(&prev) if prev != di => return None, // Rule 4
+                            Some(_) => {}
+                            None => {
+                                node_dims.insert(input, di);
+                                queue.push_back((input, di));
+                            }
+                        }
+                    } else {
+                        // flow escapes: chunkable input
+                        if di >= graph.node(input).shape.len() {
+                            return None; // degenerate (scalar/init operand)
+                        }
+                        match chunk_inputs.get(&input) {
+                            Some(&prev) if prev != di => return None,
+                            _ => {
+                                chunk_inputs.insert(input, di);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Rule 3: at least one chunkable input must carry the flow.
+    if chunk_inputs.is_empty() {
+        return None;
+    }
+
+    // Rule 4, edge consistency: every edge between two *assigned* region
+    // nodes must itself carry the flow with matching dims. The BFS only
+    // walks carried edges; a second edge between the same pair may demand
+    // the whole value (e.g. `x @ transpose(x)` consumes x both chunked
+    // and whole — chunking would compute only the diagonal blocks).
+    for (&r, &rd) in &node_dims {
+        let node = graph.node(r);
+        for pos in 0..node.inputs.len() {
+            let i = node.inputs[pos];
+            if let Some(&idim) = node_dims.get(&i) {
+                match propagate_to_input(graph, r, rd, pos) {
+                    FlowResult::Dim(di) if di == idim => {}
+                    _ => return None,
+                }
+            } else if chunk_inputs.contains_key(&i) {
+                // edges to chunk inputs must carry the flow consistently too
+                match propagate_to_input(graph, r, rd, pos) {
+                    FlowResult::Dim(di) if di == chunk_inputs[&i] => {}
+                    _ => return None,
+                }
+            }
+        }
+    }
+
+    // Handle region nodes not reached by any flow.
+    let unassigned: Vec<NodeId> = region
+        .iter()
+        .copied()
+        .filter(|r| !node_dims.contains_key(r))
+        .collect();
+    let mut final_region: Vec<NodeId> = region
+        .iter()
+        .copied()
+        .filter(|r| node_dims.contains_key(r))
+        .collect();
+    if !unassigned.is_empty() {
+        if !config.graph_opt {
+            return None;
+        }
+        // Graph optimization: hoist nodes whose in-region dependencies are
+        // all unassigned (flow-irrelevant). A node depending on an assigned
+        // (chunked) node needs the full value — illegal.
+        let assigned: HashSet<NodeId> = node_dims.keys().copied().collect();
+        for &u in &unassigned {
+            if graph
+                .node(u)
+                .inputs
+                .iter()
+                .any(|i| assigned.contains(i))
+            {
+                return None;
+            }
+        }
+        // hoisted producers consumed by assigned nodes become pass inputs
+        let unassigned_set: HashSet<NodeId> = unassigned.iter().copied().collect();
+        for &u in &unassigned {
+            if users[u].iter().any(|c| assigned.contains(c)) {
+                pass_inputs.insert(u);
+            }
+        }
+        // also anything external the hoisted nodes exposed is irrelevant now
+        pass_inputs.retain(|p| !unassigned_set.contains(p) || users[*p].iter().any(|c| assigned.contains(c)));
+    }
+
+    // Peak must remain inside the (possibly narrowed) region.
+    if let Some(pk) = peak {
+        if !final_region.contains(&pk) {
+            return None;
+        }
+    }
+
+    // Recompute outputs for the final region: chunked nodes consumed
+    // outside it (hoisted consumers count as outside).
+    let final_set: HashSet<NodeId> = final_region.iter().copied().collect();
+    let mut plan_outputs: Vec<(NodeId, usize)> = Vec::new();
+    for &r in &final_region {
+        let is_out = graph.outputs.contains(&r)
+            || users[r].iter().any(|u| !final_set.contains(u));
+        if is_out {
+            plan_outputs.push((r, node_dims[&r]));
+        }
+    }
+    if plan_outputs.is_empty() {
+        return None;
+    }
+    // All declared outputs of the original region must have been assigned —
+    // otherwise the chunked region cannot reproduce them (Rule 2).
+    for &o in outputs {
+        if final_set.contains(&o) && !node_dims.contains_key(&o) {
+            return None;
+        }
+    }
+
+    // Rule 2 prerequisite: a single trip count — all outputs share the
+    // chunk extent along their dims.
+    let extent = graph.node(plan_outputs[0].0).shape[plan_outputs[0].1];
+    if extent <= 1 {
+        return None;
+    }
+    for &(o, od) in &plan_outputs {
+        if graph.node(o).shape[od] != extent {
+            return None;
+        }
+    }
+    for (&i, &d) in &chunk_inputs {
+        if graph.node(i).shape[d] != extent {
+            return None; // flow preserved extents should guarantee this
+        }
+    }
+
+    // Pass inputs must not also be chunk inputs (Rule 4 on inputs).
+    for p in &pass_inputs {
+        if chunk_inputs.contains_key(p) {
+            return None;
+        }
+    }
+
+    final_region.sort_unstable();
+    let mut ci: Vec<(NodeId, usize)> = chunk_inputs.into_iter().collect();
+    ci.sort_unstable();
+    let mut pi: Vec<NodeId> = pass_inputs.into_iter().collect();
+    pi.sort_unstable();
+    plan_outputs.sort_unstable();
+
+    Some(ChunkPlan {
+        region: final_region,
+        chunk_inputs: ci,
+        pass_inputs: pi,
+        outputs: plan_outputs,
+        n_chunks: 1,
+        node_dims,
+    })
+}
+
+/// Nodes whose values depend only on constants/iota (no runtime inputs or
+/// params): these are freely recomputable/hoistable and behave like leaves
+/// for chunking purposes. JAX CSE shares e.g. `broadcast(const)` across
+/// layers, which would otherwise turn them into spurious region outputs.
+pub fn const_derived(graph: &Graph) -> Vec<bool> {
+    let mut mask = vec![false; graph.len()];
+    for node in &graph.nodes {
+        mask[node.id] = match &node.op {
+            crate::ir::Op::Const(_) | crate::ir::Op::Iota { .. } => true,
+            crate::ir::Op::Input | crate::ir::Op::Param => false,
+            _ => !node.inputs.is_empty() && node.inputs.iter().all(|&i| mask[i]),
+        };
+    }
+    mask
+}
+
+/// Stable dedup key for a plan (region + dims + inputs).
+fn plan_key(plan: &ChunkPlan) -> String {
+    let mut dims: Vec<(NodeId, usize)> = plan.node_dims.iter().map(|(&k, &v)| (k, v)).collect();
+    dims.sort_unstable();
+    format!(
+        "r{:?}ci{:?}d{:?}",
+        plan.region, plan.chunk_inputs, dims
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+    use crate::passes::estimate::estimate;
+    use crate::tensor::ops::{BinaryOp, UnaryOp};
+
+    /// attention-score-like graph: q,k from x, scores = q@k^T, softmax, @v.
+    fn attn_graph(s: usize, d: usize) -> crate::ir::Graph {
+        let mut b = GraphBuilder::new("attn");
+        let x = b.input("x", &[s, d]);
+        let wq = b.param("wq", &[d, d]);
+        let wk = b.param("wk", &[d, d]);
+        let wv = b.param("wv", &[d, d]);
+        let q = b.matmul(x, wq);
+        let k = b.matmul(x, wk);
+        let v = b.matmul(x, wv);
+        let kt = b.transpose(k, &[1, 0]);
+        let scores = b.matmul(q, kt);
+        let scaled = b.binary_scalar(BinaryOp::Mul, scores, 0.125);
+        let probs = b.softmax(scaled, 1);
+        let out = b.matmul(probs, v);
+        b.finish(vec![out])
+    }
+
+    #[test]
+    fn finds_candidates_in_attention() {
+        let g = attn_graph(128, 16);
+        let p = estimate(&g);
+        let cands = search_chunks(&g, &p, &[], &SearchConfig::default());
+        assert!(!cands.is_empty(), "no chunk candidates found");
+        // At least one candidate must chunk along the query dim (0) —
+        // the classic memory-efficient-attention chunk.
+        assert!(
+            cands.iter().any(|c| {
+                c.plan.outputs.iter().all(|&(_, d)| d == 0)
+                    && c.plan.chunk_inputs.iter().any(|&(_, d)| d == 0)
+            }),
+            "no query-dim chunk among {} candidates",
+            cands.len()
+        );
+    }
+
+    #[test]
+    fn candidates_validate_against_graph() {
+        let g = attn_graph(64, 8);
+        let p = estimate(&g);
+        for c in search_chunks(&g, &p, &[], &SearchConfig::default()) {
+            assert!(c.plan.validate(&g).is_ok(), "{:?}", c.plan.validate(&g));
+        }
+    }
+
+    #[test]
+    fn no_candidate_chunks_softmax_axis() {
+        let g = attn_graph(64, 8);
+        let p = estimate(&g);
+        let softmax_id = g
+            .nodes
+            .iter()
+            .find(|n| matches!(n.op, crate::ir::Op::Softmax { .. }))
+            .unwrap()
+            .id;
+        for c in search_chunks(&g, &p, &[], &SearchConfig::default()) {
+            if let Some(&d) = c.plan.node_dims.get(&softmax_id) {
+                assert_ne!(d, 1, "softmax chunked along its own axis");
+            }
+        }
+    }
+
+    #[test]
+    fn respects_existing_plans() {
+        let g = attn_graph(64, 8);
+        let p = estimate(&g);
+        let cands = search_chunks(&g, &p, &[], &SearchConfig::default());
+        let first = cands[0].plan.clone();
+        let more = search_chunks(&g, &p, &[first.clone()], &SearchConfig::default());
+        for c in &more {
+            assert!(
+                !crate::plan::plans_overlap(&first, &c.plan),
+                "overlapping candidate returned"
+            );
+        }
+    }
+
+    #[test]
+    fn window_limits_search() {
+        let g = attn_graph(64, 8);
+        let p = estimate(&g);
+        let narrow = SearchConfig {
+            window: 2,
+            ..Default::default()
+        };
+        let wide = SearchConfig {
+            window: 64,
+            ..Default::default()
+        };
+        let (c_narrow, s_narrow) = search_chunks_with_stats(&g, &p, &[], &narrow);
+        let (c_wide, s_wide) = search_chunks_with_stats(&g, &p, &[], &wide);
+        assert!(s_narrow.regions_considered < s_wide.regions_considered);
+        assert!(c_narrow.len() <= c_wide.len());
+    }
+
+    #[test]
+    fn stage1_filter_reduces_stage2_runs() {
+        let g = attn_graph(64, 8);
+        let p = estimate(&g);
+        let with = SearchConfig {
+            two_stage_filter: true,
+            ..Default::default()
+        };
+        let without = SearchConfig {
+            two_stage_filter: false,
+            ..Default::default()
+        };
+        let (cw, sw) = search_chunks_with_stats(&g, &p, &[], &with);
+        let (co, so) = search_chunks_with_stats(&g, &p, &[], &without);
+        assert!(sw.stage2_runs <= so.stage2_runs);
+        // the filter must not lose candidates
+        assert_eq!(cw.len(), co.len());
+    }
+
+    #[test]
+    fn graph_opt_hoists_irrelevant_nodes() {
+        // region with a side computation independent of the chunk flow:
+        // y = relu(x) + g(bias) where g(bias) has no chunk dim.
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[256, 64]);
+        let bias = b.input("bias", &[64]);
+        let bx = b.unary(UnaryOp::Exp, bias); // irrelevant flow node
+        let r = b.unary(UnaryOp::Relu, x);
+        let r2 = b.unary(UnaryOp::Gelu, r);
+        let y = b.binary(BinaryOp::Add, r2, bx);
+        let g = b.finish(vec![y]);
+        let p = estimate(&g);
+        let with_opt = search_chunks(&g, &p, &[], &SearchConfig::default());
+        let without_opt = search_chunks(
+            &g,
+            &p,
+            &[],
+            &SearchConfig {
+                graph_opt: false,
+                ..Default::default()
+            },
+        );
+        // graph_opt finds strictly more/equal candidates (it can save
+        // regions that contain the exp(bias) node by hoisting it)
+        assert!(with_opt.len() >= without_opt.len());
+        // and at least one hoisted-region candidate excludes the exp node
+        let exp_id = bx;
+        assert!(with_opt.iter().any(|c| !c.plan.region.contains(&exp_id)
+            && c.plan.pass_inputs.contains(&exp_id)));
+    }
+
+    #[test]
+    fn chunk_extent_consistency() {
+        let g = attn_graph(96, 8);
+        let p = estimate(&g);
+        for c in search_chunks(&g, &p, &[], &SearchConfig::default()) {
+            let ext = c.plan.chunk_extent(&g);
+            for &(i, d) in &c.plan.chunk_inputs {
+                assert_eq!(g.node(i).shape[d], ext);
+            }
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Chunk execution plans (the compiler's output artifact).
+//!
+//! A [`ChunkPlan`] captures the paper's Eq. 3: a *region* of the graph whose
+//! execution is rewritten from `Y = F(X)` into
+//! `for i in 0..n { yᵢ = F(xᵢ, X^nc) }; Y = concat(y₁..yₙ)`.
+//!
+//! Plans are produced by `passes::search` (region + dims) and completed by
+//! `passes::select` (chunk count `n`). `exec_chunked` interprets them; the
+//! serving runtime lowers them onto bucketed PJRT executables.
+
+pub mod exec_chunked;
+
+pub use exec_chunked::execute_chunked;
+
+use crate::ir::{Graph, NodeId};
+use std::collections::HashMap;
+
+/// A chunked region with all its settings (paper §3.1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChunkPlan {
+    /// Region body: nodes executed per chunk, in topological order.
+    /// Excludes the inputs (produced outside) and includes the outputs.
+    pub region: Vec<NodeId>,
+    /// Chunkable inputs `X^c`: values produced outside the region that are
+    /// sliced along the given axis.
+    pub chunk_inputs: Vec<(NodeId, usize)>,
+    /// Non-chunkable inputs `X^nc`: values passed whole (residuals, params).
+    pub pass_inputs: Vec<NodeId>,
+    /// Chunkable outputs `Y^c`: region nodes consumed outside (or graph
+    /// outputs), concatenated back along the given axis.
+    pub outputs: Vec<(NodeId, usize)>,
+    /// Number of chunks `n` (paper: "chunk size"). 1 = no-op plan.
+    pub n_chunks: usize,
+    /// Chunk dimension assignment for every node in the region
+    /// (Rule 4: unique setting per node).
+    pub node_dims: HashMap<NodeId, usize>,
+}
+
+impl ChunkPlan {
+    /// True if `id` is part of this plan's region body.
+    pub fn contains(&self, id: NodeId) -> bool {
+        self.node_dims.contains_key(&id) || self.region.contains(&id)
+    }
+
+    /// The extent of the chunked dimension of the first output — the loop
+    /// trip space. All outputs share this extent (Rule 2: alignment).
+    pub fn chunk_extent(&self, graph: &Graph) -> usize {
+        let (node, axis) = self.outputs[0];
+        graph.node(node).shape[axis]
+    }
+
+    /// Per-iteration slice length for extent `len` (last chunk may be short).
+    pub fn chunk_step(&self, graph: &Graph) -> usize {
+        self.chunk_extent(graph).div_ceil(self.n_chunks)
+    }
+
+    /// Structural validation against `graph` (test/debug aid): region nodes
+    /// topologically ordered, inputs outside the region, outputs inside,
+    /// every region node has a dim assignment consistent with its shape.
+    pub fn validate(&self, graph: &Graph) -> Result<(), String> {
+        if self.n_chunks == 0 {
+            return Err("n_chunks must be >= 1".into());
+        }
+        if self.region.is_empty() {
+            return Err("empty region".into());
+        }
+        let in_region: std::collections::HashSet<NodeId> = self.region.iter().copied().collect();
+        let mut prev = None;
+        for &r in &self.region {
+            if r >= graph.len() {
+                return Err(format!("region node {r} out of range"));
+            }
+            if let Some(p) = prev {
+                if r <= p {
+                    return Err(format!("region not topologically ordered at {r}"));
+                }
+            }
+            prev = Some(r);
+            let dim = self
+                .node_dims
+                .get(&r)
+                .ok_or_else(|| format!("region node {r} has no chunk dim"))?;
+            let shape = &graph.node(r).shape;
+            if *dim >= shape.len() {
+                return Err(format!(
+                    "node {r} chunk dim {dim} out of range for shape {shape:?}"
+                ));
+            }
+        }
+        for &(i, axis) in &self.chunk_inputs {
+            if in_region.contains(&i) {
+                return Err(format!("chunk input {i} is inside the region"));
+            }
+            if axis >= graph.node(i).shape.len() {
+                return Err(format!("chunk input {i} axis {axis} out of range"));
+            }
+        }
+        for &p in &self.pass_inputs {
+            if in_region.contains(&p) {
+                return Err(format!("pass input {p} is inside the region"));
+            }
+        }
+        let extent0 = self.chunk_extent(graph);
+        for &(o, axis) in &self.outputs {
+            if !in_region.contains(&o) {
+                return Err(format!("output {o} not in region"));
+            }
+            if graph.node(o).shape[axis] != extent0 {
+                return Err(format!(
+                    "output {o} chunk extent mismatch ({} vs {extent0})",
+                    graph.node(o).shape[axis]
+                ));
+            }
+        }
+        // Region nodes may only consume region nodes or declared inputs.
+        let declared: std::collections::HashSet<NodeId> = self
+            .chunk_inputs
+            .iter()
+            .map(|&(i, _)| i)
+            .chain(self.pass_inputs.iter().copied())
+            .collect();
+        for &r in &self.region {
+            for &i in &graph.node(r).inputs {
+                if !in_region.contains(&i) && !declared.contains(&i) {
+                    return Err(format!("region node {r} uses undeclared input {i}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// True if two plans' regions overlap (plans must be disjoint).
+pub fn plans_overlap(a: &ChunkPlan, b: &ChunkPlan) -> bool {
+    let set: std::collections::HashSet<NodeId> = a.region.iter().copied().collect();
+    b.region.iter().any(|r| set.contains(r))
+}
+
+/// Which plan (index) owns each node, if any.
+pub fn region_owner(plans: &[ChunkPlan], len: usize) -> Vec<Option<usize>> {
+    let mut owner = vec![None; len];
+    for (pi, p) in plans.iter().enumerate() {
+        for &r in &p.region {
+            owner[r] = Some(pi);
+        }
+    }
+    owner
+}

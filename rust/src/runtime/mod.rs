@@ -1,0 +1,214 @@
+//! PJRT runtime: load and execute AOT artifacts from Rust.
+//!
+//! `python/compile/aot.py` runs once (`make artifacts`) and writes
+//! `artifacts/<tag>.hlo.txt` + `<tag>.meta` + parameter blobs; this module
+//! scans the directory, compiles the HLO text on the PJRT CPU client
+//! (`xla` crate; text interchange per /opt/xla-example/README.md), and
+//! executes variants from the serving hot path. Python is never invoked.
+
+mod params;
+mod registry;
+
+pub use params::ParamSet;
+pub use registry::{ArtifactMeta, Registry};
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+
+/// A compiled model variant ready to execute.
+pub struct LoadedModel {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Lazily-loading runtime over an artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    registry: Registry,
+    params: HashMap<(String, usize), ParamSet>, // by (model, seq bucket)
+    loaded: HashMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    /// Scan `dir` and connect the PJRT CPU client.
+    pub fn new(dir: &str) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let registry = Registry::scan(dir)?;
+        Ok(Runtime {
+            client,
+            registry,
+            params: HashMap::new(),
+            loaded: HashMap::new(),
+        })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Compile (once) and return the variant tagged `tag`.
+    pub fn load(&mut self, tag: &str) -> Result<&LoadedModel> {
+        if !self.loaded.contains_key(tag) {
+            let meta = self
+                .registry
+                .get(tag)
+                .with_context(|| format!("unknown artifact '{tag}'"))?
+                .clone();
+            let proto = xla::HloModuleProto::from_text_file(&meta.hlo_path)
+                .with_context(|| format!("parsing {}", meta.hlo_path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {tag}"))?;
+            self.loaded.insert(tag.to_string(), LoadedModel { meta, exe });
+        }
+        Ok(&self.loaded[tag])
+    }
+
+    /// Parameter set for a (model, seq) bucket (loaded once per bucket).
+    pub fn params_for(&mut self, model: &str, seq: usize) -> Result<&ParamSet> {
+        let key = (model.to_string(), seq);
+        if !self.params.contains_key(&key) {
+            let ps = ParamSet::load(self.registry.dir(), model, seq)?;
+            self.params.insert(key.clone(), ps);
+        }
+        Ok(&self.params[&key])
+    }
+
+    /// Execute variant `tag` on `tokens` (padded/truncated to the bucket).
+    /// Returns the hidden-state output row-major. GPT artifacts only.
+    pub fn run(&mut self, tag: &str, tokens: &[i32]) -> Result<Vec<f32>> {
+        let meta = self
+            .registry
+            .get(tag)
+            .with_context(|| format!("unknown artifact '{tag}'"))?
+            .clone();
+        let seq = meta.seq;
+        let mut toks = tokens.to_vec();
+        toks.resize(seq, 0); // pad with token 0 / truncate to bucket
+        let tok_lit = xla::Literal::vec1(&toks).reshape(&[seq as i64])?;
+        self.run_with_input(&meta, tok_lit)
+    }
+
+    /// Execute a ViT-style variant on flat f32 input (padded to the
+    /// bucket's `[seq, patch_dim]` shape).
+    pub fn run_f32(&mut self, tag: &str, data: &[f32], patch_dim: usize) -> Result<Vec<f32>> {
+        let meta = self
+            .registry
+            .get(tag)
+            .with_context(|| format!("unknown artifact '{tag}'"))?
+            .clone();
+        let want = meta.seq * patch_dim;
+        let mut buf = data.to_vec();
+        buf.resize(want, 0.0);
+        let lit = xla::Literal::vec1(&buf).reshape(&[meta.seq as i64, patch_dim as i64])?;
+        self.run_with_input(&meta, lit)
+    }
+
+    fn run_with_input(&mut self, meta: &ArtifactMeta, input: xla::Literal) -> Result<Vec<f32>> {
+        // make sure params for the bucket are loaded before borrowing exe
+        self.params_for(&meta.model, meta.seq)?;
+        self.load(&meta.tag)?;
+        let params = &self.params[&(meta.model.clone(), meta.seq)];
+        let model = &self.loaded[&meta.tag];
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + params.literals.len());
+        args.push(&input);
+        for l in &params.literals {
+            args.push(l);
+        }
+        let result = model.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> String {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    }
+
+    fn have_artifacts() -> bool {
+        std::path::Path::new(&format!("{}/gpt_dense_s64.hlo.txt", artifacts_dir())).exists()
+    }
+
+    #[test]
+    fn registry_scans_artifacts() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let reg = Registry::scan(&artifacts_dir()).unwrap();
+        assert!(reg.len() >= 4, "found {}", reg.len());
+        let dense = reg.get("gpt_dense_s64").unwrap();
+        assert_eq!(dense.seq, 64);
+        assert_eq!(dense.mode, "dense");
+        assert!(dense.est_activation_bytes > 0);
+        // chunked variants must advertise lower activation than dense
+        let chunked = reg.get("gpt_chunked_s64_n8").unwrap();
+        assert!(chunked.est_activation_bytes < dense.est_activation_bytes);
+    }
+
+    #[test]
+    fn dense_and_chunked_agree_through_pjrt() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+        let tokens: Vec<i32> = (0..64).map(|i| (i * 7) % 512).collect();
+        let dense = rt.run("gpt_dense_s64", &tokens).unwrap();
+        let chunked = rt.run("gpt_chunked_s64_n4", &tokens).unwrap();
+        let fused = rt.run("gpt_fused_s64", &tokens).unwrap();
+        assert_eq!(dense.len(), 64 * 128);
+        let d_max = dense
+            .iter()
+            .zip(&chunked)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(d_max < 1e-3, "dense vs chunked diff {d_max}");
+        let f_max = dense
+            .iter()
+            .zip(&fused)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(f_max < 1e-3, "dense vs fused diff {f_max}");
+    }
+
+    #[test]
+    fn vit_variants_agree_through_pjrt() {
+        if !have_artifacts()
+            || !std::path::Path::new(&format!("{}/vit_dense_s64.meta", artifacts_dir())).exists()
+        {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+        let patch_dim = 192;
+        let data: Vec<f32> = (0..64 * patch_dim).map(|i| ((i % 97) as f32) / 97.0).collect();
+        let dense = rt.run_f32("vit_dense_s64", &data, patch_dim).unwrap();
+        let fused = rt.run_f32("vit_fused_s64", &data, patch_dim).unwrap();
+        let chunked = rt.run_f32("vit_chunked_s64_n4", &data, patch_dim).unwrap();
+        assert_eq!(dense.len(), 64); // class logits
+        let d1 = dense.iter().zip(&fused).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        let d2 = dense.iter().zip(&chunked).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(d1 < 1e-3, "dense vs fused {d1}");
+        assert!(d2 < 1e-3, "dense vs chunked {d2}");
+    }
+
+    #[test]
+    fn short_request_padded_into_bucket() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+        let out = rt.run("gpt_dense_s64", &[1, 2, 3]).unwrap();
+        assert_eq!(out.len(), 64 * 128);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+}

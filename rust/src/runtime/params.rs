@@ -1,0 +1,97 @@
+//! Parameter blobs: raw little-endian f32 exported by `aot.py`, turned
+//! into PJRT literals in the positional (name-sorted) ABI order.
+
+use anyhow::{anyhow, Context, Result};
+
+/// One seq bucket's parameters as ready-to-pass literals.
+pub struct ParamSet {
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    pub literals: Vec<xla::Literal>,
+}
+
+impl ParamSet {
+    /// Load `{model}_params_s{seq}.bin` + `.manifest` from `dir`.
+    pub fn load(dir: &str, model: &str, seq: usize) -> Result<ParamSet> {
+        let manifest_path = format!("{dir}/{model}_params_s{seq}.manifest");
+        let bin_path = format!("{dir}/{model}_params_s{seq}.bin");
+        let manifest = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path}"))?;
+        let blob = std::fs::read(&bin_path).with_context(|| format!("reading {bin_path}"))?;
+
+        let mut names = Vec::new();
+        let mut shapes = Vec::new();
+        let mut literals = Vec::new();
+        let mut offset = 0usize;
+        for line in manifest.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (name, dims) = line
+                .split_once(':')
+                .ok_or_else(|| anyhow!("bad manifest line '{line}'"))?;
+            let shape: Vec<usize> = dims
+                .split('x')
+                .map(|d| d.parse::<usize>())
+                .collect::<Result<Vec<_>, _>>()?;
+            let count: usize = shape.iter().product();
+            let bytes = count * 4;
+            if offset + bytes > blob.len() {
+                return Err(anyhow!("param blob too short at '{name}'"));
+            }
+            let mut values = Vec::with_capacity(count);
+            for i in 0..count {
+                let b = &blob[offset + i * 4..offset + i * 4 + 4];
+                values.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            offset += bytes;
+            let dims_i64: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&values).reshape(&dims_i64)?;
+            names.push(name.to_string());
+            shapes.push(shape);
+            literals.push(lit);
+        }
+        if offset != blob.len() {
+            return Err(anyhow!(
+                "param blob has {} trailing bytes",
+                blob.len() - offset
+            ));
+        }
+        Ok(ParamSet {
+            names,
+            shapes,
+            literals,
+        })
+    }
+
+    /// Total parameter bytes (the paper's "parameter memory").
+    pub fn total_bytes(&self) -> usize {
+        self.shapes
+            .iter()
+            .map(|s| s.iter().product::<usize>() * 4)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_exported_params_if_present() {
+        let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
+        if !std::path::Path::new(&format!("{dir}/gpt_params_s64.manifest")).exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let ps = ParamSet::load(&dir, "gpt", 64).unwrap();
+        assert!(ps.names.len() > 10);
+        assert_eq!(ps.names.len(), ps.literals.len());
+        // names must be sorted (the positional ABI of positional_forward)
+        let mut sorted = ps.names.clone();
+        sorted.sort();
+        assert_eq!(ps.names, sorted);
+        assert!(ps.total_bytes() > 100_000);
+    }
+}

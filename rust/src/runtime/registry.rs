@@ -1,0 +1,172 @@
+//! Artifact registry: scan `artifacts/` and parse `.meta` sidecars.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+
+/// Metadata of one AOT artifact (from its `.meta` key=value sidecar).
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub tag: String,
+    pub hlo_path: String,
+    pub model: String,
+    pub mode: String, // dense | fused | chunked
+    pub seq: usize,
+    pub d_model: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub vocab: usize,
+    pub n_chunks: usize,
+    pub num_params: usize,
+    pub param_names: Vec<String>,
+    /// JAX-side analytic estimate of the variant's peak activation bytes;
+    /// the coordinator's admission control treats this as the per-request
+    /// memory cost.
+    pub est_activation_bytes: usize,
+    pub output_shape: Vec<usize>,
+}
+
+/// All artifacts found in a directory.
+#[derive(Debug, Default)]
+pub struct Registry {
+    dir: String,
+    by_tag: HashMap<String, ArtifactMeta>,
+}
+
+impl Registry {
+    /// Scan `dir` for `*.meta` files.
+    pub fn scan(dir: &str) -> Result<Registry> {
+        let mut by_tag = HashMap::new();
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("artifact dir {dir} (run `make artifacts`)"))?;
+        for entry in entries {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("meta") {
+                continue;
+            }
+            let tag = path
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .ok_or_else(|| anyhow!("bad meta filename"))?
+                .to_string();
+            let meta = parse_meta(&tag, dir, &std::fs::read_to_string(&path)?)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            by_tag.insert(tag, meta);
+        }
+        Ok(Registry {
+            dir: dir.to_string(),
+            by_tag,
+        })
+    }
+
+    pub fn dir(&self) -> &str {
+        &self.dir
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_tag.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_tag.is_empty()
+    }
+
+    pub fn get(&self, tag: &str) -> Option<&ArtifactMeta> {
+        self.by_tag.get(tag)
+    }
+
+    /// All metas, sorted by tag for deterministic iteration.
+    pub fn all(&self) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<_> = self.by_tag.values().collect();
+        v.sort_by(|a, b| a.tag.cmp(&b.tag));
+        v
+    }
+
+    /// Sequence buckets available for a model, ascending.
+    pub fn buckets(&self, model: &str) -> Vec<usize> {
+        let mut seqs: Vec<usize> = self
+            .by_tag
+            .values()
+            .filter(|m| m.model == model)
+            .map(|m| m.seq)
+            .collect();
+        seqs.sort_unstable();
+        seqs.dedup();
+        seqs
+    }
+
+    /// Variants of a model at a bucket, sorted by estimated activation
+    /// descending (dense first) — the coordinator walks this list until
+    /// one fits the remaining memory budget.
+    pub fn variants(&self, model: &str, seq: usize) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<_> = self
+            .by_tag
+            .values()
+            .filter(|m| m.model == model && m.seq == seq)
+            .collect();
+        v.sort_by(|a, b| {
+            b.est_activation_bytes
+                .cmp(&a.est_activation_bytes)
+                .then(a.tag.cmp(&b.tag))
+        });
+        v
+    }
+}
+
+fn parse_meta(tag: &str, dir: &str, text: &str) -> Result<ArtifactMeta> {
+    let mut kv = HashMap::new();
+    for line in text.lines() {
+        if let Some((k, v)) = line.split_once('=') {
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+    }
+    let get = |k: &str| -> Result<&String> {
+        kv.get(k).ok_or_else(|| anyhow!("missing key '{k}'"))
+    };
+    let get_usize = |k: &str| -> Result<usize> {
+        get(k)?.parse::<usize>().map_err(|e| anyhow!("{k}: {e}"))
+    };
+    Ok(ArtifactMeta {
+        tag: tag.to_string(),
+        hlo_path: format!("{dir}/{tag}.hlo.txt"),
+        model: get("model")?.clone(),
+        mode: get("mode")?.clone(),
+        seq: get_usize("seq")?,
+        d_model: get_usize("d_model")?,
+        heads: get_usize("heads")?,
+        layers: get_usize("layers")?,
+        vocab: get_usize("vocab")?,
+        n_chunks: get_usize("n_chunks")?,
+        num_params: get_usize("num_params")?,
+        param_names: get("param_names")?
+            .split(',')
+            .map(|s| s.to_string())
+            .collect(),
+        est_activation_bytes: get_usize("est_activation_bytes")?,
+        output_shape: get("output_shape")?
+            .split('x')
+            .map(|s| s.parse::<usize>())
+            .collect::<Result<Vec<_>, _>>()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_meta_roundtrip() {
+        let text = "model=gpt\nmode=dense\nseq=64\nd_model=128\nheads=4\nlayers=2\n\
+                    vocab=512\nff_mult=4\nn_chunks=1\nnum_params=28\n\
+                    param_names=a,b,c\nest_activation_bytes=123456\noutput_shape=64x128\n";
+        let m = parse_meta("gpt_dense_s64", "/tmp/a", text).unwrap();
+        assert_eq!(m.seq, 64);
+        assert_eq!(m.param_names.len(), 3);
+        assert_eq!(m.output_shape, vec![64, 128]);
+        assert_eq!(m.hlo_path, "/tmp/a/gpt_dense_s64.hlo.txt");
+    }
+
+    #[test]
+    fn parse_meta_missing_key_errors() {
+        assert!(parse_meta("t", "/tmp", "model=gpt\n").is_err());
+    }
+}

@@ -1,0 +1,223 @@
+//! Instrumented allocation tracking.
+//!
+//! Every tensor buffer is registered with a [`MemoryTracker`]. The tracker
+//! maintains the number of live activation bytes and its high-water mark,
+//! which is the quantity AutoChunk optimizes (the CUDA-allocator peak on the
+//! paper's A100 testbed; see DESIGN.md §5 for the substitution argument).
+//!
+//! Buffers deregister on `Drop`, so peak tracking falls out of normal Rust
+//! ownership: the executor drops a value when its last consumer has run, the
+//! buffer frees, and `current` decreases.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Shared counters behind a [`MemoryTracker`] handle.
+#[derive(Debug, Default)]
+struct TrackerInner {
+    /// Live tracked bytes right now.
+    current: AtomicUsize,
+    /// High-water mark of `current` since the last [`MemoryTracker::reset_peak`].
+    peak: AtomicUsize,
+    /// Total number of allocations ever registered (profiling signal).
+    allocs: AtomicUsize,
+    /// Total bytes ever allocated (profiling signal).
+    total_allocated: AtomicUsize,
+}
+
+/// Cloneable handle on a set of live/peak byte counters.
+///
+/// A tracker is *optional* per buffer: weights and test fixtures are usually
+/// allocated against `MemoryTracker::untracked()` style `None`, while the
+/// executor allocates every intermediate against the run's tracker so that
+/// the peak reflects activation memory only — mirroring the paper's
+/// definition (Eq. 1: inputs + outputs + intermediates, not parameters).
+#[derive(Clone, Debug, Default)]
+pub struct MemoryTracker {
+    inner: Arc<TrackerInner>,
+}
+
+impl MemoryTracker {
+    /// New tracker with zeroed counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Live tracked bytes.
+    pub fn current(&self) -> usize {
+        self.inner.current.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of live bytes since construction or the last reset.
+    pub fn peak(&self) -> usize {
+        self.inner.peak.load(Ordering::Relaxed)
+    }
+
+    /// Number of allocations registered.
+    pub fn alloc_count(&self) -> usize {
+        self.inner.allocs.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes ever allocated (cumulative, never decremented).
+    pub fn total_allocated(&self) -> usize {
+        self.inner.total_allocated.load(Ordering::Relaxed)
+    }
+
+    /// Reset the peak to the current live level (not to zero: anything still
+    /// alive is still occupying memory).
+    pub fn reset_peak(&self) {
+        let cur = self.current();
+        self.inner.peak.store(cur, Ordering::Relaxed);
+    }
+
+    pub(crate) fn on_alloc(&self, bytes: usize) {
+        let prev = self.inner.current.fetch_add(bytes, Ordering::Relaxed);
+        let now = prev + bytes;
+        self.inner.allocs.fetch_add(1, Ordering::Relaxed);
+        self.inner.total_allocated.fetch_add(bytes, Ordering::Relaxed);
+        // Racy max update is fine: worst case we retry.
+        let mut peak = self.inner.peak.load(Ordering::Relaxed);
+        while now > peak {
+            match self.inner.peak.compare_exchange_weak(
+                peak,
+                now,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(p) => peak = p,
+            }
+        }
+    }
+
+    pub(crate) fn on_free(&self, bytes: usize) {
+        self.inner.current.fetch_sub(bytes, Ordering::Relaxed);
+    }
+}
+
+/// Raw storage for tensor elements.
+///
+/// Compute is f32 (plus i32 for token ids / gather indices). Other logical
+/// dtypes scale byte accounting via [`crate::tensor::DType::size_of`].
+#[derive(Debug)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Storage {
+    pub fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.len() * 4
+    }
+}
+
+/// A tracked, reference-counted buffer. Dropping the last reference
+/// deregisters the bytes from the tracker.
+#[derive(Debug)]
+pub struct Buffer {
+    pub(crate) storage: Storage,
+    tracker: Option<MemoryTracker>,
+    bytes: usize,
+}
+
+impl Buffer {
+    /// Allocate a buffer, registering `storage.byte_len()` with `tracker`.
+    pub fn new(storage: Storage, tracker: Option<MemoryTracker>) -> Arc<Self> {
+        let bytes = storage.byte_len();
+        if let Some(t) = &tracker {
+            t.on_alloc(bytes);
+        }
+        Arc::new(Buffer {
+            storage,
+            tracker,
+            bytes,
+        })
+    }
+
+    pub fn f32(&self) -> &[f32] {
+        match &self.storage {
+            Storage::F32(v) => v,
+            Storage::I32(_) => panic!("buffer holds i32, expected f32"),
+        }
+    }
+
+    pub fn i32(&self) -> &[i32] {
+        match &self.storage {
+            Storage::I32(v) => v,
+            Storage::F32(_) => panic!("buffer holds f32, expected i32"),
+        }
+    }
+}
+
+impl Drop for Buffer {
+    fn drop(&mut self) {
+        if let Some(t) = &self.tracker {
+            t.on_free(self.bytes);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracker_counts_alloc_and_free() {
+        let t = MemoryTracker::new();
+        let b1 = Buffer::new(Storage::F32(vec![0.0; 256]), Some(t.clone()));
+        assert_eq!(t.current(), 1024);
+        assert_eq!(t.peak(), 1024);
+        let b2 = Buffer::new(Storage::F32(vec![0.0; 128]), Some(t.clone()));
+        assert_eq!(t.current(), 1024 + 512);
+        assert_eq!(t.peak(), 1536);
+        drop(b1);
+        assert_eq!(t.current(), 512);
+        assert_eq!(t.peak(), 1536, "peak is a high-water mark");
+        drop(b2);
+        assert_eq!(t.current(), 0);
+        assert_eq!(t.alloc_count(), 2);
+        assert_eq!(t.total_allocated(), 1536);
+    }
+
+    #[test]
+    fn reset_peak_resets_to_current() {
+        let t = MemoryTracker::new();
+        let b1 = Buffer::new(Storage::F32(vec![0.0; 100]), Some(t.clone()));
+        {
+            let _b2 = Buffer::new(Storage::F32(vec![0.0; 1000]), Some(t.clone()));
+        }
+        assert_eq!(t.peak(), 4400);
+        t.reset_peak();
+        assert_eq!(t.peak(), 400);
+        drop(b1);
+    }
+
+    #[test]
+    fn untracked_buffer_does_not_count() {
+        let t = MemoryTracker::new();
+        let _b = Buffer::new(Storage::F32(vec![0.0; 64]), None);
+        assert_eq!(t.current(), 0);
+    }
+
+    #[test]
+    fn shared_buffer_freed_once() {
+        let t = MemoryTracker::new();
+        let b = Buffer::new(Storage::F32(vec![0.0; 10]), Some(t.clone()));
+        let b2 = Arc::clone(&b);
+        drop(b);
+        assert_eq!(t.current(), 40, "still one live reference");
+        drop(b2);
+        assert_eq!(t.current(), 0);
+    }
+}

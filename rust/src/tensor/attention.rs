@@ -1,0 +1,189 @@
+//! Fused memory-efficient attention (Rabe & Staats 2022).
+//!
+//! `softmax(q·kᵀ·scale)·v` computed by streaming over key/value blocks with
+//! a running max and denominator, so the `[s_q, s_kv]` score matrix is
+//! never materialized — peak workspace is `O(s_q·(d + B))` instead of
+//! `O(s_q·s_kv)`. This is the "fused attention kernel" baseline of the
+//! paper's Figure 6 (and the CPU twin of the L1 Pallas kernel in
+//! `python/compile/kernels/attention.py`).
+
+use super::{broadcast_shapes, MemoryTracker, Tensor};
+
+/// Key/value block length for the streaming pass.
+pub const KV_BLOCK: usize = 64;
+
+/// Batched fused attention. `q: [..b, sq, d]`, `k,v: [..b, skv, d]`.
+pub fn fused_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    scale: f32,
+    tracker: Option<MemoryTracker>,
+) -> Tensor {
+    assert!(q.rank() >= 2);
+    let rank = q.rank();
+    let (sq, d) = (q.shape()[rank - 2], q.shape()[rank - 1]);
+    let skv = k.shape()[k.rank() - 2];
+    assert_eq!(k.shape()[k.rank() - 1], d, "k head dim");
+    assert_eq!(v.shape()[v.rank() - 2], skv, "v rows");
+    let dv = v.shape()[v.rank() - 1];
+
+    let batch_shape = broadcast_shapes(
+        &broadcast_shapes(&q.shape()[..rank - 2], &k.shape()[..k.rank() - 2]),
+        &v.shape()[..v.rank() - 2],
+    );
+    let batch: usize = batch_shape.iter().product::<usize>().max(1);
+
+    let mut qs = batch_shape.clone();
+    qs.extend_from_slice(&[sq, d]);
+    let mut ks = batch_shape.clone();
+    ks.extend_from_slice(&[skv, d]);
+    let mut vs = batch_shape.clone();
+    vs.extend_from_slice(&[skv, dv]);
+    let qc = q.broadcast_to(&qs).to_contiguous(tracker.clone());
+    let kc = k.broadcast_to(&ks).to_contiguous(tracker.clone());
+    let vc = v.broadcast_to(&vs).to_contiguous(tracker.clone());
+    let qv = qc.f32_contiguous();
+    let kv = kc.f32_contiguous();
+    let vv = vc.f32_contiguous();
+
+    let mut out = vec![0.0f32; batch * sq * dv];
+    // Running stats per batch element (reused across batches).
+    let mut m = vec![f32::NEG_INFINITY; sq];
+    let mut l = vec![0.0f32; sq];
+    let mut scores = vec![0.0f32; sq * KV_BLOCK];
+
+    for bi in 0..batch {
+        let qm = &qv[bi * sq * d..(bi + 1) * sq * d];
+        let km = &kv[bi * skv * d..(bi + 1) * skv * d];
+        let vm = &vv[bi * skv * dv..(bi + 1) * skv * dv];
+        let om = &mut out[bi * sq * dv..(bi + 1) * sq * dv];
+        m.iter_mut().for_each(|x| *x = f32::NEG_INFINITY);
+        l.iter_mut().for_each(|x| *x = 0.0);
+
+        let mut blk = 0usize;
+        while blk < skv {
+            let bk = KV_BLOCK.min(skv - blk);
+            // scores = q @ k_blk^T * scale
+            for i in 0..sq {
+                let qr = &qm[i * d..(i + 1) * d];
+                for j in 0..bk {
+                    let kr = &km[(blk + j) * d..(blk + j + 1) * d];
+                    let mut acc = 0.0f32;
+                    for p in 0..d {
+                        acc += qr[p] * kr[p];
+                    }
+                    scores[i * bk + j] = acc * scale;
+                }
+            }
+            // online softmax update
+            for i in 0..sq {
+                let row = &scores[i * bk..i * bk + bk];
+                let blk_max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let new_m = m[i].max(blk_max);
+                let correction = if m[i].is_finite() { (m[i] - new_m).exp() } else { 0.0 };
+                // rescale accumulated output and denominator
+                if correction != 1.0 {
+                    for p in 0..dv {
+                        om[i * dv + p] *= correction;
+                    }
+                    l[i] *= correction;
+                }
+                for j in 0..bk {
+                    let e = (row[j] - new_m).exp();
+                    l[i] += e;
+                    let vr = &vm[(blk + j) * dv..(blk + j + 1) * dv];
+                    for p in 0..dv {
+                        om[i * dv + p] += e * vr[p];
+                    }
+                }
+                m[i] = new_m;
+            }
+            blk += bk;
+        }
+        // normalize
+        for i in 0..sq {
+            let inv = 1.0 / l[i];
+            for p in 0..dv {
+                om[i * dv + p] *= inv;
+            }
+        }
+    }
+
+    let mut out_shape = batch_shape;
+    out_shape.extend_from_slice(&[sq, dv]);
+    Tensor::from_f32(out, &out_shape, tracker)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul::matmul;
+    use crate::tensor::reduce::softmax;
+
+    /// Dense reference: softmax(q k^T scale) v.
+    fn dense_attention(q: &Tensor, k: &Tensor, v: &Tensor, scale: f32) -> Tensor {
+        let rank = k.rank();
+        let mut perm: Vec<usize> = (0..rank).collect();
+        perm.swap(rank - 1, rank - 2);
+        let kt = k.permute(&perm);
+        let scores = matmul(q, &kt, None);
+        let scaled = crate::tensor::ops::binary_scalar(
+            crate::tensor::ops::BinaryOp::Mul,
+            &scores,
+            scale,
+            None,
+        );
+        let probs = softmax(&scaled, scaled.rank() - 1, None);
+        matmul(&probs, v, None)
+    }
+
+    #[test]
+    fn matches_dense_reference_2d() {
+        for &(sq, skv, d) in &[(16, 16, 8), (33, 100, 4), (8, 200, 16)] {
+            let q = Tensor::rand(&[sq, d], 1.0, 1, None);
+            let k = Tensor::rand(&[skv, d], 1.0, 2, None);
+            let v = Tensor::rand(&[skv, d], 1.0, 3, None);
+            let got = fused_attention(&q, &k, &v, 0.3, None);
+            let want = dense_attention(&q, &k, &v, 0.3);
+            assert!(
+                got.max_abs_diff(&want) < 1e-4,
+                "({sq},{skv},{d}): {}",
+                got.max_abs_diff(&want)
+            );
+        }
+    }
+
+    #[test]
+    fn matches_dense_reference_batched() {
+        let q = Tensor::rand(&[4, 32, 8], 1.0, 5, None);
+        let k = Tensor::rand(&[4, 96, 8], 1.0, 6, None);
+        let v = Tensor::rand(&[4, 96, 8], 1.0, 7, None);
+        let got = fused_attention(&q, &k, &v, 0.35, None);
+        let want = dense_attention(&q, &k, &v, 0.35);
+        assert_eq!(got.shape(), &[4, 32, 8]);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn single_block_path() {
+        // skv < KV_BLOCK exercises the tail-only path
+        let q = Tensor::rand(&[5, 4], 1.0, 8, None);
+        let k = Tensor::rand(&[7, 4], 1.0, 9, None);
+        let v = Tensor::rand(&[7, 4], 1.0, 10, None);
+        let got = fused_attention(&q, &k, &v, 1.0, None);
+        let want = dense_attention(&q, &k, &v, 1.0);
+        assert!(got.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn numerically_stable_large_logits() {
+        let q = Tensor::rand(&[4, 8], 30.0, 11, None);
+        let k = Tensor::rand(&[128, 8], 30.0, 12, None);
+        let v = Tensor::rand(&[128, 8], 1.0, 13, None);
+        let got = fused_attention(&q, &k, &v, 1.0, None);
+        assert!(got.to_vec_f32().iter().all(|x| x.is_finite()));
+        let want = dense_attention(&q, &k, &v, 1.0);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+}

@@ -1,0 +1,184 @@
+//! 2-D convolution (im2col + blocked GEMM) and pooling, NCHW layout.
+//!
+//! Needed by the UNet evaluation model. im2col is the memory-hungry route
+//! on purpose: it reflects how cuDNN-style implicit-GEMM workspace scales
+//! with the spatial extent, which is the activation-memory behaviour the
+//! paper's UNet experiments exercise.
+
+use super::matmul::matmul;
+use super::{MemoryTracker, Tensor};
+
+/// `x: [N, Cin, H, W]`, `w: [Cout, Cin, Kh, Kw]` → `[N, Cout, Ho, Wo]`.
+/// Symmetric zero padding `pad`, stride `stride`.
+pub fn conv2d(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    pad: usize,
+    tracker: Option<MemoryTracker>,
+) -> Tensor {
+    assert_eq!(x.rank(), 4, "conv2d input must be NCHW");
+    assert_eq!(w.rank(), 4, "conv2d weight must be OIHW");
+    let (n, cin, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    let (cout, cin2, kh, kw) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+    assert_eq!(cin, cin2, "conv2d channel mismatch");
+    assert!(stride >= 1);
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (wd + 2 * pad - kw) / stride + 1;
+
+    let xc = x.to_contiguous(tracker.clone());
+    let xv = xc.f32_contiguous();
+
+    // im2col: [N*Ho*Wo, Cin*Kh*Kw] — the workspace that dominates memory.
+    let cols_rows = n * ho * wo;
+    let cols_width = cin * kh * kw;
+    let mut cols = vec![0.0f32; cols_rows * cols_width];
+    for ni in 0..n {
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let row = ((ni * ho + oy) * wo + ox) * cols_width;
+                let mut col_ix = 0usize;
+                for ci in 0..cin {
+                    let plane = (ni * cin + ci) * h * wd;
+                    for ky in 0..kh {
+                        let iy = oy as isize * stride as isize + ky as isize - pad as isize;
+                        for kx in 0..kw {
+                            let ix = ox as isize * stride as isize + kx as isize - pad as isize;
+                            cols[row + col_ix] = if iy >= 0
+                                && iy < h as isize
+                                && ix >= 0
+                                && ix < wd as isize
+                            {
+                                xv[plane + iy as usize * wd + ix as usize]
+                            } else {
+                                0.0
+                            };
+                            col_ix += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let cols_t = Tensor::from_f32(cols, &[cols_rows, cols_width], tracker.clone());
+
+    // weights as [Cout, Cin*Kh*Kw]; out = cols @ w^T → [N*Ho*Wo, Cout]
+    let wt = w
+        .reshape(&[cout, cols_width], tracker.clone())
+        .permute(&[1, 0]);
+    let out = matmul(&cols_t, &wt, tracker.clone()); // [rows, Cout]
+
+    // [N, Ho, Wo, Cout] → [N, Cout, Ho, Wo]
+    out.reshape(&[n, ho, wo, cout], tracker.clone())
+        .permute(&[0, 3, 1, 2])
+        .to_contiguous(tracker)
+}
+
+/// 2×2 average pool, stride 2 (UNet downsampling).
+pub fn avgpool2x_nchw(x: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+    assert_eq!(x.rank(), 4);
+    let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+    assert!(h % 2 == 0 && w % 2 == 0, "avgpool2x needs even spatial dims");
+    let (oh, ow) = (h / 2, w / 2);
+    let xc = x.to_contiguous(tracker.clone());
+    let xv = xc.f32_contiguous();
+    let mut out = vec![0.0f32; n * c * oh * ow];
+    for ni in 0..n {
+        for ci in 0..c {
+            let sbase = (ni * c + ci) * h * w;
+            let dbase = (ni * c + ci) * oh * ow;
+            for y in 0..oh {
+                for x2 in 0..ow {
+                    let s = sbase + 2 * y * w + 2 * x2;
+                    out[dbase + y * ow + x2] =
+                        0.25 * (xv[s] + xv[s + 1] + xv[s + w] + xv[s + w + 1]);
+                }
+            }
+        }
+    }
+    Tensor::from_f32(out, &[n, c, oh, ow], tracker)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Direct (quadruple-loop) conv reference.
+    fn conv_ref(
+        x: &Tensor,
+        w: &Tensor,
+        stride: usize,
+        pad: usize,
+    ) -> Vec<f32> {
+        let (n, cin, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+        let (cout, _, kh, kw) = (w.shape()[0], w.shape()[1], w.shape()[2], w.shape()[3]);
+        let ho = (h + 2 * pad - kh) / stride + 1;
+        let wo = (wd + 2 * pad - kw) / stride + 1;
+        let mut out = vec![0.0f32; n * cout * ho * wo];
+        for ni in 0..n {
+            for co in 0..cout {
+                for oy in 0..ho {
+                    for ox in 0..wo {
+                        let mut acc = 0.0;
+                        for ci in 0..cin {
+                            for ky in 0..kh {
+                                for kx in 0..kw {
+                                    let iy = (oy * stride + ky) as isize - pad as isize;
+                                    let ix = (ox * stride + kx) as isize - pad as isize;
+                                    if iy >= 0 && iy < h as isize && ix >= 0 && ix < wd as isize {
+                                        acc += x.at(&[ni, ci, iy as usize, ix as usize])
+                                            * w.at(&[co, ci, ky, kx]);
+                                    }
+                                }
+                            }
+                        }
+                        out[((ni * cout + co) * ho + oy) * wo + ox] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn identity_kernel() {
+        let x = Tensor::rand(&[1, 1, 4, 4], 1.0, 21, None);
+        let w = Tensor::from_f32(vec![1.0], &[1, 1, 1, 1], None);
+        let y = conv2d(&x, &w, 1, 0, None);
+        assert_eq!(y.shape(), x.shape());
+        assert!(y.max_abs_diff(&x) < 1e-6);
+    }
+
+    #[test]
+    fn conv_matches_direct_reference() {
+        for &(cin, cout, k, stride, pad) in
+            &[(3, 8, 3, 1, 1), (4, 4, 3, 2, 1), (2, 5, 1, 1, 0), (1, 2, 5, 1, 2)]
+        {
+            let x = Tensor::rand(&[2, cin, 8, 8], 1.0, 31, None);
+            let w = Tensor::rand(&[cout, cin, k, k], 0.5, 32, None);
+            let got = conv2d(&x, &w, stride, pad, None);
+            let want = conv_ref(&x, &w, stride, pad);
+            let gv = got.to_vec_f32();
+            assert_eq!(gv.len(), want.len());
+            for (g, wv) in gv.iter().zip(&want) {
+                assert!((g - wv).abs() < 1e-3, "conv mismatch {g} vs {wv}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_shape_math() {
+        let x = Tensor::zeros(&[1, 3, 16, 16], None);
+        let w = Tensor::zeros(&[8, 3, 3, 3], None);
+        assert_eq!(conv2d(&x, &w, 1, 1, None).shape(), &[1, 8, 16, 16]);
+        assert_eq!(conv2d(&x, &w, 2, 1, None).shape(), &[1, 8, 8, 8]);
+    }
+
+    #[test]
+    fn avgpool_halves() {
+        let x = Tensor::from_f32(vec![1., 2., 3., 4.], &[1, 1, 2, 2], None);
+        let p = avgpool2x_nchw(&x, None);
+        assert_eq!(p.shape(), &[1, 1, 1, 1]);
+        assert!((p.scalar() - 2.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,247 @@
+//! Layout ops: concat, pad, gather, split helpers.
+//!
+//! `concat` is the runtime cost center of chunked execution (each chunk's
+//! output is copied into the joined result). Its cost depends on the chunk
+//! axis: concatenating along an outer axis is a few large memcpys, along an
+//! inner axis many small ones — the stride term of Eq. 9 in the flesh.
+
+use super::{contiguous_strides, DType, MemoryTracker, Tensor};
+
+/// Concatenate tensors along `axis`. All shapes must match except `axis`.
+pub fn concat(parts: &[Tensor], axis: usize, tracker: Option<MemoryTracker>) -> Tensor {
+    assert!(!parts.is_empty(), "concat of nothing");
+    let rank = parts[0].rank();
+    assert!(axis < rank);
+    let mut out_shape = parts[0].shape().to_vec();
+    let mut total = 0usize;
+    for p in parts {
+        assert_eq!(p.rank(), rank, "concat rank mismatch");
+        for d in 0..rank {
+            if d != axis {
+                assert_eq!(p.shape()[d], out_shape[d], "concat shape mismatch");
+            }
+        }
+        total += p.shape()[axis];
+    }
+    out_shape[axis] = total;
+
+    let n = super::numel(&out_shape);
+    let mut out = vec![0.0f32; n];
+
+    // Copy each part row-block by row-block. `outer` indexes everything
+    // before `axis`; for each outer index, each part contributes a
+    // contiguous run of part_axis_len * inner elements.
+    let inner: usize = out_shape[axis + 1..].iter().product();
+    let outer: usize = out_shape[..axis].iter().product();
+    let out_slab = out_shape[axis] * inner;
+    let mut axis_off = 0usize;
+    for p in parts {
+        let pc = p.to_contiguous(tracker.clone());
+        let src = pc.f32_contiguous();
+        let p_axis = p.shape()[axis];
+        let run = p_axis * inner;
+        for o in 0..outer.max(1) {
+            let dst_base = o * out_slab + axis_off * inner;
+            out[dst_base..dst_base + run].copy_from_slice(&src[o * run..(o + 1) * run]);
+        }
+        axis_off += p_axis;
+    }
+    Tensor::from_f32(out, &out_shape, tracker)
+}
+
+/// Zero-pad `a` with `(lo, hi)` per dimension.
+pub fn pad(a: &Tensor, padding: &[(usize, usize)], tracker: Option<MemoryTracker>) -> Tensor {
+    assert_eq!(padding.len(), a.rank());
+    let out_shape: Vec<usize> = a
+        .shape()
+        .iter()
+        .zip(padding)
+        .map(|(&d, &(lo, hi))| d + lo + hi)
+        .collect();
+    let out_strides = contiguous_strides(&out_shape);
+    let mut out = vec![0.0f32; super::numel(&out_shape)];
+    let ac = a.to_contiguous(tracker.clone());
+    let src = ac.f32_contiguous();
+
+    // Walk source indices; compute destination offset with the pad shift.
+    let a_shape = a.shape().to_vec();
+    let rank = a_shape.len();
+    let mut idx = vec![0usize; rank];
+    for &v in src {
+        let mut off = 0isize;
+        for i in 0..rank {
+            off += (idx[i] + padding[i].0) as isize * out_strides[i];
+        }
+        out[off as usize] = v;
+        for i in (0..rank).rev() {
+            idx[i] += 1;
+            if idx[i] < a_shape[i] {
+                break;
+            }
+            idx[i] = 0;
+        }
+    }
+    Tensor::from_f32(out, &out_shape, tracker)
+}
+
+/// Embedding lookup: `table: [V, D]`, `ids: i32 [..]` → `[.., D]`.
+pub fn gather_rows(table: &Tensor, ids: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+    assert_eq!(table.rank(), 2, "gather table must be [V, D]");
+    assert_eq!(ids.dtype(), DType::I32, "gather ids must be i32");
+    let v = table.shape()[0];
+    let d = table.shape()[1];
+    let tc = table.to_contiguous(tracker.clone());
+    let tv = tc.f32_contiguous();
+    let flat_ids = ids.to_vec_i32();
+    let mut out = Vec::with_capacity(flat_ids.len() * d);
+    for &id in &flat_ids {
+        let id = id as usize;
+        assert!(id < v, "gather id {id} out of range {v}");
+        out.extend_from_slice(&tv[id * d..(id + 1) * d]);
+    }
+    let mut out_shape = ids.shape().to_vec();
+    out_shape.push(d);
+    Tensor::from_f32(out, &out_shape, tracker)
+}
+
+/// Split into `n` nearly-equal parts along `axis` (last part may be short).
+/// Returns zero-copy views.
+pub fn split(a: &Tensor, axis: usize, n: usize) -> Vec<Tensor> {
+    assert!(n >= 1 && axis < a.rank());
+    let len = a.shape()[axis];
+    let step = len.div_ceil(n);
+    let mut parts = Vec::new();
+    let mut start = 0;
+    while start < len {
+        let take = step.min(len - start);
+        parts.push(a.slice_axis(axis, start, take));
+        start += take;
+    }
+    parts
+}
+
+/// Nearest-neighbor 2× spatial upsample for NCHW tensors (UNet decoder).
+pub fn upsample2x_nchw(a: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+    assert_eq!(a.rank(), 4, "upsample expects NCHW");
+    let (n, c, h, w) = (a.shape()[0], a.shape()[1], a.shape()[2], a.shape()[3]);
+    let ac = a.to_contiguous(tracker.clone());
+    let src = ac.f32_contiguous();
+    let mut out = vec![0.0f32; n * c * 4 * h * w];
+    let (oh, ow) = (2 * h, 2 * w);
+    for ni in 0..n {
+        for ci in 0..c {
+            let sbase = (ni * c + ci) * h * w;
+            let dbase = (ni * c + ci) * oh * ow;
+            for y in 0..oh {
+                for x in 0..ow {
+                    out[dbase + y * ow + x] = src[sbase + (y / 2) * w + (x / 2)];
+                }
+            }
+        }
+    }
+    Tensor::from_f32(out, &[n, c, oh, ow], tracker)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(data: &[f32], shape: &[usize]) -> Tensor {
+        Tensor::from_f32(data.to_vec(), shape, None)
+    }
+
+    #[test]
+    fn concat_axis0() {
+        let a = t(&[1., 2.], &[1, 2]);
+        let b = t(&[3., 4., 5., 6.], &[2, 2]);
+        let c = concat(&[a, b], 0, None);
+        assert_eq!(c.shape(), &[3, 2]);
+        assert_eq!(c.to_vec_f32(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn concat_axis1() {
+        let a = t(&[1., 2., 3., 4.], &[2, 2]);
+        let b = t(&[9., 9.], &[2, 1]);
+        let c = concat(&[a, b], 1, None);
+        assert_eq!(c.shape(), &[2, 3]);
+        assert_eq!(c.to_vec_f32(), vec![1., 2., 9., 3., 4., 9.]);
+    }
+
+    #[test]
+    fn concat_middle_axis_3d() {
+        let a = Tensor::iota(&[2, 2, 2], 2, None);
+        let b = Tensor::full(7.0, &[2, 1, 2], None);
+        let c = concat(&[a.clone(), b], 1, None);
+        assert_eq!(c.shape(), &[2, 3, 2]);
+        // first batch: rows of a then row of 7s
+        assert_eq!(
+            c.slice_axis(0, 0, 1).to_vec_f32(),
+            vec![0., 1., 0., 1., 7., 7.]
+        );
+    }
+
+    #[test]
+    fn split_then_concat_roundtrip() {
+        let a = Tensor::rand(&[7, 4], 1.0, 13, None);
+        for n in 1..=7 {
+            let parts = split(&a, 0, n);
+            let joined = concat(&parts, 0, None);
+            assert_eq!(joined.to_vec_f32(), a.to_vec_f32(), "n={n}");
+        }
+        // inner axis: 4 elements into n=3 → ceil(4/3)=2-wide steps → 2 parts
+        let parts = split(&a, 1, 3);
+        assert_eq!(parts.len(), 2);
+        let joined = concat(&parts, 1, None);
+        assert_eq!(joined.to_vec_f32(), a.to_vec_f32());
+    }
+
+    #[test]
+    fn split_uneven() {
+        let a = Tensor::rand(&[10], 1.0, 17, None);
+        let parts = split(&a, 0, 4);
+        let lens: Vec<usize> = parts.iter().map(|p| p.shape()[0]).collect();
+        assert_eq!(lens.iter().sum::<usize>(), 10);
+        assert_eq!(lens, vec![3, 3, 3, 1]);
+    }
+
+    #[test]
+    fn pad_2d() {
+        let a = t(&[1., 2., 3., 4.], &[2, 2]);
+        let p = pad(&a, &[(1, 0), (0, 1)], None);
+        assert_eq!(p.shape(), &[3, 3]);
+        assert_eq!(
+            p.to_vec_f32(),
+            vec![0., 0., 0., 1., 2., 0., 3., 4., 0.]
+        );
+    }
+
+    #[test]
+    fn gather_rows_lookup() {
+        let table = t(&[0., 0., 1., 1., 2., 2.], &[3, 2]);
+        let ids = Tensor::from_i32(vec![2, 0, 1, 1], &[2, 2], None);
+        let g = gather_rows(&table, &ids, None);
+        assert_eq!(g.shape(), &[2, 2, 2]);
+        assert_eq!(g.to_vec_f32(), vec![2., 2., 0., 0., 1., 1., 1., 1.]);
+    }
+
+    #[test]
+    fn upsample_doubles_spatial() {
+        let a = t(&[1., 2., 3., 4.], &[1, 1, 2, 2]);
+        let u = upsample2x_nchw(&a, None);
+        assert_eq!(u.shape(), &[1, 1, 4, 4]);
+        assert_eq!(
+            u.to_vec_f32(),
+            vec![1., 1., 2., 2., 1., 1., 2., 2., 3., 3., 4., 4., 3., 3., 4., 4.]
+        );
+    }
+
+    #[test]
+    fn concat_tracked_memory() {
+        let tr = MemoryTracker::new();
+        let a = Tensor::zeros(&[4, 4], None);
+        let b = Tensor::zeros(&[4, 4], None);
+        let c = concat(&[a, b], 0, Some(tr.clone()));
+        assert_eq!(tr.current(), c.byte_size());
+    }
+}

@@ -1,0 +1,542 @@
+//! CPU tensor substrate with instrumented allocation tracking.
+//!
+//! This module is the execution substrate that stands in for the paper's
+//! A100/CUDA testbed (DESIGN.md §5): every intermediate buffer registers
+//! with a [`MemoryTracker`], so the peak activation memory that AutoChunk
+//! optimizes is *measured*, not estimated. Compute kernels are written so
+//! the physical effects behind the paper's cost model exist here too:
+//!
+//! * blocked matmul whose efficiency drops for small tiles → the
+//!   *computation density* term (Eq. 9);
+//! * stride-aware slice/concat copies → the *dimension stride* term;
+//! * per-op dispatch overhead → the *node count* term (Eq. 8).
+//!
+//! Tensors are cheap-to-clone views (`Arc` buffer + shape/strides/offset).
+//! Transpose and slice are zero-copy; kernels materialize contiguous data
+//! when they need it, paying the stride-dependent copy cost.
+
+mod alloc;
+pub mod attention;
+pub mod conv;
+pub mod layout;
+pub mod matmul;
+pub mod ops;
+pub mod reduce;
+
+pub use alloc::{Buffer, MemoryTracker, Storage};
+
+use std::fmt;
+use std::sync::Arc;
+
+/// Logical element type.
+///
+/// Compute is performed in f32/i32; `size_of` drives the byte accounting
+/// used both by the tracker and the estimation pass.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    /// Bytes per element.
+    pub fn size_of(self) -> usize {
+        4
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DType::F32 => write!(f, "f32"),
+            DType::I32 => write!(f, "i32"),
+        }
+    }
+}
+
+/// Row-major contiguous strides for `shape` (in elements).
+pub fn contiguous_strides(shape: &[usize]) -> Vec<isize> {
+    let mut strides = vec![0isize; shape.len()];
+    let mut acc = 1isize;
+    for (i, &d) in shape.iter().enumerate().rev() {
+        strides[i] = acc;
+        acc *= d as isize;
+    }
+    strides
+}
+
+/// Number of elements in `shape`.
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// An n-dimensional strided view over a reference-counted buffer.
+#[derive(Clone)]
+pub struct Tensor {
+    buf: Arc<Buffer>,
+    shape: Vec<usize>,
+    /// Element strides. May be zero (broadcast) or permuted (transpose).
+    strides: Vec<isize>,
+    offset: usize,
+    dtype: DType,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Tensor({}{:?}, contig={})",
+            self.dtype,
+            self.shape,
+            self.is_contiguous()
+        )
+    }
+}
+
+impl Tensor {
+    // ---------------------------------------------------------------- ctors
+
+    /// Build an f32 tensor from data; `data.len()` must equal `numel(shape)`.
+    pub fn from_f32(data: Vec<f32>, shape: &[usize], tracker: Option<MemoryTracker>) -> Tensor {
+        assert_eq!(data.len(), numel(shape), "data/shape mismatch");
+        let strides = contiguous_strides(shape);
+        Tensor {
+            buf: Buffer::new(Storage::F32(data), tracker),
+            shape: shape.to_vec(),
+            strides,
+            offset: 0,
+            dtype: DType::F32,
+        }
+    }
+
+    /// Build an i32 tensor from data.
+    pub fn from_i32(data: Vec<i32>, shape: &[usize], tracker: Option<MemoryTracker>) -> Tensor {
+        assert_eq!(data.len(), numel(shape), "data/shape mismatch");
+        let strides = contiguous_strides(shape);
+        Tensor {
+            buf: Buffer::new(Storage::I32(data), tracker),
+            shape: shape.to_vec(),
+            strides,
+            offset: 0,
+            dtype: DType::I32,
+        }
+    }
+
+    /// All-zeros f32 tensor.
+    pub fn zeros(shape: &[usize], tracker: Option<MemoryTracker>) -> Tensor {
+        Tensor::from_f32(vec![0.0; numel(shape)], shape, tracker)
+    }
+
+    /// Constant-filled f32 tensor.
+    pub fn full(value: f32, shape: &[usize], tracker: Option<MemoryTracker>) -> Tensor {
+        Tensor::from_f32(vec![value; numel(shape)], shape, tracker)
+    }
+
+    /// `[0, 1, 2, ...]` along `axis`, broadcast over the rest (materialized).
+    pub fn iota(shape: &[usize], axis: usize, tracker: Option<MemoryTracker>) -> Tensor {
+        let n = numel(shape);
+        let strides = contiguous_strides(shape);
+        let mut data = vec![0.0f32; n];
+        for (i, v) in data.iter_mut().enumerate() {
+            let idx = (i as isize / strides[axis]) as usize % shape[axis];
+            *v = idx as f32;
+        }
+        Tensor::from_f32(data, shape, tracker)
+    }
+
+    /// Deterministic pseudo-random uniform values in [-scale, scale]
+    /// (xorshift; used by models/tests — no external rand crate).
+    pub fn rand(shape: &[usize], scale: f32, seed: u64, tracker: Option<MemoryTracker>) -> Tensor {
+        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15).max(1);
+        let n = numel(shape);
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            let u = (state >> 11) as f64 / (1u64 << 53) as f64; // [0,1)
+            data.push(((u * 2.0 - 1.0) as f32) * scale);
+        }
+        Tensor::from_f32(data, shape, tracker)
+    }
+
+    // ------------------------------------------------------------ accessors
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn strides(&self) -> &[isize] {
+        &self.strides
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    /// Bytes this view would occupy if materialized contiguously.
+    pub fn byte_size(&self) -> usize {
+        self.numel() * self.dtype.size_of()
+    }
+
+    /// The underlying shared buffer — used by kernels on the fast path.
+    pub(crate) fn buffer(&self) -> &Arc<Buffer> {
+        &self.buf
+    }
+
+    pub(crate) fn offset(&self) -> usize {
+        self.offset
+    }
+
+    /// True if the view is row-major dense over its buffer region.
+    pub fn is_contiguous(&self) -> bool {
+        self.strides == contiguous_strides(&self.shape)
+    }
+
+    /// True if any dimension is broadcast (stride 0 with extent > 1);
+    /// materializing such a view would *expand* memory.
+    pub fn has_broadcast_stride(&self) -> bool {
+        self.strides
+            .iter()
+            .zip(&self.shape)
+            .any(|(&s, &d)| s == 0 && d > 1)
+    }
+
+    /// Raw f32 slice; only valid for contiguous views.
+    pub fn f32_contiguous(&self) -> &[f32] {
+        assert!(self.is_contiguous(), "tensor not contiguous");
+        &self.buf.f32()[self.offset..self.offset + self.numel()]
+    }
+
+    /// Raw i32 slice; only valid for contiguous views.
+    pub fn i32_contiguous(&self) -> &[i32] {
+        assert!(self.is_contiguous(), "tensor not contiguous");
+        &self.buf.i32()[self.offset..self.offset + self.numel()]
+    }
+
+    /// Element at multi-index (f32 tensors).
+    pub fn at(&self, index: &[usize]) -> f32 {
+        debug_assert_eq!(index.len(), self.rank());
+        let mut off = self.offset as isize;
+        for (i, &ix) in index.iter().enumerate() {
+            debug_assert!(ix < self.shape[i]);
+            off += ix as isize * self.strides[i];
+        }
+        self.buf.f32()[off as usize]
+    }
+
+    /// Element at multi-index (i32 tensors).
+    pub fn at_i32(&self, index: &[usize]) -> i32 {
+        let mut off = self.offset as isize;
+        for (i, &ix) in index.iter().enumerate() {
+            off += ix as isize * self.strides[i];
+        }
+        self.buf.i32()[off as usize]
+    }
+
+    /// Copy out as a flat row-major Vec<f32> (handles any strides).
+    pub fn to_vec_f32(&self) -> Vec<f32> {
+        if self.is_contiguous() {
+            return self.f32_contiguous().to_vec();
+        }
+        let mut out = Vec::with_capacity(self.numel());
+        let src = self.buf.f32();
+        self.for_each_offset(|off| out.push(src[off]));
+        out
+    }
+
+    /// Copy out as a flat row-major Vec<i32>.
+    pub fn to_vec_i32(&self) -> Vec<i32> {
+        if self.is_contiguous() {
+            return self.i32_contiguous().to_vec();
+        }
+        let mut out = Vec::with_capacity(self.numel());
+        let src = self.buf.i32();
+        self.for_each_offset(|off| out.push(src[off]));
+        out
+    }
+
+    /// Visit buffer offsets of every element in row-major logical order.
+    /// The innermost dimension is iterated in a tight loop so the cost of
+    /// strided traversal is proportional to how "broken up" the view is —
+    /// this is the physical basis of the stride term in chunk selection.
+    pub(crate) fn for_each_offset(&self, mut f: impl FnMut(usize)) {
+        if self.rank() == 0 {
+            f(self.offset);
+            return;
+        }
+        let inner_dim = self.rank() - 1;
+        let inner_n = self.shape[inner_dim];
+        let inner_s = self.strides[inner_dim];
+        let outer_count: usize = self.shape[..inner_dim].iter().product();
+        let mut idx = vec![0usize; inner_dim];
+        for _ in 0..outer_count.max(1) {
+            let mut base = self.offset as isize;
+            for (i, &ix) in idx.iter().enumerate() {
+                base += ix as isize * self.strides[i];
+            }
+            let mut off = base;
+            for _ in 0..inner_n {
+                f(off as usize);
+                off += inner_s;
+            }
+            // increment odometer
+            for i in (0..inner_dim).rev() {
+                idx[i] += 1;
+                if idx[i] < self.shape[i] {
+                    break;
+                }
+                idx[i] = 0;
+            }
+        }
+    }
+
+    /// Materialize the view as a contiguous tensor on `tracker`.
+    /// No-op (cheap clone) when already contiguous.
+    pub fn to_contiguous(&self, tracker: Option<MemoryTracker>) -> Tensor {
+        if self.is_contiguous() {
+            return self.clone();
+        }
+        match self.dtype {
+            DType::F32 => Tensor::from_f32(self.to_vec_f32(), &self.shape, tracker),
+            DType::I32 => Tensor::from_i32(self.to_vec_i32(), &self.shape, tracker),
+        }
+    }
+
+    // ------------------------------------------------------------ view ops
+
+    /// Zero-copy axis permutation.
+    pub fn permute(&self, perm: &[usize]) -> Tensor {
+        assert_eq!(perm.len(), self.rank(), "perm rank mismatch");
+        let mut seen = vec![false; perm.len()];
+        for &p in perm {
+            assert!(!seen[p], "perm has duplicates");
+            seen[p] = true;
+        }
+        let shape = perm.iter().map(|&p| self.shape[p]).collect();
+        let strides = perm.iter().map(|&p| self.strides[p]).collect();
+        Tensor {
+            buf: Arc::clone(&self.buf),
+            shape,
+            strides,
+            offset: self.offset,
+            dtype: self.dtype,
+        }
+    }
+
+    /// Zero-copy slice `[start, start+len)` along `axis`.
+    pub fn slice_axis(&self, axis: usize, start: usize, len: usize) -> Tensor {
+        assert!(axis < self.rank(), "axis out of range");
+        assert!(start + len <= self.shape[axis], "slice out of range");
+        let mut shape = self.shape.clone();
+        shape[axis] = len;
+        Tensor {
+            buf: Arc::clone(&self.buf),
+            shape,
+            strides: self.strides.clone(),
+            offset: (self.offset as isize + start as isize * self.strides[axis]) as usize,
+            dtype: self.dtype,
+        }
+    }
+
+    /// Reshape. Zero-copy when contiguous; otherwise materializes first
+    /// (the copy lands on `tracker`).
+    pub fn reshape(&self, new_shape: &[usize], tracker: Option<MemoryTracker>) -> Tensor {
+        assert_eq!(
+            numel(new_shape),
+            self.numel(),
+            "reshape numel mismatch {:?} -> {:?}",
+            self.shape,
+            new_shape
+        );
+        let base = if self.is_contiguous() {
+            self.clone()
+        } else {
+            self.to_contiguous(tracker)
+        };
+        Tensor {
+            buf: base.buf,
+            shape: new_shape.to_vec(),
+            strides: contiguous_strides(new_shape),
+            offset: base.offset,
+            dtype: base.dtype,
+        }
+    }
+
+    /// Zero-copy broadcast to `target` shape (numpy rules; broadcast dims get
+    /// stride 0). Panics if incompatible.
+    pub fn broadcast_to(&self, target: &[usize]) -> Tensor {
+        assert!(target.len() >= self.rank(), "cannot broadcast down");
+        let pad = target.len() - self.rank();
+        let mut strides = vec![0isize; target.len()];
+        for i in 0..target.len() {
+            if i < pad {
+                strides[i] = 0;
+            } else {
+                let s = self.shape[i - pad];
+                if s == target[i] {
+                    strides[i] = self.strides[i - pad];
+                } else if s == 1 {
+                    strides[i] = 0;
+                } else {
+                    panic!("cannot broadcast {:?} to {:?}", self.shape, target);
+                }
+            }
+        }
+        Tensor {
+            buf: Arc::clone(&self.buf),
+            shape: target.to_vec(),
+            strides,
+            offset: self.offset,
+            dtype: self.dtype,
+        }
+    }
+
+    /// Scalar extraction for rank-0 / single-element tensors.
+    pub fn scalar(&self) -> f32 {
+        assert_eq!(self.numel(), 1, "not a scalar");
+        match &self.buf.storage {
+            Storage::F32(v) => v[self.offset],
+            Storage::I32(v) => v[self.offset] as f32,
+        }
+    }
+
+    /// Max |a-b| over two same-shaped tensors (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        let a = self.to_vec_f32();
+        let b = other.to_vec_f32();
+        a.iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max)
+    }
+}
+
+/// Broadcast two shapes (numpy rules). Returns the result shape.
+pub fn broadcast_shapes(a: &[usize], b: &[usize]) -> Vec<usize> {
+    let rank = a.len().max(b.len());
+    let mut out = vec![0usize; rank];
+    for i in 0..rank {
+        let da = if i + a.len() >= rank { a[i + a.len() - rank] } else { 1 };
+        let db = if i + b.len() >= rank { b[i + b.len() - rank] } else { 1 };
+        assert!(
+            da == db || da == 1 || db == 1,
+            "incompatible broadcast {:?} vs {:?}",
+            a,
+            b
+        );
+        out[i] = da.max(db);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_strides_row_major() {
+        assert_eq!(contiguous_strides(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(contiguous_strides(&[5]), vec![1]);
+        assert!(contiguous_strides(&[]).is_empty());
+    }
+
+    #[test]
+    fn permute_is_zero_copy_and_correct() {
+        let t = Tensor::from_f32((0..6).map(|x| x as f32).collect(), &[2, 3], None);
+        let p = t.permute(&[1, 0]);
+        assert_eq!(p.shape(), &[3, 2]);
+        assert_eq!(p.at(&[0, 1]), t.at(&[1, 0]));
+        assert_eq!(p.to_vec_f32(), vec![0., 3., 1., 4., 2., 5.]);
+    }
+
+    #[test]
+    fn slice_axis_views_subrange() {
+        let t = Tensor::from_f32((0..12).map(|x| x as f32).collect(), &[3, 4], None);
+        let s = t.slice_axis(0, 1, 2);
+        assert_eq!(s.shape(), &[2, 4]);
+        assert_eq!(s.to_vec_f32(), (4..12).map(|x| x as f32).collect::<Vec<_>>());
+        let s2 = t.slice_axis(1, 2, 2);
+        assert_eq!(s2.to_vec_f32(), vec![2., 3., 6., 7., 10., 11.]);
+        assert!(!s2.is_contiguous());
+    }
+
+    #[test]
+    fn reshape_contiguous_zero_copy() {
+        let tr = MemoryTracker::new();
+        let t = Tensor::from_f32(vec![1.0; 24], &[2, 3, 4], Some(tr.clone()));
+        let before = tr.alloc_count();
+        let r = t.reshape(&[6, 4], None);
+        assert_eq!(tr.alloc_count(), before, "no new allocation");
+        assert_eq!(r.shape(), &[6, 4]);
+    }
+
+    #[test]
+    fn reshape_noncontiguous_materializes() {
+        let t = Tensor::from_f32((0..6).map(|x| x as f32).collect(), &[2, 3], None);
+        let p = t.permute(&[1, 0]);
+        let r = p.reshape(&[6], None);
+        assert_eq!(r.to_vec_f32(), vec![0., 3., 1., 4., 2., 5.]);
+    }
+
+    #[test]
+    fn broadcast_to_stride_zero() {
+        let t = Tensor::from_f32(vec![1., 2., 3.], &[3], None);
+        let b = t.broadcast_to(&[2, 3]);
+        assert_eq!(b.to_vec_f32(), vec![1., 2., 3., 1., 2., 3.]);
+        let t2 = Tensor::from_f32(vec![5.], &[1], None);
+        let b2 = t2.broadcast_to(&[4]);
+        assert_eq!(b2.to_vec_f32(), vec![5.; 4]);
+    }
+
+    #[test]
+    fn broadcast_shapes_rules() {
+        assert_eq!(broadcast_shapes(&[2, 1, 4], &[3, 1]), vec![2, 3, 4]);
+        assert_eq!(broadcast_shapes(&[], &[2, 2]), vec![2, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible broadcast")]
+    fn broadcast_shapes_incompatible() {
+        broadcast_shapes(&[2, 3], &[4]);
+    }
+
+    #[test]
+    fn iota_values() {
+        let t = Tensor::iota(&[2, 3], 1, None);
+        assert_eq!(t.to_vec_f32(), vec![0., 1., 2., 0., 1., 2.]);
+        let t0 = Tensor::iota(&[2, 3], 0, None);
+        assert_eq!(t0.to_vec_f32(), vec![0., 0., 0., 1., 1., 1.]);
+    }
+
+    #[test]
+    fn rand_deterministic() {
+        let a = Tensor::rand(&[16], 1.0, 42, None);
+        let b = Tensor::rand(&[16], 1.0, 42, None);
+        assert_eq!(a.to_vec_f32(), b.to_vec_f32());
+        let c = Tensor::rand(&[16], 1.0, 43, None);
+        assert_ne!(a.to_vec_f32(), c.to_vec_f32());
+        assert!(a.to_vec_f32().iter().all(|v| v.abs() <= 1.0));
+    }
+
+    #[test]
+    fn tracked_view_lifecycle() {
+        let tr = MemoryTracker::new();
+        let t = Tensor::from_f32(vec![0.0; 100], &[100], Some(tr.clone()));
+        let view = t.slice_axis(0, 0, 10);
+        drop(t);
+        // Buffer alive through the view.
+        assert_eq!(tr.current(), 400);
+        drop(view);
+        assert_eq!(tr.current(), 0);
+    }
+}

@@ -1,0 +1,293 @@
+//! Elementwise binary/unary kernels with numpy-style broadcasting.
+//!
+//! Fast path: both operands contiguous with identical shapes → a single
+//! vectorizable loop. Slow path: strided traversal via offset iterators.
+//! The fast/slow gap is intentional and physical — it is what makes the
+//! chunk-selection stride term meaningful on this substrate.
+
+use super::{broadcast_shapes, MemoryTracker, Tensor};
+
+/// Binary elementwise operator.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum BinaryOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Pow,
+}
+
+impl BinaryOp {
+    #[inline(always)]
+    pub fn apply(self, a: f32, b: f32) -> f32 {
+        match self {
+            BinaryOp::Add => a + b,
+            BinaryOp::Sub => a - b,
+            BinaryOp::Mul => a * b,
+            BinaryOp::Div => a / b,
+            BinaryOp::Max => a.max(b),
+            BinaryOp::Min => a.min(b),
+            BinaryOp::Pow => a.powf(b),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BinaryOp::Add => "add",
+            BinaryOp::Sub => "sub",
+            BinaryOp::Mul => "mul",
+            BinaryOp::Div => "div",
+            BinaryOp::Max => "max",
+            BinaryOp::Min => "min",
+            BinaryOp::Pow => "pow",
+        }
+    }
+}
+
+/// Unary elementwise operator.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum UnaryOp {
+    Neg,
+    Exp,
+    Log,
+    Sqrt,
+    Rsqrt,
+    Tanh,
+    Sigmoid,
+    Relu,
+    Gelu,
+    Silu,
+    Abs,
+}
+
+impl UnaryOp {
+    #[inline(always)]
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            UnaryOp::Neg => -x,
+            UnaryOp::Exp => x.exp(),
+            UnaryOp::Log => x.ln(),
+            UnaryOp::Sqrt => x.sqrt(),
+            UnaryOp::Rsqrt => 1.0 / x.sqrt(),
+            UnaryOp::Tanh => x.tanh(),
+            UnaryOp::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            UnaryOp::Relu => x.max(0.0),
+            // tanh approximation of GELU, matching jax.nn.gelu default.
+            UnaryOp::Gelu => {
+                const C: f32 = 0.797_884_6; // sqrt(2/pi)
+                0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+            }
+            UnaryOp::Silu => x / (1.0 + (-x).exp()),
+            UnaryOp::Abs => x.abs(),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            UnaryOp::Neg => "neg",
+            UnaryOp::Exp => "exp",
+            UnaryOp::Log => "log",
+            UnaryOp::Sqrt => "sqrt",
+            UnaryOp::Rsqrt => "rsqrt",
+            UnaryOp::Tanh => "tanh",
+            UnaryOp::Sigmoid => "sigmoid",
+            UnaryOp::Relu => "relu",
+            UnaryOp::Gelu => "gelu",
+            UnaryOp::Silu => "silu",
+            UnaryOp::Abs => "abs",
+        }
+    }
+}
+
+/// `out = op(a, b)` with broadcasting; result allocated on `tracker`.
+pub fn binary(op: BinaryOp, a: &Tensor, b: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+    let out_shape = broadcast_shapes(a.shape(), b.shape());
+    let n = super::numel(&out_shape);
+
+    // Fast path: same shape, both contiguous.
+    if a.shape() == out_shape.as_slice()
+        && b.shape() == out_shape.as_slice()
+        && a.is_contiguous()
+        && b.is_contiguous()
+    {
+        let av = a.f32_contiguous();
+        let bv = b.f32_contiguous();
+        let mut out = Vec::with_capacity(n);
+        // Monomorphized per-op loop so the compiler can vectorize.
+        macro_rules! fast {
+            ($f:expr) => {
+                for i in 0..n {
+                    out.push($f(av[i], bv[i]));
+                }
+            };
+        }
+        match op {
+            BinaryOp::Add => fast!(|x: f32, y: f32| x + y),
+            BinaryOp::Sub => fast!(|x: f32, y: f32| x - y),
+            BinaryOp::Mul => fast!(|x: f32, y: f32| x * y),
+            BinaryOp::Div => fast!(|x: f32, y: f32| x / y),
+            BinaryOp::Max => fast!(|x: f32, y: f32| f32::max(x, y)),
+            BinaryOp::Min => fast!(|x: f32, y: f32| f32::min(x, y)),
+            BinaryOp::Pow => fast!(|x: f32, y: f32| f32::powf(x, y)),
+        }
+        return Tensor::from_f32(out, &out_shape, tracker);
+    }
+
+    // Broadcast path: expand views then walk offsets in lockstep.
+    let ab = a.broadcast_to(&out_shape);
+    let bb = b.broadcast_to(&out_shape);
+    let av = ab.buffer().f32();
+    let mut b_offsets = Vec::with_capacity(n);
+    bb.for_each_offset(|off| b_offsets.push(off));
+    let bv = bb.buffer().f32();
+    let mut out = Vec::with_capacity(n);
+    let mut i = 0usize;
+    ab.for_each_offset(|off| {
+        out.push(op.apply(av[off], bv[b_offsets[i]]));
+        i += 1;
+    });
+    Tensor::from_f32(out, &out_shape, tracker)
+}
+
+/// `out = op(a)`; result allocated on `tracker`.
+pub fn unary(op: UnaryOp, a: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+    let n = a.numel();
+    if a.is_contiguous() {
+        let av = a.f32_contiguous();
+        let mut out = Vec::with_capacity(n);
+        for &x in av {
+            out.push(op.apply(x));
+        }
+        return Tensor::from_f32(out, a.shape(), tracker);
+    }
+    let src = a.buffer().f32();
+    let mut out = Vec::with_capacity(n);
+    a.for_each_offset(|off| out.push(op.apply(src[off])));
+    Tensor::from_f32(out, a.shape(), tracker)
+}
+
+/// Scalar right-operand convenience: `op(a, scalar)`.
+pub fn binary_scalar(
+    op: BinaryOp,
+    a: &Tensor,
+    scalar: f32,
+    tracker: Option<MemoryTracker>,
+) -> Tensor {
+    let b = Tensor::from_f32(vec![scalar], &[1], None);
+    binary(op, a, &b.broadcast_to(a.shape()), tracker)
+}
+
+/// Convert i32 tensor to f32 (or pass f32 through).
+pub fn to_f32(a: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+    match a.dtype() {
+        super::DType::F32 => a.to_contiguous(tracker),
+        super::DType::I32 => {
+            let v = a.to_vec_i32().into_iter().map(|x| x as f32).collect();
+            Tensor::from_f32(v, a.shape(), tracker)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(data: &[f32], shape: &[usize]) -> Tensor {
+        Tensor::from_f32(data.to_vec(), shape, None)
+    }
+
+    #[test]
+    fn add_same_shape() {
+        let a = t(&[1., 2., 3., 4.], &[2, 2]);
+        let b = t(&[10., 20., 30., 40.], &[2, 2]);
+        assert_eq!(
+            binary(BinaryOp::Add, &a, &b, None).to_vec_f32(),
+            vec![11., 22., 33., 44.]
+        );
+    }
+
+    #[test]
+    fn broadcast_row_and_col() {
+        let a = t(&[1., 2., 3., 4., 5., 6.], &[2, 3]);
+        let row = t(&[10., 20., 30.], &[3]);
+        let r = binary(BinaryOp::Add, &a, &row, None);
+        assert_eq!(r.to_vec_f32(), vec![11., 22., 33., 14., 25., 36.]);
+        let col = t(&[100., 200.], &[2]).reshape(&[2, 1], None);
+        let c = binary(BinaryOp::Add, &a, &col, None);
+        assert_eq!(c.to_vec_f32(), vec![101., 102., 103., 204., 205., 206.]);
+    }
+
+    #[test]
+    fn binary_on_strided_views() {
+        // permuted lhs exercises the slow path
+        let a = t(&[1., 2., 3., 4., 5., 6.], &[2, 3]).permute(&[1, 0]); // 3x2
+        let b = t(&[1., 1., 1., 1., 1., 1.], &[3, 2]);
+        let r = binary(BinaryOp::Add, &a, &b, None);
+        assert_eq!(r.to_vec_f32(), vec![2., 5., 3., 6., 4., 7.]);
+    }
+
+    #[test]
+    fn div_and_sub() {
+        let a = t(&[8., 6.], &[2]);
+        let b = t(&[2., 3.], &[2]);
+        assert_eq!(binary(BinaryOp::Div, &a, &b, None).to_vec_f32(), vec![4., 2.]);
+        assert_eq!(binary(BinaryOp::Sub, &a, &b, None).to_vec_f32(), vec![6., 3.]);
+    }
+
+    #[test]
+    fn unary_math() {
+        let a = t(&[-1., 0., 1., 4.], &[4]);
+        assert_eq!(
+            unary(UnaryOp::Relu, &a, None).to_vec_f32(),
+            vec![0., 0., 1., 4.]
+        );
+        let s = unary(UnaryOp::Sqrt, &t(&[4., 9.], &[2]), None);
+        assert_eq!(s.to_vec_f32(), vec![2., 3.]);
+        let e = unary(UnaryOp::Exp, &t(&[0.], &[1]), None);
+        assert!((e.to_vec_f32()[0] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        // Reference values from jax.nn.gelu (tanh approximation).
+        let x = t(&[-2.0, -1.0, 0.0, 1.0, 2.0], &[5]);
+        let g = unary(UnaryOp::Gelu, &x, None).to_vec_f32();
+        let expect = [-0.0454, -0.1588, 0.0, 0.8412, 1.9546];
+        for (a, b) in g.iter().zip(expect.iter()) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn unary_on_strided_view() {
+        let a = t(&[1., 2., 3., 4.], &[2, 2]).permute(&[1, 0]);
+        let r = unary(UnaryOp::Neg, &a, None);
+        assert_eq!(r.to_vec_f32(), vec![-1., -3., -2., -4.]);
+    }
+
+    #[test]
+    fn binary_scalar_broadcast() {
+        let a = t(&[1., 2.], &[2]);
+        assert_eq!(
+            binary_scalar(BinaryOp::Mul, &a, 3.0, None).to_vec_f32(),
+            vec![3., 6.]
+        );
+    }
+
+    #[test]
+    fn to_f32_converts() {
+        let a = Tensor::from_i32(vec![1, 2, 3], &[3], None);
+        assert_eq!(to_f32(&a, None).to_vec_f32(), vec![1., 2., 3.]);
+    }
+
+    #[test]
+    fn tracked_allocation_lands_on_tracker() {
+        let tr = MemoryTracker::new();
+        let a = t(&[1., 2.], &[2]);
+        let b = t(&[3., 4.], &[2]);
+        let _r = binary(BinaryOp::Add, &a, &b, Some(tr.clone()));
+        assert_eq!(tr.current(), 8);
+    }
+}

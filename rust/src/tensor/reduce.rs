@@ -1,0 +1,190 @@
+//! Reductions and softmax.
+
+use super::{MemoryTracker, Tensor};
+
+/// Reduction operator.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+    Min,
+    Mean,
+}
+
+impl ReduceOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            ReduceOp::Sum => "sum",
+            ReduceOp::Max => "rmax",
+            ReduceOp::Min => "rmin",
+            ReduceOp::Mean => "mean",
+        }
+    }
+}
+
+/// Shape after reducing `axis` (keepdims keeps a 1).
+pub fn reduce_shape(shape: &[usize], axis: usize, keepdims: bool) -> Vec<usize> {
+    let mut out = shape.to_vec();
+    if keepdims {
+        out[axis] = 1;
+    } else {
+        out.remove(axis);
+    }
+    out
+}
+
+/// Reduce along a single axis.
+pub fn reduce(
+    op: ReduceOp,
+    a: &Tensor,
+    axis: usize,
+    keepdims: bool,
+    tracker: Option<MemoryTracker>,
+) -> Tensor {
+    assert!(axis < a.rank(), "reduce axis out of range");
+    let shape = a.shape().to_vec();
+    let out_shape = reduce_shape(&shape, axis, keepdims);
+    let red_n = shape[axis];
+
+    // Move the reduction axis last, materialize, then reduce rows.
+    let mut perm: Vec<usize> = (0..a.rank()).filter(|&i| i != axis).collect();
+    perm.push(axis);
+    let pa = a.permute(&perm).to_contiguous(tracker.clone());
+    let src = pa.f32_contiguous();
+    let rows = pa.numel() / red_n;
+    let mut out = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let row = &src[r * red_n..(r + 1) * red_n];
+        let v = match op {
+            ReduceOp::Sum => row.iter().sum::<f32>(),
+            ReduceOp::Mean => row.iter().sum::<f32>() / red_n as f32,
+            ReduceOp::Max => row.iter().copied().fold(f32::NEG_INFINITY, f32::max),
+            ReduceOp::Min => row.iter().copied().fold(f32::INFINITY, f32::min),
+        };
+        out.push(v);
+    }
+    Tensor::from_f32(out, &out_shape, tracker)
+}
+
+/// Numerically-stable softmax along `axis`.
+pub fn softmax(a: &Tensor, axis: usize, tracker: Option<MemoryTracker>) -> Tensor {
+    assert!(axis < a.rank());
+    // Move axis last, materialize, softmax rows, move back.
+    let mut perm: Vec<usize> = (0..a.rank()).filter(|&i| i != axis).collect();
+    perm.push(axis);
+    let pa = a.permute(&perm).to_contiguous(tracker.clone());
+    let src = pa.f32_contiguous();
+    let n = pa.shape()[pa.rank() - 1];
+    let rows = pa.numel() / n;
+    let mut out = vec![0.0f32; pa.numel()];
+    for r in 0..rows {
+        let row = &src[r * n..(r + 1) * n];
+        let orow = &mut out[r * n..(r + 1) * n];
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for (o, &x) in orow.iter_mut().zip(row) {
+            let e = (x - m).exp();
+            *o = e;
+            denom += e;
+        }
+        let inv = 1.0 / denom;
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+    let t = Tensor::from_f32(out, pa.shape(), tracker.clone());
+    // Inverse permutation restores the original layout.
+    let mut inv_perm = vec![0usize; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv_perm[p] = i;
+    }
+    t.permute(&inv_perm).to_contiguous(tracker)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(data: &[f32], shape: &[usize]) -> Tensor {
+        Tensor::from_f32(data.to_vec(), shape, None)
+    }
+
+    #[test]
+    fn sum_axes() {
+        let a = t(&[1., 2., 3., 4., 5., 6.], &[2, 3]);
+        assert_eq!(
+            reduce(ReduceOp::Sum, &a, 1, false, None).to_vec_f32(),
+            vec![6., 15.]
+        );
+        assert_eq!(
+            reduce(ReduceOp::Sum, &a, 0, false, None).to_vec_f32(),
+            vec![5., 7., 9.]
+        );
+    }
+
+    #[test]
+    fn keepdims_shape() {
+        let a = t(&[1., 2., 3., 4.], &[2, 2]);
+        let r = reduce(ReduceOp::Sum, &a, 1, true, None);
+        assert_eq!(r.shape(), &[2, 1]);
+        let r2 = reduce(ReduceOp::Sum, &a, 1, false, None);
+        assert_eq!(r2.shape(), &[2]);
+    }
+
+    #[test]
+    fn max_min_mean() {
+        let a = t(&[1., 5., -2., 0.], &[2, 2]);
+        assert_eq!(
+            reduce(ReduceOp::Max, &a, 1, false, None).to_vec_f32(),
+            vec![5., 0.]
+        );
+        assert_eq!(
+            reduce(ReduceOp::Min, &a, 1, false, None).to_vec_f32(),
+            vec![1., -2.]
+        );
+        assert_eq!(
+            reduce(ReduceOp::Mean, &a, 1, false, None).to_vec_f32(),
+            vec![3., -1.]
+        );
+    }
+
+    #[test]
+    fn reduce_middle_axis() {
+        let a = Tensor::iota(&[2, 3, 4], 1, None); // values 0,1,2 along axis 1
+        let r = reduce(ReduceOp::Sum, &a, 1, false, None);
+        assert_eq!(r.shape(), &[2, 4]);
+        assert_eq!(r.to_vec_f32(), vec![3.0; 8]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let a = Tensor::rand(&[4, 7], 3.0, 9, None);
+        let s = softmax(&a, 1, None);
+        for r in 0..4 {
+            let row_sum: f32 = s.slice_axis(0, r, 1).to_vec_f32().iter().sum();
+            assert!((row_sum - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_axis0_matches_transpose() {
+        let a = Tensor::rand(&[3, 5], 2.0, 11, None);
+        let s0 = softmax(&a, 0, None);
+        let s1 = softmax(&a.permute(&[1, 0]), 1, None).permute(&[1, 0]);
+        assert!(s0.max_abs_diff(&s1.to_contiguous(None)) < 1e-6);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_values() {
+        let a = t(&[1000., 1001., 1002.], &[1, 3]);
+        let s = softmax(&a, 1, None).to_vec_f32();
+        assert!(s.iter().all(|v| v.is_finite()));
+        assert!((s.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn softmax_known_values() {
+        let a = t(&[0., 0.], &[1, 2]);
+        assert_eq!(softmax(&a, 1, None).to_vec_f32(), vec![0.5, 0.5]);
+    }
+}

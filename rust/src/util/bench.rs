@@ -1,0 +1,103 @@
+//! Hand-rolled micro-benchmark harness (criterion replacement).
+//!
+//! `time_median` runs a closure with warmup and reports the median of N
+//! timed iterations — robust to scheduler noise on a busy CI box. The
+//! figure benches in `rust/benches/` are plain `harness = false` binaries
+//! built on this.
+
+use std::time::{Duration, Instant};
+
+/// Median wall time of `iters` runs after `warmup` runs.
+pub fn time_median<F: FnMut()>(mut f: F, warmup: usize, iters: usize) -> Duration {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<Duration> = (0..iters.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed()
+        })
+        .collect();
+    samples.sort_unstable();
+    samples[samples.len() / 2]
+}
+
+/// Milliseconds as f64 (display helper).
+pub fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+/// Bytes → MiB (display helper).
+pub fn mib(b: usize) -> f64 {
+    b as f64 / (1 << 20) as f64
+}
+
+/// A minimal markdown-ish table writer for paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "table arity");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_median_is_plausible() {
+        let d = time_median(|| std::thread::sleep(Duration::from_millis(2)), 1, 3);
+        assert!(d >= Duration::from_millis(1));
+        assert!(d < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["model", "peak"]);
+        t.row(vec!["gpt".into(), "12.5M".into()]);
+        t.row(vec!["evoformer".into(), "3.1M".into()]);
+        let s = t.render();
+        assert!(s.contains("gpt"));
+        assert!(s.lines().count() == 4);
+    }
+}

@@ -1,0 +1,5 @@
+//! Small utilities: a micro-benchmark timer (criterion is not in the
+//! vendored dependency set — see DESIGN.md) and formatting helpers shared
+//! by the benches.
+
+pub mod bench;

@@ -1,0 +1,160 @@
+//! Cross-module integration tests: the full compiler pipeline on every
+//! evaluation model, numerics equality under chunking, the AOT import
+//! path, and compiler invariants under randomized configurations.
+
+use autochunk::exec::{execute, random_inputs, random_params};
+use autochunk::models::*;
+use autochunk::passes::{autochunk, estimate, estimate_under_plan, AutoChunkConfig};
+use autochunk::plan::execute_chunked;
+use autochunk::tensor::MemoryTracker;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Full pipeline on each model: budget met (or large reduction), chunked
+/// execution numerically identical, measured peak below baseline measured.
+#[test]
+fn pipeline_end_to_end_all_models() {
+    let cases: Vec<(&str, autochunk::ir::Graph)> = vec![
+        ("gpt", gpt(&GptConfig { seq: 256, layers: 2, ..Default::default() })),
+        ("vit", vit(&ViTConfig { patches: 256, layers: 2, ..Default::default() })),
+        ("evoformer", evoformer(&EvoformerConfig { seq: 32, blocks: 1, ..Default::default() })),
+        ("unet", unet(&UNetConfig { image: 16, ..Default::default() })),
+    ];
+    for (name, g) in cases {
+        let base = estimate(&g).peak_bytes;
+        let result = autochunk(&g, base / 3, &AutoChunkConfig::default());
+        assert!(!result.plans.is_empty(), "{name}: no plans");
+        assert!(
+            (result.chunked_peak as f64) < 0.9 * base as f64,
+            "{name}: no real reduction"
+        );
+
+        let ps = random_params(&g, 7);
+        let t0 = MemoryTracker::new();
+        let ins0 = random_inputs(&g, 8, Some(t0.clone()));
+        let (want, s_base) = execute(&g, &ins0, &ps, &t0);
+        let t1 = MemoryTracker::new();
+        let ins1 = random_inputs(&g, 8, Some(t1.clone()));
+        let (got, s_chunk) = execute_chunked(&g, &result.plans, &ins1, &ps, &t1);
+        for (w, gt) in want.iter().zip(&got) {
+            assert!(
+                w.max_abs_diff(gt) < 1e-3,
+                "{name}: outputs diverged by {}",
+                w.max_abs_diff(gt)
+            );
+        }
+        assert!(
+            s_chunk.peak_bytes < s_base.peak_bytes,
+            "{name}: measured peak did not drop ({} vs {})",
+            s_chunk.peak_bytes,
+            s_base.peak_bytes
+        );
+    }
+}
+
+/// Budget sweep monotonicity: tighter budgets never increase the
+/// estimated chunked peak.
+#[test]
+fn budget_sweep_monotone() {
+    let g = gpt(&GptConfig { seq: 256, layers: 2, ..Default::default() });
+    let base = estimate(&g).peak_bytes;
+    let mut last = usize::MAX;
+    for frac in [0.8, 0.5, 0.3, 0.15] {
+        let r = autochunk(&g, (base as f64 * frac) as usize, &AutoChunkConfig::default());
+        assert!(
+            r.chunked_peak <= last,
+            "peak rose from {last} to {} at frac {frac}",
+            r.chunked_peak
+        );
+        last = r.chunked_peak;
+    }
+}
+
+/// Randomized property: for random model scales and budgets, every plan
+/// validates, regions are disjoint, and the estimate under plans never
+/// exceeds the baseline estimate.
+#[test]
+fn randomized_compiler_invariants() {
+    let mut state = 0xC0FFEEu64;
+    let mut rnd = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    for _ in 0..6 {
+        let seq = 64 + (rnd() % 4) as usize * 64;
+        let layers = 1 + (rnd() % 2) as usize;
+        let g = gpt(&GptConfig { seq, layers, ..Default::default() });
+        let base = estimate(&g).peak_bytes;
+        let frac = 0.15 + (rnd() % 60) as f64 / 100.0;
+        let budget = (base as f64 * frac) as usize;
+        let r = autochunk(&g, budget, &AutoChunkConfig::default());
+        for (i, p) in r.plans.iter().enumerate() {
+            assert!(p.validate(&g).is_ok(), "plan {i}: {:?}", p.validate(&g));
+            for q in &r.plans[i + 1..] {
+                assert!(!autochunk::plan::plans_overlap(p, q), "overlapping plans");
+            }
+        }
+        let est = estimate_under_plan(&g, &r.plans).peak_bytes;
+        assert!(est <= base, "chunked estimate above baseline");
+        assert_eq!(est, r.chunked_peak);
+    }
+}
+
+/// The AOT path: import the dense artifact, compile it, and verify the
+/// compiler finds the attention chunks in real JAX-lowered HLO.
+#[test]
+fn aot_import_and_compile() {
+    let path = format!("{}/gpt_dense_s128.hlo.txt", artifacts_dir());
+    if !std::path::Path::new(&path).exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let g = autochunk::hlo::parse_hlo_file(&path).unwrap();
+    let base = estimate(&g).peak_bytes;
+    let r = autochunk(&g, base / 2, &AutoChunkConfig::default());
+    assert!(!r.plans.is_empty(), "no chunks found in imported artifact");
+    assert!(r.chunked_peak <= base / 2, "budget unmet on imported graph");
+}
+
+/// Serving path sanity on top of PJRT (full stack).
+#[test]
+fn serve_stack_smoke() {
+    if !std::path::Path::new(&format!("{}/gpt_dense_s64.meta", artifacts_dir())).exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    use autochunk::coordinator::{synthetic_workload, Coordinator, ServeConfig};
+    let mut c = Coordinator::new(ServeConfig {
+        artifacts_dir: artifacts_dir(),
+        budget_bytes: 4 << 20,
+        max_batch: 4,
+        model: "gpt".into(),
+        allowed_modes: Vec::new(),
+    })
+    .unwrap();
+    let reqs = synthetic_workload(6, 16, 128, 3);
+    let (responses, report) = c.serve(&reqs).unwrap();
+    assert_eq!(responses.len(), 6);
+    assert!(report.completed + report.rejected == 6);
+    assert!(report.completed > 0);
+}
+
+/// Expert baseline integrates with the chunked executor on ViT too.
+#[test]
+fn expert_plans_on_vit() {
+    let g = vit(&ViTConfig { patches: 128, layers: 2, ..Default::default() });
+    let plans = autochunk::passes::expert::expert_plans(&g, 32);
+    assert!(!plans.is_empty());
+    let ps = random_params(&g, 1);
+    let t0 = MemoryTracker::new();
+    let ins = random_inputs(&g, 2, Some(t0.clone()));
+    let (want, _) = execute(&g, &ins, &ps, &t0);
+    let t1 = MemoryTracker::new();
+    let ins1 = random_inputs(&g, 2, Some(t1.clone()));
+    let (got, _) = execute_chunked(&g, &plans, &ins1, &ps, &t1);
+    assert!(want[0].max_abs_diff(&got[0]) < 1e-3);
+}

@@ -1,0 +1,184 @@
+//! Property-based tests (hand-rolled xorshift sweeps; proptest is not in
+//! the vendored dependency set).
+//!
+//! The central property: **for randomly generated graphs, every chunk
+//! candidate the search produces executes to the same result as the
+//! unchunked graph, at several chunk counts** — Rule 2 (output alignment)
+//! enforced empirically across the whole op space, not just the models we
+//! ship.
+
+use autochunk::exec::{execute, random_inputs, random_params};
+use autochunk::ir::{Graph, GraphBuilder};
+use autochunk::passes::estimate::estimate;
+use autochunk::passes::search::{search_chunks, SearchConfig};
+use autochunk::plan::execute_chunked;
+use autochunk::tensor::ops::{BinaryOp, UnaryOp};
+use autochunk::tensor::reduce::ReduceOp;
+use autochunk::tensor::MemoryTracker;
+
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+
+    fn pick(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+/// A random chain-with-residuals graph over 2-D tensors [s, d].
+fn random_graph(seed: u64, s: usize, d: usize) -> Graph {
+    let mut rng = Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1);
+    let mut b = GraphBuilder::new("random");
+    let x = b.input("x", &[s, d]);
+    let mut cur = x;
+    let mut prev = x;
+    let n_ops = 6 + rng.pick(10);
+    for i in 0..n_ops {
+        cur = match rng.pick(8) {
+            0 => b.unary(
+                [UnaryOp::Relu, UnaryOp::Gelu, UnaryOp::Tanh, UnaryOp::Exp][rng.pick(4)],
+                cur,
+            ),
+            1 => b.binary([BinaryOp::Add, BinaryOp::Mul][rng.pick(2)], cur, prev),
+            2 => {
+                let w = b.param(&format!("w{i}"), &[d, d]);
+                b.matmul(cur, w)
+            }
+            3 => {
+                // attention-score shaped bump: [s,d] x [d,s] -> [s,s] -> [s,d]
+                let t = b.transpose(cur, &[1, 0]);
+                let scores = b.matmul(cur, t);
+                let probs = b.softmax(scores, 1);
+                b.matmul(probs, cur)
+            }
+            4 => {
+                let m = b.reduce(ReduceOp::Max, cur, 1, true);
+                b.sub(cur, m)
+            }
+            5 => {
+                let g = b.param(&format!("g{i}"), &[d]);
+                let beta = b.param(&format!("b{i}"), &[d]);
+                b.layer_norm(cur, g, beta, 1e-5)
+            }
+            6 => {
+                let r = b.reshape(cur, &[s, 2, d / 2]);
+                let t = b.transpose(r, &[1, 0, 2]);
+                let t2 = b.transpose(t, &[1, 0, 2]);
+                b.reshape(t2, &[s, d])
+            }
+            _ => b.binary_scalar(BinaryOp::Mul, cur, 0.9),
+        };
+        if rng.pick(3) == 0 {
+            prev = cur;
+        }
+    }
+    b.finish(vec![cur])
+}
+
+#[test]
+fn random_graphs_chunk_correctly() {
+    let mut checked_plans = 0usize;
+    for seed in 0..12u64 {
+        let g = random_graph(seed, 48, 16);
+        assert!(g.validate().is_ok(), "seed {seed}: {:?}", g.validate());
+        let prof = estimate(&g);
+        let cands = search_chunks(&g, &prof, &[], &SearchConfig::default());
+
+        let ps = random_params(&g, seed);
+        let ins = random_inputs(&g, seed + 100, None);
+        let t0 = MemoryTracker::new();
+        let (want, _) = execute(&g, &ins, &ps, &t0);
+
+        for cand in cands.iter().take(6) {
+            for n in [2usize, 5] {
+                if n > cand.plan.chunk_extent(&g) {
+                    continue;
+                }
+                let mut plan = cand.plan.clone();
+                plan.n_chunks = n;
+                let t1 = MemoryTracker::new();
+                let (got, _) = execute_chunked(&g, &[plan.clone()], &ins, &ps, &t1);
+                let diff = want[0].max_abs_diff(&got[0]);
+                assert!(
+                    diff < 1e-2,
+                    "seed {seed} region {:?} n={n}: diff {diff}",
+                    plan.region
+                );
+                checked_plans += 1;
+            }
+        }
+    }
+    assert!(checked_plans > 20, "only {checked_plans} plans checked");
+}
+
+#[test]
+fn estimator_never_wildly_below_measured() {
+    // The estimator drives selection; it may be approximate but must stay
+    // within a bounded factor of the measured peak on random graphs.
+    for seed in 0..10u64 {
+        let g = random_graph(seed + 50, 64, 16);
+        let est = estimate(&g).peak_bytes;
+        let tracker = MemoryTracker::new();
+        let ins = random_inputs(&g, seed, Some(tracker.clone()));
+        let ps = random_params(&g, seed);
+        let (_, stats) = execute(&g, &ins, &ps, &tracker);
+        let ratio = est as f64 / stats.peak_bytes as f64;
+        assert!(
+            (0.4..=2.5).contains(&ratio),
+            "seed {seed}: est {est} vs measured {} (ratio {ratio:.2})",
+            stats.peak_bytes
+        );
+    }
+}
+
+#[test]
+fn search_is_deterministic() {
+    let g = random_graph(3, 48, 16);
+    let prof = estimate(&g);
+    let a = search_chunks(&g, &prof, &[], &SearchConfig::default());
+    let b = search_chunks(&g, &prof, &[], &SearchConfig::default());
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.plan.region, y.plan.region);
+        assert_eq!(x.plan.chunk_inputs, y.plan.chunk_inputs);
+    }
+}
+
+#[test]
+fn tensor_roundtrip_properties() {
+    let mut rng = Rng(0xABCDEF);
+    for _ in 0..40 {
+        let r = 1 + rng.pick(3);
+        let shape: Vec<usize> = (0..r).map(|_| 1 + rng.pick(12)).collect();
+        let t = autochunk::tensor::Tensor::rand(&shape, 1.0, rng.next(), None);
+        // permute twice with inverse = identity
+        let perm: Vec<usize> = {
+            let mut p: Vec<usize> = (0..r).collect();
+            // fisher-yates
+            for i in (1..r).rev() {
+                p.swap(i, rng.pick(i + 1));
+            }
+            p
+        };
+        let mut inv = vec![0usize; r];
+        for (i, &p) in perm.iter().enumerate() {
+            inv[p] = i;
+        }
+        let back = t.permute(&perm).permute(&inv);
+        assert_eq!(back.to_vec_f32(), t.to_vec_f32());
+
+        // split + concat along a random axis = identity
+        let axis = rng.pick(r);
+        if shape[axis] >= 2 {
+            let parts = autochunk::tensor::layout::split(&t, axis, 1 + rng.pick(4));
+            let joined = autochunk::tensor::layout::concat(&parts, axis, None);
+            assert_eq!(joined.to_vec_f32(), t.to_vec_f32());
+        }
+    }
+}
