@@ -6,6 +6,19 @@
 //! (b) the measured peak matches the compiler's promise.
 //!
 //! Run: `cargo run --release --example quickstart`
+//!
+//! Threading: the kernels, the chunk loops, and the compiler's search all
+//! run on an internal scoped thread pool sized by the `AUTOCHUNK_THREADS`
+//! environment variable (default: all cores; `1` = exact legacy serial
+//! behaviour — results are bitwise identical at every width):
+//!
+//! ```text
+//! AUTOCHUNK_THREADS=4 cargo run --release --example quickstart
+//! ```
+//!
+//! When a budget is passed to the chunked executor
+//! (`plan::ExecOptions { budget_bytes }`), leftover headroom additionally
+//! buys concurrent chunk iterations — see DESIGN.md §4.
 
 use autochunk::exec::{execute, random_inputs, random_params};
 use autochunk::models::{gpt, GptConfig};
@@ -21,7 +34,13 @@ fn main() {
     // 1. a model (GPT prefill, 1k tokens)
     let cfg = GptConfig { seq: 1024, layers: 4, ..Default::default() };
     let graph = gpt(&cfg);
-    println!("model: gpt seq={} layers={} -> {} IR nodes", cfg.seq, cfg.layers, graph.len());
+    println!(
+        "model: gpt seq={} layers={} -> {} IR nodes (pool width {}; set AUTOCHUNK_THREADS to change)",
+        cfg.seq,
+        cfg.layers,
+        graph.len(),
+        autochunk::util::pool::num_threads()
+    );
 
     // 2. the one-line API: chunk plans for a 25% activation budget
     let baseline = estimate(&graph);

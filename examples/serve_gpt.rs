@@ -15,7 +15,7 @@
 
 use autochunk::coordinator::{synthetic_workload, Coordinator, RequestOutcome, ServeConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> autochunk::util::error::Result<()> {
     let dir = format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"));
     let requests = synthetic_workload(48, 32, 256, 4242);
     println!(
@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
                 max_batch: 8,
                 model: "gpt".into(),
                 allowed_modes: modes,
+                ..ServeConfig::default()
             })?;
             let (responses, report) = coord.serve(&requests)?;
             let rejected = responses

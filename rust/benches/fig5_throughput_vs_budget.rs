@@ -11,7 +11,7 @@
 use autochunk::exec::{execute, random_inputs, random_params};
 use autochunk::models::*;
 use autochunk::passes::{autochunk, estimate, AutoChunkConfig};
-use autochunk::plan::execute_chunked;
+use autochunk::plan::{execute_chunked_opts, ExecOptions};
 use autochunk::tensor::MemoryTracker;
 use autochunk::util::bench::{mib, ms, time_median, Table};
 
@@ -50,17 +50,21 @@ fn main() {
         for frac in [0.5f64, 0.4, 0.2] {
             let budget = (base_prof.peak_bytes as f64 * frac) as usize;
             let result = autochunk(g, budget, &AutoChunkConfig::default());
+            // The run knows its budget, so the concurrency governor may
+            // convert unused headroom into parallel chunk iterations —
+            // the paper's speed-for-memory tradeoff exercised both ways.
+            let opts = ExecOptions { budget_bytes: Some(budget) };
             let chunk_t = time_median(
                 || {
                     let tr = MemoryTracker::new();
-                    let _ = execute_chunked(g, &result.plans, &ins, &ps, &tr);
+                    let _ = execute_chunked_opts(g, &result.plans, &ins, &ps, &tr, &opts);
                 },
                 1,
                 3,
             );
             let tr = MemoryTracker::new();
             let ins_t: Vec<_> = ins.iter().map(|t| t.to_contiguous(Some(tr.clone()))).collect();
-            let (_, chunk_stats) = execute_chunked(g, &result.plans, &ins_t, &ps, &tr);
+            let (_, chunk_stats) = execute_chunked_opts(g, &result.plans, &ins_t, &ps, &tr, &opts);
 
             table.row(vec![
                 name.to_string(),

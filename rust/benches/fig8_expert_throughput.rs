@@ -12,7 +12,7 @@ use autochunk::exec::{random_inputs, random_params};
 use autochunk::models::{evoformer, EvoformerConfig};
 use autochunk::passes::expert::expert_plans;
 use autochunk::passes::{autochunk, AutoChunkConfig};
-use autochunk::plan::execute_chunked;
+use autochunk::plan::{execute_chunked, execute_chunked_opts, ExecOptions};
 use autochunk::tensor::MemoryTracker;
 use autochunk::util::bench::{mib, ms, time_median, Table};
 
@@ -54,10 +54,14 @@ fn main() {
             1,
             3,
         );
+        // AutoChunk knows its budget (the expert's peak), so its governor
+        // may spend leftover headroom on concurrent chunk iterations —
+        // the same matched-memory comparison, now budget-aware.
+        let opts = ExecOptions { budget_bytes: Some(expert_est) };
         let t_auto = time_median(
             || {
                 let tr = MemoryTracker::new();
-                let _ = execute_chunked(&g, &result.plans, &ins, &ps, &tr);
+                let _ = execute_chunked_opts(&g, &result.plans, &ins, &ps, &tr, &opts);
             },
             1,
             3,

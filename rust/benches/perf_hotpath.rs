@@ -3,7 +3,14 @@
 //!
 //! * L3 interpreter: matmul kernel, slice/concat traffic, per-op dispatch;
 //! * compiler: estimation / search / selection wall time;
-//! * end-to-end: chunked vs unchunked execution of the reference models.
+//! * end-to-end: chunked vs unchunked execution of the reference models;
+//! * thread scaling: the same matmul at pool width 1 vs the configured
+//!   `AUTOCHUNK_THREADS` width.
+//!
+//! Besides the human-readable table, the run emits
+//! `BENCH_perf_hotpath.json` (name, median ms, GFLOP/s, thread count) so
+//! later changes have a machine-readable perf trajectory to regress
+//! against.
 //!
 //! `cargo bench --bench perf_hotpath`
 
@@ -16,31 +23,79 @@ use autochunk::tensor::layout::{concat, split};
 use autochunk::tensor::matmul::matmul;
 use autochunk::tensor::{MemoryTracker, Tensor};
 use autochunk::util::bench::{ms, time_median, Table};
+use autochunk::util::pool;
+
+/// Machine-readable sidecar rows for `BENCH_perf_hotpath.json`.
+#[derive(Default)]
+struct JsonReport {
+    rows: Vec<String>,
+}
+
+impl JsonReport {
+    fn push(&mut self, name: &str, median_ms: f64, gflops: Option<f64>, threads: usize) {
+        let g = gflops
+            .map(|v| format!("{v:.3}"))
+            .unwrap_or_else(|| "null".to_string());
+        self.rows.push(format!(
+            "  {{\"name\": \"{name}\", \"median_ms\": {median_ms:.4}, \
+             \"gflops\": {g}, \"threads\": {threads}}}"
+        ));
+    }
+
+    fn write(&self, path: &str) {
+        let body = format!("[\n{}\n]\n", self.rows.join(",\n"));
+        if let Err(e) = std::fs::write(path, body) {
+            eprintln!("warning: could not write {path}: {e}");
+        }
+    }
+}
 
 fn main() {
+    let threads = pool::num_threads();
     let mut t = Table::new(&["hot path", "median", "notes"]);
+    let mut json = JsonReport::default();
 
     // ---- L3 kernels
     let a = Tensor::rand(&[512, 512], 1.0, 1, None);
     let b = Tensor::rand(&[512, 512], 1.0, 2, None);
-    let d = time_median(|| { let _ = matmul(&a, &b, None); }, 2, 5);
     let flops = 2.0 * 512f64.powi(3);
+
+    let d1 = pool::with_threads(1, || time_median(|| { let _ = matmul(&a, &b, None); }, 2, 5));
+    let d = time_median(|| { let _ = matmul(&a, &b, None); }, 2, 5);
     t.row(vec![
-        "matmul 512³".into(),
-        format!("{:.2} ms", ms(d)),
-        format!("{:.2} GFLOP/s", flops / d.as_secs_f64() / 1e9),
+        "matmul 512³ (1 thread)".into(),
+        format!("{:.2} ms", ms(d1)),
+        format!("{:.2} GFLOP/s", flops / d1.as_secs_f64() / 1e9),
     ]);
+    t.row(vec![
+        format!("matmul 512³ ({threads} threads)"),
+        format!("{:.2} ms", ms(d)),
+        format!(
+            "{:.2} GFLOP/s, {:.2}x vs 1 thread",
+            flops / d.as_secs_f64() / 1e9,
+            d1.as_secs_f64() / d.as_secs_f64()
+        ),
+    ]);
+    json.push("matmul_512_serial", ms(d1), Some(flops / d1.as_secs_f64() / 1e9), 1);
+    json.push("matmul_512", ms(d), Some(flops / d.as_secs_f64() / 1e9), threads);
 
     let thin_a = Tensor::rand(&[8, 512], 1.0, 3, None);
     let d_thin = time_median(|| { let _ = matmul(&thin_a, &b, None); }, 2, 5);
+    let thin_flops = 2.0 * 8.0 * 512.0 * 512.0;
     t.row(vec![
         "matmul 8×512×512 (thin slab)".into(),
         format!("{:.3} ms", ms(d_thin)),
         format!(
             "{:.2} GFLOP/s (density loss)",
-            2.0 * 8.0 * 512.0 * 512.0 / d_thin.as_secs_f64() / 1e9
+            thin_flops / d_thin.as_secs_f64() / 1e9
         ),
     ]);
+    json.push(
+        "matmul_thin_slab",
+        ms(d_thin),
+        Some(thin_flops / d_thin.as_secs_f64() / 1e9),
+        threads,
+    );
 
     let big = Tensor::rand(&[1024, 1024], 1.0, 4, None);
     let d_outer = time_median(
@@ -69,6 +124,8 @@ fn main() {
         format!("{:.3} ms", ms(d_inner)),
         format!("{:.1}x outer (stride term)", d_inner.as_secs_f64() / d_outer.as_secs_f64()),
     ]);
+    json.push("split_concat_dim0", ms(d_outer), None, threads);
+    json.push("split_concat_dim1", ms(d_inner), None, threads);
 
     // ---- compiler passes
     let g = gpt(&GptConfig { seq: 1024, ..Default::default() });
@@ -78,6 +135,7 @@ fn main() {
         format!("{:.3} ms", ms(d_est)),
         String::new(),
     ]);
+    json.push("estimate_gpt1024", ms(d_est), None, threads);
     let prof = estimate(&g);
     let d_search = time_median(
         || {
@@ -97,6 +155,7 @@ fn main() {
             cands.len()
         ),
     ]);
+    json.push("search_gpt1024", ms(d_search), None, threads);
     let base = prof.peak_bytes;
     let d_compile = time_median(
         || {
@@ -110,6 +169,7 @@ fn main() {
         format!("{:.0} ms", ms(d_compile)),
         String::new(),
     ]);
+    json.push("autochunk_compile_gpt1024", ms(d_compile), None, threads);
 
     // ---- end-to-end interpreter
     let g = gpt(&GptConfig { seq: 512, ..Default::default() });
@@ -145,7 +205,11 @@ fn main() {
             100.0 * (d_chunk.as_secs_f64() / d_base.as_secs_f64() - 1.0)
         ),
     ]);
+    json.push("gpt512_unchunked_e2e", ms(d_base), None, threads);
+    json.push("gpt512_chunked_e2e", ms(d_chunk), None, threads);
 
-    println!("== Perf hot paths ==\n");
+    println!("== Perf hot paths (pool width {threads}) ==\n");
     print!("{}", t.render());
+    json.write("BENCH_perf_hotpath.json");
+    println!("\nwrote BENCH_perf_hotpath.json");
 }

@@ -24,7 +24,7 @@ pub use metrics::{MetricsReport, Recorder};
 pub use request::{synthetic_workload, Request, RequestOutcome, Response};
 
 use crate::runtime::{ArtifactMeta, Runtime};
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::time::Instant;
 
 /// Coordinator configuration.
@@ -39,6 +39,11 @@ pub struct ServeConfig {
     /// Variant modes the router may use (e.g. `["dense"]` for the
     /// no-chunking baseline; empty = all modes).
     pub allowed_modes: Vec<String>,
+    /// Kernel/chunk pool width while this worker executes waves
+    /// (0 = inherit `AUTOCHUNK_THREADS` / machine default). A deployment
+    /// running several coordinator workers per host sizes each one so the
+    /// workers don't oversubscribe the cores.
+    pub worker_threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -49,6 +54,7 @@ impl Default for ServeConfig {
             max_batch: 8,
             model: "gpt".into(),
             allowed_modes: Vec::new(),
+            worker_threads: 0,
         }
     }
 }
@@ -136,6 +142,14 @@ impl Coordinator {
 
     /// Serve a closed workload to completion; returns responses + metrics.
     pub fn serve(&mut self, requests: &[Request]) -> Result<(Vec<Response>, MetricsReport)> {
+        let width = match self.config.worker_threads {
+            0 => crate::util::pool::num_threads(),
+            n => n,
+        };
+        crate::util::pool::with_threads(width, || self.serve_inner(requests))
+    }
+
+    fn serve_inner(&mut self, requests: &[Request]) -> Result<(Vec<Response>, MetricsReport)> {
         let t0 = Instant::now();
         let mut recorder = Recorder::new();
         let mut responses: Vec<Response> = Vec::with_capacity(requests.len());
@@ -205,7 +219,7 @@ mod tests {
             budget_bytes: budget,
             max_batch: 8,
             model: "gpt".into(),
-            allowed_modes: Vec::new(),
+            ..ServeConfig::default()
         })
         .unwrap()
     }
@@ -294,6 +308,8 @@ mod tests {
         }
     }
 
+    // Serving waves executes artifacts, which needs the real PJRT runtime.
+    #[cfg(feature = "pjrt")]
     #[test]
     fn serve_completes_or_rejects_every_request() {
         if !have_artifacts() {
@@ -317,6 +333,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn chunked_variants_break_the_memory_wall() {
         if !have_artifacts() {

@@ -15,6 +15,11 @@ pub struct ExecStats {
     pub peak_bytes: usize,
     /// Number of nodes executed (chunked bodies count once per chunk).
     pub nodes_executed: usize,
+    /// Pool width the run was entered with ([`crate::util::pool::num_threads`]).
+    pub threads: usize,
+    /// Largest in-flight chunk-iteration count the governor granted
+    /// (0 for unchunked runs, 1 when chunk loops ran serially).
+    pub max_chunk_degree: usize,
 }
 
 /// Execute `graph` with positional `inputs`/`params`; intermediates land on
@@ -53,7 +58,10 @@ pub fn execute(
         values[id] = Some(params[pos].clone());
     }
 
-    let mut stats = ExecStats::default();
+    let mut stats = ExecStats {
+        threads: crate::util::pool::num_threads(),
+        ..ExecStats::default()
+    };
     for node in &graph.nodes {
         if values[node.id].is_some() {
             // leaf already bound
@@ -123,7 +131,8 @@ pub fn execute_node(node: &Node, values: &[Option<Tensor>], tracker: &MemoryTrac
         Op::Reduce { op, axis, keepdims } => reduce(*op, arg(0), *axis, *keepdims, tr),
         Op::Softmax { axis } => softmax(arg(0), *axis, tr),
         Op::Concat { axis } => {
-            let parts: Vec<Tensor> = node.inputs.iter().map(|&i| values[i].clone().unwrap()).collect();
+            let parts: Vec<Tensor> =
+                node.inputs.iter().map(|&i| values[i].clone().unwrap()).collect();
             concat(&parts, *axis, tr)
         }
         Op::Slice { axis, start, len } => arg(0).slice_axis(*axis, *start, *len),

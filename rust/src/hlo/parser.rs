@@ -4,7 +4,8 @@ use crate::ir::{Graph, Node, NodeId, Op};
 use crate::tensor::ops::{BinaryOp, UnaryOp};
 use crate::tensor::reduce::ReduceOp;
 use crate::tensor::DType;
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
 use std::collections::HashMap;
 
 /// Parse an HLO-text module file into a [`Graph`].

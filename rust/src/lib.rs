@@ -12,8 +12,12 @@
 //! * [`exec`] — the baseline interpreter with measured peak memory;
 //! * [`tensor`] — the instrumented CPU tensor substrate;
 //! * [`models`] — the four evaluation models (GPT, ViT, Evoformer, UNet);
-//! * [`runtime`] — PJRT loading/execution of JAX AOT artifacts;
-//! * [`coordinator`] — the serving stack (router, batcher, scheduler).
+//! * [`runtime`] — PJRT loading/execution of JAX AOT artifacts (behind
+//!   the `pjrt` feature; stubbed offline);
+//! * [`coordinator`] — the serving stack (router, batcher, scheduler);
+//! * [`util`] — the scoped worker pool behind all kernel/chunk/search
+//!   parallelism (`AUTOCHUNK_THREADS`; DESIGN.md §4), the internal
+//!   error type, and the bench timer.
 pub mod coordinator;
 pub mod exec;
 pub mod hlo;

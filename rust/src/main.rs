@@ -14,10 +14,11 @@
 //! Arguments are `--key value` pairs (hand-rolled parser; no clap in the
 //! vendored dependency set).
 
-use anyhow::{anyhow, bail, Result};
 use autochunk::coordinator::{synthetic_workload, Coordinator, ServeConfig};
 use autochunk::models;
 use autochunk::passes::{autochunk, estimate, AutoChunkConfig};
+use autochunk::util::error::Result;
+use autochunk::{anyhow, bail};
 use std::collections::HashMap;
 
 fn main() {
@@ -207,6 +208,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: args.get_usize("max-batch", 8)?,
         model: args.get("model", "gpt"),
         allowed_modes: modes,
+        worker_threads: args.get_usize("threads", 0)?,
     })?;
     let requests = synthetic_workload(n, min_len, max_len, seed);
     println!(

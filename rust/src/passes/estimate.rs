@@ -270,6 +270,32 @@ pub fn estimate_under_plan(graph: &Graph, plans: &[ChunkPlan]) -> MemoryProfile 
     simulate(graph, plans)
 }
 
+/// Upper bound on the activation bytes one chunk *iteration* of `plan`
+/// holds live at once: the sum of every region node's output scaled to
+/// the chunk step along its assigned dim, plus the largest kernel
+/// workspace. Two deliberate over-approximations keep this a bound
+/// rather than an estimate — the executor's concurrency governor prices
+/// one extra in-flight iteration at this many bytes, and erring high
+/// keeps parallel runs under budget:
+///
+/// * outputs are *summed*, not liveness-tracked;
+/// * workspace is charged as if every kernel input were non-contiguous
+///   (chunk-input slices often are) and is left unscaled.
+pub fn per_chunk_bytes(graph: &Graph, plan: &ChunkPlan) -> usize {
+    let contig = vec![false; graph.len()];
+    let mut sum = 0usize;
+    let mut max_ws = 0usize;
+    for &r in &plan.region {
+        let node = graph.node(r);
+        let dim = plan.node_dims[&r];
+        let extent = node.shape[dim].max(1);
+        let step = extent.div_ceil(plan.n_chunks.max(1));
+        sum += node.byte_size() / extent * step;
+        max_ws = max_ws.max(node_workspace(graph, r, &contig));
+    }
+    sum + max_ws
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -17,6 +17,7 @@ use super::estimate::MemoryProfile;
 use super::flow::{propagate_to_input, FlowResult};
 use crate::ir::{Graph, NodeId};
 use crate::plan::ChunkPlan;
+use crate::util::pool;
 use std::collections::{HashMap, HashSet, VecDeque};
 
 /// Tunables for the search pass.
@@ -95,10 +96,20 @@ pub fn search_chunks_with_stats(
     let lo = peak.saturating_sub(config.window);
     let hi = (peak + config.window).min(n.saturating_sub(1));
 
-    for start in lo..=peak {
-        if graph.node(start).op.is_leaf() {
-            continue;
-        }
+    // Candidate evaluation is independent per region start, so the starts
+    // fan out over the worker pool; results are merged back in start
+    // order before the global dedup, which keeps the candidate list
+    // identical to the serial sweep (selection stays deterministic).
+    let starts: Vec<NodeId> = (lo..=peak)
+        .filter(|&s| !graph.node(s).op.is_leaf())
+        .collect();
+    let users = &users;
+    let constant = &constant;
+    let taken = &taken;
+    let per_start = pool::parallel_map(starts.len(), |si| {
+        let start = starts[si];
+        let mut local = SearchStats::default();
+        let mut found: Vec<(String, ChunkPlan)> = Vec::new();
         'ends: for end in peak..=hi {
             if end < start || end - start + 1 > config.max_region {
                 continue;
@@ -119,7 +130,7 @@ pub fn search_chunks_with_stats(
                     continue 'ends;
                 }
             }
-            stats.regions_considered += 1;
+            local.regions_considered += 1;
 
             let region_set: HashSet<NodeId> = region.iter().copied().collect();
             // Outputs: region nodes consumed outside, or graph outputs.
@@ -145,20 +156,28 @@ pub fn search_chunks_with_stats(
                         continue;
                     }
                     if config.two_stage_filter && !stage1_trace(graph, &region_set, out0, dim) {
-                        stats.stage1_rejected += 1;
+                        local.stage1_rejected += 1;
                         continue;
                     }
-                    stats.stage2_runs += 1;
+                    local.stage2_runs += 1;
                     if let Some(plan) =
-                        trace_region(graph, &users, &region, &outputs, out0, dim, config, Some(peak))
+                        trace_region(graph, users, &region, &outputs, out0, dim, config, Some(peak))
                     {
-                        let key = plan_key(&plan);
-                        if seen.insert(key) {
-                            debug_assert!(plan.validate(graph).is_ok(), "{:?}", plan.validate(graph));
-                            out.push(ChunkCandidate { plan });
-                        }
+                        found.push((plan_key(&plan), plan));
                     }
                 }
+            }
+        }
+        (found, local)
+    });
+    for (found, local) in per_start {
+        stats.regions_considered += local.regions_considered;
+        stats.stage1_rejected += local.stage1_rejected;
+        stats.stage2_runs += local.stage2_runs;
+        for (key, plan) in found {
+            if seen.insert(key) {
+                debug_assert!(plan.validate(graph).is_ok(), "{:?}", plan.validate(graph));
+                out.push(ChunkCandidate { plan });
             }
         }
     }
@@ -368,7 +387,9 @@ fn trace_region(
             }
         }
         // also anything external the hoisted nodes exposed is irrelevant now
-        pass_inputs.retain(|p| !unassigned_set.contains(p) || users[*p].iter().any(|c| assigned.contains(c)));
+        pass_inputs.retain(|p| {
+            !unassigned_set.contains(p) || users[*p].iter().any(|c| assigned.contains(c))
+        });
     }
 
     // Peak must remain inside the (possibly narrowed) region.

@@ -5,12 +5,66 @@
 //! accumulators (no extra concat copy); per-chunk intermediates drop at
 //! iteration end, which is where the peak-memory reduction physically
 //! comes from.
+//!
+//! Chunk iterations have no cross-chunk dependency by construction
+//! (Rule 2: each reads its own input slice and fills its own output
+//! range), so they may run *concurrently* — turning leftover memory
+//! budget into throughput. The [`governed_degree`] governor caps the
+//! in-flight iteration count so the run still respects the configured
+//! budget: each extra iteration is priced at the plan's
+//! [`per_chunk_bytes`] upper bound (DESIGN.md §4).
 
 use super::{region_owner, ChunkPlan};
 use crate::exec::{execute_node, ExecStats};
 use crate::ir::{Graph, Node, NodeId, Op};
+use crate::passes::estimate::{estimate_under_plan, per_chunk_bytes};
 use crate::tensor::{contiguous_strides, MemoryTracker, Tensor};
+use crate::util::pool;
 use std::collections::HashMap;
+
+/// Options for the chunked executor.
+#[derive(Clone, Debug, Default)]
+pub struct ExecOptions {
+    /// Activation-memory budget (bytes) the chunk-concurrency governor
+    /// may spend leftover headroom from. `None` (the default) keeps the
+    /// chunk loop serial — chunking exists to cut peak memory, and
+    /// without a budget the governor has nothing to price concurrency
+    /// against; kernel-level parallelism still applies inside each
+    /// iteration.
+    pub budget_bytes: Option<usize>,
+}
+
+/// How many chunk iterations of a region may be in flight at once.
+///
+/// The serial chunked execution already peaks at `peak_estimate`; every
+/// *additional* in-flight iteration holds at most `per_chunk` further
+/// bytes, so the governor solves
+/// `peak_estimate + (degree − 1) · per_chunk ≤ budget` for the largest
+/// degree, clamped to the pool width and the iteration count. No budget
+/// (nothing to trade) or no headroom degrades gracefully: degree 1 is
+/// the exact serial loop.
+pub fn governed_degree(
+    threads: usize,
+    n_iters: usize,
+    budget: Option<usize>,
+    peak_estimate: usize,
+    per_chunk: usize,
+) -> usize {
+    let cap = threads.min(n_iters).max(1);
+    match budget {
+        None => 1,
+        Some(b) if b <= peak_estimate => 1,
+        Some(b) => {
+            let headroom = b - peak_estimate;
+            let extra = if per_chunk == 0 {
+                cap.saturating_sub(1)
+            } else {
+                headroom / per_chunk
+            };
+            cap.min(1 + extra)
+        }
+    }
+}
 
 /// Execute `graph` under `plans`. Semantics identical to
 /// [`crate::exec::execute`]; peak memory is lower, wall time slightly
@@ -22,11 +76,29 @@ pub fn execute_chunked(
     params: &[Tensor],
     tracker: &MemoryTracker,
 ) -> (Vec<Tensor>, ExecStats) {
+    execute_chunked_opts(graph, plans, inputs, params, tracker, &ExecOptions::default())
+}
+
+/// As [`execute_chunked`], with explicit [`ExecOptions`] (budget-aware
+/// chunk concurrency).
+pub fn execute_chunked_opts(
+    graph: &Graph,
+    plans: &[ChunkPlan],
+    inputs: &[Tensor],
+    params: &[Tensor],
+    tracker: &MemoryTracker,
+    opts: &ExecOptions,
+) -> (Vec<Tensor>, ExecStats) {
     assert_eq!(inputs.len(), graph.inputs.len(), "input arity");
     assert_eq!(params.len(), graph.params.len(), "param arity");
     for p in plans {
         debug_assert!(p.validate(graph).is_ok(), "{:?}", p.validate(graph));
     }
+    // The governor prices concurrency against the serial chunked peak.
+    let peak_estimate = opts
+        .budget_bytes
+        .map(|_| estimate_under_plan(graph, plans).peak_bytes)
+        .unwrap_or(0);
 
     let users = graph.users();
     let mut refcount: Vec<usize> = users.iter().map(|u| u.len()).collect();
@@ -60,7 +132,7 @@ pub fn execute_chunked(
         values[id] = Some(params[pos].clone());
     }
 
-    let mut stats = ExecStats::default();
+    let mut stats = ExecStats { threads: pool::num_threads(), ..ExecStats::default() };
     let mut scratch: Vec<Option<Tensor>> = vec![None; graph.len()];
     // Leaves consumed only by regions get freed before the main loop
     // reaches their id; remember which ids were pre-bound.
@@ -92,7 +164,16 @@ pub fn execute_chunked(
         if let Some(plan_ids) = trigger.get(&id) {
             for &pi in plan_ids {
                 let plan = &plans[pi];
-                execute_region(graph, plan, &mut values, &mut scratch, tracker, &mut stats);
+                let n_iters = plan.chunk_extent(graph).div_ceil(plan.chunk_step(graph));
+                let degree = governed_degree(
+                    pool::num_threads(),
+                    n_iters,
+                    opts.budget_bytes,
+                    peak_estimate,
+                    per_chunk_bytes(graph, plan),
+                );
+                stats.max_chunk_degree = stats.max_chunk_degree.max(degree);
+                execute_region(graph, plan, &mut values, &mut scratch, tracker, &mut stats, degree);
                 // release external inputs consumed by the region
                 for &r in &plan.region {
                     for &i in &graph.node(r).inputs {
@@ -179,6 +260,9 @@ impl Accumulator {
 }
 
 /// Run one region's chunk loop, binding its outputs into `values`.
+/// `degree` is the governed number of in-flight iterations; 1 is the
+/// exact legacy serial loop.
+#[allow(clippy::too_many_arguments)]
 fn execute_region(
     graph: &Graph,
     plan: &ChunkPlan,
@@ -186,6 +270,7 @@ fn execute_region(
     scratch: &mut [Option<Tensor>],
     tracker: &MemoryTracker,
     stats: &mut ExecStats,
+    degree: usize,
 ) {
     let extent = plan.chunk_extent(graph);
     let step = plan.chunk_step(graph);
@@ -213,50 +298,99 @@ fn execute_region(
         })
         .collect();
 
-    // Chunk-input bases live in `values` already.
-    let mut start = 0usize;
-    while start < extent {
-        let len = step.min(extent - start);
+    if degree <= 1 {
+        // Chunk-input bases live in `values` already.
+        let mut start = 0usize;
+        while start < extent {
+            let len = step.min(extent - start);
 
-        // Bind external values into scratch: pass inputs whole, chunk
-        // inputs sliced (zero-copy views).
-        for (k, &p) in plan.pass_inputs.iter().enumerate() {
-            scratch[p] = Some(pass_vals[k].clone());
-        }
-        for &(i, axis) in &plan.chunk_inputs {
-            let base = values[i].as_ref().expect("chunk input not live");
-            scratch[i] = Some(base.slice_axis(axis, start, len));
-        }
+            // Bind external values into scratch: pass inputs whole, chunk
+            // inputs sliced (zero-copy views).
+            for (k, &p) in plan.pass_inputs.iter().enumerate() {
+                scratch[p] = Some(pass_vals[k].clone());
+            }
+            for &(i, axis) in &plan.chunk_inputs {
+                let base = values[i].as_ref().expect("chunk input not live");
+                scratch[i] = Some(base.slice_axis(axis, start, len));
+            }
 
-        // Execute the region body with per-chunk shape adjustment.
-        for &r in &plan.region {
-            let node = graph.node(r);
-            let adjusted = adjust_node(node, plan.node_dims[&r], len);
-            let out = match &adjusted {
-                Some(n) => execute_node(n, scratch, tracker),
-                None => execute_node(node, scratch, tracker),
-            };
-            stats.nodes_executed += 1;
-            scratch[r] = Some(out);
-        }
+            // Execute the region body with per-chunk shape adjustment.
+            for &r in &plan.region {
+                let node = graph.node(r);
+                let adjusted = adjust_node(node, plan.node_dims[&r], len);
+                let out = match &adjusted {
+                    Some(n) => execute_node(n, scratch, tracker),
+                    None => execute_node(node, scratch, tracker),
+                };
+                stats.nodes_executed += 1;
+                scratch[r] = Some(out);
+            }
 
-        // Write output chunks into the accumulators.
-        for (k, &(o, _)) in plan.outputs.iter().enumerate() {
-            accs[k].push(scratch[o].as_ref().unwrap());
-        }
+            // Write output chunks into the accumulators.
+            for (k, &(o, _)) in plan.outputs.iter().enumerate() {
+                accs[k].push(scratch[o].as_ref().unwrap());
+            }
 
-        // Drop per-chunk values — this is the memory win.
-        for &r in &plan.region {
-            scratch[r] = None;
-        }
-        for &(i, _) in &plan.chunk_inputs {
-            scratch[i] = None;
-        }
-        for &p in &plan.pass_inputs {
-            scratch[p] = None;
-        }
+            // Drop per-chunk values — this is the memory win.
+            for &r in &plan.region {
+                scratch[r] = None;
+            }
+            for &(i, _) in &plan.chunk_inputs {
+                scratch[i] = None;
+            }
+            for &p in &plan.pass_inputs {
+                scratch[p] = None;
+            }
 
-        start += len;
+            start += len;
+        }
+    } else {
+        // Parallel chunk loop: waves of `degree` iterations run
+        // concurrently, each on a private scratch; results land in the
+        // accumulators in iteration order, so outputs are bitwise
+        // identical to the serial loop. The wave barrier (rather than a
+        // free-running queue) bounds in-flight iterations to `degree`,
+        // which is what the governor priced against the budget.
+        let mut iters: Vec<(usize, usize)> = Vec::new();
+        let mut start = 0usize;
+        while start < extent {
+            let len = step.min(extent - start);
+            iters.push((start, len));
+            start += len;
+        }
+        let values_ro: &[Option<Tensor>] = values;
+        for wave in iters.chunks(degree) {
+            let results: Vec<Vec<Tensor>> = pool::parallel_map(wave.len(), |wi| {
+                let (start, len) = wave[wi];
+                let mut local: Vec<Option<Tensor>> = vec![None; graph.len()];
+                for (k, &p) in plan.pass_inputs.iter().enumerate() {
+                    local[p] = Some(pass_vals[k].clone());
+                }
+                for &(i, axis) in &plan.chunk_inputs {
+                    let base = values_ro[i].as_ref().expect("chunk input not live");
+                    local[i] = Some(base.slice_axis(axis, start, len));
+                }
+                for &r in &plan.region {
+                    let node = graph.node(r);
+                    let adjusted = adjust_node(node, plan.node_dims[&r], len);
+                    let out = match &adjusted {
+                        Some(n) => execute_node(n, &local, tracker),
+                        None => execute_node(node, &local, tracker),
+                    };
+                    local[r] = Some(out);
+                }
+                plan.outputs
+                    .iter()
+                    .map(|&(o, _)| local[o].take().expect("region output missing"))
+                    .collect()
+            });
+            stats.nodes_executed += plan.region.len() * wave.len();
+            for outs in results {
+                for (k, t) in outs.into_iter().enumerate() {
+                    accs[k].push(&t);
+                }
+            }
+        }
     }
 
     for (k, &(o, _)) in plan.outputs.iter().enumerate() {

@@ -10,7 +10,7 @@
 
 pub mod exec_chunked;
 
-pub use exec_chunked::execute_chunked;
+pub use exec_chunked::{execute_chunked, execute_chunked_opts, governed_degree, ExecOptions};
 
 use crate::ir::{Graph, NodeId};
 use std::collections::HashMap;

@@ -5,122 +5,181 @@
 //! scans the directory, compiles the HLO text on the PJRT CPU client
 //! (`xla` crate; text interchange per /opt/xla-example/README.md), and
 //! executes variants from the serving hot path. Python is never invoked.
+//!
+//! The `xla` crate is an *external* dependency the offline build cannot
+//! fetch, so everything touching it sits behind the off-by-default `pjrt`
+//! cargo feature (DESIGN.md §6). Without it the [`Registry`] scan,
+//! admission control, and wave planning still work; only `run`/`run_f32`
+//! report an error.
 
-mod params;
 mod registry;
 
-pub use params::ParamSet;
 pub use registry::{ArtifactMeta, Registry};
 
-use anyhow::{Context, Result};
-use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
+mod params;
+#[cfg(feature = "pjrt")]
+pub use params::ParamSet;
 
-/// A compiled model variant ready to execute.
-pub struct LoadedModel {
-    pub meta: ArtifactMeta,
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "pjrt")]
+pub use pjrt::{LoadedModel, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;
 
-/// Lazily-loading runtime over an artifact directory.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    registry: Registry,
-    params: HashMap<(String, usize), ParamSet>, // by (model, seq bucket)
-    loaded: HashMap<String, LoadedModel>,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use super::{ArtifactMeta, ParamSet, Registry};
+    use crate::util::error::{Context, Result};
+    use std::collections::HashMap;
 
-impl Runtime {
-    /// Scan `dir` and connect the PJRT CPU client.
-    pub fn new(dir: &str) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let registry = Registry::scan(dir)?;
-        Ok(Runtime {
-            client,
-            registry,
-            params: HashMap::new(),
-            loaded: HashMap::new(),
-        })
+    /// A compiled model variant ready to execute.
+    pub struct LoadedModel {
+        pub meta: ArtifactMeta,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    pub fn registry(&self) -> &Registry {
-        &self.registry
+    /// Lazily-loading runtime over an artifact directory.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        registry: Registry,
+        params: HashMap<(String, usize), ParamSet>, // by (model, seq bucket)
+        loaded: HashMap<String, LoadedModel>,
     }
 
-    /// Compile (once) and return the variant tagged `tag`.
-    pub fn load(&mut self, tag: &str) -> Result<&LoadedModel> {
-        if !self.loaded.contains_key(tag) {
+    impl Runtime {
+        /// Scan `dir` and connect the PJRT CPU client.
+        pub fn new(dir: &str) -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let registry = Registry::scan(dir)?;
+            Ok(Runtime {
+                client,
+                registry,
+                params: HashMap::new(),
+                loaded: HashMap::new(),
+            })
+        }
+
+        pub fn registry(&self) -> &Registry {
+            &self.registry
+        }
+
+        /// Compile (once) and return the variant tagged `tag`.
+        pub fn load(&mut self, tag: &str) -> Result<&LoadedModel> {
+            if !self.loaded.contains_key(tag) {
+                let meta = self
+                    .registry
+                    .get(tag)
+                    .with_context(|| format!("unknown artifact '{tag}'"))?
+                    .clone();
+                let proto = xla::HloModuleProto::from_text_file(&meta.hlo_path)
+                    .with_context(|| format!("parsing {}", meta.hlo_path))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {tag}"))?;
+                self.loaded.insert(tag.to_string(), LoadedModel { meta, exe });
+            }
+            Ok(&self.loaded[tag])
+        }
+
+        /// Parameter set for a (model, seq) bucket (loaded once per bucket).
+        pub fn params_for(&mut self, model: &str, seq: usize) -> Result<&ParamSet> {
+            let key = (model.to_string(), seq);
+            if !self.params.contains_key(&key) {
+                let ps = ParamSet::load(self.registry.dir(), model, seq)?;
+                self.params.insert(key.clone(), ps);
+            }
+            Ok(&self.params[&key])
+        }
+
+        /// Execute variant `tag` on `tokens` (padded/truncated to the bucket).
+        /// Returns the hidden-state output row-major. GPT artifacts only.
+        pub fn run(&mut self, tag: &str, tokens: &[i32]) -> Result<Vec<f32>> {
             let meta = self
                 .registry
                 .get(tag)
                 .with_context(|| format!("unknown artifact '{tag}'"))?
                 .clone();
-            let proto = xla::HloModuleProto::from_text_file(&meta.hlo_path)
-                .with_context(|| format!("parsing {}", meta.hlo_path))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling {tag}"))?;
-            self.loaded.insert(tag.to_string(), LoadedModel { meta, exe });
+            let seq = meta.seq;
+            let mut toks = tokens.to_vec();
+            toks.resize(seq, 0); // pad with token 0 / truncate to bucket
+            let tok_lit = xla::Literal::vec1(&toks).reshape(&[seq as i64])?;
+            self.run_with_input(&meta, tok_lit)
         }
-        Ok(&self.loaded[tag])
-    }
 
-    /// Parameter set for a (model, seq) bucket (loaded once per bucket).
-    pub fn params_for(&mut self, model: &str, seq: usize) -> Result<&ParamSet> {
-        let key = (model.to_string(), seq);
-        if !self.params.contains_key(&key) {
-            let ps = ParamSet::load(self.registry.dir(), model, seq)?;
-            self.params.insert(key.clone(), ps);
+        /// Execute a ViT-style variant on flat f32 input (padded to the
+        /// bucket's `[seq, patch_dim]` shape).
+        pub fn run_f32(&mut self, tag: &str, data: &[f32], patch_dim: usize) -> Result<Vec<f32>> {
+            let meta = self
+                .registry
+                .get(tag)
+                .with_context(|| format!("unknown artifact '{tag}'"))?
+                .clone();
+            let want = meta.seq * patch_dim;
+            let mut buf = data.to_vec();
+            buf.resize(want, 0.0);
+            let lit = xla::Literal::vec1(&buf).reshape(&[meta.seq as i64, patch_dim as i64])?;
+            self.run_with_input(&meta, lit)
         }
-        Ok(&self.params[&key])
-    }
 
-    /// Execute variant `tag` on `tokens` (padded/truncated to the bucket).
-    /// Returns the hidden-state output row-major. GPT artifacts only.
-    pub fn run(&mut self, tag: &str, tokens: &[i32]) -> Result<Vec<f32>> {
-        let meta = self
-            .registry
-            .get(tag)
-            .with_context(|| format!("unknown artifact '{tag}'"))?
-            .clone();
-        let seq = meta.seq;
-        let mut toks = tokens.to_vec();
-        toks.resize(seq, 0); // pad with token 0 / truncate to bucket
-        let tok_lit = xla::Literal::vec1(&toks).reshape(&[seq as i64])?;
-        self.run_with_input(&meta, tok_lit)
-    }
+        fn run_with_input(&mut self, meta: &ArtifactMeta, input: xla::Literal) -> Result<Vec<f32>> {
+            // make sure params for the bucket are loaded before borrowing exe
+            self.params_for(&meta.model, meta.seq)?;
+            self.load(&meta.tag)?;
+            let params = &self.params[&(meta.model.clone(), meta.seq)];
+            let model = &self.loaded[&meta.tag];
 
-    /// Execute a ViT-style variant on flat f32 input (padded to the
-    /// bucket's `[seq, patch_dim]` shape).
-    pub fn run_f32(&mut self, tag: &str, data: &[f32], patch_dim: usize) -> Result<Vec<f32>> {
-        let meta = self
-            .registry
-            .get(tag)
-            .with_context(|| format!("unknown artifact '{tag}'"))?
-            .clone();
-        let want = meta.seq * patch_dim;
-        let mut buf = data.to_vec();
-        buf.resize(want, 0.0);
-        let lit = xla::Literal::vec1(&buf).reshape(&[meta.seq as i64, patch_dim as i64])?;
-        self.run_with_input(&meta, lit)
-    }
-
-    fn run_with_input(&mut self, meta: &ArtifactMeta, input: xla::Literal) -> Result<Vec<f32>> {
-        // make sure params for the bucket are loaded before borrowing exe
-        self.params_for(&meta.model, meta.seq)?;
-        self.load(&meta.tag)?;
-        let params = &self.params[&(meta.model.clone(), meta.seq)];
-        let model = &self.loaded[&meta.tag];
-
-        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + params.literals.len());
-        args.push(&input);
-        for l in &params.literals {
-            args.push(l);
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + params.literals.len());
+            args.push(&input);
+            for l in &params.literals {
+                args.push(l);
+            }
+            let result = model.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
         }
-        let result = model.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::Registry;
+    use crate::util::error::Result;
+
+    /// Offline stand-in for the PJRT runtime: registry scanning and the
+    /// coordinator's routing/wave-planning paths work; execution errors.
+    pub struct Runtime {
+        registry: Registry,
+    }
+
+    impl Runtime {
+        /// Scan `dir`; succeeds whenever the artifact directory parses.
+        pub fn new(dir: &str) -> Result<Runtime> {
+            Ok(Runtime {
+                registry: Registry::scan(dir)?,
+            })
+        }
+
+        pub fn registry(&self) -> &Registry {
+            &self.registry
+        }
+
+        /// Execution requires the `pjrt` feature.
+        pub fn run(&mut self, tag: &str, _tokens: &[i32]) -> Result<Vec<f32>> {
+            Err(crate::anyhow!(
+                "cannot execute artifact '{tag}': this build lacks the `pjrt` feature \
+                 (see DESIGN.md §6)"
+            ))
+        }
+
+        /// Execution requires the `pjrt` feature.
+        pub fn run_f32(&mut self, tag: &str, _data: &[f32], _patch_dim: usize) -> Result<Vec<f32>> {
+            Err(crate::anyhow!(
+                "cannot execute artifact '{tag}': this build lacks the `pjrt` feature \
+                 (see DESIGN.md §6)"
+            ))
+        }
     }
 }
 
@@ -153,6 +212,18 @@ mod tests {
         assert!(chunked.est_activation_bytes < dense.est_activation_bytes);
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut rt = Runtime::new(&artifacts_dir()).unwrap();
+        let err = rt.run("gpt_dense_s64", &[1, 2, 3]).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[cfg(feature = "pjrt")]
     #[test]
     fn dense_and_chunked_agree_through_pjrt() {
         if !have_artifacts() {
@@ -179,6 +250,7 @@ mod tests {
         assert!(f_max < 1e-3, "dense vs fused diff {f_max}");
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn vit_variants_agree_through_pjrt() {
         if !have_artifacts()
@@ -200,6 +272,7 @@ mod tests {
         assert!(d2 < 1e-3, "dense vs chunked {d2}");
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn short_request_padded_into_bucket() {
         if !have_artifacts() {

@@ -1,7 +1,8 @@
 //! Parameter blobs: raw little-endian f32 exported by `aot.py`, turned
 //! into PJRT literals in the positional (name-sorted) ABI order.
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 
 /// One seq bucket's parameters as ready-to-pass literals.
 pub struct ParamSet {

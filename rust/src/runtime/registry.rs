@@ -1,6 +1,7 @@
 //! Artifact registry: scan `artifacts/` and parse `.meta` sidecars.
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::error::{Context, Result};
 use std::collections::HashMap;
 
 /// Metadata of one AOT artifact (from its `.meta` key=value sidecar).

@@ -8,6 +8,7 @@
 //! `python/compile/kernels/attention.py`).
 
 use super::{broadcast_shapes, MemoryTracker, Tensor};
+use crate::util::pool;
 
 /// Key/value block length for the streaming pass.
 pub const KV_BLOCK: usize = 64;
@@ -48,66 +49,74 @@ pub fn fused_attention(
     let vv = vc.f32_contiguous();
 
     let mut out = vec![0.0f32; batch * sq * dv];
-    // Running stats per batch element (reused across batches).
-    let mut m = vec![f32::NEG_INFINITY; sq];
-    let mut l = vec![0.0f32; sq];
-    let mut scores = vec![0.0f32; sq * KV_BLOCK];
-
+    // Every query row's online-softmax stream is independent of every
+    // other row, so rows partition over the pool *within* each batch
+    // element; each worker carries its own running max/denominator and
+    // score scratch. The kv-block order per row is untouched, so results
+    // are bitwise identical to the serial stream at any width.
+    // Per-batch-element work: each par_rows call below covers one batch
+    // element, so the inline-threshold decision must not be inflated by
+    // the batch count.
+    let work = sq * skv * (d + dv);
     for bi in 0..batch {
         let qm = &qv[bi * sq * d..(bi + 1) * sq * d];
         let km = &kv[bi * skv * d..(bi + 1) * skv * d];
         let vm = &vv[bi * skv * dv..(bi + 1) * skv * dv];
         let om = &mut out[bi * sq * dv..(bi + 1) * sq * dv];
-        m.iter_mut().for_each(|x| *x = f32::NEG_INFINITY);
-        l.iter_mut().for_each(|x| *x = 0.0);
+        pool::par_rows(om, sq, dv, work, |i0, i1, om_slab| {
+            let rows = i1 - i0;
+            let mut m = vec![f32::NEG_INFINITY; rows];
+            let mut l = vec![0.0f32; rows];
+            let mut scores = vec![0.0f32; rows * KV_BLOCK];
 
-        let mut blk = 0usize;
-        while blk < skv {
-            let bk = KV_BLOCK.min(skv - blk);
-            // scores = q @ k_blk^T * scale
-            for i in 0..sq {
-                let qr = &qm[i * d..(i + 1) * d];
-                for j in 0..bk {
-                    let kr = &km[(blk + j) * d..(blk + j + 1) * d];
-                    let mut acc = 0.0f32;
-                    for p in 0..d {
-                        acc += qr[p] * kr[p];
-                    }
-                    scores[i * bk + j] = acc * scale;
-                }
-            }
-            // online softmax update
-            for i in 0..sq {
-                let row = &scores[i * bk..i * bk + bk];
-                let blk_max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-                let new_m = m[i].max(blk_max);
-                let correction = if m[i].is_finite() { (m[i] - new_m).exp() } else { 0.0 };
-                // rescale accumulated output and denominator
-                if correction != 1.0 {
-                    for p in 0..dv {
-                        om[i * dv + p] *= correction;
-                    }
-                    l[i] *= correction;
-                }
-                for j in 0..bk {
-                    let e = (row[j] - new_m).exp();
-                    l[i] += e;
-                    let vr = &vm[(blk + j) * dv..(blk + j + 1) * dv];
-                    for p in 0..dv {
-                        om[i * dv + p] += e * vr[p];
+            let mut blk = 0usize;
+            while blk < skv {
+                let bk = KV_BLOCK.min(skv - blk);
+                // scores = q @ k_blk^T * scale
+                for i in 0..rows {
+                    let qr = &qm[(i0 + i) * d..(i0 + i + 1) * d];
+                    for j in 0..bk {
+                        let kr = &km[(blk + j) * d..(blk + j + 1) * d];
+                        let mut acc = 0.0f32;
+                        for p in 0..d {
+                            acc += qr[p] * kr[p];
+                        }
+                        scores[i * bk + j] = acc * scale;
                     }
                 }
-                m[i] = new_m;
+                // online softmax update
+                for i in 0..rows {
+                    let row = &scores[i * bk..i * bk + bk];
+                    let blk_max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                    let new_m = m[i].max(blk_max);
+                    let correction = if m[i].is_finite() { (m[i] - new_m).exp() } else { 0.0 };
+                    // rescale accumulated output and denominator
+                    if correction != 1.0 {
+                        for p in 0..dv {
+                            om_slab[i * dv + p] *= correction;
+                        }
+                        l[i] *= correction;
+                    }
+                    for j in 0..bk {
+                        let e = (row[j] - new_m).exp();
+                        l[i] += e;
+                        let vr = &vm[(blk + j) * dv..(blk + j + 1) * dv];
+                        for p in 0..dv {
+                            om_slab[i * dv + p] += e * vr[p];
+                        }
+                    }
+                    m[i] = new_m;
+                }
+                blk += bk;
             }
-            blk += bk;
-        }
-        // normalize
-        for i in 0..sq {
-            let inv = 1.0 / l[i];
-            for p in 0..dv {
-                om[i * dv + p] *= inv;
+            // normalize
+            for i in 0..rows {
+                let inv = 1.0 / l[i];
+                for p in 0..dv {
+                    om_slab[i * dv + p] *= inv;
+                }
             }
-        }
+        });
     }
 
     let mut out_shape = batch_shape;

@@ -7,6 +7,7 @@
 
 use super::matmul::matmul;
 use super::{MemoryTracker, Tensor};
+use crate::util::pool;
 
 /// `x: [N, Cin, H, W]`, `w: [Cout, Cin, Kh, Kw]` → `[N, Cout, Ho, Wo]`.
 /// Symmetric zero padding `pad`, stride `stride`.
@@ -30,13 +31,21 @@ pub fn conv2d(
     let xv = xc.f32_contiguous();
 
     // im2col: [N*Ho*Wo, Cin*Kh*Kw] — the workspace that dominates memory.
+    // Each output row is independent, so rows partition over the pool.
     let cols_rows = n * ho * wo;
     let cols_width = cin * kh * kw;
     let mut cols = vec![0.0f32; cols_rows * cols_width];
-    for ni in 0..n {
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let row = ((ni * ho + oy) * wo + ox) * cols_width;
+    pool::par_rows(
+        &mut cols,
+        cols_rows,
+        cols_width,
+        cols_rows * cols_width,
+        |r0, r1, slab| {
+            for r in r0..r1 {
+                let ni = r / (ho * wo);
+                let oy = (r / wo) % ho;
+                let ox = r % wo;
+                let dst = &mut slab[(r - r0) * cols_width..(r - r0 + 1) * cols_width];
                 let mut col_ix = 0usize;
                 for ci in 0..cin {
                     let plane = (ni * cin + ci) * h * wd;
@@ -44,7 +53,7 @@ pub fn conv2d(
                         let iy = oy as isize * stride as isize + ky as isize - pad as isize;
                         for kx in 0..kw {
                             let ix = ox as isize * stride as isize + kx as isize - pad as isize;
-                            cols[row + col_ix] = if iy >= 0
+                            dst[col_ix] = if iy >= 0
                                 && iy < h as isize
                                 && ix >= 0
                                 && ix < wd as isize
@@ -58,8 +67,8 @@ pub fn conv2d(
                     }
                 }
             }
-        }
-    }
+        },
+    );
     let cols_t = Tensor::from_f32(cols, &[cols_rows, cols_width], tracker.clone());
 
     // weights as [Cout, Cin*Kh*Kw]; out = cols @ w^T → [N*Ho*Wo, Cout]
@@ -83,19 +92,20 @@ pub fn avgpool2x_nchw(x: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
     let xc = x.to_contiguous(tracker.clone());
     let xv = xc.f32_contiguous();
     let mut out = vec![0.0f32; n * c * oh * ow];
-    for ni in 0..n {
-        for ci in 0..c {
-            let sbase = (ni * c + ci) * h * w;
-            let dbase = (ni * c + ci) * oh * ow;
+    // One task per (n, c) plane — planes are disjoint output slabs.
+    pool::par_rows(&mut out, n * c, oh * ow, n * c * h * w, |p0, p1, slab| {
+        for p in p0..p1 {
+            let sbase = p * h * w;
+            let plane = &mut slab[(p - p0) * oh * ow..(p - p0 + 1) * oh * ow];
             for y in 0..oh {
                 for x2 in 0..ow {
                     let s = sbase + 2 * y * w + 2 * x2;
-                    out[dbase + y * ow + x2] =
+                    plane[y * ow + x2] =
                         0.25 * (xv[s] + xv[s + 1] + xv[s + w] + xv[s + w + 1]);
                 }
             }
         }
-    }
+    });
     Tensor::from_f32(out, &[n, c, oh, ow], tracker)
 }
 

@@ -7,8 +7,14 @@
 //! the paper's micro cost term (Eq. 9) models: chunking a matmul into thin
 //! slabs reduces achieved FLOP/s. We keep that behaviour honest rather than
 //! special-casing small shapes.
+//!
+//! Large problems are data-parallel over batch × M-row blocks: every
+//! worker owns a disjoint slab of C rows and runs the same blocked kernel
+//! over them, so the per-element accumulation order — and therefore the
+//! f32 result — is bitwise identical at any `AUTOCHUNK_THREADS` width.
 
 use super::{broadcast_shapes, MemoryTracker, Tensor};
+use crate::util::pool;
 
 /// Cache-block sizes (f32 elements). MC*KC and KC*NC tiles fit in L2.
 const MC: usize = 64;
@@ -40,12 +46,25 @@ pub fn matmul(a: &Tensor, b: &Tensor, tracker: Option<MemoryTracker>) -> Tensor 
     let bv = bc.f32_contiguous();
 
     let mut out = vec![0.0f32; batch * m * n];
-    for bi in 0..batch {
-        let a_mat = &av[bi * m * k..(bi + 1) * m * k];
-        let b_mat = &bv[bi * k * n..(bi + 1) * k * n];
-        let o_mat = &mut out[bi * m * n..(bi + 1) * m * n];
-        gemm_blocked(a_mat, b_mat, o_mat, m, k, n);
+    // Task grid: (batch element, MC-row block). Slabs tile `out` exactly
+    // in task order, so the pool can hand each worker its own C rows.
+    let row_blocks = m.div_ceil(MC).max(1);
+    let mut lens = Vec::with_capacity(batch * row_blocks);
+    for _ in 0..batch {
+        for blk in 0..row_blocks {
+            let mm = blk * MC;
+            lens.push(MC.min(m.saturating_sub(mm)) * n);
+        }
     }
+    let work = 2usize.saturating_mul(batch * m * n).saturating_mul(k);
+    pool::par_slabs(&mut out, &lens, work, |t, c_slab| {
+        let bi = t / row_blocks;
+        let mm = (t % row_blocks) * MC;
+        let mb = MC.min(m.saturating_sub(mm));
+        let a_rows = &av[bi * m * k + mm * k..bi * m * k + (mm + mb) * k];
+        let b_mat = &bv[bi * k * n..(bi + 1) * k * n];
+        gemm_blocked(a_rows, b_mat, c_slab, mb, k, n);
+    });
 
     let mut out_shape = batch_shape;
     out_shape.extend_from_slice(&[m, n]);

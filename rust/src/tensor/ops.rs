@@ -6,6 +6,7 @@
 //! chunk-selection stride term meaningful on this substrate.
 
 use super::{broadcast_shapes, MemoryTracker, Tensor};
+use crate::util::pool;
 
 /// Binary elementwise operator.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
@@ -106,7 +107,8 @@ pub fn binary(op: BinaryOp, a: &Tensor, b: &Tensor, tracker: Option<MemoryTracke
     let out_shape = broadcast_shapes(a.shape(), b.shape());
     let n = super::numel(&out_shape);
 
-    // Fast path: same shape, both contiguous.
+    // Fast path: same shape, both contiguous. Monomorphized per-op loops
+    // (so the compiler can vectorize) over disjoint output ranges.
     if a.shape() == out_shape.as_slice()
         && b.shape() == out_shape.as_slice()
         && a.is_contiguous()
@@ -114,23 +116,22 @@ pub fn binary(op: BinaryOp, a: &Tensor, b: &Tensor, tracker: Option<MemoryTracke
     {
         let av = a.f32_contiguous();
         let bv = b.f32_contiguous();
-        let mut out = Vec::with_capacity(n);
-        // Monomorphized per-op loop so the compiler can vectorize.
-        macro_rules! fast {
-            ($f:expr) => {
-                for i in 0..n {
-                    out.push($f(av[i], bv[i]));
+        let mut out = vec![0.0f32; n];
+        fn fill(out: &mut [f32], av: &[f32], bv: &[f32], f: impl Fn(f32, f32) -> f32 + Sync) {
+            pool::par_rows(out, av.len(), 1, av.len(), |r0, _r1, slab| {
+                for (j, o) in slab.iter_mut().enumerate() {
+                    *o = f(av[r0 + j], bv[r0 + j]);
                 }
-            };
+            });
         }
         match op {
-            BinaryOp::Add => fast!(|x: f32, y: f32| x + y),
-            BinaryOp::Sub => fast!(|x: f32, y: f32| x - y),
-            BinaryOp::Mul => fast!(|x: f32, y: f32| x * y),
-            BinaryOp::Div => fast!(|x: f32, y: f32| x / y),
-            BinaryOp::Max => fast!(|x: f32, y: f32| f32::max(x, y)),
-            BinaryOp::Min => fast!(|x: f32, y: f32| f32::min(x, y)),
-            BinaryOp::Pow => fast!(|x: f32, y: f32| f32::powf(x, y)),
+            BinaryOp::Add => fill(&mut out, av, bv, |x, y| x + y),
+            BinaryOp::Sub => fill(&mut out, av, bv, |x, y| x - y),
+            BinaryOp::Mul => fill(&mut out, av, bv, |x, y| x * y),
+            BinaryOp::Div => fill(&mut out, av, bv, |x, y| x / y),
+            BinaryOp::Max => fill(&mut out, av, bv, f32::max),
+            BinaryOp::Min => fill(&mut out, av, bv, f32::min),
+            BinaryOp::Pow => fill(&mut out, av, bv, f32::powf),
         }
         return Tensor::from_f32(out, &out_shape, tracker);
     }
@@ -156,10 +157,18 @@ pub fn unary(op: UnaryOp, a: &Tensor, tracker: Option<MemoryTracker>) -> Tensor 
     let n = a.numel();
     if a.is_contiguous() {
         let av = a.f32_contiguous();
-        let mut out = Vec::with_capacity(n);
-        for &x in av {
-            out.push(op.apply(x));
-        }
+        let mut out = vec![0.0f32; n];
+        // Transcendental ops are worth parallelizing at smaller sizes than
+        // a plain copy-and-add — weight the work estimate accordingly.
+        let weight: usize = match op {
+            UnaryOp::Neg | UnaryOp::Abs | UnaryOp::Relu => 1,
+            _ => 8,
+        };
+        pool::par_rows(&mut out, n, 1, n.saturating_mul(weight), |r0, _r1, slab| {
+            for (j, o) in slab.iter_mut().enumerate() {
+                *o = op.apply(av[r0 + j]);
+            }
+        });
         return Tensor::from_f32(out, a.shape(), tracker);
     }
     let src = a.buffer().f32();

@@ -1,6 +1,12 @@
 //! Reductions and softmax.
+//!
+//! Both kernels move the target axis innermost and then process
+//! independent rows; rows partition over the worker pool in contiguous
+//! blocks, each owning a disjoint output slab — bitwise identical to the
+//! serial path at every width.
 
 use super::{MemoryTracker, Tensor};
+use crate::util::pool;
 
 /// Reduction operator.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
@@ -52,17 +58,19 @@ pub fn reduce(
     let pa = a.permute(&perm).to_contiguous(tracker.clone());
     let src = pa.f32_contiguous();
     let rows = pa.numel() / red_n;
-    let mut out = Vec::with_capacity(rows);
-    for r in 0..rows {
-        let row = &src[r * red_n..(r + 1) * red_n];
-        let v = match op {
-            ReduceOp::Sum => row.iter().sum::<f32>(),
-            ReduceOp::Mean => row.iter().sum::<f32>() / red_n as f32,
-            ReduceOp::Max => row.iter().copied().fold(f32::NEG_INFINITY, f32::max),
-            ReduceOp::Min => row.iter().copied().fold(f32::INFINITY, f32::min),
-        };
-        out.push(v);
-    }
+    let mut out = vec![0.0f32; rows];
+    pool::par_rows(&mut out, rows, 1, pa.numel(), |r0, _r1, slab| {
+        for (j, o) in slab.iter_mut().enumerate() {
+            let r = r0 + j;
+            let row = &src[r * red_n..(r + 1) * red_n];
+            *o = match op {
+                ReduceOp::Sum => row.iter().sum::<f32>(),
+                ReduceOp::Mean => row.iter().sum::<f32>() / red_n as f32,
+                ReduceOp::Max => row.iter().copied().fold(f32::NEG_INFINITY, f32::max),
+                ReduceOp::Min => row.iter().copied().fold(f32::INFINITY, f32::min),
+            };
+        }
+    });
     Tensor::from_f32(out, &out_shape, tracker)
 }
 
@@ -77,21 +85,23 @@ pub fn softmax(a: &Tensor, axis: usize, tracker: Option<MemoryTracker>) -> Tenso
     let n = pa.shape()[pa.rank() - 1];
     let rows = pa.numel() / n;
     let mut out = vec![0.0f32; pa.numel()];
-    for r in 0..rows {
-        let row = &src[r * n..(r + 1) * n];
-        let orow = &mut out[r * n..(r + 1) * n];
-        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut denom = 0.0f32;
-        for (o, &x) in orow.iter_mut().zip(row) {
-            let e = (x - m).exp();
-            *o = e;
-            denom += e;
+    pool::par_rows(&mut out, rows, n, pa.numel() * 4, |r0, _r1, slab| {
+        for (j, orow) in slab.chunks_mut(n).enumerate() {
+            let r = r0 + j;
+            let row = &src[r * n..(r + 1) * n];
+            let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f32;
+            for (o, &x) in orow.iter_mut().zip(row) {
+                let e = (x - m).exp();
+                *o = e;
+                denom += e;
+            }
+            let inv = 1.0 / denom;
+            for o in orow.iter_mut() {
+                *o *= inv;
+            }
         }
-        let inv = 1.0 / denom;
-        for o in orow.iter_mut() {
-            *o *= inv;
-        }
-    }
+    });
     let t = Tensor::from_f32(out, pa.shape(), tracker.clone());
     // Inverse permutation restores the original layout.
     let mut inv_perm = vec![0usize; perm.len()];

@@ -1,0 +1,148 @@
+//! Minimal error/context plumbing (anyhow replacement).
+//!
+//! The crate builds fully offline (see DESIGN.md §2): instead of depending
+//! on `anyhow`, this module provides the tiny subset the codebase uses —
+//! a string-carrying [`Error`], the [`anyhow!`]/[`bail!`] macros, and a
+//! [`Context`] extension trait for `Result`/`Option`. Context wraps
+//! outside-in, so `{e}` prints `outer: inner` like anyhow's `{e:#}`.
+
+use std::fmt;
+
+/// A boxed-free, message-carrying error. Converts from any `std::error`
+/// type via the blanket [`From`] impl, so `?` works on io/parse errors.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prefix the message with a context layer.
+    pub fn wrap(self, ctx: impl fmt::Display) -> Error {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` deliberately does not implement `std::error::Error`, which keeps
+// this blanket conversion coherent (no overlap with `From<T> for T`).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result alias. The second parameter defaults like anyhow's,
+/// so both `Result<T>` and `collect::<Result<Vec<_>, ParseIntError>>()`
+/// spellings work.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error branch of a `Result`/`Option`.
+pub trait Context<T> {
+    /// Wrap an error (or `None`) with a fixed context message.
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    /// Wrap with a lazily-built context message.
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    Error: From<E>,
+{
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string (anyhow's `anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an [`Error`] from a format string (anyhow's `bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &str) -> Result<usize> {
+        let n: usize = v.parse().context("parsing count")?;
+        if n == 0 {
+            bail!("count must be positive, got {n}");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("7").unwrap(), 7);
+        let e = parse("x").unwrap_err();
+        assert!(e.to_string().starts_with("parsing count:"), "{e}");
+    }
+
+    #[test]
+    fn bail_and_anyhow_macros() {
+        let e = parse("0").unwrap_err();
+        assert_eq!(e.to_string(), "count must be positive, got 0");
+        let direct = anyhow!("code {}", 42);
+        assert_eq!(direct.to_string(), "code 42");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        let w: Option<u8> = Some(3);
+        assert_eq!(w.with_context(|| "unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn context_layers_compose() {
+        let base: Result<()> = Err(Error::msg("inner"));
+        let e = base
+            .context("mid")
+            .with_context(|| format!("outer {}", 1))
+            .unwrap_err();
+        assert_eq!(e.to_string(), "outer 1: mid: inner");
+    }
+}

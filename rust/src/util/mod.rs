@@ -1,5 +1,8 @@
-//! Small utilities: a micro-benchmark timer (criterion is not in the
-//! vendored dependency set — see DESIGN.md) and formatting helpers shared
-//! by the benches.
+//! Small utilities shared across layers: a micro-benchmark timer
+//! (criterion is not in the offline dependency set — see DESIGN.md), the
+//! internal error/context plumbing, and the scoped worker pool behind all
+//! kernel- and chunk-level parallelism.
 
 pub mod bench;
+pub mod error;
+pub mod pool;

@@ -1,0 +1,280 @@
+//! Scoped worker pool for data-parallel kernels and chunk loops.
+//!
+//! No external dependencies (DESIGN.md §2): parallel regions spawn
+//! `std::thread::scope` workers, so borrows of inputs/outputs stay plain
+//! references and nothing outlives the call. Work is distributed over
+//! *disjoint* output slabs — each worker writes its own range and the
+//! per-element arithmetic is untouched — so results are bitwise identical
+//! to the serial path at every width.
+//!
+//! Width selection, in precedence order:
+//! 1. [`with_threads`] — a per-thread override, used by the serving
+//!    coordinator to size each worker and by benches/tests to compare
+//!    widths within one process;
+//! 2. the `AUTOCHUNK_THREADS` environment variable (`1` = exact legacy
+//!    single-threaded behaviour);
+//! 3. `std::thread::available_parallelism()`.
+//!
+//! Inside a pool worker the effective width is pinned to 1: when the
+//! chunked executor runs chunk iterations in parallel, the kernels inside
+//! each iteration run serially instead of oversubscribing the machine.
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+thread_local! {
+    static OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Below this much per-element work a parallel region runs inline.
+/// Workers are spawned per region (no persistent pool), which costs on
+/// the order of ~100µs of spawn/join; 256K element-ops is comfortably
+/// past break-even for the cheapest (copy/add-class) kernels while still
+/// letting every model-sized op parallelize.
+const MIN_PAR_WORK: usize = 256 * 1024;
+
+fn env_threads() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        match std::env::var("AUTOCHUNK_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+        {
+            Some(n) if n >= 1 => n,
+            _ => std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(16),
+        }
+    })
+}
+
+/// Effective worker count for parallel regions entered on this thread.
+pub fn num_threads() -> usize {
+    OVERRIDE.with(|o| o.get()).unwrap_or_else(env_threads)
+}
+
+/// Run `f` with the pool width forced to `n` on the current thread
+/// (restored afterwards, panic-safe).
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<usize>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.with(|o| o.set(self.0));
+        }
+    }
+    let _restore = Restore(OVERRIDE.with(|o| o.replace(Some(n.max(1)))));
+    f()
+}
+
+/// Pin nested parallel regions on this (worker) thread to width 1.
+fn serialize_nested() {
+    OVERRIDE.with(|o| o.set(Some(1)));
+}
+
+/// Round-robin `jobs` over up to [`num_threads`] scoped workers.
+fn run_jobs<J: Send>(jobs: Vec<J>, run: impl Fn(J) + Sync) {
+    let threads = num_threads().min(jobs.len());
+    if threads <= 1 {
+        for j in jobs {
+            run(j);
+        }
+        return;
+    }
+    let mut groups: Vec<Vec<J>> = (0..threads).map(|_| Vec::new()).collect();
+    for (i, j) in jobs.into_iter().enumerate() {
+        groups[i % threads].push(j);
+    }
+    let run = &run;
+    std::thread::scope(|s| {
+        for group in groups {
+            s.spawn(move || {
+                serialize_nested();
+                for j in group {
+                    run(j);
+                }
+            });
+        }
+    });
+}
+
+/// Evaluate `f(0..tasks)` on the pool, returning results in task order.
+/// Results are identical to the serial evaluation (tasks are independent);
+/// only wall time changes with the width.
+pub fn parallel_map<T: Send>(tasks: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let threads = num_threads().min(tasks);
+    if threads <= 1 {
+        return (0..tasks).map(f).collect();
+    }
+    let f = &f;
+    let mut slots: Vec<Option<T>> = (0..tasks).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for t in 0..threads {
+            handles.push(s.spawn(move || {
+                serialize_nested();
+                let mut got = Vec::new();
+                let mut i = t;
+                while i < tasks {
+                    got.push((i, f(i)));
+                    i += threads;
+                }
+                got
+            }));
+        }
+        for h in handles {
+            for (i, v) in h.join().expect("pool worker panicked") {
+                slots[i] = Some(v);
+            }
+        }
+    });
+    slots.into_iter().map(|v| v.expect("task not run")).collect()
+}
+
+/// Split `out` into consecutive slabs of the given lengths and run
+/// `f(slab_index, slab)` for each, in parallel when `work` (an estimate of
+/// total element-ops) justifies it. `lens` must sum to `out.len()`.
+pub fn par_slabs(
+    out: &mut [f32],
+    lens: &[usize],
+    work: usize,
+    f: impl Fn(usize, &mut [f32]) + Sync,
+) {
+    debug_assert_eq!(lens.iter().sum::<usize>(), out.len(), "slab lengths");
+    let mut slabs: Vec<(usize, &mut [f32])> = Vec::with_capacity(lens.len());
+    let mut rest = out;
+    for (i, &len) in lens.iter().enumerate() {
+        let (slab, tail) = std::mem::take(&mut rest).split_at_mut(len);
+        slabs.push((i, slab));
+        rest = tail;
+    }
+    let _ = rest;
+    if num_threads() <= 1 || work < MIN_PAR_WORK || slabs.len() <= 1 {
+        for (i, slab) in slabs {
+            f(i, slab);
+        }
+        return;
+    }
+    run_jobs(slabs, |(i, slab)| f(i, slab));
+}
+
+/// Split `rows` rows of `row_len` elements into contiguous near-equal
+/// blocks (one per worker) and run `f(row_start, row_end, block)` on each.
+/// The serial path is a single `f(0, rows, out)` call — kernels keep one
+/// code path for both.
+pub fn par_rows(
+    out: &mut [f32],
+    rows: usize,
+    row_len: usize,
+    work: usize,
+    f: impl Fn(usize, usize, &mut [f32]) + Sync,
+) {
+    debug_assert_eq!(rows * row_len, out.len(), "row geometry");
+    let threads = num_threads();
+    if threads <= 1 || work < MIN_PAR_WORK || rows <= 1 {
+        f(0, rows, out);
+        return;
+    }
+    let blocks = threads.min(rows);
+    let per = rows.div_ceil(blocks);
+    let mut slabs: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(blocks);
+    let mut rest = out;
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let take = per.min(rows - r0);
+        let (slab, tail) = std::mem::take(&mut rest).split_at_mut(take * row_len);
+        slabs.push((r0, r0 + take, slab));
+        rest = tail;
+        r0 += take;
+    }
+    let _ = rest;
+    run_jobs(slabs, |(a, b, slab)| f(a, b, slab));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_threads_overrides_and_restores() {
+        let outer = num_threads();
+        with_threads(3, || {
+            assert_eq!(num_threads(), 3);
+            with_threads(1, || assert_eq!(num_threads(), 1));
+            assert_eq!(num_threads(), 3);
+        });
+        assert_eq!(num_threads(), outer);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        for width in [1usize, 2, 5] {
+            let v = with_threads(width, || parallel_map(23, |i| i * i));
+            assert_eq!(v, (0..23).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn workers_run_nested_regions_serially() {
+        let widths = with_threads(4, || parallel_map(8, |_| num_threads()));
+        assert!(widths.iter().all(|&w| w == 1), "{widths:?}");
+    }
+
+    #[test]
+    fn par_rows_fills_every_row_once() {
+        let rows = 37;
+        let row_len = 5;
+        for width in [1usize, 4] {
+            let mut out = vec![0.0f32; rows * row_len];
+            with_threads(width, || {
+                // large fake work so the parallel path is exercised
+                par_rows(&mut out, rows, row_len, usize::MAX, |r0, r1, slab| {
+                    for (j, v) in slab.iter_mut().enumerate() {
+                        let r = r0 + j / row_len;
+                        assert!(r < r1);
+                        *v += r as f32;
+                    }
+                });
+            });
+            let want: Vec<f32> = (0..rows)
+                .flat_map(|r| vec![r as f32; row_len])
+                .collect();
+            assert_eq!(out, want, "width {width}");
+        }
+    }
+
+    #[test]
+    fn par_slabs_uneven_lengths() {
+        let lens = [3usize, 0, 7, 1, 5];
+        let total: usize = lens.iter().sum();
+        for width in [1usize, 3] {
+            let mut out = vec![-1.0f32; total];
+            with_threads(width, || {
+                par_slabs(&mut out, &lens, usize::MAX, |i, slab| {
+                    assert_eq!(slab.len(), lens[i]);
+                    for v in slab.iter_mut() {
+                        *v = i as f32;
+                    }
+                });
+            });
+            let mut want = Vec::new();
+            for (i, &l) in lens.iter().enumerate() {
+                want.extend(vec![i as f32; l]);
+            }
+            assert_eq!(out, want);
+        }
+    }
+
+    #[test]
+    fn small_work_stays_inline() {
+        // below MIN_PAR_WORK the region must not spawn: observable via
+        // num_threads() staying at the caller's width inside `f` (workers
+        // would see 1 from another thread's serialize_nested).
+        with_threads(4, || {
+            let mut out = vec![0.0f32; 8];
+            par_rows(&mut out, 8, 1, 8, |_, _, _| {
+                assert_eq!(num_threads(), 4, "inline path expected");
+            });
+        });
+    }
+}

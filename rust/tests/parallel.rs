@@ -1,0 +1,166 @@
+//! Parallel/serial parity and the budget-aware concurrency governor.
+//!
+//! The multithreaded engine's contract is *bitwise* determinism: every
+//! parallel region decomposes over disjoint output slabs with unchanged
+//! per-element arithmetic, so results must be identical — not merely
+//! close — at every `AUTOCHUNK_THREADS` width, for both the plain
+//! interpreter and the chunked executor. The governor's contract is that
+//! chunk-level concurrency never pushes the measured activation peak past
+//! the configured budget, and collapses to the serial loop when the
+//! budget leaves no headroom.
+
+use autochunk::exec::{execute, random_inputs, random_params};
+use autochunk::models::{evoformer, gpt, EvoformerConfig, GptConfig};
+use autochunk::passes::{autochunk, estimate, AutoChunkConfig};
+use autochunk::plan::{execute_chunked, execute_chunked_opts, governed_degree, ExecOptions};
+use autochunk::tensor::{MemoryTracker, Tensor};
+use autochunk::util::pool;
+
+/// Raw f32 bits of every output tensor — equality means bitwise identity.
+fn bits(outs: &[Tensor]) -> Vec<Vec<u32>> {
+    outs.iter()
+        .map(|t| t.to_vec_f32().iter().map(|v| v.to_bits()).collect())
+        .collect()
+}
+
+fn parity_case(name: &str, g: &autochunk::ir::Graph) {
+    let base = estimate(g).peak_bytes;
+    let result = autochunk(g, base / 3, &AutoChunkConfig::default());
+    assert!(!result.plans.is_empty(), "{name}: no plans");
+
+    let ins = random_inputs(g, 11, None);
+    let ps = random_params(g, 12);
+
+    let mut unchunked = Vec::new();
+    let mut chunked = Vec::new();
+    for width in [1usize, 4] {
+        let tr = MemoryTracker::new();
+        let (o, stats) = pool::with_threads(width, || execute(g, &ins, &ps, &tr));
+        assert_eq!(stats.threads, width, "{name}: stats width");
+        unchunked.push(bits(&o));
+
+        let tc = MemoryTracker::new();
+        let (oc, _) =
+            pool::with_threads(width, || execute_chunked(g, &result.plans, &ins, &ps, &tc));
+        chunked.push(bits(&oc));
+    }
+    assert_eq!(
+        unchunked[0], unchunked[1],
+        "{name}: unchunked outputs differ between 1 and 4 threads"
+    );
+    assert_eq!(
+        chunked[0], chunked[1],
+        "{name}: chunked outputs differ between 1 and 4 threads"
+    );
+
+    // Concurrent chunk loop (a generous budget lets the governor grant
+    // degree > 1): still bitwise identical to the serial chunk loop.
+    let opts = ExecOptions { budget_bytes: Some(usize::MAX) };
+    let tp = MemoryTracker::new();
+    let (op, sp) = pool::with_threads(4, || {
+        execute_chunked_opts(g, &result.plans, &ins, &ps, &tp, &opts)
+    });
+    assert!(
+        sp.max_chunk_degree > 1,
+        "{name}: expected a concurrent chunk loop, got degree {}",
+        sp.max_chunk_degree
+    );
+    assert_eq!(
+        bits(&op),
+        chunked[0],
+        "{name}: concurrent chunk loop changed the outputs"
+    );
+
+    // Chunked vs unchunked stays numerically tight (not necessarily
+    // bitwise: chunking legitimately reorders nothing per element, but
+    // kernel contiguity paths may differ).
+    let t0 = MemoryTracker::new();
+    let (want, _) = execute(g, &ins, &ps, &t0);
+    let t1 = MemoryTracker::new();
+    let (got, _) = execute_chunked(g, &result.plans, &ins, &ps, &t1);
+    for (w, c) in want.iter().zip(&got) {
+        assert!(
+            w.max_abs_diff(c) < 1e-4,
+            "{name}: chunked diverged by {}",
+            w.max_abs_diff(c)
+        );
+    }
+}
+
+#[test]
+fn gpt_parity_across_thread_widths() {
+    let g = gpt(&GptConfig { seq: 128, layers: 2, ..Default::default() });
+    parity_case("gpt", &g);
+}
+
+#[test]
+fn evoformer_parity_across_thread_widths() {
+    let g = evoformer(&EvoformerConfig { seq: 32, blocks: 1, ..Default::default() });
+    parity_case("evoformer", &g);
+}
+
+#[test]
+fn governor_degree_formula() {
+    // no headroom (budget at or below the serial peak) → serial loop
+    assert_eq!(governed_degree(8, 16, Some(1000), 1000, 10), 1);
+    assert_eq!(governed_degree(8, 16, Some(900), 1000, 10), 1);
+    // headroom buys extra in-flight iterations one per_chunk at a time
+    assert_eq!(governed_degree(8, 16, Some(1050), 1000, 10), 6);
+    // pool width and iteration count cap the degree
+    assert_eq!(governed_degree(8, 16, Some(usize::MAX), 1000, 10), 8);
+    assert_eq!(governed_degree(8, 3, Some(usize::MAX), 1000, 10), 3);
+    // no budget: nothing to trade, chunk loops stay serial
+    assert_eq!(governed_degree(8, 3, None, 0, 0), 1);
+    // degenerate per-chunk estimate: fall back to the pool cap
+    assert_eq!(governed_degree(4, 16, Some(2000), 1000, 0), 4);
+}
+
+#[test]
+fn governor_collapses_to_serial_without_headroom() {
+    let g = gpt(&GptConfig { seq: 256, layers: 2, ..Default::default() });
+    let base = estimate(&g).peak_bytes;
+    let result = autochunk(&g, base / 3, &AutoChunkConfig::default());
+    let ins = random_inputs(&g, 3, None);
+    let ps = random_params(&g, 4);
+
+    // budget exactly at the estimated serial chunked peak: zero headroom
+    let opts = ExecOptions { budget_bytes: Some(result.chunked_peak) };
+    let tr = MemoryTracker::new();
+    let (_, stats) = pool::with_threads(4, || {
+        execute_chunked_opts(&g, &result.plans, &ins, &ps, &tr, &opts)
+    });
+    assert_eq!(stats.max_chunk_degree, 1, "expected serial chunk loops");
+}
+
+#[test]
+fn governor_never_exceeds_budget_measured() {
+    let g = gpt(&GptConfig { seq: 256, layers: 2, ..Default::default() });
+    let base = estimate(&g).peak_bytes;
+    let result = autochunk(&g, base / 3, &AutoChunkConfig::default());
+    let ps = random_params(&g, 4);
+
+    // Measured serial chunked peak (inputs tracked, as in production).
+    let t_serial = MemoryTracker::new();
+    let ins_s = random_inputs(&g, 3, Some(t_serial.clone()));
+    let (_, s_serial) = pool::with_threads(1, || {
+        execute_chunked(&g, &result.plans, &ins_s, &ps, &t_serial)
+    });
+
+    // Generous budget: the governor may buy concurrency with the
+    // headroom, but the measured peak must stay under the budget.
+    let budget = 2 * s_serial.peak_bytes.max(result.chunked_peak);
+    let opts = ExecOptions { budget_bytes: Some(budget) };
+    let t_par = MemoryTracker::new();
+    let ins_p = random_inputs(&g, 3, Some(t_par.clone()));
+    let (_, s_par) = pool::with_threads(4, || {
+        execute_chunked_opts(&g, &result.plans, &ins_p, &ps, &t_par, &opts)
+    });
+    assert!(s_par.max_chunk_degree >= 1);
+    assert!(
+        t_par.peak() <= budget,
+        "measured peak {} exceeds budget {} (degree {})",
+        t_par.peak(),
+        budget,
+        s_par.max_chunk_degree
+    );
+}
