@@ -1,0 +1,153 @@
+//! Continuous-batching serve engine vs the legacy back-to-back path:
+//! request throughput and queueing-wait percentiles across a sweep of
+//! activation-memory budgets, on the same open-loop workload.
+//!
+//! The continuous engine packs memory-quoted waves of co-resident
+//! requests (and converts leftover headroom into chunk concurrency), so
+//! at equal budgets it must sustain strictly higher request throughput
+//! than serving the same trace one request at a time.
+//!
+//! Emits `BENCH_serve_continuous.json` for the perf trajectory.
+//!
+//! `cargo bench --bench serve_continuous`
+
+use autochunk::coordinator::{open_loop_workload, EngineConfig, ServeEngine};
+use autochunk::util::bench::Table;
+use autochunk::util::pool;
+
+#[derive(Default)]
+struct JsonReport {
+    rows: Vec<String>,
+}
+
+impl JsonReport {
+    #[allow(clippy::too_many_arguments)]
+    fn push(
+        &mut self,
+        mode: &str,
+        budget_mb: f64,
+        rps: f64,
+        wait_p50_ms: f64,
+        wait_p99_ms: f64,
+        peak_mb: f64,
+        completed: usize,
+        rejected: usize,
+        waves: usize,
+        threads: usize,
+    ) {
+        self.rows.push(format!(
+            "  {{\"mode\": \"{mode}\", \"budget_mb\": {budget_mb:.2}, \"rps\": {rps:.3}, \
+             \"wait_p50_ms\": {wait_p50_ms:.3}, \"wait_p99_ms\": {wait_p99_ms:.3}, \
+             \"measured_peak_mb\": {peak_mb:.2}, \"completed\": {completed}, \
+             \"rejected\": {rejected}, \"waves\": {waves}, \"threads\": {threads}}}"
+        ));
+    }
+
+    fn write(&self, path: &str) {
+        let body = format!("[\n{}\n]\n", self.rows.join(",\n"));
+        if let Err(e) = std::fs::write(path, body) {
+            eprintln!("warning: could not write {path}: {e}");
+        }
+    }
+}
+
+fn main() {
+    let threads = pool::num_threads();
+    let buckets = vec![32usize, 64, 128];
+    let workload = open_loop_workload(32, 8, 120, 4242, 4);
+
+    // Budgets as multiples of one dense top-bucket quote, so the sweep
+    // tracks the estimator instead of hard-coding byte counts.
+    let mut probe = ServeEngine::new(EngineConfig {
+        model: "gpt".into(),
+        budget_bytes: usize::MAX,
+        buckets: buckets.clone(),
+        worker_threads: threads,
+        ..EngineConfig::default()
+    });
+    let (_, top_quote) = probe
+        .quote(*buckets.last().unwrap(), 0)
+        .expect("probe quote")
+        .expect("top bucket quote");
+    let unit = top_quote.peak_bytes;
+
+    let mut table = Table::new(&[
+        "budget",
+        "mode",
+        "req/s",
+        "wait p50",
+        "wait p99",
+        "peak (meas.)",
+        "served",
+        "waves",
+    ]);
+    let mut json = JsonReport::default();
+    let mut speedups: Vec<f64> = Vec::new();
+
+    for mult in [2usize, 3, 5] {
+        let budget = unit * mult;
+        let mut rps = [0.0f64; 2];
+        for (mi, mode) in ["serial", "continuous"].into_iter().enumerate() {
+            // Fresh engine per run: the plan cache warms inside the run,
+            // exactly as a newly deployed worker would.
+            let mut engine = ServeEngine::new(EngineConfig {
+                model: "gpt".into(),
+                budget_bytes: budget,
+                max_batch: 8,
+                buckets: buckets.clone(),
+                worker_threads: threads,
+                ..EngineConfig::default()
+            });
+            let (responses, report) = match mode {
+                "serial" => engine.serve_serial(&workload),
+                _ => engine.serve(&workload),
+            }
+            .expect("serve run");
+            assert_eq!(responses.len(), workload.len());
+            assert!(
+                report.measured_peak_bytes <= budget,
+                "{mode}: measured peak {} over budget {budget}",
+                report.measured_peak_bytes
+            );
+            rps[mi] = report.throughput_rps;
+            let budget_mb = budget as f64 / (1 << 20) as f64;
+            table.row(vec![
+                format!("{budget_mb:.1} MiB ({mult}x)"),
+                mode.to_string(),
+                format!("{:.2}", report.throughput_rps),
+                format!("{:.1} ms", report.wait_p50_us as f64 / 1e3),
+                format!("{:.1} ms", report.wait_p99_us as f64 / 1e3),
+                format!("{:.2} MiB", report.measured_peak_bytes as f64 / (1 << 20) as f64),
+                format!("{}/{}", report.completed, workload.len()),
+                format!("{}", report.waves),
+            ]);
+            json.push(
+                mode,
+                budget_mb,
+                report.throughput_rps,
+                report.wait_p50_us as f64 / 1e3,
+                report.wait_p99_us as f64 / 1e3,
+                report.measured_peak_bytes as f64 / (1 << 20) as f64,
+                report.completed,
+                report.rejected,
+                report.waves,
+                threads,
+            );
+        }
+        speedups.push(rps[1] / rps[0].max(1e-9));
+    }
+
+    println!("== Continuous batching vs back-to-back serve (width {threads}) ==\n");
+    print!("{}", table.render());
+    println!();
+    for (mult, s) in [2usize, 3, 5].into_iter().zip(&speedups) {
+        println!("budget {mult}x: continuous/serial throughput = {s:.2}x");
+    }
+    let min = speedups.iter().copied().fold(f64::INFINITY, f64::min);
+    println!(
+        "\nminimum speedup {min:.2}x — continuous batching {} back-to-back at every budget",
+        if min > 1.0 { "beats" } else { "did NOT beat" }
+    );
+    json.write("BENCH_serve_continuous.json");
+    println!("wrote BENCH_serve_continuous.json");
+}

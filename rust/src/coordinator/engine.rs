@@ -1,0 +1,524 @@
+//! Continuous-batching serve engine over the native compiler stack.
+//!
+//! The PR-1 `Coordinator` served a *closed* workload through AOT/PJRT
+//! artifacts in one shot. This engine is the production shape the paper's
+//! runtime half points at (DESIGN.md §11):
+//!
+//! * **request queue with arrival ticks** — an open-loop trace replayed on
+//!   a deterministic virtual clock, so admission pressure is part of the
+//!   workload and results are machine-independent;
+//! * **memory-aware admission** — each wave is packed greedily by the
+//!   estimator's [`CostQuote`] (`peak + (d−1)·per_chunk`, the PR-1
+//!   governor formula) against the global `budget_bytes`, not by request
+//!   count: activation memory, not parameters, is the binding constraint;
+//! * **per-bucket compiled-plan caching** — a (model, seq-bucket, depth)
+//!   triple is chunk-searched once and the resulting [`PlanHandle`] is
+//!   shared by every subsequent request in that bucket;
+//! * **preemption instead of rejection** — a request whose quote exceeds
+//!   the budget is requeued (with head priority) for a deeper-chunked
+//!   recompile; only when the deepest level still does not fit is it
+//!   rejected ("the memory wall").
+//!
+//! Determinism contract: at `AUTOCHUNK_THREADS=1` the engine's responses
+//! are bitwise identical to the legacy back-to-back path
+//! ([`ServeEngine::serve_serial`]); at any width they remain bitwise
+//! identical because every parallel region in the stack decomposes over
+//! disjoint output slabs (DESIGN.md §8).
+
+use crate::coordinator::metrics::{MetricsReport, Recorder};
+use crate::coordinator::request::{Request, RequestOutcome};
+use crate::exec::random_params;
+use crate::ir::Graph;
+use crate::models;
+use crate::passes::{autochunk, estimate, AutoChunkConfig, CostQuote};
+use crate::plan::{ExecOptions, PlanHandle};
+use crate::runtime::{ArtifactMeta, Registry};
+use crate::tensor::{numel, DType, MemoryTracker, Tensor};
+use crate::util::error::Result;
+use crate::util::pool;
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+/// Configuration of the continuous-batching engine.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Model family: `gpt` | `gpt-fused` | `vit` | `evoformer` | `unet`.
+    pub model: String,
+    /// Global activation-memory budget (bytes) each wave is packed under.
+    pub budget_bytes: usize,
+    /// Max co-resident requests per wave regardless of memory.
+    pub max_batch: usize,
+    /// Sequence buckets (ascending); a request routes to the smallest
+    /// bucket that holds it. Per-model scale knob (tokens, patches,
+    /// residues, image side).
+    pub buckets: Vec<usize>,
+    /// Pool width while serving (0 = inherit `AUTOCHUNK_THREADS`).
+    pub worker_threads: usize,
+    /// How many deeper-chunked recompiles an oversized request may retry
+    /// before rejection. Level `d ≥ 1` compiles at a `baseline >> d`
+    /// target; level 0 is the dense (unchunked) plan.
+    pub max_deepen: usize,
+    /// Virtual duration of one queue tick (metrics only).
+    pub tick_us: u64,
+    /// Compiler options for the per-bucket chunk search.
+    pub compile: AutoChunkConfig,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            model: "gpt".into(),
+            budget_bytes: 64 << 20,
+            max_batch: 8,
+            buckets: vec![64, 128, 256],
+            worker_threads: 0,
+            max_deepen: 5,
+            tick_us: 500,
+            compile: AutoChunkConfig::default(),
+        }
+    }
+}
+
+/// The engine's answer for one request. Carries the full model output so
+/// determinism can be asserted bitwise against the serial path.
+#[derive(Clone, Debug)]
+pub struct EngineResponse {
+    pub id: usize,
+    pub outcome: RequestOutcome,
+    /// Sequence bucket the request was served in (0 when rejected).
+    pub bucket: usize,
+    /// Chunk-deepening level of the plan that served it.
+    pub depth: usize,
+    /// Tag of the cached plan (empty when rejected).
+    pub plan_tag: String,
+    /// Queueing delay in ticks between arrival and admission.
+    pub wait_ticks: u64,
+    pub latency_us: u64,
+    /// Flattened first model output (empty when rejected).
+    pub output: Vec<f32>,
+}
+
+impl EngineResponse {
+    fn rejected(id: usize, depth: usize) -> EngineResponse {
+        EngineResponse {
+            id,
+            outcome: RequestOutcome::Rejected,
+            bucket: 0,
+            depth,
+            plan_tag: String::new(),
+            wait_ticks: 0,
+            latency_us: 0,
+            output: Vec::new(),
+        }
+    }
+}
+
+/// A queued request: its index into the workload plus the deepening level
+/// the next admission attempt will use.
+#[derive(Clone, Copy, Debug)]
+struct Pending {
+    idx: usize,
+    depth: usize,
+}
+
+#[derive(Clone, Copy)]
+enum Mode {
+    Continuous,
+    Serial,
+}
+
+/// Continuous-batching serve engine (native interpreter backend).
+pub struct ServeEngine {
+    config: EngineConfig,
+    cache: HashMap<(usize, usize), PlanHandle>,
+    params: HashMap<usize, Vec<Tensor>>,
+    /// Unchunked estimated peak per bucket (the deepening ladder's base),
+    /// computed once per bucket rather than once per (bucket, depth).
+    baselines: HashMap<usize, usize>,
+    registry: Registry,
+    cache_hits: usize,
+    cache_misses: usize,
+}
+
+impl ServeEngine {
+    pub fn new(mut config: EngineConfig) -> ServeEngine {
+        config.buckets.sort_unstable();
+        config.buckets.dedup();
+        ServeEngine {
+            config,
+            cache: HashMap::new(),
+            params: HashMap::new(),
+            baselines: HashMap::new(),
+            registry: Registry::in_memory(),
+            cache_hits: 0,
+            cache_misses: 0,
+        }
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.config
+    }
+
+    /// Catalog of every variant compiled so far (native tags).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// (hits, misses) of the compiled-plan cache since construction.
+    pub fn cache_stats(&self) -> (usize, usize) {
+        (self.cache_hits, self.cache_misses)
+    }
+
+    /// Smallest bucket that holds `seq_len` (None if longer than all).
+    pub fn bucket_for(&self, seq_len: usize) -> Option<usize> {
+        self.config.buckets.iter().copied().find(|&b| b >= seq_len)
+    }
+
+    /// Per-request cost quote at a deepening level: what admission control
+    /// would charge a request of `seq_len` (compiling and caching the
+    /// bucket's plan if needed).
+    pub fn quote(&mut self, seq_len: usize, depth: usize) -> Result<Option<(usize, CostQuote)>> {
+        let Some(bucket) = self.bucket_for(seq_len) else {
+            return Ok(None);
+        };
+        let h = self.handle(bucket, depth)?;
+        Ok(Some((bucket, *h.quote())))
+    }
+
+    /// Compile (once) and cache the plan for a (bucket, depth) pair.
+    fn handle(&mut self, bucket: usize, depth: usize) -> Result<PlanHandle> {
+        if let Some(h) = self.cache.get(&(bucket, depth)) {
+            self.cache_hits += 1;
+            return Ok(h.clone());
+        }
+        self.cache_misses += 1;
+        let graph = build_model(&self.config.model, bucket)?;
+        let params = self
+            .params
+            .entry(bucket)
+            .or_insert_with(|| random_params(&graph, 0xC0DE + bucket as u64))
+            .clone();
+        // Depth ladder relative to the model's own baseline (independent
+        // of the budget, so the same cache serves any budget): level 0 is
+        // dense, level d targets baseline >> d.
+        let plans = if depth == 0 {
+            Vec::new()
+        } else {
+            let base = *self
+                .baselines
+                .entry(bucket)
+                .or_insert_with(|| estimate(&graph).peak_bytes);
+            autochunk(&graph, (base >> depth).max(1), &self.config.compile).plans
+        };
+        let tag = format!("{}_native_s{}_d{}", self.config.model, bucket, depth);
+        let h = PlanHandle::new(&tag, graph, plans, params);
+        let out_shape = h.graph().node(h.graph().outputs[0]).shape.clone();
+        self.registry.register(ArtifactMeta {
+            tag: tag.clone(),
+            hlo_path: String::new(),
+            model: self.config.model.clone(),
+            mode: if depth == 0 { "native-dense" } else { "native-chunked" }.into(),
+            seq: bucket,
+            d_model: 0,
+            heads: 0,
+            layers: 0,
+            vocab: 0,
+            n_chunks: h.n_chunks_max(),
+            num_params: h.graph().params.len(),
+            param_names: Vec::new(),
+            est_activation_bytes: h.quote().peak_bytes,
+            output_shape: out_shape,
+        });
+        self.cache.insert((bucket, depth), h.clone());
+        Ok(h)
+    }
+
+    /// Serve an open-loop workload continuously to completion.
+    pub fn serve(&mut self, requests: &[Request]) -> Result<(Vec<EngineResponse>, MetricsReport)> {
+        let width = match self.config.worker_threads {
+            0 => pool::num_threads(),
+            n => n,
+        };
+        pool::with_threads(width, || self.serve_inner(requests, Mode::Continuous))
+    }
+
+    /// Legacy back-to-back path: one request per wave, in arrival order —
+    /// the PR-1 `serve()` semantics on the native backend. Kept as the
+    /// determinism baseline and the bench's throughput baseline.
+    pub fn serve_serial(
+        &mut self,
+        requests: &[Request],
+    ) -> Result<(Vec<EngineResponse>, MetricsReport)> {
+        let width = match self.config.worker_threads {
+            0 => pool::num_threads(),
+            n => n,
+        };
+        pool::with_threads(width, || self.serve_inner(requests, Mode::Serial))
+    }
+
+    fn serve_inner(
+        &mut self,
+        requests: &[Request],
+        mode: Mode,
+    ) -> Result<(Vec<EngineResponse>, MetricsReport)> {
+        let t0 = Instant::now();
+        let mut recorder = Recorder::new();
+        let tracker = MemoryTracker::new();
+        let (hits0, miss0) = (self.cache_hits, self.cache_misses);
+        let mut responses: Vec<EngineResponse> = Vec::with_capacity(requests.len());
+
+        // Arrival-ordered queue (stable by id for equal ticks).
+        let mut order: Vec<usize> = (0..requests.len()).collect();
+        order.sort_by_key(|&i| (requests[i].arrival_tick, requests[i].id));
+        let mut queue: VecDeque<Pending> =
+            order.into_iter().map(|idx| Pending { idx, depth: 0 }).collect();
+
+        let max_batch = match mode {
+            Mode::Serial => 1,
+            Mode::Continuous => self.config.max_batch.max(1),
+        };
+        let mut clock: u64 = 0;
+
+        while !queue.is_empty() {
+            // Fast-forward the virtual clock to the next arrival.
+            let head_arrival = requests[queue[0].idx].arrival_tick;
+            if head_arrival > clock {
+                clock = head_arrival;
+            }
+
+            // ---- admission: pack one wave under the budget
+            let mut wave: Vec<(Pending, usize, PlanHandle)> = Vec::new();
+            let mut retry: Vec<Pending> = Vec::new();
+            let mut remaining = self.config.budget_bytes;
+            let mut scan = 0usize;
+            while scan < queue.len() && wave.len() < max_batch {
+                if requests[queue[scan].idx].arrival_tick > clock {
+                    break; // queue is arrival-sorted: nothing further has arrived
+                }
+                let p = queue[scan];
+                let req = &requests[p.idx];
+                let Some(bucket) = self.bucket_for(req.seq_len) else {
+                    queue.remove(scan);
+                    recorder.rejected += 1;
+                    responses.push(EngineResponse::rejected(req.id, p.depth));
+                    continue;
+                };
+                let h = self.handle(bucket, p.depth)?;
+                let cost = h.quote().peak_bytes;
+                if cost > self.config.budget_bytes {
+                    // Oversized for the device at this depth.
+                    queue.remove(scan);
+                    if p.depth < self.config.max_deepen {
+                        // Preempt to a deeper-chunked retry, not rejection.
+                        recorder.preempted += 1;
+                        retry.push(Pending { idx: p.idx, depth: p.depth + 1 });
+                    } else {
+                        recorder.rejected += 1;
+                        responses.push(EngineResponse::rejected(req.id, p.depth));
+                    }
+                    continue;
+                }
+                if cost <= remaining {
+                    remaining -= cost;
+                    queue.remove(scan);
+                    wave.push((p, bucket, h));
+                    continue;
+                }
+                // Fits the device but not this wave: leave it and keep
+                // scanning for a smaller arrived request (skip-ahead).
+                // Head-of-line priority is preserved — the head gets
+                // first claim on the full budget every wave — so no
+                // request starves.
+                scan += 1;
+            }
+            // Deepened requests retry with head priority next wave.
+            for p in retry.into_iter().rev() {
+                queue.push_front(p);
+            }
+
+            if wave.is_empty() {
+                // Only retries/rejections this tick: advance time.
+                clock += 1;
+                continue;
+            }
+
+            // ---- execute the wave: co-resident requests run concurrently
+            // on the pool. Leftover headroom (budget − Σ admitted quotes)
+            // is split evenly across entries and handed to each entry's
+            // chunk-concurrency governor: entry i may spend
+            // `quote_i + share` bytes, so the wave total stays ≤ budget.
+            let per_entry_threads = (pool::num_threads() / wave.len()).max(1);
+            let share = remaining / wave.len();
+            let entries = wave;
+            let results: Vec<(u64, Vec<f32>)> = pool::parallel_map(entries.len(), |wi| {
+                let (p, _bucket, h) = &entries[wi];
+                let req = &requests[p.idx];
+                pool::with_threads(per_entry_threads, || {
+                    let started = Instant::now();
+                    let ins = request_inputs(h.graph(), req, &tracker);
+                    let entry_budget = h.quote().peak_bytes + share;
+                    let opts = ExecOptions {
+                        budget_bytes: Some(h.quote().governor_budget(entry_budget)),
+                    };
+                    let (outs, _stats) = h.execute(&ins, &tracker, &opts);
+                    let out = outs[0].to_vec_f32();
+                    (started.elapsed().as_micros() as u64, out)
+                })
+            });
+            for ((p, bucket, h), (latency_us, output)) in entries.into_iter().zip(results) {
+                let req = &requests[p.idx];
+                let wait_ticks = clock - req.arrival_tick;
+                recorder.record(h.tag(), latency_us, req.seq_len);
+                recorder.record_wait(wait_ticks * self.config.tick_us);
+                responses.push(EngineResponse {
+                    id: req.id,
+                    outcome: RequestOutcome::Completed,
+                    bucket,
+                    depth: p.depth,
+                    plan_tag: h.tag().to_string(),
+                    wait_ticks,
+                    latency_us,
+                    output,
+                });
+            }
+            recorder.waves += 1;
+            clock += 1;
+        }
+
+        recorder.cache_hits = self.cache_hits - hits0;
+        recorder.cache_misses = self.cache_misses - miss0;
+        recorder.measured_peak_bytes = tracker.peak();
+        responses.sort_by_key(|r| r.id);
+        let report = recorder.finish(t0.elapsed());
+        Ok((responses, report))
+    }
+}
+
+/// Build a model graph at a bucket's scale (per-model interpretation:
+/// tokens, patches, residues, image side).
+fn build_model(name: &str, scale: usize) -> Result<Graph> {
+    Ok(match name {
+        "gpt" => models::gpt(&models::GptConfig { seq: scale, ..Default::default() }),
+        "gpt-fused" => models::gpt(&models::GptConfig {
+            seq: scale,
+            fused_attention: true,
+            ..Default::default()
+        }),
+        "vit" => models::vit(&models::ViTConfig { patches: scale, ..Default::default() }),
+        "evoformer" => {
+            models::evoformer(&models::EvoformerConfig { seq: scale, ..Default::default() })
+        }
+        "unet" => models::unet(&models::UNetConfig { image: scale, ..Default::default() }),
+        other => crate::bail!("unknown model '{other}' (gpt|gpt-fused|vit|evoformer|unet)"),
+    })
+}
+
+/// Deterministically materialize a request's graph inputs: token ids feed
+/// i32 inputs directly (zero-padded to the bucket); f32 inputs derive a
+/// repeatable pattern from the tokens. Allocated on the run's tracker so
+/// request inputs count as activation memory, as in production.
+fn request_inputs(graph: &Graph, req: &Request, tracker: &MemoryTracker) -> Vec<Tensor> {
+    graph
+        .inputs
+        .iter()
+        .map(|&id| {
+            let node = graph.node(id);
+            let count = numel(&node.shape);
+            match node.dtype {
+                DType::I32 => {
+                    let mut v = vec![0i32; count];
+                    let n = req.tokens.len().min(count);
+                    v[..n].copy_from_slice(&req.tokens[..n]);
+                    Tensor::from_i32(v, &node.shape, Some(tracker.clone()))
+                }
+                DType::F32 => {
+                    let mut v = vec![0f32; count];
+                    for (i, slot) in v.iter_mut().enumerate() {
+                        let t = if req.tokens.is_empty() {
+                            (i % 97) as i32
+                        } else {
+                            req.tokens[i % req.tokens.len()]
+                        };
+                        *slot = (t % 512) as f32 / 512.0 - 0.5;
+                    }
+                    Tensor::from_f32(v, &node.shape, Some(tracker.clone()))
+                }
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_engine(budget: usize) -> ServeEngine {
+        ServeEngine::new(EngineConfig {
+            model: "gpt".into(),
+            budget_bytes: budget,
+            max_batch: 4,
+            buckets: vec![16, 32],
+            worker_threads: 1,
+            ..EngineConfig::default()
+        })
+    }
+
+    #[test]
+    fn bucket_routing() {
+        let e = tiny_engine(1 << 30);
+        assert_eq!(e.bucket_for(10), Some(16));
+        assert_eq!(e.bucket_for(16), Some(16));
+        assert_eq!(e.bucket_for(17), Some(32));
+        assert_eq!(e.bucket_for(33), None);
+    }
+
+    #[test]
+    fn quote_compiles_once_per_bucket() {
+        let mut e = tiny_engine(1 << 30);
+        let (b1, q1) = e.quote(10, 0).unwrap().unwrap();
+        let (b2, q2) = e.quote(12, 0).unwrap().unwrap();
+        assert_eq!(b1, 16);
+        assert_eq!(b2, 16);
+        assert_eq!(q1.peak_bytes, q2.peak_bytes);
+        let (hits, misses) = e.cache_stats();
+        assert_eq!(misses, 1);
+        assert_eq!(hits, 1);
+        assert!(e.registry().get("gpt_native_s16_d0").is_some());
+    }
+
+    #[test]
+    fn too_long_request_rejected() {
+        let mut e = tiny_engine(1 << 30);
+        let reqs = vec![Request::new(0, 64, 1)];
+        let (resp, report) = e.serve(&reqs).unwrap();
+        assert_eq!(resp.len(), 1);
+        assert_eq!(resp[0].outcome, RequestOutcome::Rejected);
+        assert_eq!(report.rejected, 1);
+        assert_eq!(report.completed, 0);
+    }
+
+    #[test]
+    fn small_workload_completes() {
+        let mut e = tiny_engine(1 << 30);
+        let reqs: Vec<Request> =
+            (0..3).map(|i| Request::new(i, 8 + i * 4, i as i32).at_tick(0, 500)).collect();
+        let (resp, report) = e.serve(&reqs).unwrap();
+        assert_eq!(resp.len(), 3);
+        assert!(resp.iter().all(|r| r.outcome == RequestOutcome::Completed));
+        assert_eq!(report.completed, 3);
+        assert!(report.measured_peak_bytes > 0);
+        assert!(report.measured_peak_bytes <= 1 << 30);
+        // ids come back sorted
+        let ids: Vec<usize> = resp.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+        for r in &resp {
+            assert!(!r.output.is_empty());
+            assert!(r.output.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        assert!(build_model("nope", 16).is_err());
+    }
+}

@@ -7,10 +7,18 @@ use std::time::Duration;
 #[derive(Debug, Default)]
 pub struct Recorder {
     latencies_us: Vec<u64>,
+    waits_us: Vec<u64>,
     tokens: usize,
     pub per_variant: HashMap<String, usize>,
     pub waves: usize,
     pub rejected: usize,
+    /// Requests preempted to a deeper-chunked retry instead of rejected.
+    pub preempted: usize,
+    /// Compiled-plan cache hits/misses during the run.
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    /// Measured (allocator-tracked) peak activation bytes across the run.
+    pub measured_peak_bytes: usize,
 }
 
 impl Recorder {
@@ -24,28 +32,40 @@ impl Recorder {
         *self.per_variant.entry(variant.to_string()).or_default() += 1;
     }
 
+    /// Queueing delay between a request's arrival and its admission.
+    pub fn record_wait(&mut self, wait_us: u64) {
+        self.waits_us.push(wait_us);
+    }
+
     /// Close the run and compute the report.
     pub fn finish(mut self, wall: Duration) -> MetricsReport {
         self.latencies_us.sort_unstable();
+        self.waits_us.sort_unstable();
         let completed = self.latencies_us.len();
-        let pct = |p: f64| -> u64 {
-            if self.latencies_us.is_empty() {
+        let pct = |v: &[u64], p: f64| -> u64 {
+            if v.is_empty() {
                 return 0;
             }
-            let idx = ((completed as f64 - 1.0) * p).round() as usize;
-            self.latencies_us[idx]
+            let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
+            v[idx]
         };
         let wall_s = wall.as_secs_f64().max(1e-9);
         MetricsReport {
             completed,
             rejected: self.rejected,
+            preempted: self.preempted,
             waves: self.waves,
+            cache_hits: self.cache_hits,
+            cache_misses: self.cache_misses,
+            measured_peak_bytes: self.measured_peak_bytes,
             wall_seconds: wall_s,
             throughput_rps: completed as f64 / wall_s,
             throughput_tokens_s: self.tokens as f64 / wall_s,
-            p50_us: pct(0.50),
-            p95_us: pct(0.95),
-            p99_us: pct(0.99),
+            p50_us: pct(&self.latencies_us, 0.50),
+            p95_us: pct(&self.latencies_us, 0.95),
+            p99_us: pct(&self.latencies_us, 0.99),
+            wait_p50_us: pct(&self.waits_us, 0.50),
+            wait_p99_us: pct(&self.waits_us, 0.99),
             mean_us: if completed == 0 {
                 0
             } else {
@@ -61,13 +81,24 @@ impl Recorder {
 pub struct MetricsReport {
     pub completed: usize,
     pub rejected: usize,
+    /// Requests preempted to a deeper-chunked retry (still completed or
+    /// rejected eventually; this counts the deepening events).
+    pub preempted: usize,
     pub waves: usize,
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    /// Measured peak activation bytes across the run (0 when the backend
+    /// does not track allocations, e.g. the PJRT tier).
+    pub measured_peak_bytes: usize,
     pub wall_seconds: f64,
     pub throughput_rps: f64,
     pub throughput_tokens_s: f64,
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
+    /// Queueing-delay percentiles (admission tick − arrival tick).
+    pub wait_p50_us: u64,
+    pub wait_p99_us: u64,
     pub mean_us: u64,
     pub per_variant: HashMap<String, usize>,
 }
@@ -83,12 +114,14 @@ impl MetricsReport {
             .collect::<Vec<_>>()
             .join(" ");
         format!(
-            "completed={} rejected={} waves={} wall={:.2}s\n\
+            "completed={} rejected={} preempted={} waves={} wall={:.2}s\n\
              throughput={:.2} req/s ({:.0} tok/s)\n\
              latency mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms\n\
+             wait p50={:.2}ms p99={:.2}ms | plan cache {}h/{}m | peak {:.1} MiB\n\
              variants: {vstr}",
             self.completed,
             self.rejected,
+            self.preempted,
             self.waves,
             self.wall_seconds,
             self.throughput_rps,
@@ -97,6 +130,11 @@ impl MetricsReport {
             self.p50_us as f64 / 1e3,
             self.p95_us as f64 / 1e3,
             self.p99_us as f64 / 1e3,
+            self.wait_p50_us as f64 / 1e3,
+            self.wait_p99_us as f64 / 1e3,
+            self.cache_hits,
+            self.cache_misses,
+            self.measured_peak_bytes as f64 / (1 << 20) as f64,
         )
     }
 }
@@ -125,6 +163,29 @@ mod tests {
         let rep = Recorder::new().finish(Duration::from_millis(10));
         assert_eq!(rep.completed, 0);
         assert_eq!(rep.p99_us, 0);
+        assert_eq!(rep.wait_p99_us, 0);
+    }
+
+    #[test]
+    fn wait_percentiles_computed() {
+        let mut r = Recorder::new();
+        r.record("v", 10, 8);
+        for w in [100u64, 200, 300, 400] {
+            r.record_wait(w);
+        }
+        r.preempted = 2;
+        r.cache_hits = 3;
+        r.cache_misses = 1;
+        r.measured_peak_bytes = 5 << 20;
+        let rep = r.finish(Duration::from_secs(1));
+        assert!(rep.wait_p50_us >= 100 && rep.wait_p50_us <= 300);
+        assert_eq!(rep.wait_p99_us, 400);
+        assert_eq!(rep.preempted, 2);
+        assert_eq!(rep.cache_hits, 3);
+        assert_eq!(rep.cache_misses, 1);
+        let s = rep.render();
+        assert!(s.contains("preempted=2"), "{s}");
+        assert!(s.contains("3h/1m"), "{s}");
     }
 
     #[test]

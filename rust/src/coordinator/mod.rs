@@ -1,27 +1,32 @@
-//! L3 serving coordinator: router, batcher, memory-budget scheduler.
+//! L3 serving tier: router, batcher, memory-budget scheduler.
 //!
 //! The inference-serving context the paper motivates: requests with varying
 //! sequence lengths arrive at a device with a fixed activation-memory
-//! budget. The coordinator
+//! budget. Two backends share the queue/admission vocabulary:
 //!
-//! 1. **routes** each request to a sequence bucket and picks the cheapest-
-//!    loss variant (dense → chunked(n) → fused) whose estimated activation
-//!    fits the *remaining* budget — the runtime half of AutoChunk's
-//!    budget-driven chunk selection;
-//! 2. **batches** admitted requests into waves whose summed activation
-//!    estimates respect the budget (co-residency model of the paper's
-//!    GPU testbed);
-//! 3. **executes** waves through the PJRT runtime and records metrics.
+//! * [`engine::ServeEngine`] — the **continuous-batching engine** over the
+//!   native compiler stack: arrival-ticked request queue, memory-aware
+//!   admission priced by the estimator's [`crate::passes::CostQuote`]
+//!   upper bounds, per-bucket compiled-plan caching, and preemption of
+//!   oversized requests to deeper-chunked retries (DESIGN.md §11). This
+//!   is the production path; it needs no AOT artifacts.
+//! * [`Coordinator`] — the AOT/PJRT tier: routes each request to a
+//!   sequence bucket, picks the cheapest-loss variant (dense → chunked(n)
+//!   → fused) whose advertised activation fits, packs one-shot waves, and
+//!   executes compiled artifacts. Kept for the JAX artifact workflow
+//!   (`make artifacts`).
 //!
 //! Requests longer than any variant that fits are *rejected* — unless a
 //! chunked variant "breaks the memory wall" (§4.2), which is exactly the
 //! effect the serve example measures.
 
+pub mod engine;
 pub mod metrics;
 pub mod request;
 
+pub use engine::{EngineConfig, EngineResponse, ServeEngine};
 pub use metrics::{MetricsReport, Recorder};
-pub use request::{synthetic_workload, Request, RequestOutcome, Response};
+pub use request::{open_loop_workload, synthetic_workload, Request, RequestOutcome, Response};
 
 use crate::runtime::{ArtifactMeta, Runtime};
 use crate::util::error::{Context, Result};

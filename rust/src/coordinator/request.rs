@@ -8,6 +8,10 @@ pub struct Request {
     pub tokens: Vec<i32>,
     /// Synthetic arrival offset from workload start (open-loop traces).
     pub arrival_offset_us: u64,
+    /// Arrival tick for the continuous-batching engine: the engine's
+    /// virtual clock admits a request only once its tick has passed, so
+    /// open-loop traces replay deterministically on any machine.
+    pub arrival_tick: u64,
 }
 
 impl Request {
@@ -21,7 +25,15 @@ impl Request {
             seq_len,
             tokens,
             arrival_offset_us: 0,
+            arrival_tick: 0,
         }
+    }
+
+    /// Builder: set the arrival tick (and a matching µs offset).
+    pub fn at_tick(mut self, tick: u64, tick_us: u64) -> Request {
+        self.arrival_tick = tick;
+        self.arrival_offset_us = tick * tick_us;
+        self
     }
 }
 
@@ -65,6 +77,26 @@ pub fn synthetic_workload(count: usize, min_len: usize, max_len: usize, seed: u6
         .collect()
 }
 
+/// Open-loop workload for the continuous-batching engine: like
+/// [`synthetic_workload`], but `per_tick` requests arrive at each tick,
+/// so admission pressure (and hence wave packing) is part of the trace.
+pub fn open_loop_workload(
+    count: usize,
+    min_len: usize,
+    max_len: usize,
+    seed: u64,
+    per_tick: usize,
+) -> Vec<Request> {
+    let per_tick = per_tick.max(1);
+    synthetic_workload(count, min_len, max_len, seed)
+        .into_iter()
+        .map(|r| {
+            let tick = (r.id / per_tick) as u64;
+            r.at_tick(tick, 500)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,6 +109,17 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.seq_len, y.seq_len);
             assert_eq!(x.tokens, y.tokens);
+        }
+    }
+
+    #[test]
+    fn open_loop_assigns_monotone_ticks() {
+        let reqs = open_loop_workload(9, 8, 32, 5, 3);
+        assert_eq!(reqs.len(), 9);
+        let ticks: Vec<u64> = reqs.iter().map(|r| r.arrival_tick).collect();
+        assert_eq!(ticks, vec![0, 0, 0, 1, 1, 1, 2, 2, 2]);
+        for r in &reqs {
+            assert_eq!(r.arrival_offset_us, r.arrival_tick * 500);
         }
     }
 

@@ -328,10 +328,16 @@ fn emit(
             }
         }
         "reduce" => {
+            if inputs.is_empty() {
+                bail!("reduce without operands: {}", inst.name);
+            }
             // drop the init-value operand: IR Reduce is single-input
             inputs.truncate(1);
             let dims = attr_dims(&inst.attrs, "dimensions")
                 .ok_or_else(|| anyhow!("reduce without dimensions"))?;
+            if dims.is_empty() {
+                bail!("reduce with empty dimensions: {}", inst.name);
+            }
             let region = attr_str(&inst.attrs, "to_apply").unwrap_or("");
             let rop = combiners.get(region).copied().unwrap_or(ReduceOp::Sum);
             if dims.len() == 1 {
@@ -347,6 +353,9 @@ fn emit(
                 let mut axes = dims.clone();
                 axes.sort_unstable_by(|a, b| b.cmp(a)); // reduce inner first
                 for (i, &ax) in axes.iter().enumerate() {
+                    if ax >= cur_shape.len() {
+                        bail!("reduce axis {ax} out of range in: {}", inst.name);
+                    }
                     cur_shape.remove(ax);
                     let id = graph.nodes.len();
                     graph.nodes.push(Node {
@@ -369,10 +378,19 @@ fn emit(
         "concatenate" => {
             let dims = attr_dims(&inst.attrs, "dimensions")
                 .ok_or_else(|| anyhow!("concatenate without dimensions"))?;
-            Op::Concat { axis: dims[0] }
+            let axis = *dims
+                .first()
+                .ok_or_else(|| anyhow!("concatenate with empty dimensions: {}", inst.name))?;
+            if inputs.is_empty() {
+                bail!("concatenate without operands: {}", inst.name);
+            }
+            Op::Concat { axis }
         }
         "slice" => {
             // slice={[a:b],[c:d],...} — single differing axis supported
+            if inputs.is_empty() {
+                bail!("slice without operands: {}", inst.name);
+            }
             let in_s = in_shape(graph, &inputs, 0);
             let mut op = None;
             if let Some(start_pos) = inst.attrs.find("slice={") {
@@ -385,6 +403,9 @@ fn emit(
                     .split("],")
                     .collect();
                 for (axis, part) in parts.iter().enumerate() {
+                    if axis >= in_s.len() {
+                        bail!("slice rank mismatch in: {}", inst.name);
+                    }
                     let p = part.trim_matches(|c| c == '[' || c == ']');
                     let nums: Vec<usize> = p
                         .split(':')
@@ -392,25 +413,25 @@ fn emit(
                         .collect();
                     if nums.len() >= 2 {
                         let (start, stop) = (nums[0], nums[1]);
-                        if stop - start != in_s[axis] {
-                            op = Some(Op::Slice {
-                                axis,
-                                start,
-                                len: stop - start,
-                            });
+                        let len = stop
+                            .checked_sub(start)
+                            .ok_or_else(|| anyhow!("slice bounds reversed in: {}", inst.name))?;
+                        if len != in_s[axis] {
+                            op = Some(Op::Slice { axis, start, len });
                         }
                     }
                 }
             }
             op.unwrap_or(Op::Reshape) // full-range slice = identity-ish
         }
-        "gather" => {
+        "gather" if inputs.len() >= 2 => {
             // embedding pattern: table [V, D] × i32 ids → [.., D]
             let t = in_shape(graph, &inputs, 0);
             let ids_dt = graph.node(inputs[1]).dtype;
             let offset = attr_dims(&inst.attrs, "offset_dims").unwrap_or_default();
             let collapsed = attr_dims(&inst.attrs, "collapsed_slice_dims").unwrap_or_default();
             if t.len() == 2
+                && !shape.is_empty()
                 && ids_dt == DType::I32
                 && offset == vec![shape.len() - 1]
                 && collapsed == vec![0]
@@ -422,6 +443,30 @@ fn emit(
         }
         other => opaque(other),
     };
+
+    // Minimum operand arity per op: malformed/truncated HLO must surface
+    // as Err here, never as an out-of-bounds panic in a later pass.
+    let min_arity = match &op {
+        Op::Input | Op::Param | Op::Const(_) | Op::Iota { .. } | Op::Opaque { .. } => 0,
+        Op::Binary(_) | Op::MatMul | Op::DotGeneral { .. } | Op::Gather => 2,
+        Op::FusedAttention { .. } => 3,
+        _ => 1,
+    };
+    if inputs.len() < min_arity {
+        bail!(
+            "{} needs {} operand(s), got {}: {}",
+            inst.opcode,
+            min_arity,
+            inputs.len(),
+            inst.name
+        );
+    }
+    if let Op::Transpose { perm } = &op {
+        let in_rank = graph.node(inputs[0]).shape.len();
+        if perm.len() != in_rank || perm.iter().any(|&p| p >= in_rank) {
+            bail!("transpose permutation {perm:?} invalid for rank {in_rank}: {}", inst.name);
+        }
+    }
 
     let id = graph.nodes.len();
     match &op {

@@ -155,14 +155,52 @@ fn chunk_scale(graph: &Graph, plan: &ChunkPlan, id: NodeId) -> f64 {
     step as f64 / extent as f64
 }
 
-/// Core simulator shared by [`estimate`] and [`estimate_under_plan`].
-fn simulate(graph: &Graph, plans: &[ChunkPlan]) -> MemoryProfile {
+/// Core simulator shared by [`estimate`], [`estimate_under_plan`] and
+/// [`peak_upper_bound`].
+///
+/// `pessimistic` switches the model from *best estimate* (what chunk
+/// selection iterates against) to *upper bound* (what serving admission
+/// prices requests with — see [`cost_quote`]):
+///
+/// * kernel workspace is charged as if every input were non-contiguous,
+///   plus one materialized copy of every input (any kernel may
+///   `to_contiguous` its operands);
+/// * reshapes always copy (the zero-copy alias is an optimization the
+///   bound must not rely on);
+/// * for each chunk region, the output accumulators (full size) and the
+///   contiguated pass-input copies are pre-charged at the region head and
+///   held until the region's last node — mirroring the chunked executor's
+///   `Accumulator`s and loop-invariant pass materialization;
+/// * values consumed inside a chunk region are not freed until the region
+///   completes (the executor releases region scratch at iteration end and
+///   external inputs after the loop).
+fn simulate(graph: &Graph, plans: &[ChunkPlan], pessimistic: bool) -> MemoryProfile {
     let users = graph.users();
     let mut refcount: Vec<usize> = users.iter().map(|u| u.len()).collect();
     for &o in &graph.outputs {
         refcount[o] += 1;
     }
     let owner = region_owner(plans, graph.len());
+
+    // Pessimistic region bookkeeping: pre-charge per plan, release point.
+    let mut precharge: Vec<usize> = vec![0; plans.len()];
+    let mut region_head: Vec<NodeId> = vec![usize::MAX; plans.len()];
+    let mut region_last: Vec<NodeId> = vec![usize::MAX; plans.len()];
+    if pessimistic {
+        for (pi, p) in plans.iter().enumerate() {
+            let outs: usize = p.outputs.iter().map(|&(o, _)| graph.node(o).byte_size()).sum();
+            let pass: usize = p
+                .pass_inputs
+                .iter()
+                .map(|&i| graph.node(i).byte_size())
+                .sum();
+            precharge[pi] = outs + pass;
+            region_head[pi] = *p.region.first().unwrap_or(&usize::MAX);
+            region_last[pi] = *p.region.last().unwrap_or(&usize::MAX);
+        }
+    }
+    let mut deferred: Vec<Vec<NodeId>> = vec![Vec::new(); plans.len()];
+    let all_noncontig: Vec<bool> = if pessimistic { vec![false; graph.len()] } else { Vec::new() };
 
     // Aliasing: each value references a storage root; roots carry bytes.
     let mut root: Vec<NodeId> = (0..graph.len()).collect();
@@ -192,6 +230,19 @@ fn simulate(graph: &Graph, plans: &[ChunkPlan]) -> MemoryProfile {
         let id = node.id;
         contig[id] = output_contiguous(graph, id, &contig);
 
+        // Accumulators + pass-input copies appear when the region starts.
+        if pessimistic {
+            for (pi, &h) in region_head.iter().enumerate() {
+                if h == id {
+                    live += precharge[pi];
+                    if live > peak {
+                        peak = live;
+                        peak_node = id;
+                    }
+                }
+            }
+        }
+
         // Parameters occupy parameter memory, not activation memory.
         let is_param = matches!(node.op, Op::Param);
 
@@ -199,6 +250,10 @@ fn simulate(graph: &Graph, plans: &[ChunkPlan]) -> MemoryProfile {
         let scale = owner[id]
             .map(|pi| chunk_scale(graph, &plans[pi], id))
             .unwrap_or(1.0);
+
+        // Frees triggered while executing a chunk region hold until the
+        // region completes (pessimistic mode only).
+        let defer_to = if pessimistic { owner[id] } else { None };
 
         // `root_refs[r]` counts live *values* aliasing root r: each node id
         // holds exactly one reference from birth until its own refcount
@@ -211,19 +266,39 @@ fn simulate(graph: &Graph, plans: &[ChunkPlan]) -> MemoryProfile {
                 free_value(id, &root, &mut root_bytes, &mut root_refs, &mut live);
             }
         } else {
-            // Views alias their input's root.
-            if is_view(&node.op)
-                || (matches!(node.op, Op::Reshape) && contig[node.inputs[0]])
-            {
+            // Views alias their input's root (pessimistic mode does not
+            // trust the zero-copy reshape).
+            let aliases = is_view(&node.op)
+                || (matches!(node.op, Op::Reshape) && contig[node.inputs[0]] && !pessimistic);
+            if aliases {
                 let r = root[node.inputs[0]];
                 root[id] = r;
                 root_refs[r] += 1;
                 if refcount[id] == 0 {
-                    free_value(id, &root, &mut root_bytes, &mut root_refs, &mut live);
+                    match defer_to {
+                        Some(pi) => deferred[pi].push(id),
+                        None => free_value(id, &root, &mut root_bytes, &mut root_refs, &mut live),
+                    }
                 }
             } else {
-                let out = (alloc_bytes(graph, id, &contig) as f64 * scale) as usize;
-                let ws = (node_workspace(graph, id, &contig) as f64 * scale) as usize;
+                let (out, ws) = if pessimistic {
+                    // Any kernel may materialize a non-contiguous operand
+                    // with `to_contiguous`; contiguous values (leaves are
+                    // always bound contiguous) are never copied that way.
+                    let inputs_copied: usize = node
+                        .inputs
+                        .iter()
+                        .filter(|&&i| !contig[i])
+                        .map(|&i| graph.node(i).byte_size())
+                        .sum();
+                    let out = (alloc_bytes(graph, id, &all_noncontig) as f64 * scale) as usize;
+                    // workspace deliberately left unscaled under plans
+                    (out, node_workspace(graph, id, &all_noncontig) + inputs_copied)
+                } else {
+                    let out = (alloc_bytes(graph, id, &contig) as f64 * scale) as usize;
+                    let ws = (node_workspace(graph, id, &contig) as f64 * scale) as usize;
+                    (out, ws)
+                };
                 // workspace + output live simultaneously at the peak moment
                 if live + ws + out > peak {
                     peak = live + ws + out;
@@ -233,15 +308,32 @@ fn simulate(graph: &Graph, plans: &[ChunkPlan]) -> MemoryProfile {
                 root_refs[id] = 1;
                 live += out;
                 if refcount[id] == 0 {
-                    // dead code: free immediately
-                    free_value(id, &root, &mut root_bytes, &mut root_refs, &mut live);
+                    // dead code: free immediately (or at region end)
+                    match defer_to {
+                        Some(pi) => deferred[pi].push(id),
+                        None => free_value(id, &root, &mut root_bytes, &mut root_refs, &mut live),
+                    }
                 }
             }
             // Inputs whose last consumer this was are released.
             for &i in &node.inputs {
                 refcount[i] -= 1;
                 if refcount[i] == 0 {
-                    free_value(i, &root, &mut root_bytes, &mut root_refs, &mut live);
+                    match defer_to {
+                        Some(pi) => deferred[pi].push(i),
+                        None => free_value(i, &root, &mut root_bytes, &mut root_refs, &mut live),
+                    }
+                }
+            }
+        }
+        // Region end: drop deferred values and the region pre-charge.
+        if pessimistic {
+            for (pi, &l) in region_last.iter().enumerate() {
+                if l == id {
+                    for v in std::mem::take(&mut deferred[pi]) {
+                        free_value(v, &root, &mut root_bytes, &mut root_refs, &mut live);
+                    }
+                    live -= precharge[pi];
                 }
             }
         }
@@ -261,13 +353,73 @@ fn simulate(graph: &Graph, plans: &[ChunkPlan]) -> MemoryProfile {
 
 /// Activation-memory profile of the unchunked graph.
 pub fn estimate(graph: &Graph) -> MemoryProfile {
-    simulate(graph, &[])
+    simulate(graph, &[], false)
 }
 
 /// Profile under a set of chunk plans (Eq. 2: region intermediates scale by
 /// `1/n`; region inputs/outputs stay whole).
 pub fn estimate_under_plan(graph: &Graph, plans: &[ChunkPlan]) -> MemoryProfile {
-    simulate(graph, plans)
+    simulate(graph, plans, false)
+}
+
+/// Conservative upper bound on the measured peak activation bytes of one
+/// execution of `graph` under `plans` (empty = unchunked). Unlike
+/// [`estimate`], which aims to *track* the interpreter, this bound may only
+/// err high — it is what serving admission control packs against, so a
+/// wave of co-resident requests whose bounds sum below the budget cannot
+/// exceed it.
+pub fn peak_upper_bound(graph: &Graph, plans: &[ChunkPlan]) -> usize {
+    let pess = simulate(graph, plans, true).peak_bytes;
+    // Never report below the best estimate (the bound must dominate it).
+    pess.max(simulate(graph, plans, false).peak_bytes)
+}
+
+/// Per-request cost quote: everything the serving tier needs to admit a
+/// request under a memory budget (ISSUE: the admission controller packs
+/// waves by `peak + (d − 1) · per_chunk` — the PR-1 governor formula).
+#[derive(Clone, Copy, Debug)]
+pub struct CostQuote {
+    /// Upper bound on the measured peak of one serial execution
+    /// ([`peak_upper_bound`]). Admission charges this per request.
+    pub peak_bytes: usize,
+    /// Price of one *extra* in-flight chunk iteration: the largest
+    /// [`per_chunk_bytes`] across the plans (0 when unchunked).
+    pub per_chunk_bytes: usize,
+    /// The tracking estimate ([`estimate_under_plan`] peak) — what the
+    /// executor's concurrency governor prices headroom against.
+    pub estimate_bytes: usize,
+}
+
+impl CostQuote {
+    /// Admission price of running this request with `degree` chunk
+    /// iterations in flight: `peak + (degree − 1) · per_chunk`.
+    pub fn admission_bytes(&self, degree: usize) -> usize {
+        self.peak_bytes + degree.saturating_sub(1) * self.per_chunk_bytes
+    }
+
+    /// Budget to hand the executor's concurrency governor so that
+    /// *measured* peak stays under `budget`: the governor prices headroom
+    /// from `estimate_bytes`, so the gap between the upper bound and the
+    /// estimate must be reserved up front.
+    pub fn governor_budget(&self, budget: usize) -> usize {
+        budget.saturating_sub(self.peak_bytes.saturating_sub(self.estimate_bytes))
+    }
+}
+
+/// Quote a (graph, plans) pair for admission control.
+pub fn cost_quote(graph: &Graph, plans: &[ChunkPlan]) -> CostQuote {
+    let estimate_bytes = simulate(graph, plans, false).peak_bytes;
+    let peak_bytes = simulate(graph, plans, true).peak_bytes.max(estimate_bytes);
+    let per_chunk = plans
+        .iter()
+        .map(|p| per_chunk_bytes(graph, p))
+        .max()
+        .unwrap_or(0);
+    CostQuote {
+        peak_bytes,
+        per_chunk_bytes: per_chunk,
+        estimate_bytes,
+    }
 }
 
 /// Upper bound on the activation bytes one chunk *iteration* of `plan`
@@ -406,6 +558,37 @@ mod tests {
         let p = estimate(&g);
         // only the input allocates
         assert_eq!(p.peak_bytes, 64 * 64 * 4);
+    }
+
+    #[test]
+    fn quote_dominates_estimate_and_prices_degree() {
+        let g = fat_graph(128, 16);
+        let q = cost_quote(&g, &[]);
+        let est = estimate(&g).peak_bytes;
+        assert_eq!(q.estimate_bytes, est);
+        assert!(q.peak_bytes >= est, "bound {} below estimate {est}", q.peak_bytes);
+        assert_eq!(q.per_chunk_bytes, 0, "unchunked quote has no per-chunk price");
+        assert_eq!(q.admission_bytes(1), q.peak_bytes);
+        assert_eq!(q.admission_bytes(4), q.peak_bytes);
+        // governor budget reserves the bound-vs-estimate gap
+        let b = q.peak_bytes * 2;
+        assert_eq!(q.governor_budget(b), b - (q.peak_bytes - q.estimate_bytes));
+    }
+
+    #[test]
+    fn upper_bound_covers_measured_peak() {
+        for (name, g) in [("fat", fat_graph(96, 16)), ("fat2", fat_graph(64, 32))] {
+            let bound = peak_upper_bound(&g, &[]);
+            let tracker = MemoryTracker::new();
+            let ins = random_inputs(&g, 9, Some(tracker.clone()));
+            let ps = random_params(&g, 10);
+            let (_, stats) = execute(&g, &ins, &ps, &tracker);
+            assert!(
+                bound >= stats.peak_bytes,
+                "{name}: bound {bound} below measured {}",
+                stats.peak_bytes
+            );
+        }
     }
 
     #[test]

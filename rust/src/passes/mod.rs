@@ -18,7 +18,9 @@ pub mod flow;
 pub mod search;
 pub mod select;
 
-pub use estimate::{estimate, estimate_under_plan, MemoryProfile};
+pub use estimate::{
+    cost_quote, estimate, estimate_under_plan, peak_upper_bound, CostQuote, MemoryProfile,
+};
 pub use search::{search_chunks, ChunkCandidate, SearchConfig};
 pub use select::{select_chunks, SelectConfig};
 

@@ -17,10 +17,11 @@
 use super::{region_owner, ChunkPlan};
 use crate::exec::{execute_node, ExecStats};
 use crate::ir::{Graph, Node, NodeId, Op};
-use crate::passes::estimate::{estimate_under_plan, per_chunk_bytes};
+use crate::passes::estimate::{cost_quote, estimate_under_plan, per_chunk_bytes, CostQuote};
 use crate::tensor::{contiguous_strides, MemoryTracker, Tensor};
 use crate::util::pool;
 use std::collections::HashMap;
+use std::sync::Arc;
 
 /// Options for the chunked executor.
 #[derive(Clone, Debug, Default)]
@@ -32,6 +33,96 @@ pub struct ExecOptions {
     /// against; kernel-level parallelism still applies inside each
     /// iteration.
     pub budget_bytes: Option<usize>,
+}
+
+/// A compiled, shareable execution plan: graph + chunk strategy + bound
+/// parameters + admission quote, behind an `Arc` so the serving tier's
+/// plan cache can hand the same compilation to many concurrent requests
+/// without re-running chunk search. This is the unit the continuous-
+/// batching engine caches per (model, seq-bucket, depth).
+#[derive(Clone)]
+pub struct PlanHandle {
+    inner: Arc<PlanInner>,
+}
+
+struct PlanInner {
+    tag: String,
+    graph: Graph,
+    plans: Vec<ChunkPlan>,
+    params: Vec<Tensor>,
+    quote: CostQuote,
+}
+
+impl PlanHandle {
+    /// Package a compilation result. `params` are the bucket's weights
+    /// (untracked: parameter memory is outside activation accounting).
+    pub fn new(tag: &str, graph: Graph, plans: Vec<ChunkPlan>, params: Vec<Tensor>) -> PlanHandle {
+        let quote = cost_quote(&graph, &plans);
+        PlanHandle {
+            inner: Arc::new(PlanInner {
+                tag: tag.to_string(),
+                graph,
+                plans,
+                params,
+                quote,
+            }),
+        }
+    }
+
+    pub fn tag(&self) -> &str {
+        &self.inner.tag
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.inner.graph
+    }
+
+    pub fn plans(&self) -> &[ChunkPlan] {
+        &self.inner.plans
+    }
+
+    /// The admission quote for one request served by this plan.
+    pub fn quote(&self) -> &CostQuote {
+        &self.inner.quote
+    }
+
+    /// Largest chunk count across the handle's plans (1 when unchunked).
+    pub fn n_chunks_max(&self) -> usize {
+        self.inner.plans.iter().map(|p| p.n_chunks).max().unwrap_or(1)
+    }
+
+    /// Execute one request's inputs through the compiled plan. Unchunked
+    /// handles run the plain interpreter; chunked ones the chunked
+    /// executor with `opts` (budget-aware chunk concurrency).
+    pub fn execute(
+        &self,
+        inputs: &[Tensor],
+        tracker: &MemoryTracker,
+        opts: &ExecOptions,
+    ) -> (Vec<Tensor>, ExecStats) {
+        if self.inner.plans.is_empty() {
+            crate::exec::execute(&self.inner.graph, inputs, &self.inner.params, tracker)
+        } else {
+            execute_chunked_opts(
+                &self.inner.graph,
+                &self.inner.plans,
+                inputs,
+                &self.inner.params,
+                tracker,
+                opts,
+            )
+        }
+    }
+}
+
+impl std::fmt::Debug for PlanHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlanHandle")
+            .field("tag", &self.inner.tag)
+            .field("plans", &self.inner.plans.len())
+            .field("quote", &self.inner.quote)
+            .finish()
+    }
 }
 
 /// How many chunk iterations of a region may be in flight at once.

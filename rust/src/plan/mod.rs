@@ -10,7 +10,9 @@
 
 pub mod exec_chunked;
 
-pub use exec_chunked::{execute_chunked, execute_chunked_opts, governed_degree, ExecOptions};
+pub use exec_chunked::{
+    execute_chunked, execute_chunked_opts, governed_degree, ExecOptions, PlanHandle,
+};
 
 use crate::ir::{Graph, NodeId};
 use std::collections::HashMap;
@@ -128,6 +130,45 @@ impl ChunkPlan {
         }
         Ok(())
     }
+}
+
+/// Stable, human-readable rendering of a chunk strategy — the golden-plan
+/// snapshot format (`rust/tests/golden_plans.rs`). One line per region
+/// node so a search/select regression shows up as a readable diff.
+/// Deterministic: iterates plan vectors in stored order and the region in
+/// topological order (never a HashMap walk).
+pub fn describe_plans(graph: &Graph, plans: &[ChunkPlan]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(s, "plans: {}", plans.len());
+    for (i, p) in plans.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "plan {i}: n_chunks={} region_span=[{}..{}] nodes={}",
+            p.n_chunks,
+            p.region.first().copied().unwrap_or(0),
+            p.region.last().copied().unwrap_or(0),
+            p.region.len()
+        );
+        for &(cid, axis) in &p.chunk_inputs {
+            let n = graph.node(cid);
+            let _ = writeln!(s, "  chunk_in  {cid} {} {:?} axis={axis}", n.name, n.shape);
+        }
+        for &pid in &p.pass_inputs {
+            let n = graph.node(pid);
+            let _ = writeln!(s, "  pass_in   {pid} {} {:?}", n.name, n.shape);
+        }
+        for &r in &p.region {
+            let n = graph.node(r);
+            let dim = p.node_dims.get(&r).copied().unwrap_or(usize::MAX);
+            let _ = writeln!(s, "  node      {r} {} {:?} dim={dim}", n.name, n.shape);
+        }
+        for &(oid, axis) in &p.outputs {
+            let n = graph.node(oid);
+            let _ = writeln!(s, "  out       {oid} {} {:?} axis={axis}", n.name, n.shape);
+        }
+    }
+    s
 }
 
 /// True if two plans' regions overlap (plans must be disjoint).

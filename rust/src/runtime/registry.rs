@@ -59,6 +59,20 @@ impl Registry {
         })
     }
 
+    /// An empty in-memory registry (no artifact directory). The native
+    /// serving engine registers its compiled variants here so routing and
+    /// introspection share one catalog with the AOT/PJRT tier.
+    pub fn in_memory() -> Registry {
+        Registry::default()
+    }
+
+    /// Insert (or replace) a variant's metadata. Used by the native
+    /// engine's plan cache and by tests that synthesize catalogs without
+    /// an artifact directory.
+    pub fn register(&mut self, meta: ArtifactMeta) {
+        self.by_tag.insert(meta.tag.clone(), meta);
+    }
+
     pub fn dir(&self) -> &str {
         &self.dir
     }
@@ -169,5 +183,44 @@ mod tests {
     #[test]
     fn parse_meta_missing_key_errors() {
         assert!(parse_meta("t", "/tmp", "model=gpt\n").is_err());
+    }
+
+    #[test]
+    fn in_memory_register_and_route() {
+        let mut reg = Registry::in_memory();
+        assert!(reg.is_empty());
+        for (tag, seq, est) in [
+            ("gpt_native_s64", 64usize, 1000usize),
+            ("gpt_native_s128", 128, 4000),
+            ("gpt_native_s128_d1", 128, 2000),
+        ] {
+            reg.register(ArtifactMeta {
+                tag: tag.into(),
+                hlo_path: String::new(),
+                model: "gpt".into(),
+                mode: "native".into(),
+                seq,
+                d_model: 256,
+                heads: 8,
+                layers: 4,
+                vocab: 8192,
+                n_chunks: 1,
+                num_params: 0,
+                param_names: Vec::new(),
+                est_activation_bytes: est,
+                output_shape: vec![seq, 256],
+            });
+        }
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.buckets("gpt"), vec![64, 128]);
+        let v = reg.variants("gpt", 128);
+        assert_eq!(v.len(), 2);
+        assert!(v[0].est_activation_bytes >= v[1].est_activation_bytes);
+        // re-register replaces
+        let mut m = reg.get("gpt_native_s64").unwrap().clone();
+        m.est_activation_bytes = 999;
+        reg.register(m);
+        assert_eq!(reg.len(), 3);
+        assert_eq!(reg.get("gpt_native_s64").unwrap().est_activation_bytes, 999);
     }
 }

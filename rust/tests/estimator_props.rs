@@ -1,0 +1,237 @@
+//! Property tests for the estimation pass (hand-rolled xorshift sweeps;
+//! proptest is not in the vendored dependency set).
+//!
+//! Two properties the serving tier's admission control rests on:
+//!
+//! 1. **Soundness** — the cost quote's `peak_bytes` upper-bounds the
+//!    *measured* peak from the allocator stats, for all four evaluation
+//!    models at randomized scales and for randomized op-chain graphs.
+//!    Admission packs waves by these quotes, so an under-estimate would
+//!    let a wave exceed the device budget.
+//! 2. **Monotonicity** — the estimated peak never increases as chunks
+//!    shrink (chunk count grows), for both the tracking estimate and the
+//!    pessimistic bound. Chunk selection's deepening post-pass relies on
+//!    this.
+
+use autochunk::exec::{execute, random_inputs, random_params};
+use autochunk::ir::{Graph, GraphBuilder};
+use autochunk::models::*;
+use autochunk::passes::{
+    autochunk, cost_quote, estimate, estimate_under_plan, peak_upper_bound, AutoChunkConfig,
+};
+use autochunk::tensor::ops::{BinaryOp, UnaryOp};
+use autochunk::tensor::MemoryTracker;
+
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+
+    fn pick(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+/// Measured peak of one tracked execution.
+fn measured_peak(g: &Graph, seed: u64) -> usize {
+    let tracker = MemoryTracker::new();
+    let ins = random_inputs(g, seed, Some(tracker.clone()));
+    let ps = random_params(g, seed + 1);
+    let (_, stats) = execute(g, &ins, &ps, &tracker);
+    stats.peak_bytes
+}
+
+/// Randomized small configs of the four evaluation models.
+fn model_zoo_randomized(rng: &mut Rng) -> Vec<(String, Graph)> {
+    let mut out = Vec::new();
+    for variant in 0..2 {
+        let seq = 32 + rng.pick(3) * 32; // 32 | 64 | 96
+        let layers = 1 + rng.pick(2);
+        out.push((
+            format!("gpt-s{seq}-l{layers}-v{variant}"),
+            gpt(&GptConfig { seq, layers, ..Default::default() }),
+        ));
+        let patches = 32 + rng.pick(3) * 32;
+        out.push((
+            format!("vit-p{patches}-v{variant}"),
+            vit(&ViTConfig { patches, layers: 1, ..Default::default() }),
+        ));
+    }
+    let eseq = 8 + rng.pick(2) * 8; // 8 | 16
+    out.push((
+        format!("evoformer-s{eseq}"),
+        evoformer(&EvoformerConfig { seq: eseq, blocks: 1, ..Default::default() }),
+    ));
+    let img = 16;
+    out.push((format!("unet-i{img}"), unet(&UNetConfig { image: img, ..Default::default() })));
+    out
+}
+
+#[test]
+fn quote_upper_bounds_measured_peak_on_all_models() {
+    let mut rng = Rng::new(0xBEEF);
+    for (name, g) in model_zoo_randomized(&mut rng) {
+        let q = cost_quote(&g, &[]);
+        let measured = measured_peak(&g, 17);
+        assert!(
+            q.peak_bytes >= measured,
+            "{name}: quote {} below measured {measured} (estimate {})",
+            q.peak_bytes,
+            q.estimate_bytes
+        );
+        assert!(q.peak_bytes >= q.estimate_bytes, "{name}: bound below estimate");
+    }
+}
+
+#[test]
+fn quote_upper_bounds_measured_peak_under_plans() {
+    // Chunked execution (accumulators, pass-input copies, per-chunk
+    // scratch) must also stay under the quote — this is the price
+    // admission charges a chunked request.
+    for (name, g) in [
+        ("gpt", gpt(&GptConfig { seq: 96, layers: 1, ..Default::default() })),
+        ("vit", vit(&ViTConfig { patches: 96, layers: 1, ..Default::default() })),
+    ] {
+        let base = estimate(&g).peak_bytes;
+        let result = autochunk(&g, base / 3, &AutoChunkConfig::default());
+        assert!(!result.plans.is_empty(), "{name}: no plans");
+        let q = cost_quote(&g, &result.plans);
+
+        let tracker = MemoryTracker::new();
+        let ins = random_inputs(&g, 3, Some(tracker.clone()));
+        let ps = random_params(&g, 4);
+        let (_, stats) =
+            autochunk::plan::execute_chunked(&g, &result.plans, &ins, &ps, &tracker);
+        assert!(
+            q.peak_bytes >= stats.peak_bytes,
+            "{name}: chunked quote {} below measured {}",
+            q.peak_bytes,
+            stats.peak_bytes
+        );
+        assert!(q.per_chunk_bytes > 0, "{name}: chunked quote has per-chunk price");
+    }
+}
+
+/// A random chain-with-residuals graph over 2-D tensors [s, d] — stresses
+/// views, reshapes, permutes, softmax and reduce paths the models may not.
+fn random_graph(seed: u64, s: usize, d: usize) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new("random");
+    let x = b.input("x", &[s, d]);
+    let mut cur = x;
+    let mut prev = x;
+    let n_ops = 5 + rng.pick(8);
+    for i in 0..n_ops {
+        cur = match rng.pick(7) {
+            0 => b.unary(
+                [UnaryOp::Relu, UnaryOp::Gelu, UnaryOp::Tanh, UnaryOp::Exp][rng.pick(4)],
+                cur,
+            ),
+            1 => b.binary([BinaryOp::Add, BinaryOp::Mul][rng.pick(2)], cur, prev),
+            2 => {
+                let w = b.param(&format!("w{i}"), &[d, d]);
+                b.matmul(cur, w)
+            }
+            3 => {
+                let t = b.transpose(cur, &[1, 0]);
+                let scores = b.matmul(cur, t);
+                let probs = b.softmax(scores, 1);
+                b.matmul(probs, cur)
+            }
+            4 => {
+                let m = b.reduce(autochunk::tensor::reduce::ReduceOp::Max, cur, 1, true);
+                b.sub(cur, m)
+            }
+            5 => {
+                let r = b.reshape(cur, &[s, 2, d / 2]);
+                let t = b.transpose(r, &[1, 0, 2]);
+                let t2 = b.transpose(t, &[1, 0, 2]);
+                b.reshape(t2, &[s, d])
+            }
+            _ => b.binary_scalar(BinaryOp::Mul, cur, 0.9),
+        };
+        if rng.pick(3) == 0 {
+            prev = cur;
+        }
+    }
+    b.finish(vec![cur])
+}
+
+#[test]
+fn quote_upper_bounds_measured_peak_on_random_graphs() {
+    for seed in 0..14u64 {
+        let g = random_graph(seed + 1000, 48, 16);
+        assert!(g.validate().is_ok(), "seed {seed}");
+        let q = cost_quote(&g, &[]);
+        let measured = measured_peak(&g, seed);
+        assert!(
+            q.peak_bytes >= measured,
+            "seed {seed}: quote {} below measured {measured}",
+            q.peak_bytes
+        );
+    }
+}
+
+#[test]
+fn peak_monotone_as_chunks_shrink() {
+    // Shrinking chunk size (growing n_chunks) never raises the estimated
+    // peak — for the tracking estimate AND the admission bound.
+    for (name, g) in [
+        ("gpt", gpt(&GptConfig { seq: 128, layers: 1, ..Default::default() })),
+        ("vit", vit(&ViTConfig { patches: 128, layers: 1, ..Default::default() })),
+    ] {
+        let base = estimate(&g).peak_bytes;
+        let result = autochunk(&g, base / 3, &AutoChunkConfig::default());
+        assert!(!result.plans.is_empty(), "{name}");
+        let mut plans = result.plans.clone();
+        let extent = plans[0].chunk_extent(&g);
+
+        let mut last_est = usize::MAX;
+        let mut last_bound = usize::MAX;
+        let mut n = 2usize;
+        while n <= extent {
+            plans[0].n_chunks = n;
+            let est = estimate_under_plan(&g, &plans).peak_bytes;
+            let bound = peak_upper_bound(&g, &plans);
+            assert!(
+                est <= last_est,
+                "{name}: estimate rose {last_est} -> {est} at n={n}"
+            );
+            assert!(
+                bound <= last_bound,
+                "{name}: bound rose {last_bound} -> {bound} at n={n}"
+            );
+            assert!(bound >= est, "{name}: bound {bound} below estimate {est} at n={n}");
+            last_est = est;
+            last_bound = bound;
+            n *= 2;
+        }
+        assert!(last_est < base, "{name}: chunking never helped");
+    }
+}
+
+#[test]
+fn admission_price_monotone_in_degree() {
+    let g = gpt(&GptConfig { seq: 96, layers: 1, ..Default::default() });
+    let base = estimate(&g).peak_bytes;
+    let result = autochunk(&g, base / 3, &AutoChunkConfig::default());
+    let q = cost_quote(&g, &result.plans);
+    let mut last = 0usize;
+    for degree in 1..=6 {
+        let price = q.admission_bytes(degree);
+        assert!(price >= last, "price fell at degree {degree}");
+        assert!(price >= q.peak_bytes);
+        last = price;
+    }
+    // governor budget never exceeds the raw budget
+    assert!(q.governor_budget(base) <= base);
+}

@@ -1,0 +1,110 @@
+//! Golden-plan snapshot tests: the chunk strategy the compiler selects for
+//! each evaluation model at two scales, serialized to committed text
+//! fixtures (`tests/fixtures/golden_plans/*.txt`). Any search/select
+//! regression shows up as a readable diff instead of a silent plan change.
+//!
+//! Bless workflow: a missing fixture is written on first run (and the test
+//! passes, so a fresh checkout bootstraps itself); set `AUTOCHUNK_BLESS=1`
+//! to regenerate all fixtures after an intentional compiler change.
+
+use autochunk::ir::Graph;
+use autochunk::models::*;
+use autochunk::passes::{autochunk, estimate, AutoChunkConfig};
+use autochunk::plan::describe_plans;
+use std::path::PathBuf;
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("fixtures")
+        .join("golden_plans")
+}
+
+/// Compile at a third of the baseline and render the chosen strategy,
+/// prefixed with invariant headers (budget status, peak reduction).
+fn snapshot(name: &str, g: &Graph) -> String {
+    let base = estimate(g).peak_bytes;
+    let budget = base / 3;
+    let result = autochunk(g, budget, &AutoChunkConfig::default());
+
+    // Structural invariants hold even on a freshly-blessed fixture.
+    assert!(!result.plans.is_empty(), "{name}: compiler chose no plans");
+    for (i, p) in result.plans.iter().enumerate() {
+        assert!(p.validate(g).is_ok(), "{name} plan {i}: {:?}", p.validate(g));
+    }
+    assert!(
+        (result.chunked_peak as f64) < 0.9 * base as f64,
+        "{name}: no real peak reduction ({} vs {base})",
+        result.chunked_peak
+    );
+
+    format!(
+        "model: {name}\nbudget_met: {}\npeak_reduction_pct: {}\n{}",
+        result.chunked_peak <= budget,
+        // integer percentage keeps the fixture stable across float noise
+        100usize.saturating_sub(result.chunked_peak * 100 / base.max(1)),
+        describe_plans(g, &result.plans)
+    )
+}
+
+fn check(name: &str, g: &Graph) {
+    let got = snapshot(name, g);
+    let path = fixture_dir().join(format!("{name}.txt"));
+    let bless = std::env::var("AUTOCHUNK_BLESS").is_ok() || !path.exists();
+    if bless {
+        std::fs::create_dir_all(fixture_dir()).expect("creating fixture dir");
+        std::fs::write(&path, &got).expect("writing fixture");
+        eprintln!("blessed golden plan fixture {}", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("reading fixture");
+    assert_eq!(
+        want, got,
+        "\n== golden plan drift for {name} ==\n\
+         If the compiler change is intentional, re-bless with \
+         AUTOCHUNK_BLESS=1 cargo test --test golden_plans\n\
+         -- committed --\n{want}\n-- current --\n{got}"
+    );
+}
+
+#[test]
+fn gpt_golden_plans() {
+    for seq in [128usize, 256] {
+        let g = gpt(&GptConfig { seq, layers: 2, ..Default::default() });
+        check(&format!("gpt_s{seq}"), &g);
+    }
+}
+
+#[test]
+fn vit_golden_plans() {
+    for patches in [128usize, 256] {
+        let g = vit(&ViTConfig { patches, layers: 2, ..Default::default() });
+        check(&format!("vit_p{patches}"), &g);
+    }
+}
+
+#[test]
+fn evoformer_golden_plans() {
+    for seq in [16usize, 24] {
+        let g = evoformer(&EvoformerConfig { seq, blocks: 1, ..Default::default() });
+        check(&format!("evoformer_s{seq}"), &g);
+    }
+}
+
+#[test]
+fn unet_golden_plans() {
+    for image in [16usize, 24] {
+        let g = unet(&UNetConfig { image, ..Default::default() });
+        check(&format!("unet_i{image}"), &g);
+    }
+}
+
+#[test]
+fn snapshots_are_deterministic_across_widths() {
+    // The fixture only locks regressions if the snapshot itself is
+    // reproducible: same strategy text at pool widths 1 and 4.
+    let g = gpt(&GptConfig { seq: 128, layers: 2, ..Default::default() });
+    let a = autochunk::util::pool::with_threads(1, || snapshot("gpt_det", &g));
+    let b = autochunk::util::pool::with_threads(4, || snapshot("gpt_det", &g));
+    assert_eq!(a, b, "chunk strategy depends on pool width");
+}

@@ -1,0 +1,133 @@
+//! HLO parser robustness: truncated or garbage input must surface as
+//! `Err`, never as a panic. The parser feeds on AOT artifact text written
+//! by a separate toolchain — a malformed artifact must not take down the
+//! serving process that scans it.
+
+use autochunk::hlo::parse_hlo_text;
+
+/// A representative, valid module exercising every opcode family the
+/// parser special-cases (dot, reduce with combiner region, slice,
+/// concatenate, transpose, broadcast, gather, tuple root).
+const SAMPLE: &str = "\
+HloModule sample
+
+add_region {
+  ap = f32[] parameter(0)
+  bp = f32[] parameter(1)
+  ROOT s = f32[] add(ap, bp)
+}
+
+ENTRY main {
+  ids = s32[8]{0} parameter(0)
+  table = f32[512,16]{1,0} parameter(1)
+  w = f32[16,16]{1,0} parameter(2)
+  emb = f32[8,16]{1,0} gather(table, ids), offset_dims={1}, collapsed_slice_dims={0}, start_index_map={0}
+  h = f32[8,16]{1,0} dot(emb, w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ht = f32[16,8]{0,1} transpose(h), dimensions={1,0}
+  hs = f32[4,16]{1,0} slice(h), slice={[0:4],[0:16]}
+  zero = f32[] constant(0)
+  red = f32[8]{0} reduce(h, zero), dimensions={1}, to_apply=add_region
+  redb = f32[8,16]{1,0} broadcast(red), dimensions={0}
+  hsum = f32[8,16]{1,0} add(h, redb)
+  cat = f32[12,16]{1,0} concatenate(hs, hsum), dimensions={0}
+  e = f32[12,16]{1,0} exponential(cat)
+  ROOT out = (f32[12,16]{1,0}) tuple(e)
+}
+";
+
+#[test]
+fn sample_parses_clean() {
+    let g = parse_hlo_text(SAMPLE).expect("sample must parse");
+    assert!(g.len() > 10);
+    assert!(g.validate().is_ok());
+    assert_eq!(g.inputs.len(), 1, "s32 parameter routes to inputs");
+}
+
+#[test]
+fn every_truncation_errs_or_parses_never_panics() {
+    // Truncate at every char boundary: the parser must return Ok or Err
+    // for each prefix. A panic fails the test (and the harness reports
+    // the offending prefix length via the panic message location).
+    let boundaries: Vec<usize> = SAMPLE
+        .char_indices()
+        .map(|(i, _)| i)
+        .chain(std::iter::once(SAMPLE.len()))
+        .collect();
+    let mut errs = 0usize;
+    for &cut in &boundaries {
+        if parse_hlo_text(&SAMPLE[..cut]).is_err() {
+            errs += 1;
+        }
+    }
+    assert!(errs > 0, "at least the empty prefix must be an error");
+}
+
+#[test]
+fn garbage_lines_err_not_panic() {
+    let cases: &[&str] = &[
+        "",
+        "HloModule empty",
+        "ENTRY main {\n}",
+        "ENTRY main {\n  junk line without equals\n}",
+        "ENTRY main {\n  x = \n}",
+        "ENTRY main {\n  x = f32[4\n}",
+        "ENTRY main {\n  x = f32[4]{0} add()\n}",
+        "ENTRY main {\n  x = f32[4]{0} add(y, z)\n}",
+        "ENTRY main {\n  a = f32[4]{0} parameter(0)\n  ROOT x = f32[4]{0} exponential()\n}",
+        // unbalanced parens
+        "ENTRY main {\n  a = f32[4]{0} parameter(0)\n  ROOT x = f32[4]{0} exponential(a\n}",
+        // concatenate with empty / missing dimensions
+        "ENTRY main {\n  a = f32[4]{0} parameter(0)\n  ROOT c = f32[8]{0} concatenate(a, a), dimensions={}\n}",
+        "ENTRY main {\n  a = f32[4]{0} parameter(0)\n  ROOT c = f32[8]{0} concatenate(a, a)\n}",
+        // reduce: no operands, empty dims, out-of-range axes
+        "ENTRY main {\n  ROOT r = f32[4]{0} reduce(), dimensions={0}\n}",
+        "ENTRY main {\n  a = f32[4,4]{1,0} parameter(0)\n  ROOT r = f32[]{} reduce(a), dimensions={}\n}",
+        "ENTRY main {\n  a = f32[4,4]{1,0} parameter(0)\n  ROOT r = f32[] reduce(a), dimensions={5,3}\n}",
+        // slice: reversed bounds, rank overflow, no operands
+        "ENTRY main {\n  a = f32[8]{0} parameter(0)\n  ROOT s = f32[2]{0} slice(a), slice={[4:2]}\n}",
+        "ENTRY main {\n  a = f32[8]{0} parameter(0)\n  ROOT s = f32[2]{0} slice(a), slice={[0:2],[0:2],[0:2]}\n}",
+        "ENTRY main {\n  ROOT s = f32[2]{0} slice(), slice={[0:2]}\n}",
+        // transpose: bad permutation
+        "ENTRY main {\n  a = f32[4,4]{1,0} parameter(0)\n  ROOT t = f32[4,4]{1,0} transpose(a), dimensions={0,7}\n}",
+        "ENTRY main {\n  a = f32[4,4]{1,0} parameter(0)\n  ROOT t = f32[4,4]{1,0} transpose(a), dimensions={0}\n}",
+        // gather with a single operand degrades to opaque, binary arity
+        "ENTRY main {\n  a = f32[4]{0} parameter(0)\n  ROOT g = f32[4]{0} gather(a)\n}",
+        // scalar-typed gather must not underflow the offset-dims check
+        "ENTRY main {\n  a = f32[4,2]{1,0} parameter(0)\n  b = s32[3]{0} parameter(1)\n  \
+         ROOT g = f32[] gather(a, b), offset_dims={0}, collapsed_slice_dims={0}\n}",
+        "ENTRY main {\n  a = f32[4]{0} parameter(0)\n  ROOT m = f32[4]{0} multiply(a)\n}",
+        // non-root tuple, unknown operand in tuple
+        "ENTRY main {\n  a = f32[4]{0} parameter(0)\n  t = (f32[4]{0}) tuple(a)\n  ROOT e = f32[4]{0} exponential(a)\n}",
+        "ENTRY main {\n  ROOT t = (f32[4]{0}) tuple(ghost)\n}",
+        // forward reference / unknown types
+        "ENTRY main {\n  ROOT x = f32[4]{0} exponential(later)\n  later = f32[4]{0} parameter(0)\n}",
+        "ENTRY main {\n  ROOT x = c64[4]{0} parameter(0)\n}",
+        "ENTRY main {\n  ROOT x = f32[a,b]{0} parameter(0)\n}",
+        // multibyte garbage must not split a char boundary anywhere
+        "ENTRY main {\n  ROOT x = f32[4]{0} exponentiál(ä, ö)\n}",
+        "ENTRY mäin {\n  ROOT x = f32[4]{0} exponential(ü)\n}",
+        // zero dims get caught by graph validation
+        "ENTRY main {\n  ROOT x = f32[0]{0} parameter(0)\n}",
+    ];
+    for (i, text) in cases.iter().enumerate() {
+        // Must not panic; most cases are errors, a few degrade gracefully.
+        let _ = parse_hlo_text(text)
+            .map_err(|e| format!("case {i}: {e}"));
+    }
+}
+
+#[test]
+fn byte_mutations_never_panic() {
+    // Flip characters through the sample at a stride: every mutant must
+    // parse or err cleanly. Keeps runtime bounded while covering each
+    // syntactic region of the text.
+    let chars: Vec<char> = SAMPLE.chars().collect();
+    for pos in (0..chars.len()).step_by(7) {
+        for repl in ['(', ')', '{', '}', ',', 'x', '0', ' '] {
+            let mut mutated: Vec<char> = chars.clone();
+            mutated[pos] = repl;
+            let text: String = mutated.into_iter().collect();
+            let _ = parse_hlo_text(&text);
+        }
+    }
+}
