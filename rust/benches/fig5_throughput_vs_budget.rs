@@ -53,7 +53,7 @@ fn main() {
             // The run knows its budget, so the concurrency governor may
             // convert unused headroom into parallel chunk iterations —
             // the paper's speed-for-memory tradeoff exercised both ways.
-            let opts = ExecOptions { budget_bytes: Some(budget) };
+            let opts = ExecOptions { budget_bytes: Some(budget), ..ExecOptions::default() };
             let chunk_t = time_median(
                 || {
                     let tr = MemoryTracker::new();

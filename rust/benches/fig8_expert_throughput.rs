@@ -57,7 +57,7 @@ fn main() {
         // AutoChunk knows its budget (the expert's peak), so its governor
         // may spend leftover headroom on concurrent chunk iterations —
         // the same matched-memory comparison, now budget-aware.
-        let opts = ExecOptions { budget_bytes: Some(expert_est) };
+        let opts = ExecOptions { budget_bytes: Some(expert_est), ..ExecOptions::default() };
         let t_auto = time_median(
             || {
                 let tr = MemoryTracker::new();

@@ -18,7 +18,7 @@ use autochunk::exec::{execute, random_inputs, random_params};
 use autochunk::models::{gpt, GptConfig};
 use autochunk::passes::search::{search_chunks_with_stats, SearchConfig};
 use autochunk::passes::{autochunk, estimate, AutoChunkConfig};
-use autochunk::plan::execute_chunked;
+use autochunk::plan::{execute_chunked, ExecOptions, PlanHandle};
 use autochunk::tensor::layout::{concat, split};
 use autochunk::tensor::matmul::matmul;
 use autochunk::tensor::{MemoryTracker, Tensor};
@@ -40,6 +40,12 @@ impl JsonReport {
             "  {{\"name\": \"{name}\", \"median_ms\": {median_ms:.4}, \
              \"gflops\": {g}, \"threads\": {threads}}}"
         ));
+    }
+
+    /// Counter row (allocator-traffic metrics, not timings).
+    fn push_count(&mut self, name: &str, count: usize) {
+        self.rows
+            .push(format!("  {{\"name\": \"{name}\", \"count\": {count}}}"));
     }
 
     fn write(&self, path: &str) {
@@ -207,6 +213,66 @@ fn main() {
     ]);
     json.push("gpt512_unchunked_e2e", ms(d_base), None, threads);
     json.push("gpt512_chunked_e2e", ms(d_chunk), None, threads);
+
+    // ---- interpreter vs arena executor (wall time + allocator traffic)
+    // Warmed PlanHandle store: the steady-state serving path. The arena
+    // run should show near-zero allocator traffic (only transient kernel
+    // workspace) vs one tracked allocation per op for the interpreter.
+    let h = PlanHandle::new("bench_dense", g.clone(), Vec::new(), ps.clone());
+    let mem = h.memplan();
+    let opts = ExecOptions { budget_bytes: None, use_arena: true };
+    {
+        // warm the slot-storage cache
+        let tr = MemoryTracker::new();
+        let _ = h.execute(&ins, &tr, &opts);
+    }
+    let d_arena = time_median(
+        || {
+            let tr = MemoryTracker::new();
+            let _ = h.execute(&ins, &tr, &opts);
+        },
+        1,
+        3,
+    );
+    let tr_i = MemoryTracker::new();
+    let (_, _s_interp) = execute(&g, &ins, &ps, &tr_i);
+    let tr_a = MemoryTracker::new();
+    let (_, s_arena) = h.execute(&ins, &tr_a, &opts);
+    t.row(vec![
+        "gpt-512 arena e2e (warmed slots)".into(),
+        format!("{:.0} ms", ms(d_arena)),
+        format!(
+            "{:+.1}% vs interpreter, planned peak {:.1} MiB",
+            100.0 * (d_arena.as_secs_f64() / d_base.as_secs_f64() - 1.0),
+            mem.planned_peak_bytes as f64 / (1 << 20) as f64
+        ),
+    ]);
+    t.row(vec![
+        "allocator traffic (interpreter)".into(),
+        format!("{} allocs", tr_i.alloc_count()),
+        format!("{:.1} MiB total", tr_i.total_allocated() as f64 / (1 << 20) as f64),
+    ]);
+    t.row(vec![
+        "allocator traffic (arena)".into(),
+        format!(
+            "{} allocs, {} fresh slots",
+            tr_a.alloc_count(),
+            s_arena.arena_fresh_allocs
+        ),
+        format!(
+            "{:.1} MiB total, {} slot reuses",
+            tr_a.total_allocated() as f64 / (1 << 20) as f64,
+            s_arena.arena_reuses
+        ),
+    ]);
+    json.push("gpt512_arena_e2e", ms(d_arena), None, threads);
+    json.push_count("gpt512_interp_allocs", tr_i.alloc_count());
+    json.push_count("gpt512_interp_total_allocated", tr_i.total_allocated());
+    json.push_count("gpt512_arena_allocs", tr_a.alloc_count());
+    json.push_count("gpt512_arena_total_allocated", tr_a.total_allocated());
+    json.push_count("gpt512_arena_fresh_slots", s_arena.arena_fresh_allocs);
+    json.push_count("gpt512_arena_slot_reuses", s_arena.arena_reuses);
+    json.push_count("gpt512_planned_peak_bytes", mem.planned_peak_bytes);
 
     println!("== Perf hot paths (pool width {threads}) ==\n");
     print!("{}", t.render());

@@ -60,6 +60,12 @@ pub struct EngineConfig {
     pub max_deepen: usize,
     /// Virtual duration of one queue tick (metrics only).
     pub tick_us: u64,
+    /// Serve through the planned-allocation arena executor and price
+    /// admission with the memory planner's *exact* `admission_bytes`
+    /// instead of the pessimistic quote (the quote stays a cross-check
+    /// ceiling). Defaults to the `AUTOCHUNK_ARENA` env flag — the CI
+    /// matrix's second leg.
+    pub use_arena: bool,
     /// Compiler options for the per-bucket chunk search.
     pub compile: AutoChunkConfig,
 }
@@ -74,6 +80,7 @@ impl Default for EngineConfig {
             worker_threads: 0,
             max_deepen: 5,
             tick_us: 500,
+            use_arena: crate::plan::arena_default(),
             compile: AutoChunkConfig::default(),
         }
     }
@@ -256,6 +263,21 @@ impl ServeEngine {
         pool::with_threads(width, || self.serve_inner(requests, Mode::Serial))
     }
 
+    /// Admission price of one request under a handle: the memory
+    /// planner's exact bound in arena mode (the certified bound for what
+    /// the arena executor actually runs — never substituted by the quote,
+    /// which can under-model batch-expansion workspace), else the quote.
+    /// The quote remains the reported cross-check ceiling: it is almost
+    /// always the larger number, and `estimate::planner_gap` surfaces the
+    /// difference per plan.
+    fn admission_cost(use_arena: bool, h: &PlanHandle) -> usize {
+        if use_arena {
+            h.memplan().admission_bytes(1)
+        } else {
+            h.quote().peak_bytes
+        }
+    }
+
     fn serve_inner(
         &mut self,
         requests: &[Request],
@@ -304,7 +326,7 @@ impl ServeEngine {
                     continue;
                 };
                 let h = self.handle(bucket, p.depth)?;
-                let cost = h.quote().peak_bytes;
+                let cost = Self::admission_cost(self.config.use_arena, &h);
                 if cost > self.config.budget_bytes {
                     // Oversized for the device at this depth.
                     queue.remove(scan);
@@ -343,12 +365,15 @@ impl ServeEngine {
             }
 
             // ---- execute the wave: co-resident requests run concurrently
-            // on the pool. Leftover headroom (budget − Σ admitted quotes)
+            // on the pool. Leftover headroom (budget − Σ admitted costs)
             // is split evenly across entries and handed to each entry's
             // chunk-concurrency governor: entry i may spend
-            // `quote_i + share` bytes, so the wave total stays ≤ budget.
+            // `cost_i + share` bytes, so the wave total stays ≤ budget.
+            // In arena mode the governor prices lanes with the planner's
+            // exact numbers, so no bound-vs-estimate gap is reserved.
             let per_entry_threads = (pool::num_threads() / wave.len()).max(1);
             let share = remaining / wave.len();
+            let use_arena = self.config.use_arena;
             let entries = wave;
             let results: Vec<(u64, Vec<f32>)> = pool::parallel_map(entries.len(), |wi| {
                 let (p, _bucket, h) = &entries[wi];
@@ -356,9 +381,14 @@ impl ServeEngine {
                 pool::with_threads(per_entry_threads, || {
                     let started = Instant::now();
                     let ins = request_inputs(h.graph(), req, &tracker);
-                    let entry_budget = h.quote().peak_bytes + share;
+                    let entry_budget = Self::admission_cost(use_arena, h) + share;
                     let opts = ExecOptions {
-                        budget_bytes: Some(h.quote().governor_budget(entry_budget)),
+                        budget_bytes: Some(if use_arena {
+                            entry_budget
+                        } else {
+                            h.quote().governor_budget(entry_budget)
+                        }),
+                        use_arena,
                     };
                     let (outs, _stats) = h.execute(&ins, &tracker, &opts);
                     let out = outs[0].to_vec_f32();

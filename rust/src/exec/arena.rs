@@ -1,0 +1,751 @@
+//! Planned-allocation arena executor (DESIGN.md §12).
+//!
+//! Runs a graph by following the static memory planner's script
+//! ([`MemPlan`], `passes::memplan`): every materialized intermediate is
+//! written into a pre-assigned arena slot (recycled storage — no per-op
+//! allocation on the hot path), views alias their producer's storage, and
+//! eligible elementwise ops compute in place into their dead operand.
+//! Values are dropped exactly where the planner's release lists say, so
+//! the runtime [`Arena`] high-water mark equals `planned_peak_bytes`
+//! *exactly* — admission control can price requests with the planner's
+//! number instead of the pessimistic quote.
+//!
+//! Chunked execution mirrors `plan::exec_chunked`: regions fire at the
+//! same trigger points, outputs accumulate into planned outer-arena
+//! slots, and every concurrent chunk lane gets its own disjoint sub-arena
+//! built from the region's lane plan — the concurrency governor's degree
+//! math is exact because one extra lane costs exactly `lane_admission`
+//! bytes. Results are bitwise identical to the interpreter at any pool
+//! width: the kernels' `_into` cores are the same code the allocating
+//! wrappers run.
+
+use crate::exec::ExecStats;
+use crate::ir::{Graph, Node, Op};
+use crate::passes::memplan::{MemPlan, RegionMemPlan, ValueAction};
+use crate::plan::exec_chunked::{adjust_node, governed_degree, ExecOptions};
+use crate::plan::{region_owner, region_triggers, ChunkPlan};
+use crate::tensor::attention::fused_attention_into;
+use crate::tensor::conv::{avgpool2x_into, conv2d_into};
+use crate::tensor::layout::{concat_into, concat_shape, gather_rows_into, upsample2x_into};
+use crate::tensor::matmul::matmul_into;
+use crate::tensor::ops::{binary_inplace, binary_into, to_f32_into, unary_inplace, unary_into};
+use crate::tensor::reduce::{reduce_into, softmax_into};
+use crate::tensor::{
+    broadcast_shapes, contiguous_strides, numel, Arena, ArenaStore, DType, MemoryTracker, Tensor,
+};
+use crate::util::pool;
+
+/// Recycled slot storage for every arena a memory plan spawns: the outer
+/// arena plus one store per chunk region, shared by all of that region's
+/// concurrent lanes. Cached on the `PlanHandle` so warmed re-runs —
+/// chunked or not — perform zero fresh allocations.
+#[derive(Clone, Debug)]
+pub struct ArenaStores {
+    pub outer: ArenaStore,
+    /// Parallel to `MemPlan::regions`; lanes of one region share a store
+    /// (concurrent lanes pop distinct cached storage or allocate fresh).
+    pub lanes: Vec<ArenaStore>,
+}
+
+impl ArenaStores {
+    pub fn for_plan(mem: &MemPlan) -> ArenaStores {
+        ArenaStores {
+            outer: ArenaStore::new(mem.slots.len()),
+            lanes: mem.regions.iter().map(|r| ArenaStore::new(r.slots.len())).collect(),
+        }
+    }
+
+    /// Fresh backing allocations across the outer and all lane stores.
+    pub fn fresh_allocs(&self) -> usize {
+        self.outer.fresh_allocs() + self.lanes.iter().map(|s| s.fresh_allocs()).sum::<usize>()
+    }
+
+    /// Cache-served acquires across the outer and all lane stores.
+    pub fn reuses(&self) -> usize {
+        self.outer.reuses() + self.lanes.iter().map(|s| s.reuses()).sum::<usize>()
+    }
+}
+
+/// Execute `graph` under `plans` (empty = unchunked) following the memory
+/// plan `mem`. `stores` optionally supplies recycled slot storage from a
+/// previous run of the same plan (the serving hot path). Semantics and
+/// results are bitwise identical to [`crate::exec::execute`] /
+/// [`crate::plan::execute_chunked`].
+#[allow(clippy::too_many_arguments)]
+pub fn execute_arena(
+    graph: &Graph,
+    plans: &[ChunkPlan],
+    inputs: &[Tensor],
+    params: &[Tensor],
+    mem: &MemPlan,
+    stores: Option<&ArenaStores>,
+    tracker: &MemoryTracker,
+    opts: &ExecOptions,
+) -> (Vec<Tensor>, ExecStats) {
+    assert_eq!(inputs.len(), graph.inputs.len(), "input arity");
+    assert_eq!(params.len(), graph.params.len(), "param arity");
+    assert_eq!(mem.actions.len(), graph.len(), "plan/graph arity");
+    assert_eq!(mem.regions.len(), plans.len(), "plan/regions arity");
+
+    let fresh_stores;
+    let stores = match stores {
+        Some(s) => s,
+        None => {
+            fresh_stores = ArenaStores::for_plan(mem);
+            &fresh_stores
+        }
+    };
+    let arena = Arena::with_store(mem.slots.clone(), stores.outer.clone());
+
+    let owner = region_owner(plans, graph.len());
+    let triggers = region_triggers(plans);
+
+    let mut values: Vec<Option<Tensor>> = vec![None; graph.len()];
+    for (pos, &id) in graph.inputs.iter().enumerate() {
+        assert_eq!(
+            inputs[pos].shape(),
+            graph.node(id).shape.as_slice(),
+            "input {pos} shape mismatch"
+        );
+        values[id] = Some(inputs[pos].clone());
+    }
+    for (pos, &id) in graph.params.iter().enumerate() {
+        assert_eq!(
+            params[pos].shape(),
+            graph.node(id).shape.as_slice(),
+            "param {pos} shape mismatch"
+        );
+        values[id] = Some(params[pos].clone());
+    }
+    let prebound: Vec<bool> = {
+        let mut v = vec![false; graph.len()];
+        for &i in graph.inputs.iter().chain(graph.params.iter()) {
+            v[i] = true;
+        }
+        v
+    };
+
+    let mut stats = ExecStats {
+        threads: pool::num_threads(),
+        ..ExecStats::default()
+    };
+
+    for node in &graph.nodes {
+        let id = node.id;
+        let skip = prebound[id] || owner[id].is_some();
+        if !skip {
+            let out = exec_node_arena(node, mem.actions[id], &mut values, &arena, tracker);
+            stats.nodes_executed += 1;
+            values[id] = Some(out);
+            // Node-phase releases, exactly where the planner freed.
+            for &v in &mem.release_after[id] {
+                values[v] = None;
+            }
+        }
+        // Fire regions triggered at this id (same schedule as the
+        // chunked interpreter).
+        if let Some(plan_ids) = triggers.get(&id) {
+            for &pi in plan_ids {
+                execute_region_arena(
+                    graph,
+                    &plans[pi],
+                    &mem.regions[pi],
+                    mem,
+                    &mut values,
+                    &arena,
+                    &stores.lanes[pi],
+                    tracker,
+                    opts,
+                    &mut stats,
+                );
+                for &v in &mem.regions[pi].post_releases {
+                    values[v] = None;
+                }
+            }
+        }
+    }
+
+    let outputs: Vec<Tensor> = graph
+        .outputs
+        .iter()
+        .map(|&o| values[o].clone().expect("output not computed"))
+        .collect();
+    stats.peak_bytes = tracker.peak();
+    stats.arena_peak_bytes = arena.high_water();
+    // Per-run arena counters (lane traffic was added by each region):
+    // concurrent runs over the same shared stores stay correctly
+    // attributed because these live on the run's arenas, not the store.
+    stats.arena_fresh_allocs += arena.fresh_allocs();
+    stats.arena_reuses += arena.reuses();
+    (outputs, stats)
+}
+
+/// Execute one node per its planned action. `node` may be a
+/// chunk-adjusted clone inside region lanes; all materialize sizes derive
+/// from the *actual* input tensors so short chunk tails stay correct.
+fn exec_node_arena(
+    node: &Node,
+    action: ValueAction,
+    values: &mut [Option<Tensor>],
+    arena: &Arena,
+    tracker: &MemoryTracker,
+) -> Tensor {
+    match action {
+        ValueAction::Alias => exec_alias(node, values),
+        ValueAction::Materialize { slot } => exec_materialize(node, slot, values, arena, tracker),
+        ValueAction::InPlace { pos } => exec_inplace(node, pos, values),
+        ValueAction::External | ValueAction::Region => {
+            unreachable!("action {action:?} is not executable for node {}", node.id)
+        }
+    }
+}
+
+/// Zero-copy view actions.
+fn exec_alias(node: &Node, values: &[Option<Tensor>]) -> Tensor {
+    let arg = |i: usize| -> &Tensor {
+        values[node.inputs[i]]
+            .as_ref()
+            .unwrap_or_else(|| panic!("value {} not live for node {}", node.inputs[i], node.id))
+    };
+    match &node.op {
+        Op::Transpose { perm } => arg(0).permute(perm),
+        Op::Slice { axis, start, len } => arg(0).slice_axis(*axis, *start, *len),
+        Op::Reshape => {
+            let a = arg(0);
+            debug_assert!(a.is_contiguous(), "planner aliased a copying reshape");
+            a.reshape(&node.shape, None)
+        }
+        Op::Convert => {
+            let a = arg(0);
+            debug_assert!(
+                a.dtype() == DType::F32 && a.is_contiguous(),
+                "planner aliased a copying convert"
+            );
+            a.clone()
+        }
+        Op::Broadcast { dims } => {
+            let a = arg(0);
+            debug_assert!(a.is_contiguous(), "planner aliased a copying broadcast");
+            let mut reshaped = vec![1usize; node.shape.len()];
+            for (i, &d) in dims.iter().enumerate() {
+                reshaped[d] = a.shape()[i];
+            }
+            a.reshape(&reshaped, None).broadcast_to(&node.shape)
+        }
+        other => unreachable!("op {} cannot alias", other.mnemonic()),
+    }
+}
+
+/// Elementwise op computed into its dead operand's slot storage. The
+/// output shape is the operand's *actual* shape (equal to the op's output
+/// shape by the planner's eligibility rule), which stays correct for
+/// short chunk-tail iterations where `node.shape` is the full extent.
+fn exec_inplace(node: &Node, pos: usize, values: &mut [Option<Tensor>]) -> Tensor {
+    let target_id = node.inputs[pos];
+    let t = values[target_id]
+        .take()
+        .unwrap_or_else(|| panic!("in-place operand {target_id} not live for node {}", node.id));
+    let shape = t.shape().to_vec();
+    let (mut v, arena, slot, tr) = t.try_take_arena_f32().unwrap_or_else(|_| {
+        panic!(
+            "planner authorized in-place for node {} but operand {target_id} has live references",
+            node.id
+        )
+    });
+    match &node.op {
+        Op::Unary(op) => unary_inplace(*op, &mut v),
+        Op::Binary(op) => {
+            if node.inputs[0] == node.inputs[1] {
+                binary_inplace(*op, &mut v, &shape, true, None);
+            } else {
+                let other_id = node.inputs[1 - pos];
+                let other = values[other_id]
+                    .as_ref()
+                    .unwrap_or_else(|| panic!("value {other_id} not live for node {}", node.id))
+                    .clone();
+                binary_inplace(*op, &mut v, &shape, pos == 0, Some(&other));
+            }
+        }
+        other => unreachable!("op {} cannot run in place", other.mnemonic()),
+    }
+    Tensor::adopt_arena_f32(v, &shape, arena, slot, tr)
+}
+
+/// Materializing ops: acquire the planned slot and run the kernel's
+/// `_into` core against it.
+fn exec_materialize(
+    node: &Node,
+    slot: usize,
+    values: &[Option<Tensor>],
+    arena: &Arena,
+    tracker: &MemoryTracker,
+) -> Tensor {
+    let tr = Some(tracker.clone());
+    let arg = |i: usize| -> &Tensor {
+        values[node.inputs[i]]
+            .as_ref()
+            .unwrap_or_else(|| panic!("value {} not live for node {}", node.inputs[i], node.id))
+    };
+    match &node.op {
+        Op::Input | Op::Param => unreachable!("leaves are pre-bound"),
+        Op::Const(v) => {
+            let mut buf = arena.acquire_f32(slot, numel(&node.shape));
+            for x in buf.iter_mut() {
+                *x = *v;
+            }
+            Tensor::from_arena_f32(buf, &node.shape, arena, slot, tr)
+        }
+        Op::Iota { axis } => {
+            let n = numel(&node.shape);
+            let strides = contiguous_strides(&node.shape);
+            let mut buf = arena.acquire_f32(slot, n);
+            for (i, x) in buf.iter_mut().enumerate() {
+                let idx = (i as isize / strides[*axis]) as usize % node.shape[*axis];
+                *x = idx as f32;
+            }
+            Tensor::from_arena_f32(buf, &node.shape, arena, slot, tr)
+        }
+        Op::Binary(op) => {
+            let n = numel(&broadcast_shapes(arg(0).shape(), arg(1).shape()));
+            let mut buf = arena.acquire_f32(slot, n);
+            let shape = binary_into(*op, arg(0), arg(1), &mut buf);
+            Tensor::from_arena_f32(buf, &shape, arena, slot, tr)
+        }
+        Op::Unary(op) => {
+            let a = arg(0);
+            let mut buf = arena.acquire_f32(slot, a.numel());
+            unary_into(*op, a, &mut buf);
+            Tensor::from_arena_f32(buf, a.shape(), arena, slot, tr)
+        }
+        Op::MatMul => {
+            let (a, b) = (arg(0), arg(1));
+            let m = a.shape()[a.rank() - 2];
+            let n = b.shape()[b.rank() - 1];
+            let batch: usize =
+                broadcast_shapes(&a.shape()[..a.rank() - 2], &b.shape()[..b.rank() - 2])
+                    .iter()
+                    .product::<usize>()
+                    .max(1);
+            let mut buf = arena.acquire_f32(slot, batch * m * n);
+            let shape = matmul_into(a, b, &mut buf, tr.clone());
+            Tensor::from_arena_f32(buf, &shape, arena, slot, tr)
+        }
+        Op::DotGeneral {
+            lhs_batch,
+            rhs_batch,
+            lhs_contract,
+            rhs_contract,
+        } => dot_general_arena(
+            arg(0),
+            arg(1),
+            lhs_batch,
+            rhs_batch,
+            lhs_contract,
+            rhs_contract,
+            arena,
+            slot,
+            tracker,
+        ),
+        Op::Reshape => {
+            let a = arg(0);
+            match a.dtype() {
+                DType::F32 => {
+                    let mut buf = arena.acquire_f32(slot, a.numel());
+                    a.copy_into_f32(&mut buf);
+                    Tensor::from_arena_f32(buf, &node.shape, arena, slot, tr)
+                }
+                DType::I32 => {
+                    let mut buf = arena.acquire_i32(slot, a.numel());
+                    a.copy_into_i32(&mut buf);
+                    Tensor::from_arena_i32(buf, &node.shape, arena, slot, tr)
+                }
+            }
+        }
+        Op::Broadcast { dims } => {
+            // Non-contiguous input: materialize the reshaped copy into
+            // the slot, then broadcast the view (stride-0 dims).
+            let a = arg(0);
+            let mut reshaped = vec![1usize; node.shape.len()];
+            for (i, &d) in dims.iter().enumerate() {
+                reshaped[d] = a.shape()[i];
+            }
+            let base = match a.dtype() {
+                DType::F32 => {
+                    let mut buf = arena.acquire_f32(slot, a.numel());
+                    a.copy_into_f32(&mut buf);
+                    Tensor::from_arena_f32(buf, &reshaped, arena, slot, tr)
+                }
+                DType::I32 => {
+                    let mut buf = arena.acquire_i32(slot, a.numel());
+                    a.copy_into_i32(&mut buf);
+                    Tensor::from_arena_i32(buf, &reshaped, arena, slot, tr)
+                }
+            };
+            base.broadcast_to(&node.shape)
+        }
+        Op::Reduce { op, axis, keepdims } => {
+            let a = arg(0);
+            let rows = a.numel() / a.shape()[*axis];
+            let mut buf = arena.acquire_f32(slot, rows);
+            let shape = reduce_into(*op, a, *axis, *keepdims, &mut buf, tr.clone());
+            Tensor::from_arena_f32(buf, &shape, arena, slot, tr)
+        }
+        Op::Softmax { axis } => {
+            let a = arg(0);
+            let mut buf = arena.acquire_f32(slot, a.numel());
+            softmax_into(a, *axis, &mut buf, tr.clone());
+            Tensor::from_arena_f32(buf, a.shape(), arena, slot, tr)
+        }
+        Op::Concat { axis } => {
+            let parts: Vec<Tensor> = node
+                .inputs
+                .iter()
+                .map(|&i| values[i].clone().expect("concat part not live"))
+                .collect();
+            let shape = concat_shape(&parts, *axis);
+            let mut buf = arena.acquire_f32(slot, numel(&shape));
+            let shape = concat_into(&parts, *axis, &mut buf, tr.clone());
+            Tensor::from_arena_f32(buf, &shape, arena, slot, tr)
+        }
+        Op::Gather => {
+            let (table, ids) = (arg(0), arg(1));
+            let d = table.shape()[1];
+            let mut buf = arena.acquire_f32(slot, ids.numel() * d);
+            let shape = gather_rows_into(table, ids, &mut buf, tr.clone());
+            Tensor::from_arena_f32(buf, &shape, arena, slot, tr)
+        }
+        Op::Conv2d { stride, pad } => {
+            let (x, w) = (arg(0), arg(1));
+            let (h, wd) = (x.shape()[2], x.shape()[3]);
+            let (cout, kh, kw) = (w.shape()[0], w.shape()[2], w.shape()[3]);
+            let ho = (h + 2 * pad - kh) / stride + 1;
+            let wo = (wd + 2 * pad - kw) / stride + 1;
+            let mut buf = arena.acquire_f32(slot, x.shape()[0] * cout * ho * wo);
+            let shape = conv2d_into(x, w, *stride, *pad, &mut buf, tr.clone());
+            Tensor::from_arena_f32(buf, &shape, arena, slot, tr)
+        }
+        Op::AvgPool2x => {
+            let x = arg(0);
+            let mut buf = arena.acquire_f32(slot, x.numel() / 4);
+            let shape = avgpool2x_into(x, &mut buf, tr.clone());
+            Tensor::from_arena_f32(buf, &shape, arena, slot, tr)
+        }
+        Op::Upsample2x => {
+            let x = arg(0);
+            let mut buf = arena.acquire_f32(slot, x.numel() * 4);
+            let shape = upsample2x_into(x, &mut buf, tr.clone());
+            Tensor::from_arena_f32(buf, &shape, arena, slot, tr)
+        }
+        Op::Convert => {
+            let a = arg(0);
+            let mut buf = arena.acquire_f32(slot, a.numel());
+            to_f32_into(a, &mut buf);
+            Tensor::from_arena_f32(buf, a.shape(), arena, slot, tr)
+        }
+        Op::FusedAttention { scale } => {
+            let (q, k, v) = (arg(0), arg(1), arg(2));
+            let sq = q.shape()[q.rank() - 2];
+            let dv = v.shape()[v.rank() - 1];
+            let batch: usize = broadcast_shapes(
+                &broadcast_shapes(&q.shape()[..q.rank() - 2], &k.shape()[..k.rank() - 2]),
+                &v.shape()[..v.rank() - 2],
+            )
+            .iter()
+            .product::<usize>()
+            .max(1);
+            let mut buf = arena.acquire_f32(slot, batch * sq * dv);
+            let shape = fused_attention_into(q, k, v, *scale, &mut buf, tr.clone());
+            Tensor::from_arena_f32(buf, &shape, arena, slot, tr)
+        }
+        Op::Transpose { .. } | Op::Slice { .. } => {
+            unreachable!("views never materialize (node {})", node.id)
+        }
+        Op::Opaque { kind } => panic!("opaque op '{kind}' is analysis-only (execute via PJRT)"),
+    }
+}
+
+/// General dot canonicalized to batched matmul, writing the GEMM straight
+/// into the planned slot (the trailing reshape is a zero-copy view of the
+/// same arena buffer). Mirrors the interpreter's `dot_general`.
+#[allow(clippy::too_many_arguments)]
+fn dot_general_arena(
+    a: &Tensor,
+    b: &Tensor,
+    lhs_batch: &[usize],
+    rhs_batch: &[usize],
+    lhs_contract: &[usize],
+    rhs_contract: &[usize],
+    arena: &Arena,
+    slot: usize,
+    tracker: &MemoryTracker,
+) -> Tensor {
+    let tr = Some(tracker.clone());
+    let lhs_free: Vec<usize> = (0..a.rank())
+        .filter(|d| !lhs_batch.contains(d) && !lhs_contract.contains(d))
+        .collect();
+    let rhs_free: Vec<usize> = (0..b.rank())
+        .filter(|d| !rhs_batch.contains(d) && !rhs_contract.contains(d))
+        .collect();
+
+    let batch: usize = lhs_batch.iter().map(|&d| a.shape()[d]).product::<usize>().max(1);
+    let m: usize = lhs_free.iter().map(|&d| a.shape()[d]).product::<usize>().max(1);
+    let k: usize = lhs_contract.iter().map(|&d| a.shape()[d]).product::<usize>().max(1);
+    let n: usize = rhs_free.iter().map(|&d| b.shape()[d]).product::<usize>().max(1);
+
+    let mut a_perm = lhs_batch.to_vec();
+    a_perm.extend(&lhs_free);
+    a_perm.extend(lhs_contract);
+    let mut b_perm = rhs_batch.to_vec();
+    b_perm.extend(rhs_contract);
+    b_perm.extend(&rhs_free);
+
+    let a3 = a.permute(&a_perm).reshape(&[batch, m, k], tr.clone());
+    let b3 = b.permute(&b_perm).reshape(&[batch, k, n], tr.clone());
+
+    let mut buf = arena.acquire_f32(slot, batch * m * n);
+    let c_shape = matmul_into(&a3, &b3, &mut buf, tr.clone());
+    let c3 = Tensor::from_arena_f32(buf, &c_shape, arena, slot, tr);
+
+    // Output shape: batch dims, lhs free dims, rhs free dims.
+    let mut out_shape: Vec<usize> = lhs_batch.iter().map(|&d| a.shape()[d]).collect();
+    out_shape.extend(lhs_free.iter().map(|&d| a.shape()[d]));
+    out_shape.extend(rhs_free.iter().map(|&d| b.shape()[d]));
+    c3.reshape(&out_shape, None)
+}
+
+/// Output accumulator backed by a planned outer-arena slot.
+struct ArenaAccumulator {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+    axis: usize,
+    filled: usize,
+    slot: usize,
+}
+
+impl ArenaAccumulator {
+    fn new(shape: &[usize], axis: usize, arena: &Arena, slot: usize) -> Self {
+        let data = arena.acquire_f32(slot, crate::tensor::numel(shape));
+        ArenaAccumulator {
+            data,
+            shape: shape.to_vec(),
+            axis,
+            filled: 0,
+            slot,
+        }
+    }
+
+    /// Copy `part` (a chunk of the output along `axis`) into place —
+    /// same layout math as the interpreter's accumulator.
+    fn push(&mut self, part: &Tensor, tracker: &MemoryTracker) {
+        let part = part.to_contiguous(Some(tracker.clone()));
+        let src = part.f32_contiguous();
+        let axis = self.axis;
+        let inner: usize = self.shape[axis + 1..].iter().product();
+        let outer: usize = self.shape[..axis].iter().product();
+        let out_slab = self.shape[axis] * inner;
+        let p_axis = part.shape()[axis];
+        let run = p_axis * inner;
+        for o in 0..outer.max(1) {
+            let dst = o * out_slab + self.filled * inner;
+            self.data[dst..dst + run].copy_from_slice(&src[o * run..(o + 1) * run]);
+        }
+        self.filled += p_axis;
+    }
+
+    fn finish(self, arena: &Arena, tracker: &MemoryTracker) -> Tensor {
+        assert_eq!(self.filled, self.shape[self.axis], "accumulator underfilled");
+        Tensor::from_arena_f32(
+            self.data,
+            &self.shape,
+            arena,
+            self.slot,
+            Some(tracker.clone()),
+        )
+    }
+}
+
+/// Run one region's chunk loop with planned memory: accumulators and
+/// pass-input copies in the outer arena, per-lane sub-arenas for the
+/// iteration bodies, degree from the exact lane price.
+#[allow(clippy::too_many_arguments)]
+fn execute_region_arena(
+    graph: &Graph,
+    plan: &ChunkPlan,
+    region: &RegionMemPlan,
+    mem: &MemPlan,
+    values: &mut [Option<Tensor>],
+    outer_arena: &Arena,
+    lane_store: &ArenaStore,
+    tracker: &MemoryTracker,
+    opts: &ExecOptions,
+    stats: &mut ExecStats,
+) {
+    let extent = plan.chunk_extent(graph);
+    let step = plan.chunk_step(graph);
+    let mut iters: Vec<(usize, usize)> = Vec::new();
+    let mut start = 0usize;
+    while start < extent {
+        let len = step.min(extent - start);
+        iters.push((start, len));
+        start += len;
+    }
+
+    // Exact degree math: the serial planned price plus one lane_admission
+    // per extra in-flight iteration.
+    let degree = governed_degree(
+        pool::num_threads(),
+        iters.len(),
+        opts.budget_bytes,
+        mem.admission_base,
+        region.lane_admission,
+    );
+    stats.max_chunk_degree = stats.max_chunk_degree.max(degree);
+
+    // Pass-input copies (planned outer slots; `None` = pass as-is).
+    let pass_vals: Vec<Tensor> = plan
+        .pass_inputs
+        .iter()
+        .zip(&region.pass_slots)
+        .map(|(&p, slot)| {
+            let v = values[p].as_ref().expect("pass input not live");
+            match slot {
+                None => v.clone(),
+                Some(s) => match v.dtype() {
+                    DType::F32 => {
+                        let mut buf = outer_arena.acquire_f32(*s, v.numel());
+                        v.copy_into_f32(&mut buf);
+                        Tensor::from_arena_f32(
+                            buf,
+                            v.shape(),
+                            outer_arena,
+                            *s,
+                            Some(tracker.clone()),
+                        )
+                    }
+                    DType::I32 => {
+                        let mut buf = outer_arena.acquire_i32(*s, v.numel());
+                        v.copy_into_i32(&mut buf);
+                        Tensor::from_arena_i32(
+                            buf,
+                            v.shape(),
+                            outer_arena,
+                            *s,
+                            Some(tracker.clone()),
+                        )
+                    }
+                },
+            }
+        })
+        .collect();
+
+    // Output accumulators in their planned outer slots.
+    let mut accs: Vec<ArenaAccumulator> = plan
+        .outputs
+        .iter()
+        .zip(&region.accum_slots)
+        .map(|(&(o, axis), &slot)| {
+            ArenaAccumulator::new(&graph.node(o).shape, axis, outer_arena, slot)
+        })
+        .collect();
+
+    // One sub-arena per concurrent lane over the region's shared store:
+    // storage recycles across waves within the run and across runs of
+    // the same plan handle.
+    let lane_arenas: Vec<Arena> = (0..degree.max(1))
+        .map(|_| Arena::with_store(region.slots.clone(), lane_store.clone()))
+        .collect();
+
+    if degree <= 1 {
+        for &(start, len) in &iters {
+            let outs = run_lane_iteration(
+                graph,
+                plan,
+                region,
+                values,
+                &pass_vals,
+                &lane_arenas[0],
+                tracker,
+                start,
+                len,
+            );
+            stats.nodes_executed += plan.region.len();
+            for (k, t) in outs.into_iter().enumerate() {
+                accs[k].push(&t, tracker);
+            }
+        }
+    } else {
+        let values_ro: &[Option<Tensor>] = values;
+        for wave in iters.chunks(degree) {
+            let results: Vec<Vec<Tensor>> = pool::parallel_map(wave.len(), |wi| {
+                let (start, len) = wave[wi];
+                run_lane_iteration(
+                    graph,
+                    plan,
+                    region,
+                    values_ro,
+                    &pass_vals,
+                    &lane_arenas[wi],
+                    tracker,
+                    start,
+                    len,
+                )
+            });
+            stats.nodes_executed += plan.region.len() * wave.len();
+            for outs in results {
+                for (k, t) in outs.into_iter().enumerate() {
+                    accs[k].push(&t, tracker);
+                }
+            }
+        }
+    }
+
+    stats.lane_peak_bytes = stats
+        .lane_peak_bytes
+        .max(lane_arenas.iter().map(|a| a.high_water()).max().unwrap_or(0));
+    stats.arena_fresh_allocs += lane_arenas.iter().map(|a| a.fresh_allocs()).sum::<usize>();
+    stats.arena_reuses += lane_arenas.iter().map(|a| a.reuses()).sum::<usize>();
+
+    for (&(o, _), acc) in plan.outputs.iter().zip(accs) {
+        values[o] = Some(acc.finish(outer_arena, tracker));
+    }
+}
+
+/// Execute one chunk iteration on a lane sub-arena, returning the output
+/// tensors in `plan.outputs` order.
+#[allow(clippy::too_many_arguments)]
+fn run_lane_iteration(
+    graph: &Graph,
+    plan: &ChunkPlan,
+    region: &RegionMemPlan,
+    values_ro: &[Option<Tensor>],
+    pass_vals: &[Tensor],
+    lane_arena: &Arena,
+    tracker: &MemoryTracker,
+    start: usize,
+    len: usize,
+) -> Vec<Tensor> {
+    let mut local: Vec<Option<Tensor>> = vec![None; graph.len()];
+    for (k, &p) in plan.pass_inputs.iter().enumerate() {
+        local[p] = Some(pass_vals[k].clone());
+    }
+    for &(i, axis) in &plan.chunk_inputs {
+        let base = values_ro[i].as_ref().expect("chunk input not live");
+        local[i] = Some(base.slice_axis(axis, start, len));
+    }
+    for (k, &(r, action)) in region.actions.iter().enumerate() {
+        let node = graph.node(r);
+        let adjusted = adjust_node(node, plan.node_dims[&r], len);
+        let out = match &adjusted {
+            Some(n) => exec_node_arena(n, action, &mut local, lane_arena, tracker),
+            None => exec_node_arena(node, action, &mut local, lane_arena, tracker),
+        };
+        local[r] = Some(out);
+        for &v in &region.release_after[k] {
+            local[v] = None;
+        }
+    }
+    plan.outputs
+        .iter()
+        .map(|&(o, _)| local[o].take().expect("region output missing"))
+        .collect()
+}

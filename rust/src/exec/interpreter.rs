@@ -20,6 +20,16 @@ pub struct ExecStats {
     /// Largest in-flight chunk-iteration count the governor granted
     /// (0 for unchunked runs, 1 when chunk loops ran serially).
     pub max_chunk_degree: usize,
+    /// Main-arena high-water mark in planned bytes (arena runs only;
+    /// equals the planner's `planned_peak_bytes` exactly).
+    pub arena_peak_bytes: usize,
+    /// Fresh slot-storage allocations this run (cold-cache misses).
+    pub arena_fresh_allocs: usize,
+    /// Slot acquires served from recycled storage this run.
+    pub arena_reuses: usize,
+    /// Largest per-lane sub-arena high-water mark across chunk regions
+    /// (equals the planner's `lane_bytes` for the executed regions).
+    pub lane_peak_bytes: usize,
 }
 
 /// Execute `graph` with positional `inputs`/`params`; intermediates land on

@@ -9,8 +9,10 @@
 //! Parameters are allocated untracked (parameter memory is out of scope of
 //! activation accounting, Eq. 1). Inputs and outputs are tracked.
 
+pub mod arena;
 mod interpreter;
 
+pub use arena::{execute_arena, ArenaStores};
 pub use interpreter::{execute, execute_node, ExecStats};
 
 use crate::ir::Graph;

@@ -406,6 +406,48 @@ impl CostQuote {
     }
 }
 
+/// How much tighter the static memory planner's exact admission price is
+/// than the pessimistic quote — the headroom the serve engine recovers by
+/// pricing with the planner (ISSUE 3). Arena-mode admission charges
+/// `planned_admission` directly (the certified bound for what the arena
+/// executor runs); the quote stays the *reported* cross-check ceiling —
+/// `planned_peak` (arena values only) always sits below it, and this
+/// report surfaces the per-plan difference.
+#[derive(Clone, Copy, Debug)]
+pub struct PlannerGap {
+    /// Exact planned arena peak (intermediates only).
+    pub planned_peak: usize,
+    /// The planner's sound serial admission price (inputs + arena +
+    /// transient workspace).
+    pub planned_admission: usize,
+    /// The pessimistic quote's upper bound.
+    pub quote_peak: usize,
+    /// Bytes the planner recovers per admitted request
+    /// (`quote_peak - min(planned_admission, quote_peak)`).
+    pub gap_bytes: usize,
+}
+
+impl PlannerGap {
+    /// Recovered fraction of the quote (0.0 when the quote is tighter).
+    pub fn gap_frac(&self) -> f64 {
+        self.gap_bytes as f64 / self.quote_peak.max(1) as f64
+    }
+}
+
+/// Compare the static memory planner against the pessimistic quote for a
+/// (graph, plans) pair.
+pub fn planner_gap(graph: &Graph, plans: &[ChunkPlan]) -> PlannerGap {
+    let mem = crate::passes::memplan::plan_memory(graph, plans);
+    let quote_peak = peak_upper_bound(graph, plans);
+    let planned_admission = mem.admission_bytes(1);
+    PlannerGap {
+        planned_peak: mem.planned_peak_bytes,
+        planned_admission,
+        quote_peak,
+        gap_bytes: quote_peak.saturating_sub(planned_admission.min(quote_peak)),
+    }
+}
+
 /// Quote a (graph, plans) pair for admission control.
 pub fn cost_quote(graph: &Graph, plans: &[ChunkPlan]) -> CostQuote {
     let estimate_bytes = simulate(graph, plans, false).peak_bytes;

@@ -1,0 +1,1191 @@
+//! Static memory planner: liveness-driven arena layout with exact peak
+//! accounting (DESIGN.md §12).
+//!
+//! The interpreter discovers its peak empirically — it allocates a fresh
+//! tracked buffer per op and frees on `Drop`. This pass computes the same
+//! execution's memory behaviour *at compile time*: per-value liveness over
+//! the scheduled [`Graph`] (and over each [`ChunkPlan`] region body),
+//! offset assignment into a single arena via best-fit interval allocation
+//! with buffer reuse, zero-copy aliasing for shape-preserving views
+//! (transpose/slice/contiguous-reshape/f32-convert/broadcast), and true
+//! in-place computation for elementwise ops whose operand dies at the op
+//! (the "elementwise-into-dead-operand" rule, with the use-twice and
+//! live-alias hazards rejected conservatively).
+//!
+//! The resulting [`MemPlan`] is a *script*: per-node actions plus explicit
+//! release lists. The arena executor ([`crate::exec::arena`]) follows the
+//! script verbatim, so the planner's `planned_peak_bytes` equals the
+//! runtime [`crate::tensor::Arena`] high-water mark exactly — the property
+//! `rust/tests/memplan_exact.rs` pins — and `admission_bytes` is a sound,
+//! *tight* admission price that replaces the pessimistic
+//! [`crate::passes::estimate::CostQuote`] in the serve engine (the quote
+//! stays as a cross-check ceiling).
+
+use crate::ir::{Graph, Node, NodeId, Op};
+use crate::plan::{region_owner, region_triggers, ChunkPlan};
+use crate::tensor::{broadcast_shapes, contiguous_strides, numel, DType, SlotSpec};
+use std::collections::HashMap;
+
+/// What the arena executor does for one value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValueAction {
+    /// Caller-provided binding (graph input/param; region-external value
+    /// in a lane scope). No arena involvement.
+    External,
+    /// Produced by its owning chunk region at that region's trigger
+    /// point (outer scope only).
+    Region,
+    /// Zero-copy view of input 0's storage root.
+    Alias,
+    /// Fresh arena allocation into `slot`.
+    Materialize { slot: usize },
+    /// Elementwise op computed in place into the dying operand at
+    /// `inputs[pos]`, inheriting its slot.
+    InPlace { pos: usize },
+}
+
+/// Memory plan for one chunk-region body, sized at the full chunk step —
+/// every concurrent lane of the region gets its own sub-arena built from
+/// these slots, which is what makes the concurrency governor's degree
+/// math exact.
+#[derive(Clone, Debug)]
+pub struct RegionMemPlan {
+    /// Per region node (in `plan.region` order): its action.
+    pub actions: Vec<(NodeId, ValueAction)>,
+    /// Parallel to `actions`: region-internal value ids to drop after
+    /// each node executes (within one lane iteration).
+    pub release_after: Vec<Vec<NodeId>>,
+    /// Lane sub-arena slots.
+    pub slots: Vec<SlotSpec>,
+    /// Exact lane sub-arena peak (== each lane arena's high-water mark).
+    pub lane_bytes: usize,
+    /// Lane peak plus the worst transient kernel workspace — the price
+    /// of one in-flight iteration for admission/governor math.
+    pub lane_admission: usize,
+    /// Outer-arena slots of the output accumulators (parallel to
+    /// `plan.outputs`), acquired at the region trigger.
+    pub accum_slots: Vec<usize>,
+    /// Outer-arena slots for materialized pass-input copies (parallel to
+    /// `plan.pass_inputs`; `None` = passed as-is), held for the region's
+    /// duration.
+    pub pass_slots: Vec<Option<usize>>,
+    /// Outer values whose last use was this region (its consumed external
+    /// inputs and any dead outputs), released after the region executes —
+    /// kept separate from the per-node release lists so the executor
+    /// replays the planner's exact acquire/release order.
+    pub post_releases: Vec<NodeId>,
+}
+
+/// The planner's output: a per-node action script with explicit release
+/// lists, the arena layout, and exact/sound memory numbers.
+#[derive(Clone, Debug)]
+pub struct MemPlan {
+    /// Per node id: what the executor does for it (outer schedule).
+    pub actions: Vec<ValueAction>,
+    /// Per node id: value ids whose last use has passed once that node
+    /// has executed (region-phase releases are in
+    /// [`RegionMemPlan::post_releases`] so ordering is exact).
+    pub release_after: Vec<Vec<NodeId>>,
+    /// Outer arena slots (offset + planned bytes).
+    pub slots: Vec<SlotSpec>,
+    /// Exact peak of live planned bytes in the outer arena — equals the
+    /// runtime arena high-water mark.
+    pub planned_peak_bytes: usize,
+    /// Contiguous-slab footprint (max `offset + bytes` over slots); can
+    /// exceed `planned_peak_bytes` through fragmentation.
+    pub footprint_bytes: usize,
+    /// Values that received a fresh slot (reuse ratio denominator is
+    /// `slots.len()`).
+    pub values_materialized: usize,
+    /// Elementwise ops computed into a dead operand.
+    pub inplace_count: usize,
+    /// Values served as zero-copy aliases.
+    pub alias_count: usize,
+    /// Graph input bytes, live for the whole run (callers hold inputs).
+    pub input_bytes: usize,
+    /// Sound admission price of one serial execution: inputs + arena live
+    /// + transient kernel workspace, maximized over the schedule (one
+    /// lane per region in flight).
+    pub admission_base: usize,
+    /// Per chunk plan: the lane memory plan.
+    pub regions: Vec<RegionMemPlan>,
+}
+
+impl MemPlan {
+    /// Admission price with `degree` chunk iterations in flight: each
+    /// extra lane costs the worst region's `lane_admission`.
+    pub fn admission_bytes(&self, degree: usize) -> usize {
+        self.admission_base + degree.saturating_sub(1) * self.max_lane_admission()
+    }
+
+    /// Price of one extra in-flight chunk iteration (0 when unchunked).
+    pub fn max_lane_admission(&self) -> usize {
+        self.regions.iter().map(|r| r.lane_admission).max().unwrap_or(0)
+    }
+
+    /// Buffer-reuse ratio: materialized values per arena slot (>= 1; 1.0
+    /// means no slot ever served two values).
+    pub fn reuse_ratio(&self) -> f64 {
+        self.values_materialized as f64 / self.slots.len().max(1) as f64
+    }
+}
+
+// ---------------------------------------------------------------- views
+
+/// Symbolic mirror of [`crate::tensor::Tensor`]'s view math (shape,
+/// strides, offset-zero flag), so the planner's contiguity and aliasing
+/// decisions match the runtime exactly.
+#[derive(Clone, Debug)]
+struct ViewState {
+    shape: Vec<usize>,
+    strides: Vec<isize>,
+    /// True while the view still starts at its buffer's offset 0 — an
+    /// in-place target must cover the whole root buffer.
+    offset_zero: bool,
+}
+
+impl ViewState {
+    fn contiguous(shape: &[usize]) -> ViewState {
+        ViewState {
+            shape: shape.to_vec(),
+            strides: contiguous_strides(shape),
+            offset_zero: true,
+        }
+    }
+
+    fn is_contiguous(&self) -> bool {
+        self.strides == contiguous_strides(&self.shape)
+    }
+
+    fn permute(&self, perm: &[usize]) -> ViewState {
+        ViewState {
+            shape: perm.iter().map(|&p| self.shape[p]).collect(),
+            strides: perm.iter().map(|&p| self.strides[p]).collect(),
+            offset_zero: self.offset_zero,
+        }
+    }
+
+    fn slice_axis(&self, axis: usize, start: usize, len: usize) -> ViewState {
+        let mut shape = self.shape.clone();
+        shape[axis] = len;
+        ViewState {
+            shape,
+            strides: self.strides.clone(),
+            offset_zero: self.offset_zero && (start == 0 || self.strides[axis] == 0),
+        }
+    }
+
+    fn broadcast_to(&self, target: &[usize]) -> ViewState {
+        let pad = target.len() - self.shape.len();
+        let mut strides = vec![0isize; target.len()];
+        for i in 0..target.len() {
+            if i >= pad {
+                let s = self.shape[i - pad];
+                strides[i] = if s == target[i] { self.strides[i - pad] } else { 0 };
+            }
+        }
+        ViewState {
+            shape: target.to_vec(),
+            strides,
+            offset_zero: self.offset_zero,
+        }
+    }
+
+    /// Contiguous reshape alias (caller checked `is_contiguous`).
+    fn reshape(&self, new_shape: &[usize]) -> ViewState {
+        ViewState {
+            shape: new_shape.to_vec(),
+            strides: contiguous_strides(new_shape),
+            offset_zero: self.offset_zero,
+        }
+    }
+
+    fn has_broadcast_stride(&self) -> bool {
+        self.strides
+            .iter()
+            .zip(&self.shape)
+            .any(|(&s, &d)| s == 0 && d > 1)
+    }
+
+    fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+}
+
+// ------------------------------------------------------------ allocator
+
+/// Best-fit interval allocator over a growable arena. Distinct
+/// (offset, bytes) pairs become slots; re-allocating an interval a dead
+/// value vacated reuses its slot id (and, at runtime, its storage).
+#[derive(Default)]
+struct Allocator {
+    /// Sorted disjoint free gaps (offset, len) below `end`.
+    free: Vec<(usize, usize)>,
+    end: usize,
+    slot_ids: HashMap<(usize, usize), usize>,
+    slots: Vec<SlotSpec>,
+    live_sum: usize,
+    peak: usize,
+}
+
+impl Allocator {
+    /// Allocate `bytes`, returning the slot id.
+    fn alloc(&mut self, bytes: usize) -> usize {
+        debug_assert!(bytes > 0, "zero-byte slot");
+        // Best fit: the smallest gap that holds `bytes`; ties break to
+        // the lowest offset. First fit (arena end) when nothing fits.
+        let mut best: Option<usize> = None;
+        for (i, &(off, len)) in self.free.iter().enumerate() {
+            if len >= bytes {
+                let better = match best {
+                    None => true,
+                    Some(b) => {
+                        let (boff, blen) = self.free[b];
+                        len < blen || (len == blen && off < boff)
+                    }
+                };
+                if better {
+                    best = Some(i);
+                }
+            }
+        }
+        let offset = match best {
+            Some(i) => {
+                let (off, len) = self.free[i];
+                if len == bytes {
+                    self.free.remove(i);
+                } else {
+                    self.free[i] = (off + bytes, len - bytes);
+                }
+                off
+            }
+            None => {
+                let off = self.end;
+                self.end += bytes;
+                off
+            }
+        };
+        self.live_sum += bytes;
+        self.peak = self.peak.max(self.live_sum);
+        let existing = self.slot_ids.get(&(offset, bytes)).copied();
+        match existing {
+            Some(id) => id,
+            None => {
+                let id = self.slots.len();
+                self.slot_ids.insert((offset, bytes), id);
+                self.slots.push(SlotSpec { offset, bytes });
+                id
+            }
+        }
+    }
+
+    /// Free a slot's interval, merging adjacent gaps.
+    fn free_slot(&mut self, slot: usize) {
+        let SlotSpec { offset, bytes } = self.slots[slot];
+        self.live_sum -= bytes;
+        let pos = self.free.partition_point(|&(o, _)| o < offset);
+        self.free.insert(pos, (offset, bytes));
+        if pos + 1 < self.free.len() {
+            let (o1, l1) = self.free[pos];
+            let (o2, l2) = self.free[pos + 1];
+            if o1 + l1 == o2 {
+                self.free[pos] = (o1, l1 + l2);
+                self.free.remove(pos + 1);
+            }
+        }
+        if pos > 0 {
+            let (o0, l0) = self.free[pos - 1];
+            let (o1, l1) = self.free[pos];
+            if o0 + l0 == o1 {
+                self.free[pos - 1] = (o0, l0 + l1);
+                self.free.remove(pos);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------- scope state
+
+/// Per-scope value bookkeeping: storage roots, slots, live alias counts,
+/// symbolic views. Indexed by graph node id in both the outer schedule
+/// and region-lane scopes.
+struct Scope {
+    alloc: Allocator,
+    root: Vec<NodeId>,
+    root_slot: Vec<Option<usize>>,
+    root_refs: Vec<usize>,
+    view: Vec<Option<ViewState>>,
+}
+
+impl Scope {
+    fn new(n: usize) -> Scope {
+        Scope {
+            alloc: Allocator::default(),
+            root: (0..n).collect(),
+            root_slot: vec![None; n],
+            root_refs: vec![0; n],
+            view: vec![None; n],
+        }
+    }
+
+    /// Bind an external value (input/param or region-external).
+    fn bind_external(&mut self, id: NodeId, view: ViewState) {
+        self.root[id] = id;
+        self.root_slot[id] = None;
+        self.root_refs[id] = 1;
+        self.view[id] = Some(view);
+    }
+
+    /// Bind a freshly materialized value into a new slot.
+    fn bind_slot(&mut self, id: NodeId, slot: usize, view: ViewState) {
+        self.root[id] = id;
+        self.root_slot[id] = Some(slot);
+        self.root_refs[id] = 1;
+        self.view[id] = Some(view);
+    }
+
+    /// Bind an alias of `of`'s storage root.
+    fn bind_alias(&mut self, id: NodeId, of: NodeId, view: ViewState) {
+        let r = self.root[of];
+        self.root[id] = r;
+        self.root_refs[r] += 1;
+        self.view[id] = Some(view);
+    }
+
+    /// Drop one value reference; frees the root's slot at zero refs.
+    fn release_value(&mut self, id: NodeId) {
+        let r = self.root[id];
+        debug_assert!(self.root_refs[r] > 0, "double release of value {id}");
+        self.root_refs[r] -= 1;
+        if self.root_refs[r] == 0 {
+            if let Some(slot) = self.root_slot[r].take() {
+                self.alloc.free_slot(slot);
+            }
+        }
+    }
+
+    /// In-place transfer: `id` takes over `operand`'s root and slot; the
+    /// operand's own reference ends without freeing (net zero).
+    fn bind_inplace(&mut self, id: NodeId, operand: NodeId, view: ViewState) {
+        let r = self.root[operand];
+        debug_assert_eq!(self.root_refs[r], 1, "in-place with live aliases");
+        self.root[id] = r;
+        self.view[id] = Some(view);
+        // refs stay 1: the operand's reference becomes the output's.
+    }
+
+    /// True if `operand` qualifies as an in-place target producing
+    /// `out_shape`: f32, a contiguous whole-buffer view of a slot-backed
+    /// root with no other live aliases, dying at this node (its remaining
+    /// uses all being this node's `multiplicity` occurrences).
+    fn inplace_ok(
+        &self,
+        graph: &Graph,
+        refcount: &[usize],
+        operand: NodeId,
+        out_shape: &[usize],
+        multiplicity: usize,
+    ) -> bool {
+        if graph.node(operand).dtype != DType::F32 {
+            return false;
+        }
+        let Some(v) = &self.view[operand] else {
+            return false;
+        };
+        if v.shape != out_shape || !v.is_contiguous() || !v.offset_zero {
+            return false;
+        }
+        let r = self.root[operand];
+        let Some(slot) = self.root_slot[r] else {
+            return false; // external storage is never written in place
+        };
+        // The view must cover the whole slot (no partial-buffer targets).
+        if self.alloc.slots[slot].bytes != v.numel() * 4 {
+            return false;
+        }
+        self.root_refs[r] == 1 && refcount[operand] == multiplicity
+    }
+}
+
+// ------------------------------------------------------- node decisions
+
+/// Effective shapes for a scope: outer = node shapes; lanes scale the
+/// chunk dim to the step.
+type EffShapes = Vec<Vec<usize>>;
+
+/// Decide and apply the action for one node, returning the action and the
+/// node's transient tracked-workspace bound in bytes. Mirrors the arena
+/// executor's dispatch exactly — both sides are generated from this
+/// table's rules.
+fn process_node(
+    graph: &Graph,
+    node: &Node,
+    eff: &EffShapes,
+    scope: &mut Scope,
+    refcount: &[usize],
+    stats: &mut PlanStats,
+) -> (ValueAction, usize) {
+    let id = node.id;
+    let out_shape = &eff[id];
+    let in_view = |scope: &Scope, pos: usize| -> ViewState {
+        scope.view[node.inputs[pos]]
+            .clone()
+            .unwrap_or_else(|| panic!("planner: value {} not live for node {id}", node.inputs[pos]))
+    };
+    let materialize = |scope: &mut Scope, stats: &mut PlanStats, bytes: usize, view: ViewState| {
+        let slot = scope.alloc.alloc(bytes);
+        scope.bind_slot(id, slot, view);
+        stats.materialized += 1;
+        ValueAction::Materialize { slot }
+    };
+    let alias = |scope: &mut Scope, stats: &mut PlanStats, of_pos: usize, view: ViewState| {
+        scope.bind_alias(id, node.inputs[of_pos], view);
+        stats.aliased += 1;
+        ValueAction::Alias
+    };
+
+    match &node.op {
+        Op::Input | Op::Param => unreachable!("leaves are pre-bound"),
+        Op::Const(_) | Op::Iota { .. } => {
+            let v = ViewState::contiguous(out_shape);
+            (materialize(scope, stats, numel(out_shape) * 4, v), 0)
+        }
+        Op::Transpose { perm } => {
+            let v = in_view(scope, 0).permute(perm);
+            (alias(scope, stats, 0, v), 0)
+        }
+        Op::Slice { axis, start, .. } => {
+            let v = in_view(scope, 0).slice_axis(*axis, *start, out_shape[*axis]);
+            (alias(scope, stats, 0, v), 0)
+        }
+        Op::Broadcast { dims } => {
+            let iv = in_view(scope, 0);
+            let mut reshaped = vec![1usize; out_shape.len()];
+            for (i, &d) in dims.iter().enumerate() {
+                reshaped[d] = iv.shape[i];
+            }
+            if iv.is_contiguous() {
+                let v = iv.reshape(&reshaped).broadcast_to(out_shape);
+                (alias(scope, stats, 0, v), 0)
+            } else {
+                // the runtime reshape materializes the input copy
+                let v = ViewState::contiguous(&reshaped).broadcast_to(out_shape);
+                (materialize(scope, stats, iv.numel() * 4, v), 0)
+            }
+        }
+        Op::Reshape => {
+            let iv = in_view(scope, 0);
+            if iv.is_contiguous() {
+                let v = iv.reshape(out_shape);
+                (alias(scope, stats, 0, v), 0)
+            } else {
+                let v = ViewState::contiguous(out_shape);
+                (materialize(scope, stats, numel(out_shape) * 4, v), 0)
+            }
+        }
+        Op::Convert => {
+            let iv = in_view(scope, 0);
+            let src_f32 = graph.node(node.inputs[0]).dtype == DType::F32;
+            if src_f32 && iv.is_contiguous() {
+                (alias(scope, stats, 0, iv), 0)
+            } else {
+                let v = ViewState::contiguous(out_shape);
+                (materialize(scope, stats, numel(out_shape) * 4, v), 0)
+            }
+        }
+        Op::Unary(_) => {
+            let operand = node.inputs[0];
+            if scope.inplace_ok(graph, refcount, operand, out_shape, 1) {
+                let v = ViewState::contiguous(out_shape);
+                scope.bind_inplace(id, operand, v);
+                stats.inplace += 1;
+                (ValueAction::InPlace { pos: 0 }, 0)
+            } else {
+                let v = ViewState::contiguous(out_shape);
+                (materialize(scope, stats, numel(out_shape) * 4, v), 0)
+            }
+        }
+        Op::Binary(_) => {
+            let multiplicity = |operand: NodeId| -> usize {
+                node.inputs.iter().filter(|&&i| i == operand).count()
+            };
+            let mut chosen: Option<usize> = None;
+            for pos in 0..2 {
+                let operand = node.inputs[pos];
+                if pos == 1 && node.inputs[0] == node.inputs[1] {
+                    break; // self-op: pos 0 already covers it
+                }
+                if scope.inplace_ok(graph, refcount, operand, out_shape, multiplicity(operand)) {
+                    chosen = Some(pos);
+                    break;
+                }
+            }
+            match chosen {
+                Some(pos) => {
+                    let v = ViewState::contiguous(out_shape);
+                    scope.bind_inplace(id, node.inputs[pos], v);
+                    stats.inplace += 1;
+                    (ValueAction::InPlace { pos }, 0)
+                }
+                None => {
+                    let v = ViewState::contiguous(out_shape);
+                    (materialize(scope, stats, numel(out_shape) * 4, v), 0)
+                }
+            }
+        }
+        Op::MatMul => {
+            let ws = matmul_transients(&in_view(scope, 0), &in_view(scope, 1));
+            let v = ViewState::contiguous(out_shape);
+            (materialize(scope, stats, numel(out_shape) * 4, v), ws)
+        }
+        Op::DotGeneral {
+            lhs_batch,
+            rhs_batch,
+            lhs_contract,
+            rhs_contract,
+        } => {
+            // Mirrors the executor's canonicalization: each side permutes
+            // to [batch, free, contract] (lhs) / [batch, contract, free]
+            // (rhs); a copy is paid iff the permuted view is
+            // non-contiguous.
+            let side = |view: &ViewState,
+                        batch: &[usize],
+                        contract: &[usize],
+                        contract_first: bool| {
+                let rank = view.shape.len();
+                let free: Vec<usize> = (0..rank)
+                    .filter(|d| !batch.contains(d) && !contract.contains(d))
+                    .collect();
+                let mut perm = batch.to_vec();
+                if contract_first {
+                    perm.extend(contract.iter().copied());
+                    perm.extend(&free);
+                } else {
+                    perm.extend(&free);
+                    perm.extend(contract.iter().copied());
+                }
+                let pv = view.permute(&perm);
+                if pv.is_contiguous() {
+                    0
+                } else {
+                    pv.numel() * 4
+                }
+            };
+            let a = in_view(scope, 0);
+            let b = in_view(scope, 1);
+            let ws = side(&a, lhs_batch, lhs_contract, false)
+                + side(&b, rhs_batch, rhs_contract, true);
+            let v = ViewState::contiguous(out_shape);
+            (materialize(scope, stats, numel(out_shape) * 4, v), ws)
+        }
+        Op::Reduce { axis, .. } => {
+            let iv = in_view(scope, 0);
+            let perm = axis_last_perm(iv.shape.len(), *axis);
+            let pv = iv.permute(&perm);
+            let ws = if pv.is_contiguous() { 0 } else { pv.numel() * 4 };
+            let v = ViewState::contiguous(out_shape);
+            (materialize(scope, stats, numel(out_shape) * 4, v), ws)
+        }
+        Op::Softmax { axis } => {
+            let iv = in_view(scope, 0);
+            let perm = axis_last_perm(iv.shape.len(), *axis);
+            let pv = iv.permute(&perm);
+            let mut ws = if pv.is_contiguous() { 0 } else { pv.numel() * 4 };
+            if *axis != iv.shape.len() - 1 {
+                // non-innermost axis: the permuted-layout scratch the
+                // kernel fills before the inverse-permuted copy out
+                ws += iv.numel() * 4;
+            }
+            let v = ViewState::contiguous(out_shape);
+            (materialize(scope, stats, numel(out_shape) * 4, v), ws)
+        }
+        Op::Concat { .. } => {
+            let mut ws = 0usize;
+            for pos in 0..node.inputs.len() {
+                let pv = in_view(scope, pos);
+                if !pv.is_contiguous() {
+                    ws += pv.numel() * 4;
+                }
+            }
+            let v = ViewState::contiguous(out_shape);
+            (materialize(scope, stats, numel(out_shape) * 4, v), ws)
+        }
+        Op::Gather => {
+            let tv = in_view(scope, 0);
+            let ws = if tv.is_contiguous() { 0 } else { tv.numel() * 4 };
+            let v = ViewState::contiguous(out_shape);
+            (materialize(scope, stats, numel(out_shape) * 4, v), ws)
+        }
+        Op::Conv2d { .. } => {
+            let xv = in_view(scope, 0);
+            let wv = in_view(scope, 1);
+            let w_shape = &eff[node.inputs[1]];
+            let cols_width = w_shape[1] * w_shape[2] * w_shape[3];
+            let cols_rows = out_shape[0] * out_shape[2] * out_shape[3];
+            let cout = w_shape[0];
+            let mut ws = cols_rows * cols_width * 4; // im2col matrix
+            ws += cols_rows * cout * 4; // pre-permute GEMM output
+            if !xv.is_contiguous() {
+                ws += xv.numel() * 4;
+            }
+            // weight reshape copy iff non-contiguous, then the permuted
+            // [width, cout] operand materialized inside the matmul
+            let wt = if wv.is_contiguous() {
+                wv.reshape(&[cout, cols_width])
+            } else {
+                ws += wv.numel() * 4;
+                ViewState::contiguous(&[cout, cols_width])
+            };
+            let wt_perm = wt.permute(&[1, 0]);
+            if !wt_perm.is_contiguous() {
+                ws += wt_perm.numel() * 4;
+            }
+            let v = ViewState::contiguous(out_shape);
+            (materialize(scope, stats, numel(out_shape) * 4, v), ws)
+        }
+        Op::AvgPool2x | Op::Upsample2x => {
+            let xv = in_view(scope, 0);
+            let ws = if xv.is_contiguous() { 0 } else { xv.numel() * 4 };
+            let v = ViewState::contiguous(out_shape);
+            (materialize(scope, stats, numel(out_shape) * 4, v), ws)
+        }
+        Op::FusedAttention { .. } => {
+            let q = in_view(scope, 0);
+            let k = in_view(scope, 1);
+            let vv = in_view(scope, 2);
+            let ws = fused_attention_transients(&q, &k, &vv);
+            let v = ViewState::contiguous(out_shape);
+            (materialize(scope, stats, numel(out_shape) * 4, v), ws)
+        }
+        Op::Opaque { .. } => {
+            // analysis-only; the executor refuses it like the interpreter
+            let v = ViewState::contiguous(out_shape);
+            (materialize(scope, stats, numel(out_shape) * 4, v), 0)
+        }
+    }
+}
+
+/// Permutation that moves `axis` last (the reduce/softmax row layout).
+fn axis_last_perm(rank: usize, axis: usize) -> Vec<usize> {
+    let mut perm: Vec<usize> = (0..rank).filter(|&i| i != axis).collect();
+    perm.push(axis);
+    perm
+}
+
+/// Tracked transient bytes of a matmul: each operand is broadcast to the
+/// full batch and materialized contiguously iff that is not a no-op —
+/// including batch *expansion*, which the pessimistic quote under-models.
+fn matmul_transients(a: &ViewState, b: &ViewState) -> usize {
+    let ar = a.shape.len();
+    let br = b.shape.len();
+    let (m, k) = (a.shape[ar - 2], a.shape[ar - 1]);
+    let n = b.shape[br - 1];
+    let batch_shape = broadcast_shapes(&a.shape[..ar - 2], &b.shape[..br - 2]);
+    let mut a_full = batch_shape.clone();
+    a_full.extend_from_slice(&[m, k]);
+    let mut b_full = batch_shape.clone();
+    b_full.extend_from_slice(&[b.shape[br - 2], n]);
+    let mut ws = 0usize;
+    let ab = a.broadcast_to(&a_full);
+    if !ab.is_contiguous() {
+        ws += numel(&a_full) * 4;
+    }
+    let bb = b.broadcast_to(&b_full);
+    if !bb.is_contiguous() {
+        ws += numel(&b_full) * 4;
+    }
+    ws
+}
+
+/// Tracked transient bytes of fused attention: q/k/v broadcast to the
+/// full batch and materialized iff not already contiguous at full shape.
+fn fused_attention_transients(q: &ViewState, k: &ViewState, v: &ViewState) -> usize {
+    let rank = q.shape.len();
+    let (sq, d) = (q.shape[rank - 2], q.shape[rank - 1]);
+    let skv = k.shape[k.shape.len() - 2];
+    let dv = v.shape[v.shape.len() - 1];
+    let batch_shape = broadcast_shapes(
+        &broadcast_shapes(&q.shape[..rank - 2], &k.shape[..k.shape.len() - 2]),
+        &v.shape[..v.shape.len() - 2],
+    );
+    let full = |tail: [usize; 2]| {
+        let mut s = batch_shape.clone();
+        s.extend_from_slice(&tail);
+        s
+    };
+    let mut ws = 0usize;
+    for (view, tail) in [(q, [sq, d]), (k, [skv, d]), (v, [skv, dv])] {
+        let fs = full(tail);
+        let bv = view.broadcast_to(&fs);
+        if !bv.is_contiguous() {
+            ws += numel(&fs) * 4;
+        }
+    }
+    ws
+}
+
+#[derive(Default)]
+struct PlanStats {
+    materialized: usize,
+    aliased: usize,
+    inplace: usize,
+}
+
+// ------------------------------------------------------------- planning
+
+/// Compute the memory plan for `graph` under `plans` (empty = unchunked).
+pub fn plan_memory(graph: &Graph, plans: &[ChunkPlan]) -> MemPlan {
+    let users = graph.users();
+    let owner = region_owner(plans, graph.len());
+    let triggers = region_triggers(plans);
+
+    let mut refcount: Vec<usize> = users.iter().map(|u| u.len()).collect();
+    for &o in &graph.outputs {
+        refcount[o] += 1;
+    }
+
+    // Effective shapes in the outer schedule are the node shapes.
+    let eff: EffShapes = graph.nodes.iter().map(|n| n.shape.clone()).collect();
+
+    let mut scope = Scope::new(graph.len());
+    let mut stats = PlanStats::default();
+    let mut actions: Vec<ValueAction> = vec![ValueAction::External; graph.len()];
+    let mut release_after: Vec<Vec<NodeId>> = vec![Vec::new(); graph.len()];
+    let mut regions: Vec<Option<RegionMemPlan>> = vec![None; plans.len()];
+
+    let input_bytes: usize = graph.inputs.iter().map(|&i| graph.node(i).byte_size()).sum();
+    let mut admission_peak = input_bytes;
+
+    let prebound: Vec<bool> = {
+        let mut v = vec![false; graph.len()];
+        for &i in graph.inputs.iter().chain(graph.params.iter()) {
+            v[i] = true;
+        }
+        v
+    };
+    for &i in graph.inputs.iter().chain(graph.params.iter()) {
+        scope.bind_external(i, ViewState::contiguous(&graph.node(i).shape));
+        actions[i] = ValueAction::External;
+    }
+    for (id, o) in owner.iter().enumerate() {
+        if o.is_some() {
+            actions[id] = ValueAction::Region;
+        }
+    }
+
+    for node in &graph.nodes {
+        let id = node.id;
+        let skip = prebound[id] || owner[id].is_some();
+        if !skip {
+            let (action, transient) =
+                process_node(graph, node, &eff, &mut scope, &refcount, &mut stats);
+            actions[id] = action;
+            admission_peak = admission_peak.max(input_bytes + scope.alloc.live_sum + transient);
+            // Dead on arrival (no consumers, not an output).
+            if refcount[id] == 0 {
+                scope.release_value(id);
+                release_after[id].push(id);
+            }
+            // The in-place operand's reference was consumed by the op
+            // itself; regular input releases skip it.
+            let inplace_operand = match action {
+                ValueAction::InPlace { pos } => Some(node.inputs[pos]),
+                _ => None,
+            };
+            let mut decremented: Vec<NodeId> = Vec::new();
+            for &i in &node.inputs {
+                refcount[i] -= 1;
+                if refcount[i] == 0 && !decremented.contains(&i) {
+                    decremented.push(i);
+                    if Some(i) == inplace_operand {
+                        continue; // storage transferred, not released
+                    }
+                    scope.release_value(i);
+                    release_after[id].push(i);
+                }
+            }
+        }
+
+        // Fire regions triggered at this id (mirrors execute_chunked).
+        if let Some(plan_ids) = triggers.get(&id) {
+            for &pi in plan_ids {
+                let plan = &plans[pi];
+                let mut region = plan_region_lane(graph, plan, &scope, &eff);
+
+                // Pass-input copies (outer arena, held for the region).
+                for &p in &plan.pass_inputs {
+                    let v = scope.view[p].clone().expect("pass input not live");
+                    let slot = if v.has_broadcast_stride() || v.is_contiguous() {
+                        None
+                    } else {
+                        Some(scope.alloc.alloc(v.numel() * 4))
+                    };
+                    region.pass_slots.push(slot);
+                }
+                // Output accumulators (outer arena, become the outputs).
+                for &(o, _) in &plan.outputs {
+                    let slot = scope.alloc.alloc(graph.node(o).byte_size());
+                    region.accum_slots.push(slot);
+                    scope.bind_slot(o, slot, ViewState::contiguous(&graph.node(o).shape));
+                    stats.materialized += 1;
+                }
+                admission_peak = admission_peak
+                    .max(input_bytes + scope.alloc.live_sum + region.lane_admission);
+
+                // Region end: pass copies drop.
+                for slot in region.pass_slots.iter().flatten() {
+                    scope.alloc.free_slot(*slot);
+                }
+                // External inputs consumed by the region.
+                let mut decremented: Vec<NodeId> = Vec::new();
+                for &r in &plan.region {
+                    for &i in &graph.node(r).inputs {
+                        if owner[i] != Some(pi) {
+                            refcount[i] -= 1;
+                            if refcount[i] == 0 && !decremented.contains(&i) {
+                                decremented.push(i);
+                                scope.release_value(i);
+                                region.post_releases.push(i);
+                            }
+                        }
+                    }
+                }
+                // Region outputs: internal consumptions already happened.
+                let region_set: std::collections::HashSet<NodeId> =
+                    plan.region.iter().copied().collect();
+                for &(o, _) in &plan.outputs {
+                    let internal_users =
+                        users[o].iter().filter(|u| region_set.contains(u)).count();
+                    refcount[o] -= internal_users;
+                    if refcount[o] == 0 {
+                        scope.release_value(o);
+                        region.post_releases.push(o);
+                    }
+                }
+                regions[pi] = Some(region);
+            }
+        }
+    }
+
+    MemPlan {
+        actions,
+        release_after,
+        planned_peak_bytes: scope.alloc.peak,
+        footprint_bytes: scope
+            .alloc
+            .slots
+            .iter()
+            .map(|s| s.offset + s.bytes)
+            .max()
+            .unwrap_or(0),
+        slots: scope.alloc.slots,
+        values_materialized: stats.materialized,
+        inplace_count: stats.inplace,
+        alias_count: stats.aliased,
+        input_bytes,
+        admission_base: admission_peak,
+        regions: regions.into_iter().map(|r| r.expect("region planned")).collect(),
+    }
+}
+
+/// Plan one region body at the full chunk step: lane slots, actions,
+/// release script, and the exact lane peak. `outer` provides the view
+/// states of the region's external inputs (chunk inputs are sliced from
+/// them, pass inputs bound as the runtime binds them).
+fn plan_region_lane(
+    graph: &Graph,
+    plan: &ChunkPlan,
+    outer: &Scope,
+    outer_eff: &EffShapes,
+) -> RegionMemPlan {
+    let step = plan.chunk_step(graph);
+    let region_set: std::collections::HashSet<NodeId> = plan.region.iter().copied().collect();
+
+    // Lane-internal refcounts: uses by region nodes; outputs pinned until
+    // the accumulator push at iteration end.
+    let mut refcount: Vec<usize> = vec![0; graph.len()];
+    for &r in &plan.region {
+        for &i in &graph.node(r).inputs {
+            refcount[i] += 1;
+        }
+    }
+    for &(o, _) in &plan.outputs {
+        refcount[o] += 1;
+    }
+
+    // Effective shapes: region nodes (and chunk inputs) scale their chunk
+    // dim to the step.
+    let mut eff: EffShapes = outer_eff.clone();
+    for &r in &plan.region {
+        let dim = plan.node_dims[&r];
+        let mut s = graph.node(r).shape.clone();
+        s[dim] = step.min(s[dim]);
+        eff[r] = s;
+    }
+    for &(i, axis) in &plan.chunk_inputs {
+        let mut s = graph.node(i).shape.clone();
+        s[axis] = step.min(s[axis]);
+        eff[i] = s;
+    }
+
+    let mut scope = Scope::new(graph.len());
+    let mut stats = PlanStats::default();
+
+    // Bind externals with the runtime's exact view states.
+    for &(i, axis) in &plan.chunk_inputs {
+        let base = outer.view[i].clone().expect("chunk input not live");
+        let v = base.slice_axis(axis, 0, eff[i][axis]);
+        scope.bind_external(i, v);
+    }
+    for &p in &plan.pass_inputs {
+        let base = outer.view[p].clone().expect("pass input not live");
+        let v = if base.has_broadcast_stride() || base.is_contiguous() {
+            base // passed as-is (clone / to_contiguous no-op)
+        } else {
+            ViewState::contiguous(&outer_eff[p]) // materialized pass copy
+        };
+        scope.bind_external(p, v);
+    }
+
+    let mut actions: Vec<(NodeId, ValueAction)> = Vec::with_capacity(plan.region.len());
+    let mut release_after: Vec<Vec<NodeId>> = Vec::with_capacity(plan.region.len());
+    let mut lane_admission = 0usize;
+
+    for &r in &plan.region {
+        let node = graph.node(r);
+        let (action, transient) =
+            process_node(graph, node, &eff, &mut scope, &refcount, &mut stats);
+        lane_admission = lane_admission.max(scope.alloc.live_sum + transient);
+        let mut releases: Vec<NodeId> = Vec::new();
+        if refcount[r] == 0 {
+            scope.release_value(r);
+            releases.push(r);
+        }
+        let inplace_operand = match action {
+            ValueAction::InPlace { pos } => Some(node.inputs[pos]),
+            _ => None,
+        };
+        let mut decremented: Vec<NodeId> = Vec::new();
+        for &i in &node.inputs {
+            refcount[i] -= 1;
+            if refcount[i] == 0 && !decremented.contains(&i) && region_set.contains(&i) {
+                decremented.push(i);
+                if Some(i) == inplace_operand {
+                    continue;
+                }
+                scope.release_value(i);
+                releases.push(i);
+            }
+        }
+        actions.push((r, action));
+        release_after.push(releases);
+    }
+    // Accumulator pushes materialize non-contiguous output chunks
+    // transiently (tracked) before their copy; charge the worst case on
+    // top of the end-of-iteration live set.
+    let push_ws: usize = plan
+        .outputs
+        .iter()
+        .filter_map(|&(o, _)| scope.view[o].as_ref())
+        .filter(|v| !v.is_contiguous())
+        .map(|v| v.numel() * 4)
+        .sum();
+    lane_admission = lane_admission.max(scope.alloc.live_sum + push_ws);
+    lane_admission = lane_admission.max(scope.alloc.peak);
+
+    RegionMemPlan {
+        actions,
+        release_after,
+        lane_bytes: scope.alloc.peak,
+        lane_admission,
+        slots: scope.alloc.slots,
+        accum_slots: Vec::new(),
+        pass_slots: Vec::new(),
+        post_releases: Vec::new(),
+    }
+}
+
+/// Stable, human-readable rendering of a memory plan — the golden
+/// memory-profile snapshot format (`rust/tests/memplan_golden.rs`). All
+/// integer arithmetic, so the fixture is bitwise stable.
+pub fn describe_memplan(plan: &MemPlan) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(s, "planned_peak_bytes: {}", plan.planned_peak_bytes);
+    let _ = writeln!(s, "footprint_bytes: {}", plan.footprint_bytes);
+    let _ = writeln!(s, "slots: {}", plan.slots.len());
+    let _ = writeln!(s, "values_materialized: {}", plan.values_materialized);
+    let _ = writeln!(s, "aliases: {}", plan.alias_count);
+    let _ = writeln!(s, "inplace: {}", plan.inplace_count);
+    // reuse ratio ×100, integer-rounded, for float-free fixtures
+    let _ = writeln!(
+        s,
+        "reuse_ratio_pct: {}",
+        plan.values_materialized * 100 / plan.slots.len().max(1)
+    );
+    let _ = writeln!(s, "admission_base: {}", plan.admission_base);
+    let _ = writeln!(s, "regions: {}", plan.regions.len());
+    for (i, r) in plan.regions.iter().enumerate() {
+        let _ = writeln!(
+            s,
+            "region {i}: lane_bytes={} lane_admission={} slots={} accums={}",
+            r.lane_bytes,
+            r.lane_admission,
+            r.slots.len(),
+            r.accum_slots.len()
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+    use crate::tensor::ops::{BinaryOp, UnaryOp};
+
+    #[test]
+    fn allocator_best_fit_reuses_gaps() {
+        let mut a = Allocator::default();
+        let s1 = a.alloc(100);
+        let s2 = a.alloc(50);
+        assert_eq!(a.slots[s1].offset, 0);
+        assert_eq!(a.slots[s2].offset, 100);
+        a.free_slot(s1);
+        // 40 fits the 100-gap (best fit), not the arena end
+        let s3 = a.alloc(40);
+        assert_eq!(a.slots[s3].offset, 0);
+        // 60 fits the remaining 60-byte tail of the gap
+        let s4 = a.alloc(60);
+        assert_eq!(a.slots[s4].offset, 40);
+        assert_eq!(a.end, 150, "no growth needed");
+        assert_eq!(a.peak, 150);
+        a.free_slot(s2);
+        a.free_slot(s3);
+        a.free_slot(s4);
+        assert_eq!(a.live_sum, 0);
+        // full merge back to one gap
+        assert_eq!(a.free, vec![(0, 150)]);
+    }
+
+    #[test]
+    fn allocator_same_interval_reuses_slot_id() {
+        let mut a = Allocator::default();
+        let s1 = a.alloc(64);
+        a.free_slot(s1);
+        let s2 = a.alloc(64);
+        assert_eq!(s1, s2, "vacated interval reuses its slot id");
+        assert_eq!(a.slots.len(), 1);
+    }
+
+    #[test]
+    fn chain_reuses_slots_via_inplace() {
+        // x -> relu -> gelu -> tanh: the elementwise chain computes in
+        // place, so exactly one slot exists.
+        let mut b = GraphBuilder::new("chain");
+        let x = b.input("x", &[64]);
+        let a1 = b.unary(UnaryOp::Relu, x);
+        let a2 = b.unary(UnaryOp::Gelu, a1);
+        let a3 = b.unary(UnaryOp::Tanh, a2);
+        let g = b.finish(vec![a3]);
+        let plan = plan_memory(&g, &[]);
+        // a1 materializes (input is external); a2, a3 run in place
+        assert_eq!(plan.slots.len(), 1, "{:?}", plan.slots);
+        assert_eq!(plan.inplace_count, 2);
+        assert_eq!(plan.planned_peak_bytes, 64 * 4);
+        assert_eq!(plan.actions[a2], ValueAction::InPlace { pos: 0 });
+        assert_eq!(plan.actions[a3], ValueAction::InPlace { pos: 0 });
+    }
+
+    #[test]
+    fn use_twice_rejects_inplace() {
+        // c = a * a with a still needed by d: neither use may clobber a.
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[8]);
+        let a = b.unary(UnaryOp::Relu, x);
+        let c = b.binary(BinaryOp::Mul, a, a);
+        let d = b.binary(BinaryOp::Add, c, a);
+        let g = b.finish(vec![d]);
+        let plan = plan_memory(&g, &[]);
+        // at c, a has 3 outstanding uses (2 here + 1 at d) -> materialize
+        assert!(
+            matches!(plan.actions[c], ValueAction::Materialize { .. }),
+            "{:?}",
+            plan.actions[c]
+        );
+        // at d, c dies (multiplicity 1, refcount 1) -> in place into c
+        assert_eq!(plan.actions[d], ValueAction::InPlace { pos: 0 });
+    }
+
+    #[test]
+    fn live_alias_rejects_inplace() {
+        // A transpose view of `a` is still live when relu(a) runs: the
+        // planner must copy, not write through the alias.
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4, 4]);
+        let a = b.unary(UnaryOp::Relu, x); // slot-backed
+        let t = b.transpose(a, &[1, 0]); // live alias of a
+        let u = b.unary(UnaryOp::Neg, a); // a's last direct use
+        let s = b.binary(BinaryOp::Add, t, u);
+        let g = b.finish(vec![s]);
+        let plan = plan_memory(&g, &[]);
+        assert!(
+            matches!(plan.actions[u], ValueAction::Materialize { .. }),
+            "in-place through a live alias is the use-twice hazard: {:?}",
+            plan.actions[u]
+        );
+    }
+
+    #[test]
+    fn external_operands_never_inplace() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[16]);
+        let y = b.unary(UnaryOp::Relu, x); // x is caller-owned
+        let g = b.finish(vec![y]);
+        let plan = plan_memory(&g, &[]);
+        assert!(matches!(plan.actions[y], ValueAction::Materialize { .. }));
+    }
+
+    #[test]
+    fn views_alias_and_allocate_nothing() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[8, 8]);
+        let t = b.transpose(x, &[1, 0]);
+        let s = b.slice(t, 0, 0, 4);
+        let g = b.finish(vec![s]);
+        let plan = plan_memory(&g, &[]);
+        assert_eq!(plan.actions[t], ValueAction::Alias);
+        assert_eq!(plan.actions[s], ValueAction::Alias);
+        assert_eq!(plan.planned_peak_bytes, 0, "views of inputs cost nothing");
+        assert_eq!(plan.alias_count, 2);
+    }
+
+    #[test]
+    fn liveness_chain_peak_is_two_values() {
+        // matmul chain: cur and next overlap transiently; peak = 2 slots.
+        let mut b = GraphBuilder::new("chain");
+        let x = b.input("x", &[32, 32]);
+        let w = b.param("w", &[32, 32]);
+        let mut cur = x;
+        for _ in 0..6 {
+            cur = b.matmul(cur, w);
+        }
+        let g = b.finish(vec![cur]);
+        let plan = plan_memory(&g, &[]);
+        assert_eq!(plan.planned_peak_bytes, 2 * 32 * 32 * 4);
+        assert!(plan.slots.len() <= 2, "{} slots", plan.slots.len());
+        assert!(plan.reuse_ratio() >= 2.9, "{}", plan.reuse_ratio());
+    }
+
+    #[test]
+    fn planner_is_deterministic() {
+        let g = crate::models::gpt(&crate::models::GptConfig {
+            seq: 64,
+            layers: 1,
+            ..Default::default()
+        });
+        let a = describe_memplan(&plan_memory(&g, &[]));
+        let b = describe_memplan(&plan_memory(&g, &[]));
+        assert_eq!(a, b);
+    }
+}

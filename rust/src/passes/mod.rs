@@ -15,12 +15,15 @@
 pub mod estimate;
 pub mod expert;
 pub mod flow;
+pub mod memplan;
 pub mod search;
 pub mod select;
 
 pub use estimate::{
-    cost_quote, estimate, estimate_under_plan, peak_upper_bound, CostQuote, MemoryProfile,
+    cost_quote, estimate, estimate_under_plan, peak_upper_bound, planner_gap, CostQuote,
+    MemoryProfile, PlannerGap,
 };
+pub use memplan::{describe_memplan, plan_memory, MemPlan, RegionMemPlan, ValueAction};
 pub use search::{search_chunks, ChunkCandidate, SearchConfig};
 pub use select::{select_chunks, SelectConfig};
 

@@ -18,6 +18,8 @@ use super::{region_owner, ChunkPlan};
 use crate::exec::{execute_node, ExecStats};
 use crate::ir::{Graph, Node, NodeId, Op};
 use crate::passes::estimate::{cost_quote, estimate_under_plan, per_chunk_bytes, CostQuote};
+use crate::exec::arena::ArenaStores;
+use crate::passes::memplan::{plan_memory, MemPlan};
 use crate::tensor::{contiguous_strides, MemoryTracker, Tensor};
 use crate::util::pool;
 use std::collections::HashMap;
@@ -33,6 +35,18 @@ pub struct ExecOptions {
     /// against; kernel-level parallelism still applies inside each
     /// iteration.
     pub budget_bytes: Option<usize>,
+    /// Run through the planned-allocation arena executor
+    /// ([`crate::exec::execute_arena`]) instead of the per-op-allocating
+    /// interpreter. Bitwise-identical results; exact memory accounting
+    /// and no hot-path allocation (DESIGN.md §12).
+    pub use_arena: bool,
+}
+
+/// Process-default arena mode from `AUTOCHUNK_ARENA` (`1` routes serving
+/// through the arena executor — the CI matrix's second leg).
+pub fn arena_default() -> bool {
+    static ENV: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *ENV.get_or_init(|| std::env::var("AUTOCHUNK_ARENA").map(|v| v == "1").unwrap_or(false))
 }
 
 /// A compiled, shareable execution plan: graph + chunk strategy + bound
@@ -51,6 +65,13 @@ struct PlanInner {
     plans: Vec<ChunkPlan>,
     params: Vec<Tensor>,
     quote: CostQuote,
+    /// Static memory plan (liveness, slots, exact peak) — compiled once
+    /// with the chunk strategy and shared by every request in the bucket.
+    mem: MemPlan,
+    /// Recycled slot storage (outer arena + per-region lane stores)
+    /// shared across this handle's executions: the steady-state serving
+    /// path performs zero fresh allocations.
+    stores: ArenaStores,
 }
 
 impl PlanHandle {
@@ -58,6 +79,8 @@ impl PlanHandle {
     /// (untracked: parameter memory is outside activation accounting).
     pub fn new(tag: &str, graph: Graph, plans: Vec<ChunkPlan>, params: Vec<Tensor>) -> PlanHandle {
         let quote = cost_quote(&graph, &plans);
+        let mem = plan_memory(&graph, &plans);
+        let stores = ArenaStores::for_plan(&mem);
         PlanHandle {
             inner: Arc::new(PlanInner {
                 tag: tag.to_string(),
@@ -65,6 +88,8 @@ impl PlanHandle {
                 plans,
                 params,
                 quote,
+                mem,
+                stores,
             }),
         }
     }
@@ -86,20 +111,44 @@ impl PlanHandle {
         &self.inner.quote
     }
 
+    /// The static memory plan compiled alongside the chunk strategy.
+    pub fn memplan(&self) -> &MemPlan {
+        &self.inner.mem
+    }
+
+    /// This handle's shared slot-storage caches (outer + lane stores).
+    pub fn arena_stores(&self) -> &ArenaStores {
+        &self.inner.stores
+    }
+
     /// Largest chunk count across the handle's plans (1 when unchunked).
     pub fn n_chunks_max(&self) -> usize {
         self.inner.plans.iter().map(|p| p.n_chunks).max().unwrap_or(1)
     }
 
-    /// Execute one request's inputs through the compiled plan. Unchunked
-    /// handles run the plain interpreter; chunked ones the chunked
-    /// executor with `opts` (budget-aware chunk concurrency).
+    /// Execute one request's inputs through the compiled plan. With
+    /// `opts.use_arena` the planned-allocation executor runs against this
+    /// handle's shared storage cache; otherwise unchunked handles run the
+    /// plain interpreter and chunked ones the chunked executor (both with
+    /// budget-aware chunk concurrency).
     pub fn execute(
         &self,
         inputs: &[Tensor],
         tracker: &MemoryTracker,
         opts: &ExecOptions,
     ) -> (Vec<Tensor>, ExecStats) {
+        if opts.use_arena {
+            return crate::exec::execute_arena(
+                &self.inner.graph,
+                &self.inner.plans,
+                inputs,
+                &self.inner.params,
+                &self.inner.mem,
+                Some(&self.inner.stores),
+                tracker,
+                opts,
+            );
+        }
         if self.inner.plans.is_empty() {
             crate::exec::execute(&self.inner.graph, inputs, &self.inner.params, tracker)
         } else {
@@ -185,6 +234,13 @@ pub fn execute_chunked_opts(
     for p in plans {
         debug_assert!(p.validate(graph).is_ok(), "{:?}", p.validate(graph));
     }
+    if opts.use_arena {
+        // One-off arena run (no cached plan/storage): plan and execute.
+        let mem = plan_memory(graph, plans);
+        return crate::exec::execute_arena(
+            graph, plans, inputs, params, &mem, None, tracker, opts,
+        );
+    }
     // The governor prices concurrency against the serial chunked peak.
     let peak_estimate = opts
         .budget_bytes
@@ -199,21 +255,9 @@ pub fn execute_chunked_opts(
     let owner = region_owner(plans, graph.len());
 
     // A region becomes runnable once all of its declared inputs are
-    // computed. Inputs may have ids *after* the region head (hoisted nodes,
-    // in-range constants), so each plan triggers at the max input id (or
-    // its head, whichever is later in the schedule).
-    let mut trigger: HashMap<NodeId, Vec<usize>> = HashMap::new();
-    for (pi, p) in plans.iter().enumerate() {
-        let max_input = p
-            .chunk_inputs
-            .iter()
-            .map(|&(i, _)| i)
-            .chain(p.pass_inputs.iter().copied())
-            .max()
-            .unwrap_or(0);
-        let at = max_input.max(p.region[0].saturating_sub(1));
-        trigger.entry(at).or_default().push(pi);
-    }
+    // computed (shared schedule helper — the memory planner walks the
+    // same trigger points).
+    let trigger: HashMap<NodeId, Vec<usize>> = super::region_triggers(plans);
 
     let mut values: Vec<Option<Tensor>> = vec![None; graph.len()];
     for (pos, &id) in graph.inputs.iter().enumerate() {
@@ -492,8 +536,9 @@ fn execute_region(
 }
 
 /// Ops whose output shape is baked into the node need the chunk dim scaled
-/// to the current slice length (Reshape/Broadcast targets).
-fn adjust_node(node: &Node, chunk_dim: usize, len: usize) -> Option<Node> {
+/// to the current slice length (Reshape/Broadcast targets). Shared with
+/// the arena executor's lane loop.
+pub(crate) fn adjust_node(node: &Node, chunk_dim: usize, len: usize) -> Option<Node> {
     match &node.op {
         Op::Reshape | Op::Broadcast { .. } => {
             if node.shape[chunk_dim] == len {

@@ -11,7 +11,8 @@
 pub mod exec_chunked;
 
 pub use exec_chunked::{
-    execute_chunked, execute_chunked_opts, governed_degree, ExecOptions, PlanHandle,
+    arena_default, execute_chunked, execute_chunked_opts, governed_degree, ExecOptions,
+    PlanHandle,
 };
 
 use crate::ir::{Graph, NodeId};
@@ -169,6 +170,27 @@ pub fn describe_plans(graph: &Graph, plans: &[ChunkPlan]) -> String {
         }
     }
     s
+}
+
+/// At which node id each plan's region fires during the main executor
+/// walk: the point where all of its declared inputs are computed (inputs
+/// may have ids *after* the region head — hoisted nodes, in-range
+/// constants). Shared by the chunked executors and the static memory
+/// planner so their schedules agree exactly.
+pub fn region_triggers(plans: &[ChunkPlan]) -> HashMap<NodeId, Vec<usize>> {
+    let mut trigger: HashMap<NodeId, Vec<usize>> = HashMap::new();
+    for (pi, p) in plans.iter().enumerate() {
+        let max_input = p
+            .chunk_inputs
+            .iter()
+            .map(|&(i, _)| i)
+            .chain(p.pass_inputs.iter().copied())
+            .max()
+            .unwrap_or(0);
+        let at = max_input.max(p.region[0].saturating_sub(1));
+        trigger.entry(at).or_default().push(pi);
+    }
+    trigger
 }
 
 /// True if two plans' regions overlap (plans must be disjoint).

@@ -1,4 +1,4 @@
-//! Instrumented allocation tracking.
+//! Instrumented allocation tracking and the planned-allocation arena.
 //!
 //! Every tensor buffer is registered with a [`MemoryTracker`]. The tracker
 //! maintains the number of live activation bytes and its high-water mark,
@@ -8,9 +8,18 @@
 //! Buffers deregister on `Drop`, so peak tracking falls out of normal Rust
 //! ownership: the executor drops a value when its last consumer has run, the
 //! buffer frees, and `current` decreases.
+//!
+//! The [`Arena`] is the runtime half of the static memory planner
+//! (`passes::memplan`, DESIGN.md §12): the planner assigns every
+//! materialized intermediate an offset range (*slot*) in a single arena;
+//! at execution time the arena hands out recycled backing storage per slot
+//! and accounts live bytes at the *planned* slot size, so its high-water
+//! mark is exactly the planner's `planned_peak_bytes` — and after the
+//! first execution the hot path performs no per-op allocation at all
+//! (slot storage is cached in an [`ArenaStore`] and reused).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Shared counters behind a [`MemoryTracker`] handle.
 #[derive(Debug, Default)]
@@ -93,6 +102,31 @@ impl MemoryTracker {
     pub(crate) fn on_free(&self, bytes: usize) {
         self.inner.current.fetch_sub(bytes, Ordering::Relaxed);
     }
+
+    /// Register arena-slot bytes as live without counting allocator
+    /// traffic: the backing storage is recycled slot storage, not a fresh
+    /// allocation, so `allocs`/`total_allocated` must not move — they are
+    /// the allocator-churn signal the arena exists to eliminate.
+    pub(crate) fn on_bind(&self, bytes: usize) {
+        let prev = self.inner.current.fetch_add(bytes, Ordering::Relaxed);
+        let now = prev + bytes;
+        let mut peak = self.inner.peak.load(Ordering::Relaxed);
+        while now > peak {
+            match self.inner.peak.compare_exchange_weak(
+                peak,
+                now,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(p) => peak = p,
+            }
+        }
+    }
+
+    pub(crate) fn on_unbind(&self, bytes: usize) {
+        self.inner.current.fetch_sub(bytes, Ordering::Relaxed);
+    }
 }
 
 /// Raw storage for tensor elements.
@@ -122,13 +156,255 @@ impl Storage {
     }
 }
 
+/// One planned allocation: a byte range inside the arena. Produced by the
+/// static memory planner's best-fit interval assignment; two values whose
+/// live ranges do not overlap may be assigned the same slot (buffer reuse).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlotSpec {
+    /// Byte offset of the slot inside the arena.
+    pub offset: usize,
+    /// Planned capacity in bytes. Accounting always charges this full
+    /// amount, even when a short chunk tail writes fewer bytes — a real
+    /// slab reserves the slot regardless.
+    pub bytes: usize,
+}
+
+/// Cached backing storage per slot, shared across executions so a plan
+/// re-run (the serving hot path) performs zero fresh allocations. Safe to
+/// share between concurrent executions of the same plan: a concurrent run
+/// finding a slot's cache empty simply allocates fresh storage.
+#[derive(Clone, Debug)]
+pub struct ArenaStore {
+    inner: Arc<StoreInner>,
+}
+
+#[derive(Debug)]
+struct StoreInner {
+    cache: Vec<Mutex<Vec<Storage>>>,
+    /// Fresh backing allocations performed (cold misses).
+    fresh: AtomicUsize,
+    /// Acquires served from the cache (the churn the arena removes).
+    reused: AtomicUsize,
+}
+
+impl ArenaStore {
+    pub fn new(n_slots: usize) -> ArenaStore {
+        ArenaStore {
+            inner: Arc::new(StoreInner {
+                cache: (0..n_slots).map(|_| Mutex::new(Vec::new())).collect(),
+                fresh: AtomicUsize::new(0),
+                reused: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.inner.cache.len()
+    }
+
+    /// Fresh backing allocations performed so far (across all runs).
+    pub fn fresh_allocs(&self) -> usize {
+        self.inner.fresh.load(Ordering::Relaxed)
+    }
+
+    /// Acquires served by recycled storage so far.
+    pub fn reuses(&self) -> usize {
+        self.inner.reused.load(Ordering::Relaxed)
+    }
+}
+
+/// Runtime view of one execution over a planned arena: per-run live/peak
+/// accounting (at planned slot sizes) over an [`ArenaStore`]'s recycled
+/// storage. The high-water mark of a run that follows the plan equals the
+/// planner's `planned_peak_bytes` exactly — the property
+/// `rust/tests/memplan_exact.rs` pins.
+#[derive(Clone, Debug)]
+pub struct Arena {
+    inner: Arc<ArenaInner>,
+}
+
+#[derive(Debug)]
+struct ArenaInner {
+    slots: Vec<SlotSpec>,
+    store: ArenaStore,
+    live: AtomicUsize,
+    high: AtomicUsize,
+    acquires: AtomicUsize,
+    /// Per-run fresh-allocation count — unlike the store's monotonic
+    /// counters, concurrent runs sharing a store do not see each other's
+    /// traffic here.
+    fresh: AtomicUsize,
+    /// Per-run cache-served acquire count.
+    reused: AtomicUsize,
+}
+
+impl Arena {
+    /// Arena over `slots` with a private (fresh) storage cache.
+    pub fn new(slots: Vec<SlotSpec>) -> Arena {
+        let store = ArenaStore::new(slots.len());
+        Arena::with_store(slots, store)
+    }
+
+    /// Arena over `slots` backed by a shared store (plan-cache hot path).
+    /// `store.n_slots()` must match `slots.len()`.
+    pub fn with_store(slots: Vec<SlotSpec>, store: ArenaStore) -> Arena {
+        assert_eq!(store.n_slots(), slots.len(), "store/slot arity");
+        Arena {
+            inner: Arc::new(ArenaInner {
+                slots,
+                store,
+                live: AtomicUsize::new(0),
+                high: AtomicUsize::new(0),
+                acquires: AtomicUsize::new(0),
+                fresh: AtomicUsize::new(0),
+                reused: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    pub fn slot_count(&self) -> usize {
+        self.inner.slots.len()
+    }
+
+    pub fn slot_bytes(&self, slot: usize) -> usize {
+        self.inner.slots[slot].bytes
+    }
+
+    /// Total byte footprint a contiguous slab for this plan would reserve
+    /// (max `offset + bytes` over slots).
+    pub fn footprint(&self) -> usize {
+        self.inner
+            .slots
+            .iter()
+            .map(|s| s.offset + s.bytes)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Live planned bytes right now.
+    pub fn live(&self) -> usize {
+        self.inner.live.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of live planned bytes over this run.
+    pub fn high_water(&self) -> usize {
+        self.inner.high.load(Ordering::Relaxed)
+    }
+
+    pub fn acquires(&self) -> usize {
+        self.inner.acquires.load(Ordering::Relaxed)
+    }
+
+    /// Fresh backing allocations performed by *this run* (cold misses).
+    pub fn fresh_allocs(&self) -> usize {
+        self.inner.fresh.load(Ordering::Relaxed)
+    }
+
+    /// Acquires served from the cache by *this run*.
+    pub fn reuses(&self) -> usize {
+        self.inner.reused.load(Ordering::Relaxed)
+    }
+
+    pub fn store(&self) -> &ArenaStore {
+        &self.inner.store
+    }
+
+    fn count_acquire(&self, slot: usize) {
+        let bytes = self.inner.slots[slot].bytes;
+        self.inner.acquires.fetch_add(1, Ordering::Relaxed);
+        let prev = self.inner.live.fetch_add(bytes, Ordering::Relaxed);
+        let now = prev + bytes;
+        let mut high = self.inner.high.load(Ordering::Relaxed);
+        while now > high {
+            match self.inner.high.compare_exchange_weak(
+                high,
+                now,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(h) => high = h,
+            }
+        }
+    }
+
+    /// Take zeroed f32 storage of `len` elements for `slot`, charging the
+    /// slot's planned bytes. `len * 4` must not exceed the planned size
+    /// (short chunk tails write less; nothing writes more).
+    pub fn acquire_f32(&self, slot: usize, len: usize) -> Vec<f32> {
+        assert!(
+            len * 4 <= self.inner.slots[slot].bytes,
+            "slot {slot} acquire {} bytes exceeds planned {}",
+            len * 4,
+            self.inner.slots[slot].bytes
+        );
+        self.count_acquire(slot);
+        let cached = self.inner.store.inner.cache[slot].lock().unwrap().pop();
+        match cached {
+            Some(Storage::F32(mut v)) => {
+                self.inner.store.inner.reused.fetch_add(1, Ordering::Relaxed);
+                self.inner.reused.fetch_add(1, Ordering::Relaxed);
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            other => {
+                // dtype-mismatched cached storage is simply dropped
+                drop(other);
+                self.inner.store.inner.fresh.fetch_add(1, Ordering::Relaxed);
+                self.inner.fresh.fetch_add(1, Ordering::Relaxed);
+                vec![0.0f32; len]
+            }
+        }
+    }
+
+    /// As [`Arena::acquire_f32`] for i32 storage.
+    pub fn acquire_i32(&self, slot: usize, len: usize) -> Vec<i32> {
+        assert!(
+            len * 4 <= self.inner.slots[slot].bytes,
+            "slot {slot} acquire {} bytes exceeds planned {}",
+            len * 4,
+            self.inner.slots[slot].bytes
+        );
+        self.count_acquire(slot);
+        let cached = self.inner.store.inner.cache[slot].lock().unwrap().pop();
+        match cached {
+            Some(Storage::I32(mut v)) => {
+                self.inner.store.inner.reused.fetch_add(1, Ordering::Relaxed);
+                self.inner.reused.fetch_add(1, Ordering::Relaxed);
+                v.clear();
+                v.resize(len, 0);
+                v
+            }
+            other => {
+                drop(other);
+                self.inner.store.inner.fresh.fetch_add(1, Ordering::Relaxed);
+                self.inner.fresh.fetch_add(1, Ordering::Relaxed);
+                vec![0i32; len]
+            }
+        }
+    }
+
+    /// Return a slot's storage to the cache and release its planned bytes.
+    pub(crate) fn release(&self, slot: usize, storage: Storage) {
+        let bytes = self.inner.slots[slot].bytes;
+        self.inner.live.fetch_sub(bytes, Ordering::Relaxed);
+        self.inner.store.inner.cache[slot].lock().unwrap().push(storage);
+    }
+}
+
 /// A tracked, reference-counted buffer. Dropping the last reference
-/// deregisters the bytes from the tracker.
+/// deregisters the bytes from the tracker (and, for arena-backed buffers,
+/// returns the storage to its slot).
 #[derive(Debug)]
 pub struct Buffer {
     pub(crate) storage: Storage,
     tracker: Option<MemoryTracker>,
     bytes: usize,
+    /// Arena backing: (arena, slot). Set for planner-allocated buffers;
+    /// `bytes` then holds the *planned* slot size, and the tracker charge
+    /// went through `on_bind` rather than `on_alloc`.
+    arena: Option<(Arena, usize)>,
 }
 
 impl Buffer {
@@ -142,7 +418,64 @@ impl Buffer {
             storage,
             tracker,
             bytes,
+            arena: None,
         })
+    }
+
+    /// Wrap storage acquired from `arena` slot `slot`. The arena already
+    /// counted the acquire; the tracker is charged the planned slot bytes
+    /// via `on_bind` (live/peak only — no allocator traffic).
+    pub(crate) fn new_arena(
+        storage: Storage,
+        arena: Arena,
+        slot: usize,
+        tracker: Option<MemoryTracker>,
+    ) -> Arc<Self> {
+        let bytes = arena.slot_bytes(slot);
+        if let Some(t) = &tracker {
+            t.on_bind(bytes);
+        }
+        Arc::new(Buffer {
+            storage,
+            tracker,
+            bytes,
+            arena: Some((arena, slot)),
+        })
+    }
+
+    /// Re-wrap storage taken from a dying arena buffer (in-place compute):
+    /// no counters move — the original acquire/bind stays live and this
+    /// buffer's drop performs the single matching release/unbind.
+    pub(crate) fn adopt_arena(
+        storage: Storage,
+        arena: Arena,
+        slot: usize,
+        tracker: Option<MemoryTracker>,
+    ) -> Arc<Self> {
+        let bytes = arena.slot_bytes(slot);
+        Arc::new(Buffer {
+            storage,
+            tracker,
+            bytes,
+            arena: Some((arena, slot)),
+        })
+    }
+
+    /// Disarm this buffer and hand out its parts for in-place reuse. The
+    /// subsequent `Drop` of the emptied shell is a no-op.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn take_for_inplace(
+        mut self,
+    ) -> (Storage, Option<(Arena, usize)>, Option<MemoryTracker>) {
+        let storage = std::mem::replace(&mut self.storage, Storage::F32(Vec::new()));
+        let arena = self.arena.take();
+        let tracker = self.tracker.take();
+        (storage, arena, tracker)
+    }
+
+    /// True if this buffer is backed by the given arena slot.
+    pub(crate) fn arena_slot(&self) -> Option<usize> {
+        self.arena.as_ref().map(|&(_, s)| s)
     }
 
     pub fn f32(&self) -> &[f32] {
@@ -162,8 +495,19 @@ impl Buffer {
 
 impl Drop for Buffer {
     fn drop(&mut self) {
-        if let Some(t) = &self.tracker {
-            t.on_free(self.bytes);
+        match self.arena.take() {
+            Some((arena, slot)) => {
+                if let Some(t) = &self.tracker {
+                    t.on_unbind(self.bytes);
+                }
+                let storage = std::mem::replace(&mut self.storage, Storage::F32(Vec::new()));
+                arena.release(slot, storage);
+            }
+            None => {
+                if let Some(t) = &self.tracker {
+                    t.on_free(self.bytes);
+                }
+            }
         }
     }
 }
@@ -208,6 +552,68 @@ mod tests {
         let t = MemoryTracker::new();
         let _b = Buffer::new(Storage::F32(vec![0.0; 64]), None);
         assert_eq!(t.current(), 0);
+    }
+
+    #[test]
+    fn arena_accounts_planned_bytes_and_recycles() {
+        let arena = Arena::new(vec![
+            SlotSpec { offset: 0, bytes: 64 },
+            SlotSpec { offset: 64, bytes: 128 },
+        ]);
+        assert_eq!(arena.footprint(), 192);
+        let v0 = arena.acquire_f32(0, 16);
+        assert_eq!(v0.len(), 16);
+        assert_eq!(arena.live(), 64);
+        // short acquire still charges the planned size
+        let v1 = arena.acquire_f32(1, 8);
+        assert_eq!(arena.live(), 64 + 128);
+        assert_eq!(arena.high_water(), 192);
+        assert_eq!(arena.store().fresh_allocs(), 2);
+        arena.release(0, Storage::F32(v0));
+        arena.release(1, Storage::F32(v1));
+        assert_eq!(arena.live(), 0);
+        assert_eq!(arena.high_water(), 192, "high water is sticky");
+        // second round comes from the cache
+        let v0 = arena.acquire_f32(0, 16);
+        assert!(v0.iter().all(|&x| x == 0.0), "recycled storage is zeroed");
+        assert_eq!(arena.store().fresh_allocs(), 2);
+        assert_eq!(arena.store().reuses(), 1);
+        arena.release(0, Storage::F32(v0));
+    }
+
+    #[test]
+    fn arena_buffer_binds_tracker_without_alloc_traffic() {
+        let t = MemoryTracker::new();
+        let arena = Arena::new(vec![SlotSpec { offset: 0, bytes: 400 }]);
+        let v = arena.acquire_f32(0, 100);
+        let b = Buffer::new_arena(Storage::F32(v), arena.clone(), 0, Some(t.clone()));
+        assert_eq!(t.current(), 400);
+        assert_eq!(t.peak(), 400);
+        assert_eq!(t.alloc_count(), 0, "arena binds are not allocator traffic");
+        assert_eq!(t.total_allocated(), 0);
+        drop(b);
+        assert_eq!(t.current(), 0);
+        assert_eq!(arena.live(), 0, "drop returned the slot");
+        // storage landed back in the cache
+        let v = arena.acquire_f32(0, 100);
+        assert_eq!(arena.store().reuses(), 1);
+        arena.release(0, Storage::F32(v));
+    }
+
+    #[test]
+    fn shared_arena_store_survives_runs() {
+        let slots = vec![SlotSpec { offset: 0, bytes: 40 }];
+        let store = ArenaStore::new(1);
+        let run1 = Arena::with_store(slots.clone(), store.clone());
+        let v = run1.acquire_f32(0, 10);
+        run1.release(0, Storage::F32(v));
+        let run2 = Arena::with_store(slots, store.clone());
+        let v = run2.acquire_f32(0, 10);
+        assert_eq!(store.fresh_allocs(), 1);
+        assert_eq!(store.reuses(), 1);
+        assert_eq!(run2.high_water(), 40);
+        assert_eq!(run1.high_water(), 40, "runs account independently");
+        run2.release(0, Storage::F32(v));
     }
 
     #[test]

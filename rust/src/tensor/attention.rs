@@ -13,14 +13,18 @@ use crate::util::pool;
 /// Key/value block length for the streaming pass.
 pub const KV_BLOCK: usize = 64;
 
-/// Batched fused attention. `q: [..b, sq, d]`, `k,v: [..b, skv, d]`.
-pub fn fused_attention(
+/// Core of [`fused_attention`]: streams into `out` (length batch·sq·dv),
+/// returning the output shape. Broadcast/contiguity materialization of
+/// q/k/v remains transient workspace on `tracker`; the per-row running
+/// max/denominator/score scratch is untracked worker-local state.
+pub fn fused_attention_into(
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
     scale: f32,
+    out: &mut [f32],
     tracker: Option<MemoryTracker>,
-) -> Tensor {
+) -> Vec<usize> {
     assert!(q.rank() >= 2);
     let rank = q.rank();
     let (sq, d) = (q.shape()[rank - 2], q.shape()[rank - 1]);
@@ -43,12 +47,12 @@ pub fn fused_attention(
     vs.extend_from_slice(&[skv, dv]);
     let qc = q.broadcast_to(&qs).to_contiguous(tracker.clone());
     let kc = k.broadcast_to(&ks).to_contiguous(tracker.clone());
-    let vc = v.broadcast_to(&vs).to_contiguous(tracker.clone());
+    let vc = v.broadcast_to(&vs).to_contiguous(tracker);
     let qv = qc.f32_contiguous();
     let kv = kc.f32_contiguous();
     let vv = vc.f32_contiguous();
 
-    let mut out = vec![0.0f32; batch * sq * dv];
+    assert_eq!(out.len(), batch * sq * dv, "fused_attention_into length");
     // Every query row's online-softmax stream is independent of every
     // other row, so rows partition over the pool *within* each batch
     // element; each worker carries its own running max/denominator and
@@ -121,6 +125,28 @@ pub fn fused_attention(
 
     let mut out_shape = batch_shape;
     out_shape.extend_from_slice(&[sq, dv]);
+    out_shape
+}
+
+/// Batched fused attention. `q: [..b, sq, d]`, `k,v: [..b, skv, d]`.
+pub fn fused_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    scale: f32,
+    tracker: Option<MemoryTracker>,
+) -> Tensor {
+    let rank = q.rank();
+    let (sq, dv) = (q.shape()[rank - 2], v.shape()[v.rank() - 1]);
+    let batch: usize = broadcast_shapes(
+        &broadcast_shapes(&q.shape()[..rank - 2], &k.shape()[..k.rank() - 2]),
+        &v.shape()[..v.rank() - 2],
+    )
+    .iter()
+    .product::<usize>()
+    .max(1);
+    let mut out = vec![0.0f32; batch * sq * dv];
+    let out_shape = fused_attention_into(q, k, v, scale, &mut out, tracker.clone());
     Tensor::from_f32(out, &out_shape, tracker)
 }
 

@@ -9,15 +9,18 @@ use super::matmul::matmul;
 use super::{MemoryTracker, Tensor};
 use crate::util::pool;
 
-/// `x: [N, Cin, H, W]`, `w: [Cout, Cin, Kh, Kw]` → `[N, Cout, Ho, Wo]`.
-/// Symmetric zero padding `pad`, stride `stride`.
-pub fn conv2d(
+/// Core of [`conv2d`]: computes into `out` (length N·Cout·Ho·Wo),
+/// returning the output shape. The im2col matrix, the pre-permute GEMM
+/// result and any input materialization remain transient workspace on
+/// `tracker`.
+pub fn conv2d_into(
     x: &Tensor,
     w: &Tensor,
     stride: usize,
     pad: usize,
+    out: &mut [f32],
     tracker: Option<MemoryTracker>,
-) -> Tensor {
+) -> Vec<usize> {
     assert_eq!(x.rank(), 4, "conv2d input must be NCHW");
     assert_eq!(w.rank(), 4, "conv2d weight must be OIHW");
     let (n, cin, h, wd) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
@@ -75,25 +78,45 @@ pub fn conv2d(
     let wt = w
         .reshape(&[cout, cols_width], tracker.clone())
         .permute(&[1, 0]);
-    let out = matmul(&cols_t, &wt, tracker.clone()); // [rows, Cout]
+    let mm = matmul(&cols_t, &wt, tracker.clone()); // [rows, Cout]
 
     // [N, Ho, Wo, Cout] → [N, Cout, Ho, Wo]
-    out.reshape(&[n, ho, wo, cout], tracker.clone())
+    assert_eq!(out.len(), n * cout * ho * wo, "conv2d_into length mismatch");
+    mm.reshape(&[n, ho, wo, cout], tracker)
         .permute(&[0, 3, 1, 2])
-        .to_contiguous(tracker)
+        .copy_into_f32(out);
+    vec![n, cout, ho, wo]
 }
 
-/// 2×2 average pool, stride 2 (UNet downsampling).
-pub fn avgpool2x_nchw(x: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+/// `x: [N, Cin, H, W]`, `w: [Cout, Cin, Kh, Kw]` → `[N, Cout, Ho, Wo]`.
+/// Symmetric zero padding `pad`, stride `stride`.
+pub fn conv2d(
+    x: &Tensor,
+    w: &Tensor,
+    stride: usize,
+    pad: usize,
+    tracker: Option<MemoryTracker>,
+) -> Tensor {
+    let (h, wd) = (x.shape()[2], x.shape()[3]);
+    let (cout, kh, kw) = (w.shape()[0], w.shape()[2], w.shape()[3]);
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (wd + 2 * pad - kw) / stride + 1;
+    let mut out = vec![0.0f32; x.shape()[0] * cout * ho * wo];
+    let out_shape = conv2d_into(x, w, stride, pad, &mut out, tracker.clone());
+    Tensor::from_f32(out, &out_shape, tracker)
+}
+
+/// Core of [`avgpool2x_nchw`]: pools into `out`, returning the shape.
+pub fn avgpool2x_into(x: &Tensor, out: &mut [f32], tracker: Option<MemoryTracker>) -> Vec<usize> {
     assert_eq!(x.rank(), 4);
     let (n, c, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
     assert!(h % 2 == 0 && w % 2 == 0, "avgpool2x needs even spatial dims");
     let (oh, ow) = (h / 2, w / 2);
-    let xc = x.to_contiguous(tracker.clone());
+    assert_eq!(out.len(), n * c * oh * ow, "avgpool_into length mismatch");
+    let xc = x.to_contiguous(tracker);
     let xv = xc.f32_contiguous();
-    let mut out = vec![0.0f32; n * c * oh * ow];
     // One task per (n, c) plane — planes are disjoint output slabs.
-    pool::par_rows(&mut out, n * c, oh * ow, n * c * h * w, |p0, p1, slab| {
+    pool::par_rows(out, n * c, oh * ow, n * c * h * w, |p0, p1, slab| {
         for p in p0..p1 {
             let sbase = p * h * w;
             let plane = &mut slab[(p - p0) * oh * ow..(p - p0 + 1) * oh * ow];
@@ -106,7 +129,14 @@ pub fn avgpool2x_nchw(x: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
             }
         }
     });
-    Tensor::from_f32(out, &[n, c, oh, ow], tracker)
+    vec![n, c, oh, ow]
+}
+
+/// 2×2 average pool, stride 2 (UNet downsampling).
+pub fn avgpool2x_nchw(x: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+    let mut out = vec![0.0f32; x.numel() / 4];
+    let out_shape = avgpool2x_into(x, &mut out, tracker.clone());
+    Tensor::from_f32(out, &out_shape, tracker)
 }
 
 #[cfg(test)]

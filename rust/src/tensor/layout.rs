@@ -7,8 +7,9 @@
 
 use super::{contiguous_strides, DType, MemoryTracker, Tensor};
 
-/// Concatenate tensors along `axis`. All shapes must match except `axis`.
-pub fn concat(parts: &[Tensor], axis: usize, tracker: Option<MemoryTracker>) -> Tensor {
+/// Output shape of concatenating `parts` along `axis` (validates ranks
+/// and non-axis extents).
+pub fn concat_shape(parts: &[Tensor], axis: usize) -> Vec<usize> {
     assert!(!parts.is_empty(), "concat of nothing");
     let rank = parts[0].rank();
     assert!(axis < rank);
@@ -24,9 +25,21 @@ pub fn concat(parts: &[Tensor], axis: usize, tracker: Option<MemoryTracker>) -> 
         total += p.shape()[axis];
     }
     out_shape[axis] = total;
+    out_shape
+}
 
+/// Core of [`concat`]: joins `parts` along `axis` into `out` and returns
+/// the output shape. Non-contiguous parts are materialized transiently on
+/// `tracker` before their copy.
+pub fn concat_into(
+    parts: &[Tensor],
+    axis: usize,
+    out: &mut [f32],
+    tracker: Option<MemoryTracker>,
+) -> Vec<usize> {
+    let out_shape = concat_shape(parts, axis);
     let n = super::numel(&out_shape);
-    let mut out = vec![0.0f32; n];
+    assert_eq!(out.len(), n, "concat_into length mismatch");
 
     // Copy each part row-block by row-block. `outer` indexes everything
     // before `axis`; for each outer index, each part contributes a
@@ -46,6 +59,14 @@ pub fn concat(parts: &[Tensor], axis: usize, tracker: Option<MemoryTracker>) -> 
         }
         axis_off += p_axis;
     }
+    out_shape
+}
+
+/// Concatenate tensors along `axis`. All shapes must match except `axis`.
+pub fn concat(parts: &[Tensor], axis: usize, tracker: Option<MemoryTracker>) -> Tensor {
+    let shape = concat_shape(parts, axis);
+    let mut out = vec![0.0f32; super::numel(&shape)];
+    let out_shape = concat_into(parts, axis, &mut out, tracker.clone());
     Tensor::from_f32(out, &out_shape, tracker)
 }
 
@@ -84,23 +105,36 @@ pub fn pad(a: &Tensor, padding: &[(usize, usize)], tracker: Option<MemoryTracker
     Tensor::from_f32(out, &out_shape, tracker)
 }
 
-/// Embedding lookup: `table: [V, D]`, `ids: i32 [..]` → `[.., D]`.
-pub fn gather_rows(table: &Tensor, ids: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+/// Core of [`gather_rows`]: looks rows up into `out`, returning the
+/// output shape.
+pub fn gather_rows_into(
+    table: &Tensor,
+    ids: &Tensor,
+    out: &mut [f32],
+    tracker: Option<MemoryTracker>,
+) -> Vec<usize> {
     assert_eq!(table.rank(), 2, "gather table must be [V, D]");
     assert_eq!(ids.dtype(), DType::I32, "gather ids must be i32");
     let v = table.shape()[0];
     let d = table.shape()[1];
-    let tc = table.to_contiguous(tracker.clone());
+    let tc = table.to_contiguous(tracker);
     let tv = tc.f32_contiguous();
     let flat_ids = ids.to_vec_i32();
-    let mut out = Vec::with_capacity(flat_ids.len() * d);
-    for &id in &flat_ids {
+    assert_eq!(out.len(), flat_ids.len() * d, "gather_into length mismatch");
+    for (i, &id) in flat_ids.iter().enumerate() {
         let id = id as usize;
         assert!(id < v, "gather id {id} out of range {v}");
-        out.extend_from_slice(&tv[id * d..(id + 1) * d]);
+        out[i * d..(i + 1) * d].copy_from_slice(&tv[id * d..(id + 1) * d]);
     }
     let mut out_shape = ids.shape().to_vec();
     out_shape.push(d);
+    out_shape
+}
+
+/// Embedding lookup: `table: [V, D]`, `ids: i32 [..]` → `[.., D]`.
+pub fn gather_rows(table: &Tensor, ids: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+    let mut out = vec![0.0f32; ids.numel() * table.shape()[1]];
+    let out_shape = gather_rows_into(table, ids, &mut out, tracker.clone());
     Tensor::from_f32(out, &out_shape, tracker)
 }
 
@@ -120,13 +154,14 @@ pub fn split(a: &Tensor, axis: usize, n: usize) -> Vec<Tensor> {
     parts
 }
 
-/// Nearest-neighbor 2× spatial upsample for NCHW tensors (UNet decoder).
-pub fn upsample2x_nchw(a: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+/// Core of [`upsample2x_nchw`]: writes the upsample into `out`, returning
+/// the output shape.
+pub fn upsample2x_into(a: &Tensor, out: &mut [f32], tracker: Option<MemoryTracker>) -> Vec<usize> {
     assert_eq!(a.rank(), 4, "upsample expects NCHW");
     let (n, c, h, w) = (a.shape()[0], a.shape()[1], a.shape()[2], a.shape()[3]);
-    let ac = a.to_contiguous(tracker.clone());
+    assert_eq!(out.len(), n * c * 4 * h * w, "upsample_into length mismatch");
+    let ac = a.to_contiguous(tracker);
     let src = ac.f32_contiguous();
-    let mut out = vec![0.0f32; n * c * 4 * h * w];
     let (oh, ow) = (2 * h, 2 * w);
     for ni in 0..n {
         for ci in 0..c {
@@ -139,7 +174,14 @@ pub fn upsample2x_nchw(a: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
             }
         }
     }
-    Tensor::from_f32(out, &[n, c, oh, ow], tracker)
+    vec![n, c, oh, ow]
+}
+
+/// Nearest-neighbor 2× spatial upsample for NCHW tensors (UNet decoder).
+pub fn upsample2x_nchw(a: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+    let mut out = vec![0.0f32; a.numel() * 4];
+    let out_shape = upsample2x_into(a, &mut out, tracker.clone());
+    Tensor::from_f32(out, &out_shape, tracker)
 }
 
 #[cfg(test)]

@@ -21,8 +21,17 @@ const MC: usize = 64;
 const NC: usize = 64;
 const KC: usize = 256;
 
-/// Batched matmul with broadcasting over leading dims.
-pub fn matmul(a: &Tensor, b: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+/// Core of [`matmul`]: computes into `out` (zeroed, length batch·M·N) and
+/// returns the output shape. Operand broadcast/contiguity materialization
+/// is transient kernel workspace and still lands on `tracker`; only the
+/// output allocation moved out, which is what lets the arena executor
+/// write matmuls straight into planned slots.
+pub fn matmul_into(
+    a: &Tensor,
+    b: &Tensor,
+    out: &mut [f32],
+    tracker: Option<MemoryTracker>,
+) -> Vec<usize> {
     assert!(a.rank() >= 2 && b.rank() >= 2, "matmul needs rank >= 2");
     let (m, k) = (a.shape()[a.rank() - 2], a.shape()[a.rank() - 1]);
     let (k2, n) = (b.shape()[b.rank() - 2], b.shape()[b.rank() - 1]);
@@ -33,6 +42,7 @@ pub fn matmul(a: &Tensor, b: &Tensor, tracker: Option<MemoryTracker>) -> Tensor 
         &b.shape()[..b.rank() - 2],
     );
     let batch: usize = batch_shape.iter().product::<usize>().max(1);
+    assert_eq!(out.len(), batch * m * n, "matmul_into length mismatch");
 
     // Broadcast operands to the full batch and materialize contiguously —
     // the strided-copy cost here is real and intentional.
@@ -41,11 +51,10 @@ pub fn matmul(a: &Tensor, b: &Tensor, tracker: Option<MemoryTracker>) -> Tensor 
     let mut b_full_shape = batch_shape.clone();
     b_full_shape.extend_from_slice(&[k, n]);
     let ac = a.broadcast_to(&a_full_shape).to_contiguous(tracker.clone());
-    let bc = b.broadcast_to(&b_full_shape).to_contiguous(tracker.clone());
+    let bc = b.broadcast_to(&b_full_shape).to_contiguous(tracker);
     let av = ac.f32_contiguous();
     let bv = bc.f32_contiguous();
 
-    let mut out = vec![0.0f32; batch * m * n];
     // Task grid: (batch element, MC-row block). Slabs tile `out` exactly
     // in task order, so the pool can hand each worker its own C rows.
     let row_blocks = m.div_ceil(MC).max(1);
@@ -57,7 +66,7 @@ pub fn matmul(a: &Tensor, b: &Tensor, tracker: Option<MemoryTracker>) -> Tensor 
         }
     }
     let work = 2usize.saturating_mul(batch * m * n).saturating_mul(k);
-    pool::par_slabs(&mut out, &lens, work, |t, c_slab| {
+    pool::par_slabs(out, &lens, work, |t, c_slab| {
         let bi = t / row_blocks;
         let mm = (t % row_blocks) * MC;
         let mb = MC.min(m.saturating_sub(mm));
@@ -68,6 +77,20 @@ pub fn matmul(a: &Tensor, b: &Tensor, tracker: Option<MemoryTracker>) -> Tensor 
 
     let mut out_shape = batch_shape;
     out_shape.extend_from_slice(&[m, n]);
+    out_shape
+}
+
+/// Batched matmul with broadcasting over leading dims.
+pub fn matmul(a: &Tensor, b: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+    assert!(a.rank() >= 2 && b.rank() >= 2, "matmul needs rank >= 2");
+    let m = a.shape()[a.rank() - 2];
+    let n = b.shape()[b.rank() - 1];
+    let batch: usize = broadcast_shapes(&a.shape()[..a.rank() - 2], &b.shape()[..b.rank() - 2])
+        .iter()
+        .product::<usize>()
+        .max(1);
+    let mut out = vec![0.0f32; batch * m * n];
+    let out_shape = matmul_into(a, b, &mut out, tracker.clone());
     Tensor::from_f32(out, &out_shape, tracker)
 }
 

@@ -23,7 +23,7 @@ pub mod matmul;
 pub mod ops;
 pub mod reduce;
 
-pub use alloc::{Buffer, MemoryTracker, Storage};
+pub use alloc::{Arena, ArenaStore, Buffer, MemoryTracker, SlotSpec, Storage};
 
 use std::fmt;
 use std::sync::Arc;
@@ -142,6 +142,109 @@ impl Tensor {
             *v = idx as f32;
         }
         Tensor::from_f32(data, shape, tracker)
+    }
+
+    /// Wrap f32 storage acquired from an arena slot as a contiguous
+    /// tensor. Dropping the last reference returns the storage to the
+    /// slot's cache and releases the planned bytes.
+    pub(crate) fn from_arena_f32(
+        data: Vec<f32>,
+        shape: &[usize],
+        arena: &Arena,
+        slot: usize,
+        tracker: Option<MemoryTracker>,
+    ) -> Tensor {
+        assert_eq!(data.len(), numel(shape), "arena data/shape mismatch");
+        let strides = contiguous_strides(shape);
+        Tensor {
+            buf: Buffer::new_arena(Storage::F32(data), arena.clone(), slot, tracker),
+            shape: shape.to_vec(),
+            strides,
+            offset: 0,
+            dtype: DType::F32,
+        }
+    }
+
+    /// As [`Tensor::from_arena_f32`] for i32 storage.
+    pub(crate) fn from_arena_i32(
+        data: Vec<i32>,
+        shape: &[usize],
+        arena: &Arena,
+        slot: usize,
+        tracker: Option<MemoryTracker>,
+    ) -> Tensor {
+        assert_eq!(data.len(), numel(shape), "arena data/shape mismatch");
+        let strides = contiguous_strides(shape);
+        Tensor {
+            buf: Buffer::new_arena(Storage::I32(data), arena.clone(), slot, tracker),
+            shape: shape.to_vec(),
+            strides,
+            offset: 0,
+            dtype: DType::I32,
+        }
+    }
+
+    /// Re-wrap storage taken out of a dying arena tensor (in-place
+    /// compute): counters do not move — see [`Buffer::adopt_arena`].
+    pub(crate) fn adopt_arena_f32(
+        data: Vec<f32>,
+        shape: &[usize],
+        arena: Arena,
+        slot: usize,
+        tracker: Option<MemoryTracker>,
+    ) -> Tensor {
+        assert_eq!(data.len(), numel(shape), "arena data/shape mismatch");
+        let strides = contiguous_strides(shape);
+        Tensor {
+            buf: Buffer::adopt_arena(Storage::F32(data), arena, slot, tracker),
+            shape: shape.to_vec(),
+            strides,
+            offset: 0,
+            dtype: DType::F32,
+        }
+    }
+
+    /// Attempt to take sole ownership of this tensor's arena-backed f32
+    /// storage for in-place reuse. Succeeds only when the tensor is the
+    /// unique reference to a contiguous, offset-0, arena-slot buffer —
+    /// the conditions the memory planner verifies before authorizing an
+    /// elementwise op to compute into its dead operand. On failure the
+    /// tensor is handed back untouched.
+    #[allow(clippy::type_complexity)]
+    pub(crate) fn try_take_arena_f32(
+        self,
+    ) -> Result<(Vec<f32>, Arena, usize, Option<MemoryTracker>), Tensor> {
+        if !self.is_contiguous()
+            || self.offset != 0
+            || self.dtype != DType::F32
+            || self.buf.arena_slot().is_none()
+        {
+            return Err(self);
+        }
+        let Tensor {
+            buf,
+            shape,
+            strides,
+            offset,
+            dtype,
+        } = self;
+        match Arc::try_unwrap(buf) {
+            Ok(buffer) => {
+                let (storage, arena_slot, tracker) = buffer.take_for_inplace();
+                let (arena, slot) = arena_slot.expect("arena backing checked above");
+                match storage {
+                    Storage::F32(v) => Ok((v, arena, slot, tracker)),
+                    Storage::I32(_) => unreachable!("dtype checked above"),
+                }
+            }
+            Err(buf) => Err(Tensor {
+                buf,
+                shape,
+                strides,
+                offset,
+                dtype,
+            }),
+        }
     }
 
     /// Deterministic pseudo-random uniform values in [-scale, scale]
@@ -297,6 +400,38 @@ impl Tensor {
                 idx[i] = 0;
             }
         }
+    }
+
+    /// Write this view's elements in row-major logical order into `out`
+    /// (f32). The arena executor uses this to materialize reshapes,
+    /// converts, and permuted copies directly into planned slots.
+    pub fn copy_into_f32(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.numel(), "copy_into length mismatch");
+        if self.is_contiguous() {
+            out.copy_from_slice(self.f32_contiguous());
+            return;
+        }
+        let src = self.buf.f32();
+        let mut i = 0usize;
+        self.for_each_offset(|off| {
+            out[i] = src[off];
+            i += 1;
+        });
+    }
+
+    /// As [`Tensor::copy_into_f32`] for i32 tensors.
+    pub fn copy_into_i32(&self, out: &mut [i32]) {
+        assert_eq!(out.len(), self.numel(), "copy_into length mismatch");
+        if self.is_contiguous() {
+            out.copy_from_slice(self.i32_contiguous());
+            return;
+        }
+        let src = self.buf.i32();
+        let mut i = 0usize;
+        self.for_each_offset(|off| {
+            out[i] = src[off];
+            i += 1;
+        });
     }
 
     /// Materialize the view as a contiguous tensor on `tracker`.

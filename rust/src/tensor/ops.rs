@@ -102,10 +102,14 @@ impl UnaryOp {
     }
 }
 
-/// `out = op(a, b)` with broadcasting; result allocated on `tracker`.
-pub fn binary(op: BinaryOp, a: &Tensor, b: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+/// Core of [`binary`]: computes `op(a, b)` with broadcasting into `out`
+/// (row-major, length = numel of the broadcast shape) and returns that
+/// shape. The arena executor calls this with planned slot storage; the
+/// allocating wrapper with a fresh vec — results are bitwise identical.
+pub fn binary_into(op: BinaryOp, a: &Tensor, b: &Tensor, out: &mut [f32]) -> Vec<usize> {
     let out_shape = broadcast_shapes(a.shape(), b.shape());
     let n = super::numel(&out_shape);
+    assert_eq!(out.len(), n, "binary_into length mismatch");
 
     // Fast path: same shape, both contiguous. Monomorphized per-op loops
     // (so the compiler can vectorize) over disjoint output ranges.
@@ -116,7 +120,6 @@ pub fn binary(op: BinaryOp, a: &Tensor, b: &Tensor, tracker: Option<MemoryTracke
     {
         let av = a.f32_contiguous();
         let bv = b.f32_contiguous();
-        let mut out = vec![0.0f32; n];
         fn fill(out: &mut [f32], av: &[f32], bv: &[f32], f: impl Fn(f32, f32) -> f32 + Sync) {
             pool::par_rows(out, av.len(), 1, av.len(), |r0, _r1, slab| {
                 for (j, o) in slab.iter_mut().enumerate() {
@@ -125,15 +128,15 @@ pub fn binary(op: BinaryOp, a: &Tensor, b: &Tensor, tracker: Option<MemoryTracke
             });
         }
         match op {
-            BinaryOp::Add => fill(&mut out, av, bv, |x, y| x + y),
-            BinaryOp::Sub => fill(&mut out, av, bv, |x, y| x - y),
-            BinaryOp::Mul => fill(&mut out, av, bv, |x, y| x * y),
-            BinaryOp::Div => fill(&mut out, av, bv, |x, y| x / y),
-            BinaryOp::Max => fill(&mut out, av, bv, f32::max),
-            BinaryOp::Min => fill(&mut out, av, bv, f32::min),
-            BinaryOp::Pow => fill(&mut out, av, bv, f32::powf),
+            BinaryOp::Add => fill(out, av, bv, |x, y| x + y),
+            BinaryOp::Sub => fill(out, av, bv, |x, y| x - y),
+            BinaryOp::Mul => fill(out, av, bv, |x, y| x * y),
+            BinaryOp::Div => fill(out, av, bv, |x, y| x / y),
+            BinaryOp::Max => fill(out, av, bv, f32::max),
+            BinaryOp::Min => fill(out, av, bv, f32::min),
+            BinaryOp::Pow => fill(out, av, bv, f32::powf),
         }
-        return Tensor::from_f32(out, &out_shape, tracker);
+        return out_shape;
     }
 
     // Broadcast path: expand views then walk offsets in lockstep.
@@ -143,38 +146,122 @@ pub fn binary(op: BinaryOp, a: &Tensor, b: &Tensor, tracker: Option<MemoryTracke
     let mut b_offsets = Vec::with_capacity(n);
     bb.for_each_offset(|off| b_offsets.push(off));
     let bv = bb.buffer().f32();
-    let mut out = Vec::with_capacity(n);
     let mut i = 0usize;
     ab.for_each_offset(|off| {
-        out.push(op.apply(av[off], bv[b_offsets[i]]));
+        out[i] = op.apply(av[off], bv[b_offsets[i]]);
         i += 1;
     });
+    out_shape
+}
+
+/// `out = op(a, b)` with broadcasting; result allocated on `tracker`.
+pub fn binary(op: BinaryOp, a: &Tensor, b: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+    let n = super::numel(&broadcast_shapes(a.shape(), b.shape()));
+    let mut out = vec![0.0f32; n];
+    let out_shape = binary_into(op, a, b, &mut out);
     Tensor::from_f32(out, &out_shape, tracker)
 }
 
-/// `out = op(a)`; result allocated on `tracker`.
-pub fn unary(op: UnaryOp, a: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+/// In-place elementwise binary: the output overwrites `target`, the dying
+/// operand's contiguous storage (shape == output shape; arena in-place
+/// aliasing). `target_is_lhs` records which side the target was; `other`
+/// is the surviving operand (may broadcast), or `None` when both operands
+/// were the same value (`op(x, x)`). Per-element arithmetic is identical
+/// to [`binary_into`], so results are bitwise equal.
+pub fn binary_inplace(
+    op: BinaryOp,
+    target: &mut [f32],
+    target_shape: &[usize],
+    target_is_lhs: bool,
+    other: Option<&Tensor>,
+) {
+    let n = target.len();
+    debug_assert_eq!(n, super::numel(target_shape), "binary_inplace shape");
+    match other {
+        None => {
+            pool::par_rows(target, n, 1, n, |_r0, _r1, slab| {
+                for o in slab.iter_mut() {
+                    *o = op.apply(*o, *o);
+                }
+            });
+        }
+        Some(b) if b.shape() == target_shape && b.is_contiguous() => {
+            let bv = b.f32_contiguous();
+            pool::par_rows(target, n, 1, n, |r0, _r1, slab| {
+                for (j, o) in slab.iter_mut().enumerate() {
+                    let y = bv[r0 + j];
+                    *o = if target_is_lhs {
+                        op.apply(*o, y)
+                    } else {
+                        op.apply(y, *o)
+                    };
+                }
+            });
+        }
+        Some(b) => {
+            let bb = b.broadcast_to(target_shape);
+            let src = bb.buffer().f32();
+            let mut i = 0usize;
+            bb.for_each_offset(|off| {
+                let y = src[off];
+                target[i] = if target_is_lhs {
+                    op.apply(target[i], y)
+                } else {
+                    op.apply(y, target[i])
+                };
+                i += 1;
+            });
+        }
+    }
+}
+
+/// Core of [`unary`]: computes `op(a)` into `out` (row-major).
+pub fn unary_into(op: UnaryOp, a: &Tensor, out: &mut [f32]) {
     let n = a.numel();
+    assert_eq!(out.len(), n, "unary_into length mismatch");
     if a.is_contiguous() {
         let av = a.f32_contiguous();
-        let mut out = vec![0.0f32; n];
         // Transcendental ops are worth parallelizing at smaller sizes than
         // a plain copy-and-add — weight the work estimate accordingly.
         let weight: usize = match op {
             UnaryOp::Neg | UnaryOp::Abs | UnaryOp::Relu => 1,
             _ => 8,
         };
-        pool::par_rows(&mut out, n, 1, n.saturating_mul(weight), |r0, _r1, slab| {
+        pool::par_rows(out, n, 1, n.saturating_mul(weight), |r0, _r1, slab| {
             for (j, o) in slab.iter_mut().enumerate() {
                 *o = op.apply(av[r0 + j]);
             }
         });
-        return Tensor::from_f32(out, a.shape(), tracker);
+        return;
     }
     let src = a.buffer().f32();
-    let mut out = Vec::with_capacity(n);
-    a.for_each_offset(|off| out.push(op.apply(src[off])));
+    let mut i = 0usize;
+    a.for_each_offset(|off| {
+        out[i] = op.apply(src[off]);
+        i += 1;
+    });
+}
+
+/// `out = op(a)`; result allocated on `tracker`.
+pub fn unary(op: UnaryOp, a: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
+    let mut out = vec![0.0f32; a.numel()];
+    unary_into(op, a, &mut out);
     Tensor::from_f32(out, a.shape(), tracker)
+}
+
+/// In-place elementwise unary over a contiguous buffer (arena in-place
+/// aliasing). Bitwise identical to [`unary_into`] on the same values.
+pub fn unary_inplace(op: UnaryOp, v: &mut [f32]) {
+    let n = v.len();
+    let weight: usize = match op {
+        UnaryOp::Neg | UnaryOp::Abs | UnaryOp::Relu => 1,
+        _ => 8,
+    };
+    pool::par_rows(v, n, 1, n.saturating_mul(weight), |_r0, _r1, slab| {
+        for o in slab.iter_mut() {
+            *o = op.apply(*o);
+        }
+    });
 }
 
 /// Scalar right-operand convenience: `op(a, scalar)`.
@@ -195,6 +282,23 @@ pub fn to_f32(a: &Tensor, tracker: Option<MemoryTracker>) -> Tensor {
         super::DType::I32 => {
             let v = a.to_vec_i32().into_iter().map(|x| x as f32).collect();
             Tensor::from_f32(v, a.shape(), tracker)
+        }
+    }
+}
+
+/// Core of [`to_f32`] for planned-slot output: converts (i32) or copies
+/// (f32) `a` into `out` in row-major order.
+pub fn to_f32_into(a: &Tensor, out: &mut [f32]) {
+    match a.dtype() {
+        super::DType::F32 => a.copy_into_f32(out),
+        super::DType::I32 => {
+            assert_eq!(out.len(), a.numel(), "to_f32_into length mismatch");
+            let src = a.buffer().i32();
+            let mut i = 0usize;
+            a.for_each_offset(|off| {
+                out[i] = src[off] as f32;
+                i += 1;
+            });
         }
     }
 }
@@ -289,6 +393,64 @@ mod tests {
     fn to_f32_converts() {
         let a = Tensor::from_i32(vec![1, 2, 3], &[3], None);
         assert_eq!(to_f32(&a, None).to_vec_f32(), vec![1., 2., 3.]);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_kernels_bitwise() {
+        let a = Tensor::rand(&[5, 7], 2.0, 21, None);
+        let b = Tensor::rand(&[7], 2.0, 22, None); // broadcast rhs
+        for op in [BinaryOp::Add, BinaryOp::Mul, BinaryOp::Div] {
+            let want = binary(op, &a, &b, None).to_vec_f32();
+            let mut out = vec![0.0f32; 35];
+            binary_into(op, &a, &b, &mut out);
+            assert_eq!(
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                out.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        let want = unary(UnaryOp::Gelu, &a, None).to_vec_f32();
+        let mut out = vec![0.0f32; 35];
+        unary_into(UnaryOp::Gelu, &a, &mut out);
+        assert_eq!(want, out);
+    }
+
+    #[test]
+    fn inplace_variants_match_allocating_kernels_bitwise() {
+        let a = Tensor::rand(&[6, 4], 2.0, 31, None);
+        let b = Tensor::rand(&[4], 2.0, 32, None);
+        // unary in place
+        let want = unary(UnaryOp::Tanh, &a, None).to_vec_f32();
+        let mut v = a.to_vec_f32();
+        unary_inplace(UnaryOp::Tanh, &mut v);
+        assert_eq!(want, v);
+        // binary into dead lhs (broadcast rhs)
+        let want = binary(BinaryOp::Sub, &a, &b, None).to_vec_f32();
+        let mut v = a.to_vec_f32();
+        binary_inplace(BinaryOp::Sub, &mut v, a.shape(), true, Some(&b));
+        assert_eq!(want, v);
+        // binary into dead rhs (same shape)
+        let c = Tensor::rand(&[6, 4], 2.0, 33, None);
+        let want = binary(BinaryOp::Div, &c, &a, None).to_vec_f32();
+        let mut v = a.to_vec_f32();
+        binary_inplace(BinaryOp::Div, &mut v, a.shape(), false, Some(&c));
+        assert_eq!(want, v);
+        // op(x, x)
+        let want = binary(BinaryOp::Mul, &a, &a, None).to_vec_f32();
+        let mut v = a.to_vec_f32();
+        binary_inplace(BinaryOp::Mul, &mut v, a.shape(), true, None);
+        assert_eq!(want, v);
+    }
+
+    #[test]
+    fn to_f32_into_matches() {
+        let a = Tensor::from_i32(vec![3, -1, 7], &[3], None);
+        let mut out = vec![0.0f32; 3];
+        to_f32_into(&a, &mut out);
+        assert_eq!(out, vec![3., -1., 7.]);
+        let f = Tensor::rand(&[2, 3], 1.0, 4, None).permute(&[1, 0]);
+        let mut out = vec![0.0f32; 6];
+        to_f32_into(&f, &mut out);
+        assert_eq!(out, f.to_vec_f32());
     }
 
     #[test]

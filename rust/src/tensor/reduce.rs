@@ -39,14 +39,17 @@ pub fn reduce_shape(shape: &[usize], axis: usize, keepdims: bool) -> Vec<usize> 
     out
 }
 
-/// Reduce along a single axis.
-pub fn reduce(
+/// Core of [`reduce`]: reduces into `out` (length = row count) and
+/// returns the output shape. The permuted materialization of a
+/// non-innermost axis stays transient workspace on `tracker`.
+pub fn reduce_into(
     op: ReduceOp,
     a: &Tensor,
     axis: usize,
     keepdims: bool,
+    out: &mut [f32],
     tracker: Option<MemoryTracker>,
-) -> Tensor {
+) -> Vec<usize> {
     assert!(axis < a.rank(), "reduce axis out of range");
     let shape = a.shape().to_vec();
     let out_shape = reduce_shape(&shape, axis, keepdims);
@@ -55,11 +58,11 @@ pub fn reduce(
     // Move the reduction axis last, materialize, then reduce rows.
     let mut perm: Vec<usize> = (0..a.rank()).filter(|&i| i != axis).collect();
     perm.push(axis);
-    let pa = a.permute(&perm).to_contiguous(tracker.clone());
+    let pa = a.permute(&perm).to_contiguous(tracker);
     let src = pa.f32_contiguous();
     let rows = pa.numel() / red_n;
-    let mut out = vec![0.0f32; rows];
-    pool::par_rows(&mut out, rows, 1, pa.numel(), |r0, _r1, slab| {
+    assert_eq!(out.len(), rows, "reduce_into length mismatch");
+    pool::par_rows(out, rows, 1, pa.numel(), |r0, _r1, slab| {
         for (j, o) in slab.iter_mut().enumerate() {
             let r = r0 + j;
             let row = &src[r * red_n..(r + 1) * red_n];
@@ -71,21 +74,28 @@ pub fn reduce(
             };
         }
     });
+    out_shape
+}
+
+/// Reduce along a single axis.
+pub fn reduce(
+    op: ReduceOp,
+    a: &Tensor,
+    axis: usize,
+    keepdims: bool,
+    tracker: Option<MemoryTracker>,
+) -> Tensor {
+    let rows = a.numel() / a.shape()[axis];
+    let mut out = vec![0.0f32; rows];
+    let out_shape = reduce_into(op, a, axis, keepdims, &mut out, tracker.clone());
     Tensor::from_f32(out, &out_shape, tracker)
 }
 
-/// Numerically-stable softmax along `axis`.
-pub fn softmax(a: &Tensor, axis: usize, tracker: Option<MemoryTracker>) -> Tensor {
-    assert!(axis < a.rank());
-    // Move axis last, materialize, softmax rows, move back.
-    let mut perm: Vec<usize> = (0..a.rank()).filter(|&i| i != axis).collect();
-    perm.push(axis);
-    let pa = a.permute(&perm).to_contiguous(tracker.clone());
-    let src = pa.f32_contiguous();
-    let n = pa.shape()[pa.rank() - 1];
-    let rows = pa.numel() / n;
-    let mut out = vec![0.0f32; pa.numel()];
-    pool::par_rows(&mut out, rows, n, pa.numel() * 4, |r0, _r1, slab| {
+/// Row-wise numerically-stable softmax over `rows` rows of `n` elements.
+/// Shared by the allocating and into-slot softmax paths so both are
+/// bitwise identical.
+fn softmax_rows(src: &[f32], out: &mut [f32], rows: usize, n: usize) {
+    pool::par_rows(out, rows, n, src.len() * 4, |r0, _r1, slab| {
         for (j, orow) in slab.chunks_mut(n).enumerate() {
             let r = r0 + j;
             let row = &src[r * n..(r + 1) * n];
@@ -102,6 +112,20 @@ pub fn softmax(a: &Tensor, axis: usize, tracker: Option<MemoryTracker>) -> Tenso
             }
         }
     });
+}
+
+/// Numerically-stable softmax along `axis`.
+pub fn softmax(a: &Tensor, axis: usize, tracker: Option<MemoryTracker>) -> Tensor {
+    assert!(axis < a.rank());
+    // Move axis last, materialize, softmax rows, move back.
+    let mut perm: Vec<usize> = (0..a.rank()).filter(|&i| i != axis).collect();
+    perm.push(axis);
+    let pa = a.permute(&perm).to_contiguous(tracker.clone());
+    let src = pa.f32_contiguous();
+    let n = pa.shape()[pa.rank() - 1];
+    let rows = pa.numel() / n;
+    let mut out = vec![0.0f32; pa.numel()];
+    softmax_rows(src, &mut out, rows, n);
     let t = Tensor::from_f32(out, pa.shape(), tracker.clone());
     // Inverse permutation restores the original layout.
     let mut inv_perm = vec![0usize; perm.len()];
@@ -109,6 +133,36 @@ pub fn softmax(a: &Tensor, axis: usize, tracker: Option<MemoryTracker>) -> Tenso
         inv_perm[p] = i;
     }
     t.permute(&inv_perm).to_contiguous(tracker)
+}
+
+/// Core of [`softmax`] for planned-slot output: writes the softmax in the
+/// *original* layout (row-major) into `out`. With the axis innermost over
+/// a contiguous input (the common transformer case) rows are computed
+/// directly into `out`; otherwise the permuted intermediate is computed in
+/// scratch — registered on `tracker` like every other kernel workspace,
+/// so admission accounting sees it — and inverse-permuted into `out`.
+pub fn softmax_into(a: &Tensor, axis: usize, out: &mut [f32], tracker: Option<MemoryTracker>) {
+    assert!(axis < a.rank());
+    assert_eq!(out.len(), a.numel(), "softmax_into length mismatch");
+    let mut perm: Vec<usize> = (0..a.rank()).filter(|&i| i != axis).collect();
+    perm.push(axis);
+    let pa = a.permute(&perm).to_contiguous(tracker.clone());
+    let src = pa.f32_contiguous();
+    let n = pa.shape()[pa.rank() - 1];
+    let rows = pa.numel() / n;
+    if axis == a.rank() - 1 {
+        // perm is the identity: the permuted layout IS the output layout.
+        softmax_rows(src, out, rows, n);
+        return;
+    }
+    let mut tmp = vec![0.0f32; pa.numel()];
+    softmax_rows(src, &mut tmp, rows, n);
+    let t = Tensor::from_f32(tmp, pa.shape(), tracker);
+    let mut inv_perm = vec![0usize; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv_perm[p] = i;
+    }
+    t.permute(&inv_perm).copy_into_f32(out);
 }
 
 #[cfg(test)]

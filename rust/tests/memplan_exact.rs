@@ -1,0 +1,154 @@
+//! Exact-peak properties of the static memory planner (ISSUE 3):
+//!
+//! 1. For all four evaluation models at two scales each — dense and
+//!    chunked — the planner's `planned_peak_bytes` equals the runtime
+//!    [`Arena`] high-water mark *exactly* (no estimate, no bound: the
+//!    executor follows the planner's script, and this test proves the
+//!    script matches what actually runs). Lane sub-arenas likewise hit
+//!    exactly `lane_bytes`.
+//! 2. The pessimistic [`CostQuote`] stays a sound ceiling above the
+//!    planner's numbers, and the planner-vs-quote gap (the admission
+//!    headroom this PR recovers) is real and reported.
+
+use autochunk::exec::{execute_arena, random_inputs, random_params};
+use autochunk::ir::Graph;
+use autochunk::models::*;
+use autochunk::passes::{
+    autochunk, cost_quote, estimate, plan_memory, planner_gap, AutoChunkConfig,
+};
+use autochunk::plan::{ChunkPlan, ExecOptions};
+use autochunk::tensor::MemoryTracker;
+
+/// Arena-execute once and check planned == measured, exactly.
+fn check_exact(name: &str, g: &Graph, plans: &[ChunkPlan]) {
+    let mem = plan_memory(g, plans);
+    let quote = cost_quote(g, plans);
+
+    let tracker = MemoryTracker::new();
+    let ins = random_inputs(g, 5, Some(tracker.clone()));
+    let ps = random_params(g, 6);
+    let opts = ExecOptions {
+        budget_bytes: None,
+        use_arena: true,
+    };
+    let (outs, stats) = execute_arena(g, plans, &ins, &ps, &mem, None, &tracker, &opts);
+    assert!(!outs.is_empty() && outs[0].to_vec_f32().iter().all(|x| x.is_finite()));
+
+    // The headline property: exact equality, not a bound.
+    assert_eq!(
+        stats.arena_peak_bytes, mem.planned_peak_bytes,
+        "{name}: arena high-water {} != planned peak {}",
+        stats.arena_peak_bytes, mem.planned_peak_bytes
+    );
+    if !plans.is_empty() {
+        let lane_max = mem.regions.iter().map(|r| r.lane_bytes).max().unwrap_or(0);
+        assert_eq!(
+            stats.lane_peak_bytes, lane_max,
+            "{name}: lane high-water vs planned lane bytes"
+        );
+    }
+
+    // The quote stays a sound ceiling over the planner.
+    assert!(
+        mem.planned_peak_bytes <= quote.peak_bytes,
+        "{name}: planned peak {} above quote {}",
+        mem.planned_peak_bytes,
+        quote.peak_bytes
+    );
+    // And the planner's admission price covers the measured tracked peak.
+    assert!(
+        stats.peak_bytes <= mem.admission_bytes(1),
+        "{name}: measured {} above planner admission {}",
+        stats.peak_bytes,
+        mem.admission_bytes(1)
+    );
+    // Sanity on the layout itself.
+    assert!(mem.footprint_bytes >= mem.planned_peak_bytes);
+    assert!(mem.values_materialized >= mem.slots.len());
+}
+
+fn model_zoo() -> Vec<(String, Graph)> {
+    let mut zoo = Vec::new();
+    for seq in [64usize, 128] {
+        zoo.push((
+            format!("gpt_s{seq}"),
+            gpt(&GptConfig { seq, layers: 1, ..Default::default() }),
+        ));
+    }
+    for patches in [64usize, 128] {
+        zoo.push((
+            format!("vit_p{patches}"),
+            vit(&ViTConfig { patches, layers: 1, ..Default::default() }),
+        ));
+    }
+    for seq in [8usize, 16] {
+        zoo.push((
+            format!("evoformer_s{seq}"),
+            evoformer(&EvoformerConfig { seq, blocks: 1, ..Default::default() }),
+        ));
+    }
+    for image in [16usize, 24] {
+        zoo.push((
+            format!("unet_i{image}"),
+            unet(&UNetConfig { image, ..Default::default() }),
+        ));
+    }
+    zoo
+}
+
+#[test]
+fn planned_peak_equals_arena_high_water_dense() {
+    for (name, g) in model_zoo() {
+        check_exact(&name, &g, &[]);
+    }
+}
+
+#[test]
+fn planned_peak_equals_arena_high_water_chunked() {
+    for (name, g) in model_zoo() {
+        let base = estimate(&g).peak_bytes;
+        let result = autochunk(&g, base / 3, &AutoChunkConfig::default());
+        if result.plans.is_empty() {
+            continue;
+        }
+        check_exact(&format!("{name}-chunked"), &g, &result.plans);
+    }
+}
+
+#[test]
+fn planner_recovers_headroom_over_quote() {
+    // The whole point of exact planning: the admission price drops below
+    // the pessimistic quote, so the serve engine packs more per wave.
+    for (name, g) in [
+        ("gpt", gpt(&GptConfig { seq: 128, layers: 2, ..Default::default() })),
+        ("vit", vit(&ViTConfig { patches: 128, layers: 2, ..Default::default() })),
+    ] {
+        let gap = planner_gap(&g, &[]);
+        assert!(
+            gap.planned_admission < gap.quote_peak,
+            "{name}: planner admission {} not below quote {}",
+            gap.planned_admission,
+            gap.quote_peak
+        );
+        assert!(gap.gap_bytes > 0, "{name}: no recovered headroom");
+        assert!(gap.gap_frac() > 0.0 && gap.gap_frac() < 1.0);
+        assert!(gap.planned_peak <= gap.planned_admission);
+    }
+}
+
+#[test]
+fn admission_bound_is_monotone_in_degree() {
+    let g = gpt(&GptConfig { seq: 96, layers: 1, ..Default::default() });
+    let base = estimate(&g).peak_bytes;
+    let result = autochunk(&g, base / 3, &AutoChunkConfig::default());
+    assert!(!result.plans.is_empty());
+    let mem = plan_memory(&g, &result.plans);
+    assert!(mem.max_lane_admission() > 0);
+    let mut last = 0usize;
+    for d in 1..=6 {
+        let price = mem.admission_bytes(d);
+        assert!(price >= last);
+        assert!(price >= mem.admission_base);
+        last = price;
+    }
+}

@@ -1,0 +1,375 @@
+//! Differential fuzz: the planned-allocation arena executor must be
+//! *bitwise* identical to the per-op-allocating interpreter — same
+//! kernels, same element order — on seeded random op-chain graphs, at
+//! pool widths 1 and 4, chunked and unchunked. Any divergence is a
+//! planner/executor bug (wrong aliasing decision, early release, slot
+//! clobber); minimized regressions found this way are committed below
+//! (`regression_*` tests).
+//!
+//! The fuzz also pins the two soundness facts admission control relies
+//! on: the arena high-water mark equals `planned_peak_bytes` exactly,
+//! and the planner's `admission_bytes` upper-bounds the measured tracked
+//! peak of an arena execution.
+
+use autochunk::exec::{execute, execute_arena, random_inputs, random_params};
+use autochunk::ir::{Graph, GraphBuilder};
+use autochunk::models::*;
+use autochunk::passes::{autochunk, estimate, plan_memory, AutoChunkConfig};
+use autochunk::plan::{execute_chunked, ExecOptions, PlanHandle};
+use autochunk::tensor::ops::{BinaryOp, UnaryOp};
+use autochunk::tensor::{MemoryTracker, Tensor};
+use autochunk::util::pool;
+
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+
+    fn pick(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+/// A random chain-with-residuals graph over 2-D tensors [s, d]. Extends
+/// the estimator-props generator with concat/slice/iota arms so every
+/// planner action (alias, materialize, in-place, broadcast-copy) gets
+/// exercised.
+fn random_graph(seed: u64, s: usize, d: usize) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new("random");
+    let x = b.input("x", &[s, d]);
+    let mut cur = x;
+    let mut prev = x;
+    let n_ops = 5 + rng.pick(9);
+    for i in 0..n_ops {
+        cur = match rng.pick(9) {
+            0 => b.unary(
+                [UnaryOp::Relu, UnaryOp::Gelu, UnaryOp::Tanh, UnaryOp::Exp][rng.pick(4)],
+                cur,
+            ),
+            1 => b.binary([BinaryOp::Add, BinaryOp::Mul][rng.pick(2)], cur, prev),
+            2 => {
+                let w = b.param(&format!("w{i}"), &[d, d]);
+                b.matmul(cur, w)
+            }
+            3 => {
+                let t = b.transpose(cur, &[1, 0]);
+                let scores = b.matmul(cur, t);
+                let probs = b.softmax(scores, 1);
+                b.matmul(probs, cur)
+            }
+            4 => {
+                let m = b.reduce(autochunk::tensor::reduce::ReduceOp::Max, cur, 1, true);
+                b.sub(cur, m)
+            }
+            5 => {
+                let r = b.reshape(cur, &[s, 2, d / 2]);
+                let t = b.transpose(r, &[1, 0, 2]);
+                let t2 = b.transpose(t, &[1, 0, 2]);
+                b.reshape(t2, &[s, d])
+            }
+            6 => {
+                // slice halves then concat back: exercises slice views
+                // and the concat materialize path
+                let lo = b.slice(cur, 0, 0, s / 2);
+                let hi = b.slice(cur, 0, s / 2, s - s / 2);
+                b.concat(&[lo, hi], 0)
+            }
+            7 => {
+                let io = b.iota(&[s, d], 1);
+                b.binary(BinaryOp::Add, cur, io)
+            }
+            _ => b.binary_scalar(BinaryOp::Mul, cur, 0.9),
+        };
+        if rng.pick(3) == 0 {
+            prev = cur;
+        }
+    }
+    b.finish(vec![cur])
+}
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.to_vec_f32().iter().map(|x| x.to_bits()).collect()
+}
+
+/// Interpreter vs arena executor on one (graph, plans) pair at the
+/// current pool width; also asserts the exact-peak and admission facts.
+fn assert_differential(tag: &str, g: &Graph, plans: &[autochunk::plan::ChunkPlan], seed: u64) {
+    let ins = random_inputs(g, seed + 50, None);
+    let ps = random_params(g, seed + 99);
+    let t0 = MemoryTracker::new();
+    let (want, _) = if plans.is_empty() {
+        execute(g, &ins, &ps, &t0)
+    } else {
+        execute_chunked(g, plans, &ins, &ps, &t0)
+    };
+
+    let mem = plan_memory(g, plans);
+    // Tracked run (inputs on the tracker, engine-style) for the
+    // admission-soundness assertion.
+    let tracker = MemoryTracker::new();
+    let ins_t = random_inputs(g, seed + 50, Some(tracker.clone()));
+    let opts = ExecOptions {
+        budget_bytes: None,
+        use_arena: true,
+    };
+    let (got, stats) = execute_arena(g, plans, &ins_t, &ps, &mem, None, &tracker, &opts);
+
+    assert_eq!(want.len(), got.len(), "{tag}: output arity");
+    for (k, (w, gt)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(w.shape(), gt.shape(), "{tag}: output {k} shape");
+        assert_eq!(bits(w), bits(gt), "{tag}: output {k} not bitwise identical");
+    }
+    assert_eq!(
+        stats.arena_peak_bytes, mem.planned_peak_bytes,
+        "{tag}: arena high-water vs planned peak"
+    );
+    if !plans.is_empty() {
+        let lane_max = mem.regions.iter().map(|r| r.lane_bytes).max().unwrap_or(0);
+        assert_eq!(stats.lane_peak_bytes, lane_max, "{tag}: lane high-water");
+    }
+    assert!(
+        stats.peak_bytes <= mem.admission_bytes(1),
+        "{tag}: measured {} above admission bound {}",
+        stats.peak_bytes,
+        mem.admission_bytes(1)
+    );
+}
+
+#[test]
+fn arena_matches_interpreter_on_random_graphs() {
+    for seed in 0..24u64 {
+        let g = random_graph(seed + 1000, 48, 16);
+        assert!(g.validate().is_ok(), "seed {seed}");
+        for width in [1usize, 4] {
+            pool::with_threads(width, || {
+                assert_differential(&format!("seed {seed} width {width}"), &g, &[], seed);
+            });
+        }
+    }
+}
+
+#[test]
+fn arena_matches_chunked_interpreter_on_random_graphs() {
+    let mut tested = 0usize;
+    for seed in 0..16u64 {
+        let g = random_graph(seed + 2000, 64, 16);
+        let base = estimate(&g).peak_bytes;
+        let result = autochunk(&g, base / 3, &AutoChunkConfig::default());
+        if result.plans.is_empty() {
+            continue;
+        }
+        tested += 1;
+        for width in [1usize, 4] {
+            pool::with_threads(width, || {
+                assert_differential(
+                    &format!("chunked seed {seed} width {width}"),
+                    &g,
+                    &result.plans,
+                    seed,
+                );
+            });
+        }
+    }
+    assert!(tested >= 1, "no chunkable random graphs in the sweep");
+    eprintln!("chunked differential fuzz covered {tested} graphs");
+}
+
+#[test]
+fn arena_matches_chunked_interpreter_with_concurrent_lanes() {
+    // A budget admits extra in-flight lanes: wave execution must stay
+    // bitwise identical and lane sub-arenas must hit exactly lane_bytes.
+    let g = gpt(&GptConfig { seq: 96, layers: 1, ..Default::default() });
+    let base = estimate(&g).peak_bytes;
+    let result = autochunk(&g, base / 3, &AutoChunkConfig::default());
+    assert!(!result.plans.is_empty());
+    let ins = random_inputs(&g, 7, None);
+    let ps = random_params(&g, 8);
+    let t0 = MemoryTracker::new();
+    let (want, _) = execute_chunked(&g, &result.plans, &ins, &ps, &t0);
+    let mem = plan_memory(&g, &result.plans);
+    let max_iters = result
+        .plans
+        .iter()
+        .map(|p| p.chunk_extent(&g).div_ceil(p.chunk_step(&g)))
+        .max()
+        .unwrap_or(1);
+    for width in [1usize, 4] {
+        pool::with_threads(width, || {
+            let tracker = MemoryTracker::new();
+            let opts = ExecOptions {
+                budget_bytes: Some(mem.admission_bytes(4)),
+                use_arena: true,
+            };
+            let (got, stats) =
+                execute_arena(&g, &result.plans, &ins, &ps, &mem, None, &tracker, &opts);
+            assert_eq!(bits(&want[0]), bits(&got[0]), "width {width}");
+            assert_eq!(stats.arena_peak_bytes, mem.planned_peak_bytes);
+            if width == 4 && max_iters >= 2 {
+                assert!(stats.max_chunk_degree >= 2, "budget bought no concurrency");
+            }
+        });
+    }
+}
+
+#[test]
+fn arena_matches_interpreter_on_models() {
+    for (name, g) in [
+        ("gpt", gpt(&GptConfig { seq: 48, layers: 1, ..Default::default() })),
+        (
+            "gpt-fused",
+            gpt(&GptConfig { seq: 48, layers: 1, fused_attention: true, ..Default::default() }),
+        ),
+        ("vit", vit(&ViTConfig { patches: 48, layers: 1, ..Default::default() })),
+        (
+            "evoformer",
+            evoformer(&EvoformerConfig { seq: 8, blocks: 1, ..Default::default() }),
+        ),
+        ("unet", unet(&UNetConfig { image: 16, ..Default::default() })),
+    ] {
+        for width in [1usize, 4] {
+            pool::with_threads(width, || {
+                assert_differential(&format!("{name} width {width}"), &g, &[], 3);
+            });
+        }
+    }
+}
+
+#[test]
+fn slot_storage_recycles_across_runs() {
+    // Steady-state serving: the second execution through a PlanHandle's
+    // shared store performs zero fresh slot allocations.
+    let g = gpt(&GptConfig { seq: 48, layers: 1, ..Default::default() });
+    let ps = random_params(&g, 1);
+    let h = PlanHandle::new("recycle", g.clone(), Vec::new(), ps);
+    let ins = random_inputs(&g, 2, None);
+    let opts = ExecOptions { budget_bytes: None, use_arena: true };
+    let tracker = MemoryTracker::new();
+    let (out1, s1) = h.execute(&ins, &tracker, &opts);
+    drop(out1); // return output slots to the store
+    let (out2, s2) = h.execute(&ins, &tracker, &opts);
+    assert!(s1.arena_fresh_allocs > 0, "first run allocates");
+    assert_eq!(
+        s2.arena_fresh_allocs, 0,
+        "second run must be allocation-free (got {} fresh)",
+        s2.arena_fresh_allocs
+    );
+    assert!(s2.arena_reuses > 0);
+    assert_eq!(bits(&out2[0]), {
+        let t = MemoryTracker::new();
+        let (want, _) = execute(&g, &ins, &random_params(&g, 1), &t);
+        bits(&want[0])
+    });
+
+    // Chunked handles recycle too: the per-region lane stores are cached
+    // on the handle, so a warmed chunk-loop re-run is allocation-free.
+    let g = gpt(&GptConfig { seq: 96, layers: 1, ..Default::default() });
+    let base = estimate(&g).peak_bytes;
+    let result = autochunk(&g, base / 3, &AutoChunkConfig::default());
+    assert!(!result.plans.is_empty());
+    let ps = random_params(&g, 3);
+    let h = PlanHandle::new("recycle_chunked", g.clone(), result.plans, ps);
+    let ins = random_inputs(&g, 4, None);
+    let tracker = MemoryTracker::new();
+    let (out1, c1) = h.execute(&ins, &tracker, &opts);
+    drop(out1);
+    let (_, c2) = h.execute(&ins, &tracker, &opts);
+    assert!(c1.arena_fresh_allocs > 0);
+    assert_eq!(
+        c2.arena_fresh_allocs, 0,
+        "warmed chunked re-run must not allocate ({} fresh)",
+        c2.arena_fresh_allocs
+    );
+}
+
+// ---- minimized regression cases (aliasing-safety satellite) ----------
+
+/// The use-twice hazard end-to-end: `c = a·a; d = c + a` — the planner
+/// must materialize `c` (a still live) and may compute `d` in place into
+/// `c`; results stay bitwise equal to the interpreter.
+#[test]
+fn regression_use_twice_hazard_executes_correctly() {
+    let mut b = GraphBuilder::new("t");
+    let x = b.input("x", &[64]);
+    let a = b.unary(UnaryOp::Relu, x);
+    let c = b.binary(BinaryOp::Mul, a, a);
+    let d = b.binary(BinaryOp::Add, c, a);
+    let g = b.finish(vec![d]);
+    let mem = plan_memory(&g, &[]);
+    assert!(
+        matches!(mem.actions[c], autochunk::passes::ValueAction::Materialize { .. }),
+        "use-twice operand must not be clobbered"
+    );
+    for width in [1usize, 4] {
+        pool::with_threads(width, || assert_differential("use-twice", &g, &[], 11));
+    }
+}
+
+/// A live transpose alias of the operand blocks in-place: writing relu(a)
+/// through `a`'s storage would corrupt the later read of the view.
+#[test]
+fn regression_live_alias_blocks_inplace() {
+    let mut b = GraphBuilder::new("t");
+    let x = b.input("x", &[8, 8]);
+    let a = b.unary(UnaryOp::Relu, x);
+    let t = b.transpose(a, &[1, 0]);
+    let u = b.unary(UnaryOp::Neg, a); // a's last direct use, but t is live
+    let s = b.binary(BinaryOp::Add, t, u);
+    let g = b.finish(vec![s]);
+    let mem = plan_memory(&g, &[]);
+    assert!(
+        matches!(mem.actions[u], autochunk::passes::ValueAction::Materialize { .. }),
+        "in-place through a live alias must be rejected"
+    );
+    for width in [1usize, 4] {
+        pool::with_threads(width, || assert_differential("live-alias", &g, &[], 13));
+    }
+}
+
+/// Non-contiguous inputs to reshape and broadcast take the materializing
+/// path (the zero-copy alias is illegal there).
+#[test]
+fn regression_noncontiguous_views_materialize() {
+    let mut b = GraphBuilder::new("t");
+    let x = b.input("x", &[4, 6]);
+    let t = b.transpose(x, &[1, 0]); // non-contiguous [6, 4]
+    let r = b.reshape(t, &[24]); // copying reshape
+    let bc = b.broadcast(r, &[2, 24]);
+    let y = b.binary_scalar(BinaryOp::Mul, bc, 2.0);
+    let g = b.finish(vec![y]);
+    let mem = plan_memory(&g, &[]);
+    assert!(matches!(
+        mem.actions[r],
+        autochunk::passes::ValueAction::Materialize { .. }
+    ));
+    assert_eq!(mem.actions[bc], autochunk::passes::ValueAction::Alias);
+    for width in [1usize, 4] {
+        pool::with_threads(width, || assert_differential("reshape-copy", &g, &[], 17));
+    }
+
+    // Broadcast applied directly to a strided view: the runtime's inner
+    // reshape copies, so the planner must assign the broadcast a slot.
+    let mut b = GraphBuilder::new("t2");
+    let x = b.input("x", &[4, 6]);
+    let t = b.transpose(x, &[1, 0]); // non-contiguous [6, 4]
+    let bc = b.broadcast(t, &[2, 6, 4]);
+    let s = b.reduce(autochunk::tensor::reduce::ReduceOp::Sum, bc, 0, false);
+    let g = b.finish(vec![s]);
+    let mem = plan_memory(&g, &[]);
+    assert!(matches!(
+        mem.actions[bc],
+        autochunk::passes::ValueAction::Materialize { .. }
+    ));
+    for width in [1usize, 4] {
+        pool::with_threads(width, || assert_differential("bcast-copy", &g, &[], 19));
+    }
+}

@@ -1,0 +1,120 @@
+//! Golden memory-profile snapshots: the static memory planner's layout
+//! numbers (planned peak, arena slot count, reuse ratio, in-place count,
+//! admission price, per-region lane sizes) for each evaluation model at
+//! two scales, dense and chunked, serialized to committed text fixtures
+//! (`tests/fixtures/memplan/*.txt`). A planner regression — a lost
+//! aliasing opportunity, a broken free, a fatter layout — shows up as a
+//! readable diff instead of a silent peak change.
+//!
+//! Bless workflow (same as `golden_plans.rs`): a missing fixture is
+//! written on first run (so a fresh checkout bootstraps itself — COMMIT
+//! `tests/fixtures/memplan/` after the first `cargo test`); set
+//! `AUTOCHUNK_BLESS=1` to regenerate after an intentional change.
+
+use autochunk::ir::Graph;
+use autochunk::models::*;
+use autochunk::passes::{autochunk, describe_memplan, estimate, plan_memory, AutoChunkConfig};
+use std::path::PathBuf;
+
+fn fixture_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("fixtures")
+        .join("memplan")
+}
+
+/// Dense and chunked (compiled at a third of baseline) memory profiles,
+/// with structural invariants asserted even on a freshly-blessed fixture.
+fn snapshot(name: &str, g: &Graph) -> String {
+    let dense = plan_memory(g, &[]);
+    assert!(dense.planned_peak_bytes > 0, "{name}: empty dense plan");
+    assert!(
+        dense.values_materialized >= dense.slots.len(),
+        "{name}: more slots than values"
+    );
+
+    let base = estimate(g).peak_bytes;
+    let result = autochunk(g, base / 3, &AutoChunkConfig::default());
+    assert!(!result.plans.is_empty(), "{name}: compiler chose no plans");
+    let chunked = plan_memory(g, &result.plans);
+    assert_eq!(chunked.regions.len(), result.plans.len());
+    for (i, r) in chunked.regions.iter().enumerate() {
+        assert!(r.lane_bytes > 0, "{name}: region {i} empty lane");
+        assert!(r.lane_admission >= r.lane_bytes, "{name}: region {i} price");
+    }
+    // Chunking must not inflate the planned outer peak (the region
+    // intermediates move into per-lane sub-arenas); the actual reduction
+    // per model is locked by the fixture numbers.
+    assert!(
+        chunked.planned_peak_bytes <= dense.planned_peak_bytes,
+        "{name}: chunked planned peak {} above dense {}",
+        chunked.planned_peak_bytes,
+        dense.planned_peak_bytes
+    );
+
+    format!(
+        "model: {name}\n== dense ==\n{}== chunked ==\n{}",
+        describe_memplan(&dense),
+        describe_memplan(&chunked)
+    )
+}
+
+fn check(name: &str, g: &Graph) {
+    let got = snapshot(name, g);
+    let path = fixture_dir().join(format!("{name}.txt"));
+    let bless = std::env::var("AUTOCHUNK_BLESS").is_ok() || !path.exists();
+    if bless {
+        std::fs::create_dir_all(fixture_dir()).expect("creating fixture dir");
+        std::fs::write(&path, &got).expect("writing fixture");
+        eprintln!("blessed memplan fixture {}", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).expect("reading fixture");
+    assert_eq!(
+        want, got,
+        "\n== memory-plan drift for {name} ==\n\
+         If the planner change is intentional, re-bless with \
+         AUTOCHUNK_BLESS=1 cargo test --test memplan_golden\n\
+         -- committed --\n{want}\n-- current --\n{got}"
+    );
+}
+
+#[test]
+fn gpt_memplan_golden() {
+    for seq in [128usize, 256] {
+        let g = gpt(&GptConfig { seq, layers: 2, ..Default::default() });
+        check(&format!("gpt_s{seq}"), &g);
+    }
+}
+
+#[test]
+fn vit_memplan_golden() {
+    for patches in [128usize, 256] {
+        let g = vit(&ViTConfig { patches, layers: 2, ..Default::default() });
+        check(&format!("vit_p{patches}"), &g);
+    }
+}
+
+#[test]
+fn evoformer_memplan_golden() {
+    for seq in [16usize, 24] {
+        let g = evoformer(&EvoformerConfig { seq, blocks: 1, ..Default::default() });
+        check(&format!("evoformer_s{seq}"), &g);
+    }
+}
+
+#[test]
+fn unet_memplan_golden() {
+    for image in [16usize, 24] {
+        let g = unet(&UNetConfig { image, ..Default::default() });
+        check(&format!("unet_i{image}"), &g);
+    }
+}
+
+#[test]
+fn snapshots_are_deterministic_across_widths() {
+    let g = gpt(&GptConfig { seq: 128, layers: 2, ..Default::default() });
+    let a = autochunk::util::pool::with_threads(1, || snapshot("gpt_det", &g));
+    let b = autochunk::util::pool::with_threads(4, || snapshot("gpt_det", &g));
+    assert_eq!(a, b, "memory plan depends on pool width");
+}

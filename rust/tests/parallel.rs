@@ -55,7 +55,7 @@ fn parity_case(name: &str, g: &autochunk::ir::Graph) {
 
     // Concurrent chunk loop (a generous budget lets the governor grant
     // degree > 1): still bitwise identical to the serial chunk loop.
-    let opts = ExecOptions { budget_bytes: Some(usize::MAX) };
+    let opts = ExecOptions { budget_bytes: Some(usize::MAX), ..ExecOptions::default() };
     let tp = MemoryTracker::new();
     let (op, sp) = pool::with_threads(4, || {
         execute_chunked_opts(g, &result.plans, &ins, &ps, &tp, &opts)
@@ -124,7 +124,7 @@ fn governor_collapses_to_serial_without_headroom() {
     let ps = random_params(&g, 4);
 
     // budget exactly at the estimated serial chunked peak: zero headroom
-    let opts = ExecOptions { budget_bytes: Some(result.chunked_peak) };
+    let opts = ExecOptions { budget_bytes: Some(result.chunked_peak), ..ExecOptions::default() };
     let tr = MemoryTracker::new();
     let (_, stats) = pool::with_threads(4, || {
         execute_chunked_opts(&g, &result.plans, &ins, &ps, &tr, &opts)
@@ -149,7 +149,7 @@ fn governor_never_exceeds_budget_measured() {
     // Generous budget: the governor may buy concurrency with the
     // headroom, but the measured peak must stay under the budget.
     let budget = 2 * s_serial.peak_bytes.max(result.chunked_peak);
-    let opts = ExecOptions { budget_bytes: Some(budget) };
+    let opts = ExecOptions { budget_bytes: Some(budget), ..ExecOptions::default() };
     let t_par = MemoryTracker::new();
     let ins_p = random_inputs(&g, 3, Some(t_par.clone()));
     let (_, s_par) = pool::with_threads(4, || {

@@ -157,8 +157,21 @@ fn preemption_deepens_instead_of_rejecting() {
     let buckets = vec![64usize];
     // Bracket a budget between the dense (depth-0) quote and a deeper
     // level's quote: the request must be preempted at least once and then
-    // complete chunked rather than be rejected.
-    let mut probe = engine(usize::MAX, buckets.clone(), 1);
+    // complete chunked rather than be rejected. Pins quote-priced
+    // admission: under AUTOCHUNK_ARENA=1 the planner's exact price is
+    // deliberately below the quote and would admit the dense plan.
+    let quote_engine = |budget: usize| {
+        ServeEngine::new(EngineConfig {
+            model: "gpt".into(),
+            budget_bytes: budget,
+            max_batch: 6,
+            buckets: buckets.clone(),
+            worker_threads: 1,
+            use_arena: false,
+            ..EngineConfig::default()
+        })
+    };
+    let mut probe = quote_engine(usize::MAX);
     let (_, q0) = probe.quote(60, 0).unwrap().unwrap();
     let mut deeper = None;
     for depth in 1..=5usize {
@@ -175,7 +188,7 @@ fn preemption_deepens_instead_of_rejecting() {
     let budget = (q0.peak_bytes + qd.peak_bytes) / 2;
     assert!(budget < q0.peak_bytes && budget >= qd.peak_bytes);
 
-    let mut e = engine(budget, buckets, 1);
+    let mut e = quote_engine(budget);
     let reqs = vec![Request::new(0, 60, 5)];
     let (resp, report) = e.serve(&reqs).unwrap();
     assert_eq!(resp.len(), 1);
@@ -214,6 +227,99 @@ fn continuous_batches_under_generous_budget() {
     assert!(report.waves <= 2, "expected batched waves, got {}", report.waves);
     // waits recorded in ticks on the virtual clock
     assert!(resp.iter().all(|r| r.wait_ticks <= 1));
+}
+
+#[test]
+fn arena_engine_matches_quote_engine_bitwise_and_stays_under_budget() {
+    // ISSUE 3 acceptance: with arena serving on, admission prices by the
+    // planner's exact bound, execution runs through planned slots, and
+    // the measured peak still never exceeds the budget — with responses
+    // bitwise identical to the interpreter-backed engine.
+    let buckets = vec![32usize, 64];
+    let budget = budget_for(&buckets, 3);
+    let reqs = open_loop_workload(10, 8, 60, 17, 3);
+
+    let run = |use_arena: bool| {
+        let mut e = ServeEngine::new(EngineConfig {
+            model: "gpt".into(),
+            budget_bytes: budget,
+            max_batch: 6,
+            buckets: buckets.clone(),
+            worker_threads: 2,
+            use_arena,
+            ..EngineConfig::default()
+        });
+        e.serve(&reqs).unwrap()
+    };
+    let (r_quote, _) = run(false);
+    let (r_arena, report) = run(true);
+
+    assert_eq!(r_quote.len(), r_arena.len());
+    for (a, b) in r_arena.iter().zip(&r_quote) {
+        assert_eq!(
+            response_key(a).4,
+            response_key(b).4,
+            "request {} output diverged between arena and interpreter engines",
+            a.id
+        );
+        assert_eq!(a.outcome, b.outcome);
+    }
+    assert!(report.completed > 0);
+    assert!(
+        report.measured_peak_bytes <= budget,
+        "arena engine measured peak {} exceeds budget {budget}",
+        report.measured_peak_bytes
+    );
+}
+
+#[test]
+fn arena_admission_packs_tighter_than_quote() {
+    // A budget below the pessimistic quote but above the planner's exact
+    // admission price: the quote-priced engine must deepen (or reject),
+    // while the planner-priced engine serves the request dense.
+    use autochunk::models::{gpt, GptConfig};
+    use autochunk::passes::planner_gap;
+
+    let bucket = 64usize;
+    let g = gpt(&GptConfig { seq: bucket, ..Default::default() });
+    let gap = planner_gap(&g, &[]);
+    if gap.planned_admission >= gap.quote_peak {
+        eprintln!("skipping: planner not tighter than quote at this scale");
+        return;
+    }
+    let budget = (gap.planned_admission + gap.quote_peak) / 2;
+
+    let mk = |use_arena: bool| {
+        ServeEngine::new(EngineConfig {
+            model: "gpt".into(),
+            budget_bytes: budget,
+            max_batch: 2,
+            buckets: vec![bucket],
+            worker_threads: 1,
+            use_arena,
+            ..EngineConfig::default()
+        })
+    };
+    let reqs = vec![Request::new(0, bucket, 3)];
+
+    let (resp_arena, report_arena) = mk(true).serve(&reqs).unwrap();
+    assert_eq!(resp_arena[0].outcome, RequestOutcome::Completed);
+    assert_eq!(
+        resp_arena[0].depth, 0,
+        "planner-priced admission must serve the dense plan"
+    );
+    assert!(report_arena.measured_peak_bytes <= budget);
+
+    let (resp_quote, report_quote) = mk(false).serve(&reqs).unwrap();
+    // The quote-priced engine cannot admit the dense plan at this budget.
+    let deepened_or_rejected = resp_quote[0].outcome == RequestOutcome::Rejected
+        || resp_quote[0].depth >= 1
+        || report_quote.preempted >= 1;
+    assert!(
+        deepened_or_rejected,
+        "quote admission unexpectedly served dense under {} < quote {}",
+        budget, gap.quote_peak
+    );
 }
 
 #[test]
