@@ -1,0 +1,233 @@
+//! Autoregressive decode vs naive re-prefill (DESIGN.md §13).
+//!
+//! For several prompt lengths, generate 16 tokens two ways:
+//!
+//! * **decode** — one causal prefill seeds a KV cache, then 16 incremental
+//!   decode steps (the serve engine's generation path). Per-step peak is
+//!   O(s·d): the concat-rebuilt attention operand plus a handful of
+//!   `[1,d]` rows.
+//! * **re-prefill** — the naive baseline: recompute full prefill over the
+//!   grown sequence for every token. Per-step peak is the prefill peak,
+//!   O(s²) from the `[h,s,s]` score tensors.
+//!
+//! Both paths produce bitwise-identical token streams
+//! (`rust/tests/decode_parity.rs`); this bench measures the throughput
+//! and memory gap. Emits `BENCH_serve_decode.json`.
+//!
+//! `cargo bench --bench serve_decode`
+
+use autochunk::coordinator::{greedy_argmax, pad_prompt};
+use autochunk::exec::random_params;
+use autochunk::models::{gpt_decode, gpt_lm_head, gpt_prefill_kv, GptConfig};
+use autochunk::plan::{ExecOptions, PlanHandle};
+use autochunk::tensor::{KvCache, MemoryTracker, Tensor};
+use autochunk::util::bench::{mib, Table};
+use autochunk::util::pool;
+use std::time::Instant;
+
+const NEW_TOKENS: usize = 16;
+
+/// The engine's bucket-padding rule, as a tensor (shared `pad_prompt`).
+fn pad_tokens(tokens: &[i32], bucket: usize) -> Tensor {
+    Tensor::from_i32(pad_prompt(tokens, bucket), &[bucket], None)
+}
+
+struct RunResult {
+    tokens_per_s: f64,
+    /// Worst single-step tracked peak (excludes the resident cache).
+    step_peak_bytes: usize,
+    resident_kv_bytes: usize,
+}
+
+/// Generate NEW_TOKENS via the incremental decode path.
+fn run_decode(
+    cfg: &GptConfig,
+    prompt: &[i32],
+    params: &[Tensor],
+    opts: &ExecOptions,
+) -> RunResult {
+    let bucket = cfg.seq;
+    let hp = PlanHandle::new("prefill", gpt_prefill_kv(cfg), Vec::new(), params.to_vec());
+    let lm_params = autochunk::models::lm_head_params(params);
+    let lm = PlanHandle::new("lm", gpt_lm_head(cfg), Vec::new(), lm_params);
+    // Steady-state serving: decode plans are compiled once per cache
+    // length and cached (the engine's plan cache) — prebuild them.
+    let decode_handles: Vec<PlanHandle> = (0..NEW_TOKENS - 1)
+        .map(|i| {
+            let past = prompt.len() + i;
+            PlanHandle::new("decode", gpt_decode(cfg, past), Vec::new(), params.to_vec())
+        })
+        .collect();
+
+    let resident = MemoryTracker::new();
+    let seed_tracker = MemoryTracker::new();
+    let (outs, _) = hp.execute(&[pad_tokens(prompt, bucket)], &seed_tracker, opts);
+    let mut cache =
+        KvCache::new(cfg.layers, cfg.heads, bucket, cfg.head_dim(), Some(resident.clone()));
+    for l in 0..cfg.layers {
+        cache.seed(l, &outs[1 + 2 * l], &outs[2 + 2 * l]);
+    }
+    cache.set_len(prompt.len());
+    let hrow = outs[0].slice_axis(0, prompt.len() - 1, 1).to_contiguous(None);
+    drop(outs);
+    let (louts, _) = lm.execute(&[hrow], &seed_tracker, opts);
+    let mut tok = greedy_argmax(&louts[0].to_vec_f32());
+    drop(louts);
+
+    let mut step_peak = 0usize;
+    let started = Instant::now();
+    for hd in &decode_handles {
+        let step_tracker = MemoryTracker::new();
+        let mut ins = vec![Tensor::from_i32(vec![tok], &[1], Some(step_tracker.clone()))];
+        for l in 0..cfg.layers {
+            ins.push(cache.k_full(l));
+            ins.push(cache.v_full(l));
+        }
+        let (douts, _) = hd.execute(&ins, &step_tracker, opts);
+        drop(ins);
+        let dec_row = douts[0].to_contiguous(None);
+        let (dl, _) = lm.execute(&[dec_row], &step_tracker, opts);
+        tok = greedy_argmax(&dl[0].to_vec_f32());
+        drop(dl);
+        for l in 0..cfg.layers {
+            cache.append(l, &douts[1 + 2 * l], &douts[2 + 2 * l]);
+        }
+        drop(douts);
+        cache.advance();
+        step_peak = step_peak.max(step_tracker.peak());
+    }
+    let secs = started.elapsed().as_secs_f64().max(1e-9);
+    RunResult {
+        tokens_per_s: (NEW_TOKENS - 1) as f64 / secs,
+        step_peak_bytes: step_peak,
+        resident_kv_bytes: cache.bytes(),
+    }
+}
+
+/// Generate NEW_TOKENS by re-running full prefill at every length.
+fn run_reprefill(
+    cfg: &GptConfig,
+    prompt: &[i32],
+    params: &[Tensor],
+    opts: &ExecOptions,
+) -> RunResult {
+    let bucket = cfg.seq;
+    let hp = PlanHandle::new("prefill", gpt_prefill_kv(cfg), Vec::new(), params.to_vec());
+    let lm_params = autochunk::models::lm_head_params(params);
+    let lm = PlanHandle::new("lm", gpt_lm_head(cfg), Vec::new(), lm_params);
+
+    // seed token (outside timing, matching run_decode)
+    let seed_tracker = MemoryTracker::new();
+    let (outs, _) = hp.execute(&[pad_tokens(prompt, bucket)], &seed_tracker, opts);
+    let hrow = outs[0].slice_axis(0, prompt.len() - 1, 1).to_contiguous(None);
+    drop(outs);
+    let (louts, _) = lm.execute(&[hrow], &seed_tracker, opts);
+    let mut tok = greedy_argmax(&louts[0].to_vec_f32());
+    drop(louts);
+
+    let mut seq: Vec<i32> = prompt.to_vec();
+    seq.push(tok);
+    let mut step_peak = 0usize;
+    let started = Instant::now();
+    for _ in 0..NEW_TOKENS - 1 {
+        let step_tracker = MemoryTracker::new();
+        let (outs, _) = hp.execute(&[pad_tokens(&seq, bucket)], &step_tracker, opts);
+        let hrow = outs[0].slice_axis(0, seq.len() - 1, 1).to_contiguous(None);
+        drop(outs);
+        let (dl, _) = lm.execute(&[hrow], &step_tracker, opts);
+        tok = greedy_argmax(&dl[0].to_vec_f32());
+        drop(dl);
+        seq.push(tok);
+        step_peak = step_peak.max(step_tracker.peak());
+    }
+    let secs = started.elapsed().as_secs_f64().max(1e-9);
+    RunResult {
+        tokens_per_s: (NEW_TOKENS - 1) as f64 / secs,
+        step_peak_bytes: step_peak,
+        resident_kv_bytes: 0,
+    }
+}
+
+fn main() {
+    let threads = pool::num_threads();
+    let opts = ExecOptions {
+        budget_bytes: None,
+        use_arena: autochunk::plan::arena_default(),
+    };
+
+    let mut table = Table::new(&[
+        "prompt",
+        "bucket",
+        "mode",
+        "tok/s",
+        "step peak",
+        "resident kv",
+        "speedup",
+    ]);
+    let mut rows: Vec<String> = Vec::new();
+    let mut decode_peaks: Vec<(usize, usize)> = Vec::new();
+    let mut prefill_peaks: Vec<(usize, usize)> = Vec::new();
+
+    for &prompt_len in &[32usize, 64, 128] {
+        let bucket = prompt_len + NEW_TOKENS;
+        let cfg = GptConfig { seq: bucket, causal: true, ..Default::default() };
+        let gp = gpt_prefill_kv(&cfg);
+        let params = random_params(&gp, 0xD0_0D + bucket as u64);
+        drop(gp);
+        let prompt: Vec<i32> = (0..prompt_len).map(|i| ((i * 31 + 7) % 512) as i32).collect();
+
+        let dec = run_decode(&cfg, &prompt, &params, &opts);
+        let pre = run_reprefill(&cfg, &prompt, &params, &opts);
+        decode_peaks.push((bucket, dec.step_peak_bytes));
+        prefill_peaks.push((bucket, pre.step_peak_bytes));
+
+        let speedup = dec.tokens_per_s / pre.tokens_per_s.max(1e-9);
+        for (mode, r, sp) in [("decode", &dec, speedup), ("re-prefill", &pre, 1.0)] {
+            table.row(vec![
+                format!("{prompt_len}"),
+                format!("{bucket}"),
+                mode.to_string(),
+                format!("{:.1}", r.tokens_per_s),
+                format!("{:.2} MiB", mib(r.step_peak_bytes)),
+                format!("{:.2} MiB", mib(r.resident_kv_bytes)),
+                format!("{sp:.2}x"),
+            ]);
+            rows.push(format!(
+                "  {{\"prompt\": {prompt_len}, \"bucket\": {bucket}, \"mode\": \"{mode}\", \
+                 \"tokens_per_s\": {:.3}, \"step_peak_mb\": {:.3}, \"resident_kv_mb\": {:.3}, \
+                 \"threads\": {threads}}}",
+                r.tokens_per_s,
+                mib(r.step_peak_bytes),
+                mib(r.resident_kv_bytes),
+            ));
+        }
+    }
+
+    println!("== Incremental decode vs naive re-prefill (width {threads}) ==\n");
+    print!("{}", table.render());
+
+    // Growth-rate check: decode per-step peak should scale ~linearly with
+    // the bucket, re-prefill quadratically (the [h,s,s] scores).
+    let growth = |peaks: &[(usize, usize)]| -> f64 {
+        let (s0, p0) = peaks.first().copied().unwrap();
+        let (s1, p1) = peaks.last().copied().unwrap();
+        let len_ratio = s1 as f64 / s0 as f64;
+        (p1 as f64 / p0 as f64).ln() / len_ratio.ln() // growth exponent
+    };
+    let de = growth(&decode_peaks);
+    let pe = growth(&prefill_peaks);
+    println!(
+        "\nper-step peak growth exponents (peak ~ s^e): decode e={de:.2}, re-prefill e={pe:.2}"
+    );
+    println!(
+        "decode {} linear-ish (e < 1.5), re-prefill {} quadratic-ish (e > 1.5)",
+        if de < 1.5 { "is" } else { "is NOT" },
+        if pe > 1.5 { "is" } else { "is NOT" },
+    );
+
+    let body = format!("[\n{}\n]\n", rows.join(",\n"));
+    if let Err(e) = std::fs::write("BENCH_serve_decode.json", body) {
+        eprintln!("warning: could not write BENCH_serve_decode.json: {e}");
+    }
+    println!("wrote BENCH_serve_decode.json");
+}

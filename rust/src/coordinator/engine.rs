@@ -2,19 +2,29 @@
 //!
 //! The PR-1 `Coordinator` served a *closed* workload through AOT/PJRT
 //! artifacts in one shot. This engine is the production shape the paper's
-//! runtime half points at (DESIGN.md §11):
+//! runtime half points at (DESIGN.md §11, §13):
 //!
 //! * **request queue with arrival ticks** — an open-loop trace replayed on
 //!   a deterministic virtual clock, so admission pressure is part of the
 //!   workload and results are machine-independent;
-//! * **memory-aware admission** — each wave is packed greedily by the
-//!   estimator's [`CostQuote`] (`peak + (d−1)·per_chunk`, the PR-1
-//!   governor formula) against the global `budget_bytes`, not by request
-//!   count: activation memory, not parameters, is the binding constraint;
-//! * **per-bucket compiled-plan caching** — a (model, seq-bucket, depth)
-//!   triple is chunk-searched once and the resulting [`PlanHandle`] is
-//!   shared by every subsequent request in that bucket;
-//! * **preemption instead of rejection** — a request whose quote exceeds
+//! * **memory-aware admission** — each wave is packed greedily against the
+//!   global `budget_bytes` by per-request prices: the estimator's
+//!   [`CostQuote`] (or the memory planner's exact bound in arena mode)
+//!   *plus*, for generation requests, the full-capacity KV-cache bytes
+//!   the request will pin for its lifetime;
+//! * **autoregressive generation** — a `Request { max_new_tokens > 0 }`
+//!   runs one chunk-planned causal prefill that seeds a [`KvCache`], then
+//!   decode steps scheduled in the same memory-aware waves: each step is
+//!   priced `planned_peak(decode@past)` on top of Σ resident cache bytes,
+//!   so `planned_peak + resident_kv_bytes(s)` is exactly what admission
+//!   charges as caches grow. Finished requests evict their caches and
+//!   resident bytes return to the pool;
+//! * **per-bucket compiled-plan caching** — a (kind, seq-bucket, depth)
+//!   triple is compiled once and the resulting [`PlanHandle`] is shared by
+//!   every subsequent request in that bucket. Decode plans are cached per
+//!   (bucket, cache-length) — decode graphs are parameterized by `past` —
+//!   so steady-state decoding is all cache hits;
+//! * **preemption instead of rejection** — a request whose price exceeds
 //!   the budget is requeued (with head priority) for a deeper-chunked
 //!   recompile; only when the deepest level still does not fit is it
 //!   rejected ("the memory wall").
@@ -23,17 +33,19 @@
 //! are bitwise identical to the legacy back-to-back path
 //! ([`ServeEngine::serve_serial`]); at any width they remain bitwise
 //! identical because every parallel region in the stack decomposes over
-//! disjoint output slabs (DESIGN.md §8).
+//! disjoint output slabs (DESIGN.md §8). Generated token streams are part
+//! of that contract: decode logits are bitwise identical to re-running
+//! full prefill at the grown length (`rust/tests/decode_parity.rs`).
 
 use crate::coordinator::metrics::{MetricsReport, Recorder};
 use crate::coordinator::request::{Request, RequestOutcome};
 use crate::exec::random_params;
 use crate::ir::Graph;
-use crate::models;
+use crate::models::{self, GptConfig};
 use crate::passes::{autochunk, estimate, AutoChunkConfig, CostQuote};
 use crate::plan::{ExecOptions, PlanHandle};
 use crate::runtime::{ArtifactMeta, Registry};
-use crate::tensor::{numel, DType, MemoryTracker, Tensor};
+use crate::tensor::{numel, DType, KvCache, MemoryTracker, Tensor};
 use crate::util::error::Result;
 use crate::util::pool;
 use std::collections::{HashMap, VecDeque};
@@ -43,14 +55,19 @@ use std::time::Instant;
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     /// Model family: `gpt` | `gpt-fused` | `vit` | `evoformer` | `unet`.
+    /// Generation (`max_new_tokens > 0`) requires a gpt family.
     pub model: String,
     /// Global activation-memory budget (bytes) each wave is packed under.
+    /// Resident KV caches count against it for their whole lifetime.
     pub budget_bytes: usize,
-    /// Max co-resident requests per wave regardless of memory.
+    /// Max co-resident wave entries (prefills + decode steps) regardless
+    /// of memory.
     pub max_batch: usize,
     /// Sequence buckets (ascending); a request routes to the smallest
-    /// bucket that holds it. Per-model scale knob (tokens, patches,
-    /// residues, image side).
+    /// bucket that holds its *total* footprint ([`Request::total_len`]:
+    /// prompt plus fed-back generated positions — the KV cache is
+    /// capacity-shaped at the bucket). Per-model scale knob (tokens,
+    /// patches, residues, image side).
     pub buckets: Vec<usize>,
     /// Pool width while serving (0 = inherit `AUTOCHUNK_THREADS`).
     pub worker_threads: usize,
@@ -86,6 +103,19 @@ impl Default for EngineConfig {
     }
 }
 
+/// Which compiled graph a plan-cache entry holds (DESIGN.md §13).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum PlanKind {
+    /// Legacy prefill-only request graph (the model as-is).
+    Prefill,
+    /// Causal prefill emitting the KV-cache seed (generation path).
+    PrefillKv,
+    /// One decode step against a cache of logical length `past`.
+    Decode { past: usize },
+    /// Hidden-row → logits head (token selection; length-independent).
+    LmHead,
+}
+
 /// The engine's answer for one request. Carries the full model output so
 /// determinism can be asserted bitwise against the serial path.
 #[derive(Clone, Debug)]
@@ -101,8 +131,14 @@ pub struct EngineResponse {
     /// Queueing delay in ticks between arrival and admission.
     pub wait_ticks: u64,
     pub latency_us: u64,
-    /// Flattened first model output (empty when rejected).
+    /// Flattened first model output: final hidden states for prefill-only
+    /// requests, the *last step's logits* for generation (empty when
+    /// rejected).
     pub output: Vec<f32>,
+    /// Generated token ids (empty for prefill-only requests).
+    pub tokens: Vec<i32>,
+    /// Decode steps executed (generated tokens beyond the prefill's).
+    pub decode_steps: usize,
 }
 
 impl EngineResponse {
@@ -116,6 +152,8 @@ impl EngineResponse {
             wait_ticks: 0,
             latency_us: 0,
             output: Vec::new(),
+            tokens: Vec::new(),
+            decode_steps: 0,
         }
     }
 }
@@ -128,20 +166,114 @@ struct Pending {
     depth: usize,
 }
 
+/// An admitted generation mid-decode: its cache and token stream.
+struct GenState {
+    idx: usize,
+    bucket: usize,
+    depth: usize,
+    plan_tag: String,
+    cache: KvCache,
+    /// Generated ids so far (the last one's K/V are not yet cached — it
+    /// is the next decode step's input token).
+    tokens: Vec<i32>,
+    /// Cache logical length == absolute position of the next input token.
+    past: usize,
+    last_logits: Vec<f32>,
+    wait_ticks: u64,
+    latency_us: u64,
+    decode_steps: usize,
+}
+
+impl GenState {
+    fn next_input_token(&self) -> i32 {
+        *self.tokens.last().expect("generation holds at least the prefill token")
+    }
+}
+
+/// One admitted wave entry (handles resolved before execution so the
+/// parallel section never touches the plan cache).
+enum WaveEntry {
+    /// A prefill: `lm` is bound iff the request generates.
+    Prefill {
+        p: Pending,
+        bucket: usize,
+        h: PlanHandle,
+        lm: Option<PlanHandle>,
+    },
+    /// One decode step for `gens[gi]`.
+    Decode {
+        gi: usize,
+        h: PlanHandle,
+        lm: PlanHandle,
+    },
+}
+
+/// Result of one executed wave entry. A `Step` is either a generation
+/// prefill or a decode step — the paired [`WaveEntry`] discriminates.
+enum WaveOut {
+    Plain {
+        latency_us: u64,
+        out: Vec<f32>,
+    },
+    Step {
+        latency_us: u64,
+        outs: Vec<Tensor>,
+        logits: Vec<f32>,
+        token: i32,
+    },
+}
+
 #[derive(Clone, Copy)]
 enum Mode {
     Continuous,
     Serial,
 }
 
+/// Deterministic greedy token selection: strict `>` comparison, lowest
+/// index wins ties (NaN never wins). Load-bearing for the bitwise
+/// stream-parity contract — the parity tests and benches share this
+/// exact rule.
+pub fn greedy_argmax(v: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate() {
+        if x > v[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Zero-pad (or truncate) a token prompt to `len` — the engine's bucket
+/// padding rule, shared with the parity tests and benches.
+pub fn pad_prompt(tokens: &[i32], len: usize) -> Vec<i32> {
+    let mut v = vec![0i32; len];
+    let n = tokens.len().min(len);
+    v[..n].copy_from_slice(&tokens[..n]);
+    v
+}
+
+/// The gpt-family config for a bucket, or None for non-generative models.
+fn gpt_cfg(model: &str, bucket: usize) -> Option<GptConfig> {
+    match model {
+        "gpt" => Some(GptConfig { seq: bucket, causal: true, ..Default::default() }),
+        "gpt-fused" => Some(GptConfig {
+            seq: bucket,
+            fused_attention: true,
+            causal: true,
+            ..Default::default()
+        }),
+        _ => None,
+    }
+}
+
 /// Continuous-batching serve engine (native interpreter backend).
 pub struct ServeEngine {
     config: EngineConfig,
-    cache: HashMap<(usize, usize), PlanHandle>,
+    cache: HashMap<(PlanKind, usize, usize), PlanHandle>,
     params: HashMap<usize, Vec<Tensor>>,
-    /// Unchunked estimated peak per bucket (the deepening ladder's base),
-    /// computed once per bucket rather than once per (bucket, depth).
-    baselines: HashMap<usize, usize>,
+    /// Unchunked estimated peak per (kind, bucket) (the deepening
+    /// ladder's base), computed once rather than once per depth.
+    baselines: HashMap<(PlanKind, usize), usize>,
     registry: Registry,
     cache_hits: usize,
     cache_misses: usize,
@@ -182,49 +314,106 @@ impl ServeEngine {
     }
 
     /// Per-request cost quote at a deepening level: what admission control
-    /// would charge a request of `seq_len` (compiling and caching the
+    /// would charge a prefill of `seq_len` (compiling and caching the
     /// bucket's plan if needed).
     pub fn quote(&mut self, seq_len: usize, depth: usize) -> Result<Option<(usize, CostQuote)>> {
         let Some(bucket) = self.bucket_for(seq_len) else {
             return Ok(None);
         };
-        let h = self.handle(bucket, depth)?;
+        let h = self.handle(PlanKind::Prefill, bucket, depth)?;
         Ok(Some((bucket, *h.quote())))
     }
 
-    /// Compile (once) and cache the plan for a (bucket, depth) pair.
-    fn handle(&mut self, bucket: usize, depth: usize) -> Result<PlanHandle> {
-        if let Some(h) = self.cache.get(&(bucket, depth)) {
+    /// Resident bytes one full-capacity KV cache pins in `bucket`
+    /// (0 for non-generative models).
+    pub fn kv_bytes(&self, bucket: usize) -> usize {
+        gpt_cfg(&self.config.model, bucket).map(|c| c.kv_cache_bytes()).unwrap_or(0)
+    }
+
+    /// The bucket's shared weight set (generated once per bucket; every
+    /// graph kind is parameter-compatible by construction).
+    fn full_params(&mut self, bucket: usize) -> Result<Vec<Tensor>> {
+        if let Some(p) = self.params.get(&bucket) {
+            return Ok(p.clone());
+        }
+        let g = build_model(&self.config.model, bucket)?;
+        let p = random_params(&g, 0xC0DE + bucket as u64);
+        self.params.insert(bucket, p.clone());
+        Ok(p)
+    }
+
+    fn build_graph(&self, kind: PlanKind, bucket: usize) -> Result<Graph> {
+        match kind {
+            PlanKind::Prefill => build_model(&self.config.model, bucket),
+            _ => {
+                let Some(cfg) = gpt_cfg(&self.config.model, bucket) else {
+                    crate::bail!(
+                        "generation requires a gpt-family model, got '{}'",
+                        self.config.model
+                    );
+                };
+                Ok(match kind {
+                    PlanKind::PrefillKv => models::gpt_prefill_kv(&cfg),
+                    PlanKind::Decode { past } => models::gpt_decode(&cfg, past),
+                    PlanKind::LmHead => models::gpt_lm_head(&cfg),
+                    PlanKind::Prefill => unreachable!(),
+                })
+            }
+        }
+    }
+
+    /// Compile (once) and cache the plan for a (kind, bucket, depth)
+    /// triple. Decode steps and the LM head are always dense (their peaks
+    /// are O(seq·d) — nothing to chunk).
+    fn handle(&mut self, kind: PlanKind, bucket: usize, depth: usize) -> Result<PlanHandle> {
+        let key = (kind, bucket, depth);
+        if let Some(h) = self.cache.get(&key) {
             self.cache_hits += 1;
             return Ok(h.clone());
         }
         self.cache_misses += 1;
-        let graph = build_model(&self.config.model, bucket)?;
-        let params = self
-            .params
-            .entry(bucket)
-            .or_insert_with(|| random_params(&graph, 0xC0DE + bucket as u64))
-            .clone();
+        let graph = self.build_graph(kind, bucket)?;
+        let full = self.full_params(bucket)?;
+        let params = match kind {
+            // weight-tied head: wteᵀ materialized once per bucket
+            PlanKind::LmHead => models::lm_head_params(&full),
+            _ => full,
+        };
         // Depth ladder relative to the model's own baseline (independent
         // of the budget, so the same cache serves any budget): level 0 is
         // dense, level d targets baseline >> d.
-        let plans = if depth == 0 {
+        let chunkable = matches!(kind, PlanKind::Prefill | PlanKind::PrefillKv);
+        let plans = if depth == 0 || !chunkable {
             Vec::new()
         } else {
+            let base_key = (kind, bucket);
             let base = *self
                 .baselines
-                .entry(bucket)
+                .entry(base_key)
                 .or_insert_with(|| estimate(&graph).peak_bytes);
             autochunk(&graph, (base >> depth).max(1), &self.config.compile).plans
         };
-        let tag = format!("{}_native_s{}_d{}", self.config.model, bucket, depth);
+        let tag = match kind {
+            PlanKind::Prefill => format!("{}_native_s{}_d{}", self.config.model, bucket, depth),
+            PlanKind::PrefillKv => format!("{}_prefill_s{}_d{}", self.config.model, bucket, depth),
+            PlanKind::Decode { past } => {
+                format!("{}_decode_s{}_p{}", self.config.model, bucket, past)
+            }
+            PlanKind::LmHead => format!("{}_lmhead_s{}", self.config.model, bucket),
+        };
         let h = PlanHandle::new(&tag, graph, plans, params);
         let out_shape = h.graph().node(h.graph().outputs[0]).shape.clone();
         self.registry.register(ArtifactMeta {
             tag: tag.clone(),
             hlo_path: String::new(),
             model: self.config.model.clone(),
-            mode: if depth == 0 { "native-dense" } else { "native-chunked" }.into(),
+            mode: match kind {
+                PlanKind::Prefill | PlanKind::PrefillKv if depth > 0 => "native-chunked",
+                PlanKind::Decode { .. } => "native-decode",
+                PlanKind::LmHead => "native-lmhead",
+                _ => "native-dense",
+            }
+            .into(),
             seq: bucket,
             d_model: 0,
             heads: 0,
@@ -236,7 +425,7 @@ impl ServeEngine {
             est_activation_bytes: h.quote().peak_bytes,
             output_shape: out_shape,
         });
-        self.cache.insert((bucket, depth), h.clone());
+        self.cache.insert(key, h.clone());
         Ok(h)
     }
 
@@ -249,9 +438,11 @@ impl ServeEngine {
         pool::with_threads(width, || self.serve_inner(requests, Mode::Continuous))
     }
 
-    /// Legacy back-to-back path: one request per wave, in arrival order —
-    /// the PR-1 `serve()` semantics on the native backend. Kept as the
-    /// determinism baseline and the bench's throughput baseline.
+    /// Legacy back-to-back path: one wave entry at a time, in arrival
+    /// order (a generation runs prefill + every decode step before the
+    /// next request starts) — the PR-1 `serve()` semantics on the native
+    /// backend. Kept as the determinism baseline and the bench's
+    /// throughput baseline.
     pub fn serve_serial(
         &mut self,
         requests: &[Request],
@@ -267,9 +458,8 @@ impl ServeEngine {
     /// planner's exact bound in arena mode (the certified bound for what
     /// the arena executor actually runs — never substituted by the quote,
     /// which can under-model batch-expansion workspace), else the quote.
-    /// The quote remains the reported cross-check ceiling: it is almost
-    /// always the larger number, and `estimate::planner_gap` surfaces the
-    /// difference per plan.
+    /// Persistent (cache) inputs are excluded on both sides — the engine
+    /// charges resident KV bytes separately.
     fn admission_cost(use_arena: bool, h: &PlanHandle) -> usize {
         if use_arena {
             h.memplan().admission_bytes(1)
@@ -300,18 +490,49 @@ impl ServeEngine {
             Mode::Continuous => self.config.max_batch.max(1),
         };
         let mut clock: u64 = 0;
+        let mut gens: Vec<GenState> = Vec::new();
+        let mut stalled_rounds = 0usize;
 
-        while !queue.is_empty() {
-            // Fast-forward the virtual clock to the next arrival.
-            let head_arrival = requests[queue[0].idx].arrival_tick;
-            if head_arrival > clock {
-                clock = head_arrival;
+        while !queue.is_empty() || !gens.is_empty() {
+            // Fast-forward the virtual clock to the next arrival when no
+            // decode work is pending.
+            if gens.is_empty() {
+                if let Some(head) = queue.front() {
+                    let arrival = requests[head.idx].arrival_tick;
+                    if arrival > clock {
+                        clock = arrival;
+                    }
+                }
             }
 
-            // ---- admission: pack one wave under the budget
-            let mut wave: Vec<(Pending, usize, PlanHandle)> = Vec::new();
+            // Live caches hold their bytes whether or not they execute
+            // this wave: admission packs the *remaining* budget.
+            let resident: usize = gens.iter().map(|g| g.cache.bytes()).sum();
+            let mut remaining = self.config.budget_bytes.saturating_sub(resident);
+            let mut wave: Vec<WaveEntry> = Vec::new();
+
+            // ---- decode admission: one step per active generation, in
+            // admission order (decode-first keeps caches short-lived,
+            // freeing resident bytes fastest).
+            for gi in 0..gens.len() {
+                if wave.len() >= max_batch {
+                    break;
+                }
+                let (bucket, past) = (gens[gi].bucket, gens[gi].past);
+                let h = self.handle(PlanKind::Decode { past }, bucket, 0)?;
+                let lm = self.handle(PlanKind::LmHead, bucket, 0)?;
+                // the step price covers token selection too: the LM head
+                // runs inside the same wave entry
+                let cost = Self::admission_cost(self.config.use_arena, &h)
+                    + Self::admission_cost(self.config.use_arena, &lm);
+                if cost <= remaining {
+                    remaining -= cost;
+                    wave.push(WaveEntry::Decode { gi, h, lm });
+                }
+            }
+
+            // ---- prefill admission: pack the rest of the wave
             let mut retry: Vec<Pending> = Vec::new();
-            let mut remaining = self.config.budget_bytes;
             let mut scan = 0usize;
             while scan < queue.len() && wave.len() < max_batch {
                 if requests[queue[scan].idx].arrival_tick > clock {
@@ -319,14 +540,48 @@ impl ServeEngine {
                 }
                 let p = queue[scan];
                 let req = &requests[p.idx];
-                let Some(bucket) = self.bucket_for(req.seq_len) else {
+                let generative = req.max_new_tokens > 0;
+                // Generation routes by total footprint: the cache is
+                // capacity-shaped at the bucket and must hold the prompt
+                // plus every generated position.
+                let Some(bucket) = self.bucket_for(req.total_len()) else {
                     queue.remove(scan);
                     recorder.rejected += 1;
                     responses.push(EngineResponse::rejected(req.id, p.depth));
                     continue;
                 };
-                let h = self.handle(bucket, p.depth)?;
-                let cost = Self::admission_cost(self.config.use_arena, &h);
+                if generative && (gpt_cfg(&self.config.model, bucket).is_none() || req.seq_len == 0)
+                {
+                    // generation is only defined for the gpt family, and
+                    // needs at least one prompt token to seed the cache
+                    queue.remove(scan);
+                    recorder.rejected += 1;
+                    responses.push(EngineResponse::rejected(req.id, p.depth));
+                    continue;
+                }
+                let kind = if generative { PlanKind::PrefillKv } else { PlanKind::Prefill };
+                let h = self.handle(kind, bucket, p.depth)?;
+                // Multi-token generations reserve their cache up front so
+                // seeding can never overshoot the budget; every generative
+                // prefill also pays for its in-wave LM-head call.
+                let mut extra = 0usize;
+                if generative {
+                    if req.max_new_tokens > 1 {
+                        extra += self.kv_bytes(bucket);
+                    }
+                    let lm = self.handle(PlanKind::LmHead, bucket, 0)?;
+                    extra += Self::admission_cost(self.config.use_arena, &lm);
+                }
+                if extra >= self.config.budget_bytes {
+                    // The irreducible floor (cache + LM head) already
+                    // exceeds the budget: no chunk depth can help — reject
+                    // now instead of burning max_deepen recompiles.
+                    queue.remove(scan);
+                    recorder.rejected += 1;
+                    responses.push(EngineResponse::rejected(req.id, p.depth));
+                    continue;
+                }
+                let cost = Self::admission_cost(self.config.use_arena, &h) + extra;
                 if cost > self.config.budget_bytes {
                     // Oversized for the device at this depth.
                     queue.remove(scan);
@@ -343,7 +598,12 @@ impl ServeEngine {
                 if cost <= remaining {
                     remaining -= cost;
                     queue.remove(scan);
-                    wave.push((p, bucket, h));
+                    let lm = if generative {
+                        Some(self.handle(PlanKind::LmHead, bucket, 0)?)
+                    } else {
+                        None
+                    };
+                    wave.push(WaveEntry::Prefill { p, bucket, h, lm });
                     continue;
                 }
                 // Fits the device but not this wave: leave it and keep
@@ -359,65 +619,250 @@ impl ServeEngine {
             }
 
             if wave.is_empty() {
-                // Only retries/rejections this tick: advance time.
+                // Only retries/rejections/arrival-waits this tick.
+                if !gens.is_empty() {
+                    // Budget-stalled decode is a livelock (resident caches
+                    // block the very steps that would free them): after a
+                    // grace round, evict the head generation.
+                    stalled_rounds += 1;
+                    if stalled_rounds > 2 {
+                        let g = gens.remove(0);
+                        recorder.rejected += 1;
+                        responses.push(EngineResponse::rejected(requests[g.idx].id, g.depth));
+                        stalled_rounds = 0;
+                    }
+                }
                 clock += 1;
                 continue;
             }
+            stalled_rounds = 0;
 
-            // ---- execute the wave: co-resident requests run concurrently
-            // on the pool. Leftover headroom (budget − Σ admitted costs)
-            // is split evenly across entries and handed to each entry's
-            // chunk-concurrency governor: entry i may spend
-            // `cost_i + share` bytes, so the wave total stays ≤ budget.
-            // In arena mode the governor prices lanes with the planner's
-            // exact numbers, so no bound-vs-estimate gap is reserved.
+            // ---- execute the wave: co-resident entries run concurrently
+            // on the pool. Leftover headroom (budget − resident − Σ
+            // admitted costs) is split evenly across entries and handed to
+            // each prefill's chunk-concurrency governor, so the wave total
+            // stays ≤ budget. Decode steps and the LM head are unchunked —
+            // they run without a governor budget (exact serial loop).
             let per_entry_threads = (pool::num_threads() / wave.len()).max(1);
             let share = remaining / wave.len();
             let use_arena = self.config.use_arena;
+            let tick_us = self.config.tick_us;
             let entries = wave;
-            let results: Vec<(u64, Vec<f32>)> = pool::parallel_map(entries.len(), |wi| {
-                let (p, _bucket, h) = &entries[wi];
-                let req = &requests[p.idx];
-                pool::with_threads(per_entry_threads, || {
-                    let started = Instant::now();
-                    let ins = request_inputs(h.graph(), req, &tracker);
-                    let entry_budget = Self::admission_cost(use_arena, h) + share;
-                    let opts = ExecOptions {
-                        budget_bytes: Some(if use_arena {
-                            entry_budget
-                        } else {
-                            h.quote().governor_budget(entry_budget)
-                        }),
-                        use_arena,
-                    };
-                    let (outs, _stats) = h.execute(&ins, &tracker, &opts);
-                    let out = outs[0].to_vec_f32();
-                    (started.elapsed().as_micros() as u64, out)
-                })
+            let gens_ro: &Vec<GenState> = &gens;
+            let results: Vec<WaveOut> = pool::parallel_map(entries.len(), |wi| {
+                let light_opts = ExecOptions { budget_bytes: None, use_arena };
+                match &entries[wi] {
+                    WaveEntry::Prefill { p, h, lm, .. } => {
+                        let req = &requests[p.idx];
+                        pool::with_threads(per_entry_threads, || {
+                            let started = Instant::now();
+                            let ins = request_inputs(h.graph(), req, &tracker);
+                            let entry_budget = Self::admission_cost(use_arena, h) + share;
+                            let opts = ExecOptions {
+                                budget_bytes: Some(if use_arena {
+                                    entry_budget
+                                } else {
+                                    h.quote().governor_budget(entry_budget)
+                                }),
+                                use_arena,
+                            };
+                            let (outs, _stats) = h.execute(&ins, &tracker, &opts);
+                            drop(ins);
+                            match lm {
+                                None => WaveOut::Plain {
+                                    latency_us: started.elapsed().as_micros() as u64,
+                                    out: outs[0].to_vec_f32(),
+                                },
+                                Some(lm) => {
+                                    // token 1 comes off the prompt's last row
+                                    let plen = req.seq_len.max(1);
+                                    let hrow = outs[0]
+                                        .slice_axis(0, plen - 1, 1)
+                                        .to_contiguous(Some(tracker.clone()));
+                                    let (louts, _) = lm.execute(&[hrow], &tracker, &light_opts);
+                                    let logits = louts[0].to_vec_f32();
+                                    let token = greedy_argmax(&logits);
+                                    WaveOut::Step {
+                                        latency_us: started.elapsed().as_micros() as u64,
+                                        outs,
+                                        logits,
+                                        token,
+                                    }
+                                }
+                            }
+                        })
+                    }
+                    WaveEntry::Decode { gi, h, lm } => {
+                        let g = &gens_ro[*gi];
+                        pool::with_threads(per_entry_threads, || {
+                            let started = Instant::now();
+                            let mut ins: Vec<Tensor> =
+                                Vec::with_capacity(1 + 2 * g.cache.layers());
+                            ins.push(Tensor::from_i32(
+                                vec![g.next_input_token()],
+                                &[1],
+                                Some(tracker.clone()),
+                            ));
+                            for l in 0..g.cache.layers() {
+                                ins.push(g.cache.k_full(l));
+                                ins.push(g.cache.v_full(l));
+                            }
+                            let (outs, _stats) = h.execute(&ins, &tracker, &light_opts);
+                            drop(ins); // release cache views before the append
+                            let hrow = outs[0].to_contiguous(Some(tracker.clone()));
+                            let (louts, _) = lm.execute(&[hrow], &tracker, &light_opts);
+                            let logits = louts[0].to_vec_f32();
+                            let token = greedy_argmax(&logits);
+                            WaveOut::Step {
+                                latency_us: started.elapsed().as_micros() as u64,
+                                outs,
+                                logits,
+                                token,
+                            }
+                        })
+                    }
+                }
             });
-            for ((p, bucket, h), (latency_us, output)) in entries.into_iter().zip(results) {
-                let req = &requests[p.idx];
-                let wait_ticks = clock - req.arrival_tick;
-                recorder.record(h.tag(), latency_us, req.seq_len);
-                recorder.record_wait(wait_ticks * self.config.tick_us);
+
+            // ---- post-wave bookkeeping (serial, entry order: results are
+            // deterministic at any pool width)
+            let mut finished: Vec<usize> = Vec::new();
+            for (entry, out) in entries.iter().zip(results) {
+                match (entry, out) {
+                    (
+                        WaveEntry::Prefill { p, bucket, h, lm: None },
+                        WaveOut::Plain { latency_us, out },
+                    ) => {
+                        let req = &requests[p.idx];
+                        let wait_ticks = clock - req.arrival_tick;
+                        recorder.record(h.tag(), latency_us, req.seq_len);
+                        recorder.record_wait(wait_ticks * tick_us);
+                        responses.push(EngineResponse {
+                            id: req.id,
+                            outcome: RequestOutcome::Completed,
+                            bucket: *bucket,
+                            depth: p.depth,
+                            plan_tag: h.tag().to_string(),
+                            wait_ticks,
+                            latency_us,
+                            output: out,
+                            tokens: Vec::new(),
+                            decode_steps: 0,
+                        });
+                    }
+                    (
+                        WaveEntry::Prefill { p, bucket, h, lm: Some(_) },
+                        WaveOut::Step { latency_us, outs, logits, token },
+                    ) => {
+                        let req = &requests[p.idx];
+                        let wait_ticks = clock - req.arrival_tick;
+                        recorder.record_prefill(latency_us);
+                        if req.max_new_tokens == 1 {
+                            // no decode needed: the prefill's token is it
+                            recorder.record(h.tag(), latency_us, req.seq_len + 1);
+                            recorder.record_wait(wait_ticks * tick_us);
+                            responses.push(EngineResponse {
+                                id: req.id,
+                                outcome: RequestOutcome::Completed,
+                                bucket: *bucket,
+                                depth: p.depth,
+                                plan_tag: h.tag().to_string(),
+                                wait_ticks,
+                                latency_us,
+                                output: logits,
+                                tokens: vec![token],
+                                decode_steps: 0,
+                            });
+                        } else {
+                            let cfg = gpt_cfg(&self.config.model, *bucket)
+                                .expect("guarded at admission");
+                            let mut cache = KvCache::new(
+                                cfg.layers,
+                                cfg.heads,
+                                *bucket,
+                                cfg.head_dim(),
+                                Some(tracker.clone()),
+                            );
+                            for l in 0..cfg.layers {
+                                cache.seed(l, &outs[1 + 2 * l], &outs[2 + 2 * l]);
+                            }
+                            cache.set_len(req.seq_len);
+                            drop(outs);
+                            gens.push(GenState {
+                                idx: p.idx,
+                                bucket: *bucket,
+                                depth: p.depth,
+                                plan_tag: h.tag().to_string(),
+                                cache,
+                                tokens: vec![token],
+                                past: req.seq_len,
+                                last_logits: logits,
+                                wait_ticks,
+                                latency_us,
+                                decode_steps: 0,
+                            });
+                        }
+                    }
+                    (
+                        WaveEntry::Decode { gi, .. },
+                        WaveOut::Step { latency_us, outs, logits, token },
+                    ) => {
+                        let g = &mut gens[*gi];
+                        recorder.record_decode(latency_us);
+                        g.latency_us += latency_us;
+                        for l in 0..g.cache.layers() {
+                            g.cache.append(l, &outs[1 + 2 * l], &outs[2 + 2 * l]);
+                        }
+                        drop(outs);
+                        g.cache.advance();
+                        g.past += 1;
+                        g.tokens.push(token);
+                        g.last_logits = logits;
+                        g.decode_steps += 1;
+                        if g.tokens.len() >= requests[g.idx].max_new_tokens {
+                            finished.push(*gi);
+                        }
+                    }
+                    _ => unreachable!("wave entry/result kind mismatch"),
+                }
+            }
+
+            // High-water resident KV: after this wave's caches were
+            // seeded, before finished generations evict.
+            let resident_now: usize = gens.iter().map(|g| g.cache.bytes()).sum();
+            recorder.observe_resident_kv(resident_now);
+
+            // Eviction: finished generations release their caches (and
+            // their resident bytes) immediately.
+            finished.sort_unstable();
+            for &gi in finished.iter().rev() {
+                let g = gens.remove(gi);
+                let req = &requests[g.idx];
+                recorder.record(g.plan_tag.as_str(), g.latency_us, req.seq_len + g.tokens.len());
+                recorder.record_wait(g.wait_ticks * tick_us);
                 responses.push(EngineResponse {
                     id: req.id,
                     outcome: RequestOutcome::Completed,
-                    bucket,
-                    depth: p.depth,
-                    plan_tag: h.tag().to_string(),
-                    wait_ticks,
-                    latency_us,
-                    output,
+                    bucket: g.bucket,
+                    depth: g.depth,
+                    plan_tag: g.plan_tag,
+                    wait_ticks: g.wait_ticks,
+                    latency_us: g.latency_us,
+                    output: g.last_logits,
+                    tokens: g.tokens,
+                    decode_steps: g.decode_steps,
                 });
             }
+
             recorder.waves += 1;
             clock += 1;
         }
 
+        debug_assert!(gens.is_empty(), "serve loop exited with live generations");
         recorder.cache_hits = self.cache_hits - hits0;
         recorder.cache_misses = self.cache_misses - miss0;
         recorder.measured_peak_bytes = tracker.peak();
+        recorder.measured_final_bytes = tracker.current();
         responses.sort_by_key(|r| r.id);
         let report = recorder.finish(t0.elapsed());
         Ok((responses, report))
@@ -456,9 +901,7 @@ fn request_inputs(graph: &Graph, req: &Request, tracker: &MemoryTracker) -> Vec<
             let count = numel(&node.shape);
             match node.dtype {
                 DType::I32 => {
-                    let mut v = vec![0i32; count];
-                    let n = req.tokens.len().min(count);
-                    v[..n].copy_from_slice(&req.tokens[..n]);
+                    let v = pad_prompt(&req.tokens, count);
                     Tensor::from_i32(v, &node.shape, Some(tracker.clone()))
                 }
                 DType::F32 => {
@@ -545,6 +988,70 @@ mod tests {
             assert!(!r.output.is_empty());
             assert!(r.output.iter().all(|x| x.is_finite()));
         }
+    }
+
+    #[test]
+    fn generation_produces_tokens_and_evicts() {
+        let mut e = tiny_engine(1 << 30);
+        let reqs = vec![Request::new(0, 6, 3).generate(4).at_tick(0, 500)];
+        let (resp, report) = e.serve(&reqs).unwrap();
+        assert_eq!(resp.len(), 1);
+        let r = &resp[0];
+        assert_eq!(r.outcome, RequestOutcome::Completed);
+        assert_eq!(r.tokens.len(), 4, "{:?}", r.tokens);
+        assert_eq!(r.decode_steps, 3);
+        assert!(r.plan_tag.contains("prefill"), "{}", r.plan_tag);
+        assert!(r.output.iter().all(|x| x.is_finite()));
+        // metrics: decode breakdown + resident high water, evicted at end
+        assert_eq!(report.generated_tokens, 3, "decode-step tokens");
+        assert!(report.decode_p99_us >= report.decode_p50_us);
+        assert!(report.prefill_p99_us > 0);
+        let kv = e.kv_bytes(16);
+        assert!(kv > 0);
+        assert_eq!(report.resident_kv_high_water_bytes, kv);
+        assert!(report.measured_peak_bytes >= kv);
+        assert_eq!(report.measured_final_bytes, 0, "cache not evicted");
+    }
+
+    #[test]
+    fn generation_routes_by_total_footprint() {
+        let mut e = tiny_engine(1 << 30);
+        // prompt 12 fits bucket 16, but 12 + 7 fed-back positions (8
+        // generated, the last never re-embedded) needs bucket 32
+        let reqs = vec![Request::new(0, 12, 1).generate(8)];
+        let (resp, _) = e.serve(&reqs).unwrap();
+        assert_eq!(resp[0].outcome, RequestOutcome::Completed);
+        assert_eq!(resp[0].bucket, 32);
+        // and an over-capacity generation is rejected outright
+        let reqs = vec![Request::new(1, 30, 1).generate(8)];
+        let (resp, _) = e.serve(&reqs).unwrap();
+        assert_eq!(resp[0].outcome, RequestOutcome::Rejected);
+    }
+
+    #[test]
+    fn single_token_generation_skips_decode() {
+        let mut e = tiny_engine(1 << 30);
+        let reqs = vec![Request::new(0, 8, 2).generate(1)];
+        let (resp, report) = e.serve(&reqs).unwrap();
+        assert_eq!(resp[0].tokens.len(), 1);
+        assert_eq!(resp[0].decode_steps, 0);
+        assert_eq!(report.generated_tokens, 0, "no decode steps ran");
+        assert_eq!(report.resident_kv_high_water_bytes, 0, "no cache bound");
+    }
+
+    #[test]
+    fn generation_on_non_gpt_model_rejected() {
+        let mut e = ServeEngine::new(EngineConfig {
+            model: "vit".into(),
+            budget_bytes: 1 << 30,
+            buckets: vec![16],
+            worker_threads: 1,
+            ..EngineConfig::default()
+        });
+        let reqs = vec![Request::new(0, 8, 1).generate(2)];
+        let (resp, report) = e.serve(&reqs).unwrap();
+        assert_eq!(resp[0].outcome, RequestOutcome::Rejected);
+        assert_eq!(report.rejected, 1);
     }
 
     #[test]

@@ -8,6 +8,11 @@ use std::time::Duration;
 pub struct Recorder {
     latencies_us: Vec<u64>,
     waits_us: Vec<u64>,
+    /// Per-phase execution latencies (generation path, DESIGN.md §13):
+    /// one prefill sample per admitted prefill, one decode sample per
+    /// decode step.
+    prefill_us: Vec<u64>,
+    decode_us: Vec<u64>,
     tokens: usize,
     pub per_variant: HashMap<String, usize>,
     pub waves: usize,
@@ -19,6 +24,14 @@ pub struct Recorder {
     pub cache_misses: usize,
     /// Measured (allocator-tracked) peak activation bytes across the run.
     pub measured_peak_bytes: usize,
+    /// Tracked bytes still live when the run finished (0 when every
+    /// intermediate, input, and KV cache was released — the eviction
+    /// contract the engine tests pin).
+    pub measured_final_bytes: usize,
+    /// Tokens produced by autoregressive generation.
+    pub generated_tokens: usize,
+    /// High-water mark of resident KV-cache bytes across the run.
+    pub resident_kv_high_water_bytes: usize,
 }
 
 impl Recorder {
@@ -37,10 +50,29 @@ impl Recorder {
         self.waits_us.push(wait_us);
     }
 
+    /// One prefill execution's wall time.
+    pub fn record_prefill(&mut self, us: u64) {
+        self.prefill_us.push(us);
+    }
+
+    /// One decode step's wall time (including token selection).
+    pub fn record_decode(&mut self, us: u64) {
+        self.decode_us.push(us);
+        self.generated_tokens += 1;
+    }
+
+    /// Observe the current resident KV-cache footprint (call after each
+    /// wave; the report keeps the high-water mark).
+    pub fn observe_resident_kv(&mut self, bytes: usize) {
+        self.resident_kv_high_water_bytes = self.resident_kv_high_water_bytes.max(bytes);
+    }
+
     /// Close the run and compute the report.
     pub fn finish(mut self, wall: Duration) -> MetricsReport {
         self.latencies_us.sort_unstable();
         self.waits_us.sort_unstable();
+        self.prefill_us.sort_unstable();
+        self.decode_us.sort_unstable();
         let completed = self.latencies_us.len();
         let pct = |v: &[u64], p: f64| -> u64 {
             if v.is_empty() {
@@ -58,6 +90,7 @@ impl Recorder {
             cache_hits: self.cache_hits,
             cache_misses: self.cache_misses,
             measured_peak_bytes: self.measured_peak_bytes,
+            measured_final_bytes: self.measured_final_bytes,
             wall_seconds: wall_s,
             throughput_rps: completed as f64 / wall_s,
             throughput_tokens_s: self.tokens as f64 / wall_s,
@@ -66,6 +99,13 @@ impl Recorder {
             p99_us: pct(&self.latencies_us, 0.99),
             wait_p50_us: pct(&self.waits_us, 0.50),
             wait_p99_us: pct(&self.waits_us, 0.99),
+            prefill_p50_us: pct(&self.prefill_us, 0.50),
+            prefill_p99_us: pct(&self.prefill_us, 0.99),
+            decode_p50_us: pct(&self.decode_us, 0.50),
+            decode_p99_us: pct(&self.decode_us, 0.99),
+            decode_steps: self.decode_us.len(),
+            generated_tokens: self.generated_tokens,
+            resident_kv_high_water_bytes: self.resident_kv_high_water_bytes,
             mean_us: if completed == 0 {
                 0
             } else {
@@ -90,6 +130,9 @@ pub struct MetricsReport {
     /// Measured peak activation bytes across the run (0 when the backend
     /// does not track allocations, e.g. the PJRT tier).
     pub measured_peak_bytes: usize,
+    /// Tracked bytes still live at run end (eviction soundness: 0 when
+    /// all caches were released).
+    pub measured_final_bytes: usize,
     pub wall_seconds: f64,
     pub throughput_rps: f64,
     pub throughput_tokens_s: f64,
@@ -99,6 +142,20 @@ pub struct MetricsReport {
     /// Queueing-delay percentiles (admission tick − arrival tick).
     pub wait_p50_us: u64,
     pub wait_p99_us: u64,
+    /// Prefill vs decode execution-latency breakdown (generation path;
+    /// zeros when the run generated nothing).
+    pub prefill_p50_us: u64,
+    pub prefill_p99_us: u64,
+    pub decode_p50_us: u64,
+    pub decode_p99_us: u64,
+    /// Decode steps executed across the run.
+    pub decode_steps: usize,
+    /// Tokens produced by autoregressive generation.
+    pub generated_tokens: usize,
+    /// High-water mark of resident KV-cache bytes (0 when no caches were
+    /// bound; always ≤ measured peak since caches allocate on the run's
+    /// tracker).
+    pub resident_kv_high_water_bytes: usize,
     pub mean_us: u64,
     pub per_variant: HashMap<String, usize>,
 }
@@ -113,7 +170,7 @@ impl MetricsReport {
             .map(|(k, v)| format!("{k}:{v}"))
             .collect::<Vec<_>>()
             .join(" ");
-        format!(
+        let mut s = format!(
             "completed={} rejected={} preempted={} waves={} wall={:.2}s\n\
              throughput={:.2} req/s ({:.0} tok/s)\n\
              latency mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms\n\
@@ -135,7 +192,21 @@ impl MetricsReport {
             self.cache_hits,
             self.cache_misses,
             self.measured_peak_bytes as f64 / (1 << 20) as f64,
-        )
+        );
+        if self.generated_tokens > 0 {
+            s.push_str(&format!(
+                "\ngenerated {} tokens in {} decode steps | prefill p50={:.2}ms p99={:.2}ms | \
+                 decode p50={:.2}ms p99={:.2}ms | resident kv high-water {:.1} MiB",
+                self.generated_tokens,
+                self.decode_steps,
+                self.prefill_p50_us as f64 / 1e3,
+                self.prefill_p99_us as f64 / 1e3,
+                self.decode_p50_us as f64 / 1e3,
+                self.decode_p99_us as f64 / 1e3,
+                self.resident_kv_high_water_bytes as f64 / (1 << 20) as f64,
+            ));
+        }
+        s
     }
 }
 
@@ -186,6 +257,40 @@ mod tests {
         let s = rep.render();
         assert!(s.contains("preempted=2"), "{s}");
         assert!(s.contains("3h/1m"), "{s}");
+    }
+
+    #[test]
+    fn decode_breakdown_percentiles() {
+        let mut r = Recorder::new();
+        r.record("v", 10, 8);
+        r.record_prefill(4000);
+        r.record_prefill(6000);
+        for d in [100u64, 200, 300, 400] {
+            r.record_decode(d);
+        }
+        r.observe_resident_kv(3 << 20);
+        r.observe_resident_kv(1 << 20); // high-water keeps the max
+        let rep = r.finish(Duration::from_secs(1));
+        assert_eq!(rep.generated_tokens, 4);
+        assert_eq!(rep.decode_steps, 4);
+        assert!(rep.prefill_p50_us >= 4000 && rep.prefill_p99_us <= 6000);
+        assert!(rep.decode_p50_us >= 100 && rep.decode_p50_us <= 300);
+        assert_eq!(rep.decode_p99_us, 400);
+        assert!(rep.decode_p99_us >= rep.decode_p50_us);
+        assert_eq!(rep.resident_kv_high_water_bytes, 3 << 20);
+        let s = rep.render();
+        assert!(s.contains("generated 4 tokens"), "{s}");
+        assert!(s.contains("resident kv high-water"), "{s}");
+    }
+
+    #[test]
+    fn prefill_only_run_renders_without_decode_line() {
+        let mut r = Recorder::new();
+        r.record("v", 10, 8);
+        let rep = r.finish(Duration::from_secs(1));
+        assert_eq!(rep.generated_tokens, 0);
+        assert_eq!(rep.decode_p99_us, 0);
+        assert!(!rep.render().contains("generated"));
     }
 
     #[test]

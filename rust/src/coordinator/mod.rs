@@ -24,9 +24,13 @@ pub mod engine;
 pub mod metrics;
 pub mod request;
 
-pub use engine::{EngineConfig, EngineResponse, ServeEngine};
+pub use engine::{
+    greedy_argmax, pad_prompt, EngineConfig, EngineResponse, PlanKind, ServeEngine,
+};
 pub use metrics::{MetricsReport, Recorder};
-pub use request::{open_loop_workload, synthetic_workload, Request, RequestOutcome, Response};
+pub use request::{
+    generate_workload, open_loop_workload, synthetic_workload, Request, RequestOutcome, Response,
+};
 
 use crate::runtime::{ArtifactMeta, Runtime};
 use crate::util::error::{Context, Result};

@@ -1,11 +1,17 @@
 //! Requests, responses, and synthetic workload generation.
 
-/// An inference request (prefill of `tokens`).
+/// An inference request: prefill of `tokens`, optionally followed by
+/// autoregressive generation of `max_new_tokens` tokens against a KV
+/// cache (DESIGN.md §13).
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: usize,
     pub seq_len: usize,
     pub tokens: Vec<i32>,
+    /// Tokens to generate after prefill (0 = prefill-only, the legacy
+    /// request shape). Generation routes to a bucket that holds
+    /// `seq_len + max_new_tokens` so the KV cache never overflows.
+    pub max_new_tokens: usize,
     /// Synthetic arrival offset from workload start (open-loop traces).
     pub arrival_offset_us: u64,
     /// Arrival tick for the continuous-batching engine: the engine's
@@ -24,6 +30,7 @@ impl Request {
             id,
             seq_len,
             tokens,
+            max_new_tokens: 0,
             arrival_offset_us: 0,
             arrival_tick: 0,
         }
@@ -34,6 +41,20 @@ impl Request {
         self.arrival_tick = tick;
         self.arrival_offset_us = tick * tick_us;
         self
+    }
+
+    /// Builder: request `n` generated tokens after prefill.
+    pub fn generate(mut self, n: usize) -> Request {
+        self.max_new_tokens = n;
+        self
+    }
+
+    /// Total sequence footprint the request's bucket must hold: the
+    /// prompt plus every generated position that is fed back. The final
+    /// generated token is returned but never re-embedded or cached, so
+    /// it needs no position of its own.
+    pub fn total_len(&self) -> usize {
+        self.seq_len + self.max_new_tokens.saturating_sub(1)
     }
 }
 
@@ -97,6 +118,36 @@ pub fn open_loop_workload(
         .collect()
 }
 
+/// Open-loop *generation* workload: like [`open_loop_workload`], but every
+/// request also asks for `min_new..=max_new` generated tokens (xorshift
+/// from the same id-stable stream, so traces replay deterministically).
+pub fn generate_workload(
+    count: usize,
+    min_len: usize,
+    max_len: usize,
+    min_new: usize,
+    max_new: usize,
+    seed: u64,
+    per_tick: usize,
+) -> Vec<Request> {
+    assert!(min_new >= 1 && max_new >= min_new);
+    let mut state = seed.wrapping_mul(0xD1B54A32D192ED03) | 1;
+    let mut rnd = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    open_loop_workload(count, min_len, max_len, seed, per_tick)
+        .into_iter()
+        .map(|r| {
+            let span = (max_new - min_new + 1) as u64;
+            let n = min_new + (rnd() % span) as usize;
+            r.generate(n)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,6 +171,18 @@ mod tests {
         assert_eq!(ticks, vec![0, 0, 0, 1, 1, 1, 2, 2, 2]);
         for r in &reqs {
             assert_eq!(r.arrival_offset_us, r.arrival_tick * 500);
+        }
+    }
+
+    #[test]
+    fn generate_workload_sets_new_token_counts() {
+        let a = generate_workload(12, 8, 32, 2, 6, 9, 3);
+        let b = generate_workload(12, 8, 32, 2, 6, 9, 3);
+        assert_eq!(a.len(), 12);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.max_new_tokens, y.max_new_tokens, "not deterministic");
+            assert!((2..=6).contains(&x.max_new_tokens));
+            assert_eq!(x.total_len(), x.seq_len + x.max_new_tokens - 1);
         }
     }
 

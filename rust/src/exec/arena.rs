@@ -24,7 +24,7 @@ use crate::ir::{Graph, Node, Op};
 use crate::passes::memplan::{MemPlan, RegionMemPlan, ValueAction};
 use crate::plan::exec_chunked::{adjust_node, governed_degree, ExecOptions};
 use crate::plan::{region_owner, region_triggers, ChunkPlan};
-use crate::tensor::attention::fused_attention_into;
+use crate::tensor::attention::{fused_attention_into, fused_attention_pos_into};
 use crate::tensor::conv::{avgpool2x_into, conv2d_into};
 use crate::tensor::layout::{concat_into, concat_shape, gather_rows_into, upsample2x_into};
 use crate::tensor::matmul::matmul_into;
@@ -454,7 +454,11 @@ fn exec_materialize(
             .product::<usize>()
             .max(1);
             let mut buf = arena.acquire_f32(slot, batch * sq * dv);
-            let shape = fused_attention_into(q, k, v, *scale, &mut buf, tr.clone());
+            let shape = if node.inputs.len() > 3 {
+                fused_attention_pos_into(q, k, v, arg(3), *scale, &mut buf, tr.clone())
+            } else {
+                fused_attention_into(q, k, v, *scale, &mut buf, tr.clone())
+            };
             Tensor::from_arena_f32(buf, &shape, arena, slot, tr)
         }
         Op::Transpose { .. } | Op::Slice { .. } => {

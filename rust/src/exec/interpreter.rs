@@ -152,7 +152,18 @@ pub fn execute_node(node: &Node, values: &[Option<Tensor>], tracker: &MemoryTrac
         Op::Upsample2x => upsample2x_nchw(arg(0), tr),
         Op::Convert => to_f32(arg(0), tr),
         Op::FusedAttention { scale } => {
-            crate::tensor::attention::fused_attention(arg(0), arg(1), arg(2), *scale, tr)
+            if node.inputs.len() > 3 {
+                crate::tensor::attention::fused_attention_pos(
+                    arg(0),
+                    arg(1),
+                    arg(2),
+                    arg(3),
+                    *scale,
+                    tr,
+                )
+            } else {
+                crate::tensor::attention::fused_attention(arg(0), arg(1), arg(2), *scale, tr)
+            }
         }
         Op::Opaque { kind } => panic!("opaque op '{kind}' is analysis-only (execute via PJRT)"),
     }

@@ -60,6 +60,15 @@ impl GraphBuilder {
         id
     }
 
+    /// Runtime input (f32) whose storage persists across executions (KV
+    /// cache): excluded from per-run activation accounting, charged as
+    /// resident state by the serving tier.
+    pub fn input_persistent(&mut self, name: &str, shape: &[usize]) -> NodeId {
+        let id = self.input(name, shape);
+        self.graph.persistent.push(id);
+        id
+    }
+
     /// Model parameter (f32), excluded from activation accounting.
     pub fn param(&mut self, name: &str, shape: &[usize]) -> NodeId {
         let id = self.push(Op::Param, vec![], shape.to_vec(), DType::F32, name.into());
@@ -301,6 +310,45 @@ impl GraphBuilder {
         self.push(
             Op::FusedAttention { scale },
             vec![q, k, v],
+            shape,
+            DType::F32,
+            "fused_attn".into(),
+        )
+    }
+
+    /// Position-masked fused attention: query row `i` attends key index
+    /// `j` iff `j ≤ q_pos[i]`. `q_pos` must be f32 `[sq]`; as a data
+    /// input it slices with `q` under chunked execution, keeping chunked
+    /// causal prefill bitwise exact.
+    pub fn fused_attention_pos(
+        &mut self,
+        q: NodeId,
+        k: NodeId,
+        v: NodeId,
+        q_pos: NodeId,
+        scale: f32,
+    ) -> NodeId {
+        let (qs, ks, vs) = (
+            self.shape_of(q).to_vec(),
+            self.shape_of(k).to_vec(),
+            self.shape_of(v).to_vec(),
+        );
+        let rank = qs.len();
+        assert!(rank >= 2 && ks.len() >= 2 && vs.len() >= 2);
+        assert_eq!(qs[rank - 1], ks[ks.len() - 1], "q/k head dim");
+        assert_eq!(ks[ks.len() - 2], vs[vs.len() - 2], "k/v rows");
+        let ps = self.shape_of(q_pos).to_vec();
+        assert_eq!(ps, vec![qs[rank - 2]], "q_pos must be [sq]");
+        assert_eq!(self.graph.nodes[q_pos].dtype, DType::F32, "q_pos must be f32");
+        let mut shape = broadcast_shapes(
+            &broadcast_shapes(&qs[..rank - 2], &ks[..ks.len() - 2]),
+            &vs[..vs.len() - 2],
+        );
+        shape.push(qs[rank - 2]);
+        shape.push(vs[vs.len() - 1]);
+        self.push(
+            Op::FusedAttention { scale },
+            vec![q, k, v, q_pos],
             shape,
             DType::F32,
             "fused_attn".into(),

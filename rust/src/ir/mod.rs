@@ -82,7 +82,10 @@ pub enum Op {
     Convert,
     /// Fused memory-efficient attention over (q, k, v): never materializes
     /// the score matrix (Rabe & Staats 2022) — the paper's Figure-6
-    /// "fused kernel" baseline.
+    /// "fused kernel" baseline. An optional 4th input `q_pos [sq]` (f32)
+    /// gives each query row its absolute position; key index `j` is
+    /// attended iff `j ≤ q_pos[i]` (causal prefill / decode masking —
+    /// masked entries are exact no-ops, see `tensor::attention`).
     FusedAttention { scale: f32 },
     /// Unmodeled op from an imported HLO module. Analysis-only: the
     /// estimator charges its output, chunk flows conservatively break at
@@ -156,6 +159,11 @@ pub struct Graph {
     pub params: Vec<NodeId>,
     /// Graph outputs in positional order.
     pub outputs: Vec<NodeId>,
+    /// Inputs whose storage persists *across* executions (KV caches):
+    /// excluded from per-run activation accounting — the estimator and
+    /// memory planner treat them like parameters — while the serving tier
+    /// charges their bytes as resident state (DESIGN.md §13).
+    pub persistent: Vec<NodeId>,
     /// Optional model name for diagnostics.
     pub name: String,
 }
@@ -163,6 +171,17 @@ pub struct Graph {
 impl Graph {
     pub fn node(&self, id: NodeId) -> &Node {
         &self.nodes[id]
+    }
+
+    /// True if `id` is an input marked persistent-across-executions.
+    pub fn is_persistent(&self, id: NodeId) -> bool {
+        self.persistent.contains(&id)
+    }
+
+    /// Total bytes of persistent inputs (the serving tier's resident
+    /// charge for one bound cache set).
+    pub fn persistent_bytes(&self) -> usize {
+        self.persistent.iter().map(|&i| self.node(i).byte_size()).sum()
     }
 
     pub fn len(&self) -> usize {
@@ -208,6 +227,11 @@ impl Graph {
         for &o in &self.outputs {
             if o >= self.nodes.len() {
                 return Err(format!("output {} out of range", o));
+            }
+        }
+        for &p in &self.persistent {
+            if !self.inputs.contains(&p) {
+                return Err(format!("persistent node {} is not an input", p));
             }
         }
         Ok(())

@@ -1,13 +1,38 @@
-//! GPT (prefill stage): decoder-only transformer over token ids.
+//! GPT: decoder-only transformer over token ids.
 //!
-//! Multi-head attention with the `[h, s, s]` score tensor materialized —
-//! the canonical quadratic activation hotspot. Layer norms are composed
-//! from primitives so the memory profile matches an FX-level trace.
+//! Three graph families share one parameterization (identical parameter
+//! list, order, and shapes, so one weight set serves all of them):
+//!
+//! * [`gpt`] — the prefill graph. Multi-head attention with the `[h,s,s]`
+//!   score tensor materialized — the canonical quadratic activation
+//!   hotspot (or the fused memory-efficient op, Figure-6 baseline).
+//!   `causal: true` adds causal masking: an additive `relu(j−i)·(−1e30)`
+//!   mask on the dense path, a position input on the fused path. Masked
+//!   entries are *exact no-ops* (they underflow to zero probability), so
+//!   a causal prefill over a zero-padded bucket computes, bitwise, the
+//!   same per-row values as prefill over the unpadded prompt.
+//! * [`gpt_prefill_kv`] — causal prefill that additionally outputs every
+//!   layer's K/V head tensors `[h,s,dh]`, the KV-cache seed.
+//! * [`gpt_decode`] — one autoregressive decode step against a cache of
+//!   logical length `past`, parameterized by `past` (DESIGN.md §13). The
+//!   cache enters as *persistent* inputs at full bucket capacity; the new
+//!   token's K/V rows are concat-inserted at position `past` so the
+//!   attention operand has the same length-`seq` key axis as prefill —
+//!   which is what makes decode outputs bitwise identical to re-running
+//!   full prefill at the grown length (`rust/tests/decode_parity.rs`).
+//!
+//! Layer norms are composed from primitives so the memory profile matches
+//! an FX-level trace.
 
 use crate::ir::{Graph, GraphBuilder, NodeId};
 use crate::tensor::ops::{BinaryOp, UnaryOp};
 
-/// GPT configuration (batch = 1 prefill, matching the paper's setup).
+/// Additive-mask magnitude: large enough that `exp(score − max)` of any
+/// masked entry underflows to exactly `0.0` (f32 underflows below ≈ −104),
+/// small enough that `seq` stacked multiples stay finite.
+const CAUSAL_NEG: f32 = 1e30;
+
+/// GPT configuration (batch = 1, matching the paper's setup).
 #[derive(Clone, Debug)]
 pub struct GptConfig {
     pub seq: usize,
@@ -18,6 +43,10 @@ pub struct GptConfig {
     pub ff_mult: usize,
     /// Use the fused memory-efficient attention op (Figure-6 baseline).
     pub fused_attention: bool,
+    /// Causal (autoregressive) attention: row `i` attends `j ≤ i`.
+    /// Required for the generation path; off by default so the paper's
+    /// prefill benchmarks keep their original graphs.
+    pub causal: bool,
 }
 
 impl Default for GptConfig {
@@ -30,11 +59,54 @@ impl Default for GptConfig {
             vocab: 8192,
             ff_mult: 4,
             fused_attention: false,
+            causal: false,
         }
     }
 }
 
-/// One transformer block appended to `x`; returns the block output.
+impl GptConfig {
+    /// Per-head dimension.
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.heads
+    }
+
+    /// Resident bytes of one full-capacity KV cache for this model
+    /// (`2 · layers · heads · seq · head_dim · 4`).
+    pub fn kv_cache_bytes(&self) -> usize {
+        2 * self.layers * self.heads * self.seq * self.head_dim() * 4
+    }
+}
+
+/// Causal-masking nodes shared by every layer of a causal graph.
+#[derive(Clone, Copy)]
+pub(crate) enum CausalNodes {
+    /// Dense path: additive mask `[s, s]` (`relu(j−i)·(−1e30)`).
+    Mask(NodeId),
+    /// Fused path: per-row position vector `[s]` (iota).
+    Pos(NodeId),
+}
+
+/// Build the shared causal nodes for a sequence of length `s`.
+pub(crate) fn causal_nodes(b: &mut GraphBuilder, s: usize, fused: bool) -> CausalNodes {
+    if fused {
+        let pos = b.iota(&[s], 0);
+        b.label(pos, "causal.pos");
+        CausalNodes::Pos(pos)
+    } else {
+        let ii = b.iota(&[s, s], 0);
+        let jj = b.iota(&[s, s], 1);
+        let diff = b.sub(jj, ii);
+        let step = b.unary(UnaryOp::Relu, diff);
+        let mask = b.binary_scalar(BinaryOp::Mul, step, -CAUSAL_NEG);
+        b.label(mask, "causal.mask");
+        CausalNodes::Mask(mask)
+    }
+}
+
+/// One transformer block appended to `x`; returns
+/// `(block_output, k_heads, v_heads)` with `k/v_heads: [h, s, dh]` — the
+/// cache-seed tensors (callers that don't need them ignore the extras).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn transformer_block(
     b: &mut GraphBuilder,
     x: NodeId,
@@ -44,7 +116,8 @@ pub(crate) fn transformer_block(
     h: usize,
     ff_mult: usize,
     fused: bool,
-) -> NodeId {
+    causal: Option<CausalNodes>,
+) -> (NodeId, NodeId, NodeId) {
     let dh = d / h;
     let scale = 1.0 / (dh as f32).sqrt();
 
@@ -70,17 +143,26 @@ pub(crate) fn transformer_block(
     let vh = b.transpose(vh, &[1, 0, 2]);
 
     let ctx = if fused {
-        b.fused_attention(qh, kh, vh, scale)
+        match causal {
+            Some(CausalNodes::Pos(pos)) => b.fused_attention_pos(qh, kh, vh, pos, scale),
+            Some(CausalNodes::Mask(_)) => panic!("fused attention takes Pos causal nodes"),
+            None => b.fused_attention(qh, kh, vh, scale),
+        }
     } else {
         let kt = b.transpose(kh, &[0, 2, 1]); // [h, dh, s]
         let scores = b.matmul(qh, kt); // [h, s, s] — the hotspot
         let scaled = b.binary_scalar(BinaryOp::Mul, scores, scale);
+        let scaled = match causal {
+            Some(CausalNodes::Mask(mask)) => b.add(scaled, mask),
+            Some(CausalNodes::Pos(_)) => panic!("dense attention takes Mask causal nodes"),
+            None => scaled,
+        };
         let probs = b.softmax(scaled, 2);
         b.matmul(probs, vh) // [h, s, dh]
     };
-    let ctx = b.transpose(ctx, &[1, 0, 2]); // [s, h, dh]
-    let ctx = b.reshape(ctx, &[s, d]);
-    let attn_out = b.matmul(ctx, wo);
+    let ctx_t = b.transpose(ctx, &[1, 0, 2]); // [s, h, dh]
+    let ctx_t = b.reshape(ctx_t, &[s, d]);
+    let attn_out = b.matmul(ctx_t, wo);
     let res1 = b.add(attn_out, x);
 
     // --- feed-forward
@@ -94,14 +176,20 @@ pub(crate) fn transformer_block(
     let hmid = b.linear(rn, w1, bb1);
     let act = b.unary(UnaryOp::Gelu, hmid);
     let ff = b.linear(act, w2, bb2);
-    b.add(ff, res1)
+    (b.add(ff, res1), kh, vh)
 }
 
 /// Build the GPT prefill graph: token ids → final-layer hidden states.
 pub fn gpt(cfg: &GptConfig) -> Graph {
     assert_eq!(cfg.d_model % cfg.heads, 0);
     let (s, d) = (cfg.seq, cfg.d_model);
-    let mut b = GraphBuilder::new(if cfg.fused_attention { "gpt_fused" } else { "gpt" });
+    let name = match (cfg.fused_attention, cfg.causal) {
+        (true, true) => "gpt_fused_causal",
+        (true, false) => "gpt_fused",
+        (false, true) => "gpt_causal",
+        (false, false) => "gpt",
+    };
+    let mut b = GraphBuilder::new(name);
 
     let ids = b.input_i32("tokens", &[s]);
     let wte = b.param("wte", &[cfg.vocab, d]);
@@ -109,14 +197,230 @@ pub fn gpt(cfg: &GptConfig) -> Graph {
     let emb = b.gather(wte, ids); // [s, d]
     let mut x = b.add(emb, wpe);
 
+    let causal = cfg.causal.then(|| causal_nodes(&mut b, s, cfg.fused_attention));
     for li in 0..cfg.layers {
-        x = transformer_block(&mut b, x, li, s, d, cfg.heads, cfg.ff_mult, cfg.fused_attention);
+        let (out, _, _) = transformer_block(
+            &mut b,
+            x,
+            li,
+            s,
+            d,
+            cfg.heads,
+            cfg.ff_mult,
+            cfg.fused_attention,
+            causal,
+        );
+        x = out;
     }
 
     let gf = b.param("lnf.g", &[d]);
     let bf = b.param("lnf.b", &[d]);
     let out = b.layer_norm(x, gf, bf, 1e-5);
     b.finish(vec![out])
+}
+
+/// Causal prefill that also emits the KV-cache seed: outputs are
+/// `[hidden [s,d], k_0, v_0, …, k_{L−1}, v_{L−1}]` with `k/v_l` the
+/// post-head-split `[h, s, dh]` tensors. The parameter list is identical
+/// to [`gpt`]'s, so the serve engine shares one weight set per bucket.
+pub fn gpt_prefill_kv(cfg: &GptConfig) -> Graph {
+    assert_eq!(cfg.d_model % cfg.heads, 0);
+    let (s, d) = (cfg.seq, cfg.d_model);
+    let name = if cfg.fused_attention { "gpt_prefill_fused" } else { "gpt_prefill" };
+    let mut b = GraphBuilder::new(name);
+
+    let ids = b.input_i32("tokens", &[s]);
+    let wte = b.param("wte", &[cfg.vocab, d]);
+    let wpe = b.param("wpe", &[s, d]);
+    let emb = b.gather(wte, ids);
+    let mut x = b.add(emb, wpe);
+
+    // generation is autoregressive by definition: causal regardless of cfg
+    let causal = Some(causal_nodes(&mut b, s, cfg.fused_attention));
+    let mut kv_outs: Vec<NodeId> = Vec::with_capacity(2 * cfg.layers);
+    for li in 0..cfg.layers {
+        let (out, kh, vh) = transformer_block(
+            &mut b,
+            x,
+            li,
+            s,
+            d,
+            cfg.heads,
+            cfg.ff_mult,
+            cfg.fused_attention,
+            causal,
+        );
+        x = out;
+        kv_outs.push(kh);
+        kv_outs.push(vh);
+    }
+
+    let gf = b.param("lnf.g", &[d]);
+    let bf = b.param("lnf.b", &[d]);
+    let out = b.layer_norm(x, gf, bf, 1e-5);
+    let mut outputs = vec![out];
+    outputs.extend(kv_outs);
+    b.finish(outputs)
+}
+
+/// One autoregressive decode step against a KV cache of logical length
+/// `past` (the new token sits at absolute position `past`; `past <
+/// cfg.seq`). Inputs: `[token [1] i32, k_cache_0 [h,seq,dh] (persistent),
+/// v_cache_0, …]`. Outputs: `[hidden [1,d], k_new_0 [h,1,dh], v_new_0, …]`
+/// — the engine appends the `*_new` rows into the cache after the step.
+///
+/// The attention operand is rebuilt at full bucket length `seq` by
+/// concat-inserting the new K/V row at position `past` between the cache's
+/// valid prefix and its (masked, garbage) tail; an additive position mask
+/// — built with the same primitive pipeline as the causal prefill mask
+/// row, so its values are bitwise identical to that row — blanks
+/// everything past `past`. Per-step cost is therefore O(seq·d) where
+/// prefill is O(seq²), while every surviving float matches prefill's
+/// row-`past` bits exactly.
+///
+/// Masked-tail contract: the fused path never reads masked cache bytes;
+/// the dense path computes scores from them before masking, so tail rows
+/// must be finite with bounded magnitude — always true for seeded or
+/// appended computed K/V rows (see `tensor::kvcache`).
+pub fn gpt_decode(cfg: &GptConfig, past: usize) -> Graph {
+    assert_eq!(cfg.d_model % cfg.heads, 0);
+    let (s, d, h) = (cfg.seq, cfg.d_model, cfg.heads);
+    let dh = d / h;
+    let scale = 1.0 / (dh as f32).sqrt();
+    assert!(past >= 1, "decode needs a non-empty cache");
+    assert!(past < s, "cache position {past} outside bucket {s}");
+    let name = if cfg.fused_attention { "gpt_decode_fused" } else { "gpt_decode" };
+    let mut b = GraphBuilder::new(&format!("{name}_p{past}"));
+
+    // ---- inputs: token, then per-layer persistent caches
+    let tok = b.input_i32("token", &[1]);
+    let mut k_caches = Vec::with_capacity(cfg.layers);
+    let mut v_caches = Vec::with_capacity(cfg.layers);
+    for li in 0..cfg.layers {
+        k_caches.push(b.input_persistent(&format!("l{li}.k_cache"), &[h, s, dh]));
+        v_caches.push(b.input_persistent(&format!("l{li}.v_cache"), &[h, s, dh]));
+    }
+
+    // ---- embedding (same param order as gpt / gpt_prefill_kv)
+    let wte = b.param("wte", &[cfg.vocab, d]);
+    let wpe = b.param("wpe", &[s, d]);
+    let emb = b.gather(wte, tok); // [1, d]
+    let wpe_row = b.slice(wpe, 0, past, 1); // [1, d]
+    let mut x = b.add(emb, wpe_row);
+
+    // Key mask [s]: 0 for j ≤ past, ≤ −1e30 beyond — the same primitive
+    // pipeline as the prefill mask's row `past`, so the added values are
+    // bitwise identical to prefill's (dense path only).
+    let key_mask = (!cfg.fused_attention).then(|| {
+        let jj = b.iota(&[s], 0);
+        let diff = b.binary_scalar(BinaryOp::Sub, jj, past as f32);
+        let step = b.unary(UnaryOp::Relu, diff);
+        let mask = b.binary_scalar(BinaryOp::Mul, step, -CAUSAL_NEG);
+        b.label(mask, "decode.key_mask");
+        mask
+    });
+    // Fused path: the single query row's absolute position.
+    let q_pos = cfg.fused_attention.then(|| {
+        let c = b.constant(past as f32);
+        let pos = b.broadcast(c, &[1]);
+        b.label(pos, "decode.q_pos");
+        pos
+    });
+
+    let mut outputs_kv: Vec<NodeId> = Vec::with_capacity(2 * cfg.layers);
+    for li in 0..cfg.layers {
+        let g1 = b.param(&format!("l{li}.ln1.g"), &[d]);
+        let b1 = b.param(&format!("l{li}.ln1.b"), &[d]);
+        let xn = b.layer_norm(x, g1, b1, 1e-5);
+
+        let wq = b.param(&format!("l{li}.wq"), &[d, d]);
+        let wk = b.param(&format!("l{li}.wk"), &[d, d]);
+        let wv = b.param(&format!("l{li}.wv"), &[d, d]);
+        let wo = b.param(&format!("l{li}.wo"), &[d, d]);
+
+        let q = b.matmul(xn, wq); // [1, d]
+        let k = b.matmul(xn, wk);
+        let v = b.matmul(xn, wv);
+        let qh = b.reshape(q, &[1, h, dh]);
+        let qh = b.transpose(qh, &[1, 0, 2]); // [h, 1, dh]
+        let kh_new = b.reshape(k, &[1, h, dh]);
+        let kh_new = b.transpose(kh_new, &[1, 0, 2]);
+        let vh_new = b.reshape(v, &[1, h, dh]);
+        let vh_new = b.transpose(vh_new, &[1, 0, 2]);
+
+        // Rebuild the full-length key/value axis: valid prefix, the new
+        // row at `past`, then the masked tail (sourced from the cache —
+        // its bytes are irrelevant under the mask).
+        let tail = s - past - 1;
+        let mut k_parts = vec![b.slice(k_caches[li], 1, 0, past), kh_new];
+        let mut v_parts = vec![b.slice(v_caches[li], 1, 0, past), vh_new];
+        if tail > 0 {
+            k_parts.push(b.slice(k_caches[li], 1, past, tail));
+            v_parts.push(b.slice(v_caches[li], 1, past, tail));
+        }
+        let k_attn = b.concat(&k_parts, 1); // [h, s, dh]
+        let v_attn = b.concat(&v_parts, 1);
+
+        let ctx = if cfg.fused_attention {
+            b.fused_attention_pos(qh, k_attn, v_attn, q_pos.unwrap(), scale)
+        } else {
+            let kt = b.transpose(k_attn, &[0, 2, 1]); // [h, dh, s]
+            let scores = b.matmul(qh, kt); // [h, 1, s]
+            let scaled = b.binary_scalar(BinaryOp::Mul, scores, scale);
+            let masked = b.add(scaled, key_mask.unwrap());
+            let probs = b.softmax(masked, 2);
+            b.matmul(probs, v_attn) // [h, 1, dh]
+        };
+        let ctx_t = b.transpose(ctx, &[1, 0, 2]); // [1, h, dh]
+        let ctx_t = b.reshape(ctx_t, &[1, d]);
+        let attn_out = b.matmul(ctx_t, wo);
+        let res1 = b.add(attn_out, x);
+
+        let g2 = b.param(&format!("l{li}.ln2.g"), &[d]);
+        let b2 = b.param(&format!("l{li}.ln2.b"), &[d]);
+        let rn = b.layer_norm(res1, g2, b2, 1e-5);
+        let w1 = b.param(&format!("l{li}.ff.w1"), &[d, cfg.ff_mult * d]);
+        let bb1 = b.param(&format!("l{li}.ff.b1"), &[cfg.ff_mult * d]);
+        let w2 = b.param(&format!("l{li}.ff.w2"), &[cfg.ff_mult * d, d]);
+        let bb2 = b.param(&format!("l{li}.ff.b2"), &[d]);
+        let hmid = b.linear(rn, w1, bb1);
+        let act = b.unary(UnaryOp::Gelu, hmid);
+        let ff = b.linear(act, w2, bb2);
+        x = b.add(ff, res1);
+
+        outputs_kv.push(kh_new);
+        outputs_kv.push(vh_new);
+    }
+
+    let gf = b.param("lnf.g", &[d]);
+    let bf = b.param("lnf.b", &[d]);
+    let out = b.layer_norm(x, gf, bf, 1e-5);
+    let mut outputs = vec![out];
+    outputs.extend(outputs_kv);
+    b.finish(outputs)
+}
+
+/// Tiny language-model head: hidden row `[1, d]` → logits `[1, vocab]`
+/// (`hidden @ wteᵀ`, weight-tied). Its single parameter is the
+/// **pre-transposed** embedding `wteᵀ [d, vocab]` — callers bind
+/// `params[0].permute([1,0]).to_contiguous(..)` once per weight set
+/// (see [`lm_head_params`]) so the steady-state decode path never
+/// re-materializes the transpose per token. Length-independent: one
+/// cached plan serves prefill token selection and every decode step.
+pub fn gpt_lm_head(cfg: &GptConfig) -> Graph {
+    let mut b = GraphBuilder::new("gpt_lm_head");
+    let hidden = b.input("hidden", &[1, cfg.d_model]);
+    let wte_t = b.param("wte_t", &[cfg.d_model, cfg.vocab]);
+    let logits = b.matmul(hidden, wte_t); // [1, vocab]
+    b.finish(vec![logits])
+}
+
+/// The LM head's parameter list for a full gpt weight set: `wteᵀ`,
+/// materialized once (untracked — parameter memory, like every weight).
+/// Bitwise identical to transposing in-graph: the matmul kernel would
+/// have materialized exactly this copy per execution.
+pub fn lm_head_params(full: &[crate::tensor::Tensor]) -> Vec<crate::tensor::Tensor> {
+    vec![full[0].permute(&[1, 0]).to_contiguous(None)]
 }
 
 #[cfg(test)]
@@ -175,5 +479,144 @@ mod tests {
         let t1 = MemoryTracker::new();
         let (of, _) = execute(&gf, &ins, &ps_f, &t1);
         assert!(od[0].max_abs_diff(&of[0]) < 1e-3);
+    }
+
+    #[test]
+    fn causal_fused_and_dense_agree_numerically() {
+        let cfg = GptConfig {
+            seq: 24,
+            d_model: 32,
+            heads: 4,
+            layers: 2,
+            vocab: 64,
+            causal: true,
+            ..Default::default()
+        };
+        let gd = gpt(&cfg);
+        let gf = gpt(&GptConfig { fused_attention: true, ..cfg });
+        let ins = random_inputs(&gd, 5, None);
+        let ps_d = random_params(&gd, 6);
+        let ps_f = random_params(&gf, 6);
+        assert_eq!(ps_d.len(), ps_f.len());
+        let t0 = MemoryTracker::new();
+        let (od, _) = execute(&gd, &ins, &ps_d, &t0);
+        let t1 = MemoryTracker::new();
+        let (of, _) = execute(&gf, &ins, &ps_f, &t1);
+        assert!(od[0].max_abs_diff(&of[0]) < 1e-3, "{}", od[0].max_abs_diff(&of[0]));
+    }
+
+    #[test]
+    fn causal_prefix_rows_are_padding_invariant() {
+        // Causality: rows < p must not change when the tail tokens do.
+        let cfg = GptConfig {
+            seq: 16,
+            d_model: 32,
+            heads: 4,
+            layers: 1,
+            vocab: 64,
+            causal: true,
+            ..Default::default()
+        };
+        let g = gpt(&cfg);
+        let ps = random_params(&g, 9);
+        let run = |ids: Vec<i32>| {
+            let t = MemoryTracker::new();
+            let ins = vec![crate::tensor::Tensor::from_i32(ids, &[16], None)];
+            let (o, _) = execute(&g, &ins, &ps, &t);
+            o[0].to_vec_f32()
+        };
+        let mut a_ids = vec![7i32; 16];
+        let mut b_ids = vec![7i32; 16];
+        for i in 6..16 {
+            a_ids[i] = 0;
+            b_ids[i] = 63;
+        }
+        let (a, b) = (run(a_ids), run(b_ids));
+        let d = cfg.d_model;
+        let (pa, pb) = (&a[..6 * d], &b[..6 * d]);
+        let abits: Vec<u32> = pa.iter().map(|x| x.to_bits()).collect();
+        let bbits: Vec<u32> = pb.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(abits, bbits, "prefix rows depend on padding");
+    }
+
+    #[test]
+    fn prefill_kv_decode_and_lm_head_share_param_layout() {
+        let cfg = GptConfig {
+            seq: 16,
+            d_model: 32,
+            heads: 4,
+            layers: 2,
+            vocab: 64,
+            ..Default::default()
+        };
+        let g0 = gpt(&cfg);
+        let gkv = gpt_prefill_kv(&cfg);
+        let gdec = gpt_decode(&cfg, 4);
+        assert_eq!(g0.params.len(), gkv.params.len());
+        assert_eq!(g0.params.len(), gdec.params.len());
+        for ((&a, &b), &c) in g0.params.iter().zip(&gkv.params).zip(&gdec.params) {
+            assert_eq!(g0.node(a).name, gkv.node(b).name);
+            assert_eq!(g0.node(a).shape, gkv.node(b).shape);
+            assert_eq!(g0.node(a).name, gdec.node(c).name);
+            assert_eq!(g0.node(a).shape, gdec.node(c).shape);
+        }
+        // lm head's single param is gpt's param 0 (wte), pre-transposed
+        let lm = gpt_lm_head(&cfg);
+        assert_eq!(lm.params.len(), 1);
+        assert_eq!(
+            lm.node(lm.params[0]).shape,
+            vec![cfg.d_model, cfg.vocab],
+            "lm head takes wteᵀ"
+        );
+        let full = crate::exec::random_params(&g0, 5);
+        let lp = lm_head_params(&full);
+        assert_eq!(lp.len(), 1);
+        assert_eq!(lp[0].shape(), &[cfg.d_model, cfg.vocab]);
+        assert!(lp[0].is_contiguous());
+        assert_eq!(lp[0].at(&[3, 7]), full[0].at(&[7, 3]), "wteᵀ values");
+        // decode graph declares its caches persistent
+        assert_eq!(gdec.persistent.len(), 2 * cfg.layers);
+        assert!(gdec.validate().is_ok());
+        assert_eq!(gdec.persistent_bytes(), cfg.kv_cache_bytes());
+    }
+
+    #[test]
+    fn prefill_kv_outputs_have_cache_shapes() {
+        let cfg = GptConfig {
+            seq: 16,
+            d_model: 32,
+            heads: 4,
+            layers: 2,
+            vocab: 64,
+            ..Default::default()
+        };
+        let g = gpt_prefill_kv(&cfg);
+        assert_eq!(g.outputs.len(), 1 + 2 * cfg.layers);
+        assert_eq!(g.node(g.outputs[0]).shape, vec![16, 32]);
+        for &o in &g.outputs[1..] {
+            assert_eq!(g.node(o).shape, vec![4, 16, 8]);
+        }
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn decode_peak_linear_prefill_peak_quadratic() {
+        // The memory story the bench measures: decode step peak grows
+        // ~linearly in bucket length, prefill peak quadratically.
+        let mk = |seq: usize| GptConfig {
+            seq,
+            d_model: 64,
+            heads: 4,
+            layers: 2,
+            vocab: 128,
+            causal: true,
+            ..Default::default()
+        };
+        let d1 = estimate(&gpt_decode(&mk(64), 32)).peak_bytes as f64;
+        let d2 = estimate(&gpt_decode(&mk(256), 32)).peak_bytes as f64;
+        let p1 = estimate(&gpt(&mk(64))).peak_bytes as f64;
+        let p2 = estimate(&gpt(&mk(256))).peak_bytes as f64;
+        assert!(d2 / d1 < 8.0, "decode peak not ~linear: {d1} -> {d2}");
+        assert!(p2 / p1 > 10.0, "prefill peak not ~quadratic: {p1} -> {p2}");
     }
 }

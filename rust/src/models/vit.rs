@@ -51,7 +51,18 @@ pub fn vit(cfg: &ViTConfig) -> Graph {
     let mut x = b.add(emb, pos);
 
     for li in 0..cfg.layers {
-        x = transformer_block(&mut b, x, li, p, d, cfg.heads, cfg.ff_mult, cfg.fused_attention);
+        let (out, _, _) = transformer_block(
+            &mut b,
+            x,
+            li,
+            p,
+            d,
+            cfg.heads,
+            cfg.ff_mult,
+            cfg.fused_attention,
+            None,
+        );
+        x = out;
     }
 
     // mean-pool + classification head

@@ -244,7 +244,9 @@ fn simulate(graph: &Graph, plans: &[ChunkPlan], pessimistic: bool) -> MemoryProf
         }
 
         // Parameters occupy parameter memory, not activation memory.
-        let is_param = matches!(node.op, Op::Param);
+        // Persistent inputs (KV caches) are resident state charged by the
+        // serving tier, not per-run activation (DESIGN.md §13).
+        let is_param = matches!(node.op, Op::Param) || graph.is_persistent(id);
 
         // Region scaling: intermediates of a chunked region cost 1/n.
         let scale = owner[id]

@@ -225,6 +225,11 @@ pub fn propagate_to_input(
 
         Op::FusedAttention { .. } => {
             let out_rank = out_shape.len();
+            if input_pos == 3 {
+                // optional q_pos [sq]: rides the query-row dim with q so
+                // causal masking slices consistently under chunking
+                return if out_dim == out_rank - 2 { Dim(0) } else { NotCarried };
+            }
             if out_dim == out_rank - 2 {
                 // query rows: carried by q only
                 if input_pos == 0 { Dim(in_shape.len() - 2) } else { NotCarried }

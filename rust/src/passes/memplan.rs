@@ -102,7 +102,13 @@ pub struct MemPlan {
     /// Values served as zero-copy aliases.
     pub alias_count: usize,
     /// Graph input bytes, live for the whole run (callers hold inputs).
+    /// Excludes persistent inputs — they are resident across runs and
+    /// priced separately (`persistent_bytes`).
     pub input_bytes: usize,
+    /// Bytes of persistent (cross-execution) inputs such as KV caches.
+    /// Outside the per-run arena and outside `admission_bytes`; the serve
+    /// engine charges them once per bound cache as resident state.
+    pub persistent_bytes: usize,
     /// Sound admission price of one serial execution: inputs + arena live
     /// + transient kernel workspace, maximized over the schedule (one
     /// lane per region in flight).
@@ -653,7 +659,14 @@ fn process_node(
             let q = in_view(scope, 0);
             let k = in_view(scope, 1);
             let vv = in_view(scope, 2);
-            let ws = fused_attention_transients(&q, &k, &vv);
+            let mut ws = fused_attention_transients(&q, &k, &vv);
+            if node.inputs.len() > 3 {
+                // optional q_pos: the kernel materializes it iff strided
+                let pv = in_view(scope, 3);
+                if !pv.is_contiguous() {
+                    ws += pv.numel() * 4;
+                }
+            }
             let v = ViewState::contiguous(out_shape);
             (materialize(scope, stats, numel(out_shape) * 4, v), ws)
         }
@@ -753,7 +766,13 @@ pub fn plan_memory(graph: &Graph, plans: &[ChunkPlan]) -> MemPlan {
     let mut release_after: Vec<Vec<NodeId>> = vec![Vec::new(); graph.len()];
     let mut regions: Vec<Option<RegionMemPlan>> = vec![None; plans.len()];
 
-    let input_bytes: usize = graph.inputs.iter().map(|&i| graph.node(i).byte_size()).sum();
+    let input_bytes: usize = graph
+        .inputs
+        .iter()
+        .filter(|&&i| !graph.is_persistent(i))
+        .map(|&i| graph.node(i).byte_size())
+        .sum();
+    let persistent_bytes: usize = graph.persistent_bytes();
     let mut admission_peak = input_bytes;
 
     let prebound: Vec<bool> = {
@@ -883,6 +902,7 @@ pub fn plan_memory(graph: &Graph, plans: &[ChunkPlan]) -> MemPlan {
         inplace_count: stats.inplace,
         alias_count: stats.aliased,
         input_bytes,
+        persistent_bytes,
         admission_base: admission_peak,
         regions: regions.into_iter().map(|r| r.expect("region planned")).collect(),
     }
@@ -1024,6 +1044,7 @@ pub fn describe_memplan(plan: &MemPlan) -> String {
         plan.values_materialized * 100 / plan.slots.len().max(1)
     );
     let _ = writeln!(s, "admission_base: {}", plan.admission_base);
+    let _ = writeln!(s, "persistent_bytes: {}", plan.persistent_bytes);
     let _ = writeln!(s, "regions: {}", plan.regions.len());
     for (i, r) in plan.regions.iter().enumerate() {
         let _ = writeln!(

@@ -6,6 +6,22 @@
 //! `O(s_q·s_kv)`. This is the "fused attention kernel" baseline of the
 //! paper's Figure 6 (and the CPU twin of the L1 Pallas kernel in
 //! `python/compile/kernels/attention.py`).
+//!
+//! Two extensions serve the autoregressive decode path (DESIGN.md §13):
+//!
+//! * **position masking** (`fused_attention_pos*`): an optional `q_pos`
+//!   tensor gives each query row its absolute position; key index `j` is
+//!   attended iff `j ≤ q_pos[i]`. Masked entries are *exact no-ops* in the
+//!   online-softmax stream (they never change the running max, the
+//!   denominator, or the accumulator), so a causally-masked prefill row is
+//!   bitwise identical to the same row attending only its prefix. Because
+//!   `q_pos` is a data input it slices with `q` under chunked execution,
+//!   so chunked causal prefill stays bitwise exact too.
+//! * **incremental attention** (`incremental_attention*`): the decode-step
+//!   kernel — one (or a few) query rows against a KV cache. It *is* the
+//!   fused core (every query row's stream is independent), which is the
+//!   whole bitwise-parity guarantee: calling it with one row produces
+//!   exactly the bits full fused attention produces for that row.
 
 use super::{broadcast_shapes, MemoryTracker, Tensor};
 use crate::util::pool;
@@ -13,14 +29,20 @@ use crate::util::pool;
 /// Key/value block length for the streaming pass.
 pub const KV_BLOCK: usize = 64;
 
-/// Core of [`fused_attention`]: streams into `out` (length batch·sq·dv),
-/// returning the output shape. Broadcast/contiguity materialization of
-/// q/k/v remains transient workspace on `tracker`; the per-row running
-/// max/denominator/score scratch is untracked worker-local state.
-pub fn fused_attention_into(
+/// Shared streaming core: computes batched fused attention into `out`,
+/// optionally restricting each query row `i` to key indices
+/// `j ≤ q_pos[i]` (position masking). Returns the output shape.
+///
+/// Masked entries are represented as `-∞` scores and skipped in the
+/// update loop: they contribute exactly nothing to the running max,
+/// denominator, or accumulator, so the processed stream is bitwise
+/// identical to running the same row over only its allowed prefix with
+/// the same block partition.
+fn fused_attention_core(
     q: &Tensor,
     k: &Tensor,
     v: &Tensor,
+    q_pos: Option<&Tensor>,
     scale: f32,
     out: &mut [f32],
     tracker: Option<MemoryTracker>,
@@ -47,12 +69,18 @@ pub fn fused_attention_into(
     vs.extend_from_slice(&[skv, dv]);
     let qc = q.broadcast_to(&qs).to_contiguous(tracker.clone());
     let kc = k.broadcast_to(&ks).to_contiguous(tracker.clone());
-    let vc = v.broadcast_to(&vs).to_contiguous(tracker);
+    let vc = v.broadcast_to(&vs).to_contiguous(tracker.clone());
     let qv = qc.f32_contiguous();
     let kv = kc.f32_contiguous();
     let vv = vc.f32_contiguous();
+    // Positions are per query row, shared across the batch.
+    let pos_c = q_pos.map(|p| {
+        assert_eq!(p.numel(), sq, "q_pos must hold one position per query row");
+        p.to_contiguous(tracker)
+    });
+    let pos_v: Option<&[f32]> = pos_c.as_ref().map(|p| p.f32_contiguous());
 
-    assert_eq!(out.len(), batch * sq * dv, "fused_attention_into length");
+    assert_eq!(out.len(), batch * sq * dv, "fused_attention length mismatch");
     // Every query row's online-softmax stream is independent of every
     // other row, so rows partition over the pool *within* each batch
     // element; each worker carries its own running max/denominator and
@@ -76,22 +104,37 @@ pub fn fused_attention_into(
             let mut blk = 0usize;
             while blk < skv {
                 let bk = KV_BLOCK.min(skv - blk);
-                // scores = q @ k_blk^T * scale
+                // scores = q @ k_blk^T * scale (masked entries get -inf
+                // without touching the k data — position masking must be
+                // independent of whatever bytes sit in masked cache rows)
                 for i in 0..rows {
                     let qr = &qm[(i0 + i) * d..(i0 + i + 1) * d];
+                    let limit = pos_v.map(|p| p[i0 + i]);
                     for j in 0..bk {
-                        let kr = &km[(blk + j) * d..(blk + j + 1) * d];
-                        let mut acc = 0.0f32;
-                        for p in 0..d {
-                            acc += qr[p] * kr[p];
-                        }
-                        scores[i * bk + j] = acc * scale;
+                        let masked =
+                            matches!(limit, Some(lim) if (blk + j) as f32 > lim);
+                        scores[i * bk + j] = if masked {
+                            f32::NEG_INFINITY
+                        } else {
+                            let kr = &km[(blk + j) * d..(blk + j + 1) * d];
+                            let mut acc = 0.0f32;
+                            for p in 0..d {
+                                acc += qr[p] * kr[p];
+                            }
+                            acc * scale
+                        };
                     }
                 }
                 // online softmax update
                 for i in 0..rows {
                     let row = &scores[i * bk..i * bk + bk];
                     let blk_max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                    if blk_max == f32::NEG_INFINITY {
+                        // fully-masked block: exact no-op (the running
+                        // state is what it would be had the block never
+                        // been streamed)
+                        continue;
+                    }
                     let new_m = m[i].max(blk_max);
                     let correction = if m[i].is_finite() { (m[i] - new_m).exp() } else { 0.0 };
                     // rescale accumulated output and denominator
@@ -102,6 +145,9 @@ pub fn fused_attention_into(
                         l[i] *= correction;
                     }
                     for j in 0..bk {
+                        if row[j] == f32::NEG_INFINITY {
+                            continue; // masked: e would be exactly 0
+                        }
                         let e = (row[j] - new_m).exp();
                         l[i] += e;
                         let vr = &vm[(blk + j) * dv..(blk + j + 1) * dv];
@@ -128,6 +174,35 @@ pub fn fused_attention_into(
     out_shape
 }
 
+/// Core of [`fused_attention`]: streams into `out` (length batch·sq·dv),
+/// returning the output shape. Broadcast/contiguity materialization of
+/// q/k/v remains transient workspace on `tracker`; the per-row running
+/// max/denominator/score scratch is untracked worker-local state.
+pub fn fused_attention_into(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    scale: f32,
+    out: &mut [f32],
+    tracker: Option<MemoryTracker>,
+) -> Vec<usize> {
+    fused_attention_core(q, k, v, None, scale, out, tracker)
+}
+
+/// As [`fused_attention_into`] with per-query-row position masking:
+/// query row `i` attends key index `j` iff `j ≤ q_pos[i]`.
+pub fn fused_attention_pos_into(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    q_pos: &Tensor,
+    scale: f32,
+    out: &mut [f32],
+    tracker: Option<MemoryTracker>,
+) -> Vec<usize> {
+    fused_attention_core(q, k, v, Some(q_pos), scale, out, tracker)
+}
+
 /// Batched fused attention. `q: [..b, sq, d]`, `k,v: [..b, skv, d]`.
 pub fn fused_attention(
     q: &Tensor,
@@ -136,6 +211,27 @@ pub fn fused_attention(
     scale: f32,
     tracker: Option<MemoryTracker>,
 ) -> Tensor {
+    let mut out = vec![0.0f32; fused_out_len3(q, k, v)];
+    let out_shape = fused_attention_core(q, k, v, None, scale, &mut out, tracker.clone());
+    Tensor::from_f32(out, &out_shape, tracker)
+}
+
+/// Batched fused attention with position masking (causal prefill).
+pub fn fused_attention_pos(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    q_pos: &Tensor,
+    scale: f32,
+    tracker: Option<MemoryTracker>,
+) -> Tensor {
+    let mut out = vec![0.0f32; fused_out_len3(q, k, v)];
+    let out_shape = fused_attention_core(q, k, v, Some(q_pos), scale, &mut out, tracker.clone());
+    Tensor::from_f32(out, &out_shape, tracker)
+}
+
+/// Output element count of a fused-attention call (batch·sq·dv).
+fn fused_out_len3(q: &Tensor, k: &Tensor, v: &Tensor) -> usize {
     let rank = q.rank();
     let (sq, dv) = (q.shape()[rank - 2], v.shape()[v.rank() - 1]);
     let batch: usize = broadcast_shapes(
@@ -145,8 +241,39 @@ pub fn fused_attention(
     .iter()
     .product::<usize>()
     .max(1);
-    let mut out = vec![0.0f32; batch * sq * dv];
-    let out_shape = fused_attention_into(q, k, v, scale, &mut out, tracker.clone());
+    batch * sq * dv
+}
+
+/// Incremental (decode-step) attention core: attend `q` — one or a few
+/// query rows — against a KV cache view `k`/`v` of the current logical
+/// length, writing into `out`.
+///
+/// This *is* [`fused_attention_into`]: the online-softmax stream of each
+/// query row depends only on that row and the kv prefix, so a single-row
+/// call produces bitwise exactly the row a full fused-attention prefill
+/// produces (`decode_parity` tests pin this). Kept as a named entry point
+/// so the decode path's kernel contract is explicit.
+pub fn incremental_attention_into(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    scale: f32,
+    out: &mut [f32],
+    tracker: Option<MemoryTracker>,
+) -> Vec<usize> {
+    fused_attention_core(q, k, v, None, scale, out, tracker)
+}
+
+/// Allocating wrapper over [`incremental_attention_into`].
+pub fn incremental_attention(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    scale: f32,
+    tracker: Option<MemoryTracker>,
+) -> Tensor {
+    let mut out = vec![0.0f32; fused_out_len3(q, k, v)];
+    let out_shape = incremental_attention_into(q, k, v, scale, &mut out, tracker.clone());
     Tensor::from_f32(out, &out_shape, tracker)
 }
 
@@ -220,5 +347,96 @@ mod tests {
         assert!(got.to_vec_f32().iter().all(|x| x.is_finite()));
         let want = dense_attention(&q, &k, &v, 1.0);
         assert!(got.max_abs_diff(&want) < 1e-3);
+    }
+
+    /// Causal (position-masked) prefill row i is bitwise identical to the
+    /// unmasked kernel run over only its prefix `k[0..=i]` — across block
+    /// boundaries (skv spans multiple KV_BLOCKs).
+    #[test]
+    fn causal_rows_match_prefix_attention_bitwise() {
+        let (s, d) = (150, 8); // > 2 KV_BLOCKs with a ragged tail
+        let q = Tensor::rand(&[s, d], 1.0, 21, None);
+        let k = Tensor::rand(&[s, d], 1.0, 22, None);
+        let v = Tensor::rand(&[s, d], 1.0, 23, None);
+        let pos = Tensor::from_f32((0..s).map(|i| i as f32).collect(), &[s], None);
+        let causal = fused_attention_pos(&q, &k, &v, &pos, 0.25, None);
+        for i in [0usize, 1, 5, 63, 64, 65, 127, 128, 149] {
+            let qi = q.slice_axis(0, i, 1).to_contiguous(None);
+            let ki = k.slice_axis(0, 0, i + 1).to_contiguous(None);
+            let vi = v.slice_axis(0, 0, i + 1).to_contiguous(None);
+            let row = incremental_attention(&qi, &ki, &vi, 0.25, None);
+            let want: Vec<u32> =
+                causal.slice_axis(0, i, 1).to_vec_f32().iter().map(|x| x.to_bits()).collect();
+            let got: Vec<u32> = row.to_vec_f32().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(got, want, "row {i} diverged");
+        }
+    }
+
+    /// Masked entries must be no-ops regardless of the bytes behind them:
+    /// poisoning the masked-out tail of k/v must not change any output bit.
+    #[test]
+    fn masked_tail_bytes_are_irrelevant() {
+        let (s, cap, d) = (9, 40, 4);
+        let q = Tensor::rand(&[1, d], 1.0, 31, None);
+        let kh = Tensor::rand(&[cap, d], 1.0, 32, None);
+        let vh = Tensor::rand(&[cap, d], 1.0, 33, None);
+        let pos = Tensor::from_f32(vec![(s - 1) as f32], &[1], None);
+        let base = fused_attention_pos(&q, &kh, &vh, &pos, 0.5, None).to_vec_f32();
+
+        let poison = |t: &Tensor| {
+            let mut v = t.to_vec_f32();
+            for x in v.iter_mut().skip(s * d) {
+                *x = f32::NAN;
+            }
+            Tensor::from_f32(v, t.shape(), None)
+        };
+        let got =
+            fused_attention_pos(&q, &poison(&kh), &poison(&vh), &pos, 0.5, None).to_vec_f32();
+        let a: Vec<u32> = base.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+
+    /// Position masking equals the dense additive-mask reference.
+    #[test]
+    fn causal_matches_dense_masked_reference() {
+        let (s, d) = (40, 8);
+        let q = Tensor::rand(&[s, d], 1.0, 41, None);
+        let k = Tensor::rand(&[s, d], 1.0, 42, None);
+        let v = Tensor::rand(&[s, d], 1.0, 43, None);
+        let pos = Tensor::from_f32((0..s).map(|i| i as f32).collect(), &[s], None);
+        let got = fused_attention_pos(&q, &k, &v, &pos, 0.3, None);
+
+        // dense: scores + (-1e30 per masked cell), softmax, @v
+        let kt = k.permute(&[1, 0]);
+        let scores = matmul(&q, &kt, None);
+        let mut sm = scores.to_vec_f32();
+        for i in 0..s {
+            for j in 0..s {
+                sm[i * s + j] *= 0.3;
+                if j > i {
+                    sm[i * s + j] = -1e30;
+                }
+            }
+        }
+        let probs = softmax(&Tensor::from_f32(sm, &[s, s], None), 1, None);
+        let want = matmul(&probs, &v, None);
+        assert!(got.max_abs_diff(&want) < 1e-4, "{}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn incremental_into_is_fused_into() {
+        // The named decode entry point must be the same core.
+        let q = Tensor::rand(&[2, 8], 1.0, 51, None);
+        let k = Tensor::rand(&[70, 8], 1.0, 52, None);
+        let v = Tensor::rand(&[70, 8], 1.0, 53, None);
+        let mut a = vec![0.0f32; 2 * 8];
+        let mut b = vec![0.0f32; 2 * 8];
+        let sa = incremental_attention_into(&q, &k, &v, 0.7, &mut a, None);
+        let sb = fused_attention_into(&q, &k, &v, 0.7, &mut b, None);
+        assert_eq!(sa, sb);
+        let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+        let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ab, bb);
     }
 }

@@ -1,0 +1,248 @@
+//! Persistent KV cache for autoregressive decode (DESIGN.md §13).
+//!
+//! One [`KvCache`] holds, per transformer layer, a pair of
+//! capacity-shaped `[heads, capacity, head_dim]` tensors that live
+//! *across* executions: the prefill seeds them, every decode step reads
+//! them as persistent graph inputs and appends the new token's K/V rows.
+//! Rows at index ≥ `len` are stale by contract — the decode graph's
+//! position masking makes them exact no-ops, so they are never zeroed.
+//! Stale rows are always *finite* (seeded or appended computed values):
+//! the fused decode path never reads masked bytes at all, while the dense
+//! path computes scores from them before the additive mask drives the
+//! result below the exp-underflow threshold — which needs finiteness and
+//! bounded magnitude, both guaranteed for computed K/V rows.
+//!
+//! Memory contract: the backing tensors are allocated on the serve run's
+//! [`MemoryTracker`] at full capacity, so a cache's **resident bytes are
+//! part of the measured peak** from creation to eviction — exactly what
+//! the engine's admission control charges (`planned_peak +
+//! resident_kv_bytes`). Appends mutate in place through
+//! [`Tensor::f32_mut`]: they require that no execution still holds a view
+//! of the cache (the engine appends strictly between steps) and move no
+//! tracker counters — resident bytes are constant for the cache's
+//! lifetime.
+
+use super::{MemoryTracker, Tensor};
+
+/// Per-request persistent KV state: `layers` pairs of
+/// `[heads, capacity, head_dim]` tensors plus the logical length.
+#[derive(Debug)]
+pub struct KvCache {
+    ks: Vec<Tensor>,
+    vs: Vec<Tensor>,
+    heads: usize,
+    head_dim: usize,
+    capacity: usize,
+    len: usize,
+}
+
+impl KvCache {
+    /// Allocate a cache at full capacity on `tracker` (resident bytes
+    /// count toward the run's measured peak immediately — admission must
+    /// have reserved them).
+    pub fn new(
+        layers: usize,
+        heads: usize,
+        capacity: usize,
+        head_dim: usize,
+        tracker: Option<MemoryTracker>,
+    ) -> KvCache {
+        assert!(layers > 0 && heads > 0 && capacity > 0 && head_dim > 0);
+        let shape = [heads, capacity, head_dim];
+        let ks = (0..layers).map(|_| Tensor::zeros(&shape, tracker.clone())).collect();
+        let vs = (0..layers).map(|_| Tensor::zeros(&shape, tracker.clone())).collect();
+        KvCache {
+            ks,
+            vs,
+            heads,
+            head_dim,
+            capacity,
+            len: 0,
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.ks.len()
+    }
+
+    /// Logical length: number of valid (attended) positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    /// Resident bytes this cache pins for its whole lifetime (full
+    /// capacity, K and V, all layers) — the engine's per-request
+    /// `resident_kv_bytes` admission charge.
+    pub fn bytes(&self) -> usize {
+        2 * self.layers() * self.heads * self.capacity * self.head_dim * 4
+    }
+
+    /// Bulk-seed one layer from prefill outputs (full `[h, cap, dh]`
+    /// tensors; rows ≥ the prompt length hold masked padding values).
+    /// Call [`KvCache::set_len`] once every layer is seeded.
+    pub fn seed(&mut self, layer: usize, k: &Tensor, v: &Tensor) {
+        let want = [self.heads, self.capacity, self.head_dim];
+        assert_eq!(k.shape(), &want[..], "seed k shape");
+        assert_eq!(v.shape(), &want[..], "seed v shape");
+        let kd = self.ks[layer].f32_mut().expect("cache k aliased during seed");
+        k.copy_into_f32(kd);
+        let vd = self.vs[layer].f32_mut().expect("cache v aliased during seed");
+        v.copy_into_f32(vd);
+    }
+
+    /// Set the logical length (after seeding all layers).
+    pub fn set_len(&mut self, len: usize) {
+        assert!(len <= self.capacity, "len {len} over capacity {}", self.capacity);
+        self.len = len;
+    }
+
+    /// Write one new token's `[h, 1, dh]` K/V rows at position `len` for
+    /// `layer`. Call [`KvCache::advance`] once every layer is appended.
+    pub fn append(&mut self, layer: usize, k_row: &Tensor, v_row: &Tensor) {
+        assert!(self.len < self.capacity, "cache full at {}", self.len);
+        let want = [self.heads, 1, self.head_dim];
+        assert_eq!(k_row.shape(), &want[..], "append k shape");
+        assert_eq!(v_row.shape(), &want[..], "append v shape");
+        let (cap, dh, at) = (self.capacity, self.head_dim, self.len);
+        let ksrc = k_row.to_vec_f32();
+        let kd = self.ks[layer].f32_mut().expect("cache k aliased during append");
+        for h in 0..self.heads {
+            kd[h * cap * dh + at * dh..h * cap * dh + (at + 1) * dh]
+                .copy_from_slice(&ksrc[h * dh..(h + 1) * dh]);
+        }
+        let vsrc = v_row.to_vec_f32();
+        let vd = self.vs[layer].f32_mut().expect("cache v aliased during append");
+        for h in 0..self.heads {
+            vd[h * cap * dh + at * dh..h * cap * dh + (at + 1) * dh]
+                .copy_from_slice(&vsrc[h * dh..(h + 1) * dh]);
+        }
+    }
+
+    /// Advance the logical length after appending all layers.
+    pub fn advance(&mut self) {
+        assert!(self.len < self.capacity, "cache full at {}", self.len);
+        self.len += 1;
+    }
+
+    /// Full-capacity K tensor for `layer` — the decode graph's persistent
+    /// input (cheap clone of the shared buffer; drop it before the next
+    /// append).
+    pub fn k_full(&self, layer: usize) -> Tensor {
+        self.ks[layer].clone()
+    }
+
+    /// Full-capacity V tensor for `layer`.
+    pub fn v_full(&self, layer: usize) -> Tensor {
+        self.vs[layer].clone()
+    }
+
+    /// Zero-copy gather view of the valid K prefix `[h, len, dh]`
+    /// (strided across heads) — the incremental-attention kernel's cache
+    /// operand.
+    pub fn k_view(&self, layer: usize) -> Tensor {
+        self.ks[layer].slice_axis(1, 0, self.len)
+    }
+
+    /// Zero-copy gather view of the valid V prefix `[h, len, dh]`.
+    pub fn v_view(&self, layer: usize) -> Tensor {
+        self.vs[layer].slice_axis(1, 0, self.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::attention::incremental_attention;
+
+    #[test]
+    fn seed_append_and_views_roundtrip() {
+        let (h, cap, dh) = (2usize, 8usize, 4usize);
+        let mut c = KvCache::new(1, h, cap, dh, None);
+        assert_eq!(c.bytes(), 2 * h * cap * dh * 4);
+
+        let k0 = Tensor::rand(&[h, cap, dh], 1.0, 1, None);
+        let v0 = Tensor::rand(&[h, cap, dh], 1.0, 2, None);
+        c.seed(0, &k0, &v0);
+        c.set_len(3);
+        assert_eq!(c.len(), 3);
+        let kv = c.k_view(0);
+        assert_eq!(kv.shape(), &[h, 3, dh]);
+        // view rows equal the seeded rows
+        let want: Vec<f32> = (0..h)
+            .flat_map(|hi| k0.slice_axis(0, hi, 1).slice_axis(1, 0, 3).to_vec_f32())
+            .collect();
+        assert_eq!(kv.to_vec_f32(), want);
+
+        let krow = Tensor::rand(&[h, 1, dh], 1.0, 3, None);
+        let vrow = Tensor::rand(&[h, 1, dh], 1.0, 4, None);
+        c.append(0, &krow, &vrow);
+        c.advance();
+        assert_eq!(c.len(), 4);
+        // appended row shows up at position 3 of every head
+        let kv = c.k_view(0);
+        for hi in 0..h {
+            let got = kv.slice_axis(0, hi, 1).slice_axis(1, 3, 1).to_vec_f32();
+            let want = krow.slice_axis(0, hi, 1).to_vec_f32();
+            assert_eq!(got, want, "head {hi}");
+        }
+    }
+
+    #[test]
+    fn tracker_counts_resident_until_drop() {
+        let tr = MemoryTracker::new();
+        let c = KvCache::new(2, 2, 16, 8, Some(tr.clone()));
+        assert_eq!(tr.current(), c.bytes());
+        let view = c.k_view(0);
+        drop(c);
+        // a live view keeps one layer's K buffer alive
+        assert_eq!(tr.current(), 2 * 16 * 8 * 4);
+        drop(view);
+        assert_eq!(tr.current(), 0);
+    }
+
+    #[test]
+    fn strided_views_feed_incremental_attention() {
+        // cache views are non-contiguous (head stride = cap·dh); the
+        // kernel must accept them directly.
+        let (h, cap, dh, s) = (2usize, 10usize, 4usize, 6usize);
+        let mut c = KvCache::new(1, h, cap, dh, None);
+        let k0 = Tensor::rand(&[h, cap, dh], 1.0, 7, None);
+        let v0 = Tensor::rand(&[h, cap, dh], 1.0, 8, None);
+        c.seed(0, &k0, &v0);
+        c.set_len(s);
+        assert!(!c.k_view(0).is_contiguous());
+        let q = Tensor::rand(&[h, 1, dh], 1.0, 9, None);
+        let got = incremental_attention(&q, &c.k_view(0), &c.v_view(0), 0.5, None);
+        // reference over materialized prefixes
+        let kc = c.k_view(0).to_contiguous(None);
+        let vc = c.v_view(0).to_contiguous(None);
+        let want = incremental_attention(&q, &kc, &vc, 0.5, None);
+        let a: Vec<u32> = got.to_vec_f32().iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = want.to_vec_f32().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "cache full")]
+    fn advance_past_capacity_panics() {
+        let mut c = KvCache::new(1, 1, 2, 2, None);
+        c.set_len(2);
+        c.advance();
+    }
+}

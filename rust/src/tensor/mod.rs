@@ -18,12 +18,14 @@
 mod alloc;
 pub mod attention;
 pub mod conv;
+pub mod kvcache;
 pub mod layout;
 pub mod matmul;
 pub mod ops;
 pub mod reduce;
 
 pub use alloc::{Arena, ArenaStore, Buffer, MemoryTracker, SlotSpec, Storage};
+pub use kvcache::KvCache;
 
 use std::fmt;
 use std::sync::Arc;
@@ -245,6 +247,21 @@ impl Tensor {
                 dtype,
             }),
         }
+    }
+
+    /// Exclusive mutable access to this tensor's f32 storage, available
+    /// only when the view is contiguous at offset 0 and this is the sole
+    /// live reference to the buffer — the KV-cache append path
+    /// ([`kvcache::KvCache`]). Returns `None` while any alias (a decode
+    /// step's cache view) is still live.
+    pub(crate) fn f32_mut(&mut self) -> Option<&mut [f32]> {
+        if !self.is_contiguous() || self.offset != 0 || self.dtype != DType::F32 {
+            return None;
+        }
+        Arc::get_mut(&mut self.buf).map(|b| match &mut b.storage {
+            Storage::F32(v) => v.as_mut_slice(),
+            Storage::I32(_) => unreachable!("dtype checked above"),
+        })
     }
 
     /// Deterministic pseudo-random uniform values in [-scale, scale]

@@ -1,0 +1,246 @@
+//! Autoregressive decode parity (DESIGN.md §13): incremental decode
+//! against a KV cache is **bitwise identical** to re-running full causal
+//! prefill at every grown length —
+//!
+//! * for dense and fused attention flavors,
+//! * at pool widths 1 and 4,
+//! * with the arena executor off and on,
+//! * whether the prefill that seeded the cache was dense or chunk-planned.
+//!
+//! Why this can hold bitwise at all: every kernel in the stack processes
+//! output rows independently with a fixed accumulation order, the decode
+//! graph rebuilds the attention key axis at full bucket length (the new
+//! K/V row concat-inserted at position `past`), and masked positions are
+//! exact no-ops (probabilities underflow to +0.0, and `x + 0.0 == x`
+//! bitwise), so the decode step's surviving floats take exactly the same
+//! arithmetic path as prefill row `past`.
+
+use autochunk::coordinator::{greedy_argmax, pad_prompt};
+use autochunk::exec::random_params;
+use autochunk::models::{gpt_decode, gpt_lm_head, gpt_prefill_kv, GptConfig};
+use autochunk::passes::{autochunk as compile, estimate, AutoChunkConfig};
+use autochunk::plan::{ExecOptions, PlanHandle};
+use autochunk::tensor::{KvCache, MemoryTracker, Tensor};
+use autochunk::util::pool;
+
+const BUCKET: usize = 32;
+
+fn cfg(fused: bool) -> GptConfig {
+    GptConfig {
+        seq: BUCKET,
+        d_model: 32,
+        heads: 4,
+        layers: 2,
+        vocab: 64,
+        ff_mult: 2,
+        fused_attention: fused,
+        causal: true,
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The engine's bucket-padding rule, as a tensor (shared `pad_prompt`).
+fn pad_tokens(tokens: &[i32], bucket: usize) -> Tensor {
+    Tensor::from_i32(pad_prompt(tokens, bucket), &[bucket], None)
+}
+
+/// Drive `steps` decode steps from a `prompt_len`-token prompt; at every
+/// grown length assert the decode hidden row and logits are bitwise equal
+/// to a full prefill recompute over the sequence so far.
+fn check_parity(
+    fused: bool,
+    chunked_prefill: bool,
+    use_arena: bool,
+    prompt_len: usize,
+    steps: usize,
+) {
+    assert!(prompt_len + steps + 1 <= BUCKET, "sequence outgrows the bucket");
+    let c = cfg(fused);
+    let gp = gpt_prefill_kv(&c);
+    let params = random_params(&gp, 0xBEEF);
+    let plans = if chunked_prefill {
+        let base = estimate(&gp).peak_bytes;
+        let r = compile(&gp, base / 3, &AutoChunkConfig::default());
+        assert!(!r.plans.is_empty(), "chunk search found nothing to chunk");
+        r.plans
+    } else {
+        Vec::new()
+    };
+    let hp = PlanHandle::new("prefill", gp, plans, params.clone());
+    let lm_params = autochunk::models::lm_head_params(&params);
+    let lm = PlanHandle::new("lm", gpt_lm_head(&c), Vec::new(), lm_params);
+    let opts = ExecOptions { budget_bytes: None, use_arena };
+    let tracker = MemoryTracker::new();
+
+    // ---- prefill: seed the cache, pick token 1
+    let prompt: Vec<i32> = (0..prompt_len).map(|i| ((7 + i * 13) % 64) as i32).collect();
+    let (outs, _) = hp.execute(&[pad_tokens(&prompt, BUCKET)], &tracker, &opts);
+    let mut cache = KvCache::new(c.layers, c.heads, BUCKET, c.head_dim(), Some(tracker.clone()));
+    for l in 0..c.layers {
+        cache.seed(l, &outs[1 + 2 * l], &outs[2 + 2 * l]);
+    }
+    cache.set_len(prompt_len);
+    let hrow = outs[0].slice_axis(0, prompt_len - 1, 1).to_contiguous(None);
+    drop(outs);
+    let (louts, _) = lm.execute(&[hrow], &tracker, &opts);
+    let mut tok = greedy_argmax(&louts[0].to_vec_f32());
+    drop(louts);
+    let mut seq = prompt;
+    seq.push(tok);
+
+    for _ in 0..steps {
+        // ---- one incremental decode step (input = last token, position
+        // `past`, attending the cache)
+        let past = seq.len() - 1;
+        let hd = PlanHandle::new("decode", gpt_decode(&c, past), Vec::new(), params.clone());
+        let mut ins = vec![Tensor::from_i32(vec![tok], &[1], None)];
+        for l in 0..c.layers {
+            ins.push(cache.k_full(l));
+            ins.push(cache.v_full(l));
+        }
+        let (douts, _) = hd.execute(&ins, &tracker, &opts);
+        drop(ins); // release cache views before the appends below
+        let dec_row = douts[0].to_contiguous(None);
+        let (dl, _) = lm.execute(&[dec_row.clone()], &tracker, &opts);
+        let dec_logits = dl[0].to_vec_f32();
+        drop(dl);
+
+        // ---- reference: full prefill over the grown sequence
+        let (routs, _) = hp.execute(&[pad_tokens(&seq, BUCKET)], &tracker, &opts);
+        let ref_row = routs[0].slice_axis(0, past, 1).to_contiguous(None);
+        drop(routs);
+        let (rl, _) = lm.execute(&[ref_row.clone()], &tracker, &opts);
+        assert_eq!(
+            bits(&dec_row.to_vec_f32()),
+            bits(&ref_row.to_vec_f32()),
+            "hidden row diverged at length {} (fused={fused} chunked={chunked_prefill} \
+             arena={use_arena})",
+            seq.len()
+        );
+        assert_eq!(
+            bits(&dec_logits),
+            bits(&rl[0].to_vec_f32()),
+            "logits diverged at length {} (fused={fused} chunked={chunked_prefill} \
+             arena={use_arena})",
+            seq.len()
+        );
+
+        // ---- append the step's K/V rows and advance
+        for l in 0..c.layers {
+            cache.append(l, &douts[1 + 2 * l], &douts[2 + 2 * l]);
+        }
+        drop(douts);
+        cache.advance();
+        tok = greedy_argmax(&dec_logits);
+        seq.push(tok);
+    }
+}
+
+#[test]
+fn dense_decode_parity_widths_and_arenas() {
+    for &width in &[1usize, 4] {
+        for &arena in &[false, true] {
+            pool::with_threads(width, || check_parity(false, false, arena, 5, 6));
+        }
+    }
+}
+
+#[test]
+fn fused_decode_parity_widths_and_arenas() {
+    for &width in &[1usize, 4] {
+        for &arena in &[false, true] {
+            pool::with_threads(width, || check_parity(true, false, arena, 5, 6));
+        }
+    }
+}
+
+#[test]
+fn chunk_planned_prefill_seeds_identical_cache() {
+    // The cache seed may come from a chunk-planned prefill: chunked
+    // execution is bitwise identical to dense, so parity must survive.
+    pool::with_threads(2, || {
+        check_parity(false, true, false, 7, 4);
+        check_parity(true, true, true, 7, 4);
+    });
+}
+
+#[test]
+fn random_prompts_long_horizon() {
+    // Random prompt lengths/steps within the bucket, 1..=16 steps.
+    let mut state = 0x5EEDu64;
+    let mut rnd = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    for trial in 0..3 {
+        let prompt_len = 2 + (rnd() % 8) as usize; // 2..=9
+        let steps = 1 + (rnd() % 16) as usize; // 1..=16
+        let steps = steps.min(BUCKET - prompt_len - 1);
+        let fused = trial % 2 == 0;
+        pool::with_threads(1, || check_parity(fused, false, trial == 2, prompt_len, steps));
+    }
+}
+
+#[test]
+fn generated_streams_identical_across_widths_and_executors() {
+    // End-to-end greedy token streams must not depend on pool width or
+    // executor: collect the stream under each setting and compare.
+    let gen_stream = |width: usize, arena: bool| -> Vec<i32> {
+        pool::with_threads(width, || {
+            let c = cfg(false);
+            let gp = gpt_prefill_kv(&c);
+            let params = random_params(&gp, 0xF00D);
+            let hp = PlanHandle::new("p", gp, Vec::new(), params.clone());
+            let lm_params = autochunk::models::lm_head_params(&params);
+            let lm = PlanHandle::new("lm", gpt_lm_head(&c), Vec::new(), lm_params);
+            let opts = ExecOptions { budget_bytes: None, use_arena: arena };
+            let tracker = MemoryTracker::new();
+            let prompt: Vec<i32> = vec![3, 1, 4, 1, 5, 9];
+            let (outs, _) = hp.execute(&[pad_tokens(&prompt, BUCKET)], &tracker, &opts);
+            let mut cache =
+                KvCache::new(c.layers, c.heads, BUCKET, c.head_dim(), Some(tracker.clone()));
+            for l in 0..c.layers {
+                cache.seed(l, &outs[1 + 2 * l], &outs[2 + 2 * l]);
+            }
+            cache.set_len(prompt.len());
+            let hrow = outs[0].slice_axis(0, prompt.len() - 1, 1).to_contiguous(None);
+            drop(outs);
+            let (louts, _) = lm.execute(&[hrow], &tracker, &opts);
+            let mut tok = greedy_argmax(&louts[0].to_vec_f32());
+            drop(louts);
+            let mut stream = vec![tok];
+            let mut past = prompt.len();
+            for _ in 0..8 {
+                let hd = PlanHandle::new("d", gpt_decode(&c, past), Vec::new(), params.clone());
+                let mut ins = vec![Tensor::from_i32(vec![tok], &[1], None)];
+                for l in 0..c.layers {
+                    ins.push(cache.k_full(l));
+                    ins.push(cache.v_full(l));
+                }
+                let (douts, _) = hd.execute(&ins, &tracker, &opts);
+                drop(ins);
+                let dec_row = douts[0].to_contiguous(None);
+                let (dl, _) = lm.execute(&[dec_row], &tracker, &opts);
+                tok = greedy_argmax(&dl[0].to_vec_f32());
+                drop(dl);
+                for l in 0..c.layers {
+                    cache.append(l, &douts[1 + 2 * l], &douts[2 + 2 * l]);
+                }
+                drop(douts);
+                cache.advance();
+                past += 1;
+                stream.push(tok);
+            }
+            stream
+        })
+    };
+    let base = gen_stream(1, false);
+    assert_eq!(base, gen_stream(4, false), "stream depends on width");
+    assert_eq!(base, gen_stream(1, true), "stream depends on executor");
+    assert_eq!(base, gen_stream(4, true), "stream depends on width+executor");
+}

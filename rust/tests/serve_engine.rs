@@ -12,7 +12,8 @@
 //!   instead of rejecting them.
 
 use autochunk::coordinator::{
-    open_loop_workload, EngineConfig, EngineResponse, Request, RequestOutcome, ServeEngine,
+    generate_workload, open_loop_workload, EngineConfig, EngineResponse, Request, RequestOutcome,
+    ServeEngine,
 };
 use autochunk::util::pool;
 
@@ -104,13 +105,14 @@ fn starvation_freedom_every_request_resolves() {
     assert!(report.measured_peak_bytes <= budget);
 }
 
-fn response_key(r: &EngineResponse) -> (usize, bool, usize, usize, Vec<u32>) {
+fn response_key(r: &EngineResponse) -> (usize, bool, usize, usize, Vec<u32>, Vec<i32>) {
     (
         r.id,
         r.outcome == RequestOutcome::Completed,
         r.bucket,
         r.depth,
         r.output.iter().map(|v| v.to_bits()).collect(),
+        r.tokens.clone(),
     )
 }
 
@@ -320,6 +322,142 @@ fn arena_admission_packs_tighter_than_quote() {
         "quote admission unexpectedly served dense under {} < quote {}",
         budget, gap.quote_peak
     );
+}
+
+/// Budget that admits one top-bucket generation comfortably: k× the dense
+/// prefill quote plus k× the bucket's full-capacity KV cache.
+fn gen_budget(buckets: &[usize], k: usize) -> usize {
+    let mut probe = engine(usize::MAX, buckets.to_vec(), 1);
+    let top = *buckets.last().unwrap();
+    let (_, q) = probe.quote(top, 0).unwrap().expect("bucket quote");
+    (q.peak_bytes + probe.kv_bytes(top)) * k
+}
+
+/// Mixed prefill/decode workload: prefill-only requests interleaved with
+/// generation requests, all arriving in the first few ticks.
+fn mixed_workload() -> Vec<Request> {
+    let mut reqs = open_loop_workload(6, 8, 28, 77, 3);
+    for i in 0..4usize {
+        // prompt + new ≤ 32 so everything fits the small bucket set
+        reqs.push(Request::new(6 + i, 10 + i, i as i32).generate(3 + i % 2).at_tick(i as u64, 500));
+    }
+    reqs
+}
+
+#[test]
+fn kv_accounting_sound_under_tight_budget() {
+    // ISSUE 4 acceptance: with mixed prefill/decode waves under a tight
+    // budget, the measured peak — which *includes* resident cache bytes,
+    // since caches allocate on the run tracker — never exceeds the
+    // budget, and finished requests' caches are evicted (tracked bytes
+    // return to zero).
+    let buckets = vec![32usize];
+    let budget = gen_budget(&buckets, 3);
+    let mut e = engine(budget, buckets, 2);
+    let reqs = mixed_workload();
+    let (resp, report) = e.serve(&reqs).unwrap();
+    assert_eq!(resp.len(), reqs.len(), "every request must resolve");
+    assert!(report.completed > 0);
+    assert!(
+        report.measured_peak_bytes <= budget,
+        "measured peak {} (incl. resident kv) exceeds budget {budget}",
+        report.measured_peak_bytes
+    );
+    assert!(report.resident_kv_high_water_bytes > 0, "no cache was ever resident");
+    assert!(report.resident_kv_high_water_bytes <= report.measured_peak_bytes);
+    assert_eq!(report.measured_final_bytes, 0, "resident bytes must return to zero");
+    // decode metrics: the breakdown is populated and ordered
+    assert!(report.generated_tokens > 0);
+    assert!(report.decode_steps > 0);
+    assert!(report.decode_p99_us >= report.decode_p50_us);
+    assert!(report.decode_p50_us > 0);
+    assert!(report.prefill_p99_us >= report.prefill_p50_us);
+    assert!(report.prefill_p50_us > 0);
+    // generated requests carry their token streams
+    for r in resp.iter().filter(|r| !r.tokens.is_empty()) {
+        let req = &reqs[r.id];
+        assert_eq!(r.tokens.len(), req.max_new_tokens);
+        assert_eq!(r.decode_steps, req.max_new_tokens - 1);
+        assert!(r.tokens.iter().all(|&t| (0..8192).contains(&t)));
+    }
+}
+
+#[test]
+fn generation_continuous_matches_serial_bitwise() {
+    // Token streams and final logits are part of the determinism
+    // contract: continuous batching must reproduce the back-to-back
+    // path bitwise, at widths 1 and 4.
+    let buckets = vec![32usize, 64];
+    let budget = gen_budget(&buckets, 3);
+    let reqs = generate_workload(6, 8, 40, 2, 5, 11, 2);
+
+    let run = |serial: bool, threads: usize| {
+        let mut e = engine(budget, buckets.clone(), threads);
+        let (resp, _) = if serial {
+            e.serve_serial(&reqs).unwrap()
+        } else {
+            e.serve(&reqs).unwrap()
+        };
+        resp.iter().map(response_key).collect::<Vec<_>>()
+    };
+    let serial1 = run(true, 1);
+    assert_eq!(serial1, run(false, 1), "continuous != serial at width 1");
+    assert_eq!(serial1, run(false, 4), "continuous at width 4 diverged");
+    assert_eq!(serial1, run(true, 4), "serial at width 4 diverged");
+    // the workload really generated something
+    assert!(serial1.iter().any(|k| !k.5.is_empty()));
+}
+
+#[test]
+fn decode_plans_cached_across_requests() {
+    // Two identical generations share every decode-step plan: the second
+    // request's decode handles must all be cache hits.
+    let buckets = vec![32usize];
+    let budget = gen_budget(&buckets, 4);
+    let mut e = engine(budget, buckets, 1);
+    let r1 = vec![Request::new(0, 8, 3).generate(4)];
+    let (_, rep1) = e.serve(&r1).unwrap();
+    assert!(rep1.cache_misses > 0);
+    let r2 = vec![Request::new(0, 8, 3).generate(4)];
+    let (_, rep2) = e.serve(&r2).unwrap();
+    assert_eq!(rep2.cache_misses, 0, "second identical generation recompiled");
+    assert!(rep2.cache_hits >= 4, "prefill + lm + decode steps must all hit");
+    // the registry cataloged decode variants
+    assert!(e.registry().get("gpt_decode_s32_p8").is_some());
+    assert!(e.registry().get("gpt_lmhead_s32").is_some());
+}
+
+#[test]
+fn generation_under_arena_matches_interpreter() {
+    let buckets = vec![32usize];
+    let budget = gen_budget(&buckets, 3);
+    let reqs = mixed_workload();
+    let run = |use_arena: bool| {
+        let mut e = ServeEngine::new(EngineConfig {
+            model: "gpt".into(),
+            budget_bytes: budget,
+            max_batch: 4,
+            buckets: buckets.clone(),
+            worker_threads: 2,
+            use_arena,
+            ..EngineConfig::default()
+        });
+        e.serve(&reqs).unwrap()
+    };
+    let (r_int, _) = run(false);
+    let (r_arena, report) = run(true);
+    assert_eq!(r_int.len(), r_arena.len());
+    for (a, b) in r_arena.iter().zip(&r_int) {
+        assert_eq!(a.tokens, b.tokens, "request {} token stream diverged", a.id);
+        assert_eq!(
+            response_key(a).4,
+            response_key(b).4,
+            "request {} output diverged between arena and interpreter",
+            a.id
+        );
+    }
+    assert!(report.measured_peak_bytes <= budget);
+    assert_eq!(report.measured_final_bytes, 0);
 }
 
 #[test]
