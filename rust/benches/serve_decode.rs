@@ -12,11 +12,16 @@
 //!
 //! Both paths produce bitwise-identical token streams
 //! (`rust/tests/decode_parity.rs`); this bench measures the throughput
-//! and memory gap. Emits `BENCH_serve_decode.json`.
+//! and memory gap. A second sweep compares the serve engine's **paged**
+//! KV cache (`block_tokens ∈ {16, 64}`, DESIGN.md §14) against the
+//! capacity-reserving contiguous baseline at one fixed budget:
+//! concurrent generations admitted, waves, resident high water, and
+//! tokens/s. Emits `BENCH_serve_decode.json`.
 //!
-//! `cargo bench --bench serve_decode`
+//! `cargo bench --bench serve_decode` (`AUTOCHUNK_BENCH_TINY=1` shrinks
+//! both sweeps to the CI smoke size).
 
-use autochunk::coordinator::{greedy_argmax, pad_prompt};
+use autochunk::coordinator::{greedy_argmax, pad_prompt, EngineConfig, Request, ServeEngine};
 use autochunk::exec::random_params;
 use autochunk::models::{gpt_decode, gpt_lm_head, gpt_prefill_kv, GptConfig};
 use autochunk::plan::{ExecOptions, PlanHandle};
@@ -26,6 +31,10 @@ use autochunk::util::pool;
 use std::time::Instant;
 
 const NEW_TOKENS: usize = 16;
+
+fn tiny() -> bool {
+    std::env::var("AUTOCHUNK_BENCH_TINY").map(|v| v == "1").unwrap_or(false)
+}
 
 /// The engine's bucket-padding rule, as a tensor (shared `pad_prompt`).
 fn pad_tokens(tokens: &[i32], bucket: usize) -> Tensor {
@@ -100,7 +109,7 @@ fn run_decode(
     RunResult {
         tokens_per_s: (NEW_TOKENS - 1) as f64 / secs,
         step_peak_bytes: step_peak,
-        resident_kv_bytes: cache.bytes(),
+        resident_kv_bytes: cache.resident_bytes(),
     }
 }
 
@@ -168,7 +177,8 @@ fn main() {
     let mut decode_peaks: Vec<(usize, usize)> = Vec::new();
     let mut prefill_peaks: Vec<(usize, usize)> = Vec::new();
 
-    for &prompt_len in &[32usize, 64, 128] {
+    let prompt_lens: Vec<usize> = if tiny() { vec![16] } else { vec![32, 64, 128] };
+    for &prompt_len in &prompt_lens {
         let bucket = prompt_len + NEW_TOKENS;
         let cfg = GptConfig { seq: bucket, causal: true, ..Default::default() };
         let gp = gpt_prefill_kv(&cfg);
@@ -224,6 +234,87 @@ fn main() {
         if de < 1.5 { "is" } else { "is NOT" },
         if pe > 1.5 { "is" } else { "is NOT" },
     );
+
+    // ---- paged-vs-contiguous engine sweep (DESIGN.md §14): at one fixed
+    // budget sized so the capacity-reserving baseline holds one full
+    // cache, how many short generations run concurrently and how fast?
+    let bucket = 64usize;
+    let n_reqs = if tiny() { 4 } else { 8 };
+    let reqs: Vec<Request> =
+        (0..n_reqs).map(|i| Request::new(i, 6, i as i32).generate(4).at_tick(0, 500)).collect();
+    let mut probe = ServeEngine::new(EngineConfig {
+        model: "gpt".into(),
+        budget_bytes: usize::MAX,
+        buckets: vec![bucket],
+        worker_threads: threads,
+        ..EngineConfig::default()
+    });
+    let kv = probe.kv_bytes(bucket);
+    let budget = probe.gen_cost(bucket).expect("gen cost")
+        + probe.decode_cost(bucket, 6).expect("decode cost")
+        + kv
+        + kv / 2;
+
+    println!(
+        "\n== Paged vs contiguous serve engine ({} short generations, bucket {bucket}, \
+         budget {:.2} MiB) ==\n",
+        reqs.len(),
+        mib(budget)
+    );
+    let mut etable = Table::new(&[
+        "cache",
+        "concurrent",
+        "waves",
+        "resident hw",
+        "shared hits",
+        "evicted",
+        "tok/s",
+    ]);
+    for &bt in &[0usize, 16, 64] {
+        let mut engine = ServeEngine::new(EngineConfig {
+            model: "gpt".into(),
+            budget_bytes: budget,
+            max_batch: 8,
+            buckets: vec![bucket],
+            worker_threads: threads,
+            block_tokens: bt,
+            ..EngineConfig::default()
+        });
+        let started = Instant::now();
+        let (responses, report) = engine.serve(&reqs).expect("serve");
+        let secs = started.elapsed().as_secs_f64().max(1e-9);
+        let completed = responses
+            .iter()
+            .filter(|r| r.outcome == autochunk::coordinator::RequestOutcome::Completed)
+            .count();
+        let mode = match bt {
+            0 => "contiguous".to_string(),
+            n => format!("paged{n}"),
+        };
+        etable.row(vec![
+            mode.clone(),
+            format!("{}", report.max_concurrent_generations),
+            format!("{}", report.waves),
+            format!("{:.2} MiB", mib(report.resident_kv_high_water_bytes)),
+            format!("{}", report.shared_prefix_hits),
+            format!("{}", report.evicted),
+            format!("{:.1}", report.generated_tokens as f64 / secs),
+        ]);
+        rows.push(format!(
+            "  {{\"mode\": \"engine_{mode}\", \"bucket\": {bucket}, \"block_tokens\": {bt}, \
+             \"budget_mb\": {:.3}, \"concurrent_generations\": {}, \"waves\": {}, \
+             \"resident_kv_hw_mb\": {:.3}, \"shared_prefix_hits\": {}, \"evicted\": {}, \
+             \"completed\": {completed}, \"tokens_per_s\": {:.3}, \"threads\": {threads}}}",
+            mib(budget),
+            report.max_concurrent_generations,
+            report.waves,
+            mib(report.resident_kv_high_water_bytes),
+            report.shared_prefix_hits,
+            report.evicted,
+            report.generated_tokens as f64 / secs,
+        ));
+    }
+    print!("{}", etable.render());
 
     let body = format!("[\n{}\n]\n", rows.join(",\n"));
     if let Err(e) = std::fs::write("BENCH_serve_decode.json", body) {

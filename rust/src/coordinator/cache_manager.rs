@@ -1,0 +1,401 @@
+//! Paged KV-cache manager: sharing policy over the block pool
+//! (DESIGN.md §14).
+//!
+//! [`crate::tensor::BlockPool`] provides the mechanism (refcounted
+//! fixed-size blocks, free-list allocation); this manager owns the
+//! *policy* the serve engine runs generations through:
+//!
+//! * **prefix sharing** — a prompt block is registered under the key
+//!   `(bucket, block_index, token_prefix_through_block_end)`; a later
+//!   request whose prompt matches the key reuses the block (refcount + 1)
+//!   instead of storing a second bitwise-identical copy. Soundness rests
+//!   on invariants the repo already pins: causal prefill rows depend only
+//!   on their token prefix (padding-invariant), chunk-planned prefill
+//!   seeds are bitwise identical to dense ones, and results are width-
+//!   and executor-independent — so the shared bytes *are* the bytes the
+//!   sharer's own prefill would have produced.
+//! * **copy-on-write on divergence** — appending a generated row into a
+//!   block held by more than one request first copies the block
+//!   ([`BlockPool::copy_block`]) and swaps the private copy into the
+//!   appender's table; siblings keep reading the original bit-stably.
+//!   Appends into an exclusively-held keyed block write only rows at or
+//!   beyond the key's coverage, so the share entry stays valid.
+//! * **release** — dropping a table dereferences its blocks; a block
+//!   freed by its last reference leaves the share index, so the index
+//!   never outlives storage.
+//!
+//! Lifecycle contract (pinned by `serve_engine.rs` and `kvpage_fuzz.rs`):
+//! after every admitted generation has completed or been evicted,
+//! `blocks_in_use() == 0` and the run tracker reads zero bytes.
+
+use crate::tensor::{BlockPool, BlockTable, MemoryTracker, Tensor};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Prefix-share key: a block's content is a pure function of the bucket
+/// (scale + its parameter set), its index in the table, and the token
+/// prefix up to the last position the block holds.
+///
+/// Storing the full prefix makes a seed O(prompt²) in key bytes; at this
+/// repo's bucket scales (≤ a few hundred tokens) that is a few KiB per
+/// request and buys an *exactly* sound key with no invalidation
+/// machinery. A chained key (parent block id + this block's tokens)
+/// would be O(prompt) but needs child-entry invalidation when a parent
+/// block id is freed and recycled — deliberately not taken here.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+struct ShareKey {
+    bucket: usize,
+    index: usize,
+    prefix: Vec<i32>,
+}
+
+/// Block-pool owner + prefix-sharing policy for one serve run.
+pub struct CacheManager {
+    pool: BlockPool,
+    /// Prefix index: key → block. Entries are weak — a block freed by its
+    /// last table reference is removed (`rev`), so hits always point at
+    /// live storage. Keys are `Arc`-shared with `rev` so the prefix
+    /// bytes are stored once.
+    share: HashMap<Arc<ShareKey>, usize>,
+    /// Reverse index for cleanup on free (same `Arc` as the share entry).
+    rev: HashMap<usize, Arc<ShareKey>>,
+    shared_hits: usize,
+}
+
+impl CacheManager {
+    pub fn new(
+        layers: usize,
+        heads: usize,
+        block_tokens: usize,
+        head_dim: usize,
+        pool_blocks: usize,
+        tracker: Option<MemoryTracker>,
+    ) -> CacheManager {
+        CacheManager {
+            pool: BlockPool::new(layers, heads, block_tokens, head_dim, pool_blocks, tracker),
+            share: HashMap::new(),
+            rev: HashMap::new(),
+            shared_hits: 0,
+        }
+    }
+
+    pub fn pool(&self) -> &BlockPool {
+        &self.pool
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.pool.block_tokens()
+    }
+
+    pub fn block_bytes(&self) -> usize {
+        self.pool.block_bytes()
+    }
+
+    pub fn layers(&self) -> usize {
+        self.pool.layers()
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.pool.blocks_in_use()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.pool.free_blocks()
+    }
+
+    pub fn pool_blocks(&self) -> usize {
+        self.pool.pool_blocks()
+    }
+
+    /// True residency: blocks in use × block bytes. Shared blocks count
+    /// once — this is what the tracker sees and what admission subtracts
+    /// from the budget.
+    pub fn resident_bytes(&self) -> usize {
+        self.pool.resident_bytes()
+    }
+
+    /// Prefix-share hits since construction (each hit saved one block).
+    pub fn shared_hits(&self) -> usize {
+        self.shared_hits
+    }
+
+    /// Blocks needed to hold `len` cached positions.
+    pub fn blocks_for(&self, len: usize) -> usize {
+        len.div_ceil(self.pool.block_tokens())
+    }
+
+    /// Will the next append to `table` consume a fresh block? True at a
+    /// block boundary (new tail block) and when the tail block is shared
+    /// (copy-on-write takes a block; the original stays with siblings).
+    pub fn append_needs_block(&self, table: &BlockTable) -> bool {
+        let pos = table.len();
+        if pos % self.pool.block_tokens() == 0 {
+            return true;
+        }
+        let last = table.last_block().expect("non-boundary append on empty table");
+        self.pool.ref_count(last) > 1
+    }
+
+    /// Seed a table from prefill outputs (`outs[1 + 2l]`/`outs[2 + 2l]`
+    /// are layer `l`'s `[h, bucket, dh]` K/V tensors): prompt blocks are
+    /// shared where an identical prefix is already pooled, freshly
+    /// written otherwise. `tokens` is the *unpadded* effective prompt
+    /// (`len >= plen`); rows `plen..` of `outs` are never stored beyond
+    /// the tail block's padding, which no reader observes.
+    ///
+    /// Admission must have reserved up to `blocks_for(plen)` blocks; pool
+    /// exhaustion here is therefore a scheduler bug and panics.
+    pub fn seed(
+        &mut self,
+        bucket: usize,
+        tokens: &[i32],
+        plen: usize,
+        outs: &[Tensor],
+    ) -> BlockTable {
+        assert!(plen >= 1, "seed of empty prompt");
+        assert!(tokens.len() >= plen, "prompt shorter than seeded length");
+        let bt = self.pool.block_tokens();
+        let layers = self.pool.layers();
+        assert_eq!(outs.len(), 1 + 2 * layers, "prefill output arity");
+        let mut table = BlockTable::new();
+        for bi in 0..plen.div_ceil(bt) {
+            let r0 = bi * bt;
+            let rows = bt.min(plen - r0);
+            let key = ShareKey {
+                bucket,
+                index: bi,
+                prefix: tokens[..r0 + rows].to_vec(),
+            };
+            if let Some(&id) = self.share.get(&key) {
+                self.pool.retain(id);
+                self.shared_hits += 1;
+                table.push_block(id);
+                continue;
+            }
+            let id = self
+                .pool
+                .alloc()
+                .expect("kv block pool exhausted during seed (admission must reserve blocks)");
+            for l in 0..layers {
+                let k = outs[1 + 2 * l].slice_axis(1, r0, rows);
+                let v = outs[2 + 2 * l].slice_axis(1, r0, rows);
+                self.pool.write_rows(id, l, 0, &k, &v);
+            }
+            let key = Arc::new(key);
+            self.share.insert(key.clone(), id);
+            self.rev.insert(id, key);
+            table.push_block(id);
+        }
+        table.set_len(plen);
+        table
+    }
+
+    /// Append one decoded position: `outs` is a decode step's output list
+    /// (`outs[1 + 2l]`/`outs[2 + 2l]` are layer `l`'s `[h, 1, dh]` new
+    /// K/V rows). Allocates a tail block at a boundary, copies-on-write
+    /// when the tail block is shared, then writes and advances.
+    pub fn append_step(&mut self, table: &mut BlockTable, outs: &[Tensor]) {
+        let bt = self.pool.block_tokens();
+        let layers = self.pool.layers();
+        assert_eq!(outs.len(), 1 + 2 * layers, "decode output arity");
+        let pos = table.len();
+        let bi = pos / bt;
+        if bi == table.blocks().len() {
+            let id = self
+                .pool
+                .alloc()
+                .expect("kv block pool exhausted during append (admission must reserve the block)");
+            table.push_block(id);
+        } else {
+            assert_eq!(bi + 1, table.blocks().len(), "append not at table tail");
+            let cur = table.blocks()[bi];
+            if self.pool.ref_count(cur) > 1 {
+                // copy-on-write: this generation diverges from siblings
+                // still reading the shared prompt block
+                let id = self.pool.alloc().expect(
+                    "kv block pool exhausted during copy-on-write (admission must reserve it)",
+                );
+                self.pool.copy_block(id, cur);
+                let old = table.swap_block(bi, id);
+                debug_assert_eq!(old, cur);
+                // sibling references keep the original (and its share
+                // entry) alive; ours moves to the private copy
+                self.release_block(cur);
+            }
+        }
+        let id = table.blocks()[bi];
+        for l in 0..layers {
+            self.pool.write_rows(id, l, pos % bt, &outs[1 + 2 * l], &outs[2 + 2 * l]);
+        }
+        table.advance();
+    }
+
+    /// Bind a decode step's persistent inputs in graph order — per layer,
+    /// all K blocks then all V blocks, table order — appending onto `ins`
+    /// (which already holds the token).
+    pub fn bind_inputs(&self, table: &BlockTable, ins: &mut Vec<Tensor>) {
+        for l in 0..self.pool.layers() {
+            for &b in table.blocks() {
+                ins.push(self.pool.k(b, l));
+            }
+            for &b in table.blocks() {
+                ins.push(self.pool.v(b, l));
+            }
+        }
+    }
+
+    /// Release every block of a finished (or evicted) generation.
+    pub fn release_table(&mut self, table: BlockTable) {
+        for &id in table.blocks() {
+            self.release_block(id);
+        }
+    }
+
+    fn release_block(&mut self, id: usize) {
+        if self.pool.release(id) {
+            if let Some(key) = self.rev.remove(&id) {
+                // defensive: only drop the entry if it still points here
+                if self.share.get(&*key) == Some(&id) {
+                    self.share.remove(&*key);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth_outs(tokens: &[i32], bucket: usize, layers: usize, h: usize, dh: usize) -> Vec<Tensor> {
+        // Deterministic stand-in for prefill outputs: row j is a pure
+        // function of the token prefix through j — the same dependence
+        // structure causal prefill has, so sharing is sound here too.
+        let mut outs = vec![Tensor::zeros(&[1, 1], None)];
+        for l in 0..layers {
+            for which in 0..2 {
+                let mut data = vec![0.0f32; h * bucket * dh];
+                let mut hash: i64 = 17 + which as i64;
+                for j in 0..bucket {
+                    if j < tokens.len() {
+                        hash = hash.wrapping_mul(31).wrapping_add(tokens[j] as i64 + 1);
+                    } else {
+                        hash = hash.wrapping_mul(31).wrapping_add(7);
+                    }
+                    for hi in 0..h {
+                        for d in 0..dh {
+                            let v = ((hash as f32) * 1e-6).sin()
+                                + (l * 100 + hi * 10 + d) as f32 * 1e-3;
+                            data[hi * bucket * dh + j * dh + d] = v;
+                        }
+                    }
+                }
+                outs.push(Tensor::from_f32(data, &[h, bucket, dh], None));
+            }
+        }
+        outs
+    }
+
+    #[test]
+    fn seed_shares_identical_prefixes_and_releases_clean() {
+        let tr = MemoryTracker::new();
+        let (layers, h, bt, dh) = (2usize, 2usize, 4usize, 3usize);
+        let mut m = CacheManager::new(layers, h, bt, dh, 16, Some(tr.clone()));
+        let tokens: Vec<i32> = (0..10).map(|i| (i * 3 + 1) as i32).collect();
+        let outs = synth_outs(&tokens, 16, layers, h, dh);
+        let t1 = m.seed(16, &tokens, 10, &outs);
+        assert_eq!(t1.blocks().len(), 3); // 4+4+2
+        assert_eq!(m.blocks_in_use(), 3);
+        assert_eq!(m.shared_hits(), 0);
+
+        // identical prompt: all three blocks shared
+        let t2 = m.seed(16, &tokens, 10, &outs);
+        assert_eq!(m.shared_hits(), 3);
+        assert_eq!(m.blocks_in_use(), 3, "no new storage for an identical prompt");
+        assert_eq!(t1.blocks(), t2.blocks());
+
+        // longer prompt sharing the first two (full) blocks only
+        let mut longer = tokens.clone();
+        longer.extend([99, 98, 97]);
+        let outs_l = synth_outs(&longer, 16, layers, h, dh);
+        let t3 = m.seed(16, &longer, 13, &outs_l);
+        assert_eq!(m.shared_hits(), 5, "two full blocks shared");
+        // block 2 is full for t3 but was keyed partial (10 tokens) by t1,
+        // so t3 stores blocks 2 and 3 privately
+        assert_eq!(m.blocks_in_use(), 5);
+        assert_eq!(&t3.blocks()[..2], &t1.blocks()[..2]);
+
+        // divergent prompt shares nothing
+        let mut other = tokens.clone();
+        other[0] = 42;
+        let outs_o = synth_outs(&other, 16, layers, h, dh);
+        let t4 = m.seed(16, &other, 10, &outs_o);
+        assert_eq!(m.shared_hits(), 5);
+        assert_eq!(m.blocks_in_use(), 8);
+
+        for t in [t1, t2, t3, t4] {
+            m.release_table(t);
+        }
+        assert_eq!(m.blocks_in_use(), 0);
+        assert_eq!(m.free_blocks(), m.pool_blocks());
+        assert_eq!(tr.current(), 0, "all block storage returned");
+    }
+
+    #[test]
+    fn append_cow_keeps_sibling_reads_bitwise_stable() {
+        let (layers, h, bt, dh) = (1usize, 2usize, 4usize, 3usize);
+        let mut m = CacheManager::new(layers, h, bt, dh, 8, None);
+        let tokens: Vec<i32> = vec![5, 6, 7]; // partial block (3 of 4 rows)
+        let outs = synth_outs(&tokens, 8, layers, h, dh);
+        let mut a = m.seed(8, &tokens, 3, &outs);
+        let b = m.seed(8, &tokens, 3, &outs);
+        assert_eq!(m.shared_hits(), 1);
+        assert_eq!(m.blocks_in_use(), 1);
+        let shared = b.blocks()[0];
+        let before: Vec<u32> =
+            m.pool().k(shared, 0).to_vec_f32().iter().map(|x| x.to_bits()).collect();
+
+        // appending to `a` diverges: must CoW, sibling bytes untouched
+        assert!(m.append_needs_block(&a), "shared tail block forces a CoW block");
+        let step = synth_outs(&[9], 1, layers, h, dh); // [h,1,dh] rows
+        m.append_step(&mut a, &step);
+        assert_eq!(a.len(), 4);
+        assert_ne!(a.blocks()[0], shared, "CoW must swap in a private copy");
+        assert_eq!(m.blocks_in_use(), 2);
+        let after: Vec<u32> =
+            m.pool().k(shared, 0).to_vec_f32().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(before, after, "sibling block bytes changed under CoW");
+        // the private copy carries the shared prefix rows bitwise
+        let copy = m.pool().k(a.blocks()[0], 0);
+        for hi in 0..h {
+            for r in 0..3 {
+                for d in 0..dh {
+                    assert_eq!(
+                        copy.at(&[hi, r, d]).to_bits(),
+                        m.pool().k(shared, 0).at(&[hi, r, d]).to_bits()
+                    );
+                }
+            }
+        }
+
+        m.release_table(a);
+        m.release_table(b);
+        assert_eq!(m.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn share_entry_dies_with_its_block() {
+        let (layers, h, bt, dh) = (1usize, 1usize, 2usize, 2usize);
+        let mut m = CacheManager::new(layers, h, bt, dh, 4, None);
+        let tokens = vec![1, 2];
+        let outs = synth_outs(&tokens, 4, layers, h, dh);
+        let t1 = m.seed(4, &tokens, 2, &outs);
+        m.release_table(t1);
+        assert_eq!(m.blocks_in_use(), 0);
+        // a fresh identical prompt must NOT hit the dead entry
+        let t2 = m.seed(4, &tokens, 2, &outs);
+        assert_eq!(m.shared_hits(), 0, "stale share entry served a freed block");
+        assert_eq!(m.blocks_in_use(), 1);
+        m.release_table(t2);
+    }
+}

@@ -27,7 +27,16 @@
 //! * **preemption instead of rejection** — a request whose price exceeds
 //!   the budget is requeued (with head priority) for a deeper-chunked
 //!   recompile; only when the deepest level still does not fit is it
-//!   rejected ("the memory wall").
+//!   rejected ("the memory wall");
+//! * **paged KV caches** (`block_tokens > 0`, DESIGN.md §14) — generation
+//!   caches live in a refcounted block pool
+//!   ([`crate::coordinator::cache_manager::CacheManager`]): admission
+//!   prices residency at blocks in use plus the blocks a wave allocates
+//!   (grow-as-you-go, not bucket-capacity reservation), identical prompt
+//!   prefixes share blocks (copy-on-write on divergence), and a
+//!   budget-stalled decode set evicts a victim's blocks and re-queues it
+//!   for re-prefill recompute — bitwise-stream-preserving by decode
+//!   parity.
 //!
 //! Determinism contract: at `AUTOCHUNK_THREADS=1` the engine's responses
 //! are bitwise identical to the legacy back-to-back path
@@ -37,6 +46,7 @@
 //! of that contract: decode logits are bitwise identical to re-running
 //! full prefill at the grown length (`rust/tests/decode_parity.rs`).
 
+use crate::coordinator::cache_manager::CacheManager;
 use crate::coordinator::metrics::{MetricsReport, Recorder};
 use crate::coordinator::request::{Request, RequestOutcome};
 use crate::exec::random_params;
@@ -45,7 +55,7 @@ use crate::models::{self, GptConfig};
 use crate::passes::{autochunk, estimate, AutoChunkConfig, CostQuote};
 use crate::plan::{ExecOptions, PlanHandle};
 use crate::runtime::{ArtifactMeta, Registry};
-use crate::tensor::{numel, DType, KvCache, MemoryTracker, Tensor};
+use crate::tensor::{numel, BlockTable, DType, KvCache, MemoryTracker, Tensor};
 use crate::util::error::Result;
 use crate::util::pool;
 use std::collections::{HashMap, VecDeque};
@@ -83,6 +93,19 @@ pub struct EngineConfig {
     /// ceiling). Defaults to the `AUTOCHUNK_ARENA` env flag — the CI
     /// matrix's second leg.
     pub use_arena: bool,
+    /// Paged KV-cache mode (DESIGN.md §14): block size in tokens. `0`
+    /// (the default) keeps the legacy contiguous full-capacity caches.
+    /// When `> 0`, generation caches live in a refcounted block pool:
+    /// admission prices resident state at *blocks in use* plus the blocks
+    /// a wave will allocate — grow-as-you-go instead of reserving bucket
+    /// capacity up front — prompt-prefix blocks are shared across
+    /// requests, and memory-pressure stalls evict a victim's blocks and
+    /// re-queue it for chunk-planned re-prefill recompute.
+    pub block_tokens: usize,
+    /// Paged mode: cap on pool blocks (0 = derive from `budget_bytes`).
+    pub pool_blocks: usize,
+    /// Paged mode: evictions one request may survive before rejection.
+    pub max_evictions: usize,
     /// Compiler options for the per-bucket chunk search.
     pub compile: AutoChunkConfig,
 }
@@ -98,6 +121,9 @@ impl Default for EngineConfig {
             max_deepen: 5,
             tick_us: 500,
             use_arena: crate::plan::arena_default(),
+            block_tokens: 0,
+            pool_blocks: 0,
+            max_evictions: 3,
             compile: AutoChunkConfig::default(),
         }
     }
@@ -159,11 +185,29 @@ impl EngineResponse {
 }
 
 /// A queued request: its index into the workload plus the deepening level
-/// the next admission attempt will use.
+/// the next admission attempt will use, and how many paged-mode evictions
+/// it has survived.
 #[derive(Clone, Copy, Debug)]
 struct Pending {
     idx: usize,
     depth: usize,
+    evictions: usize,
+}
+
+/// A generation's cache backend: the legacy contiguous full-capacity
+/// cache, or a block table into the run's paged pool (DESIGN.md §14).
+enum GenCache {
+    Whole(KvCache),
+    Paged(BlockTable),
+}
+
+/// Decode state a paged-mode eviction preserves so a re-queued request
+/// resumes its exact stream: tokens generated so far (re-prefill runs
+/// over prompt ++ all-but-the-last of these — the last is the next input
+/// token, never yet cached) and the decode-step count for metrics.
+struct ResumeState {
+    tokens: Vec<i32>,
+    decode_steps: usize,
 }
 
 /// An admitted generation mid-decode: its cache and token stream.
@@ -172,7 +216,7 @@ struct GenState {
     bucket: usize,
     depth: usize,
     plan_tag: String,
-    cache: KvCache,
+    cache: GenCache,
     /// Generated ids so far (the last one's K/V are not yet cached — it
     /// is the next decode step's input token).
     tokens: Vec<i32>,
@@ -182,6 +226,8 @@ struct GenState {
     wait_ticks: u64,
     latency_us: u64,
     decode_steps: usize,
+    /// Paged-mode evictions this request has survived so far.
+    evictions: usize,
 }
 
 impl GenState {
@@ -199,6 +245,13 @@ enum WaveEntry {
         bucket: usize,
         h: PlanHandle,
         lm: Option<PlanHandle>,
+        /// Effective prompt for a generative request: the request's
+        /// tokens, extended with previously generated ones when this is a
+        /// post-eviction re-prefill. Empty for non-generative requests.
+        ptoks: Vec<i32>,
+        /// Paged-mode resume payload (Some iff this prefill recomputes an
+        /// evicted generation).
+        resumed: Option<ResumeState>,
     },
     /// One decode step for `gens[gi]`.
     Decode {
@@ -324,10 +377,44 @@ impl ServeEngine {
         Ok(Some((bucket, *h.quote())))
     }
 
-    /// Resident bytes one full-capacity KV cache pins in `bucket`
-    /// (0 for non-generative models).
+    /// Bytes one full-capacity KV cache reserves in `bucket` — the
+    /// contiguous backend's admission charge (0 for non-generative
+    /// models).
     pub fn kv_bytes(&self, bucket: usize) -> usize {
         gpt_cfg(&self.config.model, bucket).map(|c| c.kv_cache_bytes()).unwrap_or(0)
+    }
+
+    /// Admission price of one generative prefill (PrefillKv plan + its
+    /// in-wave LM-head call) at depth 0, excluding the cache reservation.
+    /// Tests and benches calibrate budgets with this instead of
+    /// hard-coding byte counts.
+    pub fn gen_cost(&mut self, bucket: usize) -> Result<usize> {
+        let h = self.handle(PlanKind::PrefillKv, bucket, 0)?;
+        let lm = self.handle(PlanKind::LmHead, bucket, 0)?;
+        Ok(Self::admission_cost(self.config.use_arena, &h)
+            + Self::admission_cost(self.config.use_arena, &lm))
+    }
+
+    /// Admission price of one decode step (decode plan at `past` + LM
+    /// head), excluding resident cache bytes and block growth.
+    pub fn decode_cost(&mut self, bucket: usize, past: usize) -> Result<usize> {
+        let h = self.handle(PlanKind::Decode { past }, bucket, 0)?;
+        let lm = self.handle(PlanKind::LmHead, bucket, 0)?;
+        Ok(Self::admission_cost(self.config.use_arena, &h)
+            + Self::admission_cost(self.config.use_arena, &lm))
+    }
+
+    /// Bytes one KV block pins in paged mode (0 when paged mode is off or
+    /// the model is non-generative). Bucket-independent: blocks are
+    /// shaped by heads/head_dim/block_tokens only.
+    pub fn block_bytes(&self) -> usize {
+        if self.config.block_tokens == 0 {
+            return 0;
+        }
+        let probe = self.config.buckets.first().copied().unwrap_or(64);
+        gpt_cfg(&self.config.model, probe)
+            .map(|c| 2 * c.layers * c.heads * self.config.block_tokens * c.head_dim() * 4)
+            .unwrap_or(0)
     }
 
     /// The bucket's shared weight set (generated once per bucket; every
@@ -354,6 +441,9 @@ impl ServeEngine {
                 };
                 Ok(match kind {
                     PlanKind::PrefillKv => models::gpt_prefill_kv(&cfg),
+                    PlanKind::Decode { past } if self.config.block_tokens > 0 => {
+                        models::gpt_decode_paged(&cfg, past, self.config.block_tokens)
+                    }
                     PlanKind::Decode { past } => models::gpt_decode(&cfg, past),
                     PlanKind::LmHead => models::gpt_lm_head(&cfg),
                     PlanKind::Prefill => unreachable!(),
@@ -396,6 +486,10 @@ impl ServeEngine {
         let tag = match kind {
             PlanKind::Prefill => format!("{}_native_s{}_d{}", self.config.model, bucket, depth),
             PlanKind::PrefillKv => format!("{}_prefill_s{}_d{}", self.config.model, bucket, depth),
+            PlanKind::Decode { past } if self.config.block_tokens > 0 => format!(
+                "{}_decode_s{}_p{}_blk{}",
+                self.config.model, bucket, past, self.config.block_tokens
+            ),
             PlanKind::Decode { past } => {
                 format!("{}_decode_s{}_p{}", self.config.model, bucket, past)
             }
@@ -479,11 +573,42 @@ impl ServeEngine {
         let (hits0, miss0) = (self.cache_hits, self.cache_misses);
         let mut responses: Vec<EngineResponse> = Vec::with_capacity(requests.len());
 
+        // Paged mode: one block pool + prefix-share index per run, on the
+        // run tracker, so resident blocks are part of the measured peak
+        // and the drain contract (`final_blocks_in_use == 0`,
+        // `measured_final_bytes == 0`) is checked against real storage.
+        let mut mgr: Option<CacheManager> = if self.config.block_tokens > 0 {
+            let probe = self.config.buckets.first().copied().unwrap_or(64);
+            let bb = self.block_bytes();
+            gpt_cfg(&self.config.model, probe).map(|cfg| {
+                let cap = if self.config.pool_blocks > 0 {
+                    self.config.pool_blocks
+                } else {
+                    // byte admission bounds real use at budget/block; the
+                    // clamp only guards absurd budgets (probe engines)
+                    (self.config.budget_bytes / bb).clamp(1, 65536)
+                };
+                CacheManager::new(
+                    cfg.layers,
+                    cfg.heads,
+                    self.config.block_tokens,
+                    cfg.head_dim(),
+                    cap,
+                    Some(tracker.clone()),
+                )
+            })
+        } else {
+            None
+        };
+        // Evicted generations waiting to re-prefill: request idx → stream
+        // state (entries live from eviction until re-admission/rejection).
+        let mut resume: HashMap<usize, ResumeState> = HashMap::new();
+
         // Arrival-ordered queue (stable by id for equal ticks).
         let mut order: Vec<usize> = (0..requests.len()).collect();
         order.sort_by_key(|&i| (requests[i].arrival_tick, requests[i].id));
         let mut queue: VecDeque<Pending> =
-            order.into_iter().map(|idx| Pending { idx, depth: 0 }).collect();
+            order.into_iter().map(|idx| Pending { idx, depth: 0, evictions: 0 }).collect();
 
         let max_batch = match mode {
             Mode::Serial => 1,
@@ -506,9 +631,25 @@ impl ServeEngine {
             }
 
             // Live caches hold their bytes whether or not they execute
-            // this wave: admission packs the *remaining* budget.
-            let resident: usize = gens.iter().map(|g| g.cache.bytes()).sum();
+            // this wave: admission packs the *remaining* budget. Under
+            // the paged pool residency is blocks-in-use (shared prefix
+            // blocks count once); the contiguous backend truly pins full
+            // capacity per cache.
+            let resident: usize = match &mgr {
+                Some(m) => m.resident_bytes(),
+                None => gens
+                    .iter()
+                    .map(|g| match &g.cache {
+                        GenCache::Whole(c) => c.capacity_bytes(),
+                        GenCache::Paged(_) => 0,
+                    })
+                    .sum(),
+            };
             let mut remaining = self.config.budget_bytes.saturating_sub(resident);
+            // Paged mode: blocks this wave may still allocate (seeds,
+            // boundary appends, copy-on-writes) — a wave-local ledger
+            // against the pool's free list, conservative about sharing.
+            let mut free_blocks_wave = mgr.as_ref().map(|m| m.free_blocks()).unwrap_or(0);
             let mut wave: Vec<WaveEntry> = Vec::new();
 
             // ---- decode admission: one step per active generation, in
@@ -523,10 +664,26 @@ impl ServeEngine {
                 let lm = self.handle(PlanKind::LmHead, bucket, 0)?;
                 // the step price covers token selection too: the LM head
                 // runs inside the same wave entry
-                let cost = Self::admission_cost(self.config.use_arena, &h)
+                let mut cost = Self::admission_cost(self.config.use_arena, &h)
                     + Self::admission_cost(self.config.use_arena, &lm);
-                if cost <= remaining {
+                // Grow-as-you-go: a step that crosses a block boundary
+                // (or must copy-on-write a shared tail block) buys its
+                // block now, at block — not bucket — granularity.
+                let mut need_blocks = 0usize;
+                if let (Some(m), GenCache::Paged(tb)) = (&mgr, &gens[gi].cache) {
+                    debug_assert_eq!(
+                        h.quote().persistent_bytes,
+                        m.blocks_for(past) * m.block_bytes(),
+                        "decode graph must price resident state at block granularity"
+                    );
+                    if m.append_needs_block(tb) {
+                        need_blocks = 1;
+                    }
+                    cost += need_blocks * m.block_bytes();
+                }
+                if cost <= remaining && need_blocks <= free_blocks_wave {
                     remaining -= cost;
+                    free_blocks_wave -= need_blocks;
                     wave.push(WaveEntry::Decode { gi, h, lm });
                 }
             }
@@ -541,11 +698,12 @@ impl ServeEngine {
                 let p = queue[scan];
                 let req = &requests[p.idx];
                 let generative = req.max_new_tokens > 0;
-                // Generation routes by total footprint: the cache is
-                // capacity-shaped at the bucket and must hold the prompt
-                // plus every generated position.
+                // Generation routes by total footprint: the cache —
+                // contiguous or paged — must hold the prompt plus every
+                // generated position.
                 let Some(bucket) = self.bucket_for(req.total_len()) else {
                     queue.remove(scan);
+                    resume.remove(&p.idx);
                     recorder.rejected += 1;
                     responses.push(EngineResponse::rejected(req.id, p.depth));
                     continue;
@@ -555,28 +713,52 @@ impl ServeEngine {
                     // generation is only defined for the gpt family, and
                     // needs at least one prompt token to seed the cache
                     queue.remove(scan);
+                    resume.remove(&p.idx);
                     recorder.rejected += 1;
                     responses.push(EngineResponse::rejected(req.id, p.depth));
                     continue;
                 }
                 let kind = if generative { PlanKind::PrefillKv } else { PlanKind::Prefill };
                 let h = self.handle(kind, bucket, p.depth)?;
-                // Multi-token generations reserve their cache up front so
-                // seeding can never overshoot the budget; every generative
-                // prefill also pays for its in-wave LM-head call.
+                // Every generative prefill pays for its in-wave LM-head
+                // call plus its cache reservation. Contiguous backend:
+                // full bucket capacity up front, so seeding can never
+                // overshoot. Paged backend: only the blocks the (possibly
+                // resumed) prompt seeds — grow-as-you-go; later growth is
+                // priced per decode step and backstopped by eviction.
                 let mut extra = 0usize;
+                let mut need_blocks = 0usize;
                 if generative {
-                    if req.max_new_tokens > 1 {
-                        extra += self.kv_bytes(bucket);
-                    }
                     let lm = self.handle(PlanKind::LmHead, bucket, 0)?;
                     extra += Self::admission_cost(self.config.use_arena, &lm);
+                    match &mgr {
+                        Some(m) => {
+                            let plen_eff = req.seq_len
+                                + resume.get(&p.idx).map(|r| r.tokens.len() - 1).unwrap_or(0);
+                            need_blocks = m.blocks_for(plen_eff);
+                            extra += need_blocks * m.block_bytes();
+                            if need_blocks > m.pool_blocks() {
+                                // the pool can never hold this prompt
+                                queue.remove(scan);
+                                resume.remove(&p.idx);
+                                recorder.rejected += 1;
+                                responses.push(EngineResponse::rejected(req.id, p.depth));
+                                continue;
+                            }
+                        }
+                        None => {
+                            if req.max_new_tokens > 1 {
+                                extra += self.kv_bytes(bucket);
+                            }
+                        }
+                    }
                 }
                 if extra >= self.config.budget_bytes {
                     // The irreducible floor (cache + LM head) already
                     // exceeds the budget: no chunk depth can help — reject
                     // now instead of burning max_deepen recompiles.
                     queue.remove(scan);
+                    resume.remove(&p.idx);
                     recorder.rejected += 1;
                     responses.push(EngineResponse::rejected(req.id, p.depth));
                     continue;
@@ -586,24 +768,43 @@ impl ServeEngine {
                     // Oversized for the device at this depth.
                     queue.remove(scan);
                     if p.depth < self.config.max_deepen {
-                        // Preempt to a deeper-chunked retry, not rejection.
+                        // Preempt to a deeper-chunked retry, not rejection
+                        // (a pending resume entry rides along untouched).
                         recorder.preempted += 1;
-                        retry.push(Pending { idx: p.idx, depth: p.depth + 1 });
+                        retry.push(Pending { idx: p.idx, depth: p.depth + 1, evictions: p.evictions });
                     } else {
+                        resume.remove(&p.idx);
                         recorder.rejected += 1;
                         responses.push(EngineResponse::rejected(req.id, p.depth));
                     }
                     continue;
                 }
-                if cost <= remaining {
+                if cost <= remaining && need_blocks <= free_blocks_wave {
                     remaining -= cost;
+                    free_blocks_wave -= need_blocks;
                     queue.remove(scan);
                     let lm = if generative {
                         Some(self.handle(PlanKind::LmHead, bucket, 0)?)
                     } else {
                         None
                     };
-                    wave.push(WaveEntry::Prefill { p, bucket, h, lm });
+                    let resumed = if generative { resume.remove(&p.idx) } else { None };
+                    let ptoks: Vec<i32> = if generative {
+                        match &resumed {
+                            // re-prefill over prompt ++ generated-but-last:
+                            // the last token is the next decode input and
+                            // was never cached
+                            Some(r) => {
+                                let mut t = req.tokens.clone();
+                                t.extend_from_slice(&r.tokens[..r.tokens.len() - 1]);
+                                t
+                            }
+                            None => req.tokens.clone(),
+                        }
+                    } else {
+                        Vec::new()
+                    };
+                    wave.push(WaveEntry::Prefill { p, bucket, h, lm, ptoks, resumed });
                     continue;
                 }
                 // Fits the device but not this wave: leave it and keep
@@ -623,12 +824,50 @@ impl ServeEngine {
                 if !gens.is_empty() {
                     // Budget-stalled decode is a livelock (resident caches
                     // block the very steps that would free them): after a
-                    // grace round, evict the head generation.
+                    // grace round, evict a victim.
                     stalled_rounds += 1;
                     if stalled_rounds > 2 {
-                        let g = gens.remove(0);
-                        recorder.rejected += 1;
-                        responses.push(EngineResponse::rejected(requests[g.idx].id, g.depth));
+                        match &mut mgr {
+                            Some(m) => {
+                                // Paged: drop the newest generation's
+                                // blocks (least work lost) and re-queue it
+                                // for re-prefill recompute — decode parity
+                                // makes the recomputed stream bitwise
+                                // identical, so eviction trades memory for
+                                // FLOPs, not for answers. Only a request
+                                // that keeps thrashing is rejected.
+                                let g = gens.pop().expect("stall with no generations");
+                                if let GenCache::Paged(tb) = g.cache {
+                                    m.release_table(tb);
+                                }
+                                if g.evictions >= self.config.max_evictions {
+                                    recorder.rejected += 1;
+                                    responses
+                                        .push(EngineResponse::rejected(requests[g.idx].id, g.depth));
+                                } else {
+                                    recorder.evicted += 1;
+                                    resume.insert(
+                                        g.idx,
+                                        ResumeState {
+                                            tokens: g.tokens,
+                                            decode_steps: g.decode_steps,
+                                        },
+                                    );
+                                    queue.push_front(Pending {
+                                        idx: g.idx,
+                                        depth: g.depth,
+                                        evictions: g.evictions + 1,
+                                    });
+                                }
+                            }
+                            None => {
+                                // Contiguous legacy policy: reject the head.
+                                let g = gens.remove(0);
+                                recorder.rejected += 1;
+                                responses
+                                    .push(EngineResponse::rejected(requests[g.idx].id, g.depth));
+                            }
+                        }
                         stalled_rounds = 0;
                     }
                 }
@@ -649,14 +888,21 @@ impl ServeEngine {
             let tick_us = self.config.tick_us;
             let entries = wave;
             let gens_ro: &Vec<GenState> = &gens;
+            let mgr_ro: &Option<CacheManager> = &mgr;
             let results: Vec<WaveOut> = pool::parallel_map(entries.len(), |wi| {
                 let light_opts = ExecOptions { budget_bytes: None, use_arena };
                 match &entries[wi] {
-                    WaveEntry::Prefill { p, h, lm, .. } => {
+                    WaveEntry::Prefill { p, h, lm, ptoks, .. } => {
                         let req = &requests[p.idx];
                         pool::with_threads(per_entry_threads, || {
                             let started = Instant::now();
-                            let ins = request_inputs(h.graph(), req, &tracker);
+                            // generative prefills run over the effective
+                            // prompt (resume extends it with generated
+                            // tokens); plain prefills keep the request's
+                            let ins = match lm {
+                                None => request_inputs(h.graph(), req, &tracker),
+                                Some(_) => prompt_inputs(h.graph(), ptoks, &tracker),
+                            };
                             let entry_budget = Self::admission_cost(use_arena, h) + share;
                             let opts = ExecOptions {
                                 budget_bytes: Some(if use_arena {
@@ -674,8 +920,9 @@ impl ServeEngine {
                                     out: outs[0].to_vec_f32(),
                                 },
                                 Some(lm) => {
-                                    // token 1 comes off the prompt's last row
-                                    let plen = req.seq_len.max(1);
+                                    // the next token comes off the
+                                    // effective prompt's last row
+                                    let plen = ptoks.len().max(1);
                                     let hrow = outs[0]
                                         .slice_axis(0, plen - 1, 1)
                                         .to_contiguous(Some(tracker.clone()));
@@ -696,16 +943,23 @@ impl ServeEngine {
                         let g = &gens_ro[*gi];
                         pool::with_threads(per_entry_threads, || {
                             let started = Instant::now();
-                            let mut ins: Vec<Tensor> =
-                                Vec::with_capacity(1 + 2 * g.cache.layers());
+                            let mut ins: Vec<Tensor> = Vec::new();
                             ins.push(Tensor::from_i32(
                                 vec![g.next_input_token()],
                                 &[1],
                                 Some(tracker.clone()),
                             ));
-                            for l in 0..g.cache.layers() {
-                                ins.push(g.cache.k_full(l));
-                                ins.push(g.cache.v_full(l));
+                            match &g.cache {
+                                GenCache::Whole(c) => {
+                                    for l in 0..c.layers() {
+                                        ins.push(c.k_full(l));
+                                        ins.push(c.v_full(l));
+                                    }
+                                }
+                                GenCache::Paged(tb) => mgr_ro
+                                    .as_ref()
+                                    .expect("paged cache without a manager")
+                                    .bind_inputs(tb, &mut ins),
                             }
                             let (outs, _stats) = h.execute(&ins, &tracker, &light_opts);
                             drop(ins); // release cache views before the append
@@ -727,10 +981,10 @@ impl ServeEngine {
             // ---- post-wave bookkeeping (serial, entry order: results are
             // deterministic at any pool width)
             let mut finished: Vec<usize> = Vec::new();
-            for (entry, out) in entries.iter().zip(results) {
+            for (entry, out) in entries.into_iter().zip(results) {
                 match (entry, out) {
                     (
-                        WaveEntry::Prefill { p, bucket, h, lm: None },
+                        WaveEntry::Prefill { p, bucket, h, lm: None, .. },
                         WaveOut::Plain { latency_us, out },
                     ) => {
                         let req = &requests[p.idx];
@@ -740,7 +994,7 @@ impl ServeEngine {
                         responses.push(EngineResponse {
                             id: req.id,
                             outcome: RequestOutcome::Completed,
-                            bucket: *bucket,
+                            bucket,
                             depth: p.depth,
                             plan_tag: h.tag().to_string(),
                             wait_ticks,
@@ -751,20 +1005,20 @@ impl ServeEngine {
                         });
                     }
                     (
-                        WaveEntry::Prefill { p, bucket, h, lm: Some(_) },
+                        WaveEntry::Prefill { p, bucket, h, lm: Some(_), ptoks, resumed },
                         WaveOut::Step { latency_us, outs, logits, token },
                     ) => {
                         let req = &requests[p.idx];
                         let wait_ticks = clock - req.arrival_tick;
                         recorder.record_prefill(latency_us);
-                        if req.max_new_tokens == 1 {
+                        if resumed.is_none() && req.max_new_tokens == 1 {
                             // no decode needed: the prefill's token is it
                             recorder.record(h.tag(), latency_us, req.seq_len + 1);
                             recorder.record_wait(wait_ticks * tick_us);
                             responses.push(EngineResponse {
                                 id: req.id,
                                 outcome: RequestOutcome::Completed,
-                                bucket: *bucket,
+                                bucket,
                                 depth: p.depth,
                                 plan_tag: h.tag().to_string(),
                                 wait_ticks,
@@ -774,32 +1028,54 @@ impl ServeEngine {
                                 decode_steps: 0,
                             });
                         } else {
-                            let cfg = gpt_cfg(&self.config.model, *bucket)
-                                .expect("guarded at admission");
-                            let mut cache = KvCache::new(
-                                cfg.layers,
-                                cfg.heads,
-                                *bucket,
-                                cfg.head_dim(),
-                                Some(tracker.clone()),
-                            );
-                            for l in 0..cfg.layers {
-                                cache.seed(l, &outs[1 + 2 * l], &outs[2 + 2 * l]);
-                            }
-                            cache.set_len(req.seq_len);
+                            let plen = ptoks.len();
+                            let cache = match &mut mgr {
+                                Some(m) => GenCache::Paged(m.seed(bucket, &ptoks, plen, &outs)),
+                                None => {
+                                    let cfg = gpt_cfg(&self.config.model, bucket)
+                                        .expect("guarded at admission");
+                                    let mut c = KvCache::new(
+                                        cfg.layers,
+                                        cfg.heads,
+                                        bucket,
+                                        cfg.head_dim(),
+                                        Some(tracker.clone()),
+                                    );
+                                    for l in 0..cfg.layers {
+                                        c.seed(l, &outs[1 + 2 * l], &outs[2 + 2 * l]);
+                                    }
+                                    c.set_len(plen);
+                                    GenCache::Whole(c)
+                                }
+                            };
                             drop(outs);
+                            let (tokens, decode_steps) = match resumed {
+                                Some(r) => {
+                                    // decode parity: the re-prefill's last
+                                    // row reproduces the evicted stream's
+                                    // pending token bit for bit
+                                    debug_assert_eq!(
+                                        r.tokens.last().copied(),
+                                        Some(token),
+                                        "resume re-prefill diverged from the evicted stream"
+                                    );
+                                    (r.tokens, r.decode_steps)
+                                }
+                                None => (vec![token], 0),
+                            };
                             gens.push(GenState {
                                 idx: p.idx,
-                                bucket: *bucket,
+                                bucket,
                                 depth: p.depth,
                                 plan_tag: h.tag().to_string(),
                                 cache,
-                                tokens: vec![token],
-                                past: req.seq_len,
+                                tokens,
+                                past: plen,
                                 last_logits: logits,
                                 wait_ticks,
                                 latency_us,
-                                decode_steps: 0,
+                                decode_steps,
+                                evictions: p.evictions,
                             });
                         }
                     }
@@ -807,36 +1083,62 @@ impl ServeEngine {
                         WaveEntry::Decode { gi, .. },
                         WaveOut::Step { latency_us, outs, logits, token },
                     ) => {
-                        let g = &mut gens[*gi];
                         recorder.record_decode(latency_us);
+                        let g = &mut gens[gi];
                         g.latency_us += latency_us;
-                        for l in 0..g.cache.layers() {
-                            g.cache.append(l, &outs[1 + 2 * l], &outs[2 + 2 * l]);
+                        match &mut g.cache {
+                            GenCache::Whole(c) => {
+                                for l in 0..c.layers() {
+                                    c.append(l, &outs[1 + 2 * l], &outs[2 + 2 * l]);
+                                }
+                                drop(outs);
+                                c.advance();
+                            }
+                            GenCache::Paged(tb) => {
+                                mgr.as_mut()
+                                    .expect("paged cache without a manager")
+                                    .append_step(tb, &outs);
+                                drop(outs);
+                            }
                         }
-                        drop(outs);
-                        g.cache.advance();
                         g.past += 1;
                         g.tokens.push(token);
                         g.last_logits = logits;
                         g.decode_steps += 1;
                         if g.tokens.len() >= requests[g.idx].max_new_tokens {
-                            finished.push(*gi);
+                            finished.push(gi);
                         }
                     }
                     _ => unreachable!("wave entry/result kind mismatch"),
                 }
             }
 
-            // High-water resident KV: after this wave's caches were
-            // seeded, before finished generations evict.
-            let resident_now: usize = gens.iter().map(|g| g.cache.bytes()).sum();
+            // High-water resident KV — true residency under either
+            // backend (blocks in use for the pool, held capacity for
+            // contiguous caches) — and co-resident generation count:
+            // after this wave's caches were seeded, before finished
+            // generations evict.
+            let resident_now: usize = match &mgr {
+                Some(m) => m.resident_bytes(),
+                None => gens
+                    .iter()
+                    .map(|g| match &g.cache {
+                        GenCache::Whole(c) => c.resident_bytes(),
+                        GenCache::Paged(_) => 0,
+                    })
+                    .sum(),
+            };
             recorder.observe_resident_kv(resident_now);
+            recorder.observe_concurrent_gens(gens.len());
 
             // Eviction: finished generations release their caches (and
-            // their resident bytes) immediately.
+            // their resident bytes or blocks) immediately.
             finished.sort_unstable();
             for &gi in finished.iter().rev() {
                 let g = gens.remove(gi);
+                if let GenCache::Paged(tb) = g.cache {
+                    mgr.as_mut().expect("paged cache without a manager").release_table(tb);
+                }
                 let req = &requests[g.idx];
                 recorder.record(g.plan_tag.as_str(), g.latency_us, req.seq_len + g.tokens.len());
                 recorder.record_wait(g.wait_ticks * tick_us);
@@ -859,8 +1161,16 @@ impl ServeEngine {
         }
 
         debug_assert!(gens.is_empty(), "serve loop exited with live generations");
+        debug_assert!(resume.is_empty(), "serve loop exited with pending resumes");
         recorder.cache_hits = self.cache_hits - hits0;
         recorder.cache_misses = self.cache_misses - miss0;
+        if let Some(m) = &mgr {
+            // Drain contract: every block returned to the free list.
+            recorder.shared_prefix_hits = m.shared_hits();
+            recorder.final_blocks_in_use = m.blocks_in_use();
+            debug_assert_eq!(m.blocks_in_use(), 0, "paged pool leaked blocks at drain");
+        }
+        drop(mgr);
         recorder.measured_peak_bytes = tracker.peak();
         recorder.measured_final_bytes = tracker.current();
         responses.sort_by_key(|r| r.id);
@@ -888,11 +1198,14 @@ fn build_model(name: &str, scale: usize) -> Result<Graph> {
     })
 }
 
-/// Deterministically materialize a request's graph inputs: token ids feed
-/// i32 inputs directly (zero-padded to the bucket); f32 inputs derive a
-/// repeatable pattern from the tokens. Allocated on the run's tracker so
-/// request inputs count as activation memory, as in production.
-fn request_inputs(graph: &Graph, req: &Request, tracker: &MemoryTracker) -> Vec<Tensor> {
+/// Deterministically materialize graph inputs from a token stream: token
+/// ids feed i32 inputs directly (zero-padded to the bucket); f32 inputs
+/// derive a repeatable pattern from the tokens. Allocated on the run's
+/// tracker so request inputs count as activation memory, as in
+/// production. Generative prefills call this with the *effective* prompt
+/// (post-eviction resumes extend the request's tokens with generated
+/// ones).
+fn prompt_inputs(graph: &Graph, tokens: &[i32], tracker: &MemoryTracker) -> Vec<Tensor> {
     graph
         .inputs
         .iter()
@@ -901,16 +1214,16 @@ fn request_inputs(graph: &Graph, req: &Request, tracker: &MemoryTracker) -> Vec<
             let count = numel(&node.shape);
             match node.dtype {
                 DType::I32 => {
-                    let v = pad_prompt(&req.tokens, count);
+                    let v = pad_prompt(tokens, count);
                     Tensor::from_i32(v, &node.shape, Some(tracker.clone()))
                 }
                 DType::F32 => {
                     let mut v = vec![0f32; count];
                     for (i, slot) in v.iter_mut().enumerate() {
-                        let t = if req.tokens.is_empty() {
+                        let t = if tokens.is_empty() {
                             (i % 97) as i32
                         } else {
-                            req.tokens[i % req.tokens.len()]
+                            tokens[i % tokens.len()]
                         };
                         *slot = (t % 512) as f32 / 512.0 - 0.5;
                     }
@@ -919,6 +1232,12 @@ fn request_inputs(graph: &Graph, req: &Request, tracker: &MemoryTracker) -> Vec<
             }
         })
         .collect()
+}
+
+/// [`prompt_inputs`] over a request's own tokens (the non-generative
+/// prefill path).
+fn request_inputs(graph: &Graph, req: &Request, tracker: &MemoryTracker) -> Vec<Tensor> {
+    prompt_inputs(graph, &req.tokens, tracker)
 }
 
 #[cfg(test)]

@@ -32,6 +32,18 @@ pub struct Recorder {
     pub generated_tokens: usize,
     /// High-water mark of resident KV-cache bytes across the run.
     pub resident_kv_high_water_bytes: usize,
+    /// Generations evicted under memory pressure and re-queued for
+    /// chunk-planned re-prefill recompute (paged mode, DESIGN.md §14).
+    pub evicted: usize,
+    /// Prompt-prefix blocks served from the shared pool instead of being
+    /// stored twice (paged mode).
+    pub shared_prefix_hits: usize,
+    /// KV blocks still held when the run finished (paged mode; the drain
+    /// contract pins this at 0).
+    pub final_blocks_in_use: usize,
+    /// High-water mark of concurrently resident generations
+    /// (via [`Recorder::observe_concurrent_gens`]).
+    max_concurrent_gens: usize,
 }
 
 impl Recorder {
@@ -65,6 +77,12 @@ impl Recorder {
     /// wave; the report keeps the high-water mark).
     pub fn observe_resident_kv(&mut self, bytes: usize) {
         self.resident_kv_high_water_bytes = self.resident_kv_high_water_bytes.max(bytes);
+    }
+
+    /// Observe how many generations are co-resident (call after each
+    /// wave's prefills land, before finished ones evict).
+    pub fn observe_concurrent_gens(&mut self, n: usize) {
+        self.max_concurrent_gens = self.max_concurrent_gens.max(n);
     }
 
     /// Close the run and compute the report.
@@ -106,6 +124,10 @@ impl Recorder {
             decode_steps: self.decode_us.len(),
             generated_tokens: self.generated_tokens,
             resident_kv_high_water_bytes: self.resident_kv_high_water_bytes,
+            evicted: self.evicted,
+            shared_prefix_hits: self.shared_prefix_hits,
+            final_blocks_in_use: self.final_blocks_in_use,
+            max_concurrent_generations: self.max_concurrent_gens,
             mean_us: if completed == 0 {
                 0
             } else {
@@ -154,8 +176,18 @@ pub struct MetricsReport {
     pub generated_tokens: usize,
     /// High-water mark of resident KV-cache bytes (0 when no caches were
     /// bound; always ≤ measured peak since caches allocate on the run's
-    /// tracker).
+    /// tracker). Under either cache backend this is *true residency* —
+    /// bytes held, which for the paged pool is blocks in use and for the
+    /// contiguous cache coincides with reserved capacity.
     pub resident_kv_high_water_bytes: usize,
+    /// Generations evicted to recompute under memory pressure (paged).
+    pub evicted: usize,
+    /// Prompt-prefix blocks deduplicated by sharing (paged).
+    pub shared_prefix_hits: usize,
+    /// KV blocks held at run end — the paged drain contract pins 0.
+    pub final_blocks_in_use: usize,
+    /// High-water mark of concurrently resident generations.
+    pub max_concurrent_generations: usize,
     pub mean_us: u64,
     pub per_variant: HashMap<String, usize>,
 }
@@ -196,7 +228,8 @@ impl MetricsReport {
         if self.generated_tokens > 0 {
             s.push_str(&format!(
                 "\ngenerated {} tokens in {} decode steps | prefill p50={:.2}ms p99={:.2}ms | \
-                 decode p50={:.2}ms p99={:.2}ms | resident kv high-water {:.1} MiB",
+                 decode p50={:.2}ms p99={:.2}ms | resident kv high-water {:.1} MiB | \
+                 {} concurrent | evicted={} shared-prefix-hits={}",
                 self.generated_tokens,
                 self.decode_steps,
                 self.prefill_p50_us as f64 / 1e3,
@@ -204,6 +237,9 @@ impl MetricsReport {
                 self.decode_p50_us as f64 / 1e3,
                 self.decode_p99_us as f64 / 1e3,
                 self.resident_kv_high_water_bytes as f64 / (1 << 20) as f64,
+                self.max_concurrent_generations,
+                self.evicted,
+                self.shared_prefix_hits,
             ));
         }
         s

@@ -20,10 +20,12 @@
 //! chunked variant "breaks the memory wall" (§4.2), which is exactly the
 //! effect the serve example measures.
 
+pub mod cache_manager;
 pub mod engine;
 pub mod metrics;
 pub mod request;
 
+pub use cache_manager::CacheManager;
 pub use engine::{
     greedy_argmax, pad_prompt, EngineConfig, EngineResponse, PlanKind, ServeEngine,
 };

@@ -400,6 +400,175 @@ pub fn gpt_decode(cfg: &GptConfig, past: usize) -> Graph {
     b.finish(outputs)
 }
 
+/// One autoregressive decode step against a **paged** KV cache: the same
+/// computation as [`gpt_decode`], but the persistent inputs are the
+/// request's cache *blocks* — per layer, `ceil(past / block_tokens)`
+/// tensors of shape `[h, block_tokens, dh]` in block-table order — rather
+/// than one monolithic `[h, seq, dh]` cache (DESIGN.md §14). Input order:
+/// `token`, then per layer all K blocks then all V blocks.
+///
+/// `Graph::persistent_bytes` therefore prices resident state at **block
+/// granularity** — blocks actually held, not bucket capacity — which is
+/// what the estimator and memory planner exclude from per-run activation
+/// accounting and the serve engine charges as residency.
+///
+/// Bitwise parity with [`gpt_decode`] (pinned by the `paged_decode_*`
+/// tests here and end-to-end in `rust/tests/serve_engine.rs`): the valid
+/// key/value prefix is rebuilt by concatenating block slices — the same
+/// bytes the monolithic cache holds, in the same order — followed by the
+/// new row at position `past` and a zero tail standing in for the masked
+/// region. Masked positions are exact no-ops on both paths: the fused
+/// kernel never reads them, and on the dense path any finite masked score
+/// underflows to an exact `+0.0` probability after the additive
+/// `relu(j−past)·(−1e30)` mask, so softmax sums, probabilities, and the
+/// context matmul match the monolithic graph bit for bit regardless of
+/// what the masked tail holds.
+pub fn gpt_decode_paged(cfg: &GptConfig, past: usize, block_tokens: usize) -> Graph {
+    assert_eq!(cfg.d_model % cfg.heads, 0);
+    let (s, d, h) = (cfg.seq, cfg.d_model, cfg.heads);
+    let dh = d / h;
+    let scale = 1.0 / (dh as f32).sqrt();
+    assert!(past >= 1, "decode needs a non-empty cache");
+    assert!(past < s, "cache position {past} outside bucket {s}");
+    assert!(block_tokens >= 1, "block_tokens must be >= 1");
+    let nblk = past.div_ceil(block_tokens);
+    let rem = past - (nblk - 1) * block_tokens; // valid rows of the tail block
+    let name = if cfg.fused_attention { "gpt_decode_fused" } else { "gpt_decode" };
+    let mut b = GraphBuilder::new(&format!("{name}_p{past}_blk{block_tokens}"));
+
+    // ---- inputs: token, then per-layer persistent cache blocks
+    let tok = b.input_i32("token", &[1]);
+    let mut k_blocks: Vec<Vec<NodeId>> = Vec::with_capacity(cfg.layers);
+    let mut v_blocks: Vec<Vec<NodeId>> = Vec::with_capacity(cfg.layers);
+    for li in 0..cfg.layers {
+        let ks = (0..nblk)
+            .map(|bi| b.input_persistent(&format!("l{li}.k_blk{bi}"), &[h, block_tokens, dh]))
+            .collect();
+        let vs = (0..nblk)
+            .map(|bi| b.input_persistent(&format!("l{li}.v_blk{bi}"), &[h, block_tokens, dh]))
+            .collect();
+        k_blocks.push(ks);
+        v_blocks.push(vs);
+    }
+
+    // ---- embedding (same param order as gpt / gpt_prefill_kv / gpt_decode)
+    let wte = b.param("wte", &[cfg.vocab, d]);
+    let wpe = b.param("wpe", &[s, d]);
+    let emb = b.gather(wte, tok); // [1, d]
+    let wpe_row = b.slice(wpe, 0, past, 1); // [1, d]
+    let mut x = b.add(emb, wpe_row);
+
+    // Same masking pipeline as gpt_decode — bitwise-identical mask values.
+    let key_mask = (!cfg.fused_attention).then(|| {
+        let jj = b.iota(&[s], 0);
+        let diff = b.binary_scalar(BinaryOp::Sub, jj, past as f32);
+        let step = b.unary(UnaryOp::Relu, diff);
+        let mask = b.binary_scalar(BinaryOp::Mul, step, -CAUSAL_NEG);
+        b.label(mask, "decode.key_mask");
+        mask
+    });
+    let q_pos = cfg.fused_attention.then(|| {
+        let c = b.constant(past as f32);
+        let pos = b.broadcast(c, &[1]);
+        b.label(pos, "decode.q_pos");
+        pos
+    });
+
+    // Masked tail: finite zeros stand in for whatever a monolithic cache
+    // holds beyond `past` — unobservable either way (see doc above). One
+    // shared broadcast node serves K and V of every layer.
+    let tail = s - past - 1;
+    let zero_tail = (tail > 0).then(|| {
+        let zc = b.constant(0.0);
+        let zt = b.broadcast(zc, &[h, tail, dh]);
+        b.label(zt, "decode.zero_tail");
+        zt
+    });
+
+    let mut outputs_kv: Vec<NodeId> = Vec::with_capacity(2 * cfg.layers);
+    for li in 0..cfg.layers {
+        let g1 = b.param(&format!("l{li}.ln1.g"), &[d]);
+        let b1 = b.param(&format!("l{li}.ln1.b"), &[d]);
+        let xn = b.layer_norm(x, g1, b1, 1e-5);
+
+        let wq = b.param(&format!("l{li}.wq"), &[d, d]);
+        let wk = b.param(&format!("l{li}.wk"), &[d, d]);
+        let wv = b.param(&format!("l{li}.wv"), &[d, d]);
+        let wo = b.param(&format!("l{li}.wo"), &[d, d]);
+
+        let q = b.matmul(xn, wq); // [1, d]
+        let k = b.matmul(xn, wk);
+        let v = b.matmul(xn, wv);
+        let qh = b.reshape(q, &[1, h, dh]);
+        let qh = b.transpose(qh, &[1, 0, 2]); // [h, 1, dh]
+        let kh_new = b.reshape(k, &[1, h, dh]);
+        let kh_new = b.transpose(kh_new, &[1, 0, 2]);
+        let vh_new = b.reshape(v, &[1, h, dh]);
+        let vh_new = b.transpose(vh_new, &[1, 0, 2]);
+
+        // Rebuild the full-length key/value axis: block-table prefix
+        // (tail block sliced to its valid rows), the new row at `past`,
+        // then the masked zero tail.
+        let mut k_parts: Vec<NodeId> = Vec::with_capacity(nblk + 2);
+        let mut v_parts: Vec<NodeId> = Vec::with_capacity(nblk + 2);
+        for bi in 0..nblk {
+            let rows = if bi + 1 == nblk { rem } else { block_tokens };
+            if rows == block_tokens {
+                k_parts.push(k_blocks[li][bi]);
+                v_parts.push(v_blocks[li][bi]);
+            } else {
+                k_parts.push(b.slice(k_blocks[li][bi], 1, 0, rows));
+                v_parts.push(b.slice(v_blocks[li][bi], 1, 0, rows));
+            }
+        }
+        k_parts.push(kh_new);
+        v_parts.push(vh_new);
+        if let Some(zt) = zero_tail {
+            k_parts.push(zt);
+            v_parts.push(zt);
+        }
+        let k_attn = b.concat(&k_parts, 1); // [h, s, dh]
+        let v_attn = b.concat(&v_parts, 1);
+
+        let ctx = if cfg.fused_attention {
+            b.fused_attention_pos(qh, k_attn, v_attn, q_pos.unwrap(), scale)
+        } else {
+            let kt = b.transpose(k_attn, &[0, 2, 1]); // [h, dh, s]
+            let scores = b.matmul(qh, kt); // [h, 1, s]
+            let scaled = b.binary_scalar(BinaryOp::Mul, scores, scale);
+            let masked = b.add(scaled, key_mask.unwrap());
+            let probs = b.softmax(masked, 2);
+            b.matmul(probs, v_attn) // [h, 1, dh]
+        };
+        let ctx_t = b.transpose(ctx, &[1, 0, 2]); // [1, h, dh]
+        let ctx_t = b.reshape(ctx_t, &[1, d]);
+        let attn_out = b.matmul(ctx_t, wo);
+        let res1 = b.add(attn_out, x);
+
+        let g2 = b.param(&format!("l{li}.ln2.g"), &[d]);
+        let b2 = b.param(&format!("l{li}.ln2.b"), &[d]);
+        let rn = b.layer_norm(res1, g2, b2, 1e-5);
+        let w1 = b.param(&format!("l{li}.ff.w1"), &[d, cfg.ff_mult * d]);
+        let bb1 = b.param(&format!("l{li}.ff.b1"), &[cfg.ff_mult * d]);
+        let w2 = b.param(&format!("l{li}.ff.w2"), &[cfg.ff_mult * d, d]);
+        let bb2 = b.param(&format!("l{li}.ff.b2"), &[d]);
+        let hmid = b.linear(rn, w1, bb1);
+        let act = b.unary(UnaryOp::Gelu, hmid);
+        let ff = b.linear(act, w2, bb2);
+        x = b.add(ff, res1);
+
+        outputs_kv.push(kh_new);
+        outputs_kv.push(vh_new);
+    }
+
+    let gf = b.param("lnf.g", &[d]);
+    let bf = b.param("lnf.b", &[d]);
+    let out = b.layer_norm(x, gf, bf, 1e-5);
+    let mut outputs = vec![out];
+    outputs.extend(outputs_kv);
+    b.finish(outputs)
+}
+
 /// Tiny language-model head: hidden row `[1, d]` → logits `[1, vocab]`
 /// (`hidden @ wteᵀ`, weight-tied). Its single parameter is the
 /// **pre-transposed** embedding `wteᵀ [d, vocab]` — callers bind
@@ -597,6 +766,84 @@ mod tests {
             assert_eq!(g.node(o).shape, vec![4, 16, 8]);
         }
         assert!(g.validate().is_ok());
+    }
+
+    /// Paged decode must be a bitwise drop-in for monolithic decode: same
+    /// cache bytes rearranged into blocks, same token, same params → same
+    /// hidden row and same new K/V rows, bit for bit, dense and fused,
+    /// at every (past, block_tokens) alignment.
+    #[test]
+    fn paged_decode_matches_monolithic_decode_bitwise() {
+        let base = GptConfig {
+            seq: 32,
+            d_model: 32,
+            heads: 4,
+            layers: 2,
+            vocab: 64,
+            ..Default::default()
+        };
+        let (h, dh, s) = (base.heads, base.head_dim(), base.seq);
+        for fused in [false, true] {
+            let cfg = GptConfig { fused_attention: fused, ..base.clone() };
+            // finite "cache" bytes; rows >= past play the garbage tail
+            let caches: Vec<(crate::tensor::Tensor, crate::tensor::Tensor)> = (0..cfg.layers)
+                .map(|l| {
+                    (
+                        crate::tensor::Tensor::rand(&[h, s, dh], 1.0, 100 + l as u64, None),
+                        crate::tensor::Tensor::rand(&[h, s, dh], 1.0, 200 + l as u64, None),
+                    )
+                })
+                .collect();
+            let tok = crate::tensor::Tensor::from_i32(vec![17], &[1], None);
+            for &bt in &[8usize, 16] {
+                for &past in &[1usize, 7, 8, 15, 16, 17, 31] {
+                    let gd = gpt_decode(&cfg, past);
+                    let gp = gpt_decode_paged(&cfg, past, bt);
+                    assert_eq!(gd.params.len(), gp.params.len());
+                    let nblk = past.div_ceil(bt);
+                    assert_eq!(gp.persistent.len(), 2 * cfg.layers * nblk);
+                    assert_eq!(
+                        gp.persistent_bytes(),
+                        2 * cfg.layers * nblk * h * bt * dh * 4,
+                        "resident state must be priced at block granularity"
+                    );
+                    assert!(gp.validate().is_ok(), "{:?}", gp.validate());
+                    let pd = random_params(&gd, 5);
+                    let pp = random_params(&gp, 5);
+
+                    let mut ins_d = vec![tok.clone()];
+                    for (k, v) in &caches {
+                        ins_d.push(k.clone());
+                        ins_d.push(v.clone());
+                    }
+                    let mut ins_p = vec![tok.clone()];
+                    for (k, v) in &caches {
+                        for bi in 0..nblk {
+                            ins_p.push(k.slice_axis(1, bi * bt, bt).to_contiguous(None));
+                        }
+                        for bi in 0..nblk {
+                            ins_p.push(v.slice_axis(1, bi * bt, bt).to_contiguous(None));
+                        }
+                    }
+
+                    let td = MemoryTracker::new();
+                    let (od, _) = execute(&gd, &ins_d, &pd, &td);
+                    let tp = MemoryTracker::new();
+                    let (op, _) = execute(&gp, &ins_p, &pp, &tp);
+                    assert_eq!(od.len(), op.len());
+                    for (oi, (a, b)) in od.iter().zip(&op).enumerate() {
+                        let ab: Vec<u32> =
+                            a.to_vec_f32().iter().map(|x| x.to_bits()).collect();
+                        let bb: Vec<u32> =
+                            b.to_vec_f32().iter().map(|x| x.to_bits()).collect();
+                        assert_eq!(
+                            ab, bb,
+                            "output {oi} diverged (fused={fused} past={past} bt={bt})"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

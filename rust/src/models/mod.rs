@@ -17,7 +17,9 @@ pub mod unet;
 pub mod vit;
 
 pub use evoformer::{evoformer, EvoformerConfig};
-pub use gpt::{gpt, gpt_decode, gpt_lm_head, gpt_prefill_kv, lm_head_params, GptConfig};
+pub use gpt::{
+    gpt, gpt_decode, gpt_decode_paged, gpt_lm_head, gpt_prefill_kv, lm_head_params, GptConfig,
+};
 pub use unet::{unet, UNetConfig};
 pub use vit::{vit, ViTConfig};
 

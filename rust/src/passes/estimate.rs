@@ -390,6 +390,13 @@ pub struct CostQuote {
     /// The tracking estimate ([`estimate_under_plan`] peak) — what the
     /// executor's concurrency governor prices headroom against.
     pub estimate_bytes: usize,
+    /// Bytes of persistent (cross-execution) inputs the graph binds —
+    /// excluded from `peak_bytes` and charged by the serving tier as
+    /// resident state. For paged decode graphs this is *block
+    /// granularity* (`2·layers·nblk·h·block_tokens·dh·4` — blocks the
+    /// request actually holds), not bucket capacity (DESIGN.md §14), so
+    /// admission can cross-check its residency charge against the quote.
+    pub persistent_bytes: usize,
 }
 
 impl CostQuote {
@@ -463,6 +470,7 @@ pub fn cost_quote(graph: &Graph, plans: &[ChunkPlan]) -> CostQuote {
         peak_bytes,
         per_chunk_bytes: per_chunk,
         estimate_bytes,
+        persistent_bytes: graph.persistent_bytes(),
     }
 }
 

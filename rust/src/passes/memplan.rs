@@ -107,8 +107,14 @@ pub struct MemPlan {
     pub input_bytes: usize,
     /// Bytes of persistent (cross-execution) inputs such as KV caches.
     /// Outside the per-run arena and outside `admission_bytes`; the serve
-    /// engine charges them once per bound cache as resident state.
+    /// engine charges them once per bound cache as resident state. For
+    /// paged decode graphs this is block granularity — the blocks the
+    /// request holds at this cache length, not bucket capacity
+    /// (DESIGN.md §14).
     pub persistent_bytes: usize,
+    /// Number of persistent inputs (monolithic caches: `2·layers`; paged
+    /// decode: `2·layers·nblk` — one per bound block tensor).
+    pub persistent_inputs: usize,
     /// Sound admission price of one serial execution: inputs + arena live
     /// + transient kernel workspace, maximized over the schedule (one
     /// lane per region in flight).
@@ -903,6 +909,7 @@ pub fn plan_memory(graph: &Graph, plans: &[ChunkPlan]) -> MemPlan {
         alias_count: stats.aliased,
         input_bytes,
         persistent_bytes,
+        persistent_inputs: graph.persistent.len(),
         admission_base: admission_peak,
         regions: regions.into_iter().map(|r| r.expect("region planned")).collect(),
     }
@@ -1045,6 +1052,7 @@ pub fn describe_memplan(plan: &MemPlan) -> String {
     );
     let _ = writeln!(s, "admission_base: {}", plan.admission_base);
     let _ = writeln!(s, "persistent_bytes: {}", plan.persistent_bytes);
+    let _ = writeln!(s, "persistent_inputs: {}", plan.persistent_inputs);
     let _ = writeln!(s, "regions: {}", plan.regions.len());
     for (i, r) in plan.regions.iter().enumerate() {
         let _ = writeln!(

@@ -277,6 +277,83 @@ pub fn incremental_attention(
     Tensor::from_f32(out, &out_shape, tracker)
 }
 
+/// Gather the valid `len`-row prefix of a paged cache — `blocks` are
+/// `[h, block_tokens, dh]` tensors in block-table order — into one
+/// contiguous `[h, len, dh]` tensor on `tracker`.
+///
+/// Pure data movement: row `p` of head `h` is read from
+/// `blocks[p / block_tokens]` at row `p % block_tokens`, so the gathered
+/// bytes are exactly the bytes a contiguous cache of the same history
+/// holds. Rows past `len` (a partial tail block) are never read.
+fn gather_blocks(blocks: &[Tensor], len: usize, tracker: Option<MemoryTracker>) -> Tensor {
+    assert!(!blocks.is_empty(), "empty block table");
+    assert!(len > 0, "gather of empty prefix");
+    let shape = blocks[0].shape().to_vec();
+    assert_eq!(shape.len(), 3, "blocks must be [h, block_tokens, dh]");
+    let (h, bt, dh) = (shape[0], shape[1], shape[2]);
+    assert!(len <= blocks.len() * bt, "len {len} over table capacity");
+    let mut out = vec![0.0f32; h * len * dh];
+    for (bi, b) in blocks.iter().enumerate() {
+        assert_eq!(b.shape(), &shape[..], "ragged block table");
+        let r0 = bi * bt;
+        if r0 >= len {
+            break;
+        }
+        let rows = bt.min(len - r0);
+        // pool blocks are contiguous by construction
+        let src = b.f32_contiguous();
+        for hi in 0..h {
+            let d0 = hi * len * dh + r0 * dh;
+            let s0 = hi * bt * dh;
+            out[d0..d0 + rows * dh].copy_from_slice(&src[s0..s0 + rows * dh]);
+        }
+    }
+    Tensor::from_f32(out, &[h, len, dh], tracker)
+}
+
+/// Block-table-indirect decode attention: attend `q` — one (or a few)
+/// query rows per head — against the first `len` cached positions of a
+/// *paged* KV cache, reading K/V through per-layer block lists instead of
+/// one contiguous cache tensor.
+///
+/// Bitwise contract: the gathered prefix holds exactly the bytes the
+/// contiguous cache view holds (gathering is pure data movement), and the
+/// compute is the shared fused online-softmax core — so the output is
+/// bitwise identical to [`incremental_attention`] over the equivalent
+/// contiguous cache (`rust/tests/kvpage_fuzz.rs` pins this across block
+/// sizes and `KV_BLOCK` boundaries). The gathered copies are transient
+/// workspace on `tracker`, mirroring what `incremental_attention` itself
+/// pays to contiguate a strided cache view.
+pub fn paged_attention_into(
+    q: &Tensor,
+    k_blocks: &[Tensor],
+    v_blocks: &[Tensor],
+    len: usize,
+    scale: f32,
+    out: &mut [f32],
+    tracker: Option<MemoryTracker>,
+) -> Vec<usize> {
+    let kc = gather_blocks(k_blocks, len, tracker.clone());
+    let vc = gather_blocks(v_blocks, len, tracker.clone());
+    fused_attention_core(q, &kc, &vc, None, scale, out, tracker)
+}
+
+/// Allocating wrapper over [`paged_attention_into`].
+pub fn paged_attention(
+    q: &Tensor,
+    k_blocks: &[Tensor],
+    v_blocks: &[Tensor],
+    len: usize,
+    scale: f32,
+    tracker: Option<MemoryTracker>,
+) -> Tensor {
+    let kc = gather_blocks(k_blocks, len, tracker.clone());
+    let vc = gather_blocks(v_blocks, len, tracker.clone());
+    let mut out = vec![0.0f32; fused_out_len3(q, &kc, &vc)];
+    let out_shape = fused_attention_core(q, &kc, &vc, None, scale, &mut out, tracker.clone());
+    Tensor::from_f32(out, &out_shape, tracker)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -422,6 +499,66 @@ mod tests {
         let probs = softmax(&Tensor::from_f32(sm, &[s, s], None), 1, None);
         let want = matmul(&probs, &v, None);
         assert!(got.max_abs_diff(&want) < 1e-4, "{}", got.max_abs_diff(&want));
+    }
+
+    /// The block-table-indirect kernel must be bitwise identical to the
+    /// contiguous incremental path at every prefix length, including
+    /// lengths that straddle both block_tokens and KV_BLOCK boundaries.
+    #[test]
+    fn paged_attention_matches_incremental_bitwise() {
+        let (h, dh) = (2usize, 8usize);
+        for &bt in &[16usize, 48, 64] {
+            let cap = 3 * bt; // three blocks
+            let kfull = Tensor::rand(&[h, cap, dh], 1.0, 61, None);
+            let vfull = Tensor::rand(&[h, cap, dh], 1.0, 62, None);
+            // carve the contiguous cache into pool-style blocks
+            let k_blocks: Vec<Tensor> =
+                (0..3).map(|bi| kfull.slice_axis(1, bi * bt, bt).to_contiguous(None)).collect();
+            let v_blocks: Vec<Tensor> =
+                (0..3).map(|bi| vfull.slice_axis(1, bi * bt, bt).to_contiguous(None)).collect();
+            let q = Tensor::rand(&[h, 1, dh], 1.0, 63, None);
+            for len in [1usize, bt - 1, bt, bt + 1, 63.min(cap), 64.min(cap), 65.min(cap), cap] {
+                let kc = kfull.slice_axis(1, 0, len).to_contiguous(None);
+                let vc = vfull.slice_axis(1, 0, len).to_contiguous(None);
+                let want = incremental_attention(&q, &kc, &vc, 0.4, None);
+                let got = paged_attention(&q, &k_blocks, &v_blocks, len, 0.4, None);
+                let a: Vec<u32> = want.to_vec_f32().iter().map(|x| x.to_bits()).collect();
+                let b: Vec<u32> = got.to_vec_f32().iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a, b, "bt={bt} len={len} diverged");
+            }
+        }
+    }
+
+    /// Bytes past `len` in the tail block must be unobservable.
+    #[test]
+    fn paged_attention_ignores_tail_block_bytes() {
+        let (h, bt, dh, len) = (2usize, 16usize, 4usize, 21usize);
+        let mk = |poison: bool| -> Vec<Tensor> {
+            (0..2usize)
+                .map(|bi| {
+                    let mut v = Tensor::rand(&[h, bt, dh], 1.0, 70 + bi as u64, None).to_vec_f32();
+                    if poison && bi == 1 {
+                        // rows >= len % bt of the tail block
+                        for hi in 0..h {
+                            for r in (len - bt)..bt {
+                                for d in 0..dh {
+                                    v[hi * bt * dh + r * dh + d] = f32::NAN;
+                                }
+                            }
+                        }
+                    }
+                    Tensor::from_f32(v, &[h, bt, dh], None)
+                })
+                .collect()
+        };
+        let q = Tensor::rand(&[h, 1, dh], 1.0, 77, None);
+        let clean = mk(false);
+        let dirty = mk(true);
+        let a = paged_attention(&q, &clean, &clean, len, 0.5, None).to_vec_f32();
+        let b = paged_attention(&q, &dirty, &dirty, len, 0.5, None).to_vec_f32();
+        let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+        let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(ab, bb);
     }
 
     #[test]

@@ -86,11 +86,22 @@ impl KvCache {
         self.head_dim
     }
 
-    /// Resident bytes this cache pins for its whole lifetime (full
-    /// capacity, K and V, all layers) — the engine's per-request
-    /// `resident_kv_bytes` admission charge.
-    pub fn bytes(&self) -> usize {
+    /// Bytes this cache reserves at full bucket capacity (K and V, all
+    /// layers) — what admission must charge, since a contiguous cache
+    /// allocates its whole capacity up front.
+    pub fn capacity_bytes(&self) -> usize {
         2 * self.layers() * self.heads * self.capacity * self.head_dim * 4
+    }
+
+    /// Bytes this cache actually holds on the tracker right now. For the
+    /// contiguous cache this *equals* [`KvCache::capacity_bytes`] — the
+    /// full buffers are allocated at construction — which is exactly the
+    /// inefficiency the paged pool ([`super::kvpage::BlockPool`], whose
+    /// `resident_bytes` tracks blocks in use) exists to fix. Metrics
+    /// report this value so `resident_kv_high_water_bytes` means "bytes
+    /// held", not "bytes reserved", under either backend (DESIGN.md §14).
+    pub fn resident_bytes(&self) -> usize {
+        self.capacity_bytes()
     }
 
     /// Bulk-seed one layer from prefill outputs (full `[h, cap, dh]`
@@ -174,7 +185,8 @@ mod tests {
     fn seed_append_and_views_roundtrip() {
         let (h, cap, dh) = (2usize, 8usize, 4usize);
         let mut c = KvCache::new(1, h, cap, dh, None);
-        assert_eq!(c.bytes(), 2 * h * cap * dh * 4);
+        assert_eq!(c.capacity_bytes(), 2 * h * cap * dh * 4);
+        assert_eq!(c.resident_bytes(), c.capacity_bytes(), "contiguous cache holds full capacity");
 
         let k0 = Tensor::rand(&[h, cap, dh], 1.0, 1, None);
         let v0 = Tensor::rand(&[h, cap, dh], 1.0, 2, None);
@@ -207,7 +219,7 @@ mod tests {
     fn tracker_counts_resident_until_drop() {
         let tr = MemoryTracker::new();
         let c = KvCache::new(2, 2, 16, 8, Some(tr.clone()));
-        assert_eq!(tr.current(), c.bytes());
+        assert_eq!(tr.current(), c.resident_bytes());
         let view = c.k_view(0);
         drop(c);
         // a live view keeps one layer's K buffer alive

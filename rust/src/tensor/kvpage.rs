@@ -1,0 +1,436 @@
+//! Paged KV-cache block pool (DESIGN.md §14).
+//!
+//! Where [`super::kvcache::KvCache`] pins one capacity-shaped buffer per
+//! layer for a request's whole lifetime, a [`BlockPool`] carves cache
+//! storage into fixed `block_tokens`-sized **blocks** — per layer, a pair
+//! of `[heads, block_tokens, head_dim]` K/V tensors — handed out by a
+//! free-list allocator and referenced by per-request [`BlockTable`]s.
+//! Resident bytes are therefore proportional to *positions actually
+//! cached* (rounded up to the block), not to bucket capacity: a request
+//! that generates 8 tokens from an 8-token prompt holds one block, not a
+//! 512-token cache.
+//!
+//! Blocks are **refcounted** so requests with identical prompt prefixes
+//! can share prefix blocks (the sharing policy — keys, copy-on-write on
+//! divergence — lives in `coordinator::cache_manager`; the pool only
+//! provides the mechanism: `retain`/`release`/`copy_block` and the
+//! exclusivity check in [`BlockPool::write_rows`]).
+//!
+//! Memory contract: a block's tensors are allocated on the pool's
+//! [`MemoryTracker`] when the block is handed out and dropped when its
+//! refcount returns to zero, so `resident_bytes()` — `blocks_in_use ·
+//! block_bytes` — is exactly what the tracker sees. The free list
+//! conserves identity: `blocks_in_use + free_blocks == pool_blocks` at
+//! every step (`rust/tests/kvpage_fuzz.rs` fuzzes this invariant along
+//! with refcount discipline and copy-on-write stability).
+
+use super::{MemoryTracker, Tensor};
+
+/// Index of a block slot within its [`BlockPool`].
+pub type BlockId = usize;
+
+#[derive(Debug, Default)]
+struct Slot {
+    /// Live references (block tables holding this block). 0 = free.
+    refs: usize,
+    /// Per-layer K tensors `[heads, block_tokens, head_dim]` (empty while
+    /// the slot is free — freed blocks hold no storage).
+    ks: Vec<Tensor>,
+    /// Per-layer V tensors.
+    vs: Vec<Tensor>,
+}
+
+/// Fixed-capacity pool of refcounted KV blocks with a free-list allocator.
+#[derive(Debug)]
+pub struct BlockPool {
+    layers: usize,
+    heads: usize,
+    block_tokens: usize,
+    head_dim: usize,
+    tracker: Option<MemoryTracker>,
+    slots: Vec<Slot>,
+    /// Free slot ids; `alloc` pops the back (lowest id first from a fresh
+    /// pool — deterministic at any pool width since callers allocate in
+    /// post-wave serial order).
+    free: Vec<BlockId>,
+    in_use: usize,
+    /// Lifetime counters (metrics / fuzz cross-checks).
+    total_allocs: usize,
+    total_frees: usize,
+}
+
+impl BlockPool {
+    /// A pool of `pool_blocks` slots. Storage is lazy: an empty pool holds
+    /// no tensors, and admission-control byte budgets see only blocks in
+    /// use.
+    pub fn new(
+        layers: usize,
+        heads: usize,
+        block_tokens: usize,
+        head_dim: usize,
+        pool_blocks: usize,
+        tracker: Option<MemoryTracker>,
+    ) -> BlockPool {
+        assert!(layers > 0 && heads > 0 && block_tokens > 0 && head_dim > 0);
+        assert!(pool_blocks > 0, "pool needs at least one block");
+        let slots = (0..pool_blocks).map(|_| Slot::default()).collect();
+        let free: Vec<BlockId> = (0..pool_blocks).rev().collect();
+        BlockPool {
+            layers,
+            heads,
+            block_tokens,
+            head_dim,
+            tracker,
+            slots,
+            free,
+            in_use: 0,
+            total_allocs: 0,
+            total_frees: 0,
+        }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn heads(&self) -> usize {
+        self.heads
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    /// Bytes one block pins while allocated (K and V, all layers).
+    pub fn block_bytes(&self) -> usize {
+        2 * self.layers * self.heads * self.block_tokens * self.head_dim * 4
+    }
+
+    /// Total slots (the conservation denominator).
+    pub fn pool_blocks(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn blocks_in_use(&self) -> usize {
+        self.in_use
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Bytes currently resident: blocks in use × block bytes — by
+    /// construction exactly the tracker bytes this pool holds.
+    pub fn resident_bytes(&self) -> usize {
+        self.in_use * self.block_bytes()
+    }
+
+    /// (lifetime allocs, lifetime frees) — fuzz/metrics counters.
+    pub fn alloc_stats(&self) -> (usize, usize) {
+        (self.total_allocs, self.total_frees)
+    }
+
+    /// Live references to `id` (0 = free slot).
+    pub fn ref_count(&self, id: BlockId) -> usize {
+        self.slots[id].refs
+    }
+
+    /// Hand out a block (refcount 1), allocating its tensors on the
+    /// tracker. `None` when the pool is exhausted — the serving tier's
+    /// admission control reserves blocks up front precisely so its own
+    /// allocations never see this.
+    pub fn alloc(&mut self) -> Option<BlockId> {
+        let id = self.free.pop()?;
+        let slot = &mut self.slots[id];
+        debug_assert_eq!(slot.refs, 0, "free-listed block has references");
+        debug_assert!(slot.ks.is_empty(), "free-listed block holds storage");
+        let shape = [self.heads, self.block_tokens, self.head_dim];
+        slot.refs = 1;
+        slot.ks = (0..self.layers).map(|_| Tensor::zeros(&shape, self.tracker.clone())).collect();
+        slot.vs = (0..self.layers).map(|_| Tensor::zeros(&shape, self.tracker.clone())).collect();
+        self.in_use += 1;
+        self.total_allocs += 1;
+        Some(id)
+    }
+
+    /// Add a reference (prefix sharing).
+    pub fn retain(&mut self, id: BlockId) {
+        assert!(self.slots[id].refs > 0, "retain on free block {id}");
+        self.slots[id].refs += 1;
+    }
+
+    /// Drop a reference; returns `true` when the block was freed (storage
+    /// dropped, slot returned to the free list). Releasing a free block
+    /// is a double free and panics.
+    pub fn release(&mut self, id: BlockId) -> bool {
+        let slot = &mut self.slots[id];
+        assert!(slot.refs > 0, "double free of block {id}");
+        slot.refs -= 1;
+        if slot.refs > 0 {
+            return false;
+        }
+        slot.ks.clear();
+        slot.vs.clear();
+        self.free.push(id);
+        self.in_use -= 1;
+        self.total_frees += 1;
+        true
+    }
+
+    /// The block's K tensor for `layer` (cheap clone of the shared
+    /// buffer; drop it before the next write to the block).
+    pub fn k(&self, id: BlockId, layer: usize) -> Tensor {
+        assert!(self.slots[id].refs > 0, "read of free block {id}");
+        self.slots[id].ks[layer].clone()
+    }
+
+    /// The block's V tensor for `layer`.
+    pub fn v(&self, id: BlockId, layer: usize) -> Tensor {
+        assert!(self.slots[id].refs > 0, "read of free block {id}");
+        self.slots[id].vs[layer].clone()
+    }
+
+    /// Write `k_src`/`v_src` — `[heads, n, head_dim]` views — into rows
+    /// `at..at+n` of the block for `layer`. Requires exclusive ownership
+    /// (refcount 1): writing a shared block means a missed copy-on-write,
+    /// which this assert turns into a loud failure instead of corrupted
+    /// sibling reads.
+    pub fn write_rows(&mut self, id: BlockId, layer: usize, at: usize, k_src: &Tensor, v_src: &Tensor) {
+        assert_eq!(self.slots[id].refs, 1, "write to shared block {id} (copy-on-write missed)");
+        let (h, bt, dh) = (self.heads, self.block_tokens, self.head_dim);
+        let n = k_src.shape()[1];
+        assert!(at + n <= bt, "rows {at}+{n} over block size {bt}");
+        assert_eq!(k_src.shape(), &[h, n, dh][..], "write k shape");
+        assert_eq!(v_src.shape(), &[h, n, dh][..], "write v shape");
+        let ksrc = k_src.to_vec_f32();
+        let kd = self.slots[id].ks[layer].f32_mut().expect("block k aliased during write");
+        for hi in 0..h {
+            for r in 0..n {
+                kd[hi * bt * dh + (at + r) * dh..hi * bt * dh + (at + r + 1) * dh]
+                    .copy_from_slice(&ksrc[(hi * n + r) * dh..(hi * n + r + 1) * dh]);
+            }
+        }
+        let vsrc = v_src.to_vec_f32();
+        let vd = self.slots[id].vs[layer].f32_mut().expect("block v aliased during write");
+        for hi in 0..h {
+            for r in 0..n {
+                vd[hi * bt * dh + (at + r) * dh..hi * bt * dh + (at + r + 1) * dh]
+                    .copy_from_slice(&vsrc[(hi * n + r) * dh..(hi * n + r + 1) * dh]);
+            }
+        }
+    }
+
+    /// Copy-on-write helper: copy every layer's K/V bytes from `src`
+    /// (shared) into `dst` (freshly allocated, exclusive).
+    pub fn copy_block(&mut self, dst: BlockId, src: BlockId) {
+        assert_ne!(dst, src, "copy onto itself");
+        assert!(self.slots[src].refs > 0, "copy from free block {src}");
+        assert_eq!(self.slots[dst].refs, 1, "copy into shared block {dst}");
+        for l in 0..self.layers {
+            let kdata = self.slots[src].ks[l].to_vec_f32();
+            let vdata = self.slots[src].vs[l].to_vec_f32();
+            self.slots[dst].ks[l]
+                .f32_mut()
+                .expect("dst k aliased during copy")
+                .copy_from_slice(&kdata);
+            self.slots[dst].vs[l]
+                .f32_mut()
+                .expect("dst v aliased during copy")
+                .copy_from_slice(&vdata);
+        }
+    }
+}
+
+/// A request's view into the pool: ordered block ids covering its cached
+/// positions plus the logical length. Position `p` lives in
+/// `blocks[p / block_tokens]` at row `p % block_tokens`.
+#[derive(Clone, Debug, Default)]
+pub struct BlockTable {
+    blocks: Vec<BlockId>,
+    len: usize,
+}
+
+impl BlockTable {
+    pub fn new() -> BlockTable {
+        BlockTable::default()
+    }
+
+    pub fn blocks(&self) -> &[BlockId] {
+        &self.blocks
+    }
+
+    /// Logical length: number of valid (attended) cached positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn last_block(&self) -> Option<BlockId> {
+        self.blocks.last().copied()
+    }
+
+    /// Append a block to the tail (the caller owns refcounting).
+    pub fn push_block(&mut self, id: BlockId) {
+        self.blocks.push(id);
+    }
+
+    /// Replace the block at `index` (copy-on-write swap); returns the
+    /// previous id so the caller can release its reference.
+    pub fn swap_block(&mut self, index: usize, id: BlockId) -> BlockId {
+        std::mem::replace(&mut self.blocks[index], id)
+    }
+
+    /// Set the logical length (after seeding). Coverage — `len` positions
+    /// fitting the held blocks — is the pool owner's invariant; the table
+    /// itself does not know `block_tokens`.
+    pub fn set_len(&mut self, len: usize) {
+        self.len = len;
+    }
+
+    /// Advance the logical length after appending one position.
+    pub fn advance(&mut self) {
+        self.len += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_pool(pool_blocks: usize, tracker: Option<MemoryTracker>) -> BlockPool {
+        BlockPool::new(2, 2, 4, 3, pool_blocks, tracker)
+    }
+
+    #[test]
+    fn alloc_free_conservation_and_tracker() {
+        let tr = MemoryTracker::new();
+        let mut p = tiny_pool(3, Some(tr.clone()));
+        assert_eq!(p.block_bytes(), 2 * 2 * 2 * 4 * 3 * 4);
+        assert_eq!(p.pool_blocks(), 3);
+        assert_eq!(tr.current(), 0);
+
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_eq!(p.blocks_in_use() + p.free_blocks(), p.pool_blocks());
+        assert_eq!(p.blocks_in_use(), 2);
+        assert_eq!(tr.current(), p.resident_bytes());
+        assert_eq!(p.resident_bytes(), 2 * p.block_bytes());
+
+        assert!(p.release(a));
+        assert_eq!(tr.current(), p.block_bytes());
+        let c = p.alloc().unwrap();
+        let d = p.alloc().unwrap();
+        assert!(p.alloc().is_none(), "pool must be exhausted");
+        assert_eq!(p.blocks_in_use(), 3);
+        for id in [b, c, d] {
+            assert!(p.release(id));
+        }
+        assert_eq!(p.blocks_in_use(), 0);
+        assert_eq!(p.free_blocks(), p.pool_blocks());
+        assert_eq!(tr.current(), 0);
+    }
+
+    #[test]
+    fn refcounts_free_exactly_once() {
+        let mut p = tiny_pool(2, None);
+        let a = p.alloc().unwrap();
+        p.retain(a);
+        p.retain(a);
+        assert_eq!(p.ref_count(a), 3);
+        assert!(!p.release(a));
+        assert!(!p.release(a));
+        assert!(p.release(a), "last release frees");
+        assert_eq!(p.ref_count(a), 0);
+        assert_eq!(p.free_blocks(), 2);
+        assert_eq!(p.alloc_stats(), (1, 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut p = tiny_pool(2, None);
+        let a = p.alloc().unwrap();
+        p.release(a);
+        p.release(a);
+    }
+
+    #[test]
+    #[should_panic(expected = "copy-on-write missed")]
+    fn write_to_shared_block_panics() {
+        let mut p = tiny_pool(2, None);
+        let a = p.alloc().unwrap();
+        p.retain(a);
+        let k = Tensor::zeros(&[2, 1, 3], None);
+        let v = Tensor::zeros(&[2, 1, 3], None);
+        p.write_rows(a, 0, 0, &k, &v);
+    }
+
+    #[test]
+    fn write_read_roundtrip_with_strided_source() {
+        let mut p = tiny_pool(1, None);
+        let a = p.alloc().unwrap();
+        // rows come from a strided slice of a bigger [h, s, dh] tensor,
+        // exactly how prefill outputs are carved into blocks
+        let big = Tensor::rand(&[2, 10, 3], 1.0, 7, None);
+        let ks = big.slice_axis(1, 4, 2); // [2, 2, 3], non-contiguous
+        assert!(!ks.is_contiguous());
+        p.write_rows(a, 1, 1, &ks, &ks);
+        let got = p.k(a, 1);
+        for hi in 0..2 {
+            for r in 0..2 {
+                for d in 0..3 {
+                    let want = big.at(&[hi, 4 + r, d]);
+                    assert_eq!(got.at(&[hi, 1 + r, d]).to_bits(), want.to_bits());
+                }
+            }
+        }
+        // untouched rows stay zero
+        assert_eq!(got.at(&[0, 0, 0]), 0.0);
+        assert_eq!(got.at(&[1, 3, 2]), 0.0);
+    }
+
+    #[test]
+    fn copy_block_is_bitwise() {
+        let mut p = tiny_pool(2, None);
+        let a = p.alloc().unwrap();
+        let rows = Tensor::rand(&[2, 4, 3], 1.0, 9, None);
+        let vrows = Tensor::rand(&[2, 4, 3], 1.0, 10, None);
+        for l in 0..2 {
+            p.write_rows(a, l, 0, &rows, &vrows);
+        }
+        let b = p.alloc().unwrap();
+        p.copy_block(b, a);
+        for l in 0..2 {
+            let ka: Vec<u32> = p.k(a, l).to_vec_f32().iter().map(|x| x.to_bits()).collect();
+            let kb: Vec<u32> = p.k(b, l).to_vec_f32().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ka, kb, "layer {l} K");
+            let va: Vec<u32> = p.v(a, l).to_vec_f32().iter().map(|x| x.to_bits()).collect();
+            let vb: Vec<u32> = p.v(b, l).to_vec_f32().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(va, vb, "layer {l} V");
+        }
+    }
+
+    #[test]
+    fn block_table_position_mapping() {
+        let mut t = BlockTable::new();
+        assert!(t.is_empty());
+        t.push_block(5);
+        t.push_block(2);
+        t.set_len(6);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.blocks(), &[5, 2]);
+        assert_eq!(t.last_block(), Some(2));
+        t.advance();
+        assert_eq!(t.len(), 7);
+        let old = t.swap_block(1, 9);
+        assert_eq!(old, 2);
+        assert_eq!(t.blocks(), &[5, 9]);
+    }
+}

@@ -19,6 +19,7 @@ mod alloc;
 pub mod attention;
 pub mod conv;
 pub mod kvcache;
+pub mod kvpage;
 pub mod layout;
 pub mod matmul;
 pub mod ops;
@@ -26,6 +27,7 @@ pub mod reduce;
 
 pub use alloc::{Arena, ArenaStore, Buffer, MemoryTracker, SlotSpec, Storage};
 pub use kvcache::KvCache;
+pub use kvpage::{BlockId, BlockPool, BlockTable};
 
 use std::fmt;
 use std::sync::Arc;

@@ -1,0 +1,323 @@
+//! Property suite for the paged KV-cache subsystem (DESIGN.md §14).
+//!
+//! Random alloc/free/share/CoW sequences against [`BlockPool`] and
+//! [`CacheManager`], checked against a shadow model after every step:
+//!
+//! * **free-list conservation** — `blocks_in_use + free_blocks ==
+//!   pool_blocks`, always;
+//! * **refcount discipline** — the pool's per-block refcount equals the
+//!   number of shadow tables holding the block; storage frees exactly
+//!   once, when the last holder releases (lifetime allocs == frees after
+//!   a full drain);
+//! * **no double free** — releases are driven only through live tables,
+//!   and the pool's own `release` panics on a free block (unit-tested in
+//!   `tensor::kvpage`);
+//! * **copy-on-write stability** — a shared prefix block's bytes are
+//!   bitwise identical before and after a sibling diverges, and
+//!   [`paged_attention`] over a table is bitwise identical to
+//!   [`incremental_attention`] over the contiguous cache it represents.
+
+use autochunk::coordinator::CacheManager;
+use autochunk::tensor::attention::{incremental_attention, paged_attention};
+use autochunk::tensor::{BlockPool, MemoryTracker, Tensor};
+
+/// xorshift rng (repo-standard: deterministic, no external crates).
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n.max(1) as u64) as usize
+    }
+}
+
+/// Deterministic per-position K/V rows: row `j` is a pure function of the
+/// token prefix through `j` — the same dependence structure causal
+/// prefill has, so prefix sharing is sound for these synthetic caches and
+/// a shared block's bytes equal what the sharer would have stored itself.
+fn synth_outs(tokens: &[i32], bucket: usize, layers: usize, h: usize, dh: usize) -> Vec<Tensor> {
+    let mut outs = vec![Tensor::zeros(&[1, 1], None)];
+    for l in 0..layers {
+        for which in 0..2 {
+            let mut data = vec![0.0f32; h * bucket * dh];
+            let mut hash: i64 = 1_000_003 + which as i64;
+            for j in 0..bucket {
+                let t = tokens.get(j).copied().unwrap_or(-1);
+                hash = hash.wrapping_mul(31).wrapping_add(t as i64 + 2);
+                for hi in 0..h {
+                    for d in 0..dh {
+                        data[hi * bucket * dh + j * dh + d] = ((hash
+                            .wrapping_add((l * 977 + hi * 131 + d * 17) as i64)
+                            % 1000) as f32)
+                            / 500.0
+                            - 1.0;
+                    }
+                }
+            }
+            outs.push(Tensor::from_f32(data, &[h, bucket, dh], None));
+        }
+    }
+    outs
+}
+
+/// Shadow of one request: its prompt, generated rows, and the expected
+/// contiguous K/V content (layer 0), maintained independently of the
+/// pool so reads can be cross-checked bitwise.
+struct ShadowReq {
+    table: autochunk::tensor::BlockTable,
+    /// Expected layer-0 K rows, row-major `[h, len, dh]` per position.
+    rows_k: Vec<Vec<f32>>,
+    rows_v: Vec<Vec<f32>>,
+    h: usize,
+    dh: usize,
+}
+
+impl ShadowReq {
+    /// Expected contiguous `[h, len, dh]` layer-0 K tensor.
+    fn k_expect(&self) -> Tensor {
+        let len = self.rows_k.len();
+        let (h, dh) = (self.h, self.dh);
+        let mut data = vec![0.0f32; h * len * dh];
+        for (j, row) in self.rows_k.iter().enumerate() {
+            for hi in 0..h {
+                data[hi * len * dh + j * dh..hi * len * dh + (j + 1) * dh]
+                    .copy_from_slice(&row[hi * dh..(hi + 1) * dh]);
+            }
+        }
+        Tensor::from_f32(data, &[h, len, dh], None)
+    }
+
+    fn v_expect(&self) -> Tensor {
+        let len = self.rows_v.len();
+        let (h, dh) = (self.h, self.dh);
+        let mut data = vec![0.0f32; h * len * dh];
+        for (j, row) in self.rows_v.iter().enumerate() {
+            for hi in 0..h {
+                data[hi * len * dh + j * dh..hi * len * dh + (j + 1) * dh]
+                    .copy_from_slice(&row[hi * dh..(hi + 1) * dh]);
+            }
+        }
+        Tensor::from_f32(data, &[h, len, dh], None)
+    }
+}
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.to_vec_f32().iter().map(|x| x.to_bits()).collect()
+}
+
+/// Row `j` of a `[h, s, dh]` tensor as `h · dh` values in `[hi][d]` order.
+fn row_of(t: &Tensor, j: usize, h: usize, dh: usize) -> Vec<f32> {
+    let mut row = Vec::with_capacity(h * dh);
+    for hi in 0..h {
+        for d in 0..dh {
+            row.push(t.at(&[hi, j, d]));
+        }
+    }
+    row
+}
+
+#[test]
+fn pool_conservation_and_refcounts_under_random_ops() {
+    let (layers, h, bt, dh, pool_blocks) = (2usize, 2usize, 4usize, 3usize, 12usize);
+    let tr = MemoryTracker::new();
+    let mut pool = BlockPool::new(layers, h, bt, dh, pool_blocks, Some(tr.clone()));
+    let mut rng = Rng::new(0xB10C);
+    // shadow: per live block id, its expected refcount
+    let mut live: Vec<(usize, usize)> = Vec::new();
+
+    for _step in 0..2000 {
+        match rng.below(4) {
+            // alloc
+            0 => {
+                if let Some(id) = pool.alloc() {
+                    live.push((id, 1));
+                } else {
+                    assert_eq!(pool.free_blocks(), 0, "alloc failed with free blocks");
+                }
+            }
+            // retain a random live block
+            1 => {
+                if !live.is_empty() {
+                    let i = rng.below(live.len());
+                    pool.retain(live[i].0);
+                    live[i].1 += 1;
+                }
+            }
+            // release one reference of a random live block
+            2 | 3 => {
+                if !live.is_empty() {
+                    let i = rng.below(live.len());
+                    let freed = pool.release(live[i].0);
+                    live[i].1 -= 1;
+                    assert_eq!(freed, live[i].1 == 0, "freed at wrong refcount");
+                    if live[i].1 == 0 {
+                        live.swap_remove(i);
+                    }
+                }
+            }
+            _ => unreachable!(),
+        }
+        // invariants, every step
+        assert_eq!(
+            pool.blocks_in_use() + pool.free_blocks(),
+            pool.pool_blocks(),
+            "free-list conservation violated"
+        );
+        assert_eq!(pool.blocks_in_use(), live.len());
+        for &(id, refs) in &live {
+            assert_eq!(pool.ref_count(id), refs, "refcount drift on block {id}");
+        }
+        assert_eq!(tr.current(), pool.resident_bytes(), "tracker/residency drift");
+    }
+    // drain: every allocation must free exactly once
+    for (id, refs) in live.drain(..) {
+        for k in 0..refs {
+            assert_eq!(pool.release(id), k + 1 == refs);
+        }
+    }
+    let (allocs, frees) = pool.alloc_stats();
+    assert_eq!(allocs, frees, "every alloc must free exactly once");
+    assert_eq!(pool.blocks_in_use(), 0);
+    assert_eq!(tr.current(), 0);
+}
+
+#[test]
+fn manager_share_cow_and_reads_bitwise_under_random_ops() {
+    let (layers, h, bt, dh) = (2usize, 2usize, 4usize, 3usize);
+    let bucket = 24usize;
+    let tr = MemoryTracker::new();
+    let mut m = CacheManager::new(layers, h, bt, dh, 64, Some(tr.clone()));
+    let mut rng = Rng::new(0x5EED);
+    let mut reqs: Vec<ShadowReq> = Vec::new();
+    // small token alphabet + shared seed-pool of prompts forces collisions
+    let prompts: Vec<Vec<i32>> = (0..6)
+        .map(|p| (0..(5 + p * 3 % 11)).map(|i| ((p * 7 + i * 3) % 4) as i32).collect())
+        .collect();
+
+    for _step in 0..400 {
+        match rng.below(5) {
+            // new request: seed from a (possibly repeated) prompt
+            0 | 1 => {
+                if reqs.len() < 8 {
+                    let tokens = prompts[rng.below(prompts.len())].clone();
+                    let plen = tokens.len();
+                    let outs = synth_outs(&tokens, bucket, layers, h, dh);
+                    let table = m.seed(1, &tokens, plen, &outs);
+                    let mut rows_k = Vec::new();
+                    let mut rows_v = Vec::new();
+                    for j in 0..plen {
+                        rows_k.push(row_of(&outs[1], j, h, dh));
+                        rows_v.push(row_of(&outs[2], j, h, dh));
+                    }
+                    reqs.push(ShadowReq { table, rows_k, rows_v, h, dh });
+                }
+            }
+            // append a generated row to a random request (may CoW)
+            2 | 3 => {
+                if !reqs.is_empty() {
+                    let i = rng.below(reqs.len());
+                    if reqs[i].table.len() < bucket
+                        && m.free_blocks() > 0
+                    {
+                        let tok = (rng.below(4)) as i32 + 100 + i as i32;
+                        let step = synth_outs(&[tok], 1, layers, h, dh);
+                        let mut table = std::mem::take(&mut reqs[i].table);
+                        m.append_step(&mut table, &step);
+                        reqs[i].table = table;
+                        reqs[i].rows_k.push(row_of(&step[1], 0, h, dh));
+                        reqs[i].rows_v.push(row_of(&step[2], 0, h, dh));
+                    }
+                }
+            }
+            // release a random request
+            4 => {
+                if !reqs.is_empty() {
+                    let i = rng.below(reqs.len());
+                    let r = reqs.swap_remove(i);
+                    m.release_table(r.table);
+                }
+            }
+            _ => unreachable!(),
+        }
+
+        // invariants, every step
+        assert_eq!(
+            m.blocks_in_use() + m.free_blocks(),
+            m.pool_blocks(),
+            "conservation violated"
+        );
+        assert_eq!(tr.current(), m.resident_bytes(), "tracker/residency drift");
+        // every request's view reads back its own rows, bitwise —
+        // regardless of sharing and CoW history of its blocks
+        for r in &reqs {
+            if r.table.is_empty() {
+                continue;
+            }
+            let k_blocks: Vec<Tensor> =
+                r.table.blocks().iter().map(|&b| m.pool().k(b, 0)).collect();
+            let v_blocks: Vec<Tensor> =
+                r.table.blocks().iter().map(|&b| m.pool().v(b, 0)).collect();
+            let q = Tensor::rand(&[h, 1, dh], 1.0, 0xA77E, None);
+            let got = paged_attention(&q, &k_blocks, &v_blocks, r.table.len(), 0.5, None);
+            let want =
+                incremental_attention(&q, &r.k_expect(), &r.v_expect(), 0.5, None);
+            assert_eq!(bits(&got), bits(&want), "paged read diverged from shadow");
+        }
+    }
+
+    for r in reqs.drain(..) {
+        m.release_table(r.table);
+    }
+    assert_eq!(m.blocks_in_use(), 0, "drain leaked blocks");
+    assert_eq!(m.free_blocks(), m.pool_blocks());
+    assert_eq!(tr.current(), 0, "drain leaked bytes");
+    let (allocs, frees) = m.pool().alloc_stats();
+    assert_eq!(allocs, frees, "every alloc must free exactly once");
+    assert!(m.shared_hits() > 0, "workload never exercised prefix sharing");
+}
+
+#[test]
+fn shared_prefix_reads_stable_after_sibling_divergence() {
+    // The headline CoW property, isolated: two identical prompts share
+    // blocks; one generates (diverging at the shared partial block); the
+    // other's full cache read stays bitwise identical throughout.
+    let (layers, h, bt, dh) = (2usize, 2usize, 4usize, 3usize);
+    let bucket = 16usize;
+    let mut m = CacheManager::new(layers, h, bt, dh, 16, None);
+    let tokens: Vec<i32> = vec![3, 1, 2, 0, 1, 3]; // 6 tokens: 1 full + 1 partial block
+    let outs = synth_outs(&tokens, bucket, layers, h, dh);
+    let mut a = m.seed(9, &tokens, 6, &outs);
+    let b = m.seed(9, &tokens, 6, &outs);
+    assert_eq!(m.shared_hits(), 2);
+    assert_eq!(m.blocks_in_use(), 2);
+
+    let q = Tensor::rand(&[h, 1, dh], 1.0, 0xFACE, None);
+    let read_b = |m: &CacheManager| {
+        let kb: Vec<Tensor> = b.blocks().iter().map(|&x| m.pool().k(x, 1)).collect();
+        let vb: Vec<Tensor> = b.blocks().iter().map(|&x| m.pool().v(x, 1)).collect();
+        bits(&paged_attention(&q, &kb, &vb, b.len(), 0.25, None))
+    };
+    let before = read_b(&m);
+
+    // a diverges: three appends (CoW on the shared partial block, then
+    // in-place, then a fresh block at the boundary)
+    for t in 0..3i32 {
+        let step = synth_outs(&[50 + t], 1, layers, h, dh);
+        m.append_step(&mut a, &step);
+        assert_eq!(read_b(&m), before, "sibling read changed after append {t}");
+    }
+    assert_eq!(a.len(), 9);
+    assert_eq!(m.blocks_in_use(), 4, "CoW copy + boundary block");
+
+    m.release_table(a);
+    m.release_table(b);
+    assert_eq!(m.blocks_in_use(), 0);
+}

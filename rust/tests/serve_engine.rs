@@ -460,6 +460,228 @@ fn generation_under_arena_matches_interpreter() {
     assert_eq!(report.measured_final_bytes, 0);
 }
 
+// ---------------------------------------------------------------- paged
+// KV-cache subsystem (DESIGN.md §14): block-granular admission, prefix
+// sharing, eviction-recompute — all under the bitwise stream contract.
+
+fn paged_engine(budget: usize, buckets: Vec<usize>, threads: usize, bt: usize) -> ServeEngine {
+    ServeEngine::new(EngineConfig {
+        model: "gpt".into(),
+        budget_bytes: budget,
+        max_batch: 6,
+        buckets,
+        worker_threads: threads,
+        block_tokens: bt,
+        ..EngineConfig::default()
+    })
+}
+
+/// ISSUE 5 acceptance (parity leg): paged decode token streams and final
+/// logits are bitwise identical to the contiguous-cache path at pool
+/// widths 1 and 4, arena on and off, and the paged run drains clean
+/// (zero blocks in use, zero tracked bytes).
+#[test]
+fn paged_generation_matches_contiguous_bitwise() {
+    let buckets = vec![32usize];
+    let budget = gen_budget(&buckets, 4);
+    let reqs = generate_workload(5, 6, 24, 2, 4, 13, 2);
+
+    let run = |bt: usize, threads: usize, use_arena: bool| {
+        let mut e = ServeEngine::new(EngineConfig {
+            model: "gpt".into(),
+            budget_bytes: budget,
+            max_batch: 6,
+            buckets: buckets.clone(),
+            worker_threads: threads,
+            use_arena,
+            block_tokens: bt,
+            ..EngineConfig::default()
+        });
+        e.serve(&reqs).unwrap()
+    };
+
+    for use_arena in [false, true] {
+        for threads in [1usize, 4] {
+            let (r_cont, _) = run(0, threads, use_arena);
+            let (r_paged, report) = run(16, threads, use_arena);
+            assert_eq!(r_cont.len(), r_paged.len());
+            for (a, b) in r_paged.iter().zip(&r_cont) {
+                assert_eq!(a.outcome, b.outcome, "request {} outcome", a.id);
+                assert_eq!(
+                    a.tokens, b.tokens,
+                    "request {} token stream diverged (arena={use_arena} threads={threads})",
+                    a.id
+                );
+                let ab: Vec<u32> = a.output.iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> = b.output.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    ab, bb,
+                    "request {} output bits diverged (arena={use_arena} threads={threads})",
+                    a.id
+                );
+            }
+            // drain contract
+            assert_eq!(report.final_blocks_in_use, 0, "paged pool leaked blocks");
+            assert_eq!(report.measured_final_bytes, 0, "paged run leaked bytes");
+            assert!(report.measured_peak_bytes <= budget);
+        }
+    }
+
+    // the paged serial baseline is bitwise identical too
+    let mut cont = paged_engine(budget, buckets.clone(), 1, 16);
+    let (r_cont, _) = cont.serve(&reqs).unwrap();
+    let mut serial = paged_engine(budget, buckets, 1, 16);
+    let (r_serial, _) = serial.serve_serial(&reqs).unwrap();
+    for (a, b) in r_cont.iter().zip(&r_serial) {
+        assert_eq!(response_key(a), response_key(b), "paged continuous != serial ({})", a.id);
+    }
+}
+
+/// ISSUE 5 acceptance (packing leg): at a fixed budget sized so the
+/// capacity-reserving baseline can hold exactly one full cache, paged
+/// admission packs strictly more concurrent short generations.
+#[test]
+fn paged_admits_strictly_more_concurrent_generations() {
+    let bucket = 64usize;
+    let bt = 16usize;
+    // six short generations, all arriving at once
+    let reqs: Vec<Request> =
+        (0..6).map(|i| Request::new(i, 6, i as i32).generate(4).at_tick(0, 500)).collect();
+
+    let mut probe = paged_engine(usize::MAX, vec![bucket], 1, 0);
+    let kv = probe.kv_bytes(bucket);
+    let gen_cost = probe.gen_cost(bucket).unwrap();
+    let decode_cost = probe.decode_cost(bucket, 6).unwrap();
+    // One full cache + one in-flight decode step fit; a second full
+    // cache (another `kv`) cannot — but a handful of 1-block paged
+    // caches can (block = kv · bt / bucket = kv/4 here).
+    let budget = gen_cost + decode_cost + kv + kv / 2;
+
+    let mut cont = paged_engine(budget, vec![bucket], 2, 0);
+    let (r_cont, rep_cont) = cont.serve(&reqs).unwrap();
+    assert!(r_cont.iter().all(|r| r.outcome == RequestOutcome::Completed), "{rep_cont:?}");
+
+    let mut paged = paged_engine(budget, vec![bucket], 2, bt);
+    let (r_paged, rep_paged) = paged.serve(&reqs).unwrap();
+    assert!(r_paged.iter().all(|r| r.outcome == RequestOutcome::Completed), "{rep_paged:?}");
+
+    assert!(
+        rep_paged.max_concurrent_generations > rep_cont.max_concurrent_generations,
+        "paged admission must pack strictly more concurrent generations \
+         (paged {} vs contiguous {} at budget {budget})",
+        rep_paged.max_concurrent_generations,
+        rep_cont.max_concurrent_generations,
+    );
+    // resident high water reports true residency: strictly below one
+    // bucket-capacity cache per concurrent generation
+    assert!(
+        rep_paged.resident_kv_high_water_bytes
+            < rep_paged.max_concurrent_generations * kv,
+        "paged residency {} should undercut capacity pricing",
+        rep_paged.resident_kv_high_water_bytes,
+    );
+    // same streams on both backends, wave packing notwithstanding
+    for (a, b) in r_paged.iter().zip(&r_cont) {
+        assert_eq!(a.tokens, b.tokens, "request {} stream diverged", a.id);
+    }
+    assert_eq!(rep_paged.final_blocks_in_use, 0);
+    assert_eq!(rep_paged.measured_final_bytes, 0);
+}
+
+/// Pool-pressure eviction: with room for only two blocks, two
+/// generations that both need a second block stall, one is evicted and
+/// re-queued, and chunk-planned re-prefill recompute reproduces its
+/// stream bitwise — both requests complete with exactly the tokens the
+/// contiguous (uncontended) path produces.
+#[test]
+fn paged_eviction_recompute_preserves_streams() {
+    let bucket = 32usize;
+    let bt = 16usize;
+    // 16-token prompts fill exactly one block; the first decode step of
+    // each needs a second block. Distinct prompts: no sharing relief.
+    let reqs = vec![
+        Request::new(0, 16, 3).generate(4).at_tick(0, 500),
+        Request::new(1, 16, 9).generate(4).at_tick(0, 500),
+    ];
+    let budget = gen_budget(&[bucket], 4);
+
+    // uncontended baseline (contiguous caches)
+    let mut base = paged_engine(budget, vec![bucket], 1, 0);
+    let (r_base, _) = base.serve(&reqs).unwrap();
+    assert!(r_base.iter().all(|r| r.outcome == RequestOutcome::Completed));
+
+    // pool of two blocks: seeds fit, growth cannot — eviction must kick in
+    let mut e = ServeEngine::new(EngineConfig {
+        model: "gpt".into(),
+        budget_bytes: budget,
+        max_batch: 6,
+        buckets: vec![bucket],
+        worker_threads: 1,
+        block_tokens: bt,
+        pool_blocks: 2,
+        ..EngineConfig::default()
+    });
+    let (r_paged, report) = e.serve(&reqs).unwrap();
+    assert!(
+        r_paged.iter().all(|r| r.outcome == RequestOutcome::Completed),
+        "eviction-recompute must complete, not reject: {report:?}"
+    );
+    assert!(report.evicted >= 1, "pool pressure never triggered an eviction");
+    for (a, b) in r_paged.iter().zip(&r_base) {
+        assert_eq!(
+            a.tokens, b.tokens,
+            "request {} stream changed across eviction-recompute",
+            a.id
+        );
+        let ab: Vec<u32> = a.output.iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u32> = b.output.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ab, bb, "request {} logits changed across eviction-recompute", a.id);
+    }
+    // decode-step accounting survives the resume (no step double-counted)
+    for r in &r_paged {
+        assert_eq!(r.decode_steps, 3, "prefill recompute must replace, not re-run, steps");
+    }
+    assert_eq!(report.final_blocks_in_use, 0);
+    assert_eq!(report.measured_final_bytes, 0);
+}
+
+/// Prefix sharing: identical prompts store their prompt blocks once; a
+/// divergence (first generated token) copies-on-write without touching
+/// the sibling — streams still bitwise match the contiguous path.
+#[test]
+fn paged_prefix_sharing_dedups_blocks() {
+    let bucket = 32usize;
+    let bt = 16usize;
+    // same seed → identical 10-token prompts → one shared partial block
+    let reqs = vec![
+        Request::new(0, 10, 7).generate(3).at_tick(0, 500),
+        Request::new(1, 10, 7).generate(3).at_tick(0, 500),
+    ];
+    assert_eq!(reqs[0].tokens, reqs[1].tokens, "workload must collide prompts");
+    let budget = gen_budget(&[bucket], 4);
+
+    let mut cont = paged_engine(budget, vec![bucket], 2, 0);
+    let (r_cont, _) = cont.serve(&reqs).unwrap();
+
+    let mut paged = paged_engine(budget, vec![bucket], 2, bt);
+    let (r_paged, report) = paged.serve(&reqs).unwrap();
+    assert!(r_paged.iter().all(|r| r.outcome == RequestOutcome::Completed));
+    assert!(
+        report.shared_prefix_hits >= 1,
+        "identical prompts must share prefix blocks"
+    );
+    assert_eq!(report.evicted, 0);
+    // identical prompts generate identical streams, and both match the
+    // contiguous backend (copy-on-write divergence is content-neutral
+    // here — same tokens — but exercises the CoW machinery end to end)
+    assert_eq!(r_paged[0].tokens, r_paged[1].tokens);
+    for (a, b) in r_paged.iter().zip(&r_cont) {
+        assert_eq!(a.tokens, b.tokens, "request {} stream diverged under sharing", a.id);
+    }
+    assert_eq!(report.final_blocks_in_use, 0);
+    assert_eq!(report.measured_final_bytes, 0);
+}
+
 #[test]
 fn pool_width_inherits_autochunk_threads() {
     // worker_threads = 0 inherits the ambient pool width — exercised at
