@@ -220,7 +220,7 @@ fn main() {
     // workspace) vs one tracked allocation per op for the interpreter.
     let h = PlanHandle::new("bench_dense", g.clone(), Vec::new(), ps.clone());
     let mem = h.memplan();
-    let opts = ExecOptions { budget_bytes: None, use_arena: true };
+    let opts = ExecOptions { budget_bytes: None, use_arena: true, ..ExecOptions::default() };
     {
         // warm the slot-storage cache
         let tr = MemoryTracker::new();

@@ -162,6 +162,7 @@ fn main() {
     let opts = ExecOptions {
         budget_bytes: None,
         use_arena: autochunk::plan::arena_default(),
+        ..ExecOptions::default()
     };
 
     let mut table = Table::new(&[

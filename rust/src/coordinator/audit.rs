@@ -1,0 +1,248 @@
+//! Engine invariant auditor (DESIGN.md §15).
+//!
+//! The serve engine's correctness rests on conservation laws that hold
+//! at every quiescent point (between waves, and at drain):
+//!
+//! * **block conservation** — `blocks_in_use + free_blocks` equals the
+//!   pool's capacity; blocks are never minted or lost, only moved
+//!   between the free list and live tables;
+//! * **tracker residency** — between waves the only live tracked
+//!   allocations are resident KV caches (activations, inputs, and views
+//!   are all dropped by wave end), so the run tracker's current bytes
+//!   must equal Σ resident KV exactly;
+//! * **arena exactness** — the arena executor's outer high-water mark
+//!   equals the memory planner's `planned_peak_bytes`, per executed
+//!   entry (the PR-3 contract, re-proven live under fault pressure);
+//! * **state census** — every request is in exactly one of
+//!   {queued, running, responded}; ids are unique within each set, the
+//!   sets are pairwise disjoint, and their sizes sum to the workload;
+//! * **terminal drain** — when the engine exits, every request holds a
+//!   terminal response and every block and tracked byte has returned.
+//!
+//! The auditor *collects* violations instead of asserting: under chaos
+//! injection the engine must degrade gracefully, and a panic inside the
+//! checker would itself violate that contract. The chaos soak asserts
+//! the collected report is empty.
+
+use std::collections::HashSet;
+
+/// Outcome of an audited serve run: how many quiescent points were
+/// checked and every violation found (empty = all invariants held).
+#[derive(Clone, Debug, Default)]
+pub struct AuditReport {
+    pub waves_audited: usize,
+    pub violations: Vec<String>,
+}
+
+/// Between-wave invariant checker for one serve run.
+#[derive(Debug, Default)]
+pub struct Auditor {
+    waves_audited: usize,
+    violations: Vec<String>,
+}
+
+impl Auditor {
+    pub fn new() -> Auditor {
+        Auditor::default()
+    }
+
+    fn violate(&mut self, msg: String) {
+        self.violations.push(msg);
+    }
+
+    /// Arena exactness for one executed wave entry: the outer arena's
+    /// measured high-water mark must equal the planner's exact peak.
+    pub fn check_arena(&mut self, tag: &str, measured: usize, planned: usize) {
+        if measured != planned {
+            self.violate(format!(
+                "arena high-water {measured} != planned peak {planned} for '{tag}'"
+            ));
+        }
+    }
+
+    /// All between-wave invariants. `pool` is paged mode's
+    /// `(in_use, free, capacity)` triple (None for contiguous caches);
+    /// `queued`/`running`/`done` are request ids per lifecycle state.
+    #[allow(clippy::too_many_arguments)]
+    pub fn check_wave(
+        &mut self,
+        wave: usize,
+        tracker_current: usize,
+        expected_kv: usize,
+        pool: Option<(usize, usize, usize)>,
+        queued: &[usize],
+        running: &[usize],
+        done: &[usize],
+        total_requests: usize,
+    ) {
+        self.waves_audited += 1;
+        if let Some((in_use, free, capacity)) = pool {
+            if in_use + free != capacity {
+                self.violate(format!(
+                    "wave {wave}: block conservation broken: {in_use} in use + {free} free \
+                     != {capacity} pool blocks"
+                ));
+            }
+        }
+        if tracker_current != expected_kv {
+            self.violate(format!(
+                "wave {wave}: tracker holds {tracker_current} bytes but resident KV is \
+                 {expected_kv} (non-cache allocation leaked across the wave boundary)"
+            ));
+        }
+        self.check_census(wave, queued, running, done, total_requests);
+    }
+
+    fn check_census(
+        &mut self,
+        wave: usize,
+        queued: &[usize],
+        running: &[usize],
+        done: &[usize],
+        total_requests: usize,
+    ) {
+        let mut seen: HashSet<usize> = HashSet::new();
+        for (state, ids) in [("queued", queued), ("running", running), ("responded", done)] {
+            let mut local: HashSet<usize> = HashSet::new();
+            for &id in ids {
+                if !local.insert(id) {
+                    self.violate(format!("wave {wave}: request {id} twice in state {state}"));
+                }
+                if !seen.insert(id) {
+                    self.violate(format!(
+                        "wave {wave}: request {id} in two lifecycle states (… and {state})"
+                    ));
+                }
+            }
+        }
+        let counted = queued.len() + running.len() + done.len();
+        if counted != total_requests {
+            self.violate(format!(
+                "wave {wave}: census counts {counted} requests ({} queued, {} running, \
+                 {} responded) but the workload has {total_requests}",
+                queued.len(),
+                running.len(),
+                done.len()
+            ));
+        }
+    }
+
+    /// Terminal drain contract: nothing live, nothing leaked, every
+    /// request answered.
+    #[allow(clippy::too_many_arguments)]
+    pub fn check_terminal(
+        &mut self,
+        tracker_current: usize,
+        blocks_in_use: usize,
+        live_gens: usize,
+        pending_resumes: usize,
+        queued: usize,
+        responses: usize,
+        total_requests: usize,
+    ) {
+        if tracker_current != 0 {
+            self.violate(format!("terminal: tracker still holds {tracker_current} bytes"));
+        }
+        if blocks_in_use != 0 {
+            self.violate(format!("terminal: {blocks_in_use} pool blocks still in use"));
+        }
+        if live_gens != 0 {
+            self.violate(format!("terminal: {live_gens} generations never drained"));
+        }
+        if pending_resumes != 0 {
+            self.violate(format!("terminal: {pending_resumes} resume entries never consumed"));
+        }
+        if queued != 0 {
+            self.violate(format!("terminal: {queued} requests still queued"));
+        }
+        if responses != total_requests {
+            self.violate(format!(
+                "terminal: {responses} responses for {total_requests} requests \
+                 (a request was silently dropped)"
+            ));
+        }
+    }
+
+    pub fn violations(&self) -> &[String] {
+        &self.violations
+    }
+
+    pub fn report(&self) -> AuditReport {
+        AuditReport {
+            waves_audited: self.waves_audited,
+            violations: self.violations.clone(),
+        }
+    }
+
+    pub fn into_report(self) -> AuditReport {
+        AuditReport { waves_audited: self.waves_audited, violations: self.violations }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_run_produces_empty_report() {
+        let mut a = Auditor::new();
+        a.check_arena("t", 128, 128);
+        a.check_wave(0, 1024, 1024, Some((3, 5, 8)), &[1, 2], &[3], &[0], 5);
+        a.check_terminal(0, 0, 0, 0, 0, 5, 5);
+        let rep = a.into_report();
+        assert_eq!(rep.waves_audited, 1);
+        assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+    }
+
+    #[test]
+    fn block_conservation_violation_is_reported() {
+        let mut a = Auditor::new();
+        a.check_wave(2, 0, 0, Some((3, 4, 8)), &[], &[], &[], 0);
+        assert_eq!(a.violations().len(), 1);
+        assert!(a.violations()[0].contains("block conservation"), "{}", a.violations()[0]);
+    }
+
+    #[test]
+    fn tracker_mismatch_is_reported() {
+        let mut a = Auditor::new();
+        a.check_wave(0, 4096, 2048, None, &[], &[], &[], 0);
+        assert_eq!(a.violations().len(), 1);
+        assert!(a.violations()[0].contains("resident KV"), "{}", a.violations()[0]);
+    }
+
+    #[test]
+    fn arena_mismatch_is_reported() {
+        let mut a = Auditor::new();
+        a.check_arena("gpt_s16", 100, 96);
+        assert_eq!(a.violations().len(), 1);
+        assert!(a.violations()[0].contains("gpt_s16"));
+    }
+
+    #[test]
+    fn census_catches_double_state_and_bad_total() {
+        let mut a = Auditor::new();
+        // id 7 both queued and running; count mismatch vs total 4
+        a.check_wave(1, 0, 0, None, &[7, 8], &[7], &[], 4);
+        let v = a.violations();
+        assert!(v.iter().any(|m| m.contains("two lifecycle states")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("census counts")), "{v:?}");
+    }
+
+    #[test]
+    fn census_catches_duplicate_within_state() {
+        let mut a = Auditor::new();
+        a.check_wave(1, 0, 0, None, &[], &[], &[3, 3], 2);
+        assert!(
+            a.violations().iter().any(|m| m.contains("twice in state responded")),
+            "{:?}",
+            a.violations()
+        );
+    }
+
+    #[test]
+    fn terminal_leaks_are_reported() {
+        let mut a = Auditor::new();
+        a.check_terminal(64, 2, 1, 1, 1, 3, 5);
+        assert_eq!(a.violations().len(), 6, "{:?}", a.violations());
+    }
+}

@@ -28,7 +28,9 @@
 //! after every admitted generation has completed or been evicted,
 //! `blocks_in_use() == 0` and the run tracker reads zero bytes.
 
+use crate::coordinator::engine::EngineError;
 use crate::tensor::{BlockPool, BlockTable, MemoryTracker, Tensor};
+use crate::util::fault::{FaultPlan, FaultSite};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -60,6 +62,11 @@ pub struct CacheManager {
     /// Reverse index for cleanup on free (same `Arc` as the share entry).
     rev: HashMap<usize, Arc<ShareKey>>,
     shared_hits: usize,
+    /// Chaos harness (DESIGN.md §15): when installed, block allocations
+    /// may be turned into synthetic exhaustion at the `BlockAlloc` site.
+    /// Counter-keyed — sound because seed/append only run on the serial
+    /// coordinator thread.
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl CacheManager {
@@ -76,7 +83,26 @@ impl CacheManager {
             share: HashMap::new(),
             rev: HashMap::new(),
             shared_hits: 0,
+            faults: None,
         }
+    }
+
+    /// Install a fault plan for the `BlockAlloc` injection site.
+    pub fn set_faults(&mut self, plan: Arc<FaultPlan>) {
+        self.faults = Some(plan);
+    }
+
+    /// Pool allocation routed through the chaos harness: an installed
+    /// plan may answer with synthetic exhaustion; real exhaustion
+    /// surfaces as a typed error either way (never a panic).
+    fn alloc_block(&mut self) -> Result<usize, EngineError> {
+        if let Some(f) = &self.faults {
+            if f.fires_seq(FaultSite::BlockAlloc) {
+                return Err(EngineError::Injected { site: FaultSite::BlockAlloc.name() });
+            }
+        }
+        let free = self.pool.free_blocks();
+        self.pool.alloc().ok_or(EngineError::PoolExhausted { free })
     }
 
     pub fn pool(&self) -> &BlockPool {
@@ -132,8 +158,13 @@ impl CacheManager {
         if pos % self.pool.block_tokens() == 0 {
             return true;
         }
-        let last = table.last_block().expect("non-boundary append on empty table");
-        self.pool.ref_count(last) > 1
+        match table.last_block() {
+            Some(last) => self.pool.ref_count(last) > 1,
+            None => {
+                debug_assert!(false, "non-boundary append on empty table");
+                true
+            }
+        }
     }
 
     /// Seed a table from prefill outputs (`outs[1 + 2l]`/`outs[2 + 2l]`
@@ -143,15 +174,18 @@ impl CacheManager {
     /// (`len >= plen`); rows `plen..` of `outs` are never stored beyond
     /// the tail block's padding, which no reader observes.
     ///
-    /// Admission must have reserved up to `blocks_for(plen)` blocks; pool
-    /// exhaustion here is therefore a scheduler bug and panics.
+    /// Admission must have reserved up to `blocks_for(plen)` blocks, so
+    /// real pool exhaustion here is a scheduler bug — but it surfaces as
+    /// a typed [`EngineError`] (as do injected `BlockAlloc` faults), with
+    /// every block the partial table already holds released: a failed
+    /// seed leaves the pool exactly as it found it.
     pub fn seed(
         &mut self,
         bucket: usize,
         tokens: &[i32],
         plen: usize,
         outs: &[Tensor],
-    ) -> BlockTable {
+    ) -> Result<BlockTable, EngineError> {
         assert!(plen >= 1, "seed of empty prompt");
         assert!(tokens.len() >= plen, "prompt shorter than seeded length");
         let bt = self.pool.block_tokens();
@@ -172,10 +206,15 @@ impl CacheManager {
                 table.push_block(id);
                 continue;
             }
-            let id = self
-                .pool
-                .alloc()
-                .expect("kv block pool exhausted during seed (admission must reserve blocks)");
+            let id = match self.alloc_block() {
+                Ok(id) => id,
+                Err(e) => {
+                    // roll back: the partial table must not leak blocks
+                    // (shared refs and freshly written ones alike)
+                    self.release_table(table);
+                    return Err(e);
+                }
+            };
             for l in 0..layers {
                 let k = outs[1 + 2 * l].slice_axis(1, r0, rows);
                 let v = outs[2 + 2 * l].slice_axis(1, r0, rows);
@@ -187,24 +226,25 @@ impl CacheManager {
             table.push_block(id);
         }
         table.set_len(plen);
-        table
+        Ok(table)
     }
 
     /// Append one decoded position: `outs` is a decode step's output list
     /// (`outs[1 + 2l]`/`outs[2 + 2l]` are layer `l`'s `[h, 1, dh]` new
     /// K/V rows). Allocates a tail block at a boundary, copies-on-write
     /// when the tail block is shared, then writes and advances.
-    pub fn append_step(&mut self, table: &mut BlockTable, outs: &[Tensor]) {
+    ///
+    /// An allocation failure (real exhaustion or an injected `BlockAlloc`
+    /// fault) returns a typed error with `table` unchanged — the caller
+    /// can release or retry the generation without partial-append state.
+    pub fn append_step(&mut self, table: &mut BlockTable, outs: &[Tensor]) -> Result<(), EngineError> {
         let bt = self.pool.block_tokens();
         let layers = self.pool.layers();
         assert_eq!(outs.len(), 1 + 2 * layers, "decode output arity");
         let pos = table.len();
         let bi = pos / bt;
         if bi == table.blocks().len() {
-            let id = self
-                .pool
-                .alloc()
-                .expect("kv block pool exhausted during append (admission must reserve the block)");
+            let id = self.alloc_block()?;
             table.push_block(id);
         } else {
             assert_eq!(bi + 1, table.blocks().len(), "append not at table tail");
@@ -212,9 +252,7 @@ impl CacheManager {
             if self.pool.ref_count(cur) > 1 {
                 // copy-on-write: this generation diverges from siblings
                 // still reading the shared prompt block
-                let id = self.pool.alloc().expect(
-                    "kv block pool exhausted during copy-on-write (admission must reserve it)",
-                );
+                let id = self.alloc_block()?;
                 self.pool.copy_block(id, cur);
                 let old = table.swap_block(bi, id);
                 debug_assert_eq!(old, cur);
@@ -228,6 +266,7 @@ impl CacheManager {
             self.pool.write_rows(id, l, pos % bt, &outs[1 + 2 * l], &outs[2 + 2 * l]);
         }
         table.advance();
+        Ok(())
     }
 
     /// Bind a decode step's persistent inputs in graph order — per layer,
@@ -303,13 +342,13 @@ mod tests {
         let mut m = CacheManager::new(layers, h, bt, dh, 16, Some(tr.clone()));
         let tokens: Vec<i32> = (0..10).map(|i| (i * 3 + 1) as i32).collect();
         let outs = synth_outs(&tokens, 16, layers, h, dh);
-        let t1 = m.seed(16, &tokens, 10, &outs);
+        let t1 = m.seed(16, &tokens, 10, &outs).unwrap();
         assert_eq!(t1.blocks().len(), 3); // 4+4+2
         assert_eq!(m.blocks_in_use(), 3);
         assert_eq!(m.shared_hits(), 0);
 
         // identical prompt: all three blocks shared
-        let t2 = m.seed(16, &tokens, 10, &outs);
+        let t2 = m.seed(16, &tokens, 10, &outs).unwrap();
         assert_eq!(m.shared_hits(), 3);
         assert_eq!(m.blocks_in_use(), 3, "no new storage for an identical prompt");
         assert_eq!(t1.blocks(), t2.blocks());
@@ -318,7 +357,7 @@ mod tests {
         let mut longer = tokens.clone();
         longer.extend([99, 98, 97]);
         let outs_l = synth_outs(&longer, 16, layers, h, dh);
-        let t3 = m.seed(16, &longer, 13, &outs_l);
+        let t3 = m.seed(16, &longer, 13, &outs_l).unwrap();
         assert_eq!(m.shared_hits(), 5, "two full blocks shared");
         // block 2 is full for t3 but was keyed partial (10 tokens) by t1,
         // so t3 stores blocks 2 and 3 privately
@@ -329,7 +368,7 @@ mod tests {
         let mut other = tokens.clone();
         other[0] = 42;
         let outs_o = synth_outs(&other, 16, layers, h, dh);
-        let t4 = m.seed(16, &other, 10, &outs_o);
+        let t4 = m.seed(16, &other, 10, &outs_o).unwrap();
         assert_eq!(m.shared_hits(), 5);
         assert_eq!(m.blocks_in_use(), 8);
 
@@ -347,8 +386,8 @@ mod tests {
         let mut m = CacheManager::new(layers, h, bt, dh, 8, None);
         let tokens: Vec<i32> = vec![5, 6, 7]; // partial block (3 of 4 rows)
         let outs = synth_outs(&tokens, 8, layers, h, dh);
-        let mut a = m.seed(8, &tokens, 3, &outs);
-        let b = m.seed(8, &tokens, 3, &outs);
+        let mut a = m.seed(8, &tokens, 3, &outs).unwrap();
+        let b = m.seed(8, &tokens, 3, &outs).unwrap();
         assert_eq!(m.shared_hits(), 1);
         assert_eq!(m.blocks_in_use(), 1);
         let shared = b.blocks()[0];
@@ -358,7 +397,7 @@ mod tests {
         // appending to `a` diverges: must CoW, sibling bytes untouched
         assert!(m.append_needs_block(&a), "shared tail block forces a CoW block");
         let step = synth_outs(&[9], 1, layers, h, dh); // [h,1,dh] rows
-        m.append_step(&mut a, &step);
+        m.append_step(&mut a, &step).unwrap();
         assert_eq!(a.len(), 4);
         assert_ne!(a.blocks()[0], shared, "CoW must swap in a private copy");
         assert_eq!(m.blocks_in_use(), 2);
@@ -389,11 +428,11 @@ mod tests {
         let mut m = CacheManager::new(layers, h, bt, dh, 4, None);
         let tokens = vec![1, 2];
         let outs = synth_outs(&tokens, 4, layers, h, dh);
-        let t1 = m.seed(4, &tokens, 2, &outs);
+        let t1 = m.seed(4, &tokens, 2, &outs).unwrap();
         m.release_table(t1);
         assert_eq!(m.blocks_in_use(), 0);
         // a fresh identical prompt must NOT hit the dead entry
-        let t2 = m.seed(4, &tokens, 2, &outs);
+        let t2 = m.seed(4, &tokens, 2, &outs).unwrap();
         assert_eq!(m.shared_hits(), 0, "stale share entry served a freed block");
         assert_eq!(m.blocks_in_use(), 1);
         m.release_table(t2);

@@ -36,7 +36,16 @@
 //!   prefixes share blocks (copy-on-write on divergence), and a
 //!   budget-stalled decode set evicts a victim's blocks and re-queues it
 //!   for re-prefill recompute — bitwise-stream-preserving by decode
-//!   parity.
+//!   parity;
+//! * **graceful degradation under faults** (DESIGN.md §15) — an installed
+//!   [`FaultPlan`] injects deterministic failures (allocation trips,
+//!   poisoned kernels, latency spikes); each wave entry runs panic-
+//!   isolated, failures surface as typed [`EngineError`]s that fail only
+//!   their own request's attempt, retries back off exponentially on the
+//!   virtual clock up to `max_retries`, and per-request `deadline_ticks`
+//!   / priority classes turn overload into structured load shedding
+//!   ([`RejectReason`]) — never a panic, never a silent drop. The
+//!   optional [`Auditor`] proves conservation invariants between waves.
 //!
 //! Determinism contract: at `AUTOCHUNK_THREADS=1` the engine's responses
 //! are bitwise identical to the legacy back-to-back path
@@ -46,6 +55,7 @@
 //! of that contract: decode logits are bitwise identical to re-running
 //! full prefill at the grown length (`rust/tests/decode_parity.rs`).
 
+use crate::coordinator::audit::Auditor;
 use crate::coordinator::cache_manager::CacheManager;
 use crate::coordinator::metrics::{MetricsReport, Recorder};
 use crate::coordinator::request::{Request, RequestOutcome};
@@ -57,8 +67,12 @@ use crate::plan::{ExecOptions, PlanHandle};
 use crate::runtime::{ArtifactMeta, Registry};
 use crate::tensor::{numel, BlockTable, DType, KvCache, MemoryTracker, Tensor};
 use crate::util::error::Result;
+use crate::util::fault::{silence_injected_panics, FaultPlan, FaultScope, InjectedFault};
 use crate::util::pool;
-use std::collections::{HashMap, VecDeque};
+use std::cmp::Reverse;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Configuration of the continuous-batching engine.
@@ -106,6 +120,19 @@ pub struct EngineConfig {
     pub pool_blocks: usize,
     /// Paged mode: evictions one request may survive before rejection.
     pub max_evictions: usize,
+    /// Fault retries (injected faults, poisons, stray panics) one
+    /// request may consume — each retry backs off exponentially on the
+    /// virtual clock — before structured rejection
+    /// ([`RejectReason::RetriesExhausted`]).
+    pub max_retries: usize,
+    /// Deterministic chaos harness (DESIGN.md §15): when installed, the
+    /// named injection sites roll seeded dice and the engine must
+    /// degrade gracefully instead of panicking. `None` (the default)
+    /// keeps every site a single predictable branch.
+    pub faults: Option<Arc<FaultPlan>>,
+    /// Run the engine invariant auditor after every wave (and at drain).
+    /// Violations are collected on the metrics report, never panicked.
+    pub audit: bool,
     /// Compiler options for the per-bucket chunk search.
     pub compile: AutoChunkConfig,
 }
@@ -124,7 +151,142 @@ impl Default for EngineConfig {
             block_tokens: 0,
             pool_blocks: 0,
             max_evictions: 3,
+            max_retries: 8,
+            faults: None,
+            audit: false,
             compile: AutoChunkConfig::default(),
+        }
+    }
+}
+
+/// Typed failure of one engine operation (DESIGN.md §15). Retryable
+/// variants fail a single request *attempt* — the coordinator backs the
+/// request off and retries or load-sheds it; the rest are engine
+/// invariant breaches that abort the whole serve call.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// The block pool had no free block when one was needed.
+    PoolExhausted { free: usize },
+    /// A paged cache was touched while no manager was live (engine bug).
+    MissingManager,
+    /// A wave entry and its result disagreed on kind (engine bug).
+    WaveMismatch,
+    /// Stall eviction ran with no generation to evict (engine bug).
+    StallWithoutGeneration,
+    /// A generation reached cache seeding on a non-gpt model (engine
+    /// bug — admission guards this).
+    NonGptGeneration,
+    /// The chaos harness fired at a named injection site.
+    Injected { site: &'static str },
+    /// A kernel produced a non-finite result (poisoned output).
+    KernelPoisoned,
+    /// A wave entry panicked with a payload the engine does not model.
+    Panic(String),
+}
+
+impl EngineError {
+    /// Stable counter key for `errors_by_kind` (injected faults report
+    /// their site name).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            EngineError::PoolExhausted { .. } => "pool_exhausted",
+            EngineError::MissingManager => "missing_manager",
+            EngineError::WaveMismatch => "wave_mismatch",
+            EngineError::StallWithoutGeneration => "stall_without_generation",
+            EngineError::NonGptGeneration => "non_gpt_generation",
+            EngineError::Injected { site } => site,
+            EngineError::KernelPoisoned => "kernel_poisoned",
+            EngineError::Panic(_) => "panic",
+        }
+    }
+
+    /// Failures of one attempt (faults, poisons, stray panics, pool
+    /// pressure) are retryable; invariant breaches are not.
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            EngineError::PoolExhausted { .. }
+                | EngineError::Injected { .. }
+                | EngineError::KernelPoisoned
+                | EngineError::Panic(_)
+        )
+    }
+
+    /// Map a caught panic payload back to a typed error: injected
+    /// faults carry their site; anything else keeps its message.
+    fn from_panic(payload: Box<dyn std::any::Any + Send>) -> EngineError {
+        match payload.downcast::<InjectedFault>() {
+            Ok(f) => EngineError::Injected { site: f.site.name() },
+            Err(p) => {
+                let msg = if let Some(s) = p.downcast_ref::<&str>() {
+                    (*s).to_string()
+                } else if let Some(s) = p.downcast_ref::<String>() {
+                    s.clone()
+                } else {
+                    "non-string panic payload".to_string()
+                };
+                EngineError::Panic(msg)
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::PoolExhausted { free } => {
+                write!(f, "kv block pool exhausted ({free} free)")
+            }
+            EngineError::MissingManager => write!(f, "paged cache without a manager"),
+            EngineError::WaveMismatch => write!(f, "wave entry/result kind mismatch"),
+            EngineError::StallWithoutGeneration => {
+                write!(f, "stall eviction with no generations")
+            }
+            EngineError::NonGptGeneration => {
+                write!(f, "generation reached seeding on a non-gpt model")
+            }
+            EngineError::Injected { site } => write!(f, "injected fault at site '{site}'"),
+            EngineError::KernelPoisoned => write!(f, "kernel produced a non-finite output"),
+            EngineError::Panic(msg) => write!(f, "wave entry panicked: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Why a request was load-shed (structured rejection — never a silent
+/// drop). Carried on [`EngineResponse::reason`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RejectReason {
+    /// Longer than every configured bucket.
+    TooLong,
+    /// Generation on a non-gpt model, or an empty prompt.
+    NotGenerable,
+    /// The paged pool can never hold the request, even running alone.
+    PoolTooSmall,
+    /// The irreducible floor (cache + LM head) exceeds the budget.
+    BudgetFloor,
+    /// The deepest chunk plan still does not fit the budget.
+    MemoryWall,
+    /// Evicted more than `max_evictions` times (thrashing).
+    EvictionLimit,
+    /// Fault retries exhausted (`max_retries`).
+    RetriesExhausted,
+    /// `deadline_ticks` expired before completion.
+    DeadlineMissed,
+}
+
+impl RejectReason {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RejectReason::TooLong => "too_long",
+            RejectReason::NotGenerable => "not_generable",
+            RejectReason::PoolTooSmall => "pool_too_small",
+            RejectReason::BudgetFloor => "budget_floor",
+            RejectReason::MemoryWall => "memory_wall",
+            RejectReason::EvictionLimit => "eviction_limit",
+            RejectReason::RetriesExhausted => "retries_exhausted",
+            RejectReason::DeadlineMissed => "deadline_missed",
         }
     }
 }
@@ -165,10 +327,16 @@ pub struct EngineResponse {
     pub tokens: Vec<i32>,
     /// Decode steps executed (generated tokens beyond the prefill's).
     pub decode_steps: usize,
+    /// Structured load-shedding reason (Some iff rejected).
+    pub reason: Option<RejectReason>,
+    /// True when a destructive injected fault touched any attempt of
+    /// this request — the chaos soak excludes these from its bitwise
+    /// comparison against a fault-free run.
+    pub fault_touched: bool,
 }
 
 impl EngineResponse {
-    fn rejected(id: usize, depth: usize) -> EngineResponse {
+    fn rejected(id: usize, depth: usize, reason: RejectReason) -> EngineResponse {
         EngineResponse {
             id,
             outcome: RequestOutcome::Rejected,
@@ -180,18 +348,23 @@ impl EngineResponse {
             output: Vec::new(),
             tokens: Vec::new(),
             decode_steps: 0,
+            reason: Some(reason),
+            fault_touched: false,
         }
     }
 }
 
 /// A queued request: its index into the workload plus the deepening level
-/// the next admission attempt will use, and how many paged-mode evictions
-/// it has survived.
+/// the next admission attempt will use, how many paged-mode evictions it
+/// has survived, how many fault retries it has consumed, and the earliest
+/// tick its next attempt may run (exponential backoff; 0 = immediately).
 #[derive(Clone, Copy, Debug)]
 struct Pending {
     idx: usize,
     depth: usize,
     evictions: usize,
+    retries: usize,
+    not_before: u64,
 }
 
 /// A generation's cache backend: the legacy contiguous full-capacity
@@ -228,11 +401,14 @@ struct GenState {
     decode_steps: usize,
     /// Paged-mode evictions this request has survived so far.
     evictions: usize,
+    /// Fault retries this request has consumed so far.
+    retries: usize,
 }
 
 impl GenState {
     fn next_input_token(&self) -> i32 {
-        *self.tokens.last().expect("generation holds at least the prefill token")
+        debug_assert!(!self.tokens.is_empty(), "generation holds at least the prefill token");
+        self.tokens.last().copied().unwrap_or(0)
     }
 }
 
@@ -263,17 +439,42 @@ enum WaveEntry {
 
 /// Result of one executed wave entry. A `Step` is either a generation
 /// prefill or a decode step — the paired [`WaveEntry`] discriminates.
+/// `arena_peak` is the main execute's outer-arena high-water mark (0 off
+/// arena), which the auditor checks against the planner's exact peak.
 enum WaveOut {
     Plain {
         latency_us: u64,
         out: Vec<f32>,
+        arena_peak: usize,
     },
     Step {
         latency_us: u64,
         outs: Vec<Tensor>,
         logits: Vec<f32>,
         token: i32,
+        arena_peak: usize,
     },
+}
+
+/// Did this wave result carry a non-finite float anywhere a downstream
+/// consumer reads? Only screened when the chaos harness is installed —
+/// a poisoned kernel must fail its own request, not corrupt the stream.
+fn wave_out_poisoned(out: &WaveOut) -> bool {
+    match out {
+        WaveOut::Plain { out, .. } => out.iter().any(|x| !x.is_finite()),
+        WaveOut::Step { logits, .. } => logits.iter().any(|x| !x.is_finite()),
+    }
+}
+
+/// Deterministic exponential backoff for fault retries, in virtual
+/// ticks: the first retry is immediate (transient faults usually clear
+/// at once), then 1, 2, 4, … capped at 64 ticks.
+fn backoff_ticks(retry: usize) -> u64 {
+    if retry <= 1 {
+        0
+    } else {
+        1u64 << (retry - 2).min(6)
+    }
 }
 
 #[derive(Clone, Copy)]
@@ -573,6 +774,18 @@ impl ServeEngine {
         let (hits0, miss0) = (self.cache_hits, self.cache_misses);
         let mut responses: Vec<EngineResponse> = Vec::with_capacity(requests.len());
 
+        // Chaos harness (DESIGN.md §15): injected faults surface as
+        // panics with a typed payload, caught per wave entry — silence
+        // the default hook's backtrace spew for those payloads only.
+        let faults = self.config.faults.clone();
+        if faults.is_some() {
+            silence_injected_panics();
+        }
+        let mut auditor = if self.config.audit { Some(Auditor::new()) } else { None };
+        // Request ids any destructive injected fault touched (any
+        // attempt): reported on responses for the soak's bitwise check.
+        let mut touched: HashSet<usize> = HashSet::new();
+
         // Paged mode: one block pool + prefix-share index per run, on the
         // run tracker, so resident blocks are part of the measured peak
         // and the drain contract (`final_blocks_in_use == 0`,
@@ -600,15 +813,24 @@ impl ServeEngine {
         } else {
             None
         };
+        if let (Some(m), Some(plan)) = (&mut mgr, &faults) {
+            m.set_faults(plan.clone());
+        }
         // Evicted generations waiting to re-prefill: request idx → stream
         // state (entries live from eviction until re-admission/rejection).
         let mut resume: HashMap<usize, ResumeState> = HashMap::new();
 
-        // Arrival-ordered queue (stable by id for equal ticks).
+        // Arrival-ordered queue, higher priority class first within a
+        // tick, stable by id (all-zero priorities reduce to the legacy
+        // arrival order exactly).
         let mut order: Vec<usize> = (0..requests.len()).collect();
-        order.sort_by_key(|&i| (requests[i].arrival_tick, requests[i].id));
-        let mut queue: VecDeque<Pending> =
-            order.into_iter().map(|idx| Pending { idx, depth: 0, evictions: 0 }).collect();
+        order.sort_by_key(|&i| {
+            (requests[i].arrival_tick, Reverse(requests[i].priority), requests[i].id)
+        });
+        let mut queue: VecDeque<Pending> = order
+            .into_iter()
+            .map(|idx| Pending { idx, depth: 0, evictions: 0, retries: 0, not_before: 0 })
+            .collect();
 
         let max_batch = match mode {
             Mode::Serial => 1,
@@ -619,14 +841,44 @@ impl ServeEngine {
         let mut stalled_rounds = 0usize;
 
         while !queue.is_empty() || !gens.is_empty() {
-            // Fast-forward the virtual clock to the next arrival when no
-            // decode work is pending.
+            // Fast-forward the virtual clock to the next runnable tick
+            // (arrival or backoff expiry) when no decode work is pending.
             if gens.is_empty() {
-                if let Some(head) = queue.front() {
-                    let arrival = requests[head.idx].arrival_tick;
-                    if arrival > clock {
-                        clock = arrival;
+                let next = queue
+                    .iter()
+                    .map(|p| requests[p.idx].arrival_tick.max(p.not_before))
+                    .min();
+                if let Some(next) = next {
+                    if next > clock {
+                        clock = next;
                     }
+                }
+            }
+
+            // Deadline sweep: a generation whose deadline expired is
+            // load-shed now — its cache frees before this wave's
+            // admission prices residency. Checked between decode steps,
+            // so a missed deadline never wedges the budget.
+            let mut di = 0;
+            while di < gens.len() {
+                let req = &requests[gens[di].idx];
+                if req.deadline_ticks > 0 && clock > req.arrival_tick + req.deadline_ticks {
+                    let g = gens.remove(di);
+                    if let GenCache::Paged(tb) = g.cache {
+                        match &mut mgr {
+                            Some(m) => m.release_table(tb),
+                            None => return Err(EngineError::MissingManager.into()),
+                        }
+                    }
+                    recorder.deadline_missed += 1;
+                    recorder.rejected += 1;
+                    responses.push(EngineResponse::rejected(
+                        req.id,
+                        g.depth,
+                        RejectReason::DeadlineMissed,
+                    ));
+                } else {
+                    di += 1;
                 }
             }
 
@@ -697,6 +949,26 @@ impl ServeEngine {
                 }
                 let p = queue[scan];
                 let req = &requests[p.idx];
+                // An expired deadline sheds the request before any more
+                // compile or admission work is spent on it.
+                if req.deadline_ticks > 0 && clock > req.arrival_tick + req.deadline_ticks {
+                    queue.remove(scan);
+                    resume.remove(&p.idx);
+                    recorder.deadline_missed += 1;
+                    recorder.rejected += 1;
+                    responses.push(EngineResponse::rejected(
+                        req.id,
+                        p.depth,
+                        RejectReason::DeadlineMissed,
+                    ));
+                    continue;
+                }
+                // Backing off after a fault retry: arrived but not yet
+                // runnable — skip, keep scanning.
+                if p.not_before > clock {
+                    scan += 1;
+                    continue;
+                }
                 let generative = req.max_new_tokens > 0;
                 // Generation routes by total footprint: the cache —
                 // contiguous or paged — must hold the prompt plus every
@@ -705,7 +977,7 @@ impl ServeEngine {
                     queue.remove(scan);
                     resume.remove(&p.idx);
                     recorder.rejected += 1;
-                    responses.push(EngineResponse::rejected(req.id, p.depth));
+                    responses.push(EngineResponse::rejected(req.id, p.depth, RejectReason::TooLong));
                     continue;
                 };
                 if generative && (gpt_cfg(&self.config.model, bucket).is_none() || req.seq_len == 0)
@@ -715,7 +987,11 @@ impl ServeEngine {
                     queue.remove(scan);
                     resume.remove(&p.idx);
                     recorder.rejected += 1;
-                    responses.push(EngineResponse::rejected(req.id, p.depth));
+                    responses.push(EngineResponse::rejected(
+                        req.id,
+                        p.depth,
+                        RejectReason::NotGenerable,
+                    ));
                     continue;
                 }
                 let kind = if generative { PlanKind::PrefillKv } else { PlanKind::Prefill };
@@ -737,12 +1013,23 @@ impl ServeEngine {
                                 + resume.get(&p.idx).map(|r| r.tokens.len() - 1).unwrap_or(0);
                             need_blocks = m.blocks_for(plen_eff);
                             extra += need_blocks * m.block_bytes();
-                            if need_blocks > m.pool_blocks() {
-                                // the pool can never hold this prompt
+                            if m.blocks_for(req.total_len()) > m.pool_blocks() {
+                                // The pool can never hold this request,
+                                // even running alone: shed now instead of
+                                // an admit-evict thrash that would end in
+                                // the same rejection after max_evictions
+                                // recomputes (this check dominates the
+                                // old prompt-only one — total_len covers
+                                // every position the cache must reach).
                                 queue.remove(scan);
                                 resume.remove(&p.idx);
+                                recorder.shed += 1;
                                 recorder.rejected += 1;
-                                responses.push(EngineResponse::rejected(req.id, p.depth));
+                                responses.push(EngineResponse::rejected(
+                                    req.id,
+                                    p.depth,
+                                    RejectReason::PoolTooSmall,
+                                ));
                                 continue;
                             }
                         }
@@ -760,7 +1047,11 @@ impl ServeEngine {
                     queue.remove(scan);
                     resume.remove(&p.idx);
                     recorder.rejected += 1;
-                    responses.push(EngineResponse::rejected(req.id, p.depth));
+                    responses.push(EngineResponse::rejected(
+                        req.id,
+                        p.depth,
+                        RejectReason::BudgetFloor,
+                    ));
                     continue;
                 }
                 let cost = Self::admission_cost(self.config.use_arena, &h) + extra;
@@ -770,12 +1061,23 @@ impl ServeEngine {
                     if p.depth < self.config.max_deepen {
                         // Preempt to a deeper-chunked retry, not rejection
                         // (a pending resume entry rides along untouched).
+                        // Deepening is not a fault retry: no backoff.
                         recorder.preempted += 1;
-                        retry.push(Pending { idx: p.idx, depth: p.depth + 1, evictions: p.evictions });
+                        retry.push(Pending {
+                            idx: p.idx,
+                            depth: p.depth + 1,
+                            evictions: p.evictions,
+                            retries: p.retries,
+                            not_before: 0,
+                        });
                     } else {
                         resume.remove(&p.idx);
                         recorder.rejected += 1;
-                        responses.push(EngineResponse::rejected(req.id, p.depth));
+                        responses.push(EngineResponse::rejected(
+                            req.id,
+                            p.depth,
+                            RejectReason::MemoryWall,
+                        ));
                     }
                     continue;
                 }
@@ -836,14 +1138,20 @@ impl ServeEngine {
                                 // identical, so eviction trades memory for
                                 // FLOPs, not for answers. Only a request
                                 // that keeps thrashing is rejected.
-                                let g = gens.pop().expect("stall with no generations");
+                                let Some(g) = gens.pop() else {
+                                    return Err(EngineError::StallWithoutGeneration.into());
+                                };
                                 if let GenCache::Paged(tb) = g.cache {
                                     m.release_table(tb);
                                 }
                                 if g.evictions >= self.config.max_evictions {
+                                    recorder.shed += 1;
                                     recorder.rejected += 1;
-                                    responses
-                                        .push(EngineResponse::rejected(requests[g.idx].id, g.depth));
+                                    responses.push(EngineResponse::rejected(
+                                        requests[g.idx].id,
+                                        g.depth,
+                                        RejectReason::EvictionLimit,
+                                    ));
                                 } else {
                                     recorder.evicted += 1;
                                     resume.insert(
@@ -857,15 +1165,21 @@ impl ServeEngine {
                                         idx: g.idx,
                                         depth: g.depth,
                                         evictions: g.evictions + 1,
+                                        retries: g.retries,
+                                        not_before: 0,
                                     });
                                 }
                             }
                             None => {
                                 // Contiguous legacy policy: reject the head.
                                 let g = gens.remove(0);
+                                recorder.shed += 1;
                                 recorder.rejected += 1;
-                                responses
-                                    .push(EngineResponse::rejected(requests[g.idx].id, g.depth));
+                                responses.push(EngineResponse::rejected(
+                                    requests[g.idx].id,
+                                    g.depth,
+                                    RejectReason::EvictionLimit,
+                                ));
                             }
                         }
                         stalled_rounds = 0;
@@ -887,106 +1201,246 @@ impl ServeEngine {
             let use_arena = self.config.use_arena;
             let tick_us = self.config.tick_us;
             let entries = wave;
+            // Request id per entry, for attributing fault-touched flags
+            // after the entries are consumed.
+            let entry_ids: Vec<usize> = entries
+                .iter()
+                .map(|e| match e {
+                    WaveEntry::Prefill { p, .. } => requests[p.idx].id,
+                    WaveEntry::Decode { gi, .. } => requests[gens[*gi].idx].id,
+                })
+                .collect();
+            // One fault scope per entry. The key mixes request identity,
+            // position in its stream, and the retry ordinal — decisions
+            // are pure in (seed, site, key), so the schedule is identical
+            // at any pool width, and a retried attempt draws fresh dice.
+            let scopes: Vec<Option<FaultScope>> = match &faults {
+                Some(plan) => entries
+                    .iter()
+                    .map(|e| {
+                        let key = match e {
+                            WaveEntry::Prefill { p, .. } => {
+                                ((requests[p.idx].id as u64) << 32)
+                                    ^ ((p.depth as u64) << 24)
+                                    ^ ((p.evictions as u64) << 16)
+                                    ^ ((p.retries as u64) << 4)
+                                    ^ 2
+                            }
+                            WaveEntry::Decode { gi, .. } => {
+                                let g = &gens[*gi];
+                                ((requests[g.idx].id as u64) << 32)
+                                    ^ ((g.past as u64) << 8)
+                                    ^ ((g.retries as u64) << 4)
+                                    ^ 1
+                            }
+                        };
+                        Some(FaultScope::new(plan.clone(), key))
+                    })
+                    .collect(),
+                None => vec![None; entries.len()],
+            };
             let gens_ro: &Vec<GenState> = &gens;
             let mgr_ro: &Option<CacheManager> = &mgr;
-            let results: Vec<WaveOut> = pool::parallel_map(entries.len(), |wi| {
-                let light_opts = ExecOptions { budget_bytes: None, use_arena };
-                match &entries[wi] {
-                    WaveEntry::Prefill { p, h, lm, ptoks, .. } => {
-                        let req = &requests[p.idx];
-                        pool::with_threads(per_entry_threads, || {
-                            let started = Instant::now();
-                            // generative prefills run over the effective
-                            // prompt (resume extends it with generated
-                            // tokens); plain prefills keep the request's
-                            let ins = match lm {
-                                None => request_inputs(h.graph(), req, &tracker),
-                                Some(_) => prompt_inputs(h.graph(), ptoks, &tracker),
-                            };
-                            let entry_budget = Self::admission_cost(use_arena, h) + share;
-                            let opts = ExecOptions {
-                                budget_bytes: Some(if use_arena {
-                                    entry_budget
-                                } else {
-                                    h.quote().governor_budget(entry_budget)
-                                }),
-                                use_arena,
-                            };
-                            let (outs, _stats) = h.execute(&ins, &tracker, &opts);
-                            drop(ins);
-                            match lm {
-                                None => WaveOut::Plain {
-                                    latency_us: started.elapsed().as_micros() as u64,
-                                    out: outs[0].to_vec_f32(),
-                                },
-                                Some(lm) => {
-                                    // the next token comes off the
-                                    // effective prompt's last row
-                                    let plen = ptoks.len().max(1);
-                                    let hrow = outs[0]
-                                        .slice_axis(0, plen - 1, 1)
-                                        .to_contiguous(Some(tracker.clone()));
-                                    let (louts, _) = lm.execute(&[hrow], &tracker, &light_opts);
+            // Panic isolation: each entry runs under catch_unwind *inside*
+            // the pool task (the pool re-raises worker panics), so a
+            // poisoned or fault-tripped kernel fails only its own request.
+            let results: Vec<Result<WaveOut, EngineError>> =
+                pool::parallel_map(entries.len(), |wi| {
+                    let fscope = &scopes[wi];
+                    catch_unwind(AssertUnwindSafe(|| -> Result<WaveOut, EngineError> {
+                        match &entries[wi] {
+                            WaveEntry::Prefill { p, h, lm, ptoks, .. } => {
+                                let req = &requests[p.idx];
+                                pool::with_threads(per_entry_threads, || {
+                                    let started = Instant::now();
+                                    // generative prefills run over the effective
+                                    // prompt (resume extends it with generated
+                                    // tokens); plain prefills keep the request's
+                                    let ins = match lm {
+                                        None => request_inputs(h.graph(), req, &tracker),
+                                        Some(_) => prompt_inputs(h.graph(), ptoks, &tracker),
+                                    };
+                                    let entry_budget = Self::admission_cost(use_arena, h) + share;
+                                    let opts = ExecOptions {
+                                        budget_bytes: Some(if use_arena {
+                                            entry_budget
+                                        } else {
+                                            h.quote().governor_budget(entry_budget)
+                                        }),
+                                        use_arena,
+                                        faults: fscope.clone(),
+                                    };
+                                    let (outs, stats) = h.execute(&ins, &tracker, &opts);
+                                    drop(ins);
+                                    match lm {
+                                        None => Ok(WaveOut::Plain {
+                                            latency_us: started.elapsed().as_micros() as u64,
+                                            out: outs[0].to_vec_f32(),
+                                            arena_peak: stats.arena_peak_bytes,
+                                        }),
+                                        Some(lm) => {
+                                            // the next token comes off the
+                                            // effective prompt's last row
+                                            let lm_opts = ExecOptions {
+                                                budget_bytes: None,
+                                                use_arena,
+                                                faults: fscope
+                                                    .as_ref()
+                                                    .map(|f| f.with_salt(1)),
+                                            };
+                                            let plen = ptoks.len().max(1);
+                                            let hrow = outs[0]
+                                                .slice_axis(0, plen - 1, 1)
+                                                .to_contiguous(Some(tracker.clone()));
+                                            let (louts, _) =
+                                                lm.execute(&[hrow], &tracker, &lm_opts);
+                                            let logits = louts[0].to_vec_f32();
+                                            let token = greedy_argmax(&logits);
+                                            Ok(WaveOut::Step {
+                                                latency_us: started.elapsed().as_micros() as u64,
+                                                outs,
+                                                logits,
+                                                token,
+                                                arena_peak: stats.arena_peak_bytes,
+                                            })
+                                        }
+                                    }
+                                })
+                            }
+                            WaveEntry::Decode { gi, h, lm } => {
+                                let g = &gens_ro[*gi];
+                                pool::with_threads(per_entry_threads, || {
+                                    let started = Instant::now();
+                                    let step_opts = ExecOptions {
+                                        budget_bytes: None,
+                                        use_arena,
+                                        faults: fscope.clone(),
+                                    };
+                                    let lm_opts = ExecOptions {
+                                        budget_bytes: None,
+                                        use_arena,
+                                        faults: fscope.as_ref().map(|f| f.with_salt(1)),
+                                    };
+                                    let mut ins: Vec<Tensor> = Vec::new();
+                                    ins.push(Tensor::from_i32(
+                                        vec![g.next_input_token()],
+                                        &[1],
+                                        Some(tracker.clone()),
+                                    ));
+                                    match &g.cache {
+                                        GenCache::Whole(c) => {
+                                            for l in 0..c.layers() {
+                                                ins.push(c.k_full(l));
+                                                ins.push(c.v_full(l));
+                                            }
+                                        }
+                                        GenCache::Paged(tb) => match mgr_ro.as_ref() {
+                                            Some(m) => m.bind_inputs(tb, &mut ins),
+                                            None => return Err(EngineError::MissingManager),
+                                        },
+                                    }
+                                    let (outs, stats) = h.execute(&ins, &tracker, &step_opts);
+                                    drop(ins); // release cache views before the append
+                                    let hrow = outs[0].to_contiguous(Some(tracker.clone()));
+                                    let (louts, _) = lm.execute(&[hrow], &tracker, &lm_opts);
                                     let logits = louts[0].to_vec_f32();
                                     let token = greedy_argmax(&logits);
-                                    WaveOut::Step {
+                                    Ok(WaveOut::Step {
                                         latency_us: started.elapsed().as_micros() as u64,
                                         outs,
                                         logits,
                                         token,
-                                    }
-                                }
+                                        arena_peak: stats.arena_peak_bytes,
+                                    })
+                                })
                             }
-                        })
-                    }
-                    WaveEntry::Decode { gi, h, lm } => {
-                        let g = &gens_ro[*gi];
-                        pool::with_threads(per_entry_threads, || {
-                            let started = Instant::now();
-                            let mut ins: Vec<Tensor> = Vec::new();
-                            ins.push(Tensor::from_i32(
-                                vec![g.next_input_token()],
-                                &[1],
-                                Some(tracker.clone()),
-                            ));
-                            match &g.cache {
-                                GenCache::Whole(c) => {
-                                    for l in 0..c.layers() {
-                                        ins.push(c.k_full(l));
-                                        ins.push(c.v_full(l));
-                                    }
-                                }
-                                GenCache::Paged(tb) => mgr_ro
-                                    .as_ref()
-                                    .expect("paged cache without a manager")
-                                    .bind_inputs(tb, &mut ins),
-                            }
-                            let (outs, _stats) = h.execute(&ins, &tracker, &light_opts);
-                            drop(ins); // release cache views before the append
-                            let hrow = outs[0].to_contiguous(Some(tracker.clone()));
-                            let (louts, _) = lm.execute(&[hrow], &tracker, &light_opts);
-                            let logits = louts[0].to_vec_f32();
-                            let token = greedy_argmax(&logits);
-                            WaveOut::Step {
-                                latency_us: started.elapsed().as_micros() as u64,
-                                outs,
-                                logits,
-                                token,
-                            }
-                        })
+                        }
+                    }))
+                    .unwrap_or_else(|payload| Err(EngineError::from_panic(payload)))
+                });
+            // Poison screen (chaos runs only): a kernel fault writes NaN
+            // into the row downstream consumers read; greedy_argmax never
+            // picks a NaN, so without this screen a poisoned step would
+            // silently emit token 0 — convert it to a typed failure.
+            let results: Vec<Result<WaveOut, EngineError>> = if faults.is_some() {
+                results
+                    .into_iter()
+                    .map(|r| match r {
+                        Ok(o) if wave_out_poisoned(&o) => Err(EngineError::KernelPoisoned),
+                        other => other,
+                    })
+                    .collect()
+            } else {
+                results
+            };
+            // Fault-touched attribution: the scope's flag is set by any
+            // destructive fire during execution (shared across the entry's
+            // main and LM-head scopes).
+            for (wi, s) in scopes.iter().enumerate() {
+                if let Some(fs) = s {
+                    if fs.touched() {
+                        touched.insert(entry_ids[wi]);
                     }
                 }
-            });
+            }
 
             // ---- post-wave bookkeeping (serial, entry order: results are
-            // deterministic at any pool width)
+            // deterministic at any pool width). A failed entry fails only
+            // its own request: retryable errors back the request off and
+            // requeue it (bounded by `max_retries`, then structured
+            // rejection); invariant breaches abort the serve call.
             let mut finished: Vec<usize> = Vec::new();
+            let mut failed: Vec<usize> = Vec::new();
             for (entry, out) in entries.into_iter().zip(results) {
                 match (entry, out) {
+                    (WaveEntry::Prefill { p, resumed, .. }, Err(e)) => {
+                        recorder.record_error(e.kind());
+                        if !e.retryable() {
+                            return Err(e.into());
+                        }
+                        // the attempt failed in isolation: restore any
+                        // resume payload, then back off and retry
+                        if let Some(r) = resumed {
+                            resume.insert(p.idx, r);
+                        }
+                        if p.retries >= self.config.max_retries {
+                            resume.remove(&p.idx);
+                            recorder.shed += 1;
+                            recorder.rejected += 1;
+                            responses.push(EngineResponse::rejected(
+                                requests[p.idx].id,
+                                p.depth,
+                                RejectReason::RetriesExhausted,
+                            ));
+                        } else {
+                            recorder.retries += 1;
+                            queue.push_front(Pending {
+                                idx: p.idx,
+                                depth: p.depth,
+                                evictions: p.evictions,
+                                retries: p.retries + 1,
+                                not_before: clock + backoff_ticks(p.retries + 1),
+                            });
+                        }
+                    }
+                    (WaveEntry::Decode { gi, .. }, Err(e)) => {
+                        recorder.record_error(e.kind());
+                        if !e.retryable() {
+                            return Err(e.into());
+                        }
+                        // handled with finished removals below (indices
+                        // into `gens` must shift together)
+                        failed.push(gi);
+                    }
                     (
                         WaveEntry::Prefill { p, bucket, h, lm: None, .. },
-                        WaveOut::Plain { latency_us, out },
+                        Ok(WaveOut::Plain { latency_us, out, arena_peak }),
                     ) => {
+                        if use_arena {
+                            if let Some(a) = &mut auditor {
+                                a.check_arena(h.tag(), arena_peak, h.memplan().planned_peak_bytes);
+                            }
+                        }
                         let req = &requests[p.idx];
                         let wait_ticks = clock - req.arrival_tick;
                         recorder.record(h.tag(), latency_us, req.seq_len);
@@ -1002,12 +1456,19 @@ impl ServeEngine {
                             output: out,
                             tokens: Vec::new(),
                             decode_steps: 0,
+                            reason: None,
+                            fault_touched: false,
                         });
                     }
                     (
                         WaveEntry::Prefill { p, bucket, h, lm: Some(_), ptoks, resumed },
-                        WaveOut::Step { latency_us, outs, logits, token },
+                        Ok(WaveOut::Step { latency_us, outs, logits, token, arena_peak }),
                     ) => {
+                        if use_arena {
+                            if let Some(a) = &mut auditor {
+                                a.check_arena(h.tag(), arena_peak, h.memplan().planned_peak_bytes);
+                            }
+                        }
                         let req = &requests[p.idx];
                         let wait_ticks = clock - req.arrival_tick;
                         recorder.record_prefill(latency_us);
@@ -1026,14 +1487,55 @@ impl ServeEngine {
                                 output: logits,
                                 tokens: vec![token],
                                 decode_steps: 0,
+                                reason: None,
+                                fault_touched: false,
                             });
                         } else {
                             let plen = ptoks.len();
                             let cache = match &mut mgr {
-                                Some(m) => GenCache::Paged(m.seed(bucket, &ptoks, plen, &outs)),
+                                Some(m) => match m.seed(bucket, &ptoks, plen, &outs) {
+                                    Ok(tb) => GenCache::Paged(tb),
+                                    Err(e) => {
+                                        // The prefill ran but its blocks
+                                        // never materialized (seed rolls
+                                        // back): fail just this attempt.
+                                        recorder.record_error(e.kind());
+                                        if !e.retryable() {
+                                            return Err(e.into());
+                                        }
+                                        if matches!(e, EngineError::Injected { .. }) {
+                                            touched.insert(req.id);
+                                        }
+                                        drop(outs);
+                                        if let Some(r) = resumed {
+                                            resume.insert(p.idx, r);
+                                        }
+                                        if p.retries >= self.config.max_retries {
+                                            resume.remove(&p.idx);
+                                            recorder.shed += 1;
+                                            recorder.rejected += 1;
+                                            responses.push(EngineResponse::rejected(
+                                                req.id,
+                                                p.depth,
+                                                RejectReason::RetriesExhausted,
+                                            ));
+                                        } else {
+                                            recorder.retries += 1;
+                                            queue.push_front(Pending {
+                                                idx: p.idx,
+                                                depth: p.depth,
+                                                evictions: p.evictions,
+                                                retries: p.retries + 1,
+                                                not_before: clock + backoff_ticks(p.retries + 1),
+                                            });
+                                        }
+                                        continue;
+                                    }
+                                },
                                 None => {
-                                    let cfg = gpt_cfg(&self.config.model, bucket)
-                                        .expect("guarded at admission");
+                                    let Some(cfg) = gpt_cfg(&self.config.model, bucket) else {
+                                        return Err(EngineError::NonGptGeneration.into());
+                                    };
                                     let mut c = KvCache::new(
                                         cfg.layers,
                                         cfg.heads,
@@ -1076,13 +1578,19 @@ impl ServeEngine {
                                 latency_us,
                                 decode_steps,
                                 evictions: p.evictions,
+                                retries: p.retries,
                             });
                         }
                     }
                     (
-                        WaveEntry::Decode { gi, .. },
-                        WaveOut::Step { latency_us, outs, logits, token },
+                        WaveEntry::Decode { gi, h, .. },
+                        Ok(WaveOut::Step { latency_us, outs, logits, token, arena_peak }),
                     ) => {
+                        if use_arena {
+                            if let Some(a) = &mut auditor {
+                                a.check_arena(h.tag(), arena_peak, h.memplan().planned_peak_bytes);
+                            }
+                        }
                         recorder.record_decode(latency_us);
                         let g = &mut gens[gi];
                         g.latency_us += latency_us;
@@ -1095,9 +1603,24 @@ impl ServeEngine {
                                 c.advance();
                             }
                             GenCache::Paged(tb) => {
-                                mgr.as_mut()
-                                    .expect("paged cache without a manager")
-                                    .append_step(tb, &outs);
+                                let Some(m) = mgr.as_mut() else {
+                                    return Err(EngineError::MissingManager.into());
+                                };
+                                if let Err(e) = m.append_step(tb, &outs) {
+                                    // table unchanged (append is atomic):
+                                    // drop this step and recompute the
+                                    // stream via the eviction machinery
+                                    recorder.record_error(e.kind());
+                                    if !e.retryable() {
+                                        return Err(e.into());
+                                    }
+                                    if matches!(e, EngineError::Injected { .. }) {
+                                        touched.insert(requests[g.idx].id);
+                                    }
+                                    drop(outs);
+                                    failed.push(gi);
+                                    continue;
+                                }
                                 drop(outs);
                             }
                         }
@@ -1109,7 +1632,7 @@ impl ServeEngine {
                             finished.push(gi);
                         }
                     }
-                    _ => unreachable!("wave entry/result kind mismatch"),
+                    _ => return Err(EngineError::WaveMismatch.into()),
                 }
             }
 
@@ -1132,28 +1655,110 @@ impl ServeEngine {
             recorder.observe_concurrent_gens(gens.len());
 
             // Eviction: finished generations release their caches (and
-            // their resident bytes or blocks) immediately.
-            finished.sort_unstable();
-            for &gi in finished.iter().rev() {
+            // their resident bytes or blocks) immediately; failed decode
+            // steps release theirs and requeue through the re-prefill
+            // resume path. One descending pass so removals don't shift
+            // indices still pending removal.
+            let mut removals: Vec<(usize, bool)> =
+                finished.into_iter().map(|gi| (gi, true)).collect();
+            removals.extend(failed.into_iter().map(|gi| (gi, false)));
+            removals.sort_unstable_by_key(|&(gi, _)| gi);
+            for &(gi, done) in removals.iter().rev() {
                 let g = gens.remove(gi);
-                if let GenCache::Paged(tb) = g.cache {
-                    mgr.as_mut().expect("paged cache without a manager").release_table(tb);
+                if done {
+                    if let GenCache::Paged(tb) = g.cache {
+                        match mgr.as_mut() {
+                            Some(m) => m.release_table(tb),
+                            None => return Err(EngineError::MissingManager.into()),
+                        }
+                    }
+                    let req = &requests[g.idx];
+                    recorder.record(
+                        g.plan_tag.as_str(),
+                        g.latency_us,
+                        req.seq_len + g.tokens.len(),
+                    );
+                    recorder.record_wait(g.wait_ticks * tick_us);
+                    responses.push(EngineResponse {
+                        id: req.id,
+                        outcome: RequestOutcome::Completed,
+                        bucket: g.bucket,
+                        depth: g.depth,
+                        plan_tag: g.plan_tag,
+                        wait_ticks: g.wait_ticks,
+                        latency_us: g.latency_us,
+                        output: g.last_logits,
+                        tokens: g.tokens,
+                        decode_steps: g.decode_steps,
+                        reason: None,
+                        fault_touched: false,
+                    });
+                } else {
+                    // A failed decode attempt: release the cache exactly
+                    // (blocks and plan-cache pins), then retry through
+                    // re-prefill recompute — decode parity makes the
+                    // resumed stream bitwise identical — or shed after
+                    // max_retries.
+                    if let GenCache::Paged(tb) = g.cache {
+                        match mgr.as_mut() {
+                            Some(m) => m.release_table(tb),
+                            None => return Err(EngineError::MissingManager.into()),
+                        }
+                    }
+                    let req = &requests[g.idx];
+                    if g.retries >= self.config.max_retries {
+                        recorder.shed += 1;
+                        recorder.rejected += 1;
+                        responses.push(EngineResponse::rejected(
+                            req.id,
+                            g.depth,
+                            RejectReason::RetriesExhausted,
+                        ));
+                    } else {
+                        recorder.retries += 1;
+                        resume.insert(
+                            g.idx,
+                            ResumeState { tokens: g.tokens, decode_steps: g.decode_steps },
+                        );
+                        queue.push_front(Pending {
+                            idx: g.idx,
+                            depth: g.depth,
+                            evictions: g.evictions,
+                            retries: g.retries + 1,
+                            not_before: clock + backoff_ticks(g.retries + 1),
+                        });
+                    }
                 }
-                let req = &requests[g.idx];
-                recorder.record(g.plan_tag.as_str(), g.latency_us, req.seq_len + g.tokens.len());
-                recorder.record_wait(g.wait_ticks * tick_us);
-                responses.push(EngineResponse {
-                    id: req.id,
-                    outcome: RequestOutcome::Completed,
-                    bucket: g.bucket,
-                    depth: g.depth,
-                    plan_tag: g.plan_tag,
-                    wait_ticks: g.wait_ticks,
-                    latency_us: g.latency_us,
-                    output: g.last_logits,
-                    tokens: g.tokens,
-                    decode_steps: g.decode_steps,
-                });
+            }
+
+            // Invariant audit (between waves the engine is quiescent: the
+            // only live tracked allocations are resident KV caches).
+            if let Some(a) = &mut auditor {
+                let expected_kv: usize = match &mgr {
+                    Some(m) => m.resident_bytes(),
+                    None => gens
+                        .iter()
+                        .map(|g| match &g.cache {
+                            GenCache::Whole(c) => c.capacity_bytes(),
+                            GenCache::Paged(_) => 0,
+                        })
+                        .sum(),
+                };
+                let pool_state =
+                    mgr.as_ref().map(|m| (m.blocks_in_use(), m.free_blocks(), m.pool_blocks()));
+                let queued: Vec<usize> = queue.iter().map(|p| requests[p.idx].id).collect();
+                let running: Vec<usize> = gens.iter().map(|g| requests[g.idx].id).collect();
+                let done: Vec<usize> = responses.iter().map(|r| r.id).collect();
+                a.check_wave(
+                    recorder.waves,
+                    tracker.current(),
+                    expected_kv,
+                    pool_state,
+                    &queued,
+                    &running,
+                    &done,
+                    requests.len(),
+                );
             }
 
             recorder.waves += 1;
@@ -1164,6 +1769,31 @@ impl ServeEngine {
         debug_assert!(resume.is_empty(), "serve loop exited with pending resumes");
         recorder.cache_hits = self.cache_hits - hits0;
         recorder.cache_misses = self.cache_misses - miss0;
+        // Terminal audit: every request in a terminal state, every block
+        // and tracked byte returned.
+        if let Some(a) = &mut auditor {
+            a.check_terminal(
+                tracker.current(),
+                mgr.as_ref().map(|m| m.blocks_in_use()).unwrap_or(0),
+                gens.len(),
+                resume.len(),
+                queue.len(),
+                responses.len(),
+                requests.len(),
+            );
+        }
+        if let Some(a) = auditor {
+            let rep = a.into_report();
+            recorder.waves_audited = rep.waves_audited;
+            recorder.audit_violations = rep.violations.len();
+            recorder.audit_log = rep.violations;
+        }
+        if let Some(plan) = &faults {
+            recorder.fault_injections = plan.total_fired();
+        }
+        for r in &mut responses {
+            r.fault_touched = touched.contains(&r.id);
+        }
         if let Some(m) = &mgr {
             // Drain contract: every block returned to the free list.
             recorder.shared_prefix_hits = m.shared_hits();

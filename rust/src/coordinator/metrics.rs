@@ -44,6 +44,27 @@ pub struct Recorder {
     /// High-water mark of concurrently resident generations
     /// (via [`Recorder::observe_concurrent_gens`]).
     max_concurrent_gens: usize,
+    /// Requests shed with a structured [`RejectReason`] instead of being
+    /// silently dropped (load shedding, DESIGN.md §15).
+    pub shed: usize,
+    /// Requests rejected because their tick deadline expired before
+    /// admission or mid-decode.
+    pub deadline_missed: usize,
+    /// Retry attempts scheduled after recoverable faults (each adds a
+    /// deterministic exponential backoff before re-admission).
+    pub retries: usize,
+    /// Faults actually fired by the installed [`FaultPlan`] (0 when no
+    /// plan is installed).
+    pub fault_injections: u64,
+    /// Quiescent points checked by the invariant auditor.
+    pub waves_audited: usize,
+    /// Invariant violations the auditor collected (chaos soak pins 0).
+    pub audit_violations: usize,
+    /// The auditor's violation messages, verbatim.
+    pub audit_log: Vec<String>,
+    /// Engine errors observed during the run, bucketed by
+    /// [`EngineError::kind`] (includes recovered/retried ones).
+    pub errors_by_kind: HashMap<String, usize>,
 }
 
 impl Recorder {
@@ -83,6 +104,11 @@ impl Recorder {
     /// wave's prefills land, before finished ones evict).
     pub fn observe_concurrent_gens(&mut self, n: usize) {
         self.max_concurrent_gens = self.max_concurrent_gens.max(n);
+    }
+
+    /// Count one engine error by its stable kind string.
+    pub fn record_error(&mut self, kind: &str) {
+        *self.errors_by_kind.entry(kind.to_string()).or_default() += 1;
     }
 
     /// Close the run and compute the report.
@@ -128,6 +154,14 @@ impl Recorder {
             shared_prefix_hits: self.shared_prefix_hits,
             final_blocks_in_use: self.final_blocks_in_use,
             max_concurrent_generations: self.max_concurrent_gens,
+            shed: self.shed,
+            deadline_missed: self.deadline_missed,
+            retries: self.retries,
+            fault_injections: self.fault_injections,
+            waves_audited: self.waves_audited,
+            audit_violations: self.audit_violations,
+            audit_log: self.audit_log,
+            errors_by_kind: self.errors_by_kind,
             mean_us: if completed == 0 {
                 0
             } else {
@@ -188,6 +222,23 @@ pub struct MetricsReport {
     pub final_blocks_in_use: usize,
     /// High-water mark of concurrently resident generations.
     pub max_concurrent_generations: usize,
+    /// Requests shed with a structured reject reason (DESIGN.md §15).
+    pub shed: usize,
+    /// Requests whose tick deadline expired before they finished.
+    pub deadline_missed: usize,
+    /// Retry attempts scheduled after recoverable faults.
+    pub retries: usize,
+    /// Faults fired by the installed fault plan (0 without one).
+    pub fault_injections: u64,
+    /// Quiescent points the invariant auditor checked (0 when auditing
+    /// was off).
+    pub waves_audited: usize,
+    /// Invariant violations collected — the chaos soak pins this at 0.
+    pub audit_violations: usize,
+    /// The auditor's violation messages, verbatim.
+    pub audit_log: Vec<String>,
+    /// Engine errors bucketed by stable kind string.
+    pub errors_by_kind: HashMap<String, usize>,
     pub mean_us: u64,
     pub per_variant: HashMap<String, usize>,
 }
@@ -240,6 +291,29 @@ impl MetricsReport {
                 self.max_concurrent_generations,
                 self.evicted,
                 self.shared_prefix_hits,
+            ));
+        }
+        let total_errors: usize = self.errors_by_kind.values().sum();
+        if self.shed + self.deadline_missed + self.retries + self.waves_audited + total_errors > 0
+            || self.fault_injections > 0
+        {
+            let mut kinds: Vec<_> = self.errors_by_kind.iter().collect();
+            kinds.sort();
+            let kstr = kinds
+                .iter()
+                .map(|(k, v)| format!("{k}:{v}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            s.push_str(&format!(
+                "\nrobustness: shed={} deadline-missed={} retries={} faults-injected={} | \
+                 audited {} waves, {} violations | errors: {}",
+                self.shed,
+                self.deadline_missed,
+                self.retries,
+                self.fault_injections,
+                self.waves_audited,
+                self.audit_violations,
+                if kstr.is_empty() { "none".to_string() } else { kstr },
             ));
         }
         s
@@ -327,6 +401,37 @@ mod tests {
         assert_eq!(rep.generated_tokens, 0);
         assert_eq!(rep.decode_p99_us, 0);
         assert!(!rep.render().contains("generated"));
+    }
+
+    #[test]
+    fn robustness_line_renders_only_when_active() {
+        // A plain run must not mention the chaos machinery at all.
+        let mut r = Recorder::new();
+        r.record("v", 10, 8);
+        let quiet = r.finish(Duration::from_secs(1));
+        assert_eq!(quiet.shed, 0);
+        assert!(quiet.errors_by_kind.is_empty());
+        assert!(!quiet.render().contains("robustness"), "{}", quiet.render());
+
+        let mut r = Recorder::new();
+        r.record("v", 10, 8);
+        r.shed = 2;
+        r.deadline_missed = 1;
+        r.retries = 3;
+        r.fault_injections = 5;
+        r.waves_audited = 4;
+        r.record_error("kernel_poisoned");
+        r.record_error("kernel_poisoned");
+        r.record_error("block_alloc");
+        let rep = r.finish(Duration::from_secs(1));
+        assert_eq!(rep.errors_by_kind["kernel_poisoned"], 2);
+        assert_eq!(rep.errors_by_kind["block_alloc"], 1);
+        let s = rep.render();
+        assert!(s.contains("shed=2"), "{s}");
+        assert!(s.contains("deadline-missed=1"), "{s}");
+        assert!(s.contains("retries=3"), "{s}");
+        assert!(s.contains("faults-injected=5"), "{s}");
+        assert!(s.contains("kernel_poisoned:2"), "{s}");
     }
 
     #[test]

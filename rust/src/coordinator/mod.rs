@@ -20,14 +20,17 @@
 //! chunked variant "breaks the memory wall" (§4.2), which is exactly the
 //! effect the serve example measures.
 
+pub mod audit;
 pub mod cache_manager;
 pub mod engine;
 pub mod metrics;
 pub mod request;
 
+pub use audit::{AuditReport, Auditor};
 pub use cache_manager::CacheManager;
 pub use engine::{
-    greedy_argmax, pad_prompt, EngineConfig, EngineResponse, PlanKind, ServeEngine,
+    greedy_argmax, pad_prompt, EngineConfig, EngineError, EngineResponse, PlanKind, RejectReason,
+    ServeEngine,
 };
 pub use metrics::{MetricsReport, Recorder};
 pub use request::{

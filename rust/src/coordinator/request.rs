@@ -18,6 +18,13 @@ pub struct Request {
     /// virtual clock admits a request only once its tick has passed, so
     /// open-loop traces replay deterministically on any machine.
     pub arrival_tick: u64,
+    /// Ticks after arrival by which the request must finish (0 = no
+    /// deadline). Checked at admission and between decode steps; a miss
+    /// surfaces as `Rejected { reason: DeadlineMissed }` — never a hang.
+    pub deadline_ticks: u64,
+    /// Priority class: within an arrival tick, higher classes admit
+    /// first (ties broken by id). 0 is the default best-effort class.
+    pub priority: u8,
 }
 
 impl Request {
@@ -33,6 +40,8 @@ impl Request {
             max_new_tokens: 0,
             arrival_offset_us: 0,
             arrival_tick: 0,
+            deadline_ticks: 0,
+            priority: 0,
         }
     }
 
@@ -46,6 +55,18 @@ impl Request {
     /// Builder: request `n` generated tokens after prefill.
     pub fn generate(mut self, n: usize) -> Request {
         self.max_new_tokens = n;
+        self
+    }
+
+    /// Builder: require completion within `ticks` of arrival (0 = none).
+    pub fn deadline(mut self, ticks: u64) -> Request {
+        self.deadline_ticks = ticks;
+        self
+    }
+
+    /// Builder: set the priority class (higher admits first).
+    pub fn with_priority(mut self, p: u8) -> Request {
+        self.priority = p;
         self
     }
 

@@ -87,6 +87,13 @@ pub fn execute_arena(
     assert_eq!(mem.actions.len(), graph.len(), "plan/graph arity");
     assert_eq!(mem.regions.len(), plans.len(), "plan/regions arity");
 
+    if let Some(fs) = &opts.faults {
+        // Injected arena-allocation failure: unwind before the run's
+        // arena hands out its first slot, so `live`/high-water
+        // accounting and the shared store cannot leak across the panic.
+        fs.trip(crate::util::fault::FaultSite::ArenaAlloc);
+    }
+
     let fresh_stores;
     let stores = match stores {
         Some(s) => s,

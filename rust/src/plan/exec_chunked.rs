@@ -40,6 +40,11 @@ pub struct ExecOptions {
     /// interpreter. Bitwise-identical results; exact memory accounting
     /// and no hot-path allocation (DESIGN.md §12).
     pub use_arena: bool,
+    /// Deterministic fault-injection scope for this execution (chaos
+    /// harness, DESIGN.md §15). `None` — the default and the production
+    /// configuration — reduces every injection site to a single
+    /// predictable branch; no dice are rolled until a scope is installed.
+    pub faults: Option<crate::util::fault::FaultScope>,
 }
 
 /// Process-default arena mode from `AUTOCHUNK_ARENA` (`1` routes serving
@@ -137,8 +142,16 @@ impl PlanHandle {
         tracker: &MemoryTracker,
         opts: &ExecOptions,
     ) -> (Vec<Tensor>, ExecStats) {
-        if opts.use_arena {
-            return crate::exec::execute_arena(
+        if let Some(fs) = &opts.faults {
+            // Chaos sites that precede any allocation: a latency spike
+            // stalls this entry without touching results, and an injected
+            // tracker-allocation failure unwinds before the entry holds
+            // anything, so accounting survives the panic exactly.
+            fs.maybe_latency();
+            fs.trip(crate::util::fault::FaultSite::TrackerAlloc);
+        }
+        let (mut outs, stats) = if opts.use_arena {
+            crate::exec::execute_arena(
                 &self.inner.graph,
                 &self.inner.plans,
                 inputs,
@@ -147,9 +160,8 @@ impl PlanHandle {
                 Some(&self.inner.stores),
                 tracker,
                 opts,
-            );
-        }
-        if self.inner.plans.is_empty() {
+            )
+        } else if self.inner.plans.is_empty() {
             crate::exec::execute(&self.inner.graph, inputs, &self.inner.params, tracker)
         } else {
             execute_chunked_opts(
@@ -160,7 +172,19 @@ impl PlanHandle {
                 tracker,
                 opts,
             )
+        };
+        if let Some(fs) = &opts.faults {
+            // Kernel fault: poison one `_into` result. The tail element
+            // sits in the row downstream consumers actually read (last
+            // prompt row / the decode row), so the corruption is
+            // observable and the engine's NaN screen fails the request.
+            if fs.fires(crate::util::fault::FaultSite::Kernel) {
+                if let Some(t) = outs.first_mut() {
+                    t.poison_tail(tracker);
+                }
+            }
         }
+        (outs, stats)
     }
 }
 
@@ -384,13 +408,25 @@ impl Accumulator {
         self.filled += p_axis;
     }
 
-    fn finish(self) -> Tensor {
+    fn finish(mut self) -> Tensor {
         assert_eq!(self.filled, self.shape[self.axis], "accumulator underfilled");
         // hand the bytes over to a tracked Tensor (release our manual claim
-        // first so they are not double-counted; move, don't copy)
-        let Accumulator { data, shape, tracker, .. } = self;
-        tracker.on_free(data.len() * 4);
-        Tensor::from_f32(data, &shape, Some(tracker))
+        // first so they are not double-counted; move, don't copy). Taking
+        // the fields empties `self`, so its Drop releases zero bytes.
+        let data = std::mem::take(&mut self.data);
+        let shape = std::mem::take(&mut self.shape);
+        self.tracker.on_free(data.len() * 4);
+        Tensor::from_f32(data, &shape, Some(self.tracker.clone()))
+    }
+}
+
+impl Drop for Accumulator {
+    /// Release the manual tracker claim even when a kernel panics
+    /// mid-region: the serving tier catches such panics at the wave
+    /// boundary, and a leaked claim here would read as a residency-
+    /// invariant violation to the auditor ever after.
+    fn drop(&mut self) {
+        self.tracker.on_free(self.data.len() * 4);
     }
 }
 

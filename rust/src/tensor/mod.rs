@@ -266,6 +266,28 @@ impl Tensor {
         })
     }
 
+    /// Chaos-harness kernel fault (DESIGN.md §15): overwrite this
+    /// tensor's last element with NaN, in place when the storage is
+    /// exclusively held, otherwise by rebuilding a poisoned contiguous
+    /// copy on `tracker` so accounting stays exact. The tail element
+    /// lives in the row downstream consumers read (the last prompt row /
+    /// the decode row), which makes the corruption observable.
+    pub(crate) fn poison_tail(&mut self, tracker: &MemoryTracker) {
+        if self.numel() == 0 || self.dtype != DType::F32 {
+            return;
+        }
+        if let Some(s) = self.f32_mut() {
+            let last = s.len() - 1;
+            s[last] = f32::NAN;
+            return;
+        }
+        let mut data = self.to_vec_f32();
+        let last = data.len() - 1;
+        data[last] = f32::NAN;
+        let shape = self.shape.clone();
+        *self = Tensor::from_f32(data, &shape, Some(tracker.clone()));
+    }
+
     /// Deterministic pseudo-random uniform values in [-scale, scale]
     /// (xorshift; used by models/tests — no external rand crate).
     pub fn rand(shape: &[usize], scale: f32, seed: u64, tracker: Option<MemoryTracker>) -> Tensor {

@@ -1,0 +1,362 @@
+//! Deterministic fault injection for chaos testing (DESIGN.md §15).
+//!
+//! A [`FaultPlan`] is a seeded, thread-safe schedule of injected faults:
+//! every decision is a pure function of `(seed, site, key)` through an
+//! xorshift* mix — no wall clock, no global RNG — so a chaos failure
+//! replays exactly from its printed seed, at any `AUTOCHUNK_THREADS`
+//! width. Sites that only ever fire on the serial coordinator thread
+//! (block allocation) may instead draw from a per-site injection
+//! counter ([`FaultPlan::fires_seq`]); sites reached from pool workers
+//! must use keys derived from deterministic engine state
+//! ([`FaultScope`]), because worker interleaving would make a shared
+//! counter order-dependent.
+//!
+//! The production configuration is *no plan installed*: every hot-path
+//! hook is a single `Option` test on [`crate::plan::ExecOptions`] /
+//! `EngineConfig`, and no dice are rolled until a plan exists.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Once};
+
+/// Number of named injection sites.
+pub const N_SITES: usize = 5;
+
+/// Where a fault may be injected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// Activation-tracker allocation failure: the executor unwinds
+    /// before allocating anything for the entry.
+    TrackerAlloc,
+    /// Arena slot-allocation failure: the arena executor unwinds before
+    /// the run's arena hands out its first slot.
+    ArenaAlloc,
+    /// `BlockPool` allocation failure: `CacheManager::seed`/`append_step`
+    /// behave as if the pool were exhausted.
+    BlockAlloc,
+    /// Kernel fault: one `_into` result is poisoned with a NaN.
+    Kernel,
+    /// Synthetic latency spike: the entry stalls briefly; results are
+    /// untouched.
+    Latency,
+}
+
+impl FaultSite {
+    /// Every site, in index order.
+    pub const ALL: [FaultSite; N_SITES] = [
+        FaultSite::TrackerAlloc,
+        FaultSite::ArenaAlloc,
+        FaultSite::BlockAlloc,
+        FaultSite::Kernel,
+        FaultSite::Latency,
+    ];
+
+    fn index(self) -> usize {
+        match self {
+            FaultSite::TrackerAlloc => 0,
+            FaultSite::ArenaAlloc => 1,
+            FaultSite::BlockAlloc => 2,
+            FaultSite::Kernel => 3,
+            FaultSite::Latency => 4,
+        }
+    }
+
+    /// Stable name, used for metrics keys and the auditor report.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::TrackerAlloc => "tracker_alloc",
+            FaultSite::ArenaAlloc => "arena_alloc",
+            FaultSite::BlockAlloc => "block_alloc",
+            FaultSite::Kernel => "kernel",
+            FaultSite::Latency => "latency",
+        }
+    }
+
+    /// Destructive sites corrupt or fail the entry they fire on;
+    /// latency spikes only cost time. Only destructive fires mark a
+    /// request as fault-touched for the bitwise-parity comparison.
+    pub fn destructive(self) -> bool {
+        !matches!(self, FaultSite::Latency)
+    }
+}
+
+/// xorshift64* — the deterministic mixer behind every decision.
+fn xorshift_star(mut x: u64) -> u64 {
+    x ^= x >> 12;
+    x ^= x << 25;
+    x ^= x >> 27;
+    x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+}
+
+/// A seeded schedule of injected faults. Cheap to share (`Arc` it into
+/// the engine config); all state is atomic.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Per-site firing rate in per-mille (0 = never, 1000 = always).
+    rates: [u64; N_SITES],
+    /// Per-site injection counters for [`fires_seq`](Self::fires_seq).
+    seq: [AtomicU64; N_SITES],
+    /// Per-site count of faults actually fired (decisions that were
+    /// true), for metrics and the "was anything injected" check.
+    fired: [AtomicU64; N_SITES],
+}
+
+impl FaultPlan {
+    /// A plan that never fires; raise sites with [`with_rate`](Self::with_rate).
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            rates: [0; N_SITES],
+            seq: Default::default(),
+            fired: Default::default(),
+        }
+    }
+
+    /// Builder: set one site's firing rate in per-mille (clamped to 1000).
+    pub fn with_rate(mut self, site: FaultSite, per_mille: u64) -> FaultPlan {
+        self.rates[site.index()] = per_mille.min(1000);
+        self
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn rate(&self, site: FaultSite) -> u64 {
+        self.rates[site.index()]
+    }
+
+    /// Pure decision: does `site` fire for `key`? Same (seed, site, key)
+    /// always answers the same, from any thread.
+    pub fn decide(&self, site: FaultSite, key: u64) -> bool {
+        let rate = self.rates[site.index()];
+        if rate == 0 {
+            return false;
+        }
+        let salt = (site.index() as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let x = xorshift_star(self.seed ^ salt ^ xorshift_star(key.wrapping_add(salt)));
+        x % 1000 < rate
+    }
+
+    /// [`decide`](Self::decide) plus fired-count bookkeeping.
+    pub fn fires_keyed(&self, site: FaultSite, key: u64) -> bool {
+        let hit = self.decide(site, key);
+        if hit {
+            self.fired[site.index()].fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Counter-keyed decision for sites that only run on the serial
+    /// coordinator thread (block allocation): the n-th call site-wide is
+    /// the key, so the schedule replays exactly when the call sequence
+    /// does. Do not use from pool workers — their interleaving would
+    /// reorder the counter.
+    pub fn fires_seq(&self, site: FaultSite) -> bool {
+        let n = self.seq[site.index()].fetch_add(1, Ordering::Relaxed);
+        self.fires_keyed(site, n)
+    }
+
+    /// Faults fired so far at `site`.
+    pub fn fired(&self, site: FaultSite) -> u64 {
+        self.fired[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Faults fired so far across every site.
+    pub fn total_fired(&self) -> u64 {
+        FaultSite::ALL.iter().map(|&s| self.fired(s)).sum()
+    }
+
+    /// One-line per-site summary (`seed=… tracker_alloc=2 … total=9`),
+    /// for the chaos soak's replay banner and audit artifact.
+    pub fn report(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = format!("seed={}", self.seed);
+        for site in FaultSite::ALL {
+            let _ = write!(s, " {}={}", site.name(), self.fired(site));
+        }
+        let _ = write!(s, " total={}", self.total_fired());
+        s
+    }
+}
+
+/// Panic payload for an injected failure. The engine's per-wave
+/// `catch_unwind` downcasts this back into a typed `EngineError`;
+/// [`silence_injected_panics`] keeps the default panic hook from
+/// spamming stderr for it.
+#[derive(Clone, Copy, Debug)]
+pub struct InjectedFault {
+    pub site: FaultSite,
+    pub key: u64,
+}
+
+/// One entry's view of a [`FaultPlan`]: the plan plus a deterministic
+/// key derived from serial engine state (request id, step, retry count),
+/// so decisions are identical at every pool width. Cloning shares the
+/// touched flag — derive per-call keys with [`with_salt`](Self::with_salt).
+#[derive(Clone, Debug)]
+pub struct FaultScope {
+    plan: Arc<FaultPlan>,
+    key: u64,
+    /// Set when any destructive site fires under this scope (any salt).
+    touched: Arc<AtomicBool>,
+}
+
+impl FaultScope {
+    pub fn new(plan: Arc<FaultPlan>, key: u64) -> FaultScope {
+        FaultScope {
+            plan,
+            key,
+            touched: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    /// Same plan and touched flag, independent decision stream — used to
+    /// key the main and LM-head executions of one entry separately.
+    pub fn with_salt(&self, salt: u64) -> FaultScope {
+        FaultScope {
+            plan: self.plan.clone(),
+            key: self.key ^ xorshift_star(salt.wrapping_add(0x5DEE_CE66_D)),
+            touched: self.touched.clone(),
+        }
+    }
+
+    pub fn plan(&self) -> &Arc<FaultPlan> {
+        &self.plan
+    }
+
+    /// Keyed decision for this scope; marks the scope touched when a
+    /// destructive site fires.
+    pub fn fires(&self, site: FaultSite) -> bool {
+        let hit = self.plan.fires_keyed(site, self.key);
+        if hit && site.destructive() {
+            self.touched.store(true, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Panic with an [`InjectedFault`] payload when `site` fires. Call
+    /// *before* the protected resource is acquired so unwinding cannot
+    /// leak accounting; the wave-level `catch_unwind` turns the payload
+    /// into a typed error.
+    pub fn trip(&self, site: FaultSite) {
+        if self.fires(site) {
+            std::panic::panic_any(InjectedFault { site, key: self.key });
+        }
+    }
+
+    /// Stall briefly when the latency site fires. Affects wall time
+    /// only — decisions and results are untouched.
+    pub fn maybe_latency(&self) {
+        if self.fires(FaultSite::Latency) {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+
+    /// Did any destructive site fire under this scope (any salt)?
+    pub fn touched(&self) -> bool {
+        self.touched.load(Ordering::Relaxed)
+    }
+}
+
+/// Install a process-wide panic hook that swallows [`InjectedFault`]
+/// payloads (they are caught and handled at the wave boundary) while
+/// delegating every real panic to the previous hook. Idempotent.
+pub fn silence_injected_panics() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<InjectedFault>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_pure_and_seed_dependent() {
+        let a = FaultPlan::new(7).with_rate(FaultSite::Kernel, 500);
+        let b = FaultPlan::new(7).with_rate(FaultSite::Kernel, 500);
+        let c = FaultPlan::new(8).with_rate(FaultSite::Kernel, 500);
+        let sched = |p: &FaultPlan| {
+            (0..256).map(|k| p.decide(FaultSite::Kernel, k)).collect::<Vec<_>>()
+        };
+        assert_eq!(sched(&a), sched(&b), "same seed, same schedule");
+        assert_ne!(sched(&a), sched(&c), "different seed, different schedule");
+        assert!(sched(&a).iter().any(|&f| f) && sched(&a).iter().any(|&f| !f));
+    }
+
+    #[test]
+    fn rate_extremes() {
+        let never = FaultPlan::new(3);
+        let always = FaultPlan::new(3).with_rate(FaultSite::BlockAlloc, 1000);
+        for k in 0..64 {
+            assert!(!never.decide(FaultSite::BlockAlloc, k));
+            assert!(always.decide(FaultSite::BlockAlloc, k));
+        }
+    }
+
+    #[test]
+    fn sites_draw_independent_streams() {
+        let p = FaultPlan::new(11)
+            .with_rate(FaultSite::TrackerAlloc, 500)
+            .with_rate(FaultSite::Kernel, 500);
+        let a: Vec<bool> = (0..256).map(|k| p.decide(FaultSite::TrackerAlloc, k)).collect();
+        let b: Vec<bool> = (0..256).map(|k| p.decide(FaultSite::Kernel, k)).collect();
+        assert_ne!(a, b, "per-site salts must decorrelate the streams");
+    }
+
+    #[test]
+    fn seq_schedule_replays() {
+        let run = || {
+            let p = FaultPlan::new(42).with_rate(FaultSite::BlockAlloc, 300);
+            (0..128).map(|_| p.fires_seq(FaultSite::BlockAlloc)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn fired_counts_and_report() {
+        let p = FaultPlan::new(5).with_rate(FaultSite::Kernel, 1000);
+        assert!(p.fires_keyed(FaultSite::Kernel, 1));
+        assert!(p.fires_keyed(FaultSite::Kernel, 2));
+        assert_eq!(p.fired(FaultSite::Kernel), 2);
+        assert_eq!(p.total_fired(), 2);
+        let r = p.report();
+        assert!(r.contains("seed=5") && r.contains("kernel=2"), "{r}");
+    }
+
+    #[test]
+    fn scope_touched_only_by_destructive_fires() {
+        let plan = Arc::new(FaultPlan::new(1).with_rate(FaultSite::Latency, 1000));
+        let s = FaultScope::new(plan, 9);
+        assert!(s.fires(FaultSite::Latency));
+        assert!(!s.touched(), "latency spikes are not destructive");
+
+        let plan = Arc::new(FaultPlan::new(1).with_rate(FaultSite::Kernel, 1000));
+        let s = FaultScope::new(plan, 9);
+        assert!(!s.touched());
+        assert!(s.fires(FaultSite::Kernel));
+        assert!(s.touched());
+        assert!(s.with_salt(3).touched(), "salted scopes share the flag");
+    }
+
+    #[test]
+    fn trip_panics_with_typed_payload() {
+        silence_injected_panics();
+        let plan = Arc::new(FaultPlan::new(2).with_rate(FaultSite::TrackerAlloc, 1000));
+        let s = FaultScope::new(plan, 4);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            s.trip(FaultSite::TrackerAlloc)
+        }))
+        .unwrap_err();
+        let f = err.downcast_ref::<InjectedFault>().expect("typed payload");
+        assert_eq!(f.site, FaultSite::TrackerAlloc);
+        assert_eq!(f.key, 4);
+    }
+}

@@ -1,8 +1,10 @@
 //! Small utilities shared across layers: a micro-benchmark timer
 //! (criterion is not in the offline dependency set — see DESIGN.md), the
-//! internal error/context plumbing, and the scoped worker pool behind all
-//! kernel- and chunk-level parallelism.
+//! internal error/context plumbing, the deterministic fault-injection
+//! harness, and the scoped worker pool behind all kernel- and
+//! chunk-level parallelism.
 
 pub mod bench;
 pub mod error;
+pub mod fault;
 pub mod pool;

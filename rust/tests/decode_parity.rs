@@ -72,7 +72,7 @@ fn check_parity(
     let hp = PlanHandle::new("prefill", gp, plans, params.clone());
     let lm_params = autochunk::models::lm_head_params(&params);
     let lm = PlanHandle::new("lm", gpt_lm_head(&c), Vec::new(), lm_params);
-    let opts = ExecOptions { budget_bytes: None, use_arena };
+    let opts = ExecOptions { budget_bytes: None, use_arena, ..ExecOptions::default() };
     let tracker = MemoryTracker::new();
 
     // ---- prefill: seed the cache, pick token 1
@@ -198,7 +198,7 @@ fn generated_streams_identical_across_widths_and_executors() {
             let hp = PlanHandle::new("p", gp, Vec::new(), params.clone());
             let lm_params = autochunk::models::lm_head_params(&params);
             let lm = PlanHandle::new("lm", gpt_lm_head(&c), Vec::new(), lm_params);
-            let opts = ExecOptions { budget_bytes: None, use_arena: arena };
+            let opts = ExecOptions { budget_bytes: None, use_arena: arena, ..ExecOptions::default() };
             let tracker = MemoryTracker::new();
             let prompt: Vec<i32> = vec![3, 1, 4, 1, 5, 9];
             let (outs, _) = hp.execute(&[pad_tokens(&prompt, BUCKET)], &tracker, &opts);

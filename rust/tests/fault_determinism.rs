@@ -1,0 +1,138 @@
+//! Fuzzed determinism contract of the chaos harness (DESIGN.md §15):
+//! a [`FaultPlan`]'s schedule is a pure function of `(seed, site, key)`,
+//! so the exact same faults fire at `AUTOCHUNK_THREADS=1` and `=4`, in
+//! any call order, and a failing chaos run replays from its printed
+//! seed alone.
+
+use autochunk::util::fault::{FaultPlan, FaultScope, FaultSite};
+use autochunk::util::pool;
+use std::sync::Arc;
+
+fn xorshift(state: &mut u64) -> u64 {
+    *state ^= *state << 13;
+    *state ^= *state >> 7;
+    *state ^= *state << 17;
+    *state
+}
+
+/// The full keyed decision schedule for one plan over a key set.
+fn keyed_schedule(plan: &FaultPlan, keys: &[u64]) -> Vec<(u64, [bool; 5])> {
+    keys.iter()
+        .map(|&k| {
+            let mut row = [false; 5];
+            for (i, &site) in FaultSite::ALL.iter().enumerate() {
+                row[i] = plan.decide(site, k);
+            }
+            (k, row)
+        })
+        .collect()
+}
+
+#[test]
+fn fuzz_same_seed_same_schedule_across_pool_widths() {
+    // 32 fuzzed trials: random seeds, random per-site rates, random key
+    // sets. The keyed schedule must be identical whether decisions are
+    // taken serially, via parallel_map at width 1, or at width 4 — and
+    // independent of the order keys are visited in.
+    let mut state = 0xC0FFEE_u64;
+    for trial in 0..32 {
+        let seed = xorshift(&mut state);
+        let mut plan = FaultPlan::new(seed);
+        for site in FaultSite::ALL {
+            plan = plan.with_rate(site, xorshift(&mut state) % 1001);
+        }
+        let plan = Arc::new(plan);
+        let keys: Vec<u64> = (0..257).map(|_| xorshift(&mut state)).collect();
+
+        let serial = keyed_schedule(&plan, &keys);
+
+        for width in [1usize, 4] {
+            let par: Vec<(u64, [bool; 5])> = pool::with_threads(width, || {
+                pool::parallel_map(keys.len(), |i| {
+                    let k = keys[i];
+                    let mut row = [false; 5];
+                    for (j, &site) in FaultSite::ALL.iter().enumerate() {
+                        row[j] = plan.decide(site, k);
+                    }
+                    (k, row)
+                })
+            });
+            assert_eq!(
+                serial, par,
+                "trial {trial}: schedule diverged at width {width} (replay seed={seed})"
+            );
+        }
+
+        // order independence: reversed visitation, same answers
+        let mut rev = keys.clone();
+        rev.reverse();
+        let mut back = keyed_schedule(&plan, &rev);
+        back.reverse();
+        assert_eq!(serial, back, "trial {trial}: schedule is order-dependent (seed={seed})");
+    }
+}
+
+#[test]
+fn replay_from_printed_seed_alone() {
+    // The replay workflow: all a failure report carries is the seed and
+    // the rates. Rebuilding the plan from those must reproduce every
+    // decision — across processes, so no hidden state may leak in.
+    let seed = 0xDEAD_BEEF_u64;
+    let build = || {
+        FaultPlan::new(seed)
+            .with_rate(FaultSite::Kernel, 250)
+            .with_rate(FaultSite::TrackerAlloc, 125)
+            .with_rate(FaultSite::Latency, 500)
+    };
+    let first = build();
+    assert_eq!(first.seed(), seed, "the plan must expose its replay seed");
+    let keys: Vec<u64> = (0..512).map(|k| k * k + 17).collect();
+    let a = keyed_schedule(&first, &keys);
+    let b = keyed_schedule(&build(), &keys);
+    assert_eq!(a, b);
+    // and the schedule is non-trivial at these rates
+    assert!(a.iter().any(|(_, row)| row.iter().any(|&f| f)));
+    assert!(a.iter().any(|(_, row)| row.iter().all(|&f| !f)));
+}
+
+#[test]
+fn seq_sites_replay_when_the_call_sequence_does() {
+    // Counter-keyed sites (serial-coordinator block allocation) replay
+    // exactly when the call sequence replays, independent of the ambient
+    // pool width around the serial caller.
+    let run = |width: usize| {
+        pool::with_threads(width, || {
+            let p = FaultPlan::new(99).with_rate(FaultSite::BlockAlloc, 400);
+            (0..200).map(|_| p.fires_seq(FaultSite::BlockAlloc)).collect::<Vec<bool>>()
+        })
+    };
+    let w1 = run(1);
+    let w4 = run(4);
+    assert_eq!(w1, w4, "seq schedule must not depend on pool width");
+    assert!(w1.iter().any(|&f| f) && w1.iter().any(|&f| !f));
+}
+
+#[test]
+fn scope_salts_decorrelate_but_stay_deterministic() {
+    // The engine keys an entry's main execution and its LM head through
+    // the same scope with different salts: both streams must be
+    // deterministic, and distinct (otherwise one kernel fault would
+    // always poison both executions in lockstep).
+    let fired_with = |salt: Option<u64>| -> Vec<bool> {
+        let plan = Arc::new(FaultPlan::new(31).with_rate(FaultSite::Kernel, 500));
+        (0..256u64)
+            .map(|key| {
+                let s = FaultScope::new(plan.clone(), key);
+                match salt {
+                    Some(v) => s.with_salt(v).fires(FaultSite::Kernel),
+                    None => s.fires(FaultSite::Kernel),
+                }
+            })
+            .collect()
+    };
+    let base = fired_with(None);
+    let salted = fired_with(Some(1));
+    assert_eq!(base, fired_with(None));
+    assert_eq!(salted, fired_with(Some(1)));
+    assert_ne!(base, salted, "salt 1 must decorrelate the LM-head stream");
+}

@@ -210,7 +210,7 @@ fn manager_share_cow_and_reads_bitwise_under_random_ops() {
                     let tokens = prompts[rng.below(prompts.len())].clone();
                     let plen = tokens.len();
                     let outs = synth_outs(&tokens, bucket, layers, h, dh);
-                    let table = m.seed(1, &tokens, plen, &outs);
+                    let table = m.seed(1, &tokens, plen, &outs).unwrap();
                     let mut rows_k = Vec::new();
                     let mut rows_v = Vec::new();
                     for j in 0..plen {
@@ -230,7 +230,7 @@ fn manager_share_cow_and_reads_bitwise_under_random_ops() {
                         let tok = (rng.below(4)) as i32 + 100 + i as i32;
                         let step = synth_outs(&[tok], 1, layers, h, dh);
                         let mut table = std::mem::take(&mut reqs[i].table);
-                        m.append_step(&mut table, &step);
+                        m.append_step(&mut table, &step).unwrap();
                         reqs[i].table = table;
                         reqs[i].rows_k.push(row_of(&step[1], 0, h, dh));
                         reqs[i].rows_v.push(row_of(&step[2], 0, h, dh));
@@ -294,8 +294,8 @@ fn shared_prefix_reads_stable_after_sibling_divergence() {
     let mut m = CacheManager::new(layers, h, bt, dh, 16, None);
     let tokens: Vec<i32> = vec![3, 1, 2, 0, 1, 3]; // 6 tokens: 1 full + 1 partial block
     let outs = synth_outs(&tokens, bucket, layers, h, dh);
-    let mut a = m.seed(9, &tokens, 6, &outs);
-    let b = m.seed(9, &tokens, 6, &outs);
+    let mut a = m.seed(9, &tokens, 6, &outs).unwrap();
+    let b = m.seed(9, &tokens, 6, &outs).unwrap();
     assert_eq!(m.shared_hits(), 2);
     assert_eq!(m.blocks_in_use(), 2);
 
@@ -311,7 +311,7 @@ fn shared_prefix_reads_stable_after_sibling_divergence() {
     // in-place, then a fresh block at the boundary)
     for t in 0..3i32 {
         let step = synth_outs(&[50 + t], 1, layers, h, dh);
-        m.append_step(&mut a, &step);
+        m.append_step(&mut a, &step).unwrap();
         assert_eq!(read_b(&m), before, "sibling read changed after append {t}");
     }
     assert_eq!(a.len(), 9);

@@ -30,6 +30,7 @@ fn check_exact(name: &str, g: &Graph, plans: &[ChunkPlan]) {
     let opts = ExecOptions {
         budget_bytes: None,
         use_arena: true,
+        ..ExecOptions::default()
     };
     let (outs, stats) = execute_arena(g, plans, &ins, &ps, &mem, None, &tracker, &opts);
     assert!(!outs.is_empty() && outs[0].to_vec_f32().iter().all(|x| x.is_finite()));

@@ -121,6 +121,7 @@ fn assert_differential(tag: &str, g: &Graph, plans: &[autochunk::plan::ChunkPlan
     let opts = ExecOptions {
         budget_bytes: None,
         use_arena: true,
+        ..ExecOptions::default()
     };
     let (got, stats) = execute_arena(g, plans, &ins_t, &ps, &mem, None, &tracker, &opts);
 
@@ -209,6 +210,7 @@ fn arena_matches_chunked_interpreter_with_concurrent_lanes() {
             let opts = ExecOptions {
                 budget_bytes: Some(mem.admission_bytes(4)),
                 use_arena: true,
+                ..ExecOptions::default()
             };
             let (got, stats) =
                 execute_arena(&g, &result.plans, &ins, &ps, &mem, None, &tracker, &opts);
@@ -252,7 +254,7 @@ fn slot_storage_recycles_across_runs() {
     let ps = random_params(&g, 1);
     let h = PlanHandle::new("recycle", g.clone(), Vec::new(), ps);
     let ins = random_inputs(&g, 2, None);
-    let opts = ExecOptions { budget_bytes: None, use_arena: true };
+    let opts = ExecOptions { budget_bytes: None, use_arena: true, ..ExecOptions::default() };
     let tracker = MemoryTracker::new();
     let (out1, s1) = h.execute(&ins, &tracker, &opts);
     drop(out1); // return output slots to the store
