@@ -16,7 +16,11 @@
 //! KV cache (`block_tokens ∈ {16, 64}`, DESIGN.md §14) against the
 //! capacity-reserving contiguous baseline at one fixed budget:
 //! concurrent generations admitted, waves, resident high water, and
-//! tokens/s. Emits `BENCH_serve_decode.json`.
+//! tokens/s. A third sweep compares **batched** decode waves (one fused
+//! `[n,d]` graph per wave, DESIGN.md §16) against the looped per-request
+//! path across wave widths and cache layouts: the batched path's dispatch
+//! count per decode wave stays at 1 while the looped path's grows
+//! linearly with the width. Emits `BENCH_serve_decode.json`.
 //!
 //! `cargo bench --bench serve_decode` (`AUTOCHUNK_BENCH_TINY=1` shrinks
 //! both sweeps to the CI smoke size).
@@ -316,6 +320,81 @@ fn main() {
         ));
     }
     print!("{}", etable.render());
+
+    // ---- batched-vs-looped decode sweep (DESIGN.md §16): same-bucket
+    // generations arriving together, so every decode wave is one group.
+    // The headline column is dispatches per decode wave: 1 for the fused
+    // path at any width, ~width for the looped path.
+    let widths: Vec<usize> = if tiny() { vec![2, 4] } else { vec![1, 2, 4, 8] };
+    let bts: Vec<usize> = if tiny() { vec![0, 16] } else { vec![0, 16, 64] };
+    println!("\n== Batched vs looped decode waves (bucket {bucket}) ==\n");
+    let mut btable = Table::new(&[
+        "width",
+        "cache",
+        "mode",
+        "decode disp",
+        "decode waves",
+        "disp/wave",
+        "peak",
+        "tok/s",
+    ]);
+    for &width in &widths {
+        let wreqs: Vec<Request> = (0..width)
+            .map(|i| Request::new(i, 8, i as i32).generate(NEW_TOKENS / 2).at_tick(0, 500))
+            .collect();
+        // generous: every request prefills and decodes co-resident
+        let wbudget = (probe.gen_cost(bucket).expect("gen cost") + kv) * (width + 1);
+        for &bt in &bts {
+            for batch in [false, true] {
+                let mut engine = ServeEngine::new(EngineConfig {
+                    model: "gpt".into(),
+                    budget_bytes: wbudget,
+                    max_batch: width,
+                    buckets: vec![bucket],
+                    worker_threads: threads,
+                    batch_decode: batch,
+                    block_tokens: bt,
+                    ..EngineConfig::default()
+                });
+                let started = Instant::now();
+                let (responses, report) = engine.serve(&wreqs).expect("serve");
+                let secs = started.elapsed().as_secs_f64().max(1e-9);
+                let completed = responses
+                    .iter()
+                    .filter(|r| r.outcome == autochunk::coordinator::RequestOutcome::Completed)
+                    .count();
+                let dpw = report.decode_dispatches as f64 / report.decode_waves.max(1) as f64;
+                let mode = if batch { "batched" } else { "looped" };
+                let cache = match bt {
+                    0 => "contig".to_string(),
+                    n => format!("paged{n}"),
+                };
+                btable.row(vec![
+                    format!("{width}"),
+                    cache.clone(),
+                    mode.to_string(),
+                    format!("{}", report.decode_dispatches),
+                    format!("{}", report.decode_waves),
+                    format!("{dpw:.2}"),
+                    format!("{:.2} MiB", mib(report.measured_peak_bytes)),
+                    format!("{:.1}", report.generated_tokens as f64 / secs),
+                ]);
+                rows.push(format!(
+                    "  {{\"mode\": \"engine_decode_{mode}\", \"wave_width\": {width}, \
+                     \"cache\": \"{cache}\", \"block_tokens\": {bt}, \"decode_dispatches\": {}, \
+                     \"decode_waves\": {}, \"dispatches_per_wave\": {dpw:.3}, \
+                     \"batched_groups\": {}, \"completed\": {completed}, \"peak_mb\": {:.3}, \
+                     \"tokens_per_s\": {:.3}, \"threads\": {threads}}}",
+                    report.decode_dispatches,
+                    report.decode_waves,
+                    report.batched_decode_groups,
+                    mib(report.measured_peak_bytes),
+                    report.generated_tokens as f64 / secs,
+                ));
+            }
+        }
+    }
+    print!("{}", btable.render());
 
     let body = format!("[\n{}\n]\n", rows.join(",\n"));
     if let Err(e) = std::fs::write("BENCH_serve_decode.json", body) {

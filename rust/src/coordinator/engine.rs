@@ -107,6 +107,16 @@ pub struct EngineConfig {
     /// ceiling). Defaults to the `AUTOCHUNK_ARENA` env flag — the CI
     /// matrix's second leg.
     pub use_arena: bool,
+    /// Batched decode (DESIGN.md §16): assemble each wave's decode steps
+    /// into one fused `[n, d]` graph per sequence bucket — one model
+    /// dispatch (plus one LM-head dispatch) per wave instead of one per
+    /// request — with token streams **bitwise identical** to the looped
+    /// per-request path (`rust/tests/decode_batched_parity.rs`). Wave
+    /// widths round up to the next power of two so warm waves of a shape
+    /// bucket reuse compiled plans and arenas; padding rows are inert
+    /// (token 0 at position 0 against all-zero caches). Defaults to the
+    /// `AUTOCHUNK_BATCH_DECODE` env flag — a CI matrix axis.
+    pub batch_decode: bool,
     /// Paged KV-cache mode (DESIGN.md §14): block size in tokens. `0`
     /// (the default) keeps the legacy contiguous full-capacity caches.
     /// When `> 0`, generation caches live in a refcounted block pool:
@@ -148,6 +158,7 @@ impl Default for EngineConfig {
             max_deepen: 5,
             tick_us: 500,
             use_arena: crate::plan::arena_default(),
+            batch_decode: batch_decode_default(),
             block_tokens: 0,
             pool_blocks: 0,
             max_evictions: 3,
@@ -300,8 +311,15 @@ pub enum PlanKind {
     PrefillKv,
     /// One decode step against a cache of logical length `past`.
     Decode { past: usize },
+    /// One decode step for `width` stacked requests (DESIGN.md §16).
+    /// Ragged `past` is graph *data*, not shape — one plan serves every
+    /// cache-length mix at a wave-width bucket.
+    DecodeBatched { width: usize },
     /// Hidden-row → logits head (token selection; length-independent).
     LmHead,
+    /// Batched head: `[width, d] → [width, vocab]` over the same
+    /// pre-transposed `wteᵀ` as [`PlanKind::LmHead`].
+    LmHeadBatched { width: usize },
 }
 
 /// The engine's answer for one request. Carries the full model output so
@@ -435,6 +453,16 @@ enum WaveEntry {
         h: PlanHandle,
         lm: PlanHandle,
     },
+    /// One *batched* decode step covering `gis` (indices into `gens`,
+    /// all in the same sequence bucket), stacked into one fused graph of
+    /// `width ≥ gis.len()` rows — rows beyond the members are inert
+    /// padding (DESIGN.md §16).
+    DecodeBatched {
+        gis: Vec<usize>,
+        h: PlanHandle,
+        lm: PlanHandle,
+        width: usize,
+    },
 }
 
 /// Result of one executed wave entry. A `Step` is either a generation
@@ -454,6 +482,17 @@ enum WaveOut {
         token: i32,
         arena_peak: usize,
     },
+    /// One batched decode step: `outs` holds the stacked graph outputs
+    /// (`[hidden [w,d], k_new [h,w,dh], v_new, …]`); `logits`/`tokens`
+    /// carry one row per *member* (padding rows already dropped), in
+    /// `gis` order.
+    StepBatch {
+        latency_us: u64,
+        outs: Vec<Tensor>,
+        logits: Vec<Vec<f32>>,
+        tokens: Vec<i32>,
+        arena_peak: usize,
+    },
 }
 
 /// Did this wave result carry a non-finite float anywhere a downstream
@@ -463,7 +502,18 @@ fn wave_out_poisoned(out: &WaveOut) -> bool {
     match out {
         WaveOut::Plain { out, .. } => out.iter().any(|x| !x.is_finite()),
         WaveOut::Step { logits, .. } => logits.iter().any(|x| !x.is_finite()),
+        WaveOut::StepBatch { logits, .. } => {
+            logits.iter().flatten().any(|x| !x.is_finite())
+        }
     }
+}
+
+/// Default of [`EngineConfig::batch_decode`]: the `AUTOCHUNK_BATCH_DECODE`
+/// env flag (same latching idiom as [`crate::plan::arena_default`], so
+/// one process serves one consistent answer).
+pub fn batch_decode_default() -> bool {
+    static FLAG: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *FLAG.get_or_init(|| std::env::var("AUTOCHUNK_BATCH_DECODE").as_deref() == Ok("1"))
 }
 
 /// Deterministic exponential backoff for fault retries, in virtual
@@ -605,6 +655,18 @@ impl ServeEngine {
             + Self::admission_cost(self.config.use_arena, &lm))
     }
 
+    /// Admission price of one *batched* decode wave entry (stacked step
+    /// plan at the next-power-of-two width bucket + batched LM head),
+    /// excluding resident cache bytes and block growth (DESIGN.md §16).
+    /// Tests and benches calibrate batched-mode budgets with this.
+    pub fn batched_decode_cost(&mut self, bucket: usize, width: usize) -> Result<usize> {
+        let w = width.max(1).next_power_of_two();
+        let h = self.handle(PlanKind::DecodeBatched { width: w }, bucket, 0)?;
+        let lm = self.handle(PlanKind::LmHeadBatched { width: w }, bucket, 0)?;
+        Ok(Self::admission_cost(self.config.use_arena, &h)
+            + Self::admission_cost(self.config.use_arena, &lm))
+    }
+
     /// Bytes one KV block pins in paged mode (0 when paged mode is off or
     /// the model is non-generative). Bucket-independent: blocks are
     /// shaped by heads/head_dim/block_tokens only.
@@ -646,7 +708,13 @@ impl ServeEngine {
                         models::gpt_decode_paged(&cfg, past, self.config.block_tokens)
                     }
                     PlanKind::Decode { past } => models::gpt_decode(&cfg, past),
+                    PlanKind::DecodeBatched { width } => {
+                        models::gpt_decode_batched(&cfg, width, self.config.block_tokens)
+                    }
                     PlanKind::LmHead => models::gpt_lm_head(&cfg),
+                    PlanKind::LmHeadBatched { width } => {
+                        models::gpt_lm_head_batched(&cfg, width)
+                    }
                     PlanKind::Prefill => unreachable!(),
                 })
             }
@@ -667,7 +735,7 @@ impl ServeEngine {
         let full = self.full_params(bucket)?;
         let params = match kind {
             // weight-tied head: wteᵀ materialized once per bucket
-            PlanKind::LmHead => models::lm_head_params(&full),
+            PlanKind::LmHead | PlanKind::LmHeadBatched { .. } => models::lm_head_params(&full),
             _ => full,
         };
         // Depth ladder relative to the model's own baseline (independent
@@ -694,7 +762,17 @@ impl ServeEngine {
             PlanKind::Decode { past } => {
                 format!("{}_decode_s{}_p{}", self.config.model, bucket, past)
             }
+            PlanKind::DecodeBatched { width } if self.config.block_tokens > 0 => format!(
+                "{}_decode_batch{}_s{}_blk{}",
+                self.config.model, width, bucket, self.config.block_tokens
+            ),
+            PlanKind::DecodeBatched { width } => {
+                format!("{}_decode_batch{}_s{}", self.config.model, width, bucket)
+            }
             PlanKind::LmHead => format!("{}_lmhead_s{}", self.config.model, bucket),
+            PlanKind::LmHeadBatched { width } => {
+                format!("{}_lmhead_batch{}_s{}", self.config.model, width, bucket)
+            }
         };
         let h = PlanHandle::new(&tag, graph, plans, params);
         let out_shape = h.graph().node(h.graph().outputs[0]).shape.clone();
@@ -704,8 +782,8 @@ impl ServeEngine {
             model: self.config.model.clone(),
             mode: match kind {
                 PlanKind::Prefill | PlanKind::PrefillKv if depth > 0 => "native-chunked",
-                PlanKind::Decode { .. } => "native-decode",
-                PlanKind::LmHead => "native-lmhead",
+                PlanKind::Decode { .. } | PlanKind::DecodeBatched { .. } => "native-decode",
+                PlanKind::LmHead | PlanKind::LmHeadBatched { .. } => "native-lmhead",
                 _ => "native-dense",
             }
             .into(),
@@ -903,47 +981,114 @@ impl ServeEngine {
             // against the pool's free list, conservative about sharing.
             let mut free_blocks_wave = mgr.as_ref().map(|m| m.free_blocks()).unwrap_or(0);
             let mut wave: Vec<WaveEntry> = Vec::new();
+            // Admitted *requests* this wave (a batched decode entry holds
+            // several) — what `max_batch` bounds. Looped mode admits one
+            // request per entry, so `slots == wave.len()` there and this
+            // refactor changes nothing.
+            let mut slots = 0usize;
 
             // ---- decode admission: one step per active generation, in
             // admission order (decode-first keeps caches short-lived,
             // freeing resident bytes fastest).
-            for gi in 0..gens.len() {
-                if wave.len() >= max_batch {
-                    break;
-                }
-                let (bucket, past) = (gens[gi].bucket, gens[gi].past);
-                let h = self.handle(PlanKind::Decode { past }, bucket, 0)?;
-                let lm = self.handle(PlanKind::LmHead, bucket, 0)?;
-                // the step price covers token selection too: the LM head
-                // runs inside the same wave entry
-                let mut cost = Self::admission_cost(self.config.use_arena, &h)
-                    + Self::admission_cost(self.config.use_arena, &lm);
-                // Grow-as-you-go: a step that crosses a block boundary
-                // (or must copy-on-write a shared tail block) buys its
-                // block now, at block — not bucket — granularity.
-                let mut need_blocks = 0usize;
-                if let (Some(m), GenCache::Paged(tb)) = (&mgr, &gens[gi].cache) {
-                    debug_assert_eq!(
-                        h.quote().persistent_bytes,
-                        m.blocks_for(past) * m.block_bytes(),
-                        "decode graph must price resident state at block granularity"
-                    );
-                    if m.append_needs_block(tb) {
-                        need_blocks = 1;
+            if self.config.batch_decode {
+                // Batched decode (DESIGN.md §16): group active
+                // generations by sequence bucket, in `gens` order, and
+                // admit each group as ONE fused wave entry. The plan is
+                // keyed by (bucket, width-rounded-to-power-of-two), so
+                // warm waves reuse compiled plans and arenas; a group
+                // that does not fit sheds members from the end until it
+                // does (the survivors decode this wave; the rest wait —
+                // token streams are schedule-independent, so admission
+                // order never shows in the bits).
+                let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+                for gi in 0..gens.len() {
+                    let b = gens[gi].bucket;
+                    match groups.iter_mut().find(|(gb, _)| *gb == b) {
+                        Some((_, v)) => v.push(gi),
+                        None => groups.push((b, vec![gi])),
                     }
-                    cost += need_blocks * m.block_bytes();
                 }
-                if cost <= remaining && need_blocks <= free_blocks_wave {
-                    remaining -= cost;
-                    free_blocks_wave -= need_blocks;
-                    wave.push(WaveEntry::Decode { gi, h, lm });
+                for (bucket, mut gis) in groups {
+                    if slots >= max_batch {
+                        break;
+                    }
+                    gis.truncate(max_batch - slots);
+                    while !gis.is_empty() {
+                        let width = gis.len().next_power_of_two();
+                        let h = self.handle(PlanKind::DecodeBatched { width }, bucket, 0)?;
+                        let lm = self.handle(PlanKind::LmHeadBatched { width }, bucket, 0)?;
+                        // One batched step is priced exactly like the
+                        // looped entries it replaces: the plan's exact
+                        // planned peak (or quote) + the head, plus every
+                        // member's block growth. (The looped path's
+                        // per-`past` persistent-bytes identity does not
+                        // apply here — the batched graph binds padded
+                        // full-bucket slot counts so one plan serves any
+                        // `past` mix; its persistent inputs are excluded
+                        // from admission_cost either way.)
+                        let mut cost = Self::admission_cost(self.config.use_arena, &h)
+                            + Self::admission_cost(self.config.use_arena, &lm);
+                        let mut need_blocks = 0usize;
+                        if let Some(m) = &mgr {
+                            for &gi in &gis {
+                                if let GenCache::Paged(tb) = &gens[gi].cache {
+                                    if m.append_needs_block(tb) {
+                                        need_blocks += 1;
+                                    }
+                                }
+                            }
+                            cost += need_blocks * m.block_bytes();
+                        }
+                        if cost <= remaining && need_blocks <= free_blocks_wave {
+                            remaining -= cost;
+                            free_blocks_wave -= need_blocks;
+                            slots += gis.len();
+                            wave.push(WaveEntry::DecodeBatched { gis, h, lm, width });
+                            break;
+                        }
+                        gis.pop();
+                    }
+                }
+            } else {
+                for gi in 0..gens.len() {
+                    if slots >= max_batch {
+                        break;
+                    }
+                    let (bucket, past) = (gens[gi].bucket, gens[gi].past);
+                    let h = self.handle(PlanKind::Decode { past }, bucket, 0)?;
+                    let lm = self.handle(PlanKind::LmHead, bucket, 0)?;
+                    // the step price covers token selection too: the LM head
+                    // runs inside the same wave entry
+                    let mut cost = Self::admission_cost(self.config.use_arena, &h)
+                        + Self::admission_cost(self.config.use_arena, &lm);
+                    // Grow-as-you-go: a step that crosses a block boundary
+                    // (or must copy-on-write a shared tail block) buys its
+                    // block now, at block — not bucket — granularity.
+                    let mut need_blocks = 0usize;
+                    if let (Some(m), GenCache::Paged(tb)) = (&mgr, &gens[gi].cache) {
+                        debug_assert_eq!(
+                            h.quote().persistent_bytes,
+                            m.blocks_for(past) * m.block_bytes(),
+                            "decode graph must price resident state at block granularity"
+                        );
+                        if m.append_needs_block(tb) {
+                            need_blocks = 1;
+                        }
+                        cost += need_blocks * m.block_bytes();
+                    }
+                    if cost <= remaining && need_blocks <= free_blocks_wave {
+                        remaining -= cost;
+                        free_blocks_wave -= need_blocks;
+                        slots += 1;
+                        wave.push(WaveEntry::Decode { gi, h, lm });
+                    }
                 }
             }
 
             // ---- prefill admission: pack the rest of the wave
             let mut retry: Vec<Pending> = Vec::new();
             let mut scan = 0usize;
-            while scan < queue.len() && wave.len() < max_batch {
+            while scan < queue.len() && slots < max_batch {
                 if requests[queue[scan].idx].arrival_tick > clock {
                     break; // queue is arrival-sorted: nothing further has arrived
                 }
@@ -1106,6 +1251,7 @@ impl ServeEngine {
                     } else {
                         Vec::new()
                     };
+                    slots += 1;
                     wave.push(WaveEntry::Prefill { p, bucket, h, lm, ptoks, resumed });
                     continue;
                 }
@@ -1200,14 +1346,77 @@ impl ServeEngine {
             let share = remaining / wave.len();
             let use_arena = self.config.use_arena;
             let tick_us = self.config.tick_us;
+            let block_tokens = self.config.block_tokens;
             let entries = wave;
-            // Request id per entry, for attributing fault-touched flags
-            // after the entries are consumed.
-            let entry_ids: Vec<usize> = entries
+            // Decode dispatch accounting (DESIGN.md §16): batched mode
+            // issues one model dispatch per bucket group per wave —
+            // independent of wave width — where looped mode issues one
+            // per request. The bench sweep pins this scaling.
+            let decode_entries = entries
+                .iter()
+                .filter(|e| {
+                    matches!(e, WaveEntry::Decode { .. } | WaveEntry::DecodeBatched { .. })
+                })
+                .count();
+            if decode_entries > 0 {
+                recorder.decode_waves += 1;
+                recorder.decode_dispatches += decode_entries;
+                recorder.batched_decode_groups += entries
+                    .iter()
+                    .filter(|e| matches!(e, WaveEntry::DecodeBatched { .. }))
+                    .count();
+            }
+            // Per-bucket dims + shared zero-pad tensor for batched
+            // entries, resolved before the parallel section. The pad is
+            // engine-owned scratch like the params — untracked — so
+            // inert padding rows never inflate the measured peak: one
+            // cache-shaped zero tensor (contiguous) or one zero block
+            // (paged), cloned into every unbound slot.
+            let mut batch_dims: HashMap<usize, (usize, usize, Tensor)> = HashMap::new();
+            for e in &entries {
+                if let WaveEntry::DecodeBatched { gis, .. } = e {
+                    let bucket = gens[gis[0]].bucket;
+                    if let std::collections::hash_map::Entry::Vacant(slot) =
+                        batch_dims.entry(bucket)
+                    {
+                        let Some(cfg) = gpt_cfg(&self.config.model, bucket) else {
+                            return Err(EngineError::NonGptGeneration.into());
+                        };
+                        let (nh, dh) = (cfg.heads, cfg.head_dim());
+                        let (maxblk, pad) = if block_tokens > 0 {
+                            (
+                                models::batched_block_slots(bucket, block_tokens),
+                                Tensor::from_f32(
+                                    vec![0.0; nh * block_tokens * dh],
+                                    &[nh, block_tokens, dh],
+                                    None,
+                                ),
+                            )
+                        } else {
+                            (
+                                0,
+                                Tensor::from_f32(
+                                    vec![0.0; nh * bucket * dh],
+                                    &[nh, bucket, dh],
+                                    None,
+                                ),
+                            )
+                        };
+                        slot.insert((cfg.layers, maxblk, pad));
+                    }
+                }
+            }
+            // Request ids per entry (a batched decode entry carries all
+            // its members), for attributing fault-touched flags after
+            // the entries are consumed.
+            let entry_ids: Vec<Vec<usize>> = entries
                 .iter()
                 .map(|e| match e {
-                    WaveEntry::Prefill { p, .. } => requests[p.idx].id,
-                    WaveEntry::Decode { gi, .. } => requests[gens[*gi].idx].id,
+                    WaveEntry::Prefill { p, .. } => vec![requests[p.idx].id],
+                    WaveEntry::Decode { gi, .. } => vec![requests[gens[*gi].idx].id],
+                    WaveEntry::DecodeBatched { gis, .. } => {
+                        gis.iter().map(|&gi| requests[gens[gi].idx].id).collect()
+                    }
                 })
                 .collect();
             // One fault scope per entry. The key mixes request identity,
@@ -1232,6 +1441,21 @@ impl ServeEngine {
                                     ^ ((g.past as u64) << 8)
                                     ^ ((g.retries as u64) << 4)
                                     ^ 1
+                            }
+                            WaveEntry::DecodeBatched { gis, .. } => {
+                                // fold every member's identity in, so any
+                                // membership change draws fresh dice while
+                                // a retried identical group re-rolls via
+                                // the members' bumped retry ordinals
+                                let mut key = 3u64;
+                                for &gi in gis {
+                                    let g = &gens[gi];
+                                    key ^= ((requests[g.idx].id as u64) << 32)
+                                        ^ ((g.past as u64) << 8)
+                                        ^ ((g.retries as u64) << 4);
+                                    key = key.rotate_left(7);
+                                }
+                                key
                             }
                         };
                         Some(FaultScope::new(plan.clone(), key))
@@ -1354,6 +1578,108 @@ impl ServeEngine {
                                     })
                                 })
                             }
+                            WaveEntry::DecodeBatched { gis, h, lm, width } => {
+                                let w = *width;
+                                let bucket = gens_ro[gis[0]].bucket;
+                                let (layers, maxblk, pad) = batch_dims
+                                    .get(&bucket)
+                                    .cloned()
+                                    .expect("batched entry dims resolved before dispatch");
+                                pool::with_threads(per_entry_threads, || {
+                                    let started = Instant::now();
+                                    let step_opts = ExecOptions {
+                                        budget_bytes: None,
+                                        use_arena,
+                                        faults: fscope.clone(),
+                                    };
+                                    let lm_opts = ExecOptions {
+                                        budget_bytes: None,
+                                        use_arena,
+                                        faults: fscope.as_ref().map(|f| f.with_salt(1)),
+                                    };
+                                    // Stacked token/position rows; rows
+                                    // beyond the members are inert padding
+                                    // (token 0 at position 0 over all-zero
+                                    // caches) so a short group reuses the
+                                    // width bucket's compiled plan.
+                                    let mut toks = vec![0i32; w];
+                                    let mut poss = vec![0i32; w];
+                                    for (j, &gi) in gis.iter().enumerate() {
+                                        let g = &gens_ro[gi];
+                                        toks[j] = g.next_input_token();
+                                        poss[j] = g.past as i32;
+                                    }
+                                    let mut ins: Vec<Tensor> = Vec::new();
+                                    ins.push(Tensor::from_i32(toks, &[w], Some(tracker.clone())));
+                                    ins.push(Tensor::from_i32(poss, &[w], Some(tracker.clone())));
+                                    // Cache bindings in the graph's input
+                                    // order: per row, per layer — K then V
+                                    // (contiguous), or all K block slots
+                                    // then all V block slots (paged), held
+                                    // blocks first and the shared zero
+                                    // block in every slot past them.
+                                    for j in 0..w {
+                                        if j >= gis.len() {
+                                            let per_layer =
+                                                if block_tokens > 0 { 2 * maxblk } else { 2 };
+                                            for _ in 0..layers * per_layer {
+                                                ins.push(pad.clone());
+                                            }
+                                            continue;
+                                        }
+                                        match &gens_ro[gis[j]].cache {
+                                            GenCache::Whole(c) => {
+                                                for l in 0..c.layers() {
+                                                    ins.push(c.k_full(l));
+                                                    ins.push(c.v_full(l));
+                                                }
+                                            }
+                                            GenCache::Paged(tb) => {
+                                                let Some(m) = mgr_ro.as_ref() else {
+                                                    return Err(EngineError::MissingManager);
+                                                };
+                                                let mut tmp: Vec<Tensor> = Vec::new();
+                                                m.bind_inputs(tb, &mut tmp);
+                                                let nblk = tmp.len() / (2 * layers);
+                                                let mut it = tmp.into_iter();
+                                                for _ in 0..layers {
+                                                    for _ in 0..nblk {
+                                                        ins.push(it.next().unwrap());
+                                                    }
+                                                    for _ in nblk..maxblk {
+                                                        ins.push(pad.clone());
+                                                    }
+                                                    for _ in 0..nblk {
+                                                        ins.push(it.next().unwrap());
+                                                    }
+                                                    for _ in nblk..maxblk {
+                                                        ins.push(pad.clone());
+                                                    }
+                                                }
+                                            }
+                                        }
+                                    }
+                                    let (outs, stats) = h.execute(&ins, &tracker, &step_opts);
+                                    drop(ins); // release cache views before the appends
+                                    let hid = outs[0].to_contiguous(Some(tracker.clone()));
+                                    let (louts, _) = lm.execute(&[hid], &tracker, &lm_opts);
+                                    let mut logits: Vec<Vec<f32>> =
+                                        Vec::with_capacity(gis.len());
+                                    let mut tokens: Vec<i32> = Vec::with_capacity(gis.len());
+                                    for j in 0..gis.len() {
+                                        let row = louts[0].slice_axis(0, j, 1).to_vec_f32();
+                                        tokens.push(greedy_argmax(&row));
+                                        logits.push(row);
+                                    }
+                                    Ok(WaveOut::StepBatch {
+                                        latency_us: started.elapsed().as_micros() as u64,
+                                        outs,
+                                        logits,
+                                        tokens,
+                                        arena_peak: stats.arena_peak_bytes,
+                                    })
+                                })
+                            }
                         }
                     }))
                     .unwrap_or_else(|payload| Err(EngineError::from_panic(payload)))
@@ -1379,7 +1705,7 @@ impl ServeEngine {
             for (wi, s) in scopes.iter().enumerate() {
                 if let Some(fs) = s {
                     if fs.touched() {
-                        touched.insert(entry_ids[wi]);
+                        touched.extend(entry_ids[wi].iter().copied());
                     }
                 }
             }
@@ -1431,6 +1757,19 @@ impl ServeEngine {
                         // handled with finished removals below (indices
                         // into `gens` must shift together)
                         failed.push(gi);
+                    }
+                    (WaveEntry::DecodeBatched { gis, .. }, Err(e)) => {
+                        recorder.record_error(e.kind());
+                        if !e.retryable() {
+                            return Err(e.into());
+                        }
+                        // A faulted/poisoned batched wave fails every
+                        // member's *attempt*; each retries independently
+                        // through the usual re-prefill resume machinery
+                        // (decode parity keeps the recomputed streams
+                        // bitwise identical). Requests outside this group
+                        // are untouched — panic isolation is per entry.
+                        failed.extend(gis);
                     }
                     (
                         WaveEntry::Prefill { p, bucket, h, lm: None, .. },
@@ -1631,6 +1970,75 @@ impl ServeEngine {
                         if g.tokens.len() >= requests[g.idx].max_new_tokens {
                             finished.push(gi);
                         }
+                    }
+                    (
+                        WaveEntry::DecodeBatched { gis, h, .. },
+                        Ok(WaveOut::StepBatch { latency_us, outs, mut logits, tokens, arena_peak }),
+                    ) => {
+                        if use_arena {
+                            if let Some(a) = &mut auditor {
+                                a.check_arena(h.tag(), arena_peak, h.memplan().planned_peak_bytes);
+                            }
+                        }
+                        // Scatter the stacked step back to its members:
+                        // column j of each K/V output is member j's new
+                        // cache row, logits/tokens row j its sampled step.
+                        let layers = (outs.len() - 1) / 2;
+                        for (j, &gi) in gis.iter().enumerate() {
+                            recorder.record_decode(latency_us);
+                            let g = &mut gens[gi];
+                            g.latency_us += latency_us;
+                            match &mut g.cache {
+                                GenCache::Whole(c) => {
+                                    for l in 0..c.layers() {
+                                        c.append(
+                                            l,
+                                            &outs[1 + 2 * l].slice_axis(1, j, 1),
+                                            &outs[2 + 2 * l].slice_axis(1, j, 1),
+                                        );
+                                    }
+                                    c.advance();
+                                }
+                                GenCache::Paged(tb) => {
+                                    let Some(m) = mgr.as_mut() else {
+                                        return Err(EngineError::MissingManager.into());
+                                    };
+                                    // append_step wants the looped step's
+                                    // output arity: slice this member's
+                                    // column out of each stacked output
+                                    let mut member_outs: Vec<Tensor> =
+                                        Vec::with_capacity(outs.len());
+                                    member_outs.push(outs[0].slice_axis(0, j, 1));
+                                    for l in 0..layers {
+                                        member_outs.push(outs[1 + 2 * l].slice_axis(1, j, 1));
+                                        member_outs.push(outs[2 + 2 * l].slice_axis(1, j, 1));
+                                    }
+                                    if let Err(e) = m.append_step(tb, &member_outs) {
+                                        // table unchanged (append is
+                                        // atomic): drop this member's step
+                                        // only — siblings already appended
+                                        // keep theirs
+                                        recorder.record_error(e.kind());
+                                        if !e.retryable() {
+                                            return Err(e.into());
+                                        }
+                                        if matches!(e, EngineError::Injected { .. }) {
+                                            touched.insert(requests[g.idx].id);
+                                        }
+                                        failed.push(gi);
+                                        continue;
+                                    }
+                                }
+                            }
+                            g.past += 1;
+                            g.tokens.push(tokens[j]);
+                            g.last_logits = std::mem::take(&mut logits[j]);
+                            g.decode_steps += 1;
+                            if g.tokens.len() >= requests[g.idx].max_new_tokens {
+                                finished.push(gi);
+                            }
+                        }
+                        drop(outs);
                     }
                     _ => return Err(EngineError::WaveMismatch.into()),
                 }

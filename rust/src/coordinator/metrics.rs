@@ -65,6 +65,15 @@ pub struct Recorder {
     /// Engine errors observed during the run, bucketed by
     /// [`EngineError::kind`] (includes recovered/retried ones).
     pub errors_by_kind: HashMap<String, usize>,
+    /// Graph dispatches spent on decode steps (one per looped per-request
+    /// step, one per fused batched wave group) — the batching lever's
+    /// direct measure: batched waves hold this constant in wave width
+    /// where the looped path grows linearly (DESIGN.md §16).
+    pub decode_dispatches: usize,
+    /// Waves that executed at least one decode entry.
+    pub decode_waves: usize,
+    /// Batched decode wave groups assembled (0 when `batch_decode` off).
+    pub batched_decode_groups: usize,
 }
 
 impl Recorder {
@@ -162,6 +171,9 @@ impl Recorder {
             audit_violations: self.audit_violations,
             audit_log: self.audit_log,
             errors_by_kind: self.errors_by_kind,
+            decode_dispatches: self.decode_dispatches,
+            decode_waves: self.decode_waves,
+            batched_decode_groups: self.batched_decode_groups,
             mean_us: if completed == 0 {
                 0
             } else {
@@ -239,6 +251,13 @@ pub struct MetricsReport {
     pub audit_log: Vec<String>,
     /// Engine errors bucketed by stable kind string.
     pub errors_by_kind: HashMap<String, usize>,
+    /// Graph dispatches spent on decode steps (looped: one per request
+    /// per step; batched: one per wave group per step).
+    pub decode_dispatches: usize,
+    /// Waves that executed at least one decode entry.
+    pub decode_waves: usize,
+    /// Batched decode wave groups assembled (0 with `batch_decode` off).
+    pub batched_decode_groups: usize,
     pub mean_us: u64,
     pub per_variant: HashMap<String, usize>,
 }
@@ -292,6 +311,15 @@ impl MetricsReport {
                 self.evicted,
                 self.shared_prefix_hits,
             ));
+            if self.decode_waves > 0 {
+                s.push_str(&format!(
+                    "\ndecode dispatches: {} over {} decode waves ({:.2}/wave, {} batched groups)",
+                    self.decode_dispatches,
+                    self.decode_waves,
+                    self.decode_dispatches as f64 / self.decode_waves as f64,
+                    self.batched_decode_groups,
+                ));
+            }
         }
         let total_errors: usize = self.errors_by_kind.values().sum();
         if self.shed + self.deadline_missed + self.retries + self.waves_audited + total_errors > 0

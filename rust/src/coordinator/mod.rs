@@ -29,8 +29,8 @@ pub mod request;
 pub use audit::{AuditReport, Auditor};
 pub use cache_manager::CacheManager;
 pub use engine::{
-    greedy_argmax, pad_prompt, EngineConfig, EngineError, EngineResponse, PlanKind, RejectReason,
-    ServeEngine,
+    batch_decode_default, greedy_argmax, pad_prompt, EngineConfig, EngineError, EngineResponse,
+    PlanKind, RejectReason, ServeEngine,
 };
 pub use metrics::{MetricsReport, Recorder};
 pub use request::{

@@ -569,6 +569,271 @@ pub fn gpt_decode_paged(cfg: &GptConfig, past: usize, block_tokens: usize) -> Gr
     b.finish(outputs)
 }
 
+/// Padded per-request block-slot count for the batched decode graph.
+/// The wave's plan is keyed by shape bucket, not by each member's `past`,
+/// so every member binds `ceil(seq / block_tokens)` block slots per layer
+/// — enough for any `past < seq` — and slots beyond the member's held
+/// blocks bind a shared zero block whose rows are all masked.
+pub fn batched_block_slots(seq: usize, block_tokens: usize) -> usize {
+    assert!(block_tokens >= 1, "block_tokens must be >= 1");
+    seq.div_ceil(block_tokens)
+}
+
+/// One autoregressive decode step for a whole **wave** of `n` requests,
+/// stacked into a single `[n, d]` graph (DESIGN.md §16). Where
+/// [`gpt_decode`] bakes `past` into the graph as a compile-time constant,
+/// the batched graph takes positions as *data* — `pos [n] i32` — so one
+/// compiled plan serves every mix of ragged cache lengths at a given wave
+/// width, and the engine's plan cache keys on `(width, bucket)` alone.
+///
+/// Inputs: `tokens [n] i32`, `pos [n] i32`, then per request `r` the
+/// persistent cache — with `block_tokens == 0`, per layer
+/// `r{r}.l{li}.k_cache` / `v_cache` `[h, seq, dh]` (contiguous); with
+/// `block_tokens > 0`, per layer [`batched_block_slots`] K blocks then as
+/// many V blocks `[h, block_tokens, dh]` in block-table order. Outputs:
+/// `[hidden [n,d], k_new_0 [h,n,dh], v_new_0, …]` — the engine scatters
+/// column `r` of each back to request `r`.
+///
+/// **Bitwise parity with the looped path** (pinned by the tests here and
+/// by `rust/tests/decode_batched_parity.rs`): every per-row op (gather,
+/// layer norm, matmul-by-output-row, elementwise) computes row `r`
+/// exactly as the `[1, d]` looped graph does, and attention is built per
+/// request from the same operands:
+///
+/// * the mask row `relu(j − past_r)·(−1e30)` is computed from
+///   `convert_f32(pos)` — exact for `past < 2²⁴` — through the same
+///   primitive pipeline as `gpt_decode`'s `key_mask`, so its values are
+///   bitwise identical;
+/// * the new K/V row is spliced at position `past_r` arithmetically
+///   rather than by concat: with `oh = relu(1 − |j − past_r|)` (an exact
+///   {0,1} one-hot — `|diff|` is an integer-valued f32), the operand is
+///   `cache·(1−oh) + new·oh`. At `j ≠ past_r` this is `cache·1 + new·0`
+///   and at `j = past_r` it is `cache·0 + new·1`; both reproduce the
+///   source bytes exactly because K/V rows are matmul outputs and matmul
+///   never produces `−0.0` (the accumulator starts at `+0.0` and
+///   round-to-nearest cancellation yields `+0.0`), so `x·1.0 = x` and
+///   `x + ±0.0 = x` hold bitwise, while `garbage·0.0` is a finite `±0.0`
+///   that the mask (dense) or the online-softmax skip rule (fused) makes
+///   unobservable — the same masked-tail contract as [`gpt_decode_paged`].
+pub fn gpt_decode_batched(cfg: &GptConfig, n: usize, block_tokens: usize) -> Graph {
+    assert_eq!(cfg.d_model % cfg.heads, 0);
+    let (s, d, h) = (cfg.seq, cfg.d_model, cfg.heads);
+    let dh = d / h;
+    let scale = 1.0 / (dh as f32).sqrt();
+    assert!(n >= 1, "batched decode needs at least one row");
+    let paged = block_tokens > 0;
+    let maxblk = if paged { batched_block_slots(s, block_tokens) } else { 0 };
+    let name =
+        if cfg.fused_attention { "gpt_decode_batched_fused" } else { "gpt_decode_batched" };
+    let suffix =
+        if paged { format!("_n{n}_blk{block_tokens}") } else { format!("_n{n}") };
+    let mut b = GraphBuilder::new(&format!("{name}{suffix}"));
+
+    // ---- inputs: tokens, positions, then per-request persistent caches
+    let tok = b.input_i32("tokens", &[n]);
+    let pos = b.input_i32("pos", &[n]);
+    let mut k_full: Vec<Vec<NodeId>> = Vec::new(); // [r][li], contiguous
+    let mut v_full: Vec<Vec<NodeId>> = Vec::new();
+    let mut k_blocks: Vec<Vec<Vec<NodeId>>> = Vec::new(); // [r][li][bi], paged
+    let mut v_blocks: Vec<Vec<Vec<NodeId>>> = Vec::new();
+    for r in 0..n {
+        if paged {
+            let mut kr = Vec::with_capacity(cfg.layers);
+            let mut vr = Vec::with_capacity(cfg.layers);
+            for li in 0..cfg.layers {
+                kr.push(
+                    (0..maxblk)
+                        .map(|bi| {
+                            b.input_persistent(
+                                &format!("r{r}.l{li}.k_blk{bi}"),
+                                &[h, block_tokens, dh],
+                            )
+                        })
+                        .collect::<Vec<_>>(),
+                );
+                vr.push(
+                    (0..maxblk)
+                        .map(|bi| {
+                            b.input_persistent(
+                                &format!("r{r}.l{li}.v_blk{bi}"),
+                                &[h, block_tokens, dh],
+                            )
+                        })
+                        .collect::<Vec<_>>(),
+                );
+            }
+            k_blocks.push(kr);
+            v_blocks.push(vr);
+        } else {
+            let mut kr = Vec::with_capacity(cfg.layers);
+            let mut vr = Vec::with_capacity(cfg.layers);
+            for li in 0..cfg.layers {
+                kr.push(b.input_persistent(&format!("r{r}.l{li}.k_cache"), &[h, s, dh]));
+                vr.push(b.input_persistent(&format!("r{r}.l{li}.v_cache"), &[h, s, dh]));
+            }
+            k_full.push(kr);
+            v_full.push(vr);
+        }
+    }
+
+    // ---- embedding (same param order as gpt / gpt_prefill_kv / gpt_decode)
+    let wte = b.param("wte", &[cfg.vocab, d]);
+    let wpe = b.param("wpe", &[s, d]);
+    let emb = b.gather(wte, tok); // [n, d]
+    let pemb = b.gather(wpe, pos); // [n, d] — row r = the bytes gpt_decode slices
+    let mut x = b.add(emb, pemb);
+
+    // Shared position grid: diff[r][j] = j − past_r, exact in f32.
+    let pos_f = b.convert_f32(pos); // [n]
+    let pos_col = b.reshape(pos_f, &[n, 1]);
+    let jj = b.iota(&[n, s], 1);
+    let diff = b.sub(jj, pos_col); // [n, s]
+
+    // Dense additive mask [n, s] — row r bitwise ≡ gpt_decode's key_mask.
+    let key_mask = (!cfg.fused_attention).then(|| {
+        let step = b.unary(UnaryOp::Relu, diff);
+        let mask = b.binary_scalar(BinaryOp::Mul, step, -CAUSAL_NEG);
+        b.label(mask, "decode.key_mask_rows");
+        mask
+    });
+
+    // One-hot insert row: oh[r][j] = relu(1 − |j − past_r|) ∈ {0, 1} exact.
+    let pdiff = b.unary(UnaryOp::Relu, diff);
+    let ndiff_pre = b.binary_scalar(BinaryOp::Mul, diff, -1.0);
+    let ndiff = b.unary(UnaryOp::Relu, ndiff_pre);
+    let absd = b.add(pdiff, ndiff);
+    let negabs = b.binary_scalar(BinaryOp::Mul, absd, -1.0);
+    let ohm = b.binary_scalar(BinaryOp::Add, negabs, 1.0);
+    let one_hot = b.unary(UnaryOp::Relu, ohm); // [n, s]
+    b.label(one_hot, "decode.batch_one_hot");
+
+    // Per-request views of the shared grids, built once.
+    let mut oh_cols = Vec::with_capacity(n); // [s, 1]: the insert selector
+    let mut inv_cols = Vec::with_capacity(n); // [s, 1]: 1 − one_hot
+    let mut mask_rows = Vec::with_capacity(n); // [1, s] (dense)
+    let mut qpos_rows = Vec::with_capacity(n); // [1] (fused)
+    for r in 0..n {
+        let row = b.slice(one_hot, 0, r, 1); // [1, s]
+        let col = b.reshape(row, &[s, 1]);
+        let neg = b.binary_scalar(BinaryOp::Mul, col, -1.0);
+        let inv = b.binary_scalar(BinaryOp::Add, neg, 1.0);
+        oh_cols.push(col);
+        inv_cols.push(inv);
+        if let Some(m) = key_mask {
+            mask_rows.push(b.slice(m, 0, r, 1));
+        }
+        if cfg.fused_attention {
+            qpos_rows.push(b.slice(pos_f, 0, r, 1));
+        }
+    }
+
+    let mut outputs_kv: Vec<NodeId> = Vec::with_capacity(2 * cfg.layers);
+    for li in 0..cfg.layers {
+        let g1 = b.param(&format!("l{li}.ln1.g"), &[d]);
+        let b1 = b.param(&format!("l{li}.ln1.b"), &[d]);
+        let xn = b.layer_norm(x, g1, b1, 1e-5);
+
+        let wq = b.param(&format!("l{li}.wq"), &[d, d]);
+        let wk = b.param(&format!("l{li}.wk"), &[d, d]);
+        let wv = b.param(&format!("l{li}.wv"), &[d, d]);
+        let wo = b.param(&format!("l{li}.wo"), &[d, d]);
+
+        let q = b.matmul(xn, wq); // [n, d]
+        let k = b.matmul(xn, wk);
+        let v = b.matmul(xn, wv);
+        let qh = b.reshape(q, &[n, h, dh]);
+        let qh = b.transpose(qh, &[1, 0, 2]); // [h, n, dh]
+        let kh_new = b.reshape(k, &[n, h, dh]);
+        let kh_new = b.transpose(kh_new, &[1, 0, 2]);
+        let vh_new = b.reshape(v, &[n, h, dh]);
+        let vh_new = b.transpose(vh_new, &[1, 0, 2]);
+
+        // Attention stays per request: each row has its own cache, its
+        // own insert position, and its own mask row.
+        let mut ctx_rows = Vec::with_capacity(n);
+        for r in 0..n {
+            let qh_r = b.slice(qh, 1, r, 1); // [h, 1, dh]
+            let kh_r = b.slice(kh_new, 1, r, 1);
+            let vh_r = b.slice(vh_new, 1, r, 1);
+
+            // Full-capacity cache view [h, s, dh].
+            let (ck, cv) = if paged {
+                let cat_k = b.concat(&k_blocks[r][li], 1);
+                let cat_v = b.concat(&v_blocks[r][li], 1);
+                if maxblk * block_tokens == s {
+                    (cat_k, cat_v)
+                } else {
+                    (b.slice(cat_k, 1, 0, s), b.slice(cat_v, 1, 0, s))
+                }
+            } else {
+                (k_full[r][li], v_full[r][li])
+            };
+
+            // Arithmetic splice of the new row at past_r (see doc above).
+            let kh_b = b.broadcast(kh_r, &[h, s, dh]);
+            let vh_b = b.broadcast(vh_r, &[h, s, dh]);
+            let k_keep = b.mul(ck, inv_cols[r]);
+            let k_ins = b.mul(kh_b, oh_cols[r]);
+            let k_attn = b.add(k_keep, k_ins); // [h, s, dh]
+            let v_keep = b.mul(cv, inv_cols[r]);
+            let v_ins = b.mul(vh_b, oh_cols[r]);
+            let v_attn = b.add(v_keep, v_ins);
+
+            let ctx_r = if cfg.fused_attention {
+                b.fused_attention_pos(qh_r, k_attn, v_attn, qpos_rows[r], scale)
+            } else {
+                let kt = b.transpose(k_attn, &[0, 2, 1]); // [h, dh, s]
+                let scores = b.matmul(qh_r, kt); // [h, 1, s]
+                let scaled = b.binary_scalar(BinaryOp::Mul, scores, scale);
+                let masked = b.add(scaled, mask_rows[r]);
+                let probs = b.softmax(masked, 2);
+                b.matmul(probs, v_attn) // [h, 1, dh]
+            };
+            ctx_rows.push(ctx_r);
+        }
+        let ctx = if n == 1 { ctx_rows[0] } else { b.concat(&ctx_rows, 1) }; // [h, n, dh]
+        let ctx_t = b.transpose(ctx, &[1, 0, 2]); // [n, h, dh]
+        let ctx_t = b.reshape(ctx_t, &[n, d]);
+        let attn_out = b.matmul(ctx_t, wo);
+        let res1 = b.add(attn_out, x);
+
+        let g2 = b.param(&format!("l{li}.ln2.g"), &[d]);
+        let b2 = b.param(&format!("l{li}.ln2.b"), &[d]);
+        let rn = b.layer_norm(res1, g2, b2, 1e-5);
+        let w1 = b.param(&format!("l{li}.ff.w1"), &[d, cfg.ff_mult * d]);
+        let bb1 = b.param(&format!("l{li}.ff.b1"), &[cfg.ff_mult * d]);
+        let w2 = b.param(&format!("l{li}.ff.w2"), &[cfg.ff_mult * d, d]);
+        let bb2 = b.param(&format!("l{li}.ff.b2"), &[d]);
+        let hmid = b.linear(rn, w1, bb1);
+        let act = b.unary(UnaryOp::Gelu, hmid);
+        let ff = b.linear(act, w2, bb2);
+        x = b.add(ff, res1);
+
+        outputs_kv.push(kh_new);
+        outputs_kv.push(vh_new);
+    }
+
+    let gf = b.param("lnf.g", &[d]);
+    let bf = b.param("lnf.b", &[d]);
+    let out = b.layer_norm(x, gf, bf, 1e-5);
+    let mut outputs = vec![out];
+    outputs.extend(outputs_kv);
+    b.finish(outputs)
+}
+
+/// Batched LM head: hidden rows `[n, d]` → logits `[n, vocab]` over the
+/// same pre-transposed `wteᵀ` parameter as [`gpt_lm_head`] (see
+/// [`lm_head_params`]). Matmul computes each output row independently, so
+/// row `r` is bitwise identical to the looped `[1, d]` head on that row.
+pub fn gpt_lm_head_batched(cfg: &GptConfig, n: usize) -> Graph {
+    assert!(n >= 1, "batched lm head needs at least one row");
+    let mut b = GraphBuilder::new(&format!("gpt_lm_head_batch{n}"));
+    let hidden = b.input("hidden", &[n, cfg.d_model]);
+    let wte_t = b.param("wte_t", &[cfg.d_model, cfg.vocab]);
+    let logits = b.matmul(hidden, wte_t); // [n, vocab]
+    b.finish(vec![logits])
+}
+
 /// Tiny language-model head: hidden row `[1, d]` → logits `[1, vocab]`
 /// (`hidden @ wteᵀ`, weight-tied). Its single parameter is the
 /// **pre-transposed** embedding `wteᵀ [d, vocab]` — callers bind
@@ -843,6 +1108,205 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// Batched decode must be a bitwise drop-in for the looped path: for
+    /// every request in a mixed-`past` wave, row `r` of the batched
+    /// hidden/logits/K/V outputs must equal the single-request
+    /// `gpt_decode` outputs bit for bit — dense and fused, contiguous and
+    /// paged, with and without zero-padded width and block slots.
+    #[test]
+    fn batched_decode_matches_looped_decode_bitwise() {
+        let base = GptConfig {
+            seq: 32,
+            d_model: 32,
+            heads: 4,
+            layers: 2,
+            vocab: 64,
+            ..Default::default()
+        };
+        let (h, dh, s) = (base.heads, base.head_dim(), base.seq);
+        let pasts = [3usize, 17, 8]; // ragged, deliberately unsorted
+        let toks = [17i32, 5, 42];
+        let n = pasts.len();
+        for fused in [false, true] {
+            let cfg = GptConfig { fused_attention: fused, ..base.clone() };
+            // Per-request caches; rows >= past play the garbage tail.
+            let caches: Vec<Vec<(crate::tensor::Tensor, crate::tensor::Tensor)>> = (0..n)
+                .map(|r| {
+                    (0..cfg.layers)
+                        .map(|l| {
+                            (
+                                crate::tensor::Tensor::rand(
+                                    &[h, s, dh],
+                                    1.0,
+                                    1000 + (10 * r + l) as u64,
+                                    None,
+                                ),
+                                crate::tensor::Tensor::rand(
+                                    &[h, s, dh],
+                                    1.0,
+                                    2000 + (10 * r + l) as u64,
+                                    None,
+                                ),
+                            )
+                        })
+                        .collect()
+                })
+                .collect();
+
+            // Looped references, one graph per (request, past).
+            let refs: Vec<Vec<crate::tensor::Tensor>> = (0..n)
+                .map(|r| {
+                    let gd = gpt_decode(&cfg, pasts[r]);
+                    let pd = random_params(&gd, 5);
+                    let mut ins = vec![crate::tensor::Tensor::from_i32(
+                        vec![toks[r]],
+                        &[1],
+                        None,
+                    )];
+                    for (k, v) in &caches[r] {
+                        ins.push(k.clone());
+                        ins.push(v.clone());
+                    }
+                    let t = MemoryTracker::new();
+                    execute(&gd, &ins, &pd, &t).0
+                })
+                .collect();
+
+            let bits = |t: &crate::tensor::Tensor| -> Vec<u32> {
+                t.to_vec_f32().iter().map(|x| x.to_bits()).collect()
+            };
+
+            // width: exact (3) and padded to the engine's bucket (4) with
+            // an inert pad row (token 0, pos 0, zero caches).
+            for width in [n, 4usize] {
+                for &bt in &[0usize, 8, 16] {
+                    let gb = gpt_decode_batched(&cfg, width, bt);
+                    assert!(gb.validate().is_ok(), "{:?}", gb.validate());
+                    let gd0 = gpt_decode(&cfg, 1);
+                    assert_eq!(gb.params.len(), gd0.params.len(), "shared param layout");
+                    let maxblk = if bt > 0 { batched_block_slots(s, bt) } else { 0 };
+                    if bt == 0 {
+                        assert_eq!(gb.persistent_bytes(), width * cfg.kv_cache_bytes());
+                    } else {
+                        assert_eq!(
+                            gb.persistent_bytes(),
+                            width * 2 * cfg.layers * maxblk * h * bt * dh * 4,
+                            "padded block slots priced at block granularity"
+                        );
+                    }
+                    let pb = random_params(&gb, 5);
+
+                    let mut tokens = toks.to_vec();
+                    let mut poss: Vec<i32> = pasts.iter().map(|&p| p as i32).collect();
+                    tokens.resize(width, 0);
+                    poss.resize(width, 0);
+                    let mut ins = vec![
+                        crate::tensor::Tensor::from_i32(tokens, &[width], None),
+                        crate::tensor::Tensor::from_i32(poss, &[width], None),
+                    ];
+                    let zero_cache = crate::tensor::Tensor::from_f32(
+                        vec![0.0; h * s * dh],
+                        &[h, s, dh],
+                        None,
+                    );
+                    let zero_blk = (bt > 0).then(|| {
+                        crate::tensor::Tensor::from_f32(
+                            vec![0.0; h * bt * dh],
+                            &[h, bt, dh],
+                            None,
+                        )
+                    });
+                    for r in 0..width {
+                        for l in 0..cfg.layers {
+                            let (k, v) = if r < n {
+                                let (k, v) = &caches[r][l];
+                                (k.clone(), v.clone())
+                            } else {
+                                (zero_cache.clone(), zero_cache.clone())
+                            };
+                            if bt == 0 {
+                                ins.push(k);
+                                ins.push(v);
+                            } else {
+                                // engine layout: held blocks, then shared
+                                // zero blocks in the padded slots
+                                let held =
+                                    if r < n { pasts[r].div_ceil(bt) } else { 0 };
+                                for src in [&k, &v] {
+                                    for bi in 0..maxblk {
+                                        if bi < held {
+                                            ins.push(
+                                                src.slice_axis(1, bi * bt, bt)
+                                                    .to_contiguous(None),
+                                            );
+                                        } else {
+                                            ins.push(zero_blk.clone().unwrap());
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+
+                    let t = MemoryTracker::new();
+                    let (ob, _) = execute(&gb, &ins, &pb, &t);
+                    assert_eq!(ob.len(), 1 + 2 * cfg.layers);
+                    for r in 0..n {
+                        let hid = ob[0].slice_axis(0, r, 1);
+                        assert_eq!(
+                            bits(&hid.to_contiguous(None)),
+                            bits(&refs[r][0]),
+                            "hidden row {r} diverged (fused={fused} width={width} bt={bt})"
+                        );
+                        for oi in 1..ob.len() {
+                            let col = ob[oi].slice_axis(1, r, 1);
+                            assert_eq!(
+                                bits(&col.to_contiguous(None)),
+                                bits(&refs[r][oi]),
+                                "kv output {oi} row {r} diverged \
+                                 (fused={fused} width={width} bt={bt})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The batched LM head's rows must match the looped head bit for bit,
+    /// over the identical pre-transposed parameter.
+    #[test]
+    fn batched_lm_head_matches_looped_bitwise() {
+        let cfg = GptConfig {
+            seq: 16,
+            d_model: 32,
+            heads: 4,
+            layers: 1,
+            vocab: 64,
+            ..Default::default()
+        };
+        let g0 = gpt(&cfg);
+        let full = random_params(&g0, 5);
+        let lp = lm_head_params(&full);
+        let lm1 = gpt_lm_head(&cfg);
+        let lmn = gpt_lm_head_batched(&cfg, 3);
+        assert_eq!(lm1.params.len(), lmn.params.len());
+        assert!(lmn.validate().is_ok());
+        let hidden = crate::tensor::Tensor::rand(&[3, cfg.d_model], 1.0, 77, None);
+        let t = MemoryTracker::new();
+        let (on, _) = execute(&lmn, &[hidden.clone()], &lp, &t);
+        assert_eq!(on[0].shape(), &[3, cfg.vocab]);
+        for r in 0..3 {
+            let row = hidden.slice_axis(0, r, 1).to_contiguous(None);
+            let t1 = MemoryTracker::new();
+            let (o1, _) = execute(&lm1, &[row], &lp, &t1);
+            let a: Vec<u32> =
+                on[0].slice_axis(0, r, 1).to_vec_f32().iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = o1[0].to_vec_f32().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(a, b, "lm head row {r} diverged");
         }
     }
 

@@ -354,6 +354,74 @@ pub fn paged_attention(
     Tensor::from_f32(out, &out_shape, tracker)
 }
 
+/// Multi-query paged decode attention: one query row per request, each
+/// attending its *own* paged KV cache at its *own* length. `q` is
+/// `[h, n, dh]` (the batched decode graph's head-split query stack);
+/// request `r` reads column `r` of `q`, the block table
+/// `k_tables[r]`/`v_tables[r]`, and attends key indices `j < lens[r]`.
+/// Writes `[h, n, dh]` — column `r` is request `r`'s context row.
+///
+/// Ragged lengths are handled by **position masking**, not by trimming:
+/// each request's table is gathered at full held capacity and streamed
+/// through the fused core with `q_pos = lens[r] − 1`, so tail rows ride
+/// the same exact online-softmax no-op rule as the causal prefill kernel.
+/// Because masked entries contribute exactly nothing to the running
+/// max/denominator/accumulator and the `KV_BLOCK` partition of the valid
+/// prefix is unchanged, each column is bitwise identical to the
+/// single-request [`paged_attention`] over the same table (pinned by the
+/// tests below).
+pub fn paged_attention_batched_into(
+    q: &Tensor,
+    k_tables: &[Vec<Tensor>],
+    v_tables: &[Vec<Tensor>],
+    lens: &[usize],
+    scale: f32,
+    out: &mut [f32],
+    tracker: Option<MemoryTracker>,
+) -> Vec<usize> {
+    assert_eq!(q.rank(), 3, "q must be [h, n, dh]");
+    let (h, n, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+    assert_eq!(k_tables.len(), n, "one K table per query row");
+    assert_eq!(v_tables.len(), n, "one V table per query row");
+    assert_eq!(lens.len(), n, "one length per query row");
+    assert_eq!(out.len(), h * n * dh, "paged_attention_batched length mismatch");
+    let mut buf = vec![0.0f32; h * dh];
+    for r in 0..n {
+        let len = lens[r];
+        assert!(len > 0, "request {r}: decode needs a non-empty cache");
+        let qr = q.slice_axis(1, r, 1).to_contiguous(tracker.clone()); // [h, 1, dh]
+        let bt = k_tables[r][0].shape()[1];
+        let cap = k_tables[r].len() * bt;
+        assert!(len <= cap, "request {r}: len {len} over table capacity {cap}");
+        let kc = gather_blocks(&k_tables[r], cap, tracker.clone());
+        let vc = gather_blocks(&v_tables[r], cap, tracker.clone());
+        let pos = Tensor::from_f32(vec![(len - 1) as f32], &[1], tracker.clone());
+        buf.fill(0.0);
+        fused_attention_core(&qr, &kc, &vc, Some(&pos), scale, &mut buf, tracker.clone());
+        for hi in 0..h {
+            out[hi * n * dh + r * dh..hi * n * dh + (r + 1) * dh]
+                .copy_from_slice(&buf[hi * dh..(hi + 1) * dh]);
+        }
+    }
+    vec![h, n, dh]
+}
+
+/// Allocating wrapper over [`paged_attention_batched_into`].
+pub fn paged_attention_batched(
+    q: &Tensor,
+    k_tables: &[Vec<Tensor>],
+    v_tables: &[Vec<Tensor>],
+    lens: &[usize],
+    scale: f32,
+    tracker: Option<MemoryTracker>,
+) -> Tensor {
+    let (h, n, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+    let mut out = vec![0.0f32; h * n * dh];
+    let shape =
+        paged_attention_batched_into(q, k_tables, v_tables, lens, scale, &mut out, tracker.clone());
+    Tensor::from_f32(out, &shape, tracker)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -559,6 +627,48 @@ mod tests {
         let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
         let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
         assert_eq!(ab, bb);
+    }
+
+    /// Each column of the multi-query paged kernel must be bitwise
+    /// identical to the single-request paged kernel over the same block
+    /// table — mixed lengths, mixed table sizes, tails crossing both
+    /// block_tokens and KV_BLOCK boundaries.
+    #[test]
+    fn paged_attention_batched_matches_per_request_bitwise() {
+        let (h, dh, bt) = (2usize, 8usize, 16usize);
+        let lens = [1usize, 21, 48, 33]; // ragged, unsorted
+        let n = lens.len();
+        let q = Tensor::rand(&[h, n, dh], 1.0, 81, None);
+        let k_tables: Vec<Vec<Tensor>> = (0..n)
+            .map(|r| {
+                let nblk = lens[r].div_ceil(bt);
+                (0..nblk)
+                    .map(|bi| Tensor::rand(&[h, bt, dh], 1.0, (90 + 10 * r + bi) as u64, None))
+                    .collect()
+            })
+            .collect();
+        let v_tables: Vec<Vec<Tensor>> = (0..n)
+            .map(|r| {
+                let nblk = lens[r].div_ceil(bt);
+                (0..nblk)
+                    .map(|bi| Tensor::rand(&[h, bt, dh], 1.0, (900 + 10 * r + bi) as u64, None))
+                    .collect()
+            })
+            .collect();
+        let got = paged_attention_batched(&q, &k_tables, &v_tables, &lens, 0.4, None);
+        assert_eq!(got.shape(), &[h, n, dh]);
+        for r in 0..n {
+            let qr = q.slice_axis(1, r, 1).to_contiguous(None);
+            let want = paged_attention(&qr, &k_tables[r], &v_tables[r], lens[r], 0.4, None);
+            let a: Vec<u32> = want.to_vec_f32().iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = got
+                .slice_axis(1, r, 1)
+                .to_vec_f32()
+                .iter()
+                .map(|x| x.to_bits())
+                .collect();
+            assert_eq!(a, b, "request {r} (len {}) diverged", lens[r]);
+        }
     }
 
     #[test]

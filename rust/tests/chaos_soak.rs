@@ -1,6 +1,7 @@
 //! Chaos soak (ISSUE 6 headline): random seeded fault schedules ×
-//! random generation workloads, on both cache backends. Under injection
-//! the engine must
+//! random generation workloads, on both cache backends and on both decode
+//! paths (looped and batched, DESIGN.md §16). Under injection the engine
+//! must
 //!
 //! * never panic out of `serve` (injected faults are caught at the wave
 //!   boundary and become typed, retryable errors);
@@ -43,13 +44,14 @@ fn base_seed() -> u64 {
         .unwrap_or(0xA07C_5EED)
 }
 
-fn engine(budget: usize, paged: bool, faults: Option<Arc<FaultPlan>>) -> ServeEngine {
+fn engine(budget: usize, paged: bool, batch: bool, faults: Option<Arc<FaultPlan>>) -> ServeEngine {
     ServeEngine::new(EngineConfig {
         model: "gpt".into(),
         budget_bytes: budget,
         max_batch: 4,
         buckets: vec![16],
         worker_threads: 0,
+        batch_decode: batch,
         block_tokens: if paged { 8 } else { 0 },
         audit: true,
         faults,
@@ -61,7 +63,7 @@ fn engine(budget: usize, paged: bool, faults: Option<Arc<FaultPlan>>) -> ServeEn
 /// here comes from injected faults, not from memory pressure (the
 /// eviction/deepening paths have their own tests).
 fn budget() -> usize {
-    let mut probe = engine(usize::MAX, false, None);
+    let mut probe = engine(usize::MAX, false, false, None);
     let (_, q) = probe.quote(16, 0).unwrap().expect("bucket quote");
     (q.peak_bytes + probe.kv_bytes(16)) * 4
 }
@@ -106,11 +108,17 @@ fn chaos_soak_never_panics_and_invariants_hold() {
         let plan_seed = xorshift(&mut state);
         let widx = trial % N_WORKLOADS;
         let paged = trial % 2 == 1;
+        // cross the batched decode path into the soak: half the trials run
+        // fused waves under the same fault schedules
+        let batch = (trial / 2) % 2 == 1;
         let wseed = base.wrapping_add(widx as u64 * 7919);
         let reqs = workload(wseed);
 
+        // The baseline is always the *looped* fault-free run: comparing
+        // batched trials against it folds the §16 bitwise parity contract
+        // into the soak.
         let baseline = baselines.entry((widx, paged)).or_insert_with(|| {
-            let (resp, rep) = engine(budget, paged, None)
+            let (resp, rep) = engine(budget, paged, false, None)
                 .serve(&reqs)
                 .expect("fault-free baseline must serve");
             assert_eq!(rep.audit_violations, 0, "baseline audit: {:?}", rep.audit_log);
@@ -124,10 +132,13 @@ fn chaos_soak_never_panics_and_invariants_hold() {
         }
         let plan = Arc::new(plan);
 
-        let served = engine(budget, paged, Some(plan.clone())).serve(&reqs);
+        let served = engine(budget, paged, batch, Some(plan.clone())).serve(&reqs);
         let (resp, report) = served.unwrap_or_else(|e| {
-            panic!("trial {trial} (paged={paged}): serve aborted under chaos: {e} — {}",
-                   plan.report())
+            panic!(
+                "trial {trial} (paged={paged} batch={batch}): serve aborted under chaos: \
+                 {e} — {}",
+                plan.report()
+            )
         });
 
         // every request terminal, exactly once
@@ -171,8 +182,8 @@ fn chaos_soak_never_panics_and_invariants_hold() {
                 assert_eq!(
                     &rkey(r),
                     base_key,
-                    "trial {trial}: untouched request {} diverged from fault-free run \
-                     (replay: AUTOCHUNK_CHAOS_SEED={base}, plan {})",
+                    "trial {trial} (batch={batch}): untouched request {} diverged from the \
+                     fault-free looped run (replay: AUTOCHUNK_CHAOS_SEED={base}, plan {})",
                     r.id,
                     plan.report()
                 );
@@ -182,7 +193,7 @@ fn chaos_soak_never_panics_and_invariants_hold() {
 
         total_injected += report.fault_injections;
         artifact.push(format!(
-            "trial={trial} paged={paged} workload={widx} {} | waves_audited={} \
+            "trial={trial} paged={paged} batch={batch} workload={widx} {} | waves_audited={} \
              violations={} shed={} retries={} deadline_missed={} touched={} compared={compared}",
             plan.report(),
             report.waves_audited,
@@ -209,24 +220,65 @@ fn chaos_soak_never_panics_and_invariants_hold() {
 fn chaos_run_replays_exactly_from_its_seed() {
     let budget = budget();
     let reqs = workload(17);
-    let run = || {
-        let plan = Arc::new(
-            FaultPlan::new(0xFA11_FA11)
-                .with_rate(FaultSite::Kernel, 120)
-                .with_rate(FaultSite::TrackerAlloc, 80)
-                .with_rate(FaultSite::BlockAlloc, 60)
-                .with_rate(FaultSite::Latency, 100),
+    for batch in [false, true] {
+        let run = || {
+            let plan = Arc::new(
+                FaultPlan::new(0xFA11_FA11)
+                    .with_rate(FaultSite::Kernel, 120)
+                    .with_rate(FaultSite::TrackerAlloc, 80)
+                    .with_rate(FaultSite::BlockAlloc, 60)
+                    .with_rate(FaultSite::Latency, 100),
+            );
+            let (resp, report) =
+                engine(budget, true, batch, Some(plan.clone())).serve(&reqs).unwrap();
+            let keys: Vec<(usize, RKey, Option<RejectReason>, bool)> =
+                resp.iter().map(|r| (r.id, rkey(r), r.reason, r.fault_touched)).collect();
+            (keys, report.fault_injections, plan.total_fired())
+        };
+        let (a, fa, pa) = run();
+        let (b, fb, pb) = run();
+        assert_eq!(
+            a, b,
+            "same seed must replay the same responses, fault metadata included (batch={batch})"
         );
-        let (resp, report) = engine(budget, true, Some(plan.clone())).serve(&reqs).unwrap();
-        let keys: Vec<(usize, RKey, Option<RejectReason>, bool)> =
-            resp.iter().map(|r| (r.id, rkey(r), r.reason, r.fault_touched)).collect();
-        (keys, report.fault_injections, plan.total_fired())
-    };
-    let (a, fa, pa) = run();
-    let (b, fb, pb) = run();
-    assert_eq!(a, b, "same seed must replay the same responses, fault metadata included");
-    assert_eq!(fa, fb, "fault counts must replay");
-    assert_eq!(pa, pb);
+        assert_eq!(fa, fb, "fault counts must replay (batch={batch})");
+        assert_eq!(pa, pb);
+    }
+}
+
+#[test]
+fn batch_decode_off_is_the_looped_path() {
+    // ISSUE 7 (flag-off leg): with `batch_decode: false` the engine must
+    // behave exactly as before this feature existed — no batched groups
+    // assembled, one dispatch per generation per wave, and outputs
+    // bitwise equal to the batched engine's (the parity contract from the
+    // other side). Fault-free, both backends.
+    let budget = budget();
+    let reqs = workload(31);
+    for paged in [false, true] {
+        let (r_off, rep_off) = engine(budget, paged, false, None).serve(&reqs).unwrap();
+        assert_eq!(
+            rep_off.batched_decode_groups, 0,
+            "looped engine assembled a batched group (paged={paged})"
+        );
+        assert!(rep_off.decode_waves > 0);
+        assert!(
+            rep_off.decode_dispatches > rep_off.decode_waves,
+            "looped decode should issue one dispatch per co-resident generation \
+             (paged={paged}): {rep_off:?}"
+        );
+        let (r_on, rep_on) = engine(budget, paged, true, None).serve(&reqs).unwrap();
+        assert!(rep_on.batched_decode_groups > 0, "batched engine never fused (paged={paged})");
+        for (a, b) in r_off.iter().zip(&r_on) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                rkey(a),
+                rkey(b),
+                "request {} diverged across the flag (paged={paged})",
+                a.id
+            );
+        }
+    }
 }
 
 #[test]
@@ -306,7 +358,7 @@ fn expired_deadline_sheds_mid_decode() {
         Request::new(1, 4, 5).generate(2).at_tick(0, 500),
     ];
     for paged in [false, true] {
-        let (resp, report) = engine(budget, paged, None).serve(&reqs).unwrap();
+        let (resp, report) = engine(budget, paged, false, None).serve(&reqs).unwrap();
         let r0 = resp.iter().find(|r| r.id == 0).unwrap();
         assert_eq!(r0.outcome, RequestOutcome::Rejected, "paged={paged}");
         assert_eq!(r0.reason, Some(RejectReason::DeadlineMissed));

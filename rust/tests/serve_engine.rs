@@ -411,10 +411,20 @@ fn generation_continuous_matches_serial_bitwise() {
 #[test]
 fn decode_plans_cached_across_requests() {
     // Two identical generations share every decode-step plan: the second
-    // request's decode handles must all be cache hits.
+    // request's decode handles must all be cache hits. Pinned to the
+    // looped path — the registry tags below are its per-`past` plans
+    // (the batched path's cache behavior has its own test further down).
     let buckets = vec![32usize];
     let budget = gen_budget(&buckets, 4);
-    let mut e = engine(budget, buckets, 1);
+    let mut e = ServeEngine::new(EngineConfig {
+        model: "gpt".into(),
+        budget_bytes: budget,
+        max_batch: 6,
+        buckets,
+        worker_threads: 1,
+        batch_decode: false,
+        ..EngineConfig::default()
+    });
     let r1 = vec![Request::new(0, 8, 3).generate(4)];
     let (_, rep1) = e.serve(&r1).unwrap();
     assert!(rep1.cache_misses > 0);
@@ -554,14 +564,29 @@ fn paged_admits_strictly_more_concurrent_generations() {
     let decode_cost = probe.decode_cost(bucket, 6).unwrap();
     // One full cache + one in-flight decode step fit; a second full
     // cache (another `kv`) cannot — but a handful of 1-block paged
-    // caches can (block = kv · bt / bucket = kv/4 here).
+    // caches can (block = kv · bt / bucket = kv/4 here). The bracket is
+    // calibrated against the looped decode plan, so the engines below
+    // pin batch_decode off (the batched path prices waves by its own
+    // stacked plan — see the batched admission test).
     let budget = gen_cost + decode_cost + kv + kv / 2;
+    let looped = |budget: usize, bt: usize| {
+        ServeEngine::new(EngineConfig {
+            model: "gpt".into(),
+            budget_bytes: budget,
+            max_batch: 6,
+            buckets: vec![bucket],
+            worker_threads: 2,
+            block_tokens: bt,
+            batch_decode: false,
+            ..EngineConfig::default()
+        })
+    };
 
-    let mut cont = paged_engine(budget, vec![bucket], 2, 0);
+    let mut cont = looped(budget, 0);
     let (r_cont, rep_cont) = cont.serve(&reqs).unwrap();
     assert!(r_cont.iter().all(|r| r.outcome == RequestOutcome::Completed), "{rep_cont:?}");
 
-    let mut paged = paged_engine(budget, vec![bucket], 2, bt);
+    let mut paged = looped(budget, bt);
     let (r_paged, rep_paged) = paged.serve(&reqs).unwrap();
     assert!(r_paged.iter().all(|r| r.outcome == RequestOutcome::Completed), "{rep_paged:?}");
 
@@ -680,6 +705,151 @@ fn paged_prefix_sharing_dedups_blocks() {
     }
     assert_eq!(report.final_blocks_in_use, 0);
     assert_eq!(report.measured_final_bytes, 0);
+}
+
+// ------------------------------------------------------------- batched
+// decode (DESIGN.md §16): one fused graph per wave, plan cache keyed by
+// wave shape bucket, exact arena peaks, admission soundness. The bitwise
+// stream contract itself is fuzzed in `decode_batched_parity.rs`.
+
+#[test]
+fn batched_decode_wave_reuses_one_plan_per_shape_bucket() {
+    let bucket = 32usize;
+    let budget = gen_budget(&[bucket], 8);
+    let mk = |batch: bool| {
+        ServeEngine::new(EngineConfig {
+            model: "gpt".into(),
+            budget_bytes: budget,
+            max_batch: 6,
+            buckets: vec![bucket],
+            worker_threads: 2,
+            batch_decode: batch,
+            ..EngineConfig::default()
+        })
+    };
+    let reqs: Vec<Request> =
+        (0..4).map(|i| Request::new(i, 8, 3).generate(5).at_tick(0, 500)).collect();
+    let mut e = mk(true);
+    let (resp, rep) = e.serve(&reqs).unwrap();
+    assert!(resp.iter().all(|r| r.outcome == RequestOutcome::Completed));
+    // one fused dispatch per decode wave, wave width notwithstanding —
+    // the looped path would issue four
+    assert!(rep.decode_waves >= 2, "workload never co-decoded: {rep:?}");
+    assert_eq!(rep.decode_dispatches, rep.decode_waves, "batched waves must fuse to one dispatch");
+    assert_eq!(rep.batched_decode_groups, rep.decode_waves);
+    // the wave-shape-bucketed plan compiled once and is in the catalog
+    assert!(e.registry().get("gpt_decode_batch4_s32").is_some());
+    assert!(e.registry().get("gpt_lmhead_batch4_s32").is_some());
+    // warm waves reuse the PlanHandle: a second serve — even at a
+    // *different* group size inside the same power-of-two shape bucket
+    // (3 rounds up to 4) — compiles nothing new
+    let reqs3: Vec<Request> =
+        (0..3).map(|i| Request::new(i, 8, 3).generate(5).at_tick(0, 500)).collect();
+    let (resp3, rep3) = e.serve(&reqs3).unwrap();
+    assert!(resp3.iter().all(|r| r.outcome == RequestOutcome::Completed));
+    assert_eq!(rep3.cache_misses, 0, "warm shape bucket recompiled");
+    assert!(rep3.cache_hits > 0);
+    // and the batched streams are the looped path's, bitwise
+    let (r_loop, rep_loop) = mk(false).serve(&reqs).unwrap();
+    assert!(rep_loop.decode_waves > 0);
+    assert_eq!(
+        rep_loop.batched_decode_groups, 0,
+        "looped engine must not assemble batched groups"
+    );
+    for (a, b) in resp.iter().zip(&r_loop) {
+        assert_eq!(response_key(a), response_key(b), "request {} diverged", a.id);
+    }
+}
+
+#[test]
+fn batched_wave_arena_high_water_equals_planned_peak() {
+    // ISSUE 7 acceptance (exact-peak leg): with arena serving and the
+    // auditor on, every batched decode wave's arena high-water must equal
+    // the memory planner's planned peak — the auditor records a violation
+    // on any inequality, so a silent overshoot (or an unused slab) fails
+    // here. Ragged prompts and mixed generation lengths shrink the group
+    // across waves, exercising several width buckets.
+    let bucket = 32usize;
+    let budget = gen_budget(&[bucket], 8);
+    let mut e = ServeEngine::new(EngineConfig {
+        model: "gpt".into(),
+        budget_bytes: budget,
+        max_batch: 6,
+        buckets: vec![bucket],
+        worker_threads: 2,
+        use_arena: true,
+        audit: true,
+        batch_decode: true,
+        ..EngineConfig::default()
+    });
+    let reqs: Vec<Request> = (0..4)
+        .map(|i| Request::new(i, 6 + i, i as i32).generate(3 + i % 2).at_tick(0, 500))
+        .collect();
+    let (resp, rep) = e.serve(&reqs).unwrap();
+    assert!(resp.iter().all(|r| r.outcome == RequestOutcome::Completed));
+    assert!(rep.batched_decode_groups > 0, "no batched wave ran");
+    assert!(rep.waves_audited > 0);
+    assert_eq!(
+        rep.audit_violations, 0,
+        "batched arena high-water must equal the planned peak: {:?}",
+        rep.audit_log
+    );
+    assert!(rep.measured_peak_bytes <= budget);
+    assert_eq!(rep.measured_final_bytes, 0);
+}
+
+#[test]
+fn batched_admission_sound_under_tight_budget() {
+    // ISSUE 7 acceptance (admission leg): a budget bracketed around two
+    // resident caches + one prefill + one width-2 batched step forces
+    // multi-round scheduling; the measured peak must stay under the
+    // budget and the re-scheduled streams must not change a bit
+    // (token streams are schedule-independent).
+    let bucket = 32usize;
+    let reqs: Vec<Request> =
+        (0..4).map(|i| Request::new(i, 8, 5).generate(4).at_tick(0, 500)).collect();
+    let mk = |budget: usize| {
+        ServeEngine::new(EngineConfig {
+            model: "gpt".into(),
+            budget_bytes: budget,
+            max_batch: 6,
+            buckets: vec![bucket],
+            worker_threads: 2,
+            batch_decode: true,
+            ..EngineConfig::default()
+        })
+    };
+    let (r_ref, _) = mk(gen_budget(&[bucket], 8)).serve(&reqs).unwrap();
+    assert!(r_ref.iter().all(|r| r.outcome == RequestOutcome::Completed));
+
+    let mut probe = mk(usize::MAX);
+    let kv = probe.kv_bytes(bucket);
+    let gen_cost = probe.gen_cost(bucket).unwrap();
+    let batched = probe.batched_decode_cost(bucket, 2).unwrap();
+    let budget = 2 * kv + gen_cost + batched;
+    let mut e = mk(budget);
+    let (r_tight, rep) = e.serve(&reqs).unwrap();
+    assert_eq!(r_tight.len(), reqs.len(), "every request must resolve");
+    assert!(
+        rep.measured_peak_bytes <= budget,
+        "batched admission overshot: {} > {budget}",
+        rep.measured_peak_bytes
+    );
+    assert!(
+        r_tight.iter().any(|r| r.outcome == RequestOutcome::Completed),
+        "bracketed budget must still serve: {rep:?}"
+    );
+    for (a, b) in r_tight.iter().zip(&r_ref) {
+        if a.outcome == RequestOutcome::Completed {
+            assert_eq!(a.tokens, b.tokens, "request {} stream diverged under pressure", a.id);
+            assert_eq!(
+                response_key(a).4,
+                response_key(b).4,
+                "request {} logits diverged under pressure",
+                a.id
+            );
+        }
+    }
 }
 
 #[test]
