@@ -1,0 +1,154 @@
+//! Serving SLO under open-loop Poisson load: chunked vs monolithic
+//! prefill (DESIGN.md §17).
+//!
+//! An open-loop Poisson arrival process (bursts and lulls, not a fixed
+//! drip) mixes long prefills into a stream of decoding generations. With
+//! monolithic prefill, a wave that carries a long prompt stalls every
+//! co-resident decode until the whole prefill finishes — decode
+//! inter-token latency (ITL) inherits the *largest prompt* in the trace.
+//! With a slice budget (`prefill_chunk_tokens`), each wave carries at
+//! most one slice per prefill, so the decode gap is bounded by one
+//! slice's compute instead.
+//!
+//! For each (arrival rate × cache backend), serve the same trace with
+//! chunking off and on and report TTFT and ITL p50/p99 (the engine's own
+//! SLO percentiles, `MetricsReport`), slice/interleave counters, and
+//! throughput. Token streams are bitwise identical across the axis
+//! (`rust/tests/serve_engine.rs::chunked_prefill_streams_bitwise_match_monolithic`);
+//! this bench measures the latency shape. Emits `BENCH_serve_slo.json`.
+//!
+//! `cargo bench --bench serve_slo` (`AUTOCHUNK_BENCH_TINY=1` shrinks the
+//! sweep to the CI smoke size).
+
+use autochunk::coordinator::{poisson_workload, EngineConfig, RequestOutcome, ServeEngine};
+use autochunk::util::bench::{mib, Table};
+use autochunk::util::pool;
+use std::time::Instant;
+
+fn tiny() -> bool {
+    std::env::var("AUTOCHUNK_BENCH_TINY").map(|v| v == "1").unwrap_or(false)
+}
+
+fn main() {
+    let threads = pool::num_threads();
+    let bucket = if tiny() { 64usize } else { 128 };
+    let chunk = 16usize;
+    let count = if tiny() { 10 } else { 24 };
+    // prompts span up to near-bucket length, so the monolithic runs see
+    // real head-of-line blocking; generations keep 3..6-token streams
+    // decoding while later arrivals prefill
+    let max_len = bucket - 8;
+    let rates: Vec<f64> = if tiny() { vec![1.0] } else { vec![0.5, 2.0] };
+    let bts: Vec<usize> = vec![0, 16];
+
+    let mut probe = ServeEngine::new(EngineConfig {
+        model: "gpt".into(),
+        budget_bytes: usize::MAX,
+        buckets: vec![bucket],
+        worker_threads: threads,
+        ..EngineConfig::default()
+    });
+    let kv = probe.kv_bytes(bucket);
+    // several co-resident generations plus one in-flight prefill
+    let budget = (probe.gen_cost(bucket).expect("gen cost") + kv) * 4;
+
+    println!(
+        "== Serving SLO under Poisson load (bucket {bucket}, chunk {chunk}, {count} requests, \
+         budget {:.2} MiB, width {threads}) ==\n",
+        mib(budget)
+    );
+    let mut table = Table::new(&[
+        "rate",
+        "cache",
+        "prefill",
+        "ttft p50",
+        "ttft p99",
+        "itl p50",
+        "itl p99",
+        "slices",
+        "interleaved",
+        "tok/s",
+    ]);
+    let mut rows: Vec<String> = Vec::new();
+    let mut verdicts: Vec<String> = Vec::new();
+
+    for &rate in &rates {
+        let reqs = poisson_workload(count, 8, max_len, 3, 6, 0x510_u64 + bucket as u64, rate);
+        for &bt in &bts {
+            let mut itl_p99 = [0u64; 2]; // [monolithic, chunked]
+            for (ci, &c) in [0usize, chunk].iter().enumerate() {
+                let mut engine = ServeEngine::new(EngineConfig {
+                    model: "gpt".into(),
+                    budget_bytes: budget,
+                    max_batch: 8,
+                    buckets: vec![bucket],
+                    worker_threads: threads,
+                    block_tokens: bt,
+                    prefill_chunk_tokens: c,
+                    ..EngineConfig::default()
+                });
+                let started = Instant::now();
+                let (responses, report) = engine.serve(&reqs).expect("serve");
+                let secs = started.elapsed().as_secs_f64().max(1e-9);
+                let completed = responses
+                    .iter()
+                    .filter(|r| r.outcome == RequestOutcome::Completed)
+                    .count();
+                itl_p99[ci] = report.itl_p99_us;
+                let cache = match bt {
+                    0 => "contig".to_string(),
+                    n => format!("paged{n}"),
+                };
+                let mode = if c == 0 { "monolithic" } else { "chunked" };
+                table.row(vec![
+                    format!("{rate:.2}"),
+                    cache.clone(),
+                    mode.to_string(),
+                    format!("{:.2}ms", report.ttft_p50_us as f64 / 1e3),
+                    format!("{:.2}ms", report.ttft_p99_us as f64 / 1e3),
+                    format!("{:.2}ms", report.itl_p50_us as f64 / 1e3),
+                    format!("{:.2}ms", report.itl_p99_us as f64 / 1e3),
+                    format!("{}", report.prefill_slices),
+                    format!("{}", report.interleaved_waves),
+                    format!("{:.1}", report.generated_tokens as f64 / secs),
+                ]);
+                rows.push(format!(
+                    "  {{\"mode\": \"serve_slo\", \"rate_per_tick\": {rate}, \
+                     \"bucket\": {bucket}, \"block_tokens\": {bt}, \"chunk_tokens\": {c}, \
+                     \"budget_mb\": {:.3}, \"ttft_p50_us\": {}, \"ttft_p99_us\": {}, \
+                     \"itl_p50_us\": {}, \"itl_p99_us\": {}, \"itl_samples\": {}, \
+                     \"prefill_slices\": {}, \"interleaved_waves\": {}, \
+                     \"completed\": {completed}, \"deadline_missed\": {}, \
+                     \"tokens_per_s\": {:.3}, \"threads\": {threads}}}",
+                    mib(budget),
+                    report.ttft_p50_us,
+                    report.ttft_p99_us,
+                    report.itl_p50_us,
+                    report.itl_p99_us,
+                    report.itl_samples,
+                    report.prefill_slices,
+                    report.interleaved_waves,
+                    report.deadline_missed,
+                    report.generated_tokens as f64 / secs,
+                ));
+            }
+            verdicts.push(format!(
+                "rate {rate:.2} bt {bt}: chunked ITL p99 {:.2}ms {} monolithic {:.2}ms",
+                itl_p99[1] as f64 / 1e3,
+                if itl_p99[1] <= itl_p99[0] { "<=" } else { "> (NOT bounded!)" },
+                itl_p99[0] as f64 / 1e3,
+            ));
+        }
+    }
+    print!("{}", table.render());
+    println!("\nbounded-ITL check (chunked decode gap must not exceed the monolithic one):");
+    for v in &verdicts {
+        println!("  {v}");
+    }
+
+    let body = format!("[\n{}\n]\n", rows.join(",\n"));
+    if let Err(e) = std::fs::write("BENCH_serve_slo.json", body) {
+        eprintln!("warning: could not write BENCH_serve_slo.json: {e}");
+    }
+    println!("wrote BENCH_serve_slo.json");
+}

@@ -269,6 +269,78 @@ impl CacheManager {
         Ok(())
     }
 
+    /// Append a chunked-prefill slice's `n` positions: `outs` is a slice
+    /// graph's output list (`outs[1 + 2l]`/`outs[2 + 2l]` are layer `l`'s
+    /// `[h, n, dh]` new K/V rows), written from `table.len()` on with the
+    /// write split at block boundaries. Grows the table
+    /// block-by-block (and copies-on-write a shared tail, though chunk-
+    /// seeded tables are private by construction — see below).
+    ///
+    /// An allocation failure (real exhaustion or an injected `BlockAlloc`
+    /// fault) releases every block this call pushed and leaves the
+    /// logical length unchanged, so a retried slice starts from exactly
+    /// the pre-call state; rows already written into a surviving tail
+    /// block sit beyond `len` and are unobservable by contract.
+    ///
+    /// Chunk-grown blocks are deliberately **not** registered for prefix
+    /// sharing: share keys cover whole seeded prompts (see
+    /// [`CacheManager::seed`]), and a mid-prefill block's content depends
+    /// on slice boundaries only through position — sound to share in
+    /// principle, left as future work.
+    pub fn append_slice(
+        &mut self,
+        table: &mut BlockTable,
+        outs: &[Tensor],
+        n: usize,
+    ) -> Result<(), EngineError> {
+        let bt = self.pool.block_tokens();
+        let layers = self.pool.layers();
+        assert_eq!(outs.len(), 1 + 2 * layers, "slice output arity");
+        assert!(n >= 1, "empty slice append");
+        assert_eq!(outs[1].shape()[1], n, "slice row count");
+        let pos0 = table.len();
+        let blocks0 = table.blocks().len();
+        let mut done = 0usize;
+        while done < n {
+            let pos = pos0 + done;
+            let bi = pos / bt;
+            let rows = (bt - pos % bt).min(n - done);
+            let prep: Result<(), EngineError> = if bi == table.blocks().len() {
+                self.alloc_block().map(|id| table.push_block(id))
+            } else {
+                assert_eq!(bi + 1, table.blocks().len(), "slice append not at table tail");
+                let cur = table.blocks()[bi];
+                if self.pool.ref_count(cur) > 1 {
+                    self.alloc_block().map(|id| {
+                        self.pool.copy_block(id, cur);
+                        let old = table.swap_block(bi, id);
+                        debug_assert_eq!(old, cur);
+                        self.release_block(cur);
+                    })
+                } else {
+                    Ok(())
+                }
+            };
+            if let Err(e) = prep {
+                while table.blocks().len() > blocks0 {
+                    let id = table.pop_block().expect("rollback pops pushed blocks");
+                    self.release_block(id);
+                }
+                debug_assert_eq!(table.len(), pos0);
+                return Err(e);
+            }
+            let id = table.blocks()[bi];
+            for l in 0..layers {
+                let k = outs[1 + 2 * l].slice_axis(1, done, rows);
+                let v = outs[2 + 2 * l].slice_axis(1, done, rows);
+                self.pool.write_rows(id, l, pos % bt, &k, &v);
+            }
+            done += rows;
+        }
+        table.set_len(pos0 + n);
+        Ok(())
+    }
+
     /// Bind a decode step's persistent inputs in graph order — per layer,
     /// all K blocks then all V blocks, table order — appending onto `ins`
     /// (which already holds the token).
@@ -420,6 +492,101 @@ mod tests {
         m.release_table(a);
         m.release_table(b);
         assert_eq!(m.blocks_in_use(), 0);
+    }
+
+    /// Bytes at every valid position of the table, in position order —
+    /// written rows only, so block padding never enters a comparison.
+    fn table_bits(m: &CacheManager, t: &BlockTable) -> Vec<u32> {
+        let bt = m.block_tokens();
+        let mut out = Vec::new();
+        for pos in 0..t.len() {
+            let id = t.blocks()[pos / bt];
+            for l in 0..m.layers() {
+                for ten in [m.pool().k(id, l), m.pool().v(id, l)] {
+                    out.extend(
+                        ten.slice_axis(1, pos % bt, 1)
+                            .to_vec_f32()
+                            .iter()
+                            .map(|x| x.to_bits()),
+                    );
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn append_slice_matches_stepwise_appends_bitwise() {
+        let (layers, h, bt, dh) = (2usize, 2usize, 4usize, 3usize);
+        let tokens = vec![5, 6, 7]; // partial tail block: slice starts mid-block
+        let n = 6usize; // crosses one boundary and opens a fresh block
+        let slice = synth_outs(&[9, 8, 7, 6, 5, 4], n, layers, h, dh);
+
+        let mut ma = CacheManager::new(layers, h, bt, dh, 8, None);
+        let outs = synth_outs(&tokens, 8, layers, h, dh);
+        let mut ta = ma.seed(8, &tokens, 3, &outs).unwrap();
+        ma.append_slice(&mut ta, &slice, n).unwrap();
+        assert_eq!(ta.len(), 9);
+        assert_eq!(ta.blocks().len(), 3);
+
+        let mut mb = CacheManager::new(layers, h, bt, dh, 8, None);
+        let mut tb = mb.seed(8, &tokens, 3, &outs).unwrap();
+        for r in 0..n {
+            let mut step = vec![Tensor::zeros(&[1, 1], None)];
+            for i in 0..2 * layers {
+                step.push(slice[1 + i].slice_axis(1, r, 1).to_contiguous(None));
+            }
+            mb.append_step(&mut tb, &step).unwrap();
+        }
+        assert_eq!(tb.len(), 9);
+        assert_eq!(table_bits(&ma, &ta), table_bits(&mb, &tb), "slice vs stepwise bytes");
+
+        ma.release_table(ta);
+        mb.release_table(tb);
+        assert_eq!(ma.blocks_in_use(), 0);
+        assert_eq!(mb.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn append_slice_copies_shared_tail_before_writing() {
+        let (layers, h, bt, dh) = (1usize, 2usize, 4usize, 3usize);
+        let mut m = CacheManager::new(layers, h, bt, dh, 8, None);
+        let tokens = vec![5, 6, 7]; // partial block, shared by two tables
+        let outs = synth_outs(&tokens, 8, layers, h, dh);
+        let mut a = m.seed(8, &tokens, 3, &outs).unwrap();
+        let b = m.seed(8, &tokens, 3, &outs).unwrap();
+        let shared = b.blocks()[0];
+        let before: Vec<u32> =
+            m.pool().k(shared, 0).to_vec_f32().iter().map(|x| x.to_bits()).collect();
+        let slice = synth_outs(&[1, 2], 2, layers, h, dh);
+        m.append_slice(&mut a, &slice, 2).unwrap();
+        assert_ne!(a.blocks()[0], shared, "shared tail must be copied-on-write");
+        let after: Vec<u32> =
+            m.pool().k(shared, 0).to_vec_f32().iter().map(|x| x.to_bits()).collect();
+        assert_eq!(before, after, "sibling bytes changed under slice CoW");
+        m.release_table(a);
+        m.release_table(b);
+        assert_eq!(m.blocks_in_use(), 0);
+    }
+
+    #[test]
+    fn failed_slice_append_rolls_back_clean() {
+        let (layers, h, bt, dh) = (1usize, 1usize, 2usize, 2usize);
+        let mut m = CacheManager::new(layers, h, bt, dh, 2, None); // 2-block pool
+        let tokens = vec![1, 2, 3];
+        let outs = synth_outs(&tokens, 4, layers, h, dh);
+        let mut t = m.seed(4, &tokens, 3, &outs).unwrap(); // both blocks held
+        assert_eq!(m.free_blocks(), 0);
+        // 3 rows: one fits the tail block, the rest need a third block
+        let slice = synth_outs(&[7, 8, 9], 3, layers, h, dh);
+        let err = m.append_slice(&mut t, &slice, 3);
+        assert!(matches!(err, Err(EngineError::PoolExhausted { .. })), "{err:?}");
+        assert_eq!(t.len(), 3, "failed slice must not advance the table");
+        assert_eq!(t.blocks().len(), 2, "pushed blocks rolled back");
+        assert_eq!(m.blocks_in_use(), 2);
+        m.release_table(t);
+        assert_eq!(m.blocks_in_use(), 0);
+        assert_eq!(m.free_blocks(), m.pool_blocks());
     }
 
     #[test]

@@ -117,6 +117,19 @@ pub struct EngineConfig {
     /// (token 0 at position 0 against all-zero caches). Defaults to the
     /// `AUTOCHUNK_BATCH_DECODE` env flag — a CI matrix axis.
     pub batch_decode: bool,
+    /// Chunked prefill (Sarathi-style, DESIGN.md §17): slice budget in
+    /// prompt tokens. `0` (the default) runs each prefill monolithically
+    /// in one wave entry. When `> 0`, a generative prefill longer than
+    /// this is split into `ceil(plen / chunk)` slices
+    /// ([`models::gpt_prefill_chunk`]) scheduled *between* decode waves
+    /// — decode inter-token latency stays bounded by one slice instead
+    /// of one whole prefill — with the first token bitwise identical to
+    /// the monolithic path. A mid-prefill generation that loses the
+    /// per-wave budget race simply pauses: it keeps its cache (blocks,
+    /// in paged mode) and resumes at its exact position, and under
+    /// stall pressure it spills through the ordinary eviction path.
+    /// Defaults to the `AUTOCHUNK_PREFILL_CHUNK` env knob.
+    pub prefill_chunk_tokens: usize,
     /// Paged KV-cache mode (DESIGN.md §14): block size in tokens. `0`
     /// (the default) keeps the legacy contiguous full-capacity caches.
     /// When `> 0`, generation caches live in a refcounted block pool:
@@ -159,6 +172,7 @@ impl Default for EngineConfig {
             tick_us: 500,
             use_arena: crate::plan::arena_default(),
             batch_decode: batch_decode_default(),
+            prefill_chunk_tokens: prefill_chunk_default(),
             block_tokens: 0,
             pool_blocks: 0,
             max_evictions: 3,
@@ -309,6 +323,11 @@ pub enum PlanKind {
     Prefill,
     /// Causal prefill emitting the KV-cache seed (generation path).
     PrefillKv,
+    /// One chunked-prefill slice: `len` prompt rows at positions
+    /// `past..past+len` against the cached prefix (DESIGN.md §17). Like
+    /// [`PlanKind::Decode`], parameterized by position, so warm slices
+    /// at a recurring `(past, len)` are plan-cache hits.
+    PrefillChunk { past: usize, len: usize },
     /// One decode step against a cache of logical length `past`.
     Decode { past: usize },
     /// One decode step for `width` stacked requests (DESIGN.md §16).
@@ -351,10 +370,16 @@ pub struct EngineResponse {
     /// this request — the chaos soak excludes these from its bitwise
     /// comparison against a fault-free run.
     pub fault_touched: bool,
+    /// Virtual tick at which the engine settled this request — completion
+    /// or structured rejection. Makes shedding *promptness* observable:
+    /// a deadline-missed request must carry a tick near its expiry, not
+    /// the tick some unrelated long generation finally freed a slot
+    /// (the regression `queued_request_sheds_at_deadline_even_when_batch_is_full`).
+    pub finished_tick: u64,
 }
 
 impl EngineResponse {
-    fn rejected(id: usize, depth: usize, reason: RejectReason) -> EngineResponse {
+    fn rejected(id: usize, depth: usize, reason: RejectReason, clock: u64) -> EngineResponse {
         EngineResponse {
             id,
             outcome: RequestOutcome::Rejected,
@@ -368,6 +393,7 @@ impl EngineResponse {
             decode_steps: 0,
             reason: Some(reason),
             fault_touched: false,
+            finished_tick: clock,
         }
     }
 }
@@ -395,13 +421,20 @@ enum GenCache {
 /// Decode state a paged-mode eviction preserves so a re-queued request
 /// resumes its exact stream: tokens generated so far (re-prefill runs
 /// over prompt ++ all-but-the-last of these — the last is the next input
-/// token, never yet cached) and the decode-step count for metrics.
+/// token, never yet cached), the decode-step count for metrics, and the
+/// last emission instant so resumed streams keep honest inter-token
+/// latencies.
 struct ResumeState {
     tokens: Vec<i32>,
     decode_steps: usize,
+    last_emit: Option<Instant>,
 }
 
-/// An admitted generation mid-decode: its cache and token stream.
+/// An admitted generation: its cache and token stream. With chunked
+/// prefill a generation is admitted *before* its prompt is cached —
+/// while `past < plen` it is an in-progress (possibly paused) prefill
+/// with `tokens` still empty; decode starts once the final slice lands
+/// the first token (DESIGN.md §17).
 struct GenState {
     idx: usize,
     bucket: usize,
@@ -409,14 +442,26 @@ struct GenState {
     plan_tag: String,
     cache: GenCache,
     /// Generated ids so far (the last one's K/V are not yet cached — it
-    /// is the next decode step's input token).
+    /// is the next decode step's input token). Empty while prefilling.
     tokens: Vec<i32>,
-    /// Cache logical length == absolute position of the next input token.
+    /// Cache logical length == absolute position of the next input token
+    /// (or of the next prefill slice, while `past < plen`).
     past: usize,
+    /// Effective prompt length: prefill is complete once `past == plen`.
+    plen: usize,
+    /// Effective prompt tokens while prefilling (cleared at completion);
+    /// slice `k` feeds `ptoks[past..past+n]` to the slice graph.
+    ptoks: Vec<i32>,
+    /// Resume payload carried through a chunked re-prefill: restored
+    /// into `tokens` when the final slice completes.
+    pending_resume: Option<ResumeState>,
     last_logits: Vec<f32>,
     wait_ticks: u64,
     latency_us: u64,
     decode_steps: usize,
+    /// Wall-clock instant of the last token emission (first token or
+    /// decode step) — the inter-token-latency clock.
+    last_emit: Option<Instant>,
     /// Paged-mode evictions this request has survived so far.
     evictions: usize,
     /// Fault retries this request has consumed so far.
@@ -446,6 +491,15 @@ enum WaveEntry {
         /// Paged-mode resume payload (Some iff this prefill recomputes an
         /// evicted generation).
         resumed: Option<ResumeState>,
+    },
+    /// One chunked-prefill slice for `gens[gi]`: `n` prompt rows at
+    /// `gens[gi].past`. `lm` is bound iff this is the final slice (the
+    /// hidden row at `plen − 1` selects the first token).
+    PrefillSlice {
+        gi: usize,
+        n: usize,
+        h: PlanHandle,
+        lm: Option<PlanHandle>,
     },
     /// One decode step for `gens[gi]`.
     Decode {
@@ -493,6 +547,16 @@ enum WaveOut {
         tokens: Vec<i32>,
         arena_peak: usize,
     },
+    /// One chunked-prefill slice: `outs` is the slice graph's output list
+    /// (`[hidden [n,d], k_new [h,n,dh], v_new, …]`); `logits`/`token` are
+    /// bound iff this was the final slice.
+    Slice {
+        latency_us: u64,
+        outs: Vec<Tensor>,
+        logits: Option<Vec<f32>>,
+        token: Option<i32>,
+        arena_peak: usize,
+    },
 }
 
 /// Did this wave result carry a non-finite float anywhere a downstream
@@ -505,15 +569,48 @@ fn wave_out_poisoned(out: &WaveOut) -> bool {
         WaveOut::StepBatch { logits, .. } => {
             logits.iter().flatten().any(|x| !x.is_finite())
         }
+        // A non-final slice has no logits; its K/V rows (and hidden rows)
+        // feed the cache, so screen all of them — a poisoned row must
+        // fail this attempt, not lurk in the cache.
+        WaveOut::Slice { outs, logits, .. } => {
+            logits.as_ref().is_some_and(|l| l.iter().any(|x| !x.is_finite()))
+                || outs.iter().any(|t| t.to_vec_f32().iter().any(|x| !x.is_finite()))
+        }
     }
 }
 
 /// Default of [`EngineConfig::batch_decode`]: the `AUTOCHUNK_BATCH_DECODE`
 /// env flag (same latching idiom as [`crate::plan::arena_default`], so
-/// one process serves one consistent answer).
+/// one process serves one consistent answer). Batched decode is the
+/// default since the chunked-prefill PR — set `=0` to opt back into the
+/// looped path (still the parity anchor; a CI matrix axis runs both).
 pub fn batch_decode_default() -> bool {
     static FLAG: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
-    *FLAG.get_or_init(|| std::env::var("AUTOCHUNK_BATCH_DECODE").as_deref() == Ok("1"))
+    *FLAG.get_or_init(|| std::env::var("AUTOCHUNK_BATCH_DECODE").as_deref() != Ok("0"))
+}
+
+/// Default of [`EngineConfig::prefill_chunk_tokens`]: the
+/// `AUTOCHUNK_PREFILL_CHUNK` env knob (tokens per slice; unset, `0`, or
+/// unparsable keeps prefills monolithic), latched like
+/// [`batch_decode_default`].
+pub fn prefill_chunk_default() -> usize {
+    static V: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *V.get_or_init(|| {
+        std::env::var("AUTOCHUNK_PREFILL_CHUNK")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0)
+    })
+}
+
+/// Has `req`'s deadline expired at `clock`? `deadline_ticks == 0` means
+/// no deadline; otherwise expiry is strictly *after*
+/// `arrival_tick + deadline_ticks` — the deadline tick itself is still
+/// valid (a request completing exactly on its deadline meets its SLO).
+/// Saturating so sentinel-large deadlines (`u64::MAX`) mean "never",
+/// instead of wrapping into the past and shedding on arrival.
+fn deadline_expired(clock: u64, req: &Request) -> bool {
+    req.deadline_ticks > 0 && clock > req.arrival_tick.saturating_add(req.deadline_ticks)
 }
 
 /// Deterministic exponential backoff for fault retries, in virtual
@@ -704,6 +801,9 @@ impl ServeEngine {
                 };
                 Ok(match kind {
                     PlanKind::PrefillKv => models::gpt_prefill_kv(&cfg),
+                    PlanKind::PrefillChunk { past, len } => {
+                        models::gpt_prefill_chunk(&cfg, past, len, self.config.block_tokens)
+                    }
                     PlanKind::Decode { past } if self.config.block_tokens > 0 => {
                         models::gpt_decode_paged(&cfg, past, self.config.block_tokens)
                     }
@@ -741,7 +841,10 @@ impl ServeEngine {
         // Depth ladder relative to the model's own baseline (independent
         // of the budget, so the same cache serves any budget): level 0 is
         // dense, level d targets baseline >> d.
-        let chunkable = matches!(kind, PlanKind::Prefill | PlanKind::PrefillKv);
+        let chunkable = matches!(
+            kind,
+            PlanKind::Prefill | PlanKind::PrefillKv | PlanKind::PrefillChunk { .. }
+        );
         let plans = if depth == 0 || !chunkable {
             Vec::new()
         } else {
@@ -755,6 +858,14 @@ impl ServeEngine {
         let tag = match kind {
             PlanKind::Prefill => format!("{}_native_s{}_d{}", self.config.model, bucket, depth),
             PlanKind::PrefillKv => format!("{}_prefill_s{}_d{}", self.config.model, bucket, depth),
+            PlanKind::PrefillChunk { past, len } if self.config.block_tokens > 0 => format!(
+                "{}_prefillchunk_s{}_p{}_n{}_blk{}_d{}",
+                self.config.model, bucket, past, len, self.config.block_tokens, depth
+            ),
+            PlanKind::PrefillChunk { past, len } => format!(
+                "{}_prefillchunk_s{}_p{}_n{}_d{}",
+                self.config.model, bucket, past, len, depth
+            ),
             PlanKind::Decode { past } if self.config.block_tokens > 0 => format!(
                 "{}_decode_s{}_p{}_blk{}",
                 self.config.model, bucket, past, self.config.block_tokens
@@ -781,7 +892,11 @@ impl ServeEngine {
             hlo_path: String::new(),
             model: self.config.model.clone(),
             mode: match kind {
-                PlanKind::Prefill | PlanKind::PrefillKv if depth > 0 => "native-chunked",
+                PlanKind::Prefill | PlanKind::PrefillKv | PlanKind::PrefillChunk { .. }
+                    if depth > 0 =>
+                {
+                    "native-chunked"
+                }
                 PlanKind::Decode { .. } | PlanKind::DecodeBatched { .. } => "native-decode",
                 PlanKind::LmHead | PlanKind::LmHeadBatched { .. } => "native-lmhead",
                 _ => "native-dense",
@@ -897,6 +1012,14 @@ impl ServeEngine {
         // Evicted generations waiting to re-prefill: request idx → stream
         // state (entries live from eviction until re-admission/rejection).
         let mut resume: HashMap<usize, ResumeState> = HashMap::new();
+        // Chunked prefill (DESIGN.md §17): generative prompts longer than
+        // this run as `prefill_chunk_tokens`-row slices interleaved with
+        // decode waves. 0 = monolithic (the serial-parity default).
+        let chunk = self.config.prefill_chunk_tokens;
+        // Requests whose *first* admission already recorded queueing wait:
+        // re-admissions (evictions, fault retries, chunked re-prefills)
+        // must not re-count, so wait percentiles stay admission-honest.
+        let mut waited: HashSet<usize> = HashSet::new();
 
         // Arrival-ordered queue, higher priority class first within a
         // tick, stable by id (all-zero priorities reduce to the legacy
@@ -940,7 +1063,7 @@ impl ServeEngine {
             let mut di = 0;
             while di < gens.len() {
                 let req = &requests[gens[di].idx];
-                if req.deadline_ticks > 0 && clock > req.arrival_tick + req.deadline_ticks {
+                if deadline_expired(clock, req) {
                     let g = gens.remove(di);
                     if let GenCache::Paged(tb) = g.cache {
                         match &mut mgr {
@@ -954,9 +1077,37 @@ impl ServeEngine {
                         req.id,
                         g.depth,
                         RejectReason::DeadlineMissed,
+                        clock,
                     ));
                 } else {
                     di += 1;
+                }
+            }
+
+            // Queue deadline sweep (the backoff-queue shedding bugfix):
+            // the whole queue, every tick — a request parked behind a
+            // full batch or a backoff window is shed the tick its
+            // deadline expires, not whenever it next reaches admission.
+            // (The admission scan breaks at the arrival horizon and skips
+            // backoff entries entirely, so it cannot be the shed point.)
+            let mut qi = 0;
+            while qi < queue.len() {
+                let p = queue[qi];
+                let req = &requests[p.idx];
+                if deadline_expired(clock, req) {
+                    queue.remove(qi);
+                    resume.remove(&p.idx);
+                    recorder.deadline_missed += 1;
+                    recorder.rejected += 1;
+                    recorder.shed_wait += 1;
+                    responses.push(EngineResponse::rejected(
+                        req.id,
+                        p.depth,
+                        RejectReason::DeadlineMissed,
+                        clock,
+                    ));
+                } else {
+                    qi += 1;
                 }
             }
 
@@ -1002,6 +1153,9 @@ impl ServeEngine {
                 // order never shows in the bits).
                 let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
                 for gi in 0..gens.len() {
+                    if gens[gi].tokens.is_empty() {
+                        continue; // mid-prefill: no input token to decode yet
+                    }
                     let b = gens[gi].bucket;
                     match groups.iter_mut().find(|(gb, _)| *gb == b) {
                         Some((_, v)) => v.push(gi),
@@ -1054,6 +1208,9 @@ impl ServeEngine {
                     if slots >= max_batch {
                         break;
                     }
+                    if gens[gi].tokens.is_empty() {
+                        continue; // mid-prefill: no input token to decode yet
+                    }
                     let (bucket, past) = (gens[gi].bucket, gens[gi].past);
                     let h = self.handle(PlanKind::Decode { past }, bucket, 0)?;
                     let lm = self.handle(PlanKind::LmHead, bucket, 0)?;
@@ -1085,6 +1242,67 @@ impl ServeEngine {
                 }
             }
 
+            // ---- chunked-prefill slice admission: one slice per
+            // in-progress prefill per wave, after decode (decode-first is
+            // what bounds ITL under long prompts — the Sarathi insight).
+            // Order: priority class first, then tightest deadline slack,
+            // then arrival — so an urgent prefill drains ahead of a lazy
+            // one. A slice that doesn't fit simply pauses: the generation
+            // keeps its cache (blocks stay resident and priced) and the
+            // next wave retries from the exact same `past`; the
+            // stall-eviction backstop spills it if residency wedges the
+            // budget.
+            if chunk > 0 {
+                let mut cands: Vec<usize> =
+                    (0..gens.len()).filter(|&gi| gens[gi].past < gens[gi].plen).collect();
+                cands.sort_by_key(|&gi| {
+                    let req = &requests[gens[gi].idx];
+                    let slack = if req.deadline_ticks == 0 {
+                        u64::MAX
+                    } else {
+                        req.arrival_tick
+                            .saturating_add(req.deadline_ticks)
+                            .saturating_sub(clock)
+                    };
+                    (Reverse(req.priority), slack, req.arrival_tick, req.id)
+                });
+                for gi in cands {
+                    if slots >= max_batch {
+                        break;
+                    }
+                    let (bucket, past, plen, depth) = {
+                        let g = &gens[gi];
+                        (g.bucket, g.past, g.plen, g.depth)
+                    };
+                    let n = chunk.min(plen - past);
+                    let h = self.handle(PlanKind::PrefillChunk { past, len: n }, bucket, depth)?;
+                    // the final slice selects the first token in-wave
+                    let lm = if past + n == plen {
+                        Some(self.handle(PlanKind::LmHead, bucket, 0)?)
+                    } else {
+                        None
+                    };
+                    let mut cost = Self::admission_cost(self.config.use_arena, &h);
+                    if let Some(lm) = &lm {
+                        cost += Self::admission_cost(self.config.use_arena, lm);
+                    }
+                    // Grow-as-you-go at slice granularity: only the blocks
+                    // this slice's rows spill past the held tail. (Slice
+                    // tables are never prefix-shared, so no CoW cost.)
+                    let mut need_blocks = 0usize;
+                    if let (Some(m), GenCache::Paged(tb)) = (&mgr, &gens[gi].cache) {
+                        need_blocks = m.blocks_for(past + n).saturating_sub(tb.blocks().len());
+                        cost += need_blocks * m.block_bytes();
+                    }
+                    if cost <= remaining && need_blocks <= free_blocks_wave {
+                        remaining -= cost;
+                        free_blocks_wave -= need_blocks;
+                        slots += 1;
+                        wave.push(WaveEntry::PrefillSlice { gi, n, h, lm });
+                    }
+                }
+            }
+
             // ---- prefill admission: pack the rest of the wave
             let mut retry: Vec<Pending> = Vec::new();
             let mut scan = 0usize;
@@ -1094,20 +1312,9 @@ impl ServeEngine {
                 }
                 let p = queue[scan];
                 let req = &requests[p.idx];
-                // An expired deadline sheds the request before any more
-                // compile or admission work is spent on it.
-                if req.deadline_ticks > 0 && clock > req.arrival_tick + req.deadline_ticks {
-                    queue.remove(scan);
-                    resume.remove(&p.idx);
-                    recorder.deadline_missed += 1;
-                    recorder.rejected += 1;
-                    responses.push(EngineResponse::rejected(
-                        req.id,
-                        p.depth,
-                        RejectReason::DeadlineMissed,
-                    ));
-                    continue;
-                }
+                // (Expired deadlines were already shed by this tick's
+                // queue sweep — nothing scanned here can be past due.)
+                debug_assert!(!deadline_expired(clock, req));
                 // Backing off after a fault retry: arrived but not yet
                 // runnable — skip, keep scanning.
                 if p.not_before > clock {
@@ -1122,7 +1329,13 @@ impl ServeEngine {
                     queue.remove(scan);
                     resume.remove(&p.idx);
                     recorder.rejected += 1;
-                    responses.push(EngineResponse::rejected(req.id, p.depth, RejectReason::TooLong));
+                    recorder.shed_wait += 1;
+                    responses.push(EngineResponse::rejected(
+                        req.id,
+                        p.depth,
+                        RejectReason::TooLong,
+                        clock,
+                    ));
                     continue;
                 };
                 if generative && (gpt_cfg(&self.config.model, bucket).is_none() || req.seq_len == 0)
@@ -1132,11 +1345,154 @@ impl ServeEngine {
                     queue.remove(scan);
                     resume.remove(&p.idx);
                     recorder.rejected += 1;
+                    recorder.shed_wait += 1;
                     responses.push(EngineResponse::rejected(
                         req.id,
                         p.depth,
                         RejectReason::NotGenerable,
+                        clock,
                     ));
+                    continue;
+                }
+                // Chunked admission: a long generative prompt enters the
+                // engine as a *generation still prefilling* — a GenState
+                // with `past < plen` — and streams in `chunk`-row slices
+                // interleaved with decode waves. Short prompts (≤ chunk)
+                // keep the monolithic path, whose single fused prefill is
+                // strictly cheaper.
+                let plen_eff = if generative {
+                    req.seq_len + resume.get(&p.idx).map(|r| r.tokens.len() - 1).unwrap_or(0)
+                } else {
+                    req.seq_len
+                };
+                if generative && chunk > 0 && plen_eff > chunk {
+                    let h =
+                        self.handle(PlanKind::PrefillChunk { past: 0, len: chunk }, bucket, p.depth)?;
+                    // The irreducible floor is the cache reservation the
+                    // generation pins for its whole life. Contiguous:
+                    // full bucket capacity up front. Paged: the first
+                    // slice's blocks now — later slices and decode steps
+                    // grow per wave, backstopped by eviction.
+                    let mut extra = 0usize;
+                    let mut need_blocks = 0usize;
+                    match &mgr {
+                        Some(m) => {
+                            need_blocks = m.blocks_for(chunk);
+                            extra += need_blocks * m.block_bytes();
+                            if m.blocks_for(req.total_len()) > m.pool_blocks() {
+                                queue.remove(scan);
+                                resume.remove(&p.idx);
+                                recorder.shed += 1;
+                                recorder.rejected += 1;
+                                recorder.shed_wait += 1;
+                                responses.push(EngineResponse::rejected(
+                                    req.id,
+                                    p.depth,
+                                    RejectReason::PoolTooSmall,
+                                    clock,
+                                ));
+                                continue;
+                            }
+                        }
+                        None => extra += self.kv_bytes(bucket),
+                    }
+                    if extra >= self.config.budget_bytes {
+                        queue.remove(scan);
+                        resume.remove(&p.idx);
+                        recorder.rejected += 1;
+                        recorder.shed_wait += 1;
+                        responses.push(EngineResponse::rejected(
+                            req.id,
+                            p.depth,
+                            RejectReason::BudgetFloor,
+                            clock,
+                        ));
+                        continue;
+                    }
+                    let cost = Self::admission_cost(self.config.use_arena, &h) + extra;
+                    if cost > self.config.budget_bytes {
+                        queue.remove(scan);
+                        if p.depth < self.config.max_deepen {
+                            recorder.preempted += 1;
+                            retry.push(Pending {
+                                idx: p.idx,
+                                depth: p.depth + 1,
+                                evictions: p.evictions,
+                                retries: p.retries,
+                                not_before: 0,
+                            });
+                        } else {
+                            resume.remove(&p.idx);
+                            recorder.rejected += 1;
+                            recorder.shed_wait += 1;
+                            responses.push(EngineResponse::rejected(
+                                req.id,
+                                p.depth,
+                                RejectReason::MemoryWall,
+                                clock,
+                            ));
+                        }
+                        continue;
+                    }
+                    if cost <= remaining && need_blocks <= free_blocks_wave {
+                        remaining -= cost;
+                        free_blocks_wave -= need_blocks;
+                        queue.remove(scan);
+                        let pending_resume = resume.remove(&p.idx);
+                        let mut ptoks = req.tokens.clone();
+                        if let Some(r) = &pending_resume {
+                            // re-prefill over prompt ++ generated-but-last
+                            ptoks.extend_from_slice(&r.tokens[..r.tokens.len() - 1]);
+                        }
+                        let wait_ticks = clock - req.arrival_tick;
+                        if waited.insert(p.idx) {
+                            recorder.record_wait(wait_ticks * self.config.tick_us);
+                        }
+                        let cache = match &mgr {
+                            Some(_) => GenCache::Paged(BlockTable::new()),
+                            None => {
+                                let Some(cfg) = gpt_cfg(&self.config.model, bucket) else {
+                                    return Err(EngineError::NonGptGeneration.into());
+                                };
+                                GenCache::Whole(KvCache::new(
+                                    cfg.layers,
+                                    cfg.heads,
+                                    bucket,
+                                    cfg.head_dim(),
+                                    Some(tracker.clone()),
+                                ))
+                            }
+                        };
+                        gens.push(GenState {
+                            idx: p.idx,
+                            bucket,
+                            depth: p.depth,
+                            plan_tag: h.tag().to_string(),
+                            cache,
+                            tokens: Vec::new(),
+                            past: 0,
+                            plen: plen_eff,
+                            ptoks,
+                            pending_resume,
+                            last_logits: Vec::new(),
+                            wait_ticks,
+                            latency_us: 0,
+                            decode_steps: 0,
+                            last_emit: None,
+                            evictions: p.evictions,
+                            retries: p.retries,
+                        });
+                        slots += 1;
+                        wave.push(WaveEntry::PrefillSlice {
+                            gi: gens.len() - 1,
+                            n: chunk,
+                            h,
+                            lm: None,
+                        });
+                        continue;
+                    }
+                    // Fits the device but not this wave: skip-ahead.
+                    scan += 1;
                     continue;
                 }
                 let kind = if generative { PlanKind::PrefillKv } else { PlanKind::Prefill };
@@ -1170,10 +1526,12 @@ impl ServeEngine {
                                 resume.remove(&p.idx);
                                 recorder.shed += 1;
                                 recorder.rejected += 1;
+                                recorder.shed_wait += 1;
                                 responses.push(EngineResponse::rejected(
                                     req.id,
                                     p.depth,
                                     RejectReason::PoolTooSmall,
+                                    clock,
                                 ));
                                 continue;
                             }
@@ -1192,10 +1550,12 @@ impl ServeEngine {
                     queue.remove(scan);
                     resume.remove(&p.idx);
                     recorder.rejected += 1;
+                    recorder.shed_wait += 1;
                     responses.push(EngineResponse::rejected(
                         req.id,
                         p.depth,
                         RejectReason::BudgetFloor,
+                        clock,
                     ));
                     continue;
                 }
@@ -1218,10 +1578,12 @@ impl ServeEngine {
                     } else {
                         resume.remove(&p.idx);
                         recorder.rejected += 1;
+                        recorder.shed_wait += 1;
                         responses.push(EngineResponse::rejected(
                             req.id,
                             p.depth,
                             RejectReason::MemoryWall,
+                            clock,
                         ));
                     }
                     continue;
@@ -1297,16 +1659,28 @@ impl ServeEngine {
                                         requests[g.idx].id,
                                         g.depth,
                                         RejectReason::EvictionLimit,
+                                        clock,
                                     ));
                                 } else {
                                     recorder.evicted += 1;
-                                    resume.insert(
-                                        g.idx,
-                                        ResumeState {
-                                            tokens: g.tokens,
-                                            decode_steps: g.decode_steps,
-                                        },
-                                    );
+                                    if g.tokens.is_empty() {
+                                        // Evicted mid-prefill: no stream
+                                        // state of its own yet — restore
+                                        // the resume payload (if any) it
+                                        // was admitted with, untouched.
+                                        if let Some(r) = g.pending_resume {
+                                            resume.insert(g.idx, r);
+                                        }
+                                    } else {
+                                        resume.insert(
+                                            g.idx,
+                                            ResumeState {
+                                                tokens: g.tokens,
+                                                decode_steps: g.decode_steps,
+                                                last_emit: g.last_emit,
+                                            },
+                                        );
+                                    }
                                     queue.push_front(Pending {
                                         idx: g.idx,
                                         depth: g.depth,
@@ -1325,6 +1699,7 @@ impl ServeEngine {
                                     requests[g.idx].id,
                                     g.depth,
                                     RejectReason::EvictionLimit,
+                                    clock,
                                 ));
                             }
                         }
@@ -1365,6 +1740,17 @@ impl ServeEngine {
                     .iter()
                     .filter(|e| matches!(e, WaveEntry::DecodeBatched { .. }))
                     .count();
+            }
+            // Chunked-prefill accounting: slices issued, and waves where a
+            // slice and a decode step genuinely shared the wave — the
+            // interleaving the ITL bound rests on (DESIGN.md §17).
+            let slice_entries = entries
+                .iter()
+                .filter(|e| matches!(e, WaveEntry::PrefillSlice { .. }))
+                .count();
+            recorder.prefill_slices += slice_entries;
+            if slice_entries > 0 && decode_entries > 0 {
+                recorder.interleaved_waves += 1;
             }
             // Per-bucket dims + shared zero-pad tensor for batched
             // entries, resolved before the parallel section. The pad is
@@ -1413,6 +1799,7 @@ impl ServeEngine {
                 .iter()
                 .map(|e| match e {
                     WaveEntry::Prefill { p, .. } => vec![requests[p.idx].id],
+                    WaveEntry::PrefillSlice { gi, .. } => vec![requests[gens[*gi].idx].id],
                     WaveEntry::Decode { gi, .. } => vec![requests[gens[*gi].idx].id],
                     WaveEntry::DecodeBatched { gis, .. } => {
                         gis.iter().map(|&gi| requests[gens[gi].idx].id).collect()
@@ -1434,6 +1821,15 @@ impl ServeEngine {
                                     ^ ((p.evictions as u64) << 16)
                                     ^ ((p.retries as u64) << 4)
                                     ^ 2
+                            }
+                            WaveEntry::PrefillSlice { gi, .. } => {
+                                let g = &gens[*gi];
+                                ((requests[g.idx].id as u64) << 32)
+                                    ^ ((g.depth as u64) << 24)
+                                    ^ ((g.evictions as u64) << 16)
+                                    ^ ((g.past as u64) << 8)
+                                    ^ ((g.retries as u64) << 4)
+                                    ^ 4
                             }
                             WaveEntry::Decode { gi, .. } => {
                                 let g = &gens[*gi];
@@ -1529,6 +1925,84 @@ impl ServeEngine {
                                             })
                                         }
                                     }
+                                })
+                            }
+                            WaveEntry::PrefillSlice { gi, n, h, lm } => {
+                                let g = &gens_ro[*gi];
+                                let n = *n;
+                                pool::with_threads(per_entry_threads, || {
+                                    let started = Instant::now();
+                                    // slice rows off the effective prompt,
+                                    // then the cached prefix (none at the
+                                    // first slice — the past-0 graph binds
+                                    // no cache inputs)
+                                    let mut ins: Vec<Tensor> = Vec::new();
+                                    ins.push(Tensor::from_i32(
+                                        g.ptoks[g.past..g.past + n].to_vec(),
+                                        &[n],
+                                        Some(tracker.clone()),
+                                    ));
+                                    if g.past > 0 {
+                                        match &g.cache {
+                                            GenCache::Whole(c) => {
+                                                for l in 0..c.layers() {
+                                                    ins.push(c.k_full(l));
+                                                    ins.push(c.v_full(l));
+                                                }
+                                            }
+                                            GenCache::Paged(tb) => match mgr_ro.as_ref() {
+                                                Some(m) => m.bind_inputs(tb, &mut ins),
+                                                None => {
+                                                    return Err(EngineError::MissingManager)
+                                                }
+                                            },
+                                        }
+                                    }
+                                    // slices are chunkable like any other
+                                    // prefill: same budget/governor wiring
+                                    let entry_budget =
+                                        Self::admission_cost(use_arena, h) + share;
+                                    let opts = ExecOptions {
+                                        budget_bytes: Some(if use_arena {
+                                            entry_budget
+                                        } else {
+                                            h.quote().governor_budget(entry_budget)
+                                        }),
+                                        use_arena,
+                                        faults: fscope.clone(),
+                                    };
+                                    let (outs, stats) = h.execute(&ins, &tracker, &opts);
+                                    drop(ins); // release cache views before the append
+                                    let (logits, token) = match lm {
+                                        Some(lm) => {
+                                            // final slice: the effective
+                                            // prompt's last hidden row
+                                            // selects the first token
+                                            let lm_opts = ExecOptions {
+                                                budget_bytes: None,
+                                                use_arena,
+                                                faults: fscope
+                                                    .as_ref()
+                                                    .map(|f| f.with_salt(1)),
+                                            };
+                                            let hrow = outs[0]
+                                                .slice_axis(0, n - 1, 1)
+                                                .to_contiguous(Some(tracker.clone()));
+                                            let (louts, _) =
+                                                lm.execute(&[hrow], &tracker, &lm_opts);
+                                            let lv = louts[0].to_vec_f32();
+                                            let t = greedy_argmax(&lv);
+                                            (Some(lv), Some(t))
+                                        }
+                                        None => (None, None),
+                                    };
+                                    Ok(WaveOut::Slice {
+                                        latency_us: started.elapsed().as_micros() as u64,
+                                        outs,
+                                        logits,
+                                        token,
+                                        arena_peak: stats.arena_peak_bytes,
+                                    })
                                 })
                             }
                             WaveEntry::Decode { gi, h, lm } => {
@@ -1737,6 +2211,7 @@ impl ServeEngine {
                                 requests[p.idx].id,
                                 p.depth,
                                 RejectReason::RetriesExhausted,
+                                clock,
                             ));
                         } else {
                             recorder.retries += 1;
@@ -1748,6 +2223,16 @@ impl ServeEngine {
                                 not_before: clock + backoff_ticks(p.retries + 1),
                             });
                         }
+                    }
+                    (WaveEntry::PrefillSlice { gi, .. }, Err(e)) => {
+                        recorder.record_error(e.kind());
+                        if !e.retryable() {
+                            return Err(e.into());
+                        }
+                        // the generation's cache is unchanged (the slice
+                        // never landed): retry through the same removal
+                        // machinery as a failed decode step
+                        failed.push(gi);
                     }
                     (WaveEntry::Decode { gi, .. }, Err(e)) => {
                         recorder.record_error(e.kind());
@@ -1783,7 +2268,9 @@ impl ServeEngine {
                         let req = &requests[p.idx];
                         let wait_ticks = clock - req.arrival_tick;
                         recorder.record(h.tag(), latency_us, req.seq_len);
-                        recorder.record_wait(wait_ticks * tick_us);
+                        if waited.insert(p.idx) {
+                            recorder.record_wait(wait_ticks * tick_us);
+                        }
                         responses.push(EngineResponse {
                             id: req.id,
                             outcome: RequestOutcome::Completed,
@@ -1797,6 +2284,7 @@ impl ServeEngine {
                             decode_steps: 0,
                             reason: None,
                             fault_touched: false,
+                            finished_tick: clock,
                         });
                     }
                     (
@@ -1814,7 +2302,10 @@ impl ServeEngine {
                         if resumed.is_none() && req.max_new_tokens == 1 {
                             // no decode needed: the prefill's token is it
                             recorder.record(h.tag(), latency_us, req.seq_len + 1);
-                            recorder.record_wait(wait_ticks * tick_us);
+                            if waited.insert(p.idx) {
+                                recorder.record_wait(wait_ticks * tick_us);
+                            }
+                            recorder.record_ttft(wait_ticks * tick_us + latency_us);
                             responses.push(EngineResponse {
                                 id: req.id,
                                 outcome: RequestOutcome::Completed,
@@ -1828,6 +2319,7 @@ impl ServeEngine {
                                 decode_steps: 0,
                                 reason: None,
                                 fault_touched: false,
+                                finished_tick: clock,
                             });
                         } else {
                             let plen = ptoks.len();
@@ -1857,6 +2349,7 @@ impl ServeEngine {
                                                 req.id,
                                                 p.depth,
                                                 RejectReason::RetriesExhausted,
+                                                clock,
                                             ));
                                         } else {
                                             recorder.retries += 1;
@@ -1890,7 +2383,7 @@ impl ServeEngine {
                                 }
                             };
                             drop(outs);
-                            let (tokens, decode_steps) = match resumed {
+                            let (tokens, decode_steps, last_emit) = match resumed {
                                 Some(r) => {
                                     // decode parity: the re-prefill's last
                                     // row reproduces the evicted stream's
@@ -1900,9 +2393,12 @@ impl ServeEngine {
                                         Some(token),
                                         "resume re-prefill diverged from the evicted stream"
                                     );
-                                    (r.tokens, r.decode_steps)
+                                    (r.tokens, r.decode_steps, r.last_emit)
                                 }
-                                None => (vec![token], 0),
+                                None => {
+                                    recorder.record_ttft(wait_ticks * tick_us + latency_us);
+                                    (vec![token], 0, Some(Instant::now()))
+                                }
                             };
                             gens.push(GenState {
                                 idx: p.idx,
@@ -1912,13 +2408,95 @@ impl ServeEngine {
                                 cache,
                                 tokens,
                                 past: plen,
+                                plen,
+                                ptoks: Vec::new(),
+                                pending_resume: None,
                                 last_logits: logits,
                                 wait_ticks,
                                 latency_us,
                                 decode_steps,
+                                last_emit,
                                 evictions: p.evictions,
                                 retries: p.retries,
                             });
+                        }
+                    }
+                    (
+                        WaveEntry::PrefillSlice { gi, n, h, .. },
+                        Ok(WaveOut::Slice { latency_us, outs, logits, token, arena_peak }),
+                    ) => {
+                        if use_arena {
+                            if let Some(a) = &mut auditor {
+                                a.check_arena(h.tag(), arena_peak, h.memplan().planned_peak_bytes);
+                            }
+                        }
+                        recorder.record_prefill(latency_us);
+                        let g = &mut gens[gi];
+                        g.latency_us += latency_us;
+                        g.plan_tag = h.tag().to_string();
+                        match &mut g.cache {
+                            GenCache::Whole(c) => {
+                                for l in 0..c.layers() {
+                                    c.append_rows(l, &outs[1 + 2 * l], &outs[2 + 2 * l]);
+                                }
+                                drop(outs);
+                                c.advance_by(n);
+                            }
+                            GenCache::Paged(tb) => {
+                                let Some(m) = mgr.as_mut() else {
+                                    return Err(EngineError::MissingManager.into());
+                                };
+                                if let Err(e) = m.append_slice(tb, &outs, n) {
+                                    // table rolled back to its pre-slice
+                                    // state: drop this attempt and retry
+                                    // through the eviction machinery
+                                    recorder.record_error(e.kind());
+                                    if !e.retryable() {
+                                        return Err(e.into());
+                                    }
+                                    if matches!(e, EngineError::Injected { .. }) {
+                                        touched.insert(requests[g.idx].id);
+                                    }
+                                    drop(outs);
+                                    failed.push(gi);
+                                    continue;
+                                }
+                                drop(outs);
+                            }
+                        }
+                        g.past += n;
+                        if let Some(token) = token {
+                            // final slice: prefill complete, decode starts
+                            debug_assert_eq!(
+                                g.past, g.plen,
+                                "LM head ran before the prefill finished"
+                            );
+                            g.last_logits = logits.unwrap_or_default();
+                            match g.pending_resume.take() {
+                                Some(r) => {
+                                    // decode parity: the re-prefill's last
+                                    // row reproduces the evicted stream's
+                                    // pending token bit for bit
+                                    debug_assert_eq!(
+                                        r.tokens.last().copied(),
+                                        Some(token),
+                                        "resume re-prefill diverged from the evicted stream"
+                                    );
+                                    g.tokens = r.tokens;
+                                    g.decode_steps = r.decode_steps;
+                                    g.last_emit = r.last_emit;
+                                }
+                                None => {
+                                    g.tokens = vec![token];
+                                    recorder
+                                        .record_ttft(g.wait_ticks * tick_us + g.latency_us);
+                                    g.last_emit = Some(Instant::now());
+                                }
+                            }
+                            g.ptoks = Vec::new();
+                            if g.tokens.len() >= requests[g.idx].max_new_tokens {
+                                finished.push(gi);
+                            }
                         }
                     }
                     (
@@ -1965,6 +2543,11 @@ impl ServeEngine {
                         }
                         g.past += 1;
                         g.tokens.push(token);
+                        let now = Instant::now();
+                        if let Some(prev) = g.last_emit {
+                            recorder.record_itl(now.duration_since(prev).as_micros() as u64);
+                        }
+                        g.last_emit = Some(now);
                         g.last_logits = logits;
                         g.decode_steps += 1;
                         if g.tokens.len() >= requests[g.idx].max_new_tokens {
@@ -2032,6 +2615,12 @@ impl ServeEngine {
                             }
                             g.past += 1;
                             g.tokens.push(tokens[j]);
+                            let now = Instant::now();
+                            if let Some(prev) = g.last_emit {
+                                recorder
+                                    .record_itl(now.duration_since(prev).as_micros() as u64);
+                            }
+                            g.last_emit = Some(now);
                             g.last_logits = std::mem::take(&mut logits[j]);
                             g.decode_steps += 1;
                             if g.tokens.len() >= requests[g.idx].max_new_tokens {
@@ -2086,7 +2675,9 @@ impl ServeEngine {
                         g.latency_us,
                         req.seq_len + g.tokens.len(),
                     );
-                    recorder.record_wait(g.wait_ticks * tick_us);
+                    if waited.insert(g.idx) {
+                        recorder.record_wait(g.wait_ticks * tick_us);
+                    }
                     responses.push(EngineResponse {
                         id: req.id,
                         outcome: RequestOutcome::Completed,
@@ -2100,6 +2691,7 @@ impl ServeEngine {
                         decode_steps: g.decode_steps,
                         reason: None,
                         fault_touched: false,
+                        finished_tick: clock,
                     });
                 } else {
                     // A failed decode attempt: release the cache exactly
@@ -2121,13 +2713,27 @@ impl ServeEngine {
                             req.id,
                             g.depth,
                             RejectReason::RetriesExhausted,
+                            clock,
                         ));
                     } else {
                         recorder.retries += 1;
-                        resume.insert(
-                            g.idx,
-                            ResumeState { tokens: g.tokens, decode_steps: g.decode_steps },
-                        );
+                        if g.tokens.is_empty() {
+                            // Failed mid-prefill: no stream state of its
+                            // own yet — restore the resume payload (if
+                            // any) it was admitted with, untouched.
+                            if let Some(r) = g.pending_resume {
+                                resume.insert(g.idx, r);
+                            }
+                        } else {
+                            resume.insert(
+                                g.idx,
+                                ResumeState {
+                                    tokens: g.tokens,
+                                    decode_steps: g.decode_steps,
+                                    last_emit: g.last_emit,
+                                },
+                            );
+                        }
                         queue.push_front(Pending {
                             idx: g.idx,
                             depth: g.depth,
@@ -2289,6 +2895,10 @@ mod tests {
             max_batch: 4,
             buckets: vec![16, 32],
             worker_threads: 1,
+            // these module tests assert looped-path metrics (dispatch
+            // counts, per-step latencies); the batched default is covered
+            // by the integration suite and the CI matrix axis
+            batch_decode: false,
             ..EngineConfig::default()
         })
     }
@@ -2414,5 +3024,30 @@ mod tests {
     #[test]
     fn unknown_model_errors() {
         assert!(build_model("nope", 16).is_err());
+    }
+
+    #[test]
+    fn deadline_tick_itself_is_still_valid() {
+        // expiry is strictly *after* arrival + deadline: completing ON
+        // the deadline tick meets the SLO
+        let req = Request::new(0, 8, 1).at_tick(5, 500).deadline(10);
+        assert!(!deadline_expired(15, &req), "the deadline tick is valid");
+        assert!(deadline_expired(16, &req), "one past the deadline is not");
+        assert!(!deadline_expired(5, &req));
+    }
+
+    #[test]
+    fn zero_deadline_means_none() {
+        let req = Request::new(0, 8, 1).at_tick(5, 500);
+        assert!(!deadline_expired(u64::MAX, &req));
+    }
+
+    #[test]
+    fn huge_deadline_saturates_instead_of_wrapping() {
+        // pre-fix, arrival 5 + u64::MAX wrapped to 4 and the request was
+        // shed on arrival (clock 5 > 4); saturating_add pins "never"
+        let req = Request::new(0, 8, 1).at_tick(5, 500).deadline(u64::MAX);
+        assert!(!deadline_expired(5, &req));
+        assert!(!deadline_expired(u64::MAX, &req));
     }
 }

@@ -13,6 +13,13 @@ pub struct Recorder {
     /// decode step.
     prefill_us: Vec<u64>,
     decode_us: Vec<u64>,
+    /// SLO latencies (DESIGN.md §17): time-to-first-token — queueing wait
+    /// plus every prefill slice's execution — one sample per generation
+    /// that reached its first token; and inter-token latency — wall time
+    /// between consecutive emissions of one stream — one sample per
+    /// decode step past the first token.
+    ttft_us: Vec<u64>,
+    itl_us: Vec<u64>,
     tokens: usize,
     pub per_variant: HashMap<String, usize>,
     pub waves: usize,
@@ -74,6 +81,16 @@ pub struct Recorder {
     pub decode_waves: usize,
     /// Batched decode wave groups assembled (0 when `batch_decode` off).
     pub batched_decode_groups: usize,
+    /// Requests shed while still *waiting* (queued, never admitted) —
+    /// the complement that keeps the wait percentiles honest: waits are
+    /// admitted-only samples (recorded at a request's first admission),
+    /// so a run that sheds its stragglers reports this count alongside.
+    pub shed_wait: usize,
+    /// Chunked-prefill slices executed (0 with `prefill_chunk_tokens` 0).
+    pub prefill_slices: usize,
+    /// Waves where a prefill slice and a decode step shared the wave —
+    /// the interleaving that bounds decode ITL under long prompts.
+    pub interleaved_waves: usize,
 }
 
 impl Recorder {
@@ -103,6 +120,18 @@ impl Recorder {
         self.generated_tokens += 1;
     }
 
+    /// One generation's time-to-first-token (queueing wait + all prefill
+    /// slice executions, up to the LM head that selected the token).
+    pub fn record_ttft(&mut self, us: u64) {
+        self.ttft_us.push(us);
+    }
+
+    /// One inter-token gap: wall time since the same stream's previous
+    /// emission.
+    pub fn record_itl(&mut self, us: u64) {
+        self.itl_us.push(us);
+    }
+
     /// Observe the current resident KV-cache footprint (call after each
     /// wave; the report keeps the high-water mark).
     pub fn observe_resident_kv(&mut self, bytes: usize) {
@@ -126,6 +155,8 @@ impl Recorder {
         self.waits_us.sort_unstable();
         self.prefill_us.sort_unstable();
         self.decode_us.sort_unstable();
+        self.ttft_us.sort_unstable();
+        self.itl_us.sort_unstable();
         let completed = self.latencies_us.len();
         let pct = |v: &[u64], p: f64| -> u64 {
             if v.is_empty() {
@@ -174,6 +205,14 @@ impl Recorder {
             decode_dispatches: self.decode_dispatches,
             decode_waves: self.decode_waves,
             batched_decode_groups: self.batched_decode_groups,
+            shed_wait: self.shed_wait,
+            prefill_slices: self.prefill_slices,
+            interleaved_waves: self.interleaved_waves,
+            ttft_p50_us: pct(&self.ttft_us, 0.50),
+            ttft_p99_us: pct(&self.ttft_us, 0.99),
+            itl_p50_us: pct(&self.itl_us, 0.50),
+            itl_p99_us: pct(&self.itl_us, 0.99),
+            itl_samples: self.itl_us.len(),
             mean_us: if completed == 0 {
                 0
             } else {
@@ -258,6 +297,23 @@ pub struct MetricsReport {
     pub decode_waves: usize,
     /// Batched decode wave groups assembled (0 with `batch_decode` off).
     pub batched_decode_groups: usize,
+    /// Requests shed while queued (never admitted) — the complement of
+    /// the admitted-only wait percentiles.
+    pub shed_wait: usize,
+    /// Chunked-prefill slices executed across the run.
+    pub prefill_slices: usize,
+    /// Waves where a prefill slice and a decode step shared the wave.
+    pub interleaved_waves: usize,
+    /// Time-to-first-token percentiles (queueing wait + prefill
+    /// execution; zeros when nothing generated).
+    pub ttft_p50_us: u64,
+    pub ttft_p99_us: u64,
+    /// Inter-token-latency percentiles — the decode-SLO number chunked
+    /// prefill exists to bound (zeros below two emissions per stream).
+    pub itl_p50_us: u64,
+    pub itl_p99_us: u64,
+    /// Inter-token gaps sampled across the run.
+    pub itl_samples: usize,
     pub mean_us: u64,
     pub per_variant: HashMap<String, usize>,
 }
@@ -320,9 +376,32 @@ impl MetricsReport {
                     self.batched_decode_groups,
                 ));
             }
+            if self.ttft_p99_us > 0 || self.itl_samples > 0 {
+                s.push_str(&format!(
+                    "\nslo: ttft p50={:.2}ms p99={:.2}ms | itl p50={:.2}ms p99={:.2}ms \
+                     ({} gaps)",
+                    self.ttft_p50_us as f64 / 1e3,
+                    self.ttft_p99_us as f64 / 1e3,
+                    self.itl_p50_us as f64 / 1e3,
+                    self.itl_p99_us as f64 / 1e3,
+                    self.itl_samples,
+                ));
+            }
+            if self.prefill_slices > 0 {
+                s.push_str(&format!(
+                    "\nchunked prefill: {} slices, {} interleaved waves",
+                    self.prefill_slices, self.interleaved_waves,
+                ));
+            }
         }
         let total_errors: usize = self.errors_by_kind.values().sum();
-        if self.shed + self.deadline_missed + self.retries + self.waves_audited + total_errors > 0
+        if self.shed
+            + self.shed_wait
+            + self.deadline_missed
+            + self.retries
+            + self.waves_audited
+            + total_errors
+            > 0
             || self.fault_injections > 0
         {
             let mut kinds: Vec<_> = self.errors_by_kind.iter().collect();
@@ -333,9 +412,10 @@ impl MetricsReport {
                 .collect::<Vec<_>>()
                 .join(" ");
             s.push_str(&format!(
-                "\nrobustness: shed={} deadline-missed={} retries={} faults-injected={} | \
-                 audited {} waves, {} violations | errors: {}",
+                "\nrobustness: shed={} shed-wait={} deadline-missed={} retries={} \
+                 faults-injected={} | audited {} waves, {} violations | errors: {}",
                 self.shed,
+                self.shed_wait,
                 self.deadline_missed,
                 self.retries,
                 self.fault_injections,
@@ -460,6 +540,58 @@ mod tests {
         assert!(s.contains("retries=3"), "{s}");
         assert!(s.contains("faults-injected=5"), "{s}");
         assert!(s.contains("kernel_poisoned:2"), "{s}");
+    }
+
+    #[test]
+    fn slo_percentiles_computed() {
+        let mut r = Recorder::new();
+        r.record("v", 10, 8);
+        r.record_decode(100); // makes the generation block render
+        for t in [1000u64, 2000, 3000, 4000] {
+            r.record_ttft(t);
+        }
+        for g in [10u64, 20, 30, 40, 400] {
+            r.record_itl(g);
+        }
+        let rep = r.finish(Duration::from_secs(1));
+        assert!(rep.ttft_p50_us >= 1000 && rep.ttft_p50_us <= 3000);
+        assert_eq!(rep.ttft_p99_us, 4000);
+        assert!(rep.itl_p50_us >= 10 && rep.itl_p50_us <= 40);
+        assert_eq!(rep.itl_p99_us, 400);
+        assert_eq!(rep.itl_samples, 5);
+        let s = rep.render();
+        assert!(s.contains("ttft"), "{s}");
+        assert!(s.contains("itl"), "{s}");
+    }
+
+    #[test]
+    fn slo_line_absent_without_samples() {
+        let mut r = Recorder::new();
+        r.record("v", 10, 8);
+        r.record_decode(100);
+        let rep = r.finish(Duration::from_secs(1));
+        assert_eq!(rep.ttft_p99_us, 0);
+        assert_eq!(rep.itl_samples, 0);
+        assert!(!rep.render().contains("slo:"), "{}", rep.render());
+        assert!(!rep.render().contains("chunked prefill"), "{}", rep.render());
+    }
+
+    #[test]
+    fn shed_wait_and_slice_counters_render() {
+        let mut r = Recorder::new();
+        r.record("v", 10, 8);
+        r.record_decode(100);
+        r.shed_wait = 3;
+        r.prefill_slices = 7;
+        r.interleaved_waves = 2;
+        let rep = r.finish(Duration::from_secs(1));
+        assert_eq!(rep.shed_wait, 3);
+        assert_eq!(rep.prefill_slices, 7);
+        assert_eq!(rep.interleaved_waves, 2);
+        let s = rep.render();
+        assert!(s.contains("shed-wait=3"), "{s}");
+        assert!(s.contains("7 slices"), "{s}");
+        assert!(s.contains("2 interleaved waves"), "{s}");
     }
 
     #[test]

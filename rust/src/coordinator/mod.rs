@@ -29,12 +29,13 @@ pub mod request;
 pub use audit::{AuditReport, Auditor};
 pub use cache_manager::CacheManager;
 pub use engine::{
-    batch_decode_default, greedy_argmax, pad_prompt, EngineConfig, EngineError, EngineResponse,
-    PlanKind, RejectReason, ServeEngine,
+    batch_decode_default, greedy_argmax, pad_prompt, prefill_chunk_default, EngineConfig,
+    EngineError, EngineResponse, PlanKind, RejectReason, ServeEngine,
 };
 pub use metrics::{MetricsReport, Recorder};
 pub use request::{
-    generate_workload, open_loop_workload, synthetic_workload, Request, RequestOutcome, Response,
+    generate_workload, open_loop_workload, poisson_workload, synthetic_workload, Request,
+    RequestOutcome, Response,
 };
 
 use crate::runtime::{ArtifactMeta, Runtime};

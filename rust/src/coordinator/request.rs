@@ -169,6 +169,41 @@ pub fn generate_workload(
         .collect()
 }
 
+/// Open-loop *Poisson* generation workload: like [`generate_workload`],
+/// but arrival ticks follow a Poisson process at `rate_per_tick`
+/// (exponential inter-arrival gaps, inverse-CDF sampled from the same
+/// deterministic xorshift stream). This is the serving-paper workload
+/// shape — bursts and lulls instead of a fixed per-tick drip — so queue
+/// depth, and hence TTFT/ITL tail latency, is part of the trace.
+pub fn poisson_workload(
+    count: usize,
+    min_len: usize,
+    max_len: usize,
+    min_new: usize,
+    max_new: usize,
+    seed: u64,
+    rate_per_tick: f64,
+) -> Vec<Request> {
+    assert!(rate_per_tick > 0.0, "arrival rate must be positive");
+    let mut state = seed.wrapping_mul(0xA24BAED4963EE407) | 1;
+    let mut rnd = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    let mut t = 0.0f64;
+    generate_workload(count, min_len, max_len, min_new, max_new, seed, 1)
+        .into_iter()
+        .map(|r| {
+            // u ∈ (0, 1]: 53 high bits + 1 so ln never sees zero
+            let u = ((rnd() >> 11) as f64 + 1.0) / (1u64 << 53) as f64;
+            t += -u.ln() / rate_per_tick;
+            r.at_tick(t as u64, 500)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -205,6 +240,37 @@ mod tests {
             assert!((2..=6).contains(&x.max_new_tokens));
             assert_eq!(x.total_len(), x.seq_len + x.max_new_tokens - 1);
         }
+    }
+
+    #[test]
+    fn poisson_workload_is_deterministic_and_monotone() {
+        let a = poisson_workload(40, 8, 32, 2, 6, 11, 0.5);
+        let b = poisson_workload(40, 8, 32, 2, 6, 11, 0.5);
+        assert_eq!(a.len(), 40);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_tick, y.arrival_tick, "not deterministic");
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+        let ticks: Vec<u64> = a.iter().map(|r| r.arrival_tick).collect();
+        assert!(ticks.windows(2).all(|w| w[0] <= w[1]), "{ticks:?}");
+        // mean inter-arrival ≈ 1/rate = 2 ticks: the 40th arrival should
+        // land far from 0 but nowhere near a degenerate spread
+        let last = *ticks.last().unwrap();
+        assert!((20..=320).contains(&last), "last arrival at {last}");
+        for r in &a {
+            assert_eq!(r.arrival_offset_us, r.arrival_tick * 500);
+        }
+    }
+
+    #[test]
+    fn poisson_rate_scales_arrival_span() {
+        let slow = poisson_workload(30, 8, 32, 2, 4, 3, 0.25);
+        let fast = poisson_workload(30, 8, 32, 2, 4, 3, 4.0);
+        assert!(
+            slow.last().unwrap().arrival_tick > fast.last().unwrap().arrival_tick,
+            "quadrupled rate should compress the trace"
+        );
     }
 
     #[test]

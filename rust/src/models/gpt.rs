@@ -569,6 +569,209 @@ pub fn gpt_decode_paged(cfg: &GptConfig, past: usize, block_tokens: usize) -> Gr
     b.finish(outputs)
 }
 
+/// One chunked-prefill slice: `n` consecutive prompt rows at absolute
+/// positions `past..past+n`, computed against the KV rows of the
+/// `past` positions already cached (DESIGN.md §17). This generalizes
+/// [`gpt_decode`] from one query row to `n` — decode is exactly the
+/// `n == 1` slice — and is the graph the serve engine interleaves with
+/// decode waves so a long prefill never convoys in-flight generations.
+///
+/// Inputs: `tokens [n] i32`, then (when `past > 0`) the per-layer
+/// persistent cache — monolithic `l{li}.k_cache`/`v_cache` `[h,seq,dh]`
+/// when `block_tokens == 0`, or `ceil(past / block_tokens)` K blocks then
+/// V blocks per layer (block-table order, tail block sliced to its valid
+/// rows) when paged, exactly like [`gpt_decode_paged`]. The first slice
+/// (`past == 0`) binds no cache. Outputs: `[hidden [n,d], k_new_0
+/// [h,n,dh], v_new_0, …]` — the engine appends the `*_new` rows at
+/// positions `past..past+n` after the slice.
+///
+/// Bitwise parity with monolithic [`gpt_prefill_kv`], by induction over
+/// slices (pinned in this module's `prefill_chunk_*` tests and
+/// end-to-end in `rust/tests/serve_engine.rs`): the `[n,s]` additive
+/// mask is built from the same exact-integer iota/sub/relu pipeline as
+/// the prefill mask, so its rows are bit-identical to prefill's rows
+/// `past..past+n`; the key/value axis is rebuilt at full bucket length
+/// from the cached prefix (bit-identical to prefill's K/V rows by the
+/// induction hypothesis), the slice's own new rows, and a masked zero
+/// tail that is an exact no-op (any finite masked score underflows to
+/// an exact `+0.0` probability; the fused kernel never reads past the
+/// query position). Row-wise ops and matmul's per-row decomposition do
+/// the rest: every hidden and K/V row matches the monolithic graph bit
+/// for bit, so a prefill split at *any* chunk boundaries — including a
+/// pause/resume across waves — yields the same first token.
+pub fn gpt_prefill_chunk(cfg: &GptConfig, past: usize, n: usize, block_tokens: usize) -> Graph {
+    assert_eq!(cfg.d_model % cfg.heads, 0);
+    let (s, d, h) = (cfg.seq, cfg.d_model, cfg.heads);
+    let dh = d / h;
+    let scale = 1.0 / (dh as f32).sqrt();
+    assert!(n >= 1, "empty prefill slice");
+    assert!(past + n <= s, "slice {past}+{n} outside bucket {s}");
+    let paged = block_tokens > 0 && past > 0;
+    let nblk = if paged { past.div_ceil(block_tokens) } else { 0 };
+    let rem = if paged { past - (nblk - 1) * block_tokens } else { 0 };
+    let name = if cfg.fused_attention { "gpt_prefill_chunk_fused" } else { "gpt_prefill_chunk" };
+    let suffix = if block_tokens > 0 {
+        format!("_p{past}_n{n}_blk{block_tokens}")
+    } else {
+        format!("_p{past}_n{n}")
+    };
+    let mut b = GraphBuilder::new(&format!("{name}{suffix}"));
+
+    // ---- inputs: the slice's tokens, then per-layer persistent caches
+    // (none on the first slice — there is nothing cached yet)
+    let tok = b.input_i32("tokens", &[n]);
+    let mut k_caches: Vec<NodeId> = Vec::new();
+    let mut v_caches: Vec<NodeId> = Vec::new();
+    let mut k_blocks: Vec<Vec<NodeId>> = Vec::new();
+    let mut v_blocks: Vec<Vec<NodeId>> = Vec::new();
+    if past > 0 {
+        for li in 0..cfg.layers {
+            if paged {
+                let ks = (0..nblk)
+                    .map(|bi| b.input_persistent(&format!("l{li}.k_blk{bi}"), &[h, block_tokens, dh]))
+                    .collect();
+                let vs = (0..nblk)
+                    .map(|bi| b.input_persistent(&format!("l{li}.v_blk{bi}"), &[h, block_tokens, dh]))
+                    .collect();
+                k_blocks.push(ks);
+                v_blocks.push(vs);
+            } else {
+                k_caches.push(b.input_persistent(&format!("l{li}.k_cache"), &[h, s, dh]));
+                v_caches.push(b.input_persistent(&format!("l{li}.v_cache"), &[h, s, dh]));
+            }
+        }
+    }
+
+    // ---- embedding (same param order as gpt / gpt_prefill_kv / gpt_decode)
+    let wte = b.param("wte", &[cfg.vocab, d]);
+    let wpe = b.param("wpe", &[s, d]);
+    let emb = b.gather(wte, tok); // [n, d]
+    let wpe_rows = b.slice(wpe, 0, past, n); // [n, d]
+    let mut x = b.add(emb, wpe_rows);
+
+    // Causal mask [n, s] for query rows at absolute positions past..past+n:
+    // relu(j − (past + r)) · (−1e30). iota/add/sub over exact small
+    // integers, so row r is bitwise identical to row past+r of the
+    // prefill mask (dense path only).
+    let key_mask = (!cfg.fused_attention).then(|| {
+        let ii = b.iota(&[n, s], 0);
+        let jj = b.iota(&[n, s], 1);
+        let qpos = b.binary_scalar(BinaryOp::Add, ii, past as f32);
+        let diff = b.sub(jj, qpos);
+        let step = b.unary(UnaryOp::Relu, diff);
+        let mask = b.binary_scalar(BinaryOp::Mul, step, -CAUSAL_NEG);
+        b.label(mask, "chunk.key_mask");
+        mask
+    });
+    // Fused path: the slice rows' absolute positions.
+    let q_pos = cfg.fused_attention.then(|| {
+        let ii = b.iota(&[n], 0);
+        let pos = b.binary_scalar(BinaryOp::Add, ii, past as f32);
+        b.label(pos, "chunk.q_pos");
+        pos
+    });
+
+    // Masked tail beyond past+n: finite zeros, unobservable under the
+    // mask (see gpt_decode_paged). One broadcast serves every layer.
+    let tail = s - past - n;
+    let zero_tail = (tail > 0).then(|| {
+        let zc = b.constant(0.0);
+        let zt = b.broadcast(zc, &[h, tail, dh]);
+        b.label(zt, "chunk.zero_tail");
+        zt
+    });
+
+    let mut outputs_kv: Vec<NodeId> = Vec::with_capacity(2 * cfg.layers);
+    for li in 0..cfg.layers {
+        let g1 = b.param(&format!("l{li}.ln1.g"), &[d]);
+        let b1 = b.param(&format!("l{li}.ln1.b"), &[d]);
+        let xn = b.layer_norm(x, g1, b1, 1e-5);
+
+        let wq = b.param(&format!("l{li}.wq"), &[d, d]);
+        let wk = b.param(&format!("l{li}.wk"), &[d, d]);
+        let wv = b.param(&format!("l{li}.wv"), &[d, d]);
+        let wo = b.param(&format!("l{li}.wo"), &[d, d]);
+
+        let q = b.matmul(xn, wq); // [n, d]
+        let k = b.matmul(xn, wk);
+        let v = b.matmul(xn, wv);
+        let qh = b.reshape(q, &[n, h, dh]);
+        let qh = b.transpose(qh, &[1, 0, 2]); // [h, n, dh]
+        let kh_new = b.reshape(k, &[n, h, dh]);
+        let kh_new = b.transpose(kh_new, &[1, 0, 2]);
+        let vh_new = b.reshape(v, &[n, h, dh]);
+        let vh_new = b.transpose(vh_new, &[1, 0, 2]);
+
+        // Rebuild the full-length key/value axis: cached prefix (absent
+        // on the first slice), this slice's new rows at past..past+n,
+        // then the masked zero tail.
+        let mut k_parts: Vec<NodeId> = Vec::with_capacity(nblk + 2);
+        let mut v_parts: Vec<NodeId> = Vec::with_capacity(nblk + 2);
+        if past > 0 {
+            if paged {
+                for bi in 0..nblk {
+                    let rows = if bi + 1 == nblk { rem } else { block_tokens };
+                    if rows == block_tokens {
+                        k_parts.push(k_blocks[li][bi]);
+                        v_parts.push(v_blocks[li][bi]);
+                    } else {
+                        k_parts.push(b.slice(k_blocks[li][bi], 1, 0, rows));
+                        v_parts.push(b.slice(v_blocks[li][bi], 1, 0, rows));
+                    }
+                }
+            } else {
+                k_parts.push(b.slice(k_caches[li], 1, 0, past));
+                v_parts.push(b.slice(v_caches[li], 1, 0, past));
+            }
+        }
+        k_parts.push(kh_new);
+        v_parts.push(vh_new);
+        if let Some(zt) = zero_tail {
+            k_parts.push(zt);
+            v_parts.push(zt);
+        }
+        let k_attn = b.concat(&k_parts, 1); // [h, s, dh]
+        let v_attn = b.concat(&v_parts, 1);
+
+        let ctx = if cfg.fused_attention {
+            b.fused_attention_pos(qh, k_attn, v_attn, q_pos.unwrap(), scale)
+        } else {
+            let kt = b.transpose(k_attn, &[0, 2, 1]); // [h, dh, s]
+            let scores = b.matmul(qh, kt); // [h, n, s]
+            let scaled = b.binary_scalar(BinaryOp::Mul, scores, scale);
+            let masked = b.add(scaled, key_mask.unwrap());
+            let probs = b.softmax(masked, 2);
+            b.matmul(probs, v_attn) // [h, n, dh]
+        };
+        let ctx_t = b.transpose(ctx, &[1, 0, 2]); // [n, h, dh]
+        let ctx_t = b.reshape(ctx_t, &[n, d]);
+        let attn_out = b.matmul(ctx_t, wo);
+        let res1 = b.add(attn_out, x);
+
+        let g2 = b.param(&format!("l{li}.ln2.g"), &[d]);
+        let b2 = b.param(&format!("l{li}.ln2.b"), &[d]);
+        let rn = b.layer_norm(res1, g2, b2, 1e-5);
+        let w1 = b.param(&format!("l{li}.ff.w1"), &[d, cfg.ff_mult * d]);
+        let bb1 = b.param(&format!("l{li}.ff.b1"), &[cfg.ff_mult * d]);
+        let w2 = b.param(&format!("l{li}.ff.w2"), &[cfg.ff_mult * d, d]);
+        let bb2 = b.param(&format!("l{li}.ff.b2"), &[d]);
+        let hmid = b.linear(rn, w1, bb1);
+        let act = b.unary(UnaryOp::Gelu, hmid);
+        let ff = b.linear(act, w2, bb2);
+        x = b.add(ff, res1);
+
+        outputs_kv.push(kh_new);
+        outputs_kv.push(vh_new);
+    }
+
+    let gf = b.param("lnf.g", &[d]);
+    let bf = b.param("lnf.b", &[d]);
+    let out = b.layer_norm(x, gf, bf, 1e-5);
+    let mut outputs = vec![out];
+    outputs.extend(outputs_kv);
+    b.finish(outputs)
+}
+
 /// Padded per-request block-slot count for the batched decode graph.
 /// The wave's plan is keyed by shape bucket, not by each member's `past`,
 /// so every member binds `ceil(seq / block_tokens)` block slots per layer
@@ -1106,6 +1309,127 @@ mod tests {
                             "output {oi} diverged (fused={fused} past={past} bt={bt})"
                         );
                     }
+                }
+            }
+        }
+    }
+
+    /// A prefill split at *any* chunk boundaries must reproduce the
+    /// monolithic prefill bit for bit: each slice's hidden rows and new
+    /// K/V rows equal `gpt_prefill_kv`'s rows `past..past+n` — dense and
+    /// fused, contiguous and paged caches, even and uneven splits. This
+    /// is the serve engine's license to pause a prefill between slices
+    /// and resume it waves later without perturbing the stream.
+    #[test]
+    fn prefill_chunk_matches_monolithic_prefill_bitwise() {
+        let base = GptConfig {
+            seq: 24,
+            d_model: 32,
+            heads: 4,
+            layers: 2,
+            vocab: 64,
+            ..Default::default()
+        };
+        let (h, dh, s, d) = (base.heads, base.head_dim(), base.seq, base.d_model);
+        let ids: Vec<i32> = (0..s as i32).map(|i| (i * 7 + 3) % 64).collect();
+        let bits = |v: &[f32]| -> Vec<u32> { v.iter().map(|x| x.to_bits()).collect() };
+        for fused in [false, true] {
+            let cfg = GptConfig { fused_attention: fused, ..base.clone() };
+            let gref = gpt_prefill_kv(&cfg);
+            let pref = random_params(&gref, 5);
+            let tref = MemoryTracker::new();
+            let ins_ref = vec![crate::tensor::Tensor::from_i32(ids.clone(), &[s], None)];
+            let (oref, _) = execute(&gref, &ins_ref, &pref, &tref);
+            let href = oref[0].to_vec_f32(); // [s, d]
+            let kvref: Vec<Vec<f32>> = oref[1..].iter().map(|t| t.to_vec_f32()).collect();
+
+            for &bt in &[0usize, 8] {
+                for splits in [vec![8usize, 8, 8], vec![7, 5, 12], vec![1, 23], vec![24]] {
+                    // Engine-maintained cache stand-in: [h, s, dh] flat per
+                    // layer, rows past.. still zero (never written).
+                    let mut kc = vec![vec![0f32; h * s * dh]; cfg.layers];
+                    let mut vc = vec![vec![0f32; h * s * dh]; cfg.layers];
+                    let mut past = 0usize;
+                    for &n in &splits {
+                        let g = gpt_prefill_chunk(&cfg, past, n, bt);
+                        assert!(g.validate().is_ok(), "{:?}", g.validate());
+                        assert_eq!(g.params.len(), gref.params.len());
+                        for (&a, &b) in gref.params.iter().zip(&g.params) {
+                            assert_eq!(gref.node(a).name, g.node(b).name);
+                            assert_eq!(gref.node(a).shape, g.node(b).shape);
+                        }
+                        if past > 0 {
+                            if bt > 0 {
+                                let nblk = past.div_ceil(bt);
+                                assert_eq!(g.persistent.len(), 2 * cfg.layers * nblk);
+                            } else {
+                                assert_eq!(g.persistent_bytes(), cfg.kv_cache_bytes());
+                            }
+                        } else {
+                            assert!(g.persistent.is_empty(), "first slice binds no cache");
+                        }
+                        let ps = random_params(&g, 5);
+                        let mut ins = vec![crate::tensor::Tensor::from_i32(
+                            ids[past..past + n].to_vec(),
+                            &[n],
+                            None,
+                        )];
+                        if past > 0 {
+                            let nblk = past.div_ceil(bt.max(1));
+                            for l in 0..cfg.layers {
+                                let kf = crate::tensor::Tensor::from_f32(
+                                    kc[l].clone(),
+                                    &[h, s, dh],
+                                    None,
+                                );
+                                let vf = crate::tensor::Tensor::from_f32(
+                                    vc[l].clone(),
+                                    &[h, s, dh],
+                                    None,
+                                );
+                                if bt > 0 {
+                                    for bi in 0..nblk {
+                                        ins.push(kf.slice_axis(1, bi * bt, bt).to_contiguous(None));
+                                    }
+                                    for bi in 0..nblk {
+                                        ins.push(vf.slice_axis(1, bi * bt, bt).to_contiguous(None));
+                                    }
+                                } else {
+                                    ins.push(kf);
+                                    ins.push(vf);
+                                }
+                            }
+                        }
+                        let t = MemoryTracker::new();
+                        let (outs, _) = execute(&g, &ins, &ps, &t);
+                        assert_eq!(outs.len(), 1 + 2 * cfg.layers);
+                        assert_eq!(
+                            bits(&outs[0].to_vec_f32()),
+                            bits(&href[past * d..(past + n) * d]),
+                            "hidden rows diverged (fused={fused} bt={bt} past={past} n={n})"
+                        );
+                        for l in 0..cfg.layers {
+                            for (oi, cache) in [(1 + 2 * l, &mut kc[l]), (2 + 2 * l, &mut vc[l])] {
+                                let new = outs[oi].to_vec_f32(); // [h, n, dh]
+                                let rf = &kvref[oi - 1];
+                                for hh in 0..h {
+                                    let got = &new[hh * n * dh..(hh + 1) * n * dh];
+                                    let want = &rf[hh * s * dh + past * dh
+                                        ..hh * s * dh + (past + n) * dh];
+                                    assert_eq!(
+                                        bits(got),
+                                        bits(want),
+                                        "kv rows diverged (fused={fused} bt={bt} past={past} n={n} out={oi} h={hh})"
+                                    );
+                                    cache[hh * s * dh + past * dh
+                                        ..hh * s * dh + (past + n) * dh]
+                                        .copy_from_slice(got);
+                                }
+                            }
+                        }
+                        past += n;
+                    }
+                    assert_eq!(past, s);
                 }
             }
         }

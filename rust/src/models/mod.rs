@@ -19,7 +19,7 @@ pub mod vit;
 pub use evoformer::{evoformer, EvoformerConfig};
 pub use gpt::{
     batched_block_slots, gpt, gpt_decode, gpt_decode_batched, gpt_decode_paged, gpt_lm_head,
-    gpt_lm_head_batched, gpt_prefill_kv, lm_head_params, GptConfig,
+    gpt_lm_head_batched, gpt_prefill_chunk, gpt_prefill_kv, lm_head_params, GptConfig,
 };
 pub use unet::{unet, UNetConfig};
 pub use vit::{vit, ViTConfig};

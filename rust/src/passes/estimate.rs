@@ -245,7 +245,11 @@ fn simulate(graph: &Graph, plans: &[ChunkPlan], pessimistic: bool) -> MemoryProf
 
         // Parameters occupy parameter memory, not activation memory.
         // Persistent inputs (KV caches) are resident state charged by the
-        // serving tier, not per-run activation (DESIGN.md §13).
+        // serving tier, not per-run activation (DESIGN.md §13). This is
+        // what makes a chunked-prefill slice graph cheap to admit: the
+        // cached prefix it re-binds is excluded here and priced once as
+        // residency, so a slice's quote scales with its `n` rows, not the
+        // full prompt (DESIGN.md §17).
         let is_param = matches!(node.op, Op::Param) || graph.is_persistent(id);
 
         // Region scaling: intermediates of a chunked region cost 1/n.
@@ -682,5 +686,26 @@ mod tests {
             (chunked as f64) < 0.45 * base as f64,
             "chunked {chunked} vs base {base}"
         );
+    }
+
+    #[test]
+    fn prefill_slice_priced_at_slice_scale_not_prompt_scale() {
+        use crate::models::{gpt, gpt_prefill_chunk, GptConfig};
+        // What makes chunked-prefill admission work: the slice graph's
+        // cached prefix is a persistent input — resident state the engine
+        // prices separately — so the slice's activation quote tracks its
+        // own `n` rows, not the whole prompt.
+        let cfg = GptConfig { seq: 256, ..Default::default() };
+        let full = estimate(&gpt(&cfg)).peak_bytes;
+        let slice = estimate(&gpt_prefill_chunk(&cfg, 224, 32, 0));
+        assert!(slice.persistent_bytes > 0, "cached prefix must be persistent");
+        assert!(
+            slice.peak_bytes < full,
+            "32-row slice ({}) must be cheaper than the 256-row prefill ({full})",
+            slice.peak_bytes
+        );
+        // and the prefix bytes are in the persistent channel, not the peak
+        let first_slice = estimate(&gpt_prefill_chunk(&cfg, 0, 32, 0));
+        assert_eq!(first_slice.persistent_bytes, 0, "past-0 slice binds no cache");
     }
 }

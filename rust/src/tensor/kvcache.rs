@@ -151,6 +151,36 @@ impl KvCache {
         self.len += 1;
     }
 
+    /// Write a chunked-prefill slice's `[h, n, dh]` K/V rows at positions
+    /// `len..len+n` for `layer`. Call [`KvCache::advance_by`] once every
+    /// layer is appended.
+    pub fn append_rows(&mut self, layer: usize, k: &Tensor, v: &Tensor) {
+        let n = k.shape()[1];
+        assert!(self.len + n <= self.capacity, "slice {}+{n} over capacity {}", self.len, self.capacity);
+        let want = [self.heads, n, self.head_dim];
+        assert_eq!(k.shape(), &want[..], "append k shape");
+        assert_eq!(v.shape(), &want[..], "append v shape");
+        let (cap, dh, at) = (self.capacity, self.head_dim, self.len);
+        let ksrc = k.to_vec_f32();
+        let kd = self.ks[layer].f32_mut().expect("cache k aliased during append");
+        for h in 0..self.heads {
+            kd[h * cap * dh + at * dh..h * cap * dh + (at + n) * dh]
+                .copy_from_slice(&ksrc[h * n * dh..(h + 1) * n * dh]);
+        }
+        let vsrc = v.to_vec_f32();
+        let vd = self.vs[layer].f32_mut().expect("cache v aliased during append");
+        for h in 0..self.heads {
+            vd[h * cap * dh + at * dh..h * cap * dh + (at + n) * dh]
+                .copy_from_slice(&vsrc[h * n * dh..(h + 1) * n * dh]);
+        }
+    }
+
+    /// Advance the logical length by `n` after a slice append.
+    pub fn advance_by(&mut self, n: usize) {
+        assert!(self.len + n <= self.capacity, "slice {}+{n} over capacity {}", self.len, self.capacity);
+        self.len += n;
+    }
+
     /// Full-capacity K tensor for `layer` — the decode graph's persistent
     /// input (cheap clone of the shared buffer; drop it before the next
     /// append).
@@ -248,6 +278,42 @@ mod tests {
         let a: Vec<u32> = got.to_vec_f32().iter().map(|x| x.to_bits()).collect();
         let b: Vec<u32> = want.to_vec_f32().iter().map(|x| x.to_bits()).collect();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn append_rows_matches_looped_append() {
+        // A slice append must leave exactly the bytes n single-row
+        // appends would — same rows, same positions, same strides.
+        let (h, cap, dh, n) = (2usize, 12usize, 4usize, 5usize);
+        let k = Tensor::rand(&[h, n, dh], 1.0, 11, None);
+        let v = Tensor::rand(&[h, n, dh], 1.0, 12, None);
+        let mut a = KvCache::new(1, h, cap, dh, None);
+        a.append_rows(0, &k, &v);
+        a.advance_by(n);
+        let mut b = KvCache::new(1, h, cap, dh, None);
+        for r in 0..n {
+            b.append(0, &k.slice_axis(1, r, 1).to_contiguous(None), &v.slice_axis(1, r, 1).to_contiguous(None));
+            b.advance();
+        }
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.k_full(0).to_vec_f32(), b.k_full(0).to_vec_f32());
+        assert_eq!(a.v_full(0).to_vec_f32(), b.v_full(0).to_vec_f32());
+        // strided sources (a transposed view) are accepted too
+        let mut c = KvCache::new(1, h, cap, dh, None);
+        let kt = k.permute(&[0, 1, 2]); // identity permute keeps layout
+        c.append_rows(0, &kt, &v);
+        c.advance_by(n);
+        assert_eq!(c.k_full(0).to_vec_f32(), a.k_full(0).to_vec_f32());
+    }
+
+    #[test]
+    #[should_panic(expected = "over capacity")]
+    fn append_rows_past_capacity_panics() {
+        let mut c = KvCache::new(1, 1, 4, 2, None);
+        c.set_len(2);
+        let k = Tensor::rand(&[1, 3, 2], 1.0, 1, None);
+        let v = Tensor::rand(&[1, 3, 2], 1.0, 2, None);
+        c.append_rows(0, &k, &v);
     }
 
     #[test]

@@ -281,6 +281,13 @@ impl BlockTable {
         self.blocks.push(id);
     }
 
+    /// Remove and return the tail block — the rollback of a failed
+    /// multi-block grow (the caller owns refcounting, as with
+    /// [`BlockTable::push_block`]).
+    pub fn pop_block(&mut self) -> Option<BlockId> {
+        self.blocks.pop()
+    }
+
     /// Replace the block at `index` (copy-on-write swap); returns the
     /// previous id so the caller can release its reference.
     pub fn swap_block(&mut self, index: usize, id: BlockId) -> BlockId {

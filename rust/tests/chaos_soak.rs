@@ -1,7 +1,7 @@
 //! Chaos soak (ISSUE 6 headline): random seeded fault schedules ×
-//! random generation workloads, on both cache backends and on both decode
-//! paths (looped and batched, DESIGN.md §16). Under injection the engine
-//! must
+//! random generation workloads, on both cache backends, on both decode
+//! paths (looped and batched, DESIGN.md §16), and with chunked prefill
+//! on and off (DESIGN.md §17). Under injection the engine must
 //!
 //! * never panic out of `serve` (injected faults are caught at the wave
 //!   boundary and become typed, retryable errors);
@@ -44,7 +44,13 @@ fn base_seed() -> u64 {
         .unwrap_or(0xA07C_5EED)
 }
 
-fn engine(budget: usize, paged: bool, batch: bool, faults: Option<Arc<FaultPlan>>) -> ServeEngine {
+fn engine(
+    budget: usize,
+    paged: bool,
+    batch: bool,
+    chunk: usize,
+    faults: Option<Arc<FaultPlan>>,
+) -> ServeEngine {
     ServeEngine::new(EngineConfig {
         model: "gpt".into(),
         budget_bytes: budget,
@@ -52,6 +58,7 @@ fn engine(budget: usize, paged: bool, batch: bool, faults: Option<Arc<FaultPlan>
         buckets: vec![16],
         worker_threads: 0,
         batch_decode: batch,
+        prefill_chunk_tokens: chunk,
         block_tokens: if paged { 8 } else { 0 },
         audit: true,
         faults,
@@ -63,7 +70,7 @@ fn engine(budget: usize, paged: bool, batch: bool, faults: Option<Arc<FaultPlan>
 /// here comes from injected faults, not from memory pressure (the
 /// eviction/deepening paths have their own tests).
 fn budget() -> usize {
-    let mut probe = engine(usize::MAX, false, false, None);
+    let mut probe = engine(usize::MAX, false, false, 0, None);
     let (_, q) = probe.quote(16, 0).unwrap().expect("bucket quote");
     (q.peak_bytes + probe.kv_bytes(16)) * 4
 }
@@ -111,14 +118,19 @@ fn chaos_soak_never_panics_and_invariants_hold() {
         // cross the batched decode path into the soak: half the trials run
         // fused waves under the same fault schedules
         let batch = (trial / 2) % 2 == 1;
+        // ... and chunked prefill (§17): a 4-token slice budget on the
+        // 4..12-token prompts splits most prefills, so injected faults
+        // land mid-prefill — on paused, partially-cached generations
+        let chunk = if (trial / 4) % 2 == 1 { 4 } else { 0 };
         let wseed = base.wrapping_add(widx as u64 * 7919);
         let reqs = workload(wseed);
 
-        // The baseline is always the *looped* fault-free run: comparing
-        // batched trials against it folds the §16 bitwise parity contract
-        // into the soak.
+        // The baseline is always the *looped, monolithic-prefill*
+        // fault-free run: comparing batched trials against it folds the
+        // §16 bitwise parity contract into the soak, and chunked trials
+        // the §17 one.
         let baseline = baselines.entry((widx, paged)).or_insert_with(|| {
-            let (resp, rep) = engine(budget, paged, false, None)
+            let (resp, rep) = engine(budget, paged, false, 0, None)
                 .serve(&reqs)
                 .expect("fault-free baseline must serve");
             assert_eq!(rep.audit_violations, 0, "baseline audit: {:?}", rep.audit_log);
@@ -132,11 +144,11 @@ fn chaos_soak_never_panics_and_invariants_hold() {
         }
         let plan = Arc::new(plan);
 
-        let served = engine(budget, paged, batch, Some(plan.clone())).serve(&reqs);
+        let served = engine(budget, paged, batch, chunk, Some(plan.clone())).serve(&reqs);
         let (resp, report) = served.unwrap_or_else(|e| {
             panic!(
-                "trial {trial} (paged={paged} batch={batch}): serve aborted under chaos: \
-                 {e} — {}",
+                "trial {trial} (paged={paged} batch={batch} chunk={chunk}): serve aborted \
+                 under chaos: {e} — {}",
                 plan.report()
             )
         });
@@ -182,8 +194,9 @@ fn chaos_soak_never_panics_and_invariants_hold() {
                 assert_eq!(
                     &rkey(r),
                     base_key,
-                    "trial {trial} (batch={batch}): untouched request {} diverged from the \
-                     fault-free looped run (replay: AUTOCHUNK_CHAOS_SEED={base}, plan {})",
+                    "trial {trial} (batch={batch} chunk={chunk}): untouched request {} \
+                     diverged from the fault-free looped run (replay: \
+                     AUTOCHUNK_CHAOS_SEED={base}, plan {})",
                     r.id,
                     plan.report()
                 );
@@ -193,14 +206,16 @@ fn chaos_soak_never_panics_and_invariants_hold() {
 
         total_injected += report.fault_injections;
         artifact.push(format!(
-            "trial={trial} paged={paged} batch={batch} workload={widx} {} | waves_audited={} \
-             violations={} shed={} retries={} deadline_missed={} touched={} compared={compared}",
+            "trial={trial} paged={paged} batch={batch} chunk={chunk} workload={widx} {} | \
+             waves_audited={} violations={} shed={} retries={} deadline_missed={} slices={} \
+             touched={} compared={compared}",
             plan.report(),
             report.waves_audited,
             report.audit_violations,
             report.shed,
             report.retries,
             report.deadline_missed,
+            report.prefill_slices,
             resp.iter().filter(|r| r.fault_touched).count(),
         ));
         // rewrite the artifact each trial so a failing run still ships it
@@ -220,7 +235,7 @@ fn chaos_soak_never_panics_and_invariants_hold() {
 fn chaos_run_replays_exactly_from_its_seed() {
     let budget = budget();
     let reqs = workload(17);
-    for batch in [false, true] {
+    for (batch, chunk) in [(false, 0usize), (true, 0), (true, 4)] {
         let run = || {
             let plan = Arc::new(
                 FaultPlan::new(0xFA11_FA11)
@@ -230,7 +245,7 @@ fn chaos_run_replays_exactly_from_its_seed() {
                     .with_rate(FaultSite::Latency, 100),
             );
             let (resp, report) =
-                engine(budget, true, batch, Some(plan.clone())).serve(&reqs).unwrap();
+                engine(budget, true, batch, chunk, Some(plan.clone())).serve(&reqs).unwrap();
             let keys: Vec<(usize, RKey, Option<RejectReason>, bool)> =
                 resp.iter().map(|r| (r.id, rkey(r), r.reason, r.fault_touched)).collect();
             (keys, report.fault_injections, plan.total_fired())
@@ -239,9 +254,10 @@ fn chaos_run_replays_exactly_from_its_seed() {
         let (b, fb, pb) = run();
         assert_eq!(
             a, b,
-            "same seed must replay the same responses, fault metadata included (batch={batch})"
+            "same seed must replay the same responses, fault metadata included \
+             (batch={batch} chunk={chunk})"
         );
-        assert_eq!(fa, fb, "fault counts must replay (batch={batch})");
+        assert_eq!(fa, fb, "fault counts must replay (batch={batch} chunk={chunk})");
         assert_eq!(pa, pb);
     }
 }
@@ -256,7 +272,7 @@ fn batch_decode_off_is_the_looped_path() {
     let budget = budget();
     let reqs = workload(31);
     for paged in [false, true] {
-        let (r_off, rep_off) = engine(budget, paged, false, None).serve(&reqs).unwrap();
+        let (r_off, rep_off) = engine(budget, paged, false, 0, None).serve(&reqs).unwrap();
         assert_eq!(
             rep_off.batched_decode_groups, 0,
             "looped engine assembled a batched group (paged={paged})"
@@ -267,7 +283,7 @@ fn batch_decode_off_is_the_looped_path() {
             "looped decode should issue one dispatch per co-resident generation \
              (paged={paged}): {rep_off:?}"
         );
-        let (r_on, rep_on) = engine(budget, paged, true, None).serve(&reqs).unwrap();
+        let (r_on, rep_on) = engine(budget, paged, true, 0, None).serve(&reqs).unwrap();
         assert!(rep_on.batched_decode_groups > 0, "batched engine never fused (paged={paged})");
         for (a, b) in r_off.iter().zip(&r_on) {
             assert_eq!(a.id, b.id);
@@ -358,7 +374,7 @@ fn expired_deadline_sheds_mid_decode() {
         Request::new(1, 4, 5).generate(2).at_tick(0, 500),
     ];
     for paged in [false, true] {
-        let (resp, report) = engine(budget, paged, false, None).serve(&reqs).unwrap();
+        let (resp, report) = engine(budget, paged, false, 0, None).serve(&reqs).unwrap();
         let r0 = resp.iter().find(|r| r.id == 0).unwrap();
         assert_eq!(r0.outcome, RequestOutcome::Rejected, "paged={paged}");
         assert_eq!(r0.reason, Some(RejectReason::DeadlineMissed));

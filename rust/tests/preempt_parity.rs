@@ -1,0 +1,130 @@
+//! Preemption/pause/resume parity fuzz (DESIGN.md §17, PR 8 satellite):
+//! chunked prefill turns every slice boundary into a potential
+//! preemption point — a mid-prefill generation can pause (lose the
+//! per-wave budget race), spill (stall eviction drops its blocks), and
+//! resume at its exact position. This matrix drives those points at
+//! varied positions — pool widths {1, 4} × arena {off, on} ×
+//! block_tokens {0, 16, 64} × two workload seeds — under deliberate
+//! memory pressure, and requires:
+//!
+//! * every completed stream bitwise identical (tokens AND final logits)
+//!   to a generous, monolithic, contiguous baseline;
+//! * the invariant auditor, running after every wave, stays silent;
+//! * at least one matrix cell actually evicted (the pressure is real,
+//!   not vacuous).
+
+use autochunk::coordinator::{generate_workload, EngineConfig, RequestOutcome, ServeEngine};
+
+const BUCKET: usize = 32;
+const CHUNK: usize = 8;
+
+#[test]
+fn preemption_points_never_change_streams_and_auditor_stays_silent() {
+    // Generous budget for calibration and the baseline: k× one dense
+    // prefill quote plus k× a full-capacity cache.
+    let mut probe = ServeEngine::new(EngineConfig {
+        model: "gpt".into(),
+        budget_bytes: usize::MAX,
+        max_batch: 6,
+        buckets: vec![BUCKET],
+        worker_threads: 1,
+        ..EngineConfig::default()
+    });
+    let (_, q) = probe.quote(BUCKET, 0).unwrap().expect("bucket quote");
+    let kv = probe.kv_bytes(BUCKET);
+    let generous = (q.peak_bytes + kv) * 6;
+    // Tight: room for roughly two resident generations — admitted
+    // slices race for the remainder, so mid-prefill pauses happen.
+    let tight = (q.peak_bytes + kv) * 2;
+
+    let mut any_evicted = false;
+    let mut any_paused_slices = false;
+    for seed in [5u64, 19] {
+        // prompts 12..26 tokens (1–2 paged blocks at bt=16, 2–4 slices
+        // at an 8-token chunk), 2..5 generated tokens, bursty arrivals
+        let reqs = generate_workload(6, 12, 26, 2, 5, seed, 3);
+
+        // canonical streams: monolithic prefill, contiguous caches, no
+        // pressure — preemption never fires here
+        let mut base = ServeEngine::new(EngineConfig {
+            model: "gpt".into(),
+            budget_bytes: generous,
+            max_batch: 6,
+            buckets: vec![BUCKET],
+            worker_threads: 1,
+            prefill_chunk_tokens: 0,
+            ..EngineConfig::default()
+        });
+        let (r_base, rep_base) = base.serve(&reqs).unwrap();
+        assert!(
+            r_base.iter().all(|r| r.outcome == RequestOutcome::Completed),
+            "baseline must complete everything: {rep_base:?}"
+        );
+
+        for threads in [1usize, 4] {
+            for use_arena in [false, true] {
+                for bt in [0usize, 16, 64] {
+                    let mut e = ServeEngine::new(EngineConfig {
+                        model: "gpt".into(),
+                        budget_bytes: tight,
+                        max_batch: 6,
+                        buckets: vec![BUCKET],
+                        worker_threads: threads,
+                        use_arena,
+                        block_tokens: bt,
+                        // bt=16: seeds fit, growth contends — stall
+                        // eviction fires. bt=64: one block holds a whole
+                        // sequence, so pressure is budget-side only.
+                        pool_blocks: if bt == 16 { 4 } else { 0 },
+                        prefill_chunk_tokens: CHUNK,
+                        audit: true,
+                        ..EngineConfig::default()
+                    });
+                    let (resp, rep) = e.serve(&reqs).unwrap();
+                    let cell = format!("seed={seed} threads={threads} arena={use_arena} bt={bt}");
+
+                    // every request resolves, and every *completed*
+                    // stream — whatever pauses, spills, and resumes it
+                    // survived — is the baseline's, bitwise
+                    assert_eq!(resp.len(), reqs.len(), "lost a request ({cell})");
+                    let mut completed = 0usize;
+                    for (a, b) in resp.iter().zip(&r_base) {
+                        assert_eq!(a.id, b.id);
+                        if a.outcome != RequestOutcome::Completed {
+                            continue;
+                        }
+                        completed += 1;
+                        assert_eq!(a.tokens, b.tokens, "request {} stream diverged ({cell})", a.id);
+                        let ab: Vec<u32> = a.output.iter().map(|v| v.to_bits()).collect();
+                        let bb: Vec<u32> = b.output.iter().map(|v| v.to_bits()).collect();
+                        assert_eq!(ab, bb, "request {} logits diverged ({cell})", a.id);
+                    }
+                    assert!(completed > 0, "pressure cell served nothing ({cell}): {rep:?}");
+
+                    // the auditor ran and found nothing
+                    assert!(rep.waves_audited > 0, "auditor never ran ({cell})");
+                    assert_eq!(
+                        rep.audit_violations, 0,
+                        "auditor violations ({cell}): {:?}",
+                        rep.audit_log
+                    );
+
+                    // pressure bookkeeping: drains clean every time
+                    assert_eq!(rep.measured_final_bytes, 0, "leaked bytes ({cell})");
+                    if bt > 0 {
+                        assert_eq!(rep.final_blocks_in_use, 0, "leaked blocks ({cell})");
+                    }
+                    assert!(rep.measured_peak_bytes <= tight, "budget overshot ({cell})");
+
+                    any_evicted |= rep.evicted > 0;
+                    any_paused_slices |= rep.prefill_slices > 0;
+                }
+            }
+        }
+    }
+    assert!(
+        any_evicted,
+        "no matrix cell ever evicted — the pressure knobs are vacuous"
+    );
+    assert!(any_paused_slices, "no matrix cell ever sliced a prefill");
+}

@@ -12,8 +12,8 @@
 //!   instead of rejecting them.
 
 use autochunk::coordinator::{
-    generate_workload, open_loop_workload, EngineConfig, EngineResponse, Request, RequestOutcome,
-    ServeEngine,
+    generate_workload, open_loop_workload, EngineConfig, EngineResponse, RejectReason, Request,
+    RequestOutcome, ServeEngine,
 };
 use autochunk::util::pool;
 
@@ -869,4 +869,135 @@ fn pool_width_inherits_autochunk_threads() {
     let reqs = open_loop_workload(4, 8, 30, 31, 2);
     let (resp, _) = pool::with_threads(pool::num_threads(), || e.serve(&reqs)).unwrap();
     assert_eq!(resp.len(), 4);
+}
+
+// ------------------------------------------------------------- chunked
+// prefill + deadline scheduling (DESIGN.md §17): slice-granular prefill
+// interleaved with decode waves, queue-side deadline sweeps, SLO
+// percentiles.
+
+/// Regression (PR 8 bugfix): a queued request whose deadline expires
+/// *while it waits* must be shed at expiry, not when a long-running
+/// generation finally frees an admission slot. Pre-fix, deadlines were
+/// only checked when the scan re-reached the entry — with `max_batch`
+/// slots all occupied the scan never did, and the request sat in the
+/// queue long past its deadline before being rejected.
+#[test]
+fn queued_request_sheds_at_deadline_even_when_batch_is_full() {
+    let bucket = 32usize;
+    let budget = gen_budget(&[bucket], 4);
+    let mut e = ServeEngine::new(EngineConfig {
+        model: "gpt".into(),
+        budget_bytes: budget,
+        max_batch: 1,
+        buckets: vec![bucket],
+        worker_threads: 1,
+        ..EngineConfig::default()
+    });
+    // A hogs the single slot for ~20 decode ticks; B's 3-tick deadline
+    // expires while it waits in the queue, never reaching admission.
+    let reqs = vec![
+        Request::new(0, 8, 3).generate(20).at_tick(0, 500),
+        Request::new(1, 8, 5).generate(2).at_tick(0, 500).deadline(3),
+    ];
+    let (resp, report) = e.serve(&reqs).unwrap();
+    let a = resp.iter().find(|r| r.id == 0).unwrap();
+    let b = resp.iter().find(|r| r.id == 1).unwrap();
+    assert_eq!(a.outcome, RequestOutcome::Completed);
+    assert_eq!(b.outcome, RequestOutcome::Rejected);
+    assert_eq!(b.reason, Some(RejectReason::DeadlineMissed));
+    // the whole point: shed near expiry (arrival 0 + deadline 3 → first
+    // expired tick is 4), strictly before A's generation completes
+    assert!(
+        (4..=8).contains(&b.finished_tick),
+        "queued request shed at tick {}, expected ~4",
+        b.finished_tick
+    );
+    assert!(
+        b.finished_tick < a.finished_tick,
+        "shed at tick {} must not wait out the running generation (tick {})",
+        b.finished_tick,
+        a.finished_tick
+    );
+    assert_eq!(report.deadline_missed, 1);
+    assert!(report.shed_wait >= 1, "queue-side shed must count as shed_wait");
+}
+
+/// Regression (PR 8 bugfix): `arrival + deadline` used to wrap — a huge
+/// deadline (u64::MAX) overflowed to *before* the arrival tick and the
+/// request was shed the moment it was scanned. The saturating fix makes
+/// an effectively-infinite deadline behave like no deadline at all.
+#[test]
+fn huge_deadline_completes_instead_of_wrapping_to_instant_shed() {
+    let bucket = 32usize;
+    let budget = gen_budget(&[bucket], 4);
+    let mut e = engine(budget, vec![bucket], 1);
+    // arrival 5 + u64::MAX wrapped to 4 pre-fix: expired on arrival
+    let reqs = vec![Request::new(0, 8, 3).generate(3).at_tick(5, 500).deadline(u64::MAX)];
+    let (resp, report) = e.serve(&reqs).unwrap();
+    assert_eq!(resp[0].outcome, RequestOutcome::Completed, "{:?}", resp[0].reason);
+    assert_eq!(report.deadline_missed, 0);
+}
+
+/// Tentpole acceptance: chunked prefill is *schedule sugar only* — token
+/// streams, final logits, buckets, and depths are bitwise identical to
+/// the monolithic-prefill engine, contiguous and paged, while the
+/// chunked run actually slices (and interleaves slices with decode
+/// waves) and populates the TTFT/ITL SLO percentiles.
+#[test]
+fn chunked_prefill_streams_bitwise_match_monolithic() {
+    let buckets = vec![64usize];
+    let budget = gen_budget(&buckets, 6);
+    // prompts 20..48 tokens: 3–6 slices each at an 8-token chunk budget
+    let reqs = generate_workload(5, 20, 48, 2, 4, 29, 2);
+
+    let run = |chunk: usize, bt: usize| {
+        let mut e = ServeEngine::new(EngineConfig {
+            model: "gpt".into(),
+            budget_bytes: budget,
+            max_batch: 6,
+            buckets: buckets.clone(),
+            worker_threads: 2,
+            block_tokens: bt,
+            prefill_chunk_tokens: chunk,
+            ..EngineConfig::default()
+        });
+        e.serve(&reqs).unwrap()
+    };
+
+    let mut any_interleaved = false;
+    for bt in [0usize, 16] {
+        let (r_mono, rep_mono) = run(0, bt);
+        let (r_chunk, rep_chunk) = run(8, bt);
+        assert_eq!(rep_mono.prefill_slices, 0, "monolithic engine must not slice");
+        assert!(
+            rep_chunk.prefill_slices >= reqs.len(),
+            "every long prompt must be sliced, got {} slices (bt={bt})",
+            rep_chunk.prefill_slices
+        );
+        assert_eq!(r_mono.len(), r_chunk.len());
+        for (a, b) in r_chunk.iter().zip(&r_mono) {
+            assert_eq!(
+                response_key(a),
+                response_key(b),
+                "request {} diverged under chunked prefill (bt={bt})",
+                a.id
+            );
+        }
+        // SLO metrics are populated by the chunked run
+        assert!(rep_chunk.ttft_p50_us > 0, "TTFT percentiles missing (bt={bt})");
+        assert!(rep_chunk.ttft_p99_us >= rep_chunk.ttft_p50_us);
+        assert!(rep_chunk.itl_samples > 0, "ITL gaps missing (bt={bt})");
+        assert!(rep_chunk.itl_p99_us >= rep_chunk.itl_p50_us);
+        any_interleaved |= rep_chunk.interleaved_waves > 0;
+        // drain contract survives slicing
+        assert_eq!(rep_chunk.measured_final_bytes, 0, "chunked run leaked bytes");
+        if bt > 0 {
+            assert_eq!(rep_chunk.final_blocks_in_use, 0, "chunked paged run leaked blocks");
+        }
+    }
+    assert!(
+        any_interleaved,
+        "no wave ever co-scheduled a prefill slice with decode steps"
+    );
 }
