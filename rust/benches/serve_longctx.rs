@@ -1,0 +1,182 @@
+//! Long-context admission at a fixed activation budget: chunk-only vs
+//! chunk + spill/recompute placement (DESIGN.md §18).
+//!
+//! Chunking alone flattens the activation peak until the *unchunkable*
+//! persistent set — long-lived residuals and cross-region values pinned
+//! in the arena — dominates the budget; past that sequence length the
+//! admission bound rejects the request no matter how deep the chunking
+//! goes. The placement tiers attack exactly that persistent set: each
+//! kept intermediate may instead be recomputed from a cheap live
+//! frontier or parked in a modeled slow tier (`AUTOCHUNK_SPILL_GBPS`),
+//! trading bandwidth/FLOPs for resident bytes.
+//!
+//! For a ladder of sequence lengths, plan the same chunked graph with
+//! the tier off and on and report the admission bound against the fixed
+//! budget; the headline is the *max admissible sequence* per mode —
+//! spill must reach strictly further. The tok/s penalty is measured, not
+//! modeled: both plans execute at the largest chunk-only-admissible rung
+//! (token streams are bitwise identical — `rust/tests/spill_parity.rs`;
+//! this bench measures the speed of the same bits). Emits
+//! `BENCH_serve_longctx.json`.
+//!
+//! `cargo bench --bench serve_longctx` (`AUTOCHUNK_BENCH_TINY=1` shrinks
+//! the ladder to the CI smoke size).
+
+use autochunk::exec::{execute_arena, random_inputs, random_params};
+use autochunk::models::{gpt, GptConfig};
+use autochunk::passes::select::placement_cost_us;
+use autochunk::passes::{autochunk, plan_memory_with, AutoChunkConfig, SpillParams};
+use autochunk::plan::ExecOptions;
+use autochunk::tensor::MemoryTracker;
+use autochunk::util::bench::{mib, Table};
+use autochunk::util::pool;
+use std::time::Instant;
+
+fn tiny() -> bool {
+    std::env::var("AUTOCHUNK_BENCH_TINY").map(|v| v == "1").unwrap_or(false)
+}
+
+const GBPS: f64 = 8.0;
+
+fn main() {
+    let threads = pool::num_threads();
+    let ladder: Vec<usize> = if tiny() {
+        vec![64, 96, 128, 192, 256]
+    } else {
+        vec![128, 192, 256, 384, 512, 768, 1024]
+    };
+    // The budget is what chunk-only planning needs at the ladder's second
+    // rung: every later rung must chunk *and* place to fit, so the two
+    // modes separate.
+    let anchor = ladder[1];
+    let budget = {
+        let g = gpt(&GptConfig { seq: anchor, layers: 1, ..Default::default() });
+        let plans = autochunk(&g, 1, &AutoChunkConfig::default()).plans;
+        plan_memory_with(&g, &plans, None).admission_bytes(1)
+    };
+
+    println!(
+        "== Long-context admission at a fixed budget (gpt, 1 layer, budget {:.2} MiB \
+         from seq {anchor}, slow tier {GBPS:.0} GB/s, width {threads}) ==\n",
+        mib(budget)
+    );
+    let mut table = Table::new(&[
+        "seq",
+        "mode",
+        "admission",
+        "peak",
+        "decisions",
+        "moved",
+        "recompute",
+        "admitted",
+    ]);
+    let mut rows: Vec<String> = Vec::new();
+    let mut max_admissible = [0usize; 2]; // [chunk-only, chunk+spill]
+
+    for &seq in &ladder {
+        let g = gpt(&GptConfig { seq, layers: 1, ..Default::default() });
+        // Plan against the serving budget itself: deepest useful chunking
+        // first, then the placement search over what chunking cannot move.
+        let plans = autochunk(&g, budget, &AutoChunkConfig::default()).plans;
+        for (mi, spill) in [None, Some(SpillParams { gbps: GBPS })].into_iter().enumerate() {
+            let mem = plan_memory_with(&g, &plans, spill);
+            let admission = mem.admission_bytes(1);
+            let admitted = admission <= budget;
+            if admitted {
+                max_admissible[mi] = max_admissible[mi].max(seq);
+            }
+            let overhead_us =
+                placement_cost_us(mem.spill_transfer_bytes, mem.spill_recompute_flops, GBPS);
+            let mode = if mi == 0 { "chunk-only" } else { "chunk+spill" };
+            table.row(vec![
+                format!("{seq}"),
+                mode.to_string(),
+                format!("{:.2} MiB", mib(admission)),
+                format!("{:.2} MiB", mib(mem.planned_peak_bytes)),
+                format!("{}", mem.spills.len()),
+                format!("{:.2} MiB", mib(mem.spill_transfer_bytes)),
+                format!("{:.2} MF", mem.spill_recompute_flops as f64 / 1e6),
+                if admitted { "yes".into() } else { "NO".into() },
+            ]);
+            rows.push(format!(
+                "  {{\"mode\": \"serve_longctx\", \"seq\": {seq}, \"spill\": {}, \
+                 \"budget_mb\": {:.3}, \"admission_mb\": {:.3}, \"planned_peak_mb\": {:.3}, \
+                 \"decisions\": {}, \"spill_transfer_mb\": {:.3}, \
+                 \"spill_recompute_mflops\": {:.3}, \"overhead_us\": {:.1}, \
+                 \"admitted\": {admitted}, \"threads\": {threads}}}",
+                mi,
+                mib(budget),
+                mib(admission),
+                mib(mem.planned_peak_bytes),
+                mem.spills.len(),
+                mib(mem.spill_transfer_bytes),
+                mem.spill_recompute_flops as f64 / 1e6,
+                overhead_us,
+            ));
+        }
+    }
+    print!("{}", table.render());
+
+    // ---- measured tok/s penalty at the largest rung both modes admit:
+    // the same chunked graph executes with and without the placement
+    // script; spill's extra copies and recomputes price the slow tier.
+    let seq = if max_admissible[0] > 0 { max_admissible[0] } else { ladder[0] };
+    let g = gpt(&GptConfig { seq, layers: 1, ..Default::default() });
+    let plans = autochunk(&g, budget, &AutoChunkConfig::default()).plans;
+    let ins = random_inputs(&g, 11, None);
+    let ps = random_params(&g, 12);
+    let opts = ExecOptions { budget_bytes: None, use_arena: true, ..ExecOptions::default() };
+    let reps = if tiny() { 2 } else { 5 };
+    let mut toks = [0f64; 2];
+    for (mi, spill) in [None, Some(SpillParams { gbps: GBPS })].into_iter().enumerate() {
+        let mem = plan_memory_with(&g, &plans, spill);
+        let tracker = MemoryTracker::new();
+        // warm the kernels once, then time
+        let _ = execute_arena(&g, &plans, &ins, &ps, &mem, None, &tracker, &opts);
+        let started = Instant::now();
+        for _ in 0..reps {
+            let _ = execute_arena(&g, &plans, &ins, &ps, &mem, None, &tracker, &opts);
+        }
+        let secs = started.elapsed().as_secs_f64().max(1e-9);
+        toks[mi] = (seq * reps) as f64 / secs;
+    }
+    let penalty = if toks[0] > 0.0 { (1.0 - toks[1] / toks[0]) * 100.0 } else { 0.0 };
+    println!(
+        "\nprefill throughput at seq {seq}: chunk-only {:.0} tok/s, chunk+spill {:.0} tok/s \
+         ({penalty:+.1}% penalty)",
+        toks[0], toks[1]
+    );
+    rows.push(format!(
+        "  {{\"mode\": \"serve_longctx_toks\", \"seq\": {seq}, \"budget_mb\": {:.3}, \
+         \"toks_chunk_only\": {:.1}, \"toks_chunk_spill\": {:.1}, \
+         \"penalty_pct\": {penalty:.2}, \"threads\": {threads}}}",
+        mib(budget),
+        toks[0],
+        toks[1],
+    ));
+
+    println!(
+        "\nmax admissible sequence at {:.2} MiB: chunk-only {}, chunk+spill {} {}",
+        mib(budget),
+        max_admissible[0],
+        max_admissible[1],
+        if max_admissible[1] > max_admissible[0] {
+            "(spill reaches further: OK)"
+        } else {
+            "(spill bought no length: NOT extended!)"
+        }
+    );
+    rows.push(format!(
+        "  {{\"mode\": \"serve_longctx_max\", \"budget_mb\": {:.3}, \
+         \"max_seq_chunk_only\": {}, \"max_seq_chunk_spill\": {}, \"threads\": {threads}}}",
+        mib(budget),
+        max_admissible[0],
+        max_admissible[1],
+    ));
+
+    let body = format!("[\n{}\n]\n", rows.join(",\n"));
+    if let Err(e) = std::fs::write("BENCH_serve_longctx.json", body) {
+        eprintln!("warning: could not write BENCH_serve_longctx.json: {e}");
+    }
+    println!("wrote BENCH_serve_longctx.json");
+}

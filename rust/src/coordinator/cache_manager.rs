@@ -29,10 +29,45 @@
 //! `blocks_in_use() == 0` and the run tracker reads zero bytes.
 
 use crate::coordinator::engine::EngineError;
-use crate::tensor::{BlockPool, BlockTable, MemoryTracker, Tensor};
+use crate::tensor::{BlockPool, BlockTable, MemoryTracker, SpillStore, Tensor};
 use crate::util::fault::{FaultPlan, FaultSite};
 use std::collections::HashMap;
 use std::sync::Arc;
+
+/// One spilled KV block: full-block K/V contents per layer (`[h, bt, dh]`
+/// row-major), padding rows included so a restore is bitwise exact.
+#[derive(Clone, Debug)]
+struct SpilledBlock {
+    ks: Vec<Vec<f32>>,
+    vs: Vec<Vec<f32>>,
+}
+
+/// A generation's KV cache parked in the slow tier: block contents by
+/// value (no pool storage held). Restoring rebuilds a private block
+/// table with bitwise-identical bytes; the restored blocks are exclusive
+/// (no prefix-share registration), which is always sound — sharing is an
+/// optimization, never a correctness requirement.
+#[derive(Clone, Debug, Default)]
+pub struct SpilledTable {
+    blocks: Vec<SpilledBlock>,
+    len: usize,
+}
+
+impl SpilledTable {
+    /// Cached positions the table held when spilled.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Pool blocks a restore will allocate.
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+}
 
 /// Prefix-share key: a block's content is a pure function of the bucket
 /// (scale + its parameter set), its index in the table, and the token
@@ -67,6 +102,10 @@ pub struct CacheManager {
     /// Counter-keyed — sound because seed/append only run on the serial
     /// coordinator thread.
     faults: Option<Arc<FaultPlan>>,
+    /// Slow-tier byte accounting for spilled KV tables. Deliberately not
+    /// the run tracker: fast-tier residency (and the invariant auditor's
+    /// `tracker.current == resident_kv` check) must not see parked bytes.
+    spill: SpillStore,
 }
 
 impl CacheManager {
@@ -84,7 +123,14 @@ impl CacheManager {
             rev: HashMap::new(),
             shared_hits: 0,
             faults: None,
+            spill: SpillStore::new(),
         }
+    }
+
+    /// Slow-tier accounting for spilled KV tables (bytes parked, peak,
+    /// traffic counters).
+    pub fn spill_store(&self) -> &SpillStore {
+        &self.spill
     }
 
     /// Install a fault plan for the `BlockAlloc` injection site.
@@ -362,6 +408,71 @@ impl CacheManager {
         }
     }
 
+    /// Park a generation's KV cache in the slow tier: copy every block's
+    /// full contents out by value, then release the pool blocks. Unlike
+    /// eviction, the cached rows survive — a later [`Self::restore_table`]
+    /// rebuilds them bitwise instead of re-running prefill. Shared blocks
+    /// are copied too (siblings keep the original); the spilled copy
+    /// restores as a private block.
+    pub fn spill_table(&mut self, table: BlockTable) -> SpilledTable {
+        let layers = self.pool.layers();
+        let mut blocks = Vec::with_capacity(table.blocks().len());
+        for &id in table.blocks() {
+            let mut ks = Vec::with_capacity(layers);
+            let mut vs = Vec::with_capacity(layers);
+            for l in 0..layers {
+                ks.push(self.pool.k(id, l).to_vec_f32());
+                vs.push(self.pool.v(id, l).to_vec_f32());
+            }
+            blocks.push(SpilledBlock { ks, vs });
+        }
+        let len = table.len();
+        let bytes = blocks.len() * self.block_bytes();
+        self.release_table(table);
+        self.spill.on_spill(bytes);
+        SpilledTable { blocks, len }
+    }
+
+    /// Bring a spilled table back into the pool: allocate a private block
+    /// per spilled block and write the parked bytes back verbatim. An
+    /// allocation failure (exhaustion or an injected `BlockAlloc` fault)
+    /// releases every block this call took and leaves the spilled copy
+    /// untouched, so the caller can simply retry later. On success the
+    /// slow-tier accounting is settled here — the caller just drops the
+    /// spent parked copy ([`Self::discard_spilled`] is for tables that
+    /// are *never* restored).
+    pub fn restore_table(&mut self, spilled: &SpilledTable) -> Result<BlockTable, EngineError> {
+        let layers = self.pool.layers();
+        let h = self.pool.heads();
+        let bt = self.pool.block_tokens();
+        let dh = self.pool.head_dim();
+        let mut table = BlockTable::new();
+        for b in &spilled.blocks {
+            let id = match self.alloc_block() {
+                Ok(id) => id,
+                Err(e) => {
+                    self.release_table(table);
+                    return Err(e);
+                }
+            };
+            for l in 0..layers {
+                let k = Tensor::from_f32(b.ks[l].clone(), &[h, bt, dh], None);
+                let v = Tensor::from_f32(b.vs[l].clone(), &[h, bt, dh], None);
+                self.pool.write_rows(id, l, 0, &k, &v);
+            }
+            table.push_block(id);
+        }
+        table.set_len(spilled.len);
+        self.spill.on_restore(spilled.blocks.len() * self.block_bytes());
+        Ok(table)
+    }
+
+    /// Drop a spilled table without restoring it (generation finished,
+    /// failed, or was evicted for real) — slow-tier accounting only.
+    pub fn discard_spilled(&self, spilled: SpilledTable) {
+        self.spill.on_discard(spilled.blocks.len() * self.block_bytes());
+    }
+
     fn release_block(&mut self, id: usize) {
         if self.pool.release(id) {
             if let Some(key) = self.rev.remove(&id) {
@@ -587,6 +698,62 @@ mod tests {
         m.release_table(t);
         assert_eq!(m.blocks_in_use(), 0);
         assert_eq!(m.free_blocks(), m.pool_blocks());
+    }
+
+    #[test]
+    fn spill_restore_roundtrip_is_bitwise_and_accounted() {
+        let tr = MemoryTracker::new();
+        let (layers, h, bt, dh) = (2usize, 2usize, 4usize, 3usize);
+        let mut m = CacheManager::new(layers, h, bt, dh, 8, Some(tr.clone()));
+        let tokens: Vec<i32> = (0..10).map(|i| (i * 5 + 2) as i32).collect();
+        let outs = synth_outs(&tokens, 16, layers, h, dh);
+        let t = m.seed(16, &tokens, 10, &outs).unwrap();
+        let before = table_bits(&m, &t);
+        let held = t.blocks().len();
+        let block_bytes = m.block_bytes();
+
+        let parked = m.spill_table(t);
+        assert_eq!(parked.len(), 10);
+        assert_eq!(parked.n_blocks(), held);
+        assert_eq!(m.blocks_in_use(), 0, "spill releases pool storage");
+        assert_eq!(tr.current(), 0, "fast tier empty while parked");
+        assert_eq!(m.spill_store().current(), held * block_bytes);
+
+        let r = m.restore_table(&parked).unwrap();
+        drop(parked); // restore already settled the slow-tier accounting
+        assert_eq!(r.len(), 10);
+        assert_eq!(table_bits(&m, &r), before, "restore must be bitwise exact");
+        assert_eq!(m.spill_store().current(), 0);
+        assert_eq!(m.spill_store().peak(), held * block_bytes);
+        m.release_table(r);
+        assert_eq!(m.blocks_in_use(), 0);
+        assert_eq!(tr.current(), 0);
+    }
+
+    #[test]
+    fn failed_restore_rolls_back_and_keeps_spilled_copy() {
+        let (layers, h, bt, dh) = (1usize, 1usize, 2usize, 2usize);
+        let mut m = CacheManager::new(layers, h, bt, dh, 2, None);
+        let tokens = vec![1, 2, 3];
+        let outs = synth_outs(&tokens, 4, layers, h, dh);
+        let t = m.seed(4, &tokens, 3, &outs).unwrap(); // both blocks
+        let parked = m.spill_table(t);
+        // refill the pool so the restore cannot get its 2 blocks back
+        let hog_outs = synth_outs(&[9], 2, layers, h, dh);
+        let hog = m.seed(2, &[9], 1, &hog_outs).unwrap();
+        let hog2 = m.seed(2, &[8], 1, &synth_outs(&[8], 2, layers, h, dh)).unwrap();
+        assert_eq!(m.free_blocks(), 0);
+        let err = m.restore_table(&parked);
+        assert!(matches!(err, Err(EngineError::PoolExhausted { .. })), "{err:?}");
+        assert_eq!(m.blocks_in_use(), 2, "failed restore must roll back its blocks");
+        assert_eq!(m.spill_store().current(), 2 * m.block_bytes(), "copy stays parked");
+        m.release_table(hog);
+        m.release_table(hog2);
+        let r = m.restore_table(&parked).unwrap();
+        drop(parked); // restore already settled the slow-tier accounting
+        assert_eq!(r.len(), 3);
+        m.release_table(r);
+        assert_eq!(m.blocks_in_use(), 0);
     }
 
     #[test]

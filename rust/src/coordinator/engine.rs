@@ -25,7 +25,7 @@
 //!   (bucket, cache-length) — decode graphs are parameterized by `past` —
 //!   so steady-state decoding is all cache hits;
 //! * **preemption instead of rejection** — a request whose price exceeds
-//!   the budget is requeued (with head priority) for a deeper-chunked
+//!   the budget is requeued (at the head of its priority class) for a deeper-chunked
 //!   recompile; only when the deepest level still does not fit is it
 //!   rejected ("the memory wall");
 //! * **paged KV caches** (`block_tokens > 0`, DESIGN.md §14) — generation
@@ -56,13 +56,14 @@
 //! full prefill at the grown length (`rust/tests/decode_parity.rs`).
 
 use crate::coordinator::audit::Auditor;
-use crate::coordinator::cache_manager::CacheManager;
+use crate::coordinator::cache_manager::{CacheManager, SpilledTable};
 use crate::coordinator::metrics::{MetricsReport, Recorder};
 use crate::coordinator::request::{Request, RequestOutcome};
 use crate::exec::random_params;
 use crate::ir::Graph;
 use crate::models::{self, GptConfig};
-use crate::passes::{autochunk, estimate, AutoChunkConfig, CostQuote};
+use crate::passes::select::placement_cost_us;
+use crate::passes::{autochunk, estimate, AutoChunkConfig, CostQuote, SpillParams};
 use crate::plan::{ExecOptions, PlanHandle};
 use crate::runtime::{ArtifactMeta, Registry};
 use crate::tensor::{numel, BlockTable, DType, KvCache, MemoryTracker, Tensor};
@@ -148,6 +149,17 @@ pub struct EngineConfig {
     /// virtual clock — before structured rejection
     /// ([`RejectReason::RetriesExhausted`]).
     pub max_retries: usize,
+    /// Simulated slow-tier bandwidth in GB/s for spill/recompute
+    /// placement (DESIGN.md §18). `0.0` (the default) disables the tier
+    /// entirely: plans, arena high-waters, and token streams stay
+    /// bitwise identical to the pre-spill engine. When `> 0`, compiled
+    /// plans may park cold intermediates in the slow tier (priced at
+    /// `bytes / spill_gbps` against recompute FLOPs), and a
+    /// budget-stalled paged decode parks a victim's KV blocks there
+    /// instead of dropping them for re-prefill recompute —
+    /// restore-on-touch, priced through block admission. Defaults to
+    /// the `AUTOCHUNK_SPILL_GBPS` env knob.
+    pub spill_gbps: f64,
     /// Deterministic chaos harness (DESIGN.md §15): when installed, the
     /// named injection sites roll seeded dice and the engine must
     /// degrade gracefully instead of panicking. `None` (the default)
@@ -177,6 +189,7 @@ impl Default for EngineConfig {
             pool_blocks: 0,
             max_evictions: 3,
             max_retries: 8,
+            spill_gbps: spill_gbps_default(),
             faults: None,
             audit: false,
             compile: AutoChunkConfig::default(),
@@ -416,6 +429,12 @@ struct Pending {
 enum GenCache {
     Whole(KvCache),
     Paged(BlockTable),
+    /// Parked in the simulated slow tier (paged mode with
+    /// `spill_gbps > 0`, DESIGN.md §18): the generation keeps its exact
+    /// stream state (`tokens`, `past`, `plen`) in place and waits for
+    /// the restore pre-pass to buy its blocks back — no recompute. A
+    /// spilled generation is never admitted to a wave.
+    Spilled(SpilledTable),
 }
 
 /// Decode state a paged-mode eviction preserves so a re-queued request
@@ -603,6 +622,21 @@ pub fn prefill_chunk_default() -> usize {
     })
 }
 
+/// Default of [`EngineConfig::spill_gbps`]: the `AUTOCHUNK_SPILL_GBPS`
+/// env knob (simulated slow-tier bandwidth in GB/s; unset, `0`,
+/// non-positive, or unparsable keeps the spill tier off), latched like
+/// [`prefill_chunk_default`].
+pub fn spill_gbps_default() -> f64 {
+    static V: std::sync::OnceLock<f64> = std::sync::OnceLock::new();
+    *V.get_or_init(|| {
+        std::env::var("AUTOCHUNK_SPILL_GBPS")
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .filter(|g| *g > 0.0 && g.is_finite())
+            .unwrap_or(0.0)
+    })
+}
+
 /// Has `req`'s deadline expired at `clock`? `deadline_ticks == 0` means
 /// no deadline; otherwise expiry is strictly *after*
 /// `arrival_tick + deadline_ticks` — the deadline tick itself is still
@@ -614,14 +648,45 @@ fn deadline_expired(clock: u64, req: &Request) -> bool {
 }
 
 /// Deterministic exponential backoff for fault retries, in virtual
-/// ticks: the first retry is immediate (transient faults usually clear
-/// at once), then 1, 2, 4, … capped at 64 ticks.
+/// ticks. Ordinals 0 and 1 both map to an immediate retry — the first
+/// real retry is ordinal 1 (callers pass `retries + 1`) and transient
+/// faults usually clear at once — then the ladder doubles from 1 tick,
+/// capped at 64: `0, 0, 1, 2, 4, 8, 16, 32, 64, 64, …`
+/// (`backoff_ladder_is_pinned` pins the exact sequence).
 fn backoff_ticks(retry: usize) -> u64 {
     if retry <= 1 {
         0
     } else {
         1u64 << (retry - 2).min(6)
     }
+}
+
+/// Re-insert a retried/preempted request into the queue respecting the
+/// admission order (priority class first, then deadline slack, then
+/// arrival). The entry lands at the *head of its class* among
+/// already-arrived entries — never ahead of a higher-priority or
+/// tighter-deadline arrival, which the old unconditional `push_front`
+/// allowed a low-priority deepening retry to do — and never past the
+/// arrival horizon: entries with `arrival_tick > clock` stay a strictly
+/// arrival-sorted tail, the invariant the admission scan's early break
+/// rests on. All-zero priorities with no deadlines reduce to the legacy
+/// head insert exactly.
+fn requeue(queue: &mut VecDeque<Pending>, requests: &[Request], clock: u64, p: Pending) {
+    let class = |q: &Pending| {
+        let r = &requests[q.idx];
+        let slack = if r.deadline_ticks == 0 {
+            u64::MAX
+        } else {
+            r.arrival_tick.saturating_add(r.deadline_ticks).saturating_sub(clock)
+        };
+        (Reverse(r.priority), slack)
+    };
+    let key = class(&p);
+    let pos = queue
+        .iter()
+        .position(|q| requests[q.idx].arrival_tick > clock || class(q) >= key)
+        .unwrap_or(queue.len());
+    queue.insert(pos, p);
 }
 
 #[derive(Clone, Copy)]
@@ -885,7 +950,14 @@ impl ServeEngine {
                 format!("{}_lmhead_batch{}_s{}", self.config.model, width, bucket)
             }
         };
-        let h = PlanHandle::new(&tag, graph, plans, params);
+        // Spill placement (DESIGN.md §18) follows the engine's own knob,
+        // not the env default, so one process can compare both modes.
+        let spill = if self.config.spill_gbps > 0.0 {
+            Some(SpillParams { gbps: self.config.spill_gbps })
+        } else {
+            None
+        };
+        let h = PlanHandle::new_with_spill(&tag, graph, plans, params, spill);
         let out_shape = h.graph().node(h.graph().outputs[0]).shape.clone();
         self.registry.register(ArtifactMeta {
             tag: tag.clone(),
@@ -1065,11 +1137,16 @@ impl ServeEngine {
                 let req = &requests[gens[di].idx];
                 if deadline_expired(clock, req) {
                     let g = gens.remove(di);
-                    if let GenCache::Paged(tb) = g.cache {
-                        match &mut mgr {
+                    match g.cache {
+                        GenCache::Paged(tb) => match &mut mgr {
                             Some(m) => m.release_table(tb),
                             None => return Err(EngineError::MissingManager.into()),
-                        }
+                        },
+                        GenCache::Spilled(st) => match &mgr {
+                            Some(m) => m.discard_spilled(st),
+                            None => return Err(EngineError::MissingManager.into()),
+                        },
+                        GenCache::Whole(_) => {}
                     }
                     recorder.deadline_missed += 1;
                     recorder.rejected += 1;
@@ -1123,6 +1200,7 @@ impl ServeEngine {
                     .map(|g| match &g.cache {
                         GenCache::Whole(c) => c.capacity_bytes(),
                         GenCache::Paged(_) => 0,
+                        GenCache::Spilled(_) => 0,
                     })
                     .sum(),
             };
@@ -1131,6 +1209,45 @@ impl ServeEngine {
             // boundary appends, copy-on-writes) — a wave-local ledger
             // against the pool's free list, conservative about sharing.
             let mut free_blocks_wave = mgr.as_ref().map(|m| m.free_blocks()).unwrap_or(0);
+            // Restore pre-pass: revive spilled KV tables while the pool has
+            // room. A restore needs one block of headroom past the table
+            // itself (`want`) so the revived decode can append — gating on
+            // the bare block count would restore into a full pool and
+            // immediately re-stall, ping-ponging spill/restore until the
+            // eviction counter wedges the stream.
+            if mgr.is_some() {
+                for gi in 0..gens.len() {
+                    let need = match &gens[gi].cache {
+                        GenCache::Spilled(st) => st.n_blocks(),
+                        _ => continue,
+                    };
+                    let m = mgr.as_mut().expect("spilled cache implies paged mode");
+                    let bytes = need * m.block_bytes();
+                    let want = (need + 1).min(m.pool_blocks());
+                    if want > free_blocks_wave || bytes > remaining {
+                        continue;
+                    }
+                    let restored = match &gens[gi].cache {
+                        GenCache::Spilled(st) => m.restore_table(st),
+                        _ => unreachable!(),
+                    };
+                    match restored {
+                        Ok(tb) => {
+                            remaining -= bytes;
+                            free_blocks_wave -= need;
+                            recorder.kv_restores += 1;
+                            recorder.kv_restore_bytes += bytes;
+                            gens[gi].latency_us = gens[gi].latency_us.saturating_add(
+                                placement_cost_us(bytes, 0, self.config.spill_gbps) as u64,
+                            );
+                            gens[gi].cache = GenCache::Paged(tb);
+                        }
+                        Err(e) => {
+                            recorder.record_error(e.kind());
+                        }
+                    }
+                }
+            }
             let mut wave: Vec<WaveEntry> = Vec::new();
             // Admitted *requests* this wave (a batched decode entry holds
             // several) — what `max_batch` bounds. Looped mode admits one
@@ -1155,6 +1272,9 @@ impl ServeEngine {
                 for gi in 0..gens.len() {
                     if gens[gi].tokens.is_empty() {
                         continue; // mid-prefill: no input token to decode yet
+                    }
+                    if matches!(gens[gi].cache, GenCache::Spilled(_)) {
+                        continue; // parked in the slow tier: waits for the restore pre-pass
                     }
                     let b = gens[gi].bucket;
                     match groups.iter_mut().find(|(gb, _)| *gb == b) {
@@ -1211,6 +1331,9 @@ impl ServeEngine {
                     if gens[gi].tokens.is_empty() {
                         continue; // mid-prefill: no input token to decode yet
                     }
+                    if matches!(gens[gi].cache, GenCache::Spilled(_)) {
+                        continue; // parked in the slow tier: waits for the restore pre-pass
+                    }
                     let (bucket, past) = (gens[gi].bucket, gens[gi].past);
                     let h = self.handle(PlanKind::Decode { past }, bucket, 0)?;
                     let lm = self.handle(PlanKind::LmHead, bucket, 0)?;
@@ -1253,8 +1376,12 @@ impl ServeEngine {
             // stall-eviction backstop spills it if residency wedges the
             // budget.
             if chunk > 0 {
-                let mut cands: Vec<usize> =
-                    (0..gens.len()).filter(|&gi| gens[gi].past < gens[gi].plen).collect();
+                let mut cands: Vec<usize> = (0..gens.len())
+                    .filter(|&gi| {
+                        gens[gi].past < gens[gi].plen
+                            && !matches!(gens[gi].cache, GenCache::Spilled(_))
+                    })
+                    .collect();
                 cands.sort_by_key(|&gi| {
                     let req = &requests[gens[gi].idx];
                     let slack = if req.deadline_ticks == 0 {
@@ -1624,9 +1751,11 @@ impl ServeEngine {
                 // request starves.
                 scan += 1;
             }
-            // Deepened requests retry with head priority next wave.
+            // Deepened requests retry at the head of their priority class
+            // next wave — never ahead of higher-priority (or tighter-
+            // deadline) arrivals already queued.
             for p in retry.into_iter().rev() {
-                queue.push_front(p);
+                requeue(&mut queue, requests, clock, p);
             }
 
             if wave.is_empty() {
@@ -1639,6 +1768,45 @@ impl ServeEngine {
                     if stalled_rounds > 2 {
                         match &mut mgr {
                             Some(m) => {
+                                // With a spill tier configured, park the
+                                // newest spillable generation's blocks in
+                                // the slow tier instead of discarding them:
+                                // the stream keeps its state and resumes
+                                // after a priced restore, no re-prefill.
+                                // Each spill burns an eviction credit so a
+                                // thrashing stream still falls through to
+                                // the rejection path below.
+                                let victim = if self.config.spill_gbps > 0.0 {
+                                    gens.iter().rposition(|g| {
+                                        g.evictions < self.config.max_evictions
+                                            && matches!(&g.cache,
+                                                GenCache::Paged(tb) if !tb.blocks().is_empty())
+                                    })
+                                } else {
+                                    None
+                                };
+                                if let Some(vi) = victim {
+                                    let taken = std::mem::replace(
+                                        &mut gens[vi].cache,
+                                        GenCache::Spilled(SpilledTable::default()),
+                                    );
+                                    let GenCache::Paged(tb) = taken else {
+                                        return Err(EngineError::WaveMismatch.into());
+                                    };
+                                    let st = m.spill_table(tb);
+                                    let bytes = st.n_blocks() * m.block_bytes();
+                                    recorder.kv_spills += 1;
+                                    recorder.kv_spill_bytes += bytes;
+                                    gens[vi].latency_us = gens[vi].latency_us.saturating_add(
+                                        placement_cost_us(bytes, 0, self.config.spill_gbps)
+                                            as u64,
+                                    );
+                                    gens[vi].evictions += 1;
+                                    gens[vi].cache = GenCache::Spilled(st);
+                                    stalled_rounds = 0;
+                                    clock += 1;
+                                    continue;
+                                }
                                 // Paged: drop the newest generation's
                                 // blocks (least work lost) and re-queue it
                                 // for re-prefill recompute — decode parity
@@ -1649,8 +1817,10 @@ impl ServeEngine {
                                 let Some(g) = gens.pop() else {
                                     return Err(EngineError::StallWithoutGeneration.into());
                                 };
-                                if let GenCache::Paged(tb) = g.cache {
-                                    m.release_table(tb);
+                                match g.cache {
+                                    GenCache::Paged(tb) => m.release_table(tb),
+                                    GenCache::Spilled(st) => m.discard_spilled(st),
+                                    GenCache::Whole(_) => {}
                                 }
                                 if g.evictions >= self.config.max_evictions {
                                     recorder.shed += 1;
@@ -1681,13 +1851,18 @@ impl ServeEngine {
                                             },
                                         );
                                     }
-                                    queue.push_front(Pending {
-                                        idx: g.idx,
-                                        depth: g.depth,
-                                        evictions: g.evictions + 1,
-                                        retries: g.retries,
-                                        not_before: 0,
-                                    });
+                                    requeue(
+                                        &mut queue,
+                                        requests,
+                                        clock,
+                                        Pending {
+                                            idx: g.idx,
+                                            depth: g.depth,
+                                            evictions: g.evictions + 1,
+                                            retries: g.retries,
+                                            not_before: 0,
+                                        },
+                                    );
                                 }
                             }
                             None => {
@@ -1956,6 +2131,9 @@ impl ServeEngine {
                                                     return Err(EngineError::MissingManager)
                                                 }
                                             },
+                                            GenCache::Spilled(_) => {
+                                                return Err(EngineError::WaveMismatch)
+                                            }
                                         }
                                     }
                                     // slices are chunkable like any other
@@ -2036,6 +2214,9 @@ impl ServeEngine {
                                             Some(m) => m.bind_inputs(tb, &mut ins),
                                             None => return Err(EngineError::MissingManager),
                                         },
+                                        GenCache::Spilled(_) => {
+                                            return Err(EngineError::WaveMismatch)
+                                        }
                                     }
                                     let (outs, stats) = h.execute(&ins, &tracker, &step_opts);
                                     drop(ins); // release cache views before the append
@@ -2131,6 +2312,9 @@ impl ServeEngine {
                                                     }
                                                 }
                                             }
+                                            GenCache::Spilled(_) => {
+                                                return Err(EngineError::WaveMismatch);
+                                            }
                                         }
                                     }
                                     let (outs, stats) = h.execute(&ins, &tracker, &step_opts);
@@ -2215,13 +2399,18 @@ impl ServeEngine {
                             ));
                         } else {
                             recorder.retries += 1;
-                            queue.push_front(Pending {
-                                idx: p.idx,
-                                depth: p.depth,
-                                evictions: p.evictions,
-                                retries: p.retries + 1,
-                                not_before: clock + backoff_ticks(p.retries + 1),
-                            });
+                            requeue(
+                                &mut queue,
+                                requests,
+                                clock,
+                                Pending {
+                                    idx: p.idx,
+                                    depth: p.depth,
+                                    evictions: p.evictions,
+                                    retries: p.retries + 1,
+                                    not_before: clock + backoff_ticks(p.retries + 1),
+                                },
+                            );
                         }
                     }
                     (WaveEntry::PrefillSlice { gi, .. }, Err(e)) => {
@@ -2353,13 +2542,19 @@ impl ServeEngine {
                                             ));
                                         } else {
                                             recorder.retries += 1;
-                                            queue.push_front(Pending {
-                                                idx: p.idx,
-                                                depth: p.depth,
-                                                evictions: p.evictions,
-                                                retries: p.retries + 1,
-                                                not_before: clock + backoff_ticks(p.retries + 1),
-                                            });
+                                            requeue(
+                                                &mut queue,
+                                                requests,
+                                                clock,
+                                                Pending {
+                                                    idx: p.idx,
+                                                    depth: p.depth,
+                                                    evictions: p.evictions,
+                                                    retries: p.retries + 1,
+                                                    not_before: clock
+                                                        + backoff_ticks(p.retries + 1),
+                                                },
+                                            );
                                         }
                                         continue;
                                     }
@@ -2463,6 +2658,9 @@ impl ServeEngine {
                                 }
                                 drop(outs);
                             }
+                            GenCache::Spilled(_) => {
+                                return Err(EngineError::WaveMismatch.into());
+                            }
                         }
                         g.past += n;
                         if let Some(token) = token {
@@ -2540,6 +2738,9 @@ impl ServeEngine {
                                 }
                                 drop(outs);
                             }
+                            GenCache::Spilled(_) => {
+                                return Err(EngineError::WaveMismatch.into());
+                            }
                         }
                         g.past += 1;
                         g.tokens.push(token);
@@ -2612,6 +2813,9 @@ impl ServeEngine {
                                         continue;
                                     }
                                 }
+                                GenCache::Spilled(_) => {
+                                    return Err(EngineError::WaveMismatch.into());
+                                }
                             }
                             g.past += 1;
                             g.tokens.push(tokens[j]);
@@ -2645,6 +2849,7 @@ impl ServeEngine {
                     .map(|g| match &g.cache {
                         GenCache::Whole(c) => c.resident_bytes(),
                         GenCache::Paged(_) => 0,
+                        GenCache::Spilled(_) => 0,
                     })
                     .sum(),
             };
@@ -2663,11 +2868,16 @@ impl ServeEngine {
             for &(gi, done) in removals.iter().rev() {
                 let g = gens.remove(gi);
                 if done {
-                    if let GenCache::Paged(tb) = g.cache {
-                        match mgr.as_mut() {
+                    match g.cache {
+                        GenCache::Paged(tb) => match mgr.as_mut() {
                             Some(m) => m.release_table(tb),
                             None => return Err(EngineError::MissingManager.into()),
-                        }
+                        },
+                        GenCache::Spilled(st) => match mgr.as_ref() {
+                            Some(m) => m.discard_spilled(st),
+                            None => return Err(EngineError::MissingManager.into()),
+                        },
+                        GenCache::Whole(_) => {}
                     }
                     let req = &requests[g.idx];
                     recorder.record(
@@ -2699,11 +2909,16 @@ impl ServeEngine {
                     // re-prefill recompute — decode parity makes the
                     // resumed stream bitwise identical — or shed after
                     // max_retries.
-                    if let GenCache::Paged(tb) = g.cache {
-                        match mgr.as_mut() {
+                    match g.cache {
+                        GenCache::Paged(tb) => match mgr.as_mut() {
                             Some(m) => m.release_table(tb),
                             None => return Err(EngineError::MissingManager.into()),
-                        }
+                        },
+                        GenCache::Spilled(st) => match mgr.as_ref() {
+                            Some(m) => m.discard_spilled(st),
+                            None => return Err(EngineError::MissingManager.into()),
+                        },
+                        GenCache::Whole(_) => {}
                     }
                     let req = &requests[g.idx];
                     if g.retries >= self.config.max_retries {
@@ -2734,13 +2949,18 @@ impl ServeEngine {
                                 },
                             );
                         }
-                        queue.push_front(Pending {
-                            idx: g.idx,
-                            depth: g.depth,
-                            evictions: g.evictions,
-                            retries: g.retries + 1,
-                            not_before: clock + backoff_ticks(g.retries + 1),
-                        });
+                        requeue(
+                            &mut queue,
+                            requests,
+                            clock,
+                            Pending {
+                                idx: g.idx,
+                                depth: g.depth,
+                                evictions: g.evictions,
+                                retries: g.retries + 1,
+                                not_before: clock + backoff_ticks(g.retries + 1),
+                            },
+                        );
                     }
                 }
             }
@@ -2755,6 +2975,7 @@ impl ServeEngine {
                         .map(|g| match &g.cache {
                             GenCache::Whole(c) => c.capacity_bytes(),
                             GenCache::Paged(_) => 0,
+                            GenCache::Spilled(_) => 0,
                         })
                         .sum(),
                 };
@@ -3049,5 +3270,92 @@ mod tests {
         let req = Request::new(0, 8, 1).at_tick(5, 500).deadline(u64::MAX);
         assert!(!deadline_expired(5, &req));
         assert!(!deadline_expired(u64::MAX, &req));
+    }
+
+    #[test]
+    fn backoff_ladder_is_pinned() {
+        let ladder: Vec<u64> = (0..12).map(backoff_ticks).collect();
+        assert_eq!(ladder, vec![0, 0, 1, 2, 4, 8, 16, 32, 64, 64, 64, 64]);
+    }
+
+    fn pending(idx: usize) -> Pending {
+        Pending { idx, depth: 0, evictions: 0, retries: 0, not_before: 0 }
+    }
+
+    #[test]
+    fn requeue_respects_priority_over_retry_head_position() {
+        // pre-fix, push_front let a low-priority deepening retry (idx 0)
+        // jump the queued priority-5 arrival (idx 1)
+        let requests = vec![
+            Request::new(0, 8, 0).at_tick(0, 500),
+            Request::new(1, 8, 0).at_tick(0, 500).with_priority(5),
+            Request::new(2, 8, 0).at_tick(0, 500),
+        ];
+        let mut queue: VecDeque<Pending> = VecDeque::from(vec![pending(1), pending(2)]);
+        requeue(&mut queue, &requests, 0, pending(0));
+        let order: Vec<usize> = queue.iter().map(|p| p.idx).collect();
+        assert_eq!(order, vec![1, 0, 2], "retry heads its own class only");
+    }
+
+    #[test]
+    fn requeue_reduces_to_head_insert_for_uniform_class() {
+        // no priorities, no deadlines: the legacy head-of-queue retry
+        // position is preserved exactly
+        let requests: Vec<Request> =
+            (0..3).map(|i| Request::new(i, 8, 0).at_tick(0, 500)).collect();
+        let mut queue: VecDeque<Pending> = VecDeque::from(vec![pending(1), pending(2)]);
+        requeue(&mut queue, &requests, 0, pending(0));
+        let order: Vec<usize> = queue.iter().map(|p| p.idx).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn requeue_prefers_tighter_deadline_within_class() {
+        let requests = vec![
+            Request::new(0, 8, 0).at_tick(0, 500).deadline(20),
+            Request::new(1, 8, 0).at_tick(0, 500).deadline(5),
+        ];
+        let mut queue: VecDeque<Pending> = VecDeque::from(vec![pending(1)]);
+        requeue(&mut queue, &requests, 0, pending(0));
+        let order: Vec<usize> = queue.iter().map(|p| p.idx).collect();
+        assert_eq!(order, vec![1, 0], "slack 5 stays ahead of slack 20");
+    }
+
+    #[test]
+    fn stall_spill_restores_stream_bitwise_vs_eviction() {
+        // Two generative streams on a 2-block pool: co-residency needs 4
+        // blocks, so one stream must give way. The eviction leg recomputes
+        // it from scratch; the spill leg parks its blocks in the slow tier
+        // and restores them. Token streams are schedule-independent, so
+        // the legs must agree bit for bit.
+        let serve = |gbps: f64| {
+            let mut e = ServeEngine::new(EngineConfig {
+                model: "gpt".into(),
+                budget_bytes: 1 << 30,
+                max_batch: 4,
+                buckets: vec![16],
+                worker_threads: 1,
+                batch_decode: false,
+                block_tokens: 8,
+                pool_blocks: 2,
+                spill_gbps: gbps,
+                ..EngineConfig::default()
+            });
+            let reqs: Vec<Request> =
+                (0..2).map(|i| Request::new(i, 8, i as i32).generate(4).at_tick(0, 500)).collect();
+            e.serve(&reqs).unwrap()
+        };
+        let (evict_resp, evict_rep) = serve(0.0);
+        let (spill_resp, spill_rep) = serve(8.0);
+        assert!(evict_rep.evicted >= 1, "eviction leg must actually evict");
+        assert!(spill_rep.kv_spills >= 1, "spill leg parks at least one table");
+        assert_eq!(spill_rep.evicted, 0, "spill leg never discards blocks");
+        assert_eq!(spill_rep.kv_restores, spill_rep.kv_spills, "every parked table revives");
+        for (a, b) in evict_resp.iter().zip(spill_resp.iter()) {
+            assert_eq!(a.outcome, RequestOutcome::Completed);
+            assert_eq!(b.outcome, RequestOutcome::Completed);
+            assert_eq!(a.tokens, b.tokens, "req {}: token stream diverged", a.id);
+            assert_eq!(a.output, b.output, "req {}: final logits diverged", a.id);
+        }
     }
 }

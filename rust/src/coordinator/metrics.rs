@@ -91,6 +91,16 @@ pub struct Recorder {
     /// Waves where a prefill slice and a decode step shared the wave —
     /// the interleaving that bounds decode ITL under long prompts.
     pub interleaved_waves: usize,
+    /// Generations whose KV blocks were parked in the simulated slow
+    /// tier under stall pressure instead of dropped for re-prefill
+    /// recompute (spill tier, DESIGN.md §18; 0 with `spill_gbps` 0).
+    pub kv_spills: usize,
+    /// Parked KV tables restored into the pool (restore-on-touch).
+    pub kv_restores: usize,
+    /// Bytes moved fast → slow across all KV spills.
+    pub kv_spill_bytes: usize,
+    /// Bytes moved slow → fast across all KV restores.
+    pub kv_restore_bytes: usize,
 }
 
 impl Recorder {
@@ -208,6 +218,10 @@ impl Recorder {
             shed_wait: self.shed_wait,
             prefill_slices: self.prefill_slices,
             interleaved_waves: self.interleaved_waves,
+            kv_spills: self.kv_spills,
+            kv_restores: self.kv_restores,
+            kv_spill_bytes: self.kv_spill_bytes,
+            kv_restore_bytes: self.kv_restore_bytes,
             ttft_p50_us: pct(&self.ttft_us, 0.50),
             ttft_p99_us: pct(&self.ttft_us, 0.99),
             itl_p50_us: pct(&self.itl_us, 0.50),
@@ -304,6 +318,15 @@ pub struct MetricsReport {
     pub prefill_slices: usize,
     /// Waves where a prefill slice and a decode step shared the wave.
     pub interleaved_waves: usize,
+    /// Generations spilled to the simulated slow tier under stall
+    /// pressure (spill tier, DESIGN.md §18; 0 with `spill_gbps` 0).
+    pub kv_spills: usize,
+    /// Parked KV tables restored into the pool.
+    pub kv_restores: usize,
+    /// Bytes moved fast → slow across all KV spills.
+    pub kv_spill_bytes: usize,
+    /// Bytes moved slow → fast across all KV restores.
+    pub kv_restore_bytes: usize,
     /// Time-to-first-token percentiles (queueing wait + prefill
     /// execution; zeros when nothing generated).
     pub ttft_p50_us: u64,
@@ -391,6 +414,15 @@ impl MetricsReport {
                 s.push_str(&format!(
                     "\nchunked prefill: {} slices, {} interleaved waves",
                     self.prefill_slices, self.interleaved_waves,
+                ));
+            }
+            if self.kv_spills + self.kv_restores > 0 {
+                s.push_str(&format!(
+                    "\nspill tier: {} kv spills ({:.1} MiB out), {} restores ({:.1} MiB in)",
+                    self.kv_spills,
+                    self.kv_spill_bytes as f64 / (1 << 20) as f64,
+                    self.kv_restores,
+                    self.kv_restore_bytes as f64 / (1 << 20) as f64,
                 ));
             }
         }
@@ -592,6 +624,42 @@ mod tests {
         assert!(s.contains("shed-wait=3"), "{s}");
         assert!(s.contains("7 slices"), "{s}");
         assert!(s.contains("2 interleaved waves"), "{s}");
+    }
+
+    #[test]
+    fn spill_counters_render() {
+        let mut r = Recorder::new();
+        r.record("v", 10, 8);
+        r.record_decode(100);
+        r.kv_spills = 2;
+        r.kv_restores = 1;
+        r.kv_spill_bytes = 4 << 20;
+        r.kv_restore_bytes = 2 << 20;
+        let rep = r.finish(Duration::from_secs(1));
+        assert_eq!(rep.kv_spills, 2);
+        assert_eq!(rep.kv_restores, 1);
+        let s = rep.render();
+        assert!(s.contains("2 kv spills"), "{s}");
+        assert!(s.contains("1 restores"), "{s}");
+        // and a run that never spilled must not mention the tier
+        let mut r = Recorder::new();
+        r.record("v", 10, 8);
+        r.record_decode(100);
+        assert!(!r.finish(Duration::from_secs(1)).render().contains("spill tier"));
+    }
+
+    #[test]
+    fn zero_denominator_ratios_stay_finite() {
+        // Zero-length run: every ratio/percentile in the report divides
+        // by a guarded denominator — nothing may render NaN or inf
+        // (these strings would otherwise leak into BENCH_*.json).
+        let rep = Recorder::new().finish(Duration::from_millis(0));
+        assert!(rep.wall_seconds > 0.0, "wall clamped away from zero");
+        assert!(rep.throughput_rps.is_finite());
+        assert!(rep.throughput_tokens_s.is_finite());
+        assert_eq!(rep.mean_us, 0);
+        let s = rep.render();
+        assert!(!s.contains("NaN") && !s.contains("inf"), "{s}");
     }
 
     #[test]

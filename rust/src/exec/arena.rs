@@ -21,7 +21,7 @@
 
 use crate::exec::ExecStats;
 use crate::ir::{Graph, Node, Op};
-use crate::passes::memplan::{MemPlan, RegionMemPlan, ValueAction};
+use crate::passes::memplan::{MemPlan, RegionMemPlan, SpillKind, ValueAction};
 use crate::plan::exec_chunked::{adjust_node, governed_degree, ExecOptions};
 use crate::plan::{region_owner, region_triggers, ChunkPlan};
 use crate::tensor::attention::{fused_attention_into, fused_attention_pos_into};
@@ -31,9 +31,11 @@ use crate::tensor::matmul::matmul_into;
 use crate::tensor::ops::{binary_inplace, binary_into, to_f32_into, unary_inplace, unary_into};
 use crate::tensor::reduce::{reduce_into, softmax_into};
 use crate::tensor::{
-    broadcast_shapes, contiguous_strides, numel, Arena, ArenaStore, DType, MemoryTracker, Tensor,
+    broadcast_shapes, contiguous_strides, numel, Arena, ArenaStore, DType, MemoryTracker,
+    SpillStore, Tensor,
 };
 use crate::util::pool;
+use std::collections::HashMap;
 
 /// Recycled slot storage for every arena a memory plan spawns: the outer
 /// arena plus one store per chunk region, shared by all of that region's
@@ -45,6 +47,9 @@ pub struct ArenaStores {
     /// Parallel to `MemPlan::regions`; lanes of one region share a store
     /// (concurrent lanes pop distinct cached storage or allocate fresh).
     pub lanes: Vec<ArenaStore>,
+    /// Slow-tier byte accounting for the plan's spill/restore script.
+    /// Cold (all-zero) unless the plan carries spill decisions.
+    pub spill: SpillStore,
 }
 
 impl ArenaStores {
@@ -52,6 +57,7 @@ impl ArenaStores {
         ArenaStores {
             outer: ArenaStore::new(mem.slots.len()),
             lanes: mem.regions.iter().map(|r| ArenaStore::new(r.slots.len())).collect(),
+            spill: SpillStore::new(),
         }
     }
 
@@ -137,8 +143,56 @@ pub fn execute_arena(
         ..ExecStats::default()
     };
 
+    // Spill/restore script (cold unless the planner accepted placement
+    // decisions): restores run at the top of their position, spills at
+    // its very end — exactly the splice points the planner's replay
+    // priced, which keeps high-water == planned_peak_bytes exact.
+    let mut restore_at: HashMap<usize, Vec<usize>> = HashMap::new();
+    let mut spill_at: HashMap<usize, Vec<usize>> = HashMap::new();
+    let mut stash: Vec<Option<(Vec<f32>, Vec<usize>)>> = Vec::new();
+    if !mem.spills.is_empty() {
+        stash.resize_with(mem.spills.len(), || None);
+        for (di, d) in mem.spills.iter().enumerate() {
+            restore_at.entry(d.restore_before).or_default().push(di);
+            spill_at.entry(d.spill_after).or_default().push(di);
+        }
+    }
+
     for node in &graph.nodes {
         let id = node.id;
+        if !mem.spills.is_empty() {
+            if let Some(dis) = restore_at.get(&id) {
+                for &di in dis {
+                    let d = &mem.spills[di];
+                    match d.kind {
+                        SpillKind::Offload => {
+                            let (data, shape) =
+                                stash[di].take().expect("restore before spill in script");
+                            let mut buf = arena.acquire_f32(d.slot, data.len());
+                            buf.copy_from_slice(&data);
+                            values[d.value] = Some(Tensor::from_arena_f32(
+                                buf,
+                                &shape,
+                                &arena,
+                                d.slot,
+                                Some(tracker.clone()),
+                            ));
+                            stores.spill.on_restore(data.len() * 4);
+                            stats.spill_in_bytes += data.len() * 4;
+                        }
+                        SpillKind::Recompute => {
+                            // Same `_into` kernel over the same live
+                            // inputs: bitwise identical to the original.
+                            let src = graph.node(d.value);
+                            let out = exec_materialize(src, d.slot, &values, &arena, tracker);
+                            values[d.value] = Some(out);
+                            stats.spill_recomputes += 1;
+                        }
+                    }
+                    stats.spill_events += 1;
+                }
+            }
+        }
         let skip = prebound[id] || owner[id].is_some();
         if !skip {
             let out = exec_node_arena(node, mem.actions[id], &mut values, &arena, tracker);
@@ -167,6 +221,25 @@ pub fn execute_arena(
                 );
                 for &v in &mem.regions[pi].post_releases {
                     values[v] = None;
+                }
+            }
+        }
+        if !mem.spills.is_empty() {
+            if let Some(dis) = spill_at.get(&id) {
+                for &di in dis {
+                    let d = &mem.spills[di];
+                    let t = values[d.value]
+                        .take()
+                        .unwrap_or_else(|| panic!("spill of dead value {}", d.value));
+                    if d.kind == SpillKind::Offload {
+                        let data = t.to_vec_f32();
+                        let shape = t.shape().to_vec();
+                        stores.spill.on_spill(data.len() * 4);
+                        stats.spill_out_bytes += data.len() * 4;
+                        stash[di] = Some((data, shape));
+                    }
+                    stats.spill_events += 1;
+                    drop(t); // sole owner: frees the arena slot bytes now
                 }
             }
         }

@@ -30,6 +30,16 @@ pub struct ExecStats {
     /// Largest per-lane sub-arena high-water mark across chunk regions
     /// (equals the planner's `lane_bytes` for the executed regions).
     pub lane_peak_bytes: usize,
+    /// Bytes copied out to the slow spill tier this run (offload
+    /// decisions; 0 unless the plan carries spill decisions).
+    pub spill_out_bytes: usize,
+    /// Bytes copied back from the slow tier at restore points.
+    pub spill_in_bytes: usize,
+    /// Spill-script events executed (offload spills + all restores).
+    pub spill_events: usize,
+    /// Restores served by re-executing the producing node instead of a
+    /// slow-tier copy.
+    pub spill_recomputes: usize,
 }
 
 /// Execute `graph` with positional `inputs`/`params`; intermediates land on

@@ -25,6 +25,10 @@ pub struct MemoryProfile {
     pub peak_bytes: usize,
     /// Node at which the peak occurs.
     pub peak_node: NodeId,
+    /// Bytes of persistent (cross-execution) inputs the graph binds —
+    /// excluded from the activation series above; the serving tier prices
+    /// them as resident state (KV caches, cached prefixes).
+    pub persistent_bytes: usize,
 }
 
 impl MemoryProfile {
@@ -354,8 +358,10 @@ fn simulate(graph: &Graph, plans: &[ChunkPlan], pessimistic: bool) -> MemoryProf
         per_node,
         peak_bytes: peak,
         peak_node,
+        persistent_bytes: graph.persistent_bytes(),
     }
 }
+
 
 /// Activation-memory profile of the unchunked graph.
 pub fn estimate(graph: &Graph) -> MemoryProfile {
@@ -401,6 +407,12 @@ pub struct CostQuote {
     /// request actually holds), not bucket capacity (DESIGN.md §14), so
     /// admission can cross-check its residency charge against the quote.
     pub persistent_bytes: usize,
+    /// Bytes the memory planner's spill placements move across the slow
+    /// tier per execution (out + back in; 0 without placements — the quote
+    /// itself never plans, `PlanHandle` fills this from the `MemPlan`).
+    pub spill_transfer_bytes: usize,
+    /// Modeled FLOPs of recompute placements per execution (0 without).
+    pub spill_recompute_flops: usize,
 }
 
 impl CostQuote {
@@ -475,6 +487,8 @@ pub fn cost_quote(graph: &Graph, plans: &[ChunkPlan]) -> CostQuote {
         per_chunk_bytes: per_chunk,
         estimate_bytes,
         persistent_bytes: graph.persistent_bytes(),
+        spill_transfer_bytes: 0,
+        spill_recompute_flops: 0,
     }
 }
 

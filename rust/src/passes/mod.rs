@@ -23,7 +23,10 @@ pub use estimate::{
     cost_quote, estimate, estimate_under_plan, peak_upper_bound, planner_gap, CostQuote,
     MemoryProfile, PlannerGap,
 };
-pub use memplan::{describe_memplan, plan_memory, MemPlan, RegionMemPlan, ValueAction};
+pub use memplan::{
+    describe_memplan, plan_memory, plan_memory_with, spill_params_from_env, MemPlan,
+    RegionMemPlan, SpillDecision, SpillKind, SpillParams, ValueAction,
+};
 pub use search::{search_chunks, ChunkCandidate, SearchConfig};
 pub use select::{select_chunks, SelectConfig};
 

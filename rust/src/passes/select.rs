@@ -67,6 +67,28 @@ impl Default for SelectConfig {
     }
 }
 
+/// Modeled compute rate for recompute placements (DESIGN.md §18): the
+/// effective GFLOP/s the latency-vs-peak objective prices re-execution at.
+/// A model constant, not a measurement — it only has to rank recompute
+/// against the spill transfer priced by `AUTOCHUNK_SPILL_GBPS`.
+pub const RECOMPUTE_GFLOPS: f64 = 8.0;
+
+/// Latency price, in microseconds, of one placement decision under the
+/// selection objective: `bytes_moved` across a `gbps` GB/s slow tier plus
+/// `flops` of recompute at [`RECOMPUTE_GFLOPS`]. The memory planner's
+/// placement search uses this as its tiebreak (peak first, then cheapest
+/// modeled latency), and the long-context bench reports the same model as
+/// its tok/s penalty.
+pub fn placement_cost_us(bytes_moved: usize, flops: usize, gbps: f64) -> f64 {
+    let transfer = if gbps > 0.0 {
+        bytes_moved as f64 / (gbps * 1e9) * 1e6
+    } else {
+        0.0
+    };
+    let recompute = flops as f64 / (RECOMPUTE_GFLOPS * 1e9) * 1e6;
+    transfer + recompute
+}
+
 /// A selected plan with its cost.
 #[derive(Clone, Debug)]
 pub struct ScoredChunk {

@@ -19,7 +19,7 @@ use crate::exec::{execute_node, ExecStats};
 use crate::ir::{Graph, Node, NodeId, Op};
 use crate::passes::estimate::{cost_quote, estimate_under_plan, per_chunk_bytes, CostQuote};
 use crate::exec::arena::ArenaStores;
-use crate::passes::memplan::{plan_memory, MemPlan};
+use crate::passes::memplan::{plan_memory_with, spill_params_from_env, MemPlan, SpillParams};
 use crate::tensor::{contiguous_strides, MemoryTracker, Tensor};
 use crate::util::pool;
 use std::collections::HashMap;
@@ -82,9 +82,25 @@ struct PlanInner {
 impl PlanHandle {
     /// Package a compilation result. `params` are the bucket's weights
     /// (untracked: parameter memory is outside activation accounting).
+    /// Spill-tier behaviour follows `AUTOCHUNK_SPILL_GBPS` (default off).
     pub fn new(tag: &str, graph: Graph, plans: Vec<ChunkPlan>, params: Vec<Tensor>) -> PlanHandle {
-        let quote = cost_quote(&graph, &plans);
-        let mem = plan_memory(&graph, &plans);
+        PlanHandle::new_with_spill(tag, graph, plans, params, spill_params_from_env())
+    }
+
+    /// [`PlanHandle::new`] with explicit spill-tier parameters, so tests
+    /// and benches can compile both legs in one process and the engine
+    /// can thread its configured bandwidth past the env latch.
+    pub fn new_with_spill(
+        tag: &str,
+        graph: Graph,
+        plans: Vec<ChunkPlan>,
+        params: Vec<Tensor>,
+        spill: Option<SpillParams>,
+    ) -> PlanHandle {
+        let mut quote = cost_quote(&graph, &plans);
+        let mem = plan_memory_with(&graph, &plans, spill);
+        quote.spill_transfer_bytes = mem.spill_transfer_bytes;
+        quote.spill_recompute_flops = mem.spill_recompute_flops;
         let stores = ArenaStores::for_plan(&mem);
         PlanHandle {
             inner: Arc::new(PlanInner {

@@ -129,6 +129,110 @@ impl MemoryTracker {
     }
 }
 
+/// Shared counters behind a [`SpillStore`] handle.
+#[derive(Debug, Default)]
+struct SpillInner {
+    /// Bytes currently parked in the slow tier.
+    current: AtomicUsize,
+    /// High-water mark of `current`.
+    peak: AtomicUsize,
+    /// Total bytes ever moved fast → slow (cumulative).
+    bytes_out: AtomicUsize,
+    /// Total bytes ever moved slow → fast (cumulative).
+    bytes_in: AtomicUsize,
+    /// Spill events (fast → slow transfers).
+    spills: AtomicUsize,
+    /// Restore events (slow → fast transfers).
+    restores: AtomicUsize,
+}
+
+/// Byte accounting for the simulated **slow tier** (DESIGN.md §18): the
+/// destination of planner-placed activation spills and of cold paged KV
+/// blocks evicted under pool pressure. The store holds no storage itself —
+/// spilled payloads live with their owner (the arena executor's stash, the
+/// cache manager's [`crate::tensor::kvpage`] spill tables); this is the
+/// shared ledger that makes "bytes parked off the fast tier" a first-class,
+/// exactly-accounted quantity.
+///
+/// Deliberately *not* a [`MemoryTracker`]: the run tracker's `current`
+/// must keep meaning fast-tier bytes only (the invariant auditor pins
+/// `tracker.current() == resident KV` between waves, and `measured_peak`
+/// is the fast-tier peak the planner bounds).
+#[derive(Clone, Debug, Default)]
+pub struct SpillStore {
+    inner: Arc<SpillInner>,
+}
+
+impl SpillStore {
+    pub fn new() -> SpillStore {
+        SpillStore::default()
+    }
+
+    /// Bytes parked in the slow tier right now.
+    pub fn current(&self) -> usize {
+        self.inner.current.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark of parked bytes.
+    pub fn peak(&self) -> usize {
+        self.inner.peak.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative bytes transferred fast → slow.
+    pub fn bytes_out(&self) -> usize {
+        self.inner.bytes_out.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative bytes transferred slow → fast.
+    pub fn bytes_in(&self) -> usize {
+        self.inner.bytes_in.load(Ordering::Relaxed)
+    }
+
+    /// Spill events so far.
+    pub fn spills(&self) -> usize {
+        self.inner.spills.load(Ordering::Relaxed)
+    }
+
+    /// Restore events so far.
+    pub fn restores(&self) -> usize {
+        self.inner.restores.load(Ordering::Relaxed)
+    }
+
+    /// Account `bytes` moving fast → slow.
+    pub fn on_spill(&self, bytes: usize) {
+        let prev = self.inner.current.fetch_add(bytes, Ordering::Relaxed);
+        let now = prev + bytes;
+        self.inner.bytes_out.fetch_add(bytes, Ordering::Relaxed);
+        self.inner.spills.fetch_add(1, Ordering::Relaxed);
+        let mut peak = self.inner.peak.load(Ordering::Relaxed);
+        while now > peak {
+            match self.inner.peak.compare_exchange_weak(
+                peak,
+                now,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(p) => peak = p,
+            }
+        }
+    }
+
+    /// Account `bytes` moving slow → fast.
+    pub fn on_restore(&self, bytes: usize) {
+        self.inner.current.fetch_sub(bytes, Ordering::Relaxed);
+        self.inner.bytes_in.fetch_add(bytes, Ordering::Relaxed);
+        self.inner.restores.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Account `bytes` leaving the slow tier without a restore (the owner
+    /// discarded the payload — an evicted generation, a recompute-placed
+    /// value whose stash never existed has nothing to discard).
+    pub fn on_discard(&self, bytes: usize) {
+        self.inner.current.fetch_sub(bytes, Ordering::Relaxed);
+    }
+}
+
 /// Raw storage for tensor elements.
 ///
 /// Compute is f32 (plus i32 for token ids / gather indices). Other logical
@@ -614,6 +718,29 @@ mod tests {
         assert_eq!(run2.high_water(), 40);
         assert_eq!(run1.high_water(), 40, "runs account independently");
         run2.release(0, Storage::F32(v));
+    }
+
+    #[test]
+    fn spill_store_accounts_exactly() {
+        let s = SpillStore::new();
+        s.on_spill(100);
+        s.on_spill(50);
+        assert_eq!(s.current(), 150);
+        assert_eq!(s.peak(), 150);
+        assert_eq!(s.bytes_out(), 150);
+        assert_eq!(s.spills(), 2);
+        s.on_restore(100);
+        assert_eq!(s.current(), 50);
+        assert_eq!(s.peak(), 150, "peak is a high-water mark");
+        assert_eq!(s.bytes_in(), 100);
+        assert_eq!(s.restores(), 1);
+        s.on_discard(50);
+        assert_eq!(s.current(), 0);
+        assert_eq!(s.bytes_out(), 150, "discard moves no transfer bytes");
+        // handles share counters
+        let s2 = s.clone();
+        s2.on_spill(8);
+        assert_eq!(s.current(), 8);
     }
 
     #[test]

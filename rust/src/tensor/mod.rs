@@ -25,7 +25,7 @@ pub mod matmul;
 pub mod ops;
 pub mod reduce;
 
-pub use alloc::{Arena, ArenaStore, Buffer, MemoryTracker, SlotSpec, Storage};
+pub use alloc::{Arena, ArenaStore, Buffer, MemoryTracker, SlotSpec, SpillStore, Storage};
 pub use kvcache::KvCache;
 pub use kvpage::{BlockId, BlockPool, BlockTable};
 

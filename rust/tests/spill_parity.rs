@@ -1,0 +1,248 @@
+//! Differential fuzz for spill/recompute placement: a memory plan with
+//! spill decisions must execute *bitwise* identical to the legacy plan —
+//! restores copy the exact bytes back, recomputes rerun the same kernels
+//! in the same element order — on real models and seeded random graphs,
+//! at pool widths 1 and 4, arena on and off.
+//!
+//! Also pins the soundness facts the admission path relies on with the
+//! tier enabled: the spill-planned peak never exceeds the legacy peak,
+//! the arena high-water mark still equals `planned_peak_bytes` exactly
+//! (the ledger models every spill and restore), and the slow-tier store
+//! drains to zero once execution finishes.
+
+use autochunk::exec::{execute, execute_arena, random_inputs, random_params};
+use autochunk::ir::{Graph, GraphBuilder};
+use autochunk::models::*;
+use autochunk::passes::{
+    autochunk, estimate, plan_memory_with, AutoChunkConfig, SpillParams,
+};
+use autochunk::plan::{execute_chunked, ExecOptions};
+use autochunk::tensor::ops::{BinaryOp, UnaryOp};
+use autochunk::tensor::{MemoryTracker, Tensor};
+use autochunk::util::pool;
+
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Rng {
+        Rng(seed.wrapping_mul(0x9E3779B97F4A7C15) | 1)
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        self.0
+    }
+
+    fn pick(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+/// Random chain-with-residuals graph (the memplan_fuzz generator, minus
+/// the arms irrelevant to placement): long-lived residual edges create
+/// the def→use gaps the placement search feeds on.
+fn random_graph(seed: u64, s: usize, d: usize) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new("random");
+    let x = b.input("x", &[s, d]);
+    let mut cur = x;
+    let mut prev = x;
+    let n_ops = 6 + rng.pick(8);
+    for i in 0..n_ops {
+        cur = match rng.pick(6) {
+            0 => b.unary(
+                [UnaryOp::Relu, UnaryOp::Gelu, UnaryOp::Tanh, UnaryOp::Exp][rng.pick(4)],
+                cur,
+            ),
+            1 => b.binary([BinaryOp::Add, BinaryOp::Mul][rng.pick(2)], cur, prev),
+            2 => {
+                let w = b.param(&format!("w{i}"), &[d, d]);
+                b.matmul(cur, w)
+            }
+            3 => {
+                let t = b.transpose(cur, &[1, 0]);
+                let scores = b.matmul(cur, t);
+                let probs = b.softmax(scores, 1);
+                b.matmul(probs, cur)
+            }
+            4 => {
+                let m = b.reduce(autochunk::tensor::reduce::ReduceOp::Max, cur, 1, true);
+                b.sub(cur, m)
+            }
+            _ => b.binary_scalar(BinaryOp::Mul, cur, 0.9),
+        };
+        if rng.pick(3) == 0 {
+            prev = cur;
+        }
+    }
+    b.finish(vec![cur])
+}
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.to_vec_f32().iter().map(|x| x.to_bits()).collect()
+}
+
+const GBPS: SpillParams = SpillParams { gbps: 8.0 };
+
+/// One (graph, plans) pair: interpreter reference vs arena with the
+/// legacy plan vs arena with the spill plan, at the current pool width.
+/// Returns the number of placement decisions the spill plan made.
+fn assert_spill_differential(
+    tag: &str,
+    g: &Graph,
+    plans: &[autochunk::plan::ChunkPlan],
+    seed: u64,
+) -> usize {
+    let ins = random_inputs(g, seed + 50, None);
+    let ps = random_params(g, seed + 99);
+    let t0 = MemoryTracker::new();
+    let (want, _) = if plans.is_empty() {
+        execute(g, &ins, &ps, &t0)
+    } else {
+        execute_chunked(g, plans, &ins, &ps, &t0)
+    };
+
+    let legacy = plan_memory_with(g, plans, None);
+    let spilled = plan_memory_with(g, plans, Some(GBPS));
+    assert!(
+        spilled.planned_peak_bytes <= legacy.planned_peak_bytes,
+        "{tag}: spill planning raised the peak ({} > {})",
+        spilled.planned_peak_bytes,
+        legacy.planned_peak_bytes,
+    );
+
+    let opts = ExecOptions { budget_bytes: None, use_arena: true, ..ExecOptions::default() };
+    for (mode, mem) in [("legacy", &legacy), ("spill", &spilled)] {
+        let tracker = MemoryTracker::new();
+        let (got, stats) = execute_arena(g, plans, &ins, &ps, mem, None, &tracker, &opts);
+        assert_eq!(want.len(), got.len(), "{tag}/{mode}: output arity");
+        for (k, (w, gt)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(w.shape(), gt.shape(), "{tag}/{mode}: output {k} shape");
+            assert_eq!(bits(w), bits(gt), "{tag}/{mode}: output {k} not bitwise identical");
+        }
+        assert_eq!(
+            stats.arena_peak_bytes, mem.planned_peak_bytes,
+            "{tag}/{mode}: arena high-water vs planned peak"
+        );
+        if mode == "spill" && !mem.spills.is_empty() {
+            assert!(
+                stats.spill_events + stats.spill_recomputes > 0,
+                "{tag}: plan has {} decisions but the executor honored none",
+                mem.spills.len(),
+            );
+            assert_eq!(
+                stats.spill_out_bytes, stats.spill_in_bytes,
+                "{tag}: every offloaded byte must come back"
+            );
+        }
+    }
+    spilled.spills.len()
+}
+
+#[test]
+fn spill_off_is_bitwise_legacy_on_random_graphs() {
+    // `None` must be the legacy planner exactly: same actions, same
+    // slots, same peak, no decisions — the default-off guarantee.
+    for seed in 0..16u64 {
+        let g = random_graph(seed + 4000, 48, 16);
+        assert!(g.validate().is_ok(), "seed {seed}");
+        let a = plan_memory_with(&g, &[], None);
+        let b = plan_memory_with(&g, &[], None);
+        assert_eq!(a.actions, b.actions, "seed {seed}: planning is deterministic");
+        assert_eq!(a.planned_peak_bytes, b.planned_peak_bytes);
+        assert!(a.spills.is_empty(), "seed {seed}: no tier, no decisions");
+        assert_eq!(a.spill_transfer_bytes, 0);
+        assert_eq!(a.spill_recompute_flops, 0);
+    }
+}
+
+#[test]
+fn spill_matches_interpreter_on_random_graphs() {
+    let mut placed = 0usize;
+    for seed in 0..20u64 {
+        let g = random_graph(seed + 5000, 48, 16);
+        assert!(g.validate().is_ok(), "seed {seed}");
+        for width in [1usize, 4] {
+            pool::with_threads(width, || {
+                placed +=
+                    assert_spill_differential(&format!("seed {seed} width {width}"), &g, &[], seed);
+            });
+        }
+    }
+    assert!(placed > 0, "placement search never fired across the sweep");
+    eprintln!("spill fuzz exercised {placed} placement decisions");
+}
+
+#[test]
+fn spill_matches_chunked_interpreter_on_random_graphs() {
+    let mut tested = 0usize;
+    for seed in 0..12u64 {
+        let g = random_graph(seed + 6000, 64, 16);
+        let base = estimate(&g).peak_bytes;
+        let result = autochunk(&g, base / 3, &AutoChunkConfig::default());
+        if result.plans.is_empty() {
+            continue;
+        }
+        tested += 1;
+        for width in [1usize, 4] {
+            pool::with_threads(width, || {
+                assert_spill_differential(
+                    &format!("chunked seed {seed} width {width}"),
+                    &g,
+                    &result.plans,
+                    seed,
+                );
+            });
+        }
+    }
+    assert!(tested >= 1, "no chunkable random graphs in the sweep");
+}
+
+#[test]
+fn spill_matches_interpreter_on_models() {
+    for (name, g) in [
+        ("gpt", gpt(&GptConfig { seq: 48, layers: 1, ..Default::default() })),
+        ("vit", vit(&ViTConfig { patches: 48, layers: 1, ..Default::default() })),
+        (
+            "evoformer",
+            evoformer(&EvoformerConfig { seq: 8, blocks: 1, ..Default::default() }),
+        ),
+        ("unet", unet(&UNetConfig { image: 16, ..Default::default() })),
+    ] {
+        for width in [1usize, 4] {
+            pool::with_threads(width, || {
+                assert_spill_differential(&format!("{name} width {width}"), &g, &[], 3);
+            });
+        }
+    }
+}
+
+#[test]
+fn spill_plan_reports_strictly_lower_peak_when_it_places() {
+    // When the search accepts any decision, the planned peak must have
+    // strictly improved (the greedy only accepts strict wins) and the
+    // saved bytes must reconcile with the legacy peak.
+    let mut improved = 0usize;
+    for seed in 0..20u64 {
+        let g = random_graph(seed + 7000, 64, 24);
+        let legacy = plan_memory_with(&g, &[], None);
+        let spilled = plan_memory_with(&g, &[], Some(GBPS));
+        if spilled.spills.is_empty() {
+            assert_eq!(spilled.planned_peak_bytes, legacy.planned_peak_bytes, "seed {seed}");
+            continue;
+        }
+        improved += 1;
+        assert!(
+            spilled.planned_peak_bytes < legacy.planned_peak_bytes,
+            "seed {seed}: decisions without a peak win"
+        );
+        assert_eq!(
+            spilled.spill_saved_bytes,
+            legacy.planned_peak_bytes - spilled.planned_peak_bytes,
+            "seed {seed}: saved-bytes bookkeeping"
+        );
+    }
+    assert!(improved > 0, "no graph in the sweep benefited from placement");
+}
