@@ -52,10 +52,21 @@ impl Auditor {
 
     /// Arena exactness for one executed wave entry: the outer arena's
     /// measured high-water mark must equal the planner's exact peak.
-    pub fn check_arena(&mut self, tag: &str, measured: usize, planned: usize) {
+    /// `wave` and `request` anchor the violation to the scheduling moment
+    /// it happened at, so a report line (and its trace instant, DESIGN.md
+    /// §19) is actionable without replaying the run.
+    pub fn check_arena(
+        &mut self,
+        wave: usize,
+        request: usize,
+        tag: &str,
+        measured: usize,
+        planned: usize,
+    ) {
         if measured != planned {
             self.violate(format!(
-                "arena high-water {measured} != planned peak {planned} for '{tag}'"
+                "wave {wave} req {request}: arena high-water {measured} != planned peak \
+                 {planned} for '{tag}'"
             ));
         }
     }
@@ -186,7 +197,7 @@ mod tests {
     #[test]
     fn clean_run_produces_empty_report() {
         let mut a = Auditor::new();
-        a.check_arena("t", 128, 128);
+        a.check_arena(0, 1, "t", 128, 128);
         a.check_wave(0, 1024, 1024, Some((3, 5, 8)), &[1, 2], &[3], &[0], 5);
         a.check_terminal(0, 0, 0, 0, 0, 5, 5);
         let rep = a.into_report();
@@ -213,9 +224,10 @@ mod tests {
     #[test]
     fn arena_mismatch_is_reported() {
         let mut a = Auditor::new();
-        a.check_arena("gpt_s16", 100, 96);
+        a.check_arena(3, 7, "gpt_s16", 100, 96);
         assert_eq!(a.violations().len(), 1);
         assert!(a.violations()[0].contains("gpt_s16"));
+        assert!(a.violations()[0].contains("wave 3 req 7"), "{}", a.violations()[0]);
     }
 
     #[test]

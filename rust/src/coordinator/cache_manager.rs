@@ -31,6 +31,7 @@
 use crate::coordinator::engine::EngineError;
 use crate::tensor::{BlockPool, BlockTable, MemoryTracker, SpillStore, Tensor};
 use crate::util::fault::{FaultPlan, FaultSite};
+use crate::util::trace::{ArgV, TraceScope};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -106,6 +107,11 @@ pub struct CacheManager {
     /// the run tracker: fast-tier residency (and the invariant auditor's
     /// `tracker.current == resident_kv` check) must not see parked bytes.
     spill: SpillStore,
+    /// KV-lane trace scope (DESIGN.md §19). Sound without locking beyond
+    /// the scope's own buffer because every mutating entry point runs on
+    /// the serial coordinator thread; `bind_inputs` (the one method the
+    /// parallel section calls) is deliberately not instrumented.
+    trace: Option<TraceScope>,
 }
 
 impl CacheManager {
@@ -124,6 +130,7 @@ impl CacheManager {
             shared_hits: 0,
             faults: None,
             spill: SpillStore::new(),
+            trace: None,
         }
     }
 
@@ -138,6 +145,15 @@ impl CacheManager {
         self.faults = Some(plan);
     }
 
+    /// Install the KV-lane trace scope: block lifecycle events
+    /// (`kv.alloc` / `kv.prefix_hit` / `kv.cow` / `kv.free` / `kv.spill` /
+    /// `kv.restore` / `kv.discard`) are emitted on it from then on. Block
+    /// ids, counts and bytes are pure functions of the serial admission
+    /// order, so the event stream is width-independent (DESIGN.md §19).
+    pub fn set_trace(&mut self, scope: TraceScope) {
+        self.trace = Some(scope);
+    }
+
     /// Pool allocation routed through the chaos harness: an installed
     /// plan may answer with synthetic exhaustion; real exhaustion
     /// surfaces as a typed error either way (never a panic).
@@ -148,7 +164,14 @@ impl CacheManager {
             }
         }
         let free = self.pool.free_blocks();
-        self.pool.alloc().ok_or(EngineError::PoolExhausted { free })
+        let id = self.pool.alloc().ok_or(EngineError::PoolExhausted { free })?;
+        if let Some(t) = &self.trace {
+            t.instant(
+                "kv.alloc",
+                vec![("block", ArgV::U(id as u64)), ("free", ArgV::U(self.pool.free_blocks() as u64))],
+            );
+        }
+        Ok(id)
     }
 
     pub fn pool(&self) -> &BlockPool {
@@ -249,6 +272,17 @@ impl CacheManager {
             if let Some(&id) = self.share.get(&key) {
                 self.pool.retain(id);
                 self.shared_hits += 1;
+                if let Some(t) = &self.trace {
+                    t.instant(
+                        "kv.prefix_hit",
+                        vec![
+                            ("block", ArgV::U(id as u64)),
+                            ("bucket", ArgV::U(bucket as u64)),
+                            ("index", ArgV::U(bi as u64)),
+                            ("hits", ArgV::U(self.shared_hits as u64)),
+                        ],
+                    );
+                }
                 table.push_block(id);
                 continue;
             }
@@ -302,6 +336,12 @@ impl CacheManager {
                 self.pool.copy_block(id, cur);
                 let old = table.swap_block(bi, id);
                 debug_assert_eq!(old, cur);
+                if let Some(t) = &self.trace {
+                    t.instant(
+                        "kv.cow",
+                        vec![("from", ArgV::U(cur as u64)), ("to", ArgV::U(id as u64))],
+                    );
+                }
                 // sibling references keep the original (and its share
                 // entry) alive; ours moves to the private copy
                 self.release_block(cur);
@@ -361,6 +401,12 @@ impl CacheManager {
                         self.pool.copy_block(id, cur);
                         let old = table.swap_block(bi, id);
                         debug_assert_eq!(old, cur);
+                        if let Some(t) = &self.trace {
+                            t.instant(
+                                "kv.cow",
+                                vec![("from", ArgV::U(cur as u64)), ("to", ArgV::U(id as u64))],
+                            );
+                        }
                         self.release_block(cur);
                     })
                 } else {
@@ -403,6 +449,17 @@ impl CacheManager {
 
     /// Release every block of a finished (or evicted) generation.
     pub fn release_table(&mut self, table: BlockTable) {
+        if let Some(t) = &self.trace {
+            if !table.blocks().is_empty() {
+                t.instant(
+                    "kv.free",
+                    vec![
+                        ("blocks", ArgV::U(table.blocks().len() as u64)),
+                        ("len", ArgV::U(table.len() as u64)),
+                    ],
+                );
+            }
+        }
         for &id in table.blocks() {
             self.release_block(id);
         }
@@ -428,6 +485,16 @@ impl CacheManager {
         }
         let len = table.len();
         let bytes = blocks.len() * self.block_bytes();
+        if let Some(t) = &self.trace {
+            t.instant(
+                "kv.spill",
+                vec![
+                    ("bytes", ArgV::U(bytes as u64)),
+                    ("blocks", ArgV::U(blocks.len() as u64)),
+                    ("len", ArgV::U(len as u64)),
+                ],
+            );
+        }
         self.release_table(table);
         self.spill.on_spill(bytes);
         SpilledTable { blocks, len }
@@ -463,14 +530,29 @@ impl CacheManager {
             table.push_block(id);
         }
         table.set_len(spilled.len);
-        self.spill.on_restore(spilled.blocks.len() * self.block_bytes());
+        let bytes = spilled.blocks.len() * self.block_bytes();
+        self.spill.on_restore(bytes);
+        if let Some(t) = &self.trace {
+            t.instant(
+                "kv.restore",
+                vec![
+                    ("bytes", ArgV::U(bytes as u64)),
+                    ("blocks", ArgV::U(spilled.blocks.len() as u64)),
+                    ("len", ArgV::U(spilled.len as u64)),
+                ],
+            );
+        }
         Ok(table)
     }
 
     /// Drop a spilled table without restoring it (generation finished,
     /// failed, or was evicted for real) — slow-tier accounting only.
     pub fn discard_spilled(&self, spilled: SpilledTable) {
-        self.spill.on_discard(spilled.blocks.len() * self.block_bytes());
+        let bytes = spilled.blocks.len() * self.block_bytes();
+        if let Some(t) = &self.trace {
+            t.instant("kv.discard", vec![("bytes", ArgV::U(bytes as u64))]);
+        }
+        self.spill.on_discard(bytes);
     }
 
     fn release_block(&mut self, id: usize) {

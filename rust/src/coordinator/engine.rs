@@ -57,9 +57,10 @@
 
 use crate::coordinator::audit::Auditor;
 use crate::coordinator::cache_manager::{CacheManager, SpilledTable};
+use crate::coordinator::explain::AdmissionExplain;
 use crate::coordinator::metrics::{MetricsReport, Recorder};
 use crate::coordinator::request::{Request, RequestOutcome};
-use crate::exec::random_params;
+use crate::exec::{random_params, ExecStats};
 use crate::ir::Graph;
 use crate::models::{self, GptConfig};
 use crate::passes::select::placement_cost_us;
@@ -70,6 +71,7 @@ use crate::tensor::{numel, BlockTable, DType, KvCache, MemoryTracker, Tensor};
 use crate::util::error::Result;
 use crate::util::fault::{silence_injected_panics, FaultPlan, FaultScope, InjectedFault};
 use crate::util::pool;
+use crate::util::trace::{self, ArgV, Trace, TraceHeader, TraceScope};
 use std::cmp::Reverse;
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -168,6 +170,15 @@ pub struct EngineConfig {
     /// Run the engine invariant auditor after every wave (and at drain).
     /// Violations are collected on the metrics report, never panicked.
     pub audit: bool,
+    /// Record a structured trace of each serve call (DESIGN.md §19):
+    /// scheduler decisions, compile/wave/node spans, KV-cache events,
+    /// and the per-wave memory timeline, retrievable afterwards via
+    /// [`ServeEngine::take_trace`]. Also forced on when
+    /// `AUTOCHUNK_TRACE=<path>` is set (which additionally writes the
+    /// Chrome trace-event JSON to `<path>`). `false` — the default —
+    /// keeps every instrumentation site a single `None` branch with no
+    /// allocation, locking, or clock read.
+    pub trace: bool,
     /// Compiler options for the per-bucket chunk search.
     pub compile: AutoChunkConfig,
 }
@@ -192,6 +203,7 @@ impl Default for EngineConfig {
             spill_gbps: spill_gbps_default(),
             faults: None,
             audit: false,
+            trace: false,
             compile: AutoChunkConfig::default(),
         }
     }
@@ -540,20 +552,21 @@ enum WaveEntry {
 
 /// Result of one executed wave entry. A `Step` is either a generation
 /// prefill or a decode step — the paired [`WaveEntry`] discriminates.
-/// `arena_peak` is the main execute's outer-arena high-water mark (0 off
-/// arena), which the auditor checks against the planner's exact peak.
+/// `stats` is the main execute's [`ExecStats`]: the auditor checks its
+/// `arena_peak_bytes` against the planner's exact peak, and the recorder
+/// absorbs its spill-tier traffic counters into the metrics report.
 enum WaveOut {
     Plain {
         latency_us: u64,
         out: Vec<f32>,
-        arena_peak: usize,
+        stats: ExecStats,
     },
     Step {
         latency_us: u64,
         outs: Vec<Tensor>,
         logits: Vec<f32>,
         token: i32,
-        arena_peak: usize,
+        stats: ExecStats,
     },
     /// One batched decode step: `outs` holds the stacked graph outputs
     /// (`[hidden [w,d], k_new [h,w,dh], v_new, …]`); `logits`/`tokens`
@@ -564,7 +577,7 @@ enum WaveOut {
         outs: Vec<Tensor>,
         logits: Vec<Vec<f32>>,
         tokens: Vec<i32>,
-        arena_peak: usize,
+        stats: ExecStats,
     },
     /// One chunked-prefill slice: `outs` is the slice graph's output list
     /// (`[hidden [n,d], k_new [h,n,dh], v_new, …]`); `logits`/`token` are
@@ -574,7 +587,7 @@ enum WaveOut {
         outs: Vec<Tensor>,
         logits: Option<Vec<f32>>,
         token: Option<i32>,
-        arena_peak: usize,
+        stats: ExecStats,
     },
 }
 
@@ -743,6 +756,12 @@ pub struct ServeEngine {
     registry: Registry,
     cache_hits: usize,
     cache_misses: usize,
+    /// Trace of the most recent serve call (Some iff tracing was on).
+    trace: Option<Trace>,
+    /// Compile-lane scope while a serve call is live: `handle()` runs
+    /// only on the serial coordinator thread, so one scope sequences
+    /// every compile span deterministically.
+    trace_compile: Option<TraceScope>,
 }
 
 impl ServeEngine {
@@ -757,7 +776,15 @@ impl ServeEngine {
             registry: Registry::in_memory(),
             cache_hits: 0,
             cache_misses: 0,
+            trace: None,
+            trace_compile: None,
         }
+    }
+
+    /// The structured trace recorded by the most recent serve call
+    /// (None when tracing was disabled). Taking it resets the slot.
+    pub fn take_trace(&mut self) -> Option<Trace> {
+        self.trace.take()
     }
 
     pub fn config(&self) -> &EngineConfig {
@@ -896,6 +923,9 @@ impl ServeEngine {
             return Ok(h.clone());
         }
         self.cache_misses += 1;
+        // `handle()` only runs on the serial coordinator thread, so the
+        // compile lane sequences every compile span deterministically.
+        let csp = self.trace_compile.as_ref().map(|s| s.begin());
         let graph = self.build_graph(kind, bucket)?;
         let full = self.full_params(bucket)?;
         let params = match kind {
@@ -910,6 +940,7 @@ impl ServeEngine {
             kind,
             PlanKind::Prefill | PlanKind::PrefillKv | PlanKind::PrefillChunk { .. }
         );
+        let mut candidates_seen = 0usize;
         let plans = if depth == 0 || !chunkable {
             Vec::new()
         } else {
@@ -918,7 +949,9 @@ impl ServeEngine {
                 .baselines
                 .entry(base_key)
                 .or_insert_with(|| estimate(&graph).peak_bytes);
-            autochunk(&graph, (base >> depth).max(1), &self.config.compile).plans
+            let r = autochunk(&graph, (base >> depth).max(1), &self.config.compile);
+            candidates_seen = r.candidates_seen;
+            r.plans
         };
         let tag = match kind {
             PlanKind::Prefill => format!("{}_native_s{}_d{}", self.config.model, bucket, depth),
@@ -985,6 +1018,19 @@ impl ServeEngine {
             est_activation_bytes: h.quote().peak_bytes,
             output_shape: out_shape,
         });
+        if let (Some(s), Some(sp)) = (&self.trace_compile, csp) {
+            s.end(
+                sp,
+                "compile",
+                vec![
+                    ("tag", ArgV::S(tag.clone())),
+                    ("bucket", ArgV::U(bucket as u64)),
+                    ("depth", ArgV::U(depth as u64)),
+                    ("candidates", ArgV::U(candidates_seen as u64)),
+                    ("n_chunks", ArgV::U(h.n_chunks_max() as u64)),
+                ],
+            );
+        }
         self.cache.insert(key, h.clone());
         Ok(h)
     }
@@ -1051,6 +1097,36 @@ impl ServeEngine {
         // attempt): reported on responses for the soak's bitwise check.
         let mut touched: HashSet<usize> = HashSet::new();
 
+        // Structured trace (DESIGN.md §19), on only when asked — every
+        // instrumentation site below is a single `None` branch otherwise.
+        // Events attribute to logical lanes (engine/kv/compile/wave slot)
+        // with deterministic sequence numbers, never to worker threads,
+        // so the same seed records the same trace at any pool width.
+        let tr: Option<Trace> = if self.config.trace || trace::trace_path_from_env().is_some() {
+            let config = vec![
+                ("model".to_string(), self.config.model.clone()),
+                ("budget_bytes".to_string(), self.config.budget_bytes.to_string()),
+                ("use_arena".to_string(), self.config.use_arena.to_string()),
+                ("batch_decode".to_string(), self.config.batch_decode.to_string()),
+                ("block_tokens".to_string(), self.config.block_tokens.to_string()),
+                (
+                    "prefill_chunk_tokens".to_string(),
+                    self.config.prefill_chunk_tokens.to_string(),
+                ),
+                ("spill_gbps".to_string(), self.config.spill_gbps.to_string()),
+                ("threads".to_string(), pool::num_threads().to_string()),
+            ];
+            Some(Trace::new(TraceHeader {
+                fault_seed: faults.as_ref().map(|p| p.seed()),
+                config,
+            }))
+        } else {
+            None
+        };
+        let eng = tr.as_ref().map(|t| t.scope(trace::LANE_ENGINE));
+        let kv_scope = tr.as_ref().map(|t| t.scope(trace::LANE_KV));
+        self.trace_compile = tr.as_ref().map(|t| t.scope(trace::LANE_COMPILE));
+
         // Paged mode: one block pool + prefix-share index per run, on the
         // run tracker, so resident blocks are part of the measured peak
         // and the drain contract (`final_blocks_in_use == 0`,
@@ -1080,6 +1156,9 @@ impl ServeEngine {
         };
         if let (Some(m), Some(plan)) = (&mut mgr, &faults) {
             m.set_faults(plan.clone());
+        }
+        if let (Some(m), Some(ks)) = (&mut mgr, &kv_scope) {
+            m.set_trace(ks.clone());
         }
         // Evicted generations waiting to re-prefill: request idx → stream
         // state (entries live from eviction until re-admission/rejection).
@@ -1150,6 +1229,20 @@ impl ServeEngine {
                     }
                     recorder.deadline_missed += 1;
                     recorder.rejected += 1;
+                    explain_admission(
+                        &eng,
+                        clock,
+                        req.id,
+                        "shed",
+                        "deadline_missed",
+                        g.bucket,
+                        g.depth,
+                        0,
+                        0,
+                        self.config.budget_bytes,
+                        0,
+                        0,
+                    );
                     responses.push(EngineResponse::rejected(
                         req.id,
                         g.depth,
@@ -1177,6 +1270,20 @@ impl ServeEngine {
                     recorder.deadline_missed += 1;
                     recorder.rejected += 1;
                     recorder.shed_wait += 1;
+                    explain_admission(
+                        &eng,
+                        clock,
+                        req.id,
+                        "shed",
+                        "deadline_missed",
+                        0,
+                        p.depth,
+                        0,
+                        0,
+                        self.config.budget_bytes,
+                        0,
+                        0,
+                    );
                     responses.push(EngineResponse::rejected(
                         req.id,
                         p.depth,
@@ -1233,6 +1340,20 @@ impl ServeEngine {
                     };
                     match restored {
                         Ok(tb) => {
+                            explain_admission(
+                                &eng,
+                                clock,
+                                requests[gens[gi].idx].id,
+                                "restore",
+                                "spill_restore",
+                                gens[gi].bucket,
+                                gens[gi].depth,
+                                bytes,
+                                remaining,
+                                self.config.budget_bytes,
+                                need,
+                                free_blocks_wave,
+                            );
                             remaining -= bytes;
                             free_blocks_wave -= need;
                             recorder.kv_restores += 1;
@@ -1314,13 +1435,44 @@ impl ServeEngine {
                             cost += need_blocks * m.block_bytes();
                         }
                         if cost <= remaining && need_blocks <= free_blocks_wave {
+                            for &gi in &gis {
+                                explain_admission(
+                                    &eng,
+                                    clock,
+                                    requests[gens[gi].idx].id,
+                                    "admit",
+                                    "decode_batched",
+                                    bucket,
+                                    gens[gi].depth,
+                                    cost,
+                                    remaining,
+                                    self.config.budget_bytes,
+                                    need_blocks,
+                                    free_blocks_wave,
+                                );
+                            }
                             remaining -= cost;
                             free_blocks_wave -= need_blocks;
                             slots += gis.len();
                             wave.push(WaveEntry::DecodeBatched { gis, h, lm, width });
                             break;
                         }
-                        gis.pop();
+                        if let Some(gi) = gis.pop() {
+                            explain_admission(
+                                &eng,
+                                clock,
+                                requests[gens[gi].idx].id,
+                                "defer",
+                                "wave_budget",
+                                bucket,
+                                gens[gi].depth,
+                                cost,
+                                remaining,
+                                self.config.budget_bytes,
+                                need_blocks,
+                                free_blocks_wave,
+                            );
+                        }
                     }
                 }
             } else {
@@ -1357,10 +1509,39 @@ impl ServeEngine {
                         cost += need_blocks * m.block_bytes();
                     }
                     if cost <= remaining && need_blocks <= free_blocks_wave {
+                        explain_admission(
+                            &eng,
+                            clock,
+                            requests[gens[gi].idx].id,
+                            "admit",
+                            "decode",
+                            bucket,
+                            gens[gi].depth,
+                            cost,
+                            remaining,
+                            self.config.budget_bytes,
+                            need_blocks,
+                            free_blocks_wave,
+                        );
                         remaining -= cost;
                         free_blocks_wave -= need_blocks;
                         slots += 1;
                         wave.push(WaveEntry::Decode { gi, h, lm });
+                    } else {
+                        explain_admission(
+                            &eng,
+                            clock,
+                            requests[gens[gi].idx].id,
+                            "defer",
+                            "wave_budget",
+                            bucket,
+                            gens[gi].depth,
+                            cost,
+                            remaining,
+                            self.config.budget_bytes,
+                            need_blocks,
+                            free_blocks_wave,
+                        );
                     }
                 }
             }
@@ -1422,10 +1603,39 @@ impl ServeEngine {
                         cost += need_blocks * m.block_bytes();
                     }
                     if cost <= remaining && need_blocks <= free_blocks_wave {
+                        explain_admission(
+                            &eng,
+                            clock,
+                            requests[gens[gi].idx].id,
+                            "admit",
+                            "prefill_slice",
+                            bucket,
+                            depth,
+                            cost,
+                            remaining,
+                            self.config.budget_bytes,
+                            need_blocks,
+                            free_blocks_wave,
+                        );
                         remaining -= cost;
                         free_blocks_wave -= need_blocks;
                         slots += 1;
                         wave.push(WaveEntry::PrefillSlice { gi, n, h, lm });
+                    } else {
+                        explain_admission(
+                            &eng,
+                            clock,
+                            requests[gens[gi].idx].id,
+                            "defer",
+                            "wave_budget",
+                            bucket,
+                            depth,
+                            cost,
+                            remaining,
+                            self.config.budget_bytes,
+                            need_blocks,
+                            free_blocks_wave,
+                        );
                     }
                 }
             }
@@ -1445,6 +1655,20 @@ impl ServeEngine {
                 // Backing off after a fault retry: arrived but not yet
                 // runnable — skip, keep scanning.
                 if p.not_before > clock {
+                    explain_admission(
+                        &eng,
+                        clock,
+                        req.id,
+                        "backoff",
+                        "fault_retry",
+                        0,
+                        p.depth,
+                        0,
+                        remaining,
+                        self.config.budget_bytes,
+                        0,
+                        free_blocks_wave,
+                    );
                     scan += 1;
                     continue;
                 }
@@ -1457,6 +1681,20 @@ impl ServeEngine {
                     resume.remove(&p.idx);
                     recorder.rejected += 1;
                     recorder.shed_wait += 1;
+                    explain_admission(
+                        &eng,
+                        clock,
+                        req.id,
+                        "shed",
+                        "too_long",
+                        0,
+                        p.depth,
+                        0,
+                        remaining,
+                        self.config.budget_bytes,
+                        0,
+                        free_blocks_wave,
+                    );
                     responses.push(EngineResponse::rejected(
                         req.id,
                         p.depth,
@@ -1473,6 +1711,20 @@ impl ServeEngine {
                     resume.remove(&p.idx);
                     recorder.rejected += 1;
                     recorder.shed_wait += 1;
+                    explain_admission(
+                        &eng,
+                        clock,
+                        req.id,
+                        "shed",
+                        "not_generable",
+                        bucket,
+                        p.depth,
+                        0,
+                        remaining,
+                        self.config.budget_bytes,
+                        0,
+                        free_blocks_wave,
+                    );
                     responses.push(EngineResponse::rejected(
                         req.id,
                         p.depth,
@@ -1512,6 +1764,20 @@ impl ServeEngine {
                                 recorder.shed += 1;
                                 recorder.rejected += 1;
                                 recorder.shed_wait += 1;
+                                explain_admission(
+                                    &eng,
+                                    clock,
+                                    req.id,
+                                    "shed",
+                                    "pool_too_small",
+                                    bucket,
+                                    p.depth,
+                                    0,
+                                    remaining,
+                                    self.config.budget_bytes,
+                                    m.blocks_for(req.total_len()),
+                                    m.pool_blocks(),
+                                );
                                 responses.push(EngineResponse::rejected(
                                     req.id,
                                     p.depth,
@@ -1528,6 +1794,20 @@ impl ServeEngine {
                         resume.remove(&p.idx);
                         recorder.rejected += 1;
                         recorder.shed_wait += 1;
+                        explain_admission(
+                            &eng,
+                            clock,
+                            req.id,
+                            "shed",
+                            "budget_floor",
+                            bucket,
+                            p.depth,
+                            extra,
+                            remaining,
+                            self.config.budget_bytes,
+                            need_blocks,
+                            free_blocks_wave,
+                        );
                         responses.push(EngineResponse::rejected(
                             req.id,
                             p.depth,
@@ -1541,6 +1821,20 @@ impl ServeEngine {
                         queue.remove(scan);
                         if p.depth < self.config.max_deepen {
                             recorder.preempted += 1;
+                            explain_admission(
+                                &eng,
+                                clock,
+                                req.id,
+                                "deepen",
+                                "memory_wall",
+                                bucket,
+                                p.depth,
+                                cost,
+                                remaining,
+                                self.config.budget_bytes,
+                                need_blocks,
+                                free_blocks_wave,
+                            );
                             retry.push(Pending {
                                 idx: p.idx,
                                 depth: p.depth + 1,
@@ -1552,6 +1846,20 @@ impl ServeEngine {
                             resume.remove(&p.idx);
                             recorder.rejected += 1;
                             recorder.shed_wait += 1;
+                            explain_admission(
+                                &eng,
+                                clock,
+                                req.id,
+                                "shed",
+                                "memory_wall",
+                                bucket,
+                                p.depth,
+                                cost,
+                                remaining,
+                                self.config.budget_bytes,
+                                need_blocks,
+                                free_blocks_wave,
+                            );
                             responses.push(EngineResponse::rejected(
                                 req.id,
                                 p.depth,
@@ -1562,6 +1870,20 @@ impl ServeEngine {
                         continue;
                     }
                     if cost <= remaining && need_blocks <= free_blocks_wave {
+                        explain_admission(
+                            &eng,
+                            clock,
+                            req.id,
+                            "admit",
+                            "prefill_chunked",
+                            bucket,
+                            p.depth,
+                            cost,
+                            remaining,
+                            self.config.budget_bytes,
+                            need_blocks,
+                            free_blocks_wave,
+                        );
                         remaining -= cost;
                         free_blocks_wave -= need_blocks;
                         queue.remove(scan);
@@ -1619,6 +1941,20 @@ impl ServeEngine {
                         continue;
                     }
                     // Fits the device but not this wave: skip-ahead.
+                    explain_admission(
+                        &eng,
+                        clock,
+                        req.id,
+                        "defer",
+                        "wave_budget",
+                        bucket,
+                        p.depth,
+                        cost,
+                        remaining,
+                        self.config.budget_bytes,
+                        need_blocks,
+                        free_blocks_wave,
+                    );
                     scan += 1;
                     continue;
                 }
@@ -1654,6 +1990,20 @@ impl ServeEngine {
                                 recorder.shed += 1;
                                 recorder.rejected += 1;
                                 recorder.shed_wait += 1;
+                                explain_admission(
+                                    &eng,
+                                    clock,
+                                    req.id,
+                                    "shed",
+                                    "pool_too_small",
+                                    bucket,
+                                    p.depth,
+                                    0,
+                                    remaining,
+                                    self.config.budget_bytes,
+                                    m.blocks_for(req.total_len()),
+                                    m.pool_blocks(),
+                                );
                                 responses.push(EngineResponse::rejected(
                                     req.id,
                                     p.depth,
@@ -1678,6 +2028,20 @@ impl ServeEngine {
                     resume.remove(&p.idx);
                     recorder.rejected += 1;
                     recorder.shed_wait += 1;
+                    explain_admission(
+                        &eng,
+                        clock,
+                        req.id,
+                        "shed",
+                        "budget_floor",
+                        bucket,
+                        p.depth,
+                        extra,
+                        remaining,
+                        self.config.budget_bytes,
+                        need_blocks,
+                        free_blocks_wave,
+                    );
                     responses.push(EngineResponse::rejected(
                         req.id,
                         p.depth,
@@ -1695,6 +2059,20 @@ impl ServeEngine {
                         // (a pending resume entry rides along untouched).
                         // Deepening is not a fault retry: no backoff.
                         recorder.preempted += 1;
+                        explain_admission(
+                            &eng,
+                            clock,
+                            req.id,
+                            "deepen",
+                            "memory_wall",
+                            bucket,
+                            p.depth,
+                            cost,
+                            remaining,
+                            self.config.budget_bytes,
+                            need_blocks,
+                            free_blocks_wave,
+                        );
                         retry.push(Pending {
                             idx: p.idx,
                             depth: p.depth + 1,
@@ -1706,6 +2084,20 @@ impl ServeEngine {
                         resume.remove(&p.idx);
                         recorder.rejected += 1;
                         recorder.shed_wait += 1;
+                        explain_admission(
+                            &eng,
+                            clock,
+                            req.id,
+                            "shed",
+                            "memory_wall",
+                            bucket,
+                            p.depth,
+                            cost,
+                            remaining,
+                            self.config.budget_bytes,
+                            need_blocks,
+                            free_blocks_wave,
+                        );
                         responses.push(EngineResponse::rejected(
                             req.id,
                             p.depth,
@@ -1716,6 +2108,20 @@ impl ServeEngine {
                     continue;
                 }
                 if cost <= remaining && need_blocks <= free_blocks_wave {
+                    explain_admission(
+                        &eng,
+                        clock,
+                        req.id,
+                        "admit",
+                        "prefill",
+                        bucket,
+                        p.depth,
+                        cost,
+                        remaining,
+                        self.config.budget_bytes,
+                        need_blocks,
+                        free_blocks_wave,
+                    );
                     remaining -= cost;
                     free_blocks_wave -= need_blocks;
                     queue.remove(scan);
@@ -1749,6 +2155,20 @@ impl ServeEngine {
                 // Head-of-line priority is preserved — the head gets
                 // first claim on the full budget every wave — so no
                 // request starves.
+                explain_admission(
+                    &eng,
+                    clock,
+                    req.id,
+                    "defer",
+                    "wave_budget",
+                    bucket,
+                    p.depth,
+                    cost,
+                    remaining,
+                    self.config.budget_bytes,
+                    need_blocks,
+                    free_blocks_wave,
+                );
                 scan += 1;
             }
             // Deepened requests retry at the head of their priority class
@@ -1797,6 +2217,20 @@ impl ServeEngine {
                                     let bytes = st.n_blocks() * m.block_bytes();
                                     recorder.kv_spills += 1;
                                     recorder.kv_spill_bytes += bytes;
+                                    explain_admission(
+                                        &eng,
+                                        clock,
+                                        requests[gens[vi].idx].id,
+                                        "spill",
+                                        "stall",
+                                        gens[vi].bucket,
+                                        gens[vi].depth,
+                                        bytes,
+                                        remaining,
+                                        self.config.budget_bytes,
+                                        st.n_blocks(),
+                                        free_blocks_wave,
+                                    );
                                     gens[vi].latency_us = gens[vi].latency_us.saturating_add(
                                         placement_cost_us(bytes, 0, self.config.spill_gbps)
                                             as u64,
@@ -1825,6 +2259,20 @@ impl ServeEngine {
                                 if g.evictions >= self.config.max_evictions {
                                     recorder.shed += 1;
                                     recorder.rejected += 1;
+                                    explain_admission(
+                                        &eng,
+                                        clock,
+                                        requests[g.idx].id,
+                                        "shed",
+                                        "eviction_limit",
+                                        g.bucket,
+                                        g.depth,
+                                        0,
+                                        remaining,
+                                        self.config.budget_bytes,
+                                        0,
+                                        free_blocks_wave,
+                                    );
                                     responses.push(EngineResponse::rejected(
                                         requests[g.idx].id,
                                         g.depth,
@@ -1833,6 +2281,20 @@ impl ServeEngine {
                                     ));
                                 } else {
                                     recorder.evicted += 1;
+                                    explain_admission(
+                                        &eng,
+                                        clock,
+                                        requests[g.idx].id,
+                                        "evict",
+                                        "stall",
+                                        g.bucket,
+                                        g.depth,
+                                        0,
+                                        remaining,
+                                        self.config.budget_bytes,
+                                        0,
+                                        free_blocks_wave,
+                                    );
                                     if g.tokens.is_empty() {
                                         // Evicted mid-prefill: no stream
                                         // state of its own yet — restore
@@ -1870,6 +2332,20 @@ impl ServeEngine {
                                 let g = gens.remove(0);
                                 recorder.shed += 1;
                                 recorder.rejected += 1;
+                                explain_admission(
+                                    &eng,
+                                    clock,
+                                    requests[g.idx].id,
+                                    "shed",
+                                    "eviction_limit",
+                                    g.bucket,
+                                    g.depth,
+                                    0,
+                                    remaining,
+                                    self.config.budget_bytes,
+                                    0,
+                                    free_blocks_wave,
+                                );
                                 responses.push(EngineResponse::rejected(
                                     requests[g.idx].id,
                                     g.depth,
@@ -2034,6 +2510,19 @@ impl ServeEngine {
                     .collect(),
                 None => vec![None; entries.len()],
             };
+            // Per-entry trace scopes on wave lanes: events attribute to
+            // the entry's *logical* slot (lane 16+wi), never the worker
+            // thread that happens to run it, and sequence from a per-wave
+            // namespace — so the recorded trace is identical at any pool
+            // width (DESIGN.md §19).
+            let wave_seq_base = (recorder.waves as u64) << 44;
+            let entry_scopes: Vec<Option<TraceScope>> = match &tr {
+                Some(t) => (0..entries.len())
+                    .map(|wi| Some(t.scope_based(trace::wave_lane(wi), wave_seq_base)))
+                    .collect(),
+                None => vec![None; entries.len()],
+            };
+            let wave_span = eng.as_ref().map(|s| s.begin());
             let gens_ro: &Vec<GenState> = &gens;
             let mgr_ro: &Option<CacheManager> = &mgr;
             // Panic isolation: each entry runs under catch_unwind *inside*
@@ -2042,7 +2531,9 @@ impl ServeEngine {
             let results: Vec<Result<WaveOut, EngineError>> =
                 pool::parallel_map(entries.len(), |wi| {
                     let fscope = &scopes[wi];
-                    catch_unwind(AssertUnwindSafe(|| -> Result<WaveOut, EngineError> {
+                    let tscope = &entry_scopes[wi];
+                    let esp = tscope.as_ref().map(|s| s.begin());
+                    let r = catch_unwind(AssertUnwindSafe(|| -> Result<WaveOut, EngineError> {
                         match &entries[wi] {
                             WaveEntry::Prefill { p, h, lm, ptoks, .. } => {
                                 let req = &requests[p.idx];
@@ -2064,6 +2555,7 @@ impl ServeEngine {
                                         }),
                                         use_arena,
                                         faults: fscope.clone(),
+                                        trace: tscope.clone(),
                                     };
                                     let (outs, stats) = h.execute(&ins, &tracker, &opts);
                                     drop(ins);
@@ -2071,7 +2563,7 @@ impl ServeEngine {
                                         None => Ok(WaveOut::Plain {
                                             latency_us: started.elapsed().as_micros() as u64,
                                             out: outs[0].to_vec_f32(),
-                                            arena_peak: stats.arena_peak_bytes,
+                                            stats,
                                         }),
                                         Some(lm) => {
                                             // the next token comes off the
@@ -2082,6 +2574,7 @@ impl ServeEngine {
                                                 faults: fscope
                                                     .as_ref()
                                                     .map(|f| f.with_salt(1)),
+                                                trace: tscope.clone(),
                                             };
                                             let plen = ptoks.len().max(1);
                                             let hrow = outs[0]
@@ -2096,7 +2589,7 @@ impl ServeEngine {
                                                 outs,
                                                 logits,
                                                 token,
-                                                arena_peak: stats.arena_peak_bytes,
+                                                stats,
                                             })
                                         }
                                     }
@@ -2148,6 +2641,7 @@ impl ServeEngine {
                                         }),
                                         use_arena,
                                         faults: fscope.clone(),
+                                        trace: tscope.clone(),
                                     };
                                     let (outs, stats) = h.execute(&ins, &tracker, &opts);
                                     drop(ins); // release cache views before the append
@@ -2162,6 +2656,7 @@ impl ServeEngine {
                                                 faults: fscope
                                                     .as_ref()
                                                     .map(|f| f.with_salt(1)),
+                                                trace: tscope.clone(),
                                             };
                                             let hrow = outs[0]
                                                 .slice_axis(0, n - 1, 1)
@@ -2179,7 +2674,7 @@ impl ServeEngine {
                                         outs,
                                         logits,
                                         token,
-                                        arena_peak: stats.arena_peak_bytes,
+                                        stats,
                                     })
                                 })
                             }
@@ -2191,11 +2686,13 @@ impl ServeEngine {
                                         budget_bytes: None,
                                         use_arena,
                                         faults: fscope.clone(),
+                                        trace: tscope.clone(),
                                     };
                                     let lm_opts = ExecOptions {
                                         budget_bytes: None,
                                         use_arena,
                                         faults: fscope.as_ref().map(|f| f.with_salt(1)),
+                                        trace: tscope.clone(),
                                     };
                                     let mut ins: Vec<Tensor> = Vec::new();
                                     ins.push(Tensor::from_i32(
@@ -2229,7 +2726,7 @@ impl ServeEngine {
                                         outs,
                                         logits,
                                         token,
-                                        arena_peak: stats.arena_peak_bytes,
+                                        stats,
                                     })
                                 })
                             }
@@ -2246,11 +2743,13 @@ impl ServeEngine {
                                         budget_bytes: None,
                                         use_arena,
                                         faults: fscope.clone(),
+                                        trace: tscope.clone(),
                                     };
                                     let lm_opts = ExecOptions {
                                         budget_bytes: None,
                                         use_arena,
                                         faults: fscope.as_ref().map(|f| f.with_salt(1)),
+                                        trace: tscope.clone(),
                                     };
                                     // Stacked token/position rows; rows
                                     // beyond the members are inert padding
@@ -2334,13 +2833,40 @@ impl ServeEngine {
                                         outs,
                                         logits,
                                         tokens,
-                                        arena_peak: stats.arena_peak_bytes,
+                                        stats,
                                     })
                                 })
                             }
                         }
                     }))
-                    .unwrap_or_else(|payload| Err(EngineError::from_panic(payload)))
+                    .unwrap_or_else(|payload| Err(EngineError::from_panic(payload)));
+                    if let (Some(s), Some(sp)) = (tscope.as_ref(), esp) {
+                        let (name, bucket) = match &entries[wi] {
+                            WaveEntry::Prefill { bucket, .. } => ("entry.prefill", *bucket),
+                            WaveEntry::PrefillSlice { gi, .. } => {
+                                ("entry.slice", gens_ro[*gi].bucket)
+                            }
+                            WaveEntry::Decode { gi, .. } => ("entry.decode", gens_ro[*gi].bucket),
+                            WaveEntry::DecodeBatched { gis, .. } => {
+                                ("entry.decode_batched", gens_ro[gis[0]].bucket)
+                            }
+                        };
+                        let reqs = entry_ids[wi]
+                            .iter()
+                            .map(|id| id.to_string())
+                            .collect::<Vec<_>>()
+                            .join(",");
+                        s.end(
+                            sp,
+                            name,
+                            vec![
+                                ("bucket", ArgV::U(bucket as u64)),
+                                ("reqs", ArgV::S(reqs)),
+                                ("ok", ArgV::U(r.is_ok() as u64)),
+                            ],
+                        );
+                    }
+                    r
                 });
             // Poison screen (chaos runs only): a kernel fault writes NaN
             // into the row downstream consumers read; greedy_argmax never
@@ -2367,6 +2893,26 @@ impl ServeEngine {
                     }
                 }
             }
+            if let (Some(s), Some(sp)) = (&eng, wave_span) {
+                let reqs = entry_ids
+                    .iter()
+                    .flatten()
+                    .map(|id| id.to_string())
+                    .collect::<Vec<_>>()
+                    .join(",");
+                s.end(
+                    sp,
+                    "wave",
+                    vec![
+                        ("tick", ArgV::U(clock)),
+                        ("wave", ArgV::U(recorder.waves as u64)),
+                        ("entries", ArgV::U(entry_ids.len() as u64)),
+                        ("decode_entries", ArgV::U(decode_entries as u64)),
+                        ("slice_entries", ArgV::U(slice_entries as u64)),
+                        ("reqs", ArgV::S(reqs)),
+                    ],
+                );
+            }
 
             // ---- post-wave bookkeeping (serial, entry order: results are
             // deterministic at any pool width). A failed entry fails only
@@ -2377,7 +2923,7 @@ impl ServeEngine {
             let mut failed: Vec<usize> = Vec::new();
             for (entry, out) in entries.into_iter().zip(results) {
                 match (entry, out) {
-                    (WaveEntry::Prefill { p, resumed, .. }, Err(e)) => {
+                    (WaveEntry::Prefill { p, bucket, resumed, .. }, Err(e)) => {
                         recorder.record_error(e.kind());
                         if !e.retryable() {
                             return Err(e.into());
@@ -2391,6 +2937,20 @@ impl ServeEngine {
                             resume.remove(&p.idx);
                             recorder.shed += 1;
                             recorder.rejected += 1;
+                            explain_admission(
+                                &eng,
+                                clock,
+                                requests[p.idx].id,
+                                "shed",
+                                "retries_exhausted",
+                                bucket,
+                                p.depth,
+                                0,
+                                0,
+                                self.config.budget_bytes,
+                                0,
+                                0,
+                            );
                             responses.push(EngineResponse::rejected(
                                 requests[p.idx].id,
                                 p.depth,
@@ -2399,6 +2959,20 @@ impl ServeEngine {
                             ));
                         } else {
                             recorder.retries += 1;
+                            explain_admission(
+                                &eng,
+                                clock,
+                                requests[p.idx].id,
+                                "backoff",
+                                "fault_retry",
+                                bucket,
+                                p.depth,
+                                0,
+                                0,
+                                self.config.budget_bytes,
+                                0,
+                                0,
+                            );
                             requeue(
                                 &mut queue,
                                 requests,
@@ -2447,11 +3021,18 @@ impl ServeEngine {
                     }
                     (
                         WaveEntry::Prefill { p, bucket, h, lm: None, .. },
-                        Ok(WaveOut::Plain { latency_us, out, arena_peak }),
+                        Ok(WaveOut::Plain { latency_us, out, stats }),
                     ) => {
+                        recorder.absorb_exec(&stats);
                         if use_arena {
                             if let Some(a) = &mut auditor {
-                                a.check_arena(h.tag(), arena_peak, h.memplan().planned_peak_bytes);
+                                a.check_arena(
+                                    recorder.waves,
+                                    requests[p.idx].id,
+                                    h.tag(),
+                                    stats.arena_peak_bytes,
+                                    h.memplan().planned_peak_bytes,
+                                );
                             }
                         }
                         let req = &requests[p.idx];
@@ -2460,6 +3041,20 @@ impl ServeEngine {
                         if waited.insert(p.idx) {
                             recorder.record_wait(wait_ticks * tick_us);
                         }
+                        explain_admission(
+                            &eng,
+                            clock,
+                            req.id,
+                            "complete",
+                            "finished",
+                            bucket,
+                            p.depth,
+                            0,
+                            0,
+                            self.config.budget_bytes,
+                            0,
+                            0,
+                        );
                         responses.push(EngineResponse {
                             id: req.id,
                             outcome: RequestOutcome::Completed,
@@ -2478,11 +3073,18 @@ impl ServeEngine {
                     }
                     (
                         WaveEntry::Prefill { p, bucket, h, lm: Some(_), ptoks, resumed },
-                        Ok(WaveOut::Step { latency_us, outs, logits, token, arena_peak }),
+                        Ok(WaveOut::Step { latency_us, outs, logits, token, stats }),
                     ) => {
+                        recorder.absorb_exec(&stats);
                         if use_arena {
                             if let Some(a) = &mut auditor {
-                                a.check_arena(h.tag(), arena_peak, h.memplan().planned_peak_bytes);
+                                a.check_arena(
+                                    recorder.waves,
+                                    requests[p.idx].id,
+                                    h.tag(),
+                                    stats.arena_peak_bytes,
+                                    h.memplan().planned_peak_bytes,
+                                );
                             }
                         }
                         let req = &requests[p.idx];
@@ -2495,6 +3097,20 @@ impl ServeEngine {
                                 recorder.record_wait(wait_ticks * tick_us);
                             }
                             recorder.record_ttft(wait_ticks * tick_us + latency_us);
+                            explain_admission(
+                                &eng,
+                                clock,
+                                req.id,
+                                "complete",
+                                "finished",
+                                bucket,
+                                p.depth,
+                                0,
+                                0,
+                                self.config.budget_bytes,
+                                0,
+                                0,
+                            );
                             responses.push(EngineResponse {
                                 id: req.id,
                                 outcome: RequestOutcome::Completed,
@@ -2534,6 +3150,20 @@ impl ServeEngine {
                                             resume.remove(&p.idx);
                                             recorder.shed += 1;
                                             recorder.rejected += 1;
+                                            explain_admission(
+                                                &eng,
+                                                clock,
+                                                req.id,
+                                                "shed",
+                                                "retries_exhausted",
+                                                bucket,
+                                                p.depth,
+                                                0,
+                                                0,
+                                                self.config.budget_bytes,
+                                                0,
+                                                0,
+                                            );
                                             responses.push(EngineResponse::rejected(
                                                 req.id,
                                                 p.depth,
@@ -2542,6 +3172,20 @@ impl ServeEngine {
                                             ));
                                         } else {
                                             recorder.retries += 1;
+                                            explain_admission(
+                                                &eng,
+                                                clock,
+                                                req.id,
+                                                "backoff",
+                                                "fault_retry",
+                                                bucket,
+                                                p.depth,
+                                                0,
+                                                0,
+                                                self.config.budget_bytes,
+                                                0,
+                                                0,
+                                            );
                                             requeue(
                                                 &mut queue,
                                                 requests,
@@ -2618,11 +3262,18 @@ impl ServeEngine {
                     }
                     (
                         WaveEntry::PrefillSlice { gi, n, h, .. },
-                        Ok(WaveOut::Slice { latency_us, outs, logits, token, arena_peak }),
+                        Ok(WaveOut::Slice { latency_us, outs, logits, token, stats }),
                     ) => {
+                        recorder.absorb_exec(&stats);
                         if use_arena {
                             if let Some(a) = &mut auditor {
-                                a.check_arena(h.tag(), arena_peak, h.memplan().planned_peak_bytes);
+                                a.check_arena(
+                                    recorder.waves,
+                                    requests[gens[gi].idx].id,
+                                    h.tag(),
+                                    stats.arena_peak_bytes,
+                                    h.memplan().planned_peak_bytes,
+                                );
                             }
                         }
                         recorder.record_prefill(latency_us);
@@ -2699,11 +3350,18 @@ impl ServeEngine {
                     }
                     (
                         WaveEntry::Decode { gi, h, .. },
-                        Ok(WaveOut::Step { latency_us, outs, logits, token, arena_peak }),
+                        Ok(WaveOut::Step { latency_us, outs, logits, token, stats }),
                     ) => {
+                        recorder.absorb_exec(&stats);
                         if use_arena {
                             if let Some(a) = &mut auditor {
-                                a.check_arena(h.tag(), arena_peak, h.memplan().planned_peak_bytes);
+                                a.check_arena(
+                                    recorder.waves,
+                                    requests[gens[gi].idx].id,
+                                    h.tag(),
+                                    stats.arena_peak_bytes,
+                                    h.memplan().planned_peak_bytes,
+                                );
                             }
                         }
                         recorder.record_decode(latency_us);
@@ -2757,11 +3415,18 @@ impl ServeEngine {
                     }
                     (
                         WaveEntry::DecodeBatched { gis, h, .. },
-                        Ok(WaveOut::StepBatch { latency_us, outs, mut logits, tokens, arena_peak }),
+                        Ok(WaveOut::StepBatch { latency_us, outs, mut logits, tokens, stats }),
                     ) => {
+                        recorder.absorb_exec(&stats);
                         if use_arena {
                             if let Some(a) = &mut auditor {
-                                a.check_arena(h.tag(), arena_peak, h.memplan().planned_peak_bytes);
+                                a.check_arena(
+                                    recorder.waves,
+                                    requests[gens[gis[0]].idx].id,
+                                    h.tag(),
+                                    stats.arena_peak_bytes,
+                                    h.memplan().planned_peak_bytes,
+                                );
                             }
                         }
                         // Scatter the stacked step back to its members:
@@ -2888,6 +3553,20 @@ impl ServeEngine {
                     if waited.insert(g.idx) {
                         recorder.record_wait(g.wait_ticks * tick_us);
                     }
+                    explain_admission(
+                        &eng,
+                        clock,
+                        req.id,
+                        "complete",
+                        "finished",
+                        g.bucket,
+                        g.depth,
+                        0,
+                        0,
+                        self.config.budget_bytes,
+                        0,
+                        0,
+                    );
                     responses.push(EngineResponse {
                         id: req.id,
                         outcome: RequestOutcome::Completed,
@@ -2924,6 +3603,20 @@ impl ServeEngine {
                     if g.retries >= self.config.max_retries {
                         recorder.shed += 1;
                         recorder.rejected += 1;
+                        explain_admission(
+                            &eng,
+                            clock,
+                            req.id,
+                            "shed",
+                            "retries_exhausted",
+                            g.bucket,
+                            g.depth,
+                            0,
+                            0,
+                            self.config.budget_bytes,
+                            0,
+                            0,
+                        );
                         responses.push(EngineResponse::rejected(
                             req.id,
                             g.depth,
@@ -2932,6 +3625,20 @@ impl ServeEngine {
                         ));
                     } else {
                         recorder.retries += 1;
+                        explain_admission(
+                            &eng,
+                            clock,
+                            req.id,
+                            "backoff",
+                            "fault_retry",
+                            g.bucket,
+                            g.depth,
+                            0,
+                            0,
+                            self.config.budget_bytes,
+                            0,
+                            0,
+                        );
                         if g.tokens.is_empty() {
                             // Failed mid-prefill: no stream state of its
                             // own yet — restore the resume payload (if
@@ -2965,6 +3672,42 @@ impl ServeEngine {
                 }
             }
 
+            // Memory timeline sample (one per wave tick, post-removals):
+            // resident KV and scheduler occupancy, both schedule-exact and
+            // pool-width-independent — the trace's Perfetto counter tracks.
+            if let Some(s) = &eng {
+                let resident_after: usize = match &mgr {
+                    Some(m) => m.resident_bytes(),
+                    None => gens
+                        .iter()
+                        .map(|g| match &g.cache {
+                            GenCache::Whole(c) => c.resident_bytes(),
+                            GenCache::Paged(_) | GenCache::Spilled(_) => 0,
+                        })
+                        .sum(),
+                };
+                s.counter(
+                    "memory",
+                    vec![
+                        ("tick", ArgV::U(clock)),
+                        ("resident_kv", ArgV::U(resident_after as u64)),
+                        (
+                            "blocks_in_use",
+                            ArgV::U(mgr.as_ref().map(|m| m.blocks_in_use()).unwrap_or(0) as u64),
+                        ),
+                    ],
+                );
+                s.counter(
+                    "sched",
+                    vec![
+                        ("tick", ArgV::U(clock)),
+                        ("queued", ArgV::U(queue.len() as u64)),
+                        ("running", ArgV::U(gens.len() as u64)),
+                        ("responded", ArgV::U(responses.len() as u64)),
+                    ],
+                );
+            }
+
             // Invariant audit (between waves the engine is quiescent: the
             // only live tracked allocations are resident KV caches).
             if let Some(a) = &mut auditor {
@@ -2984,6 +3727,7 @@ impl ServeEngine {
                 let queued: Vec<usize> = queue.iter().map(|p| requests[p.idx].id).collect();
                 let running: Vec<usize> = gens.iter().map(|g| requests[g.idx].id).collect();
                 let done: Vec<usize> = responses.iter().map(|r| r.id).collect();
+                let av0 = a.violations().len();
                 a.check_wave(
                     recorder.waves,
                     tracker.current(),
@@ -2994,6 +3738,21 @@ impl ServeEngine {
                     &done,
                     requests.len(),
                 );
+                // Auditor context (satellite 1): every violation found
+                // this wave lands in the trace as an instant, tagged with
+                // the wave tick.
+                if let Some(s) = &eng {
+                    for v in &a.violations()[av0..] {
+                        s.instant(
+                            "audit.violation",
+                            vec![
+                                ("tick", ArgV::U(clock)),
+                                ("wave", ArgV::U(recorder.waves as u64)),
+                                ("msg", ArgV::S(v.clone())),
+                            ],
+                        );
+                    }
+                }
             }
 
             recorder.waves += 1;
@@ -3007,6 +3766,7 @@ impl ServeEngine {
         // Terminal audit: every request in a terminal state, every block
         // and tracked byte returned.
         if let Some(a) = &mut auditor {
+            let av0 = a.violations().len();
             a.check_terminal(
                 tracker.current(),
                 mgr.as_ref().map(|m| m.blocks_in_use()).unwrap_or(0),
@@ -3016,6 +3776,18 @@ impl ServeEngine {
                 responses.len(),
                 requests.len(),
             );
+            if let Some(s) = &eng {
+                for v in &a.violations()[av0..] {
+                    s.instant(
+                        "audit.violation",
+                        vec![
+                            ("tick", ArgV::U(clock)),
+                            ("wave", ArgV::U(recorder.waves as u64)),
+                            ("msg", ArgV::S(v.clone())),
+                        ],
+                    );
+                }
+            }
         }
         if let Some(a) = auditor {
             let rep = a.into_report();
@@ -3039,8 +3811,57 @@ impl ServeEngine {
         recorder.measured_peak_bytes = tracker.peak();
         recorder.measured_final_bytes = tracker.current();
         responses.sort_by_key(|r| r.id);
+        // Trace export: keep the recorded trace on the engine for
+        // [`ServeEngine::take_trace`]; when `AUTOCHUNK_TRACE=<path>` is
+        // set, also write the Chrome trace-event JSON now so even a run
+        // that never touches the API leaves a loadable artifact.
+        self.trace_compile = None;
+        if let Some(t) = &tr {
+            if let Some(path) = trace::trace_path_from_env() {
+                if let Err(e) = std::fs::write(path, t.chrome_json()) {
+                    eprintln!("autochunk: failed to write trace to {path}: {e}");
+                }
+            }
+        }
+        self.trace = tr;
         let report = recorder.finish(t0.elapsed());
         Ok((responses, report))
+    }
+}
+
+/// Emit one [`AdmissionExplain`] instant on the engine lane — the priced
+/// record of a scheduler decision (admit/defer/deepen/shed/spill/evict/
+/// restore/backoff/complete), a single `None` branch when tracing is off.
+#[allow(clippy::too_many_arguments)]
+fn explain_admission(
+    scope: &Option<TraceScope>,
+    tick: u64,
+    request: usize,
+    decision: &'static str,
+    reason: &'static str,
+    bucket: usize,
+    depth: usize,
+    cost_bytes: usize,
+    remaining_bytes: usize,
+    budget_bytes: usize,
+    need_blocks: usize,
+    free_blocks: usize,
+) {
+    if let Some(s) = scope {
+        AdmissionExplain {
+            tick,
+            request,
+            decision,
+            reason,
+            bucket,
+            depth,
+            cost_bytes,
+            remaining_bytes,
+            budget_bytes,
+            need_blocks,
+            free_blocks,
+        }
+        .emit(s);
     }
 }
 

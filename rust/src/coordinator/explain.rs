@@ -1,0 +1,211 @@
+//! Scheduler decision explainability (DESIGN.md §19).
+//!
+//! Every admission-control decision the serve engine takes — admit,
+//! reject, deepen, shed, backoff-skip, defer, stall-spill, stall-evict —
+//! is recorded as an [`AdmissionExplain`]: the decision plus the *priced
+//! numbers* that drove it (cost vs remaining vs budget, blocks needed vs
+//! free). Records are emitted as trace instant events on the scheduler
+//! lane, so the same stream feeds three consumers:
+//!
+//! * the Chrome trace (each decision is an `admission` instant in
+//!   Perfetto, clickable next to the wave it happened in),
+//! * the per-request lifecycle timeline ([`request_timeline`] — the
+//!   "why was I rejected" log rendered as text), and
+//! * the determinism tests (decisions are pure scheduling state, so the
+//!   records must be identical at any pool width).
+
+use crate::util::trace::{ArgV, Event, Trace, TraceScope};
+
+/// One admission-control decision with its pricing context. Byte fields
+/// are 0 when the decision never reached pricing (e.g. a deadline shed).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdmissionExplain {
+    /// Engine clock tick the decision was taken on.
+    pub tick: u64,
+    /// Request id the decision applies to.
+    pub request: usize,
+    /// `admit` | `reject` | `deepen` | `shed` | `backoff` | `defer` |
+    /// `spill` | `evict` | `restore`.
+    pub decision: &'static str,
+    /// Human-readable cause (`RejectReason` name, `"memory-wall"`,
+    /// `"fits-device-not-wave"`, ...). Empty when the decision is its
+    /// own explanation.
+    pub reason: &'static str,
+    /// Sequence bucket the request routed to (0 = never resolved).
+    pub bucket: usize,
+    /// Chunk depth the decision was priced at.
+    pub depth: usize,
+    /// Priced admission cost in bytes (activation + cache growth).
+    pub cost_bytes: usize,
+    /// Budget remaining in the wave when the decision was taken.
+    pub remaining_bytes: usize,
+    /// The device budget the cost was judged against.
+    pub budget_bytes: usize,
+    /// KV blocks the request needed this wave (paged backend).
+    pub need_blocks: usize,
+    /// KV blocks free in the pool when the decision was taken.
+    pub free_blocks: usize,
+}
+
+impl AdmissionExplain {
+    /// Record this decision as an `admission` instant event on `scope`
+    /// (the scheduler lane).
+    pub fn emit(&self, scope: &TraceScope) {
+        scope.instant(
+            "admission",
+            vec![
+                ("tick", ArgV::U(self.tick)),
+                ("req", ArgV::U(self.request as u64)),
+                ("decision", ArgV::S(self.decision.to_string())),
+                ("reason", ArgV::S(self.reason.to_string())),
+                ("bucket", ArgV::U(self.bucket as u64)),
+                ("depth", ArgV::U(self.depth as u64)),
+                ("cost", ArgV::U(self.cost_bytes as u64)),
+                ("remaining", ArgV::U(self.remaining_bytes as u64)),
+                ("budget", ArgV::U(self.budget_bytes as u64)),
+                ("need_blocks", ArgV::U(self.need_blocks as u64)),
+                ("free_blocks", ArgV::U(self.free_blocks as u64)),
+            ],
+        );
+    }
+
+    /// [`AdmissionExplain::emit`] through the engine's optional scope —
+    /// the disabled path is one `None` branch.
+    pub fn emit_opt(&self, scope: &Option<TraceScope>) {
+        if let Some(s) = scope {
+            self.emit(s);
+        }
+    }
+}
+
+/// Render the lifecycle of one request from a trace: every event that
+/// mentions it (admission decisions, wave-entry spans, auditor
+/// violations), in deterministic `(lane, seq)` order, as a compact text
+/// timeline.
+pub fn request_timeline(trace: &Trace, request: usize) -> String {
+    let mut out = format!("req {request}:\n");
+    let mut any = false;
+    for e in trace.events() {
+        if !e.mentions_request(request) {
+            continue;
+        }
+        any = true;
+        out.push_str(&render_line(&e));
+    }
+    if !any {
+        out.push_str("  (no recorded events)\n");
+    }
+    out
+}
+
+/// Per-request timelines for every request id mentioned anywhere in the
+/// trace, ascending by id.
+pub fn timelines(trace: &Trace) -> String {
+    let events = trace.events();
+    let mut ids: Vec<usize> = Vec::new();
+    for e in &events {
+        for (k, v) in &e.args {
+            match (*k, v) {
+                ("req", ArgV::U(r)) => ids.push(*r as usize),
+                ("reqs", ArgV::S(s)) => {
+                    ids.extend(s.split(',').filter_map(|p| p.trim().parse::<usize>().ok()))
+                }
+                _ => {}
+            }
+        }
+    }
+    ids.sort_unstable();
+    ids.dedup();
+    let mut out = String::new();
+    for id in ids {
+        out.push_str(&request_timeline(trace, id));
+    }
+    out
+}
+
+fn render_line(e: &Event) -> String {
+    let mut line = String::from("  ");
+    // lead with the tick when the event recorded one
+    if let Some(ArgV::U(t)) = e.args.iter().find(|(k, _)| *k == "tick").map(|(_, v)| v) {
+        line.push_str(&format!("[tick {t}] "));
+    }
+    line.push_str(&e.name);
+    for (k, v) in &e.args {
+        if *k == "tick" {
+            continue;
+        }
+        match v {
+            ArgV::S(s) if s.is_empty() => continue,
+            ArgV::U(x) => line.push_str(&format!(" {k}={x}")),
+            ArgV::I(x) => line.push_str(&format!(" {k}={x}")),
+            ArgV::F(x) => line.push_str(&format!(" {k}={x}")),
+            ArgV::S(s) => line.push_str(&format!(" {k}={s}")),
+        }
+    }
+    line.push('\n');
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::trace::{Trace, TraceHeader, LANE_ENGINE};
+
+    fn sample() -> AdmissionExplain {
+        AdmissionExplain {
+            tick: 3,
+            request: 7,
+            decision: "reject",
+            reason: "memory-wall",
+            bucket: 32,
+            depth: 2,
+            cost_bytes: 4096,
+            remaining_bytes: 1024,
+            budget_bytes: 2048,
+            need_blocks: 2,
+            free_blocks: 1,
+        }
+    }
+
+    #[test]
+    fn emit_records_all_priced_numbers() {
+        let t = Trace::new(TraceHeader::default());
+        let s = t.scope(LANE_ENGINE);
+        sample().emit(&s);
+        let evs = t.events();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].name, "admission");
+        assert!(evs[0].mentions_request(7));
+        let c = t.canonical();
+        assert!(c.contains("decision=\"reject\""), "{c}");
+        assert!(c.contains("reason=\"memory-wall\""), "{c}");
+        assert!(c.contains("cost=4096"), "{c}");
+        assert!(c.contains("free_blocks=1"), "{c}");
+    }
+
+    #[test]
+    fn emit_opt_none_is_inert() {
+        sample().emit_opt(&None);
+    }
+
+    #[test]
+    fn timeline_renders_per_request() {
+        let t = Trace::new(TraceHeader::default());
+        let s = t.scope(LANE_ENGINE);
+        sample().emit(&s);
+        let mut admit = sample();
+        admit.request = 8;
+        admit.decision = "admit";
+        admit.reason = "";
+        admit.emit(&s);
+        let tl = request_timeline(&t, 7);
+        assert!(tl.starts_with("req 7:\n"), "{tl}");
+        assert!(tl.contains("[tick 3] admission"), "{tl}");
+        assert!(tl.contains("decision=reject"), "{tl}");
+        assert!(!tl.contains("decision=admit"), "{tl}");
+        let all = timelines(&t);
+        assert!(all.contains("req 7:\n") && all.contains("req 8:\n"), "{all}");
+        let none = request_timeline(&t, 99);
+        assert!(none.contains("no recorded events"), "{none}");
+    }
+}

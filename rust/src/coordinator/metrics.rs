@@ -1,25 +1,165 @@
 //! Serving metrics: latency distribution, throughput, per-variant counts.
+//!
+//! Latency distributions are held in [`LatencySketch`] — a mergeable
+//! log-bucket histogram (HDR-histogram style) rather than an unbounded
+//! sample vector, so a recorder's footprint is O(1) in run length and
+//! two runs' sketches can be merged exactly (DESIGN.md §19).
 
 use std::collections::HashMap;
 use std::time::Duration;
 
+/// Bucket count for [`LatencySketch`]: values `< 16` index exactly
+/// (buckets `0..16`); above, each power-of-two decade splits into 16
+/// sub-buckets (`16 * (64 - 4)` of them covers all of `u64`).
+const SKETCH_BUCKETS: usize = 16 + 16 * 60;
+
+/// Mergeable log-bucket latency histogram.
+///
+/// * values `< 16` are recorded exactly;
+/// * larger values land in one of 16 sub-buckets per power-of-two
+///   decade, bounding relative quantile error at `1/16` (6.25 %);
+/// * `count`, `sum`, `min`, and `max` are exact, so `mean()` is exact
+///   and the top quantile (nearest rank in the last occupied bucket)
+///   returns the exact maximum — preserving `p99 == max(samples)` for
+///   small sample sets;
+/// * [`LatencySketch::merge`] adds another sketch in O(buckets), the
+///   associative/commutative property batch reporters need.
+#[derive(Clone, Debug)]
+pub struct LatencySketch {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for LatencySketch {
+    fn default() -> Self {
+        LatencySketch::new()
+    }
+}
+
+impl LatencySketch {
+    pub fn new() -> LatencySketch {
+        LatencySketch {
+            buckets: vec![0; SKETCH_BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    fn bucket_index(v: u64) -> usize {
+        if v < 16 {
+            return v as usize;
+        }
+        let msb = 63 - v.leading_zeros() as usize; // >= 4
+        let shift = msb - 4;
+        let sub = ((v >> shift) - 16) as usize; // 0..16
+        16 + shift * 16 + sub
+    }
+
+    /// Smallest value that lands in bucket `idx` (quantile decode).
+    fn bucket_lower(idx: usize) -> u64 {
+        if idx < 16 {
+            return idx as u64;
+        }
+        let b = idx - 16;
+        (16 + (b % 16) as u64) << (b / 16)
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Fold another sketch in: bucket-wise sum plus exact count/sum
+    /// and min/max — `a.merge(&b)` holds every sample either saw.
+    pub fn merge(&mut self, other: &LatencySketch) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    /// Exact minimum recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.min }
+    }
+
+    /// Exact maximum recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact mean, truncated (0 when empty).
+    pub fn mean(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.sum / self.count }
+    }
+
+    /// Nearest-rank quantile, `q` in `[0, 1]`: the lower bound of the
+    /// bucket holding the rank (≤ the true sample, within 1/16), except
+    /// that a rank landing in the *last* occupied bucket answers with
+    /// the exact maximum. Empty sketches answer 0.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((self.count as f64 - 1.0) * q).round() as u64;
+        let mut seen = 0u64;
+        for (idx, &n) in self.buckets.iter().enumerate() {
+            if n == 0 {
+                continue;
+            }
+            seen += n;
+            if rank < seen {
+                // rank in the top occupied bucket → exact max
+                if self.buckets[idx + 1..].iter().all(|&m| m == 0) {
+                    return self.max;
+                }
+                return Self::bucket_lower(idx).max(self.min);
+            }
+        }
+        self.max
+    }
+}
+
 /// Accumulates per-request observations during a serve run.
 #[derive(Debug, Default)]
 pub struct Recorder {
-    latencies_us: Vec<u64>,
-    waits_us: Vec<u64>,
+    latencies_us: LatencySketch,
+    waits_us: LatencySketch,
     /// Per-phase execution latencies (generation path, DESIGN.md §13):
     /// one prefill sample per admitted prefill, one decode sample per
     /// decode step.
-    prefill_us: Vec<u64>,
-    decode_us: Vec<u64>,
+    prefill_us: LatencySketch,
+    decode_us: LatencySketch,
     /// SLO latencies (DESIGN.md §17): time-to-first-token — queueing wait
     /// plus every prefill slice's execution — one sample per generation
     /// that reached its first token; and inter-token latency — wall time
     /// between consecutive emissions of one stream — one sample per
     /// decode step past the first token.
-    ttft_us: Vec<u64>,
-    itl_us: Vec<u64>,
+    ttft_us: LatencySketch,
+    itl_us: LatencySketch,
     tokens: usize,
     pub per_variant: HashMap<String, usize>,
     pub waves: usize,
@@ -101,6 +241,17 @@ pub struct Recorder {
     pub kv_spill_bytes: usize,
     /// Bytes moved slow → fast across all KV restores.
     pub kv_restore_bytes: usize,
+    /// Activation-spill traffic summed over executed wave entries
+    /// (memory-planner spill tiers, via [`Recorder::absorb_exec`]):
+    /// bytes offloaded to the slow tier at spill points.
+    pub spill_out_bytes: usize,
+    /// Bytes copied back from the slow tier at restore points.
+    pub spill_in_bytes: usize,
+    /// Spill-script events executed (offload spills + all restores).
+    pub spill_events: usize,
+    /// Restores served by re-executing the producing node instead of a
+    /// slow-tier copy.
+    pub spill_recomputes: usize,
 }
 
 impl Recorder {
@@ -109,37 +260,49 @@ impl Recorder {
     }
 
     pub fn record(&mut self, variant: &str, latency_us: u64, seq_len: usize) {
-        self.latencies_us.push(latency_us);
+        self.latencies_us.record(latency_us);
         self.tokens += seq_len;
         *self.per_variant.entry(variant.to_string()).or_default() += 1;
     }
 
     /// Queueing delay between a request's arrival and its admission.
     pub fn record_wait(&mut self, wait_us: u64) {
-        self.waits_us.push(wait_us);
+        self.waits_us.record(wait_us);
     }
 
     /// One prefill execution's wall time.
     pub fn record_prefill(&mut self, us: u64) {
-        self.prefill_us.push(us);
+        self.prefill_us.record(us);
     }
 
     /// One decode step's wall time (including token selection).
     pub fn record_decode(&mut self, us: u64) {
-        self.decode_us.push(us);
+        self.decode_us.record(us);
         self.generated_tokens += 1;
     }
 
     /// One generation's time-to-first-token (queueing wait + all prefill
     /// slice executions, up to the LM head that selected the token).
     pub fn record_ttft(&mut self, us: u64) {
-        self.ttft_us.push(us);
+        self.ttft_us.record(us);
     }
 
     /// One inter-token gap: wall time since the same stream's previous
     /// emission.
     pub fn record_itl(&mut self, us: u64) {
-        self.itl_us.push(us);
+        self.itl_us.record(us);
+    }
+
+    /// Fold one executed wave entry's [`crate::exec::ExecStats`] into the
+    /// run totals. Only the activation-spill counters are absorbed: they
+    /// are pure functions of the memory plan and therefore deterministic
+    /// across thread widths, unlike the arena-reuse and peak counters
+    /// (which stay per-entry diagnostics).
+    pub fn absorb_exec(&mut self, s: &crate::exec::ExecStats) {
+        self.spill_out_bytes += s.spill_out_bytes;
+        self.spill_in_bytes += s.spill_in_bytes;
+        self.spill_events += s.spill_events;
+        self.spill_recomputes += s.spill_recomputes;
     }
 
     /// Observe the current resident KV-cache footprint (call after each
@@ -160,21 +323,8 @@ impl Recorder {
     }
 
     /// Close the run and compute the report.
-    pub fn finish(mut self, wall: Duration) -> MetricsReport {
-        self.latencies_us.sort_unstable();
-        self.waits_us.sort_unstable();
-        self.prefill_us.sort_unstable();
-        self.decode_us.sort_unstable();
-        self.ttft_us.sort_unstable();
-        self.itl_us.sort_unstable();
-        let completed = self.latencies_us.len();
-        let pct = |v: &[u64], p: f64| -> u64 {
-            if v.is_empty() {
-                return 0;
-            }
-            let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
-            v[idx]
-        };
+    pub fn finish(self, wall: Duration) -> MetricsReport {
+        let completed = self.latencies_us.count() as usize;
         let wall_s = wall.as_secs_f64().max(1e-9);
         MetricsReport {
             completed,
@@ -188,16 +338,16 @@ impl Recorder {
             wall_seconds: wall_s,
             throughput_rps: completed as f64 / wall_s,
             throughput_tokens_s: self.tokens as f64 / wall_s,
-            p50_us: pct(&self.latencies_us, 0.50),
-            p95_us: pct(&self.latencies_us, 0.95),
-            p99_us: pct(&self.latencies_us, 0.99),
-            wait_p50_us: pct(&self.waits_us, 0.50),
-            wait_p99_us: pct(&self.waits_us, 0.99),
-            prefill_p50_us: pct(&self.prefill_us, 0.50),
-            prefill_p99_us: pct(&self.prefill_us, 0.99),
-            decode_p50_us: pct(&self.decode_us, 0.50),
-            decode_p99_us: pct(&self.decode_us, 0.99),
-            decode_steps: self.decode_us.len(),
+            p50_us: self.latencies_us.quantile(0.50),
+            p95_us: self.latencies_us.quantile(0.95),
+            p99_us: self.latencies_us.quantile(0.99),
+            wait_p50_us: self.waits_us.quantile(0.50),
+            wait_p99_us: self.waits_us.quantile(0.99),
+            prefill_p50_us: self.prefill_us.quantile(0.50),
+            prefill_p99_us: self.prefill_us.quantile(0.99),
+            decode_p50_us: self.decode_us.quantile(0.50),
+            decode_p99_us: self.decode_us.quantile(0.99),
+            decode_steps: self.decode_us.count() as usize,
             generated_tokens: self.generated_tokens,
             resident_kv_high_water_bytes: self.resident_kv_high_water_bytes,
             evicted: self.evicted,
@@ -222,17 +372,23 @@ impl Recorder {
             kv_restores: self.kv_restores,
             kv_spill_bytes: self.kv_spill_bytes,
             kv_restore_bytes: self.kv_restore_bytes,
-            ttft_p50_us: pct(&self.ttft_us, 0.50),
-            ttft_p99_us: pct(&self.ttft_us, 0.99),
-            itl_p50_us: pct(&self.itl_us, 0.50),
-            itl_p99_us: pct(&self.itl_us, 0.99),
-            itl_samples: self.itl_us.len(),
-            mean_us: if completed == 0 {
-                0
-            } else {
-                self.latencies_us.iter().sum::<u64>() / completed as u64
-            },
+            spill_out_bytes: self.spill_out_bytes,
+            spill_in_bytes: self.spill_in_bytes,
+            spill_events: self.spill_events,
+            spill_recomputes: self.spill_recomputes,
+            ttft_p50_us: self.ttft_us.quantile(0.50),
+            ttft_p99_us: self.ttft_us.quantile(0.99),
+            itl_p50_us: self.itl_us.quantile(0.50),
+            itl_p99_us: self.itl_us.quantile(0.99),
+            itl_samples: self.itl_us.count() as usize,
+            mean_us: self.latencies_us.mean(),
             per_variant: self.per_variant,
+            latency_sketch: self.latencies_us,
+            wait_sketch: self.waits_us,
+            prefill_sketch: self.prefill_us,
+            decode_sketch: self.decode_us,
+            ttft_sketch: self.ttft_us,
+            itl_sketch: self.itl_us,
         }
     }
 }
@@ -327,6 +483,15 @@ pub struct MetricsReport {
     pub kv_spill_bytes: usize,
     /// Bytes moved slow → fast across all KV restores.
     pub kv_restore_bytes: usize,
+    /// Activation-spill traffic summed over executed wave entries
+    /// (memory-planner spill tiers): bytes offloaded at spill points.
+    pub spill_out_bytes: usize,
+    /// Bytes copied back from the slow tier at restore points.
+    pub spill_in_bytes: usize,
+    /// Spill-script events executed (offload spills + all restores).
+    pub spill_events: usize,
+    /// Restores served by re-executing the producing node.
+    pub spill_recomputes: usize,
     /// Time-to-first-token percentiles (queueing wait + prefill
     /// execution; zeros when nothing generated).
     pub ttft_p50_us: u64,
@@ -339,6 +504,15 @@ pub struct MetricsReport {
     pub itl_samples: usize,
     pub mean_us: u64,
     pub per_variant: HashMap<String, usize>,
+    /// Full latency distributions behind the point percentiles above:
+    /// mergeable log-bucket sketches (DESIGN.md §19), so batch drivers
+    /// can combine runs without re-deriving percentiles from raw logs.
+    pub latency_sketch: LatencySketch,
+    pub wait_sketch: LatencySketch,
+    pub prefill_sketch: LatencySketch,
+    pub decode_sketch: LatencySketch,
+    pub ttft_sketch: LatencySketch,
+    pub itl_sketch: LatencySketch,
 }
 
 impl MetricsReport {
@@ -426,6 +600,15 @@ impl MetricsReport {
                 ));
             }
         }
+        if self.spill_events + self.spill_recomputes > 0 {
+            s.push_str(&format!(
+                "\nactivation spill: {} events ({:.1} MiB out, {:.1} MiB in), {} recomputes",
+                self.spill_events,
+                self.spill_out_bytes as f64 / (1 << 20) as f64,
+                self.spill_in_bytes as f64 / (1 << 20) as f64,
+                self.spill_recomputes,
+            ));
+        }
         let total_errors: usize = self.errors_by_kind.values().sum();
         if self.shed
             + self.shed_wait
@@ -472,11 +655,15 @@ mod tests {
         }
         let rep = r.finish(Duration::from_secs(1));
         assert_eq!(rep.completed, 100);
-        assert_eq!(rep.p50_us, 51_000); // nearest-rank of 1..=100
-        assert_eq!(rep.p95_us, 94_000_u64.max(rep.p95_us.min(96_000)));
+        // log-bucket sketch: mid quantiles answer the bucket lower bound,
+        // at most 1/16 below the exact nearest-rank value (51_000 here)
+        assert!((49_152..=51_000).contains(&rep.p50_us), "{}", rep.p50_us);
+        assert!((88_000..=96_000).contains(&rep.p95_us), "{}", rep.p95_us);
         assert!(rep.p99_us >= rep.p95_us);
+        assert_eq!(rep.p99_us, 100_000, "top rank answers the exact max");
         assert!(rep.throughput_rps > 99.0);
         assert_eq!(rep.per_variant["v"], 100);
+        assert_eq!(rep.mean_us, 50_500, "mean is exact (sum/count)");
     }
 
     #[test]
@@ -660,6 +847,102 @@ mod tests {
         assert_eq!(rep.mean_us, 0);
         let s = rep.render();
         assert!(!s.contains("NaN") && !s.contains("inf"), "{s}");
+    }
+
+    #[test]
+    fn sketch_small_values_and_top_rank_exact() {
+        let mut s = LatencySketch::new();
+        for v in [0u64, 3, 7, 15, 15, 2] {
+            s.record(v);
+        }
+        assert_eq!(s.count(), 6);
+        assert_eq!(s.min(), 0);
+        assert_eq!(s.max(), 15);
+        assert_eq!(s.sum(), 42);
+        // values < 16 bucket exactly: every quantile is an exact sample
+        assert_eq!(s.quantile(0.0), 0);
+        assert_eq!(s.quantile(0.5), 3);
+        assert_eq!(s.quantile(1.0), 15);
+    }
+
+    #[test]
+    fn sketch_quantile_error_bounded() {
+        let mut s = LatencySketch::new();
+        for i in 1..=10_000u64 {
+            s.record(i * 17 + 5);
+        }
+        for q in [0.1, 0.25, 0.5, 0.9, 0.95, 0.99] {
+            let exact = ((10_000.0 - 1.0) * q).round() as u64 * 17 + 17 + 5;
+            let got = s.quantile(q);
+            // bucket lower bound (≤ exact) or, in the top occupied
+            // bucket, the exact max (≥ exact) — either way within 1/16
+            assert!(
+                (got as f64 - exact as f64).abs() <= exact as f64 / 16.0 + 1.0,
+                "q{q}: {got} more than 1/16 from exact {exact}"
+            );
+        }
+        assert_eq!(s.quantile(1.0), 10_000 * 17 + 5, "top rank exact");
+    }
+
+    #[test]
+    fn sketch_merge_matches_single_sketch() {
+        let mut a = LatencySketch::new();
+        let mut b = LatencySketch::new();
+        let mut both = LatencySketch::new();
+        for i in 0..500u64 {
+            let v = i * 313 + 11;
+            if i % 2 == 0 { a.record(v) } else { b.record(v) }
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.sum(), both.sum());
+        assert_eq!(a.min(), both.min());
+        assert_eq!(a.max(), both.max());
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), both.quantile(q), "q{q} diverged after merge");
+        }
+    }
+
+    #[test]
+    fn report_carries_sketches_behind_percentiles() {
+        let mut r = Recorder::new();
+        for i in 1..=50u64 {
+            r.record("v", i * 100, 8);
+        }
+        let rep = r.finish(Duration::from_secs(1));
+        assert_eq!(rep.latency_sketch.count(), 50);
+        assert_eq!(rep.latency_sketch.quantile(0.99), rep.p99_us);
+        assert_eq!(rep.latency_sketch.mean(), rep.mean_us);
+        assert!(rep.wait_sketch.is_empty());
+    }
+
+    #[test]
+    fn activation_spill_counters_surface() {
+        use crate::exec::ExecStats;
+        let mut r = Recorder::new();
+        r.record("v", 10, 8);
+        let stats = ExecStats {
+            spill_out_bytes: 3 << 20,
+            spill_in_bytes: 1 << 20,
+            spill_events: 4,
+            spill_recomputes: 2,
+            ..ExecStats::default()
+        };
+        r.absorb_exec(&stats);
+        r.absorb_exec(&stats);
+        let rep = r.finish(Duration::from_secs(1));
+        assert_eq!(rep.spill_events, 8);
+        assert_eq!(rep.spill_out_bytes, 6 << 20);
+        assert_eq!(rep.spill_in_bytes, 2 << 20);
+        assert_eq!(rep.spill_recomputes, 4);
+        let s = rep.render();
+        assert!(s.contains("activation spill: 8 events"), "{s}");
+        assert!(s.contains("4 recomputes"), "{s}");
+        // a run with no activation spills must not mention them
+        let mut r = Recorder::new();
+        r.record("v", 10, 8);
+        assert!(!r.finish(Duration::from_secs(1)).render().contains("activation spill"));
     }
 
     #[test]

@@ -23,16 +23,18 @@
 pub mod audit;
 pub mod cache_manager;
 pub mod engine;
+pub mod explain;
 pub mod metrics;
 pub mod request;
 
 pub use audit::{AuditReport, Auditor};
 pub use cache_manager::CacheManager;
+pub use explain::AdmissionExplain;
 pub use engine::{
     batch_decode_default, greedy_argmax, pad_prompt, prefill_chunk_default, EngineConfig,
     EngineError, EngineResponse, PlanKind, RejectReason, ServeEngine,
 };
-pub use metrics::{MetricsReport, Recorder};
+pub use metrics::{LatencySketch, MetricsReport, Recorder};
 pub use request::{
     generate_workload, open_loop_workload, poisson_workload, synthetic_workload, Request,
     RequestOutcome, Response,

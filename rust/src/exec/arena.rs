@@ -179,6 +179,16 @@ pub fn execute_arena(
                             ));
                             stores.spill.on_restore(data.len() * 4);
                             stats.spill_in_bytes += data.len() * 4;
+                            if let Some(ts) = &opts.trace {
+                                use crate::util::trace::ArgV;
+                                ts.instant(
+                                    "spill.in",
+                                    vec![
+                                        ("value", ArgV::U(d.value as u64)),
+                                        ("bytes", ArgV::U((data.len() * 4) as u64)),
+                                    ],
+                                );
+                            }
                         }
                         SpillKind::Recompute => {
                             // Same `_into` kernel over the same live
@@ -187,6 +197,13 @@ pub fn execute_arena(
                             let out = exec_materialize(src, d.slot, &values, &arena, tracker);
                             values[d.value] = Some(out);
                             stats.spill_recomputes += 1;
+                            if let Some(ts) = &opts.trace {
+                                use crate::util::trace::ArgV;
+                                ts.instant(
+                                    "spill.recompute",
+                                    vec![("value", ArgV::U(d.value as u64))],
+                                );
+                            }
                         }
                     }
                     stats.spill_events += 1;
@@ -195,7 +212,19 @@ pub fn execute_arena(
         }
         let skip = prebound[id] || owner[id].is_some();
         if !skip {
-            let out = exec_node_arena(node, mem.actions[id], &mut values, &arena, tracker);
+            let out = match &opts.trace {
+                Some(ts) => {
+                    let sp = ts.begin();
+                    let out = exec_node_arena(node, mem.actions[id], &mut values, &arena, tracker);
+                    ts.end(
+                        sp,
+                        &node.op.mnemonic(),
+                        vec![("node", crate::util::trace::ArgV::U(id as u64))],
+                    );
+                    out
+                }
+                None => exec_node_arena(node, mem.actions[id], &mut values, &arena, tracker),
+            };
             stats.nodes_executed += 1;
             values[id] = Some(out);
             // Node-phase releases, exactly where the planner freed.
@@ -236,6 +265,16 @@ pub fn execute_arena(
                         let shape = t.shape().to_vec();
                         stores.spill.on_spill(data.len() * 4);
                         stats.spill_out_bytes += data.len() * 4;
+                        if let Some(ts) = &opts.trace {
+                            use crate::util::trace::ArgV;
+                            ts.instant(
+                                "spill.out",
+                                vec![
+                                    ("value", ArgV::U(d.value as u64)),
+                                    ("bytes", ArgV::U((data.len() * 4) as u64)),
+                                ],
+                            );
+                        }
                         stash[di] = Some((data, shape));
                     }
                     stats.spill_events += 1;
@@ -739,8 +778,38 @@ fn execute_region_arena(
         .map(|_| Arena::with_store(region.slots.clone(), lane_store.clone()))
         .collect();
 
+    // Chunk sub-lanes are keyed by iteration ordinal (never the lane
+    // slot) and this firing's derive-block, so the trace is identical at
+    // any governed degree (DESIGN.md §19).
+    let tr = opts.trace.as_ref().map(|t| (t, t.derive_block()));
+    let chunk_span = |iter: usize| {
+        tr.map(|(t, block)| {
+            let cs = t.child(crate::util::trace::chunk_lane(t.lane(), iter), block << 32);
+            let sp = cs.begin();
+            (cs, sp)
+        })
+    };
+    let chunk_close = |csp: Option<(crate::util::trace::TraceScope, crate::util::trace::SpanStart)>,
+                       iter: usize,
+                       start: usize,
+                       len: usize| {
+        if let Some((cs, sp)) = csp {
+            use crate::util::trace::ArgV;
+            cs.end(
+                sp,
+                "chunk",
+                vec![
+                    ("iter", ArgV::U(iter as u64)),
+                    ("start", ArgV::U(start as u64)),
+                    ("len", ArgV::U(len as u64)),
+                ],
+            );
+        }
+    };
+
     if degree <= 1 {
-        for &(start, len) in &iters {
+        for (iter, &(start, len)) in iters.iter().enumerate() {
+            let csp = chunk_span(iter);
             let outs = run_lane_iteration(
                 graph,
                 plan,
@@ -752,6 +821,7 @@ fn execute_region_arena(
                 start,
                 len,
             );
+            chunk_close(csp, iter, start, len);
             stats.nodes_executed += plan.region.len();
             for (k, t) in outs.into_iter().enumerate() {
                 accs[k].push(&t, tracker);
@@ -759,10 +829,13 @@ fn execute_region_arena(
         }
     } else {
         let values_ro: &[Option<Tensor>] = values;
-        for wave in iters.chunks(degree) {
+        for (wslot, wave) in iters.chunks(degree).enumerate() {
             let results: Vec<Vec<Tensor>> = pool::parallel_map(wave.len(), |wi| {
                 let (start, len) = wave[wi];
-                run_lane_iteration(
+                // global iteration ordinal, matching the serial path
+                let iter = wslot * degree + wi;
+                let csp = chunk_span(iter);
+                let outs = run_lane_iteration(
                     graph,
                     plan,
                     region,
@@ -772,7 +845,9 @@ fn execute_region_arena(
                     tracker,
                     start,
                     len,
-                )
+                );
+                chunk_close(csp, iter, start, len);
+                outs
             });
             stats.nodes_executed += plan.region.len() * wave.len();
             for outs in results {

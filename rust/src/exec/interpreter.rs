@@ -50,6 +50,19 @@ pub fn execute(
     params: &[Tensor],
     tracker: &MemoryTracker,
 ) -> (Vec<Tensor>, ExecStats) {
+    execute_traced(graph, inputs, params, tracker, None)
+}
+
+/// [`execute`] with an optional trace scope: each executed node records
+/// a span named by its op mnemonic (DESIGN.md §19). `None` is the plain
+/// interpreter — the trace branch costs one `Option` test per node.
+pub fn execute_traced(
+    graph: &Graph,
+    inputs: &[Tensor],
+    params: &[Tensor],
+    tracker: &MemoryTracker,
+    trace: Option<&crate::util::trace::TraceScope>,
+) -> (Vec<Tensor>, ExecStats) {
     assert_eq!(inputs.len(), graph.inputs.len(), "input arity");
     assert_eq!(params.len(), graph.params.len(), "param arity");
 
@@ -87,7 +100,19 @@ pub fn execute(
             // leaf already bound
             continue;
         }
-        let out = execute_node(node, &values, tracker);
+        let out = match trace {
+            Some(ts) => {
+                let sp = ts.begin();
+                let out = execute_node(node, &values, tracker);
+                ts.end(
+                    sp,
+                    &node.op.mnemonic(),
+                    vec![("node", crate::util::trace::ArgV::U(node.id as u64))],
+                );
+                out
+            }
+            None => execute_node(node, &values, tracker),
+        };
         stats.nodes_executed += 1;
         values[node.id] = Some(out);
         // Release inputs whose last consumer this was.

@@ -13,7 +13,7 @@ pub mod arena;
 mod interpreter;
 
 pub use arena::{execute_arena, ArenaStores};
-pub use interpreter::{execute, execute_node, ExecStats};
+pub use interpreter::{execute, execute_node, execute_traced, ExecStats};
 
 use crate::ir::Graph;
 use crate::tensor::{MemoryTracker, Tensor};

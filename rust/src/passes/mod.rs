@@ -44,6 +44,10 @@ pub struct AutoChunkResult {
     pub chunked_peak: usize,
     /// Total selection cost (Σ L(sᵢ), Eq. 11) of the chosen plans.
     pub total_cost: f64,
+    /// Chunk candidates enumerated across all search passes — recorded
+    /// in compile trace spans so a trace explains how wide the search
+    /// actually ran (DESIGN.md §19).
+    pub candidates_seen: usize,
 }
 
 /// Options for the full pipeline.
@@ -90,6 +94,7 @@ pub fn autochunk(graph: &Graph, budget_bytes: usize, config: &AutoChunkConfig) -
     }];
     let mut best_complete: Option<BeamState> = None;
     let mut best_partial: BeamState = beam[0].clone();
+    let mut candidates_seen = 0usize;
 
     for _pass in 0..config.max_passes {
         let mut frontier: Vec<BeamState> = Vec::new();
@@ -110,6 +115,7 @@ pub fn autochunk(graph: &Graph, budget_bytes: usize, config: &AutoChunkConfig) -
             }
             let profile = estimate_under_plan(graph, &state.plans);
             let candidates = search_chunks(graph, &profile, &state.plans, &config.search);
+            candidates_seen += candidates.len();
             let ranked = select::rank_candidates(
                 graph,
                 &candidates,
@@ -202,6 +208,7 @@ pub fn autochunk(graph: &Graph, budget_bytes: usize, config: &AutoChunkConfig) -
         baseline_peak: baseline.peak_bytes,
         chunked_peak: chosen.peak,
         total_cost: chosen.cost,
+        candidates_seen,
     }
 }
 

@@ -45,6 +45,11 @@ pub struct ExecOptions {
     /// configuration — reduces every injection site to a single
     /// predictable branch; no dice are rolled until a scope is installed.
     pub faults: Option<crate::util::fault::FaultScope>,
+    /// Trace scope for this execution (DESIGN.md §19): node-kind spans,
+    /// chunk-lane spans, and spill transfer events record here. `None`
+    /// — the default — keeps every instrumentation site a single branch
+    /// with no allocation, locking, or clock read.
+    pub trace: Option<crate::util::trace::TraceScope>,
 }
 
 /// Process-default arena mode from `AUTOCHUNK_ARENA` (`1` routes serving
@@ -178,7 +183,13 @@ impl PlanHandle {
                 opts,
             )
         } else if self.inner.plans.is_empty() {
-            crate::exec::execute(&self.inner.graph, inputs, &self.inner.params, tracker)
+            crate::exec::execute_traced(
+                &self.inner.graph,
+                inputs,
+                &self.inner.params,
+                tracker,
+                opts.trace.as_ref(),
+            )
         } else {
             execute_chunked_opts(
                 &self.inner.graph,
@@ -325,7 +336,19 @@ pub fn execute_chunked_opts(
             || prebound[id] // pre-bound (possibly already freed)
             || owner[id].is_some(); // region node: produced by its region
         if !skip {
-            let out = execute_node(node, &values, tracker);
+            let out = match &opts.trace {
+                Some(ts) => {
+                    let sp = ts.begin();
+                    let out = execute_node(node, &values, tracker);
+                    ts.end(
+                        sp,
+                        &node.op.mnemonic(),
+                        vec![("node", crate::util::trace::ArgV::U(id as u64))],
+                    );
+                    out
+                }
+                None => execute_node(node, &values, tracker),
+            };
             stats.nodes_executed += 1;
             values[id] = Some(out);
             for &i in &node.inputs {
@@ -348,7 +371,30 @@ pub fn execute_chunked_opts(
                     per_chunk_bytes(graph, plan),
                 );
                 stats.max_chunk_degree = stats.max_chunk_degree.max(degree);
-                execute_region(graph, plan, &mut values, &mut scratch, tracker, &mut stats, degree);
+                let rsp = opts.trace.as_ref().map(|ts| ts.begin());
+                execute_region(
+                    graph,
+                    plan,
+                    &mut values,
+                    &mut scratch,
+                    tracker,
+                    &mut stats,
+                    degree,
+                    opts.trace.as_ref(),
+                );
+                if let (Some(ts), Some(sp)) = (&opts.trace, rsp) {
+                    use crate::util::trace::ArgV;
+                    // the governed degree is width-dependent and must NOT
+                    // be recorded — only the plan's own shape is.
+                    ts.end(
+                        sp,
+                        "region",
+                        vec![
+                            ("plan", ArgV::U(pi as u64)),
+                            ("iters", ArgV::U(n_iters as u64)),
+                        ],
+                    );
+                }
                 // release external inputs consumed by the region
                 for &r in &plan.region {
                     for &i in &graph.node(r).inputs {
@@ -458,9 +504,14 @@ fn execute_region(
     tracker: &MemoryTracker,
     stats: &mut ExecStats,
     degree: usize,
+    trace: Option<&crate::util::trace::TraceScope>,
 ) {
     let extent = plan.chunk_extent(graph);
     let step = plan.chunk_step(graph);
+    // Chunk sub-lanes are keyed by iteration ordinal and this firing's
+    // derive-block (shifted into seq_base), so the trace is identical
+    // whether the loop below runs serial or at any governed degree.
+    let tr = trace.map(|t| (t, t.derive_block()));
 
     // Preallocate output accumulators (outputs count in full, Eq. 2).
     let mut accs: Vec<Accumulator> = plan
@@ -488,8 +539,17 @@ fn execute_region(
     if degree <= 1 {
         // Chunk-input bases live in `values` already.
         let mut start = 0usize;
+        let mut iter = 0usize;
         while start < extent {
             let len = step.min(extent - start);
+            let csp = tr.map(|(t, block)| {
+                let cs = t.child(
+                    crate::util::trace::chunk_lane(t.lane(), iter),
+                    block << 32,
+                );
+                let sp = cs.begin();
+                (cs, sp)
+            });
 
             // Bind external values into scratch: pass inputs whole, chunk
             // inputs sliced (zero-copy views).
@@ -529,7 +589,20 @@ fn execute_region(
                 scratch[p] = None;
             }
 
+            if let Some((cs, sp)) = csp {
+                use crate::util::trace::ArgV;
+                cs.end(
+                    sp,
+                    "chunk",
+                    vec![
+                        ("iter", ArgV::U(iter as u64)),
+                        ("start", ArgV::U(start as u64)),
+                        ("len", ArgV::U(len as u64)),
+                    ],
+                );
+            }
             start += len;
+            iter += 1;
         }
     } else {
         // Parallel chunk loop: waves of `degree` iterations run
@@ -546,9 +619,20 @@ fn execute_region(
             start += len;
         }
         let values_ro: &[Option<Tensor>] = values;
-        for wave in iters.chunks(degree) {
+        for (wslot, wave) in iters.chunks(degree).enumerate() {
             let results: Vec<Vec<Tensor>> = pool::parallel_map(wave.len(), |wi| {
                 let (start, len) = wave[wi];
+                // global iteration ordinal — NOT the worker slot — so
+                // the chunk lane layout matches the serial path bitwise
+                let iter = wslot * degree + wi;
+                let csp = tr.map(|(t, block)| {
+                    let cs = t.child(
+                        crate::util::trace::chunk_lane(t.lane(), iter),
+                        block << 32,
+                    );
+                    let sp = cs.begin();
+                    (cs, sp)
+                });
                 let mut local: Vec<Option<Tensor>> = vec![None; graph.len()];
                 for (k, &p) in plan.pass_inputs.iter().enumerate() {
                     local[p] = Some(pass_vals[k].clone());
@@ -566,10 +650,24 @@ fn execute_region(
                     };
                     local[r] = Some(out);
                 }
-                plan.outputs
+                let outs: Vec<Tensor> = plan
+                    .outputs
                     .iter()
                     .map(|&(o, _)| local[o].take().expect("region output missing"))
-                    .collect()
+                    .collect();
+                if let Some((cs, sp)) = csp {
+                    use crate::util::trace::ArgV;
+                    cs.end(
+                        sp,
+                        "chunk",
+                        vec![
+                            ("iter", ArgV::U(iter as u64)),
+                            ("start", ArgV::U(start as u64)),
+                            ("len", ArgV::U(len as u64)),
+                        ],
+                    );
+                }
+                outs
             });
             stats.nodes_executed += plan.region.len() * wave.len();
             for outs in results {

@@ -8,3 +8,4 @@ pub mod bench;
 pub mod error;
 pub mod fault;
 pub mod pool;
+pub mod trace;

@@ -1,0 +1,344 @@
+//! Structured-tracing contracts (DESIGN.md §19):
+//!
+//! * **determinism** — same-seed serve runs record canonically identical
+//!   traces at pool widths 1 and 4, across the arena × paged cache
+//!   matrix: every event is attributed to a logical lane with a
+//!   deterministic sequence number, never to a worker thread;
+//! * **zero cost when disabled** — serving with tracing off produces
+//!   responses bitwise identical to serving with tracing on (the trace
+//!   observes, never steers), and no trace object exists afterwards;
+//! * **valid export** — the Chrome trace-event JSON parses with a strict
+//!   recursive-descent JSON reader and carries the expected structure
+//!   (`traceEvents`, metadata, `otherData.fault_seed`);
+//! * **explainability** — every request in the workload is mentioned by
+//!   at least one admission-decision event, and the per-request text
+//!   timeline renders it.
+
+use autochunk::coordinator::explain::{request_timeline, timelines};
+use autochunk::coordinator::{generate_workload, EngineConfig, EngineResponse, ServeEngine};
+
+fn engine(
+    budget: usize,
+    buckets: Vec<usize>,
+    threads: usize,
+    trace: bool,
+    use_arena: bool,
+    block_tokens: usize,
+) -> ServeEngine {
+    ServeEngine::new(EngineConfig {
+        model: "gpt".into(),
+        budget_bytes: budget,
+        max_batch: 4,
+        buckets,
+        worker_threads: threads,
+        trace,
+        use_arena,
+        block_tokens,
+        ..EngineConfig::default()
+    })
+}
+
+/// Budget sized from the engine's own top-bucket quote (k× dense), so the
+/// tests track the estimator instead of hard-coding byte counts.
+fn budget_for(buckets: &[usize], k: usize) -> usize {
+    let mut probe = engine(usize::MAX, buckets.to_vec(), 1, false, false, 0);
+    let top = *buckets.last().unwrap();
+    let (_, q) = probe.quote(top, 0).unwrap().expect("bucket quote");
+    q.peak_bytes * k
+}
+
+fn response_key(r: &EngineResponse) -> (usize, bool, usize, usize, Vec<u32>, Vec<i32>) {
+    (
+        r.id,
+        r.outcome == autochunk::coordinator::RequestOutcome::Completed,
+        r.bucket,
+        r.depth,
+        r.output.iter().map(|v| v.to_bits()).collect(),
+        r.tokens.clone(),
+    )
+}
+
+#[test]
+fn canonical_trace_identical_across_widths() {
+    let buckets = vec![32usize, 64];
+    let budget = budget_for(&buckets, 3);
+    let reqs = generate_workload(6, 8, 30, 2, 5, 42, 3);
+    for use_arena in [false, true] {
+        for block_tokens in [0usize, 8] {
+            let cell = format!("arena={use_arena} block_tokens={block_tokens}");
+            let mut canon: Vec<String> = Vec::new();
+            let mut keys: Vec<Vec<_>> = Vec::new();
+            for threads in [1usize, 4] {
+                let mut e =
+                    engine(budget, buckets.clone(), threads, true, use_arena, block_tokens);
+                let (resp, _) = e.serve(&reqs).unwrap();
+                let tr = e.take_trace().expect("trace enabled but none recorded");
+                canon.push(tr.canonical());
+                let mut k: Vec<_> = resp.iter().map(response_key).collect();
+                k.sort();
+                keys.push(k);
+            }
+            assert_eq!(keys[0], keys[1], "{cell}: responses diverged across widths");
+            assert_eq!(canon[0], canon[1], "{cell}: trace content diverged across widths");
+            assert!(!canon[0].is_empty(), "{cell}: trace recorded nothing");
+            // the streams the taxonomy promises are actually present
+            assert!(canon[0].contains("X wave"), "{cell}: no wave spans");
+            assert!(canon[0].contains("X compile"), "{cell}: no compile spans");
+            assert!(canon[0].contains("i admission"), "{cell}: no admission events");
+            assert!(canon[0].contains("C memory"), "{cell}: no memory timeline");
+            assert!(canon[0].contains("C sched"), "{cell}: no scheduler counters");
+            assert!(canon[0].contains("X entry."), "{cell}: no wave-entry spans");
+            if block_tokens > 0 {
+                assert!(canon[0].contains("i kv.alloc"), "{cell}: no kv events");
+            }
+        }
+    }
+}
+
+#[test]
+fn disabled_tracing_is_invisible_to_serving() {
+    let buckets = vec![32usize, 64];
+    let budget = budget_for(&buckets, 3);
+    let reqs = generate_workload(6, 8, 30, 2, 5, 7, 3);
+    let mut plain = engine(budget, buckets.clone(), 2, false, false, 8);
+    let (r_plain, rep_plain) = plain.serve(&reqs).unwrap();
+    assert!(plain.take_trace().is_none(), "tracing off must record nothing");
+    let mut traced = engine(budget, buckets, 2, true, false, 8);
+    let (r_traced, rep_traced) = traced.serve(&reqs).unwrap();
+    assert!(traced.take_trace().is_some());
+    let a: Vec<_> = r_plain.iter().map(response_key).collect();
+    let b: Vec<_> = r_traced.iter().map(response_key).collect();
+    assert_eq!(a, b, "tracing perturbed the served outputs");
+    assert_eq!(rep_plain.completed, rep_traced.completed);
+    assert_eq!(rep_plain.waves, rep_traced.waves);
+}
+
+#[test]
+fn chrome_export_is_valid_json_with_expected_shape() {
+    let buckets = vec![32usize, 64];
+    let budget = budget_for(&buckets, 3);
+    let reqs = generate_workload(5, 8, 28, 2, 4, 11, 2);
+    let mut e = engine(budget, buckets, 2, true, true, 8);
+    e.serve(&reqs).unwrap();
+    let tr = e.take_trace().unwrap();
+    let j = tr.chrome_json();
+    parse_json(&j).unwrap_or_else(|err| panic!("invalid chrome JSON: {err}\n{j}"));
+    assert!(j.starts_with("{\"traceEvents\":["));
+    assert!(j.contains("\"otherData\":{"), "{j}");
+    assert!(j.contains("\"fault_seed\":null"), "no-chaos run records a null seed");
+    assert!(j.contains("\"ph\":\"M\""), "missing lane metadata");
+    assert!(j.contains("\"ph\":\"X\""), "missing spans");
+    assert!(j.contains("\"ph\":\"C\""), "missing counters");
+    assert!(j.contains("\"name\":\"autochunk-engine\""), "{j}");
+}
+
+#[test]
+fn every_request_has_an_admission_explanation() {
+    let buckets = vec![32usize, 64];
+    let budget = budget_for(&buckets, 3);
+    let mut reqs = generate_workload(5, 8, 28, 2, 4, 23, 2);
+    // an impossible request: its shed decision must be explained too
+    reqs.push(autochunk::coordinator::Request::new(5, 4096, 9).at_tick(0, 500));
+    let mut e = engine(budget, buckets, 1, true, false, 8);
+    e.serve(&reqs).unwrap();
+    let tr = e.take_trace().unwrap();
+    let events = tr.events();
+    for req in &reqs {
+        assert!(
+            events
+                .iter()
+                .any(|ev| ev.name == "admission" && ev.mentions_request(req.id)),
+            "request {} has no admission event",
+            req.id
+        );
+        let line = request_timeline(&tr, req.id);
+        assert!(
+            line.lines().count() > 1,
+            "request {} timeline is empty:\n{line}",
+            req.id
+        );
+    }
+    let all = timelines(&tr);
+    assert!(all.contains("req 5"), "{all}");
+    // the impossible request was shed with a priced reason
+    let shed = events.iter().find(|ev| {
+        ev.name == "admission"
+            && ev.mentions_request(5)
+            && ev.args.iter().any(|(k, v)| {
+                *k == "decision"
+                    && matches!(v, autochunk::util::trace::ArgV::S(s) if s == "shed")
+            })
+    });
+    assert!(shed.is_some(), "oversized request must carry a shed decision");
+}
+
+// ---- strict JSON reader (validation only; no values retained) ----------
+
+fn parse_json(s: &str) -> Result<(), String> {
+    let b = s.as_bytes();
+    let mut i = 0usize;
+    skip_ws(b, &mut i);
+    value(b, &mut i)?;
+    skip_ws(b, &mut i);
+    if i != b.len() {
+        return Err(format!("trailing bytes at {i}"));
+    }
+    Ok(())
+}
+
+fn skip_ws(b: &[u8], i: &mut usize) {
+    while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+        *i += 1;
+    }
+}
+
+fn value(b: &[u8], i: &mut usize) -> Result<(), String> {
+    skip_ws(b, i);
+    match b.get(*i) {
+        Some(b'{') => object(b, i),
+        Some(b'[') => array(b, i),
+        Some(b'"') => string(b, i),
+        Some(b't') => literal(b, i, b"true"),
+        Some(b'f') => literal(b, i, b"false"),
+        Some(b'n') => literal(b, i, b"null"),
+        Some(c) if c.is_ascii_digit() || *c == b'-' => number(b, i),
+        other => Err(format!("unexpected {other:?} at {i}")),
+    }
+}
+
+fn literal(b: &[u8], i: &mut usize, word: &[u8]) -> Result<(), String> {
+    if b.len() - *i >= word.len() && &b[*i..*i + word.len()] == word {
+        *i += word.len();
+        Ok(())
+    } else {
+        Err(format!("bad literal at {i}"))
+    }
+}
+
+fn object(b: &[u8], i: &mut usize) -> Result<(), String> {
+    *i += 1; // '{'
+    skip_ws(b, i);
+    if b.get(*i) == Some(&b'}') {
+        *i += 1;
+        return Ok(());
+    }
+    loop {
+        skip_ws(b, i);
+        string(b, i)?;
+        skip_ws(b, i);
+        if b.get(*i) != Some(&b':') {
+            return Err(format!("expected ':' at {i}"));
+        }
+        *i += 1;
+        value(b, i)?;
+        skip_ws(b, i);
+        match b.get(*i) {
+            Some(b',') => *i += 1,
+            Some(b'}') => {
+                *i += 1;
+                return Ok(());
+            }
+            other => return Err(format!("expected ',' or '}}', got {other:?} at {i}")),
+        }
+    }
+}
+
+fn array(b: &[u8], i: &mut usize) -> Result<(), String> {
+    *i += 1; // '['
+    skip_ws(b, i);
+    if b.get(*i) == Some(&b']') {
+        *i += 1;
+        return Ok(());
+    }
+    loop {
+        value(b, i)?;
+        skip_ws(b, i);
+        match b.get(*i) {
+            Some(b',') => *i += 1,
+            Some(b']') => {
+                *i += 1;
+                return Ok(());
+            }
+            other => return Err(format!("expected ',' or ']', got {other:?} at {i}")),
+        }
+    }
+}
+
+fn string(b: &[u8], i: &mut usize) -> Result<(), String> {
+    if b.get(*i) != Some(&b'"') {
+        return Err(format!("expected '\"' at {i}"));
+    }
+    *i += 1;
+    while let Some(&c) = b.get(*i) {
+        match c {
+            b'"' => {
+                *i += 1;
+                return Ok(());
+            }
+            b'\\' => {
+                *i += 1;
+                match b.get(*i) {
+                    Some(b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't') => *i += 1,
+                    Some(b'u') => {
+                        for k in 1..=4 {
+                            if !b.get(*i + k).is_some_and(|h| h.is_ascii_hexdigit()) {
+                                return Err(format!("bad \\u escape at {i}"));
+                            }
+                        }
+                        *i += 5;
+                    }
+                    other => return Err(format!("bad escape {other:?} at {i}")),
+                }
+            }
+            0x00..=0x1f => return Err(format!("raw control byte in string at {i}")),
+            _ => *i += 1,
+        }
+    }
+    Err("unterminated string".into())
+}
+
+fn number(b: &[u8], i: &mut usize) -> Result<(), String> {
+    let start = *i;
+    if b.get(*i) == Some(&b'-') {
+        *i += 1;
+    }
+    let mut digits = 0;
+    while b.get(*i).is_some_and(|c| c.is_ascii_digit()) {
+        *i += 1;
+        digits += 1;
+    }
+    if digits == 0 {
+        return Err(format!("bad number at {start}"));
+    }
+    if b.get(*i) == Some(&b'.') {
+        *i += 1;
+        if !b.get(*i).is_some_and(|c| c.is_ascii_digit()) {
+            return Err(format!("bad fraction at {i}"));
+        }
+        while b.get(*i).is_some_and(|c| c.is_ascii_digit()) {
+            *i += 1;
+        }
+    }
+    if matches!(b.get(*i), Some(b'e' | b'E')) {
+        *i += 1;
+        if matches!(b.get(*i), Some(b'+' | b'-')) {
+            *i += 1;
+        }
+        if !b.get(*i).is_some_and(|c| c.is_ascii_digit()) {
+            return Err(format!("bad exponent at {i}"));
+        }
+        while b.get(*i).is_some_and(|c| c.is_ascii_digit()) {
+            *i += 1;
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn json_reader_self_test() {
+    assert!(parse_json(r#"{"a":[1,2.5,-3e4],"b":{"c":"x\n","d":null},"e":true}"#).is_ok());
+    assert!(parse_json("{").is_err());
+    assert!(parse_json(r#"{"a":1,}"#).is_err());
+    assert!(parse_json(r#"{"a":01e}"#).is_err());
+    assert!(parse_json("[1 2]").is_err());
+}
